@@ -1,0 +1,53 @@
+//! Deployment playbook walkthrough (paper §VI-A): shadow → guarded canary
+//! → ramp for CHEIP on the admission service, including a deliberately
+//! poisoned candidate that must be rolled back by the canary gate.
+//!
+//! Run: `cargo run --release --example deployment_playbook`
+
+use slofetch::config::{ControllerCfg, PrefetcherKind, SimConfig};
+use slofetch::coordinator::deploy::{DeployStage, DeploymentManager, Gates};
+use slofetch::trace::gen::{apps, generate_records};
+
+fn main() {
+    let records = generate_records(&apps::app("admission").unwrap(), 3, 400_000);
+    let control = SimConfig::default();
+
+    println!("== playbook run 1: healthy candidate (CHEIP-2K + ML controller) ==");
+    let healthy = SimConfig {
+        prefetcher: PrefetcherKind::Cheip { vt_entries: 2048, window: 8, whole_window: true },
+        controller: Some(ControllerCfg {
+            train_interval_cycles: 200_000,
+            ..Default::default()
+        }),
+        ..Default::default()
+    };
+    let out = DeploymentManager::new(control.clone(), healthy).run(&records);
+    for r in &out.reports {
+        println!("  [{:?}] {}", r.stage, r.detail);
+    }
+    println!("  => final: {:?}\n", out.final_stage);
+    assert_eq!(out.final_stage, DeployStage::Steady);
+
+    println!("== playbook run 2: poisoned candidate (absurd P95 gate) ==");
+    let mut dm = DeploymentManager::new(
+        control,
+        SimConfig {
+            prefetcher: PrefetcherKind::Ceip { entries: 4096, window: 8, whole_window: true },
+            ..Default::default()
+        },
+    );
+    // Simulate an operator requiring a 2x P95 *improvement* before ramp —
+    // the canary gate must trip and roll back automatically.
+    dm.gates = Gates {
+        p95_ratio_max: 0.5,
+        ..Default::default()
+    };
+    let out = dm.run(&records);
+    for r in &out.reports {
+        println!("  [{:?}] {}", r.stage, r.detail);
+    }
+    println!("  => final: {:?}", out.final_stage);
+    assert_eq!(out.final_stage, DeployStage::RolledBack);
+    println!("\nplaybook behaves as §VI-A specifies: blast radius is bounded by");
+    println!("shadow validation and the guarded-canary automatic rollback.");
+}

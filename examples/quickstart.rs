@@ -1,0 +1,80 @@
+//! Quickstart — the end-to-end driver (EXPERIMENTS.md "End-to-end run").
+//!
+//! Exercises every layer of the system on a real small workload:
+//!   1. generate the 11 microservice traces (the Fig 2 service mix),
+//!   2. run the full prefetcher matrix through the fleet coordinator,
+//!   3. gate CEIP through the online ML controller with training steps
+//!      executed via the AOT JAX/Pallas artifacts on PJRT (when present;
+//!      falls back to the bit-identical native mirror otherwise),
+//!   4. report the paper's headline numbers (speedup, MPKI, accuracy,
+//!      metadata budget) and the control-plane P95/P99.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use slofetch::config::{ControllerCfg, PrefetcherKind, SimConfig};
+use slofetch::figures::{self, FigureCtx, Matrix};
+use slofetch::ml::controller::{Backend, OnlineController};
+use slofetch::runtime::PjrtEngine;
+use slofetch::sim::engine::Engine;
+use slofetch::trace::gen::{apps, generate_records};
+
+fn main() -> anyhow::Result<()> {
+    let records_per_app = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300_000u64);
+
+    println!("== SLOFetch quickstart ==");
+    println!("1) generating 11 app traces x {records_per_app} records and");
+    println!("   running the {} -config matrix on the fleet driver...", figures::standard_configs().len());
+    let m = Matrix::compute(FigureCtx {
+        records_per_app,
+        out_dir: None,
+        ..Default::default()
+    });
+
+    println!("\n{}", figures::fig9(&m).markdown());
+    println!("{}", figures::summary(&m).markdown());
+
+    // --- Controller through the real PJRT path on one app.
+    println!("2) online ML controller with AOT/PJRT training (websearch, CEIP-256):");
+    let spec = apps::app("websearch").unwrap();
+    let records = generate_records(&spec, 7, records_per_app);
+    let cfg = SimConfig {
+        prefetcher: PrefetcherKind::Ceip { entries: 4096, window: 8, whole_window: true },
+        controller: Some(ControllerCfg {
+            train_interval_cycles: 500_000,
+            ..Default::default()
+        }),
+        ..Default::default()
+    };
+    let mut engine = Engine::new(cfg.clone(), &records);
+    match PjrtEngine::load_default() {
+        Ok(pjrt) => {
+            println!("   pjrt platform: {}", pjrt.platform());
+            engine = engine.with_controller(OnlineController::with_backend(
+                cfg.controller.clone().unwrap(),
+                7,
+                Backend::Pjrt(pjrt),
+            ));
+        }
+        Err(e) => {
+            println!("   (artifacts not found — native mirror backend: {e})");
+        }
+    }
+    let r = engine.run();
+    println!(
+        "   ipc={:.4} mpki={:.2} accuracy={:.3} issued={} skipped={} trains={}",
+        r.ipc(),
+        r.stats.mpki(),
+        r.stats.accuracy(),
+        r.stats.pf_issued,
+        r.stats.pf_skipped,
+        r.controller.map(|c| c.trains).unwrap_or(0),
+    );
+
+    println!("\n3) control-plane RPC tails:\n");
+    println!("{}", figures::rpc_tails(&m).markdown());
+    println!("quickstart done.");
+    Ok(())
+}

@@ -1,0 +1,138 @@
+"""AOT compile path: lower the Layer-2 controller graphs to HLO text.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+A manifest.json records the AOT contract (module shapes + a content hash
+of the python sources) so ``make artifacts`` is a no-op when nothing
+changed and the Rust runtime can sanity-check shape agreement at startup.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.logistic import BATCH, FEATURES
+
+# Flattened (context x arm) bandit value-table size. 8 context buckets x
+# (4 threshold arms + 3 window arms mapped into one table of 8 slots each).
+BANDIT_SLOTS = 64
+
+F32 = jnp.float32
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+# name -> (callable, example-arg specs, human description)
+MODULES = {
+    "score": (
+        model.score,
+        (_spec((FEATURES,)), _spec(()), _spec((BATCH, FEATURES))),
+        "sigmoid(x@w+b) issue-probability batch",
+    ),
+    "train": (
+        model.train_step,
+        (
+            _spec((FEATURES,)),
+            _spec(()),
+            _spec((BATCH, FEATURES)),
+            _spec((BATCH,)),
+            _spec(()),
+        ),
+        "one BCE-SGD step -> (w', b', loss)",
+    ),
+    "bandit": (
+        model.bandit_update,
+        (_spec((BANDIT_SLOTS,)), _spec((BANDIT_SLOTS,)), _spec(()), _spec(())),
+        "bandit value-table update",
+    ),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def source_hash() -> str:
+    """Hash of every python source feeding the artifacts."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _dirs, files in sorted(os.walk(here)):
+        for name in sorted(files):
+            if name.endswith(".py"):
+                with open(os.path.join(root, name), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    src_hash = source_hash()
+
+    if not args.force and os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                old = json.load(f)
+            if old.get("source_hash") == src_hash and all(
+                os.path.exists(os.path.join(args.out_dir, f"{m}.hlo.txt"))
+                for m in MODULES
+            ):
+                print("artifacts unchanged (source hash match); skipping")
+                return 0
+        except (json.JSONDecodeError, OSError):
+            pass  # fall through and rebuild
+
+    manifest = {
+        "source_hash": src_hash,
+        "batch": BATCH,
+        "features": FEATURES,
+        "bandit_slots": BANDIT_SLOTS,
+        "dtype": "f32",
+        "modules": {},
+    }
+    for name, (fn, specs, desc) in MODULES.items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        out_path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(out_path, "w") as f:
+            f.write(text)
+        manifest["modules"][name] = {
+            "file": f"{name}.hlo.txt",
+            "description": desc,
+            "arg_shapes": [list(s.shape) for s in specs],
+            "hlo_bytes": len(text),
+        }
+        print(f"wrote {out_path} ({len(text)} chars)")
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {manifest_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

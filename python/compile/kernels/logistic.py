@@ -1,0 +1,98 @@
+"""Layer-1 Pallas kernels for the SLOFetch online controller (paper §IV).
+
+The compute hot-spot of the controller is batched logistic scoring
+(a GEMV + sigmoid over a [B, F] feature block) and the fused BCE-SGD
+training step built on top of it. Both are written as Pallas kernels and
+called from the Layer-2 jax graphs in ``model.py`` so they lower into the
+same HLO module that the Rust runtime loads.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the whole (B=256,
+F=16) block fits in a single VMEM tile (256*16*4 B = 16 KiB), so the
+BlockSpec keeps one HBM->VMEM transfer per step and the reduction is
+shaped as a (BxF)·(Fx1) GEMV the MXU can consume. On this CPU image we
+must run ``interpret=True`` (real TPU lowering emits a Mosaic custom-call
+the CPU PJRT plugin cannot execute); numerics are identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# AOT contract dimensions (rust/src/runtime/engine.rs pads to these).
+BATCH = 256
+FEATURES = 16
+
+# interpret=True is mandatory on CPU; see module docstring.
+INTERPRET = True
+
+
+def _score_kernel(w_ref, b_ref, x_ref, o_ref):
+    """o = sigmoid(x @ w + b). Single-tile kernel: everything in VMEM."""
+    x = x_ref[...]                      # [B, F]
+    w = w_ref[...]                      # [F]
+    z = x @ w + b_ref[0]                # GEMV -> [B]
+    o_ref[...] = jax.nn.sigmoid(z)
+
+
+def score(w, b, x):
+    """Batched issue-probability scoring. w:[F] b:[] x:[B,F] -> p:[B]."""
+    batch, feats = x.shape
+    return pl.pallas_call(
+        _score_kernel,
+        out_shape=jax.ShapeDtypeStruct((batch,), x.dtype),
+        interpret=INTERPRET,
+    )(w, jnp.reshape(b, (1,)), x)
+
+
+def _grad_kernel(w_ref, b_ref, x_ref, y_ref, o_dw_ref, o_db_ref, o_loss_ref):
+    """Fused forward + analytic BCE gradient.
+
+    g = sigmoid(x@w+b) - y ; dw = x^T g / B ; db = mean(g);
+    loss = mean BCE before the step. One VMEM tile, two GEMVs (forward and
+    the x^T g reduction) — the transpose contraction is also MXU-shaped.
+    """
+    x = x_ref[...]                      # [B, F]
+    w = w_ref[...]                      # [F]
+    y = y_ref[...]                      # [B]
+    z = x @ w + b_ref[0]
+    p = jax.nn.sigmoid(z)
+    g = p - y                           # [B]
+    inv_b = 1.0 / x.shape[0]
+    o_dw_ref[...] = (g @ x) * inv_b     # [F]
+    o_db_ref[0] = jnp.sum(g) * inv_b
+    eps = 1e-7
+    pc = jnp.clip(p, eps, 1.0 - eps)
+    o_loss_ref[0] = -jnp.sum(y * jnp.log(pc) + (1.0 - y) * jnp.log(1.0 - pc)) * inv_b
+
+
+def grads(w, b, x, y):
+    """Returns (dw:[F], db:[], loss:[]) for one BCE-SGD step."""
+    batch, feats = x.shape
+    dw, db, loss = pl.pallas_call(
+        _grad_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((feats,), x.dtype),
+            jax.ShapeDtypeStruct((1,), x.dtype),
+            jax.ShapeDtypeStruct((1,), x.dtype),
+        ),
+        interpret=INTERPRET,
+    )(w, jnp.reshape(b, (1,)), x, y)
+    return dw, db[0], loss[0]
+
+
+def _bandit_kernel(v_ref, onehot_ref, r_ref, lr_ref, o_ref):
+    """v' = v + lr * onehot * (r - v) — elementwise, one VPU pass."""
+    v = v_ref[...]
+    o_ref[...] = v + lr_ref[0] * onehot_ref[...] * (r_ref[0] - v)
+
+
+def bandit_update(values, arm_onehot, reward, lr):
+    """Contextual-bandit value update (paper §IV-B). values:[N] -> [N]."""
+    (n,) = values.shape
+    return pl.pallas_call(
+        _bandit_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), values.dtype),
+        interpret=INTERPRET,
+    )(values, arm_onehot, jnp.reshape(reward, (1,)), jnp.reshape(lr, (1,)))

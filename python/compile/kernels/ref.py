@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the SLOFetch controller kernels.
+
+These are the correctness references the Pallas kernels (and the Rust mirror
+in ``rust/src/ml/logistic.rs``) are validated against. Keep them boring: no
+pallas, no custom control flow — just the math from the paper §IV.
+
+Shapes (AOT contract, see ``aot.py``):
+  w : [F]      logistic weights
+  b : []       bias (scalar)
+  x : [B, F]   feature batch
+  y : [B]      labels (1.0 = prefetch was profitable)
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def score_ref(w, b, x):
+    """Calibrated issue probability: sigmoid(x @ w + b)  ->  [B]."""
+    return jax.nn.sigmoid(x @ w + b)
+
+
+def bce_loss_ref(w, b, x, y):
+    """Mean binary cross-entropy of the scorer on (x, y)."""
+    p = score_ref(w, b, x)
+    eps = 1e-7
+    p = jnp.clip(p, eps, 1.0 - eps)
+    return -jnp.mean(y * jnp.log(p) + (1.0 - y) * jnp.log(1.0 - p))
+
+
+def bce_loss_stable_ref(w, b, x, y):
+    """Numerically stable BCE: mean(softplus(z) - y*z). Identical to
+    ``bce_loss_ref`` away from saturation, but its autodiff gradient is the
+    exact analytic (p - y) form even for |z| large — used to validate the
+    Pallas gradient kernel against jax.grad."""
+    z = x @ w + b
+    return jnp.mean(jnp.logaddexp(0.0, z) - y * z)
+
+
+def train_step_ref(w, b, x, y, lr):
+    """One SGD step on BCE. Analytic gradient (g = p - y):
+
+        dL/dw = x^T (p - y) / B      dL/db = mean(p - y)
+
+    Returns (w', b', loss-before-step). Matches the paper's "small learning
+    rate, periodic millisecond-granularity updates" controller.
+    """
+    p = score_ref(w, b, x)
+    g = p - y
+    batch = x.shape[0]
+    dw = x.T @ g / batch
+    db = jnp.mean(g)
+    loss = bce_loss_ref(w, b, x, y)
+    return w - lr * dw, b - lr * db, loss
+
+
+def bandit_update_ref(values, arm_onehot, reward, lr):
+    """Incremental value update for the contextual bandit (§IV-B).
+
+    values     : [N]  flattened (context x arm) action-value table
+    arm_onehot : [N]  1.0 at the (context, arm) that was played
+    reward     : []   shaped reward (hits - penalties) over the horizon
+    """
+    return values + lr * arm_onehot * (reward - values)

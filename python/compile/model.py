@@ -1,0 +1,42 @@
+"""Layer-2 jax graphs for the SLOFetch online ML controller (paper §IV).
+
+Three jitted functions make up the AOT surface the Rust coordinator loads:
+
+  score(w, b, x)                -> (p,)                 issue probabilities
+  train_step(w, b, x, y, lr)    -> (w', b', loss)       one BCE-SGD step
+  bandit_update(v, onehot, r, lr) -> (v',)              bandit value update
+
+All heavy math happens inside the Layer-1 Pallas kernels
+(``kernels/logistic.py``); this module only wires parameters and applies
+the SGD update, so XLA fuses each module into a single small computation.
+
+The controller state (w, b, bandit values) lives in Rust and is threaded
+through every call — the modules are pure functions, which keeps the
+artifact stateless and trivially shardable across simulated cores.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import logistic
+
+
+def score(w, b, x):
+    """Issue-probability forward pass. Returns a 1-tuple (AOT lowers with
+    return_tuple=True; the Rust side unwraps with ``to_tuple1``)."""
+    return (logistic.score(w, b, x),)
+
+
+def train_step(w, b, x, y, lr):
+    """One SGD step on mean BCE with analytic logistic gradients.
+
+    Matches ``ref.train_step_ref`` exactly; the forward + gradient GEMVs run
+    in the fused Pallas kernel. lr arrives as a traced scalar so the Rust
+    side can anneal it without recompiling.
+    """
+    dw, db, loss = logistic.grads(w, b, x, y)
+    return w - lr * dw, b - lr * db, loss
+
+
+def bandit_update(values, arm_onehot, reward, lr):
+    """Incremental (context x arm) value update, v' = v + lr*onehot*(r-v)."""
+    return (logistic.bandit_update(values, arm_onehot, reward, lr),)

@@ -1,0 +1,61 @@
+//! End-to-end figure benches: regenerates EVERY table/figure of the paper
+//! at bench scale and times each driver (custom harness — criterion is
+//! unavailable offline). `cargo bench --bench figures_bench` prints the
+//! same rows the paper reports plus the wall-clock cost of regeneration.
+//!
+//! Scale with SLOFETCH_BENCH_RECORDS (default 300k records/app).
+
+use slofetch::figures::{self, FigureCtx, Matrix};
+use slofetch::util::timer::time_it;
+
+fn main() {
+    let records = std::env::var("SLOFETCH_BENCH_RECORDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300_000u64);
+    let ctx = FigureCtx {
+        records_per_app: records,
+        out_dir: Some("results".into()),
+        ..Default::default()
+    };
+    println!("== figures_bench: matrix at {records} records/app ==");
+    let (m, secs) = time_it(|| Matrix::compute(ctx.clone()));
+    let cells = m.apps.len() * figures::standard_configs().len();
+    println!(
+        "matrix: {cells} cells in {secs:.1}s ({:.1} Mrec/s aggregate)\n",
+        cells as f64 * records as f64 / secs / 1e6
+    );
+
+    let mut timings = Vec::new();
+    macro_rules! fig {
+        ($name:expr, $f:expr) => {{
+            let (t, s) = time_it(|| $f);
+            println!("{}", t.markdown());
+            t.save(std::path::Path::new("results")).ok();
+            timings.push(($name, s));
+        }};
+    }
+    fig!("table1", figures::table1());
+    fig!("fig1", figures::fig1(&m));
+    fig!("fig2", figures::fig2(&m));
+    fig!("fig3", figures::schematics::fig3());
+    fig!("fig4", figures::schematics::fig4());
+    fig!("fig5", figures::schematics::fig5());
+    fig!("fig6", figures::fig6(&m));
+    fig!("fig7", figures::fig7(&m));
+    fig!("fig8", figures::fig8(&m));
+    fig!("fig9", figures::fig9(&m));
+    fig!("fig10", figures::fig10(&m));
+    fig!("fig11", figures::fig11(&m));
+    fig!("fig12", figures::fig12(&m));
+    fig!("fig13", figures::fig13(&m));
+    fig!("summary", figures::summary(&m));
+    fig!("rpc", figures::rpc_tails(&m));
+    fig!("ablation", figures::ablation(&ctx));
+
+    println!("== regeneration timings ==");
+    for (name, s) in timings {
+        println!("{name:<10} {s:>8.3}s");
+    }
+    println!("(tables also written to results/)");
+}

@@ -1,0 +1,67 @@
+//! Prefetcher micro-benchmarks: per-operation cost of every prefetcher's
+//! hot-path entry points (§Perf L3 targets in EXPERIMENTS.md).
+
+use slofetch::prefetch::{
+    ceip::Ceip, cheip::Cheip, eip::Eip, next_line::NextLine, Candidate, Prefetcher,
+};
+use slofetch::util::rng::Rng;
+use slofetch::util::timer::bench;
+
+const OPS: u64 = 1_000_000;
+
+fn addr_mix(n: usize) -> Vec<u64> {
+    // Clustered fetch stream like the generator's output.
+    let mut r = Rng::new(1);
+    let mut out = Vec::with_capacity(n);
+    let mut line = 0x40_0000u64;
+    for _ in 0..n {
+        if r.chance(0.1) {
+            line = 0x40_0000 + r.below(1 << 16);
+        } else {
+            line += 1;
+        }
+        out.push(line);
+    }
+    out
+}
+
+fn bench_prefetcher(name: &str, pf: &mut dyn Prefetcher, addrs: &[u64]) {
+    // Train with a representative miss stream first.
+    for (i, &a) in addrs.iter().take(100_000).enumerate() {
+        pf.on_demand_miss(a, i as u64 * 4);
+        pf.on_miss_resolved(a, i as u64 * 4, 35);
+    }
+    let mut out: Vec<Candidate> = Vec::with_capacity(16);
+    let r = bench(&format!("{name}::on_fetch"), 1, 7, OPS, || {
+        let mut cycle = 0u64;
+        for &a in addrs.iter().take(OPS as usize) {
+            out.clear();
+            pf.on_fetch(a, cycle, &mut out);
+            cycle += 4;
+        }
+    });
+    println!("{}", r.report());
+
+    let r = bench(&format!("{name}::train(miss+resolve)"), 1, 5, OPS / 4, || {
+        let mut cycle = 0u64;
+        for &a in addrs.iter().take((OPS / 4) as usize) {
+            pf.on_demand_miss(a, cycle);
+            pf.on_miss_resolved(a ^ 0x3, cycle, 35);
+            cycle += 40;
+        }
+    });
+    println!("{}", r.report());
+}
+
+fn main() {
+    println!("== prefetcher_micro ({OPS} ops/run, median of runs) ==");
+    let addrs = addr_mix(OPS as usize);
+    bench_prefetcher("nl", &mut NextLine::new(1), &addrs);
+    bench_prefetcher("eip4096", &mut Eip::new(4096, 1), &addrs);
+    bench_prefetcher("ceip4096w8", &mut Ceip::new(4096, 8, true, 1), &addrs);
+    bench_prefetcher(
+        "cheip2k",
+        &mut Cheip::new(2048, 8, true, 1, 512, 15),
+        &addrs,
+    );
+}

@@ -1,0 +1,90 @@
+//! Runtime/controller micro-benchmarks (§Perf L1/L2 targets):
+//! native-mirror scoring throughput, PJRT batched score/train latency,
+//! and controller decision cost. Requires `make artifacts` for the PJRT
+//! section (skipped with a notice otherwise).
+
+use slofetch::config::ControllerCfg;
+use slofetch::ml::controller::OnlineController;
+use slofetch::ml::features::DIM;
+use slofetch::ml::logistic::Weights;
+use slofetch::prefetch::Candidate;
+use slofetch::runtime::PjrtEngine;
+use slofetch::util::rng::Rng;
+use slofetch::util::timer::bench;
+
+fn main() {
+    println!("== runtime_micro ==");
+    let mut rng = Rng::new(5);
+    let wts = Weights::default();
+
+    // Native mirror: single-decision scoring (the simulator hot path).
+    let feats: Vec<[f32; DIM]> = (0..4096)
+        .map(|_| {
+            let mut f = [0.0f32; DIM];
+            for v in f.iter_mut() {
+                *v = rng.f32();
+            }
+            f
+        })
+        .collect();
+    let mut acc = 0.0f32;
+    let r = bench("native score (single)", 2, 9, feats.len() as u64 * 100, || {
+        for _ in 0..100 {
+            for f in &feats {
+                acc += wts.score(f);
+            }
+        }
+    });
+    println!("{}", r.report());
+    std::hint::black_box(acc);
+
+    // Controller decision end-to-end (features + bandit + budget).
+    let mut ctrl = OnlineController::new(
+        ControllerCfg {
+            train_interval_cycles: u64::MAX,
+            ..Default::default()
+        },
+        1,
+    );
+    let cand = Candidate {
+        line: 0x40_0010,
+        src: 0x40_0000,
+        conf: 3,
+        offset: 2,
+        window_density: 0.75,
+        short_loop: false,
+    };
+    let ops = 1_000_000u64;
+    let mut issued = 0u64;
+    let r = bench("controller decide()", 1, 7, ops, || {
+        for i in 0..ops {
+            if ctrl.decide(&cand, i * 3) {
+                issued += 1;
+            }
+        }
+    });
+    println!("{}", r.report());
+    std::hint::black_box(issued);
+
+    // PJRT batched paths.
+    match PjrtEngine::load_default() {
+        Err(e) => println!("pjrt: skipped (artifacts missing: {e})"),
+        Ok(engine) => {
+            let x: Vec<f32> = (0..256 * DIM).map(|_| rng.f32()).collect();
+            let y: Vec<f32> = (0..256).map(|_| f32::from(rng.chance(0.5))).collect();
+            let r = bench("pjrt score  (B=256)", 2, 9, 256, || {
+                engine.score(&wts.w, wts.b, &x).unwrap();
+            });
+            println!("{}  [{:.1} µs/call]", r.report(), r.ns_per_op * 256.0 / 1000.0);
+            let r = bench("pjrt train  (B=256)", 2, 9, 256, || {
+                engine.train_step(&wts.w, wts.b, &x, &y, 0.05).unwrap();
+            });
+            println!("{}  [{:.1} µs/call]", r.report(), r.ns_per_op * 256.0 / 1000.0);
+            let values = [0.5f32; 64];
+            let r = bench("pjrt bandit (64 slots)", 2, 9, 1, || {
+                engine.bandit_update(&values, 7, 1.0, 0.1).unwrap();
+            });
+            println!("{}", r.report());
+        }
+    }
+}

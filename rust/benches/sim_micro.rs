@@ -1,0 +1,105 @@
+//! Simulator micro-benchmarks: engine throughput (records/s) per
+//! prefetcher config, cache probe cost, trace generation and codec rates.
+//! §Perf target: ≥ 20 M records/s on the NL baseline path.
+
+use slofetch::config::{ControllerCfg, PrefetcherKind, SimConfig};
+use slofetch::sim::cache::Cache;
+use slofetch::sim::engine;
+use slofetch::trace::gen::{apps, generate_records};
+use slofetch::trace::{codec, TraceMeta};
+use slofetch::util::rng::Rng;
+use slofetch::util::timer::{bench, time_it};
+
+fn main() {
+    println!("== sim_micro ==");
+
+    // Trace generation rate.
+    let spec = apps::app("websearch").unwrap();
+    let n = 2_000_000u64;
+    let (records, gen_s) = time_it(|| generate_records(&spec, 7, n));
+    println!(
+        "trace-gen: {n} records in {gen_s:.2}s ({:.1} Mrec/s)",
+        n as f64 / gen_s / 1e6
+    );
+
+    // Codec rates.
+    let meta = TraceMeta {
+        app: "bench".into(),
+        seed: 7,
+        line_bytes: 64,
+        records: records.len() as u64,
+    };
+    let mut buf = Vec::new();
+    let (_, enc_s) = time_it(|| {
+        codec::write_trace(&mut buf, &meta, records.iter().copied(), records.len() as u64)
+            .unwrap()
+    });
+    println!(
+        "codec-encode: {:.1} Mrec/s ({:.2} B/rec)",
+        records.len() as f64 / enc_s / 1e6,
+        buf.len() as f64 / records.len() as f64
+    );
+    let (decoded, dec_s) = time_it(|| {
+        codec::TraceReader::new(std::io::Cursor::new(&buf[..]))
+            .unwrap()
+            .map(|r| r.unwrap())
+            .count()
+    });
+    println!(
+        "codec-decode: {:.1} Mrec/s ({decoded} records)",
+        decoded as f64 / dec_s / 1e6
+    );
+
+    // Engine throughput per config.
+    for (name, kind, ml) in [
+        ("nl", PrefetcherKind::NextLineOnly, false),
+        ("eip256", PrefetcherKind::Eip { entries: 4096 }, false),
+        (
+            "ceip256",
+            PrefetcherKind::Ceip { entries: 4096, window: 8, whole_window: true },
+            false,
+        ),
+        (
+            "cheip2k",
+            PrefetcherKind::Cheip { vt_entries: 2048, window: 8, whole_window: true },
+            false,
+        ),
+        (
+            "ceip256+ml",
+            PrefetcherKind::Ceip { entries: 4096, window: 8, whole_window: true },
+            true,
+        ),
+    ] {
+        let cfg = SimConfig {
+            prefetcher: kind,
+            controller: ml.then(|| ControllerCfg {
+                train_interval_cycles: 1_000_000,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let (r, s) = time_it(|| engine::run(&cfg, &records));
+        println!(
+            "engine[{name:>10}]: {:.2} Mrec/s ({:.2} Minstr/s, ipc {:.3})",
+            records.len() as f64 / s / 1e6,
+            r.stats.instrs as f64 / s / 1e6,
+            r.ipc()
+        );
+    }
+
+    // Raw cache probe cost.
+    let mut cache = Cache::new(slofetch::config::HierarchyCfg::table1().l1i);
+    let mut rng = Rng::new(3);
+    let lines: Vec<u64> = (0..100_000).map(|_| rng.below(4096)).collect();
+    let mut sink = 0u64;
+    let r = bench("l1i access+insert", 2, 9, lines.len() as u64, || {
+        for &l in &lines {
+            if !cache.access(l) {
+                cache.insert(l, false);
+            }
+            sink = sink.wrapping_add(l);
+        }
+    });
+    println!("{}", r.report());
+    std::hint::black_box(sink);
+}

@@ -1,0 +1,178 @@
+//! Hand-rolled CLI argument parsing (no clap offline): positional
+//! subcommand + `--key value` / `--flag` options.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                // --key=value or --key value or --flag
+                if let Some((k, v)) = key.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.opts.insert(key.to_string(), v);
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn u64_opt(&self, key: &str, default: u64) -> Result<u64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_opt(&self, key: &str, default: f64) -> Result<f64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+}
+
+/// Parse a prefetcher spec like `nl`, `eip256`, `ceip128`, `ceip256s`
+/// (selective), `cheip2k`, `cheip4k`, `perfect`, `ceip256w12`.
+pub fn parse_prefetcher(spec: &str) -> Result<crate::config::PrefetcherKind> {
+    use crate::config::PrefetcherKind as P;
+    let s = spec.to_lowercase();
+    if s == "nl" {
+        return Ok(P::NextLineOnly);
+    }
+    if s == "perfect" {
+        return Ok(P::Perfect);
+    }
+    let (body, selective) = match s.strip_suffix('s') {
+        Some(b) if b != "nl" => (b.to_string(), true),
+        _ => (s.clone(), false),
+    };
+    let window_split = |b: &str| -> (String, u8) {
+        if let Some((head, w)) = b.rsplit_once('w') {
+            if let Ok(win) = w.parse::<u8>() {
+                return (head.to_string(), win);
+            }
+        }
+        (b.to_string(), 8)
+    };
+    if let Some(rest) = body.strip_prefix("eip") {
+        let sets: u32 = rest.parse().map_err(|_| anyhow::anyhow!("bad eip spec '{spec}'"))?;
+        return Ok(P::Eip { entries: sets * 16 });
+    }
+    if let Some(rest) = body.strip_prefix("ceip") {
+        let (head, window) = window_split(rest);
+        let sets: u32 = head.parse().map_err(|_| anyhow::anyhow!("bad ceip spec '{spec}'"))?;
+        return Ok(P::Ceip {
+            entries: sets * 16,
+            window,
+            whole_window: !selective,
+        });
+    }
+    if let Some(rest) = body.strip_prefix("cheip") {
+        let (head, window) = window_split(rest);
+        let vt = match head.as_str() {
+            "2k" => 2048,
+            "4k" => 4096,
+            other => other
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad cheip spec '{spec}'"))?,
+        };
+        return Ok(P::Cheip {
+            vt_entries: vt,
+            window,
+            whole_window: !selective,
+        });
+    }
+    bail!("unknown prefetcher spec '{spec}' (try nl|eip256|ceip256|cheip2k|perfect)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PrefetcherKind as P;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = args("figure 9 --records 1000 --seed=42 --quiet");
+        assert_eq!(a.subcommand.as_deref(), Some("figure"));
+        assert_eq!(a.positional, vec!["9"]);
+        assert_eq!(a.u64_opt("records", 0).unwrap(), 1000);
+        assert_eq!(a.u64_opt("seed", 0).unwrap(), 42);
+        assert!(a.flag("quiet"));
+        assert!(!a.flag("verbose"));
+        assert_eq!(a.u64_opt("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = args("simulate --records abc");
+        assert!(a.u64_opt("records", 0).is_err());
+    }
+
+    #[test]
+    fn prefetcher_specs() {
+        assert_eq!(parse_prefetcher("nl").unwrap(), P::NextLineOnly);
+        assert_eq!(parse_prefetcher("perfect").unwrap(), P::Perfect);
+        assert_eq!(parse_prefetcher("eip256").unwrap(), P::Eip { entries: 4096 });
+        assert_eq!(
+            parse_prefetcher("ceip128").unwrap(),
+            P::Ceip { entries: 2048, window: 8, whole_window: true }
+        );
+        assert_eq!(
+            parse_prefetcher("ceip256s").unwrap(),
+            P::Ceip { entries: 4096, window: 8, whole_window: false }
+        );
+        assert_eq!(
+            parse_prefetcher("ceip256w12").unwrap(),
+            P::Ceip { entries: 4096, window: 12, whole_window: true }
+        );
+        assert_eq!(
+            parse_prefetcher("cheip2k").unwrap(),
+            P::Cheip { vt_entries: 2048, window: 8, whole_window: true }
+        );
+        assert_eq!(
+            parse_prefetcher("cheip4kw4").unwrap(),
+            P::Cheip { vt_entries: 4096, window: 4, whole_window: true }
+        );
+        assert!(parse_prefetcher("bogus").is_err());
+    }
+}

@@ -1,0 +1,415 @@
+//! Typed configuration system with JSON load/save (no serde offline —
+//! (de)serialization goes through [`crate::util::json`]).
+//!
+//! [`HierarchyCfg::table1`] encodes the paper's simulated system (Table I)
+//! exactly; everything an experiment varies (prefetcher kind, table sizes,
+//! window, controller) hangs off [`SimConfig`].
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// One cache level.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CacheCfg {
+    pub size_kb: u32,
+    pub ways: u32,
+    pub line_b: u32,
+    /// Access latency in cycles.
+    pub latency: u64,
+}
+
+impl CacheCfg {
+    pub fn lines(&self) -> u32 {
+        self.size_kb * 1024 / self.line_b
+    }
+
+    pub fn sets(&self) -> u32 {
+        self.lines() / self.ways
+    }
+}
+
+/// The full memory hierarchy (paper Table I).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HierarchyCfg {
+    pub l1i: CacheCfg,
+    pub l1d: CacheCfg,
+    pub l2: CacheCfg,
+    pub l3: CacheCfg,
+    /// Fixed DRAM access latency (cycles) before bandwidth queueing.
+    pub dram_latency: u64,
+    /// DRAM bandwidth in bytes/cycle (25.6 GB/s at 2.5 GHz = 10.24 B/cyc).
+    pub dram_bytes_per_cycle: f64,
+    /// CPU frequency in GHz (reporting only).
+    pub freq_ghz: f64,
+}
+
+impl HierarchyCfg {
+    /// Paper Table I: 2.5 GHz; L1I 32 KB/8w/4cyc; L1D 48 KB/12w/5cyc (NLP);
+    /// L2 512 KB/8w/15cyc; L3 2 MB/16w/35cyc; DRAM 1ch 3200 MT/s (25.6 GB/s).
+    pub fn table1() -> Self {
+        HierarchyCfg {
+            l1i: CacheCfg { size_kb: 32, ways: 8, line_b: 64, latency: 4 },
+            l1d: CacheCfg { size_kb: 48, ways: 12, line_b: 64, latency: 5 },
+            l2: CacheCfg { size_kb: 512, ways: 8, line_b: 64, latency: 15 },
+            l3: CacheCfg { size_kb: 2048, ways: 16, line_b: 64, latency: 35 },
+            dram_latency: 90,
+            dram_bytes_per_cycle: 25.6 / 2.5,
+            freq_ghz: 2.5,
+        }
+    }
+}
+
+/// Which prefetcher drives the L1I (a next-line prefetcher remains enabled
+/// for all variants, per §X-B).
+#[derive(Clone, Debug, PartialEq)]
+pub enum PrefetcherKind {
+    /// Next-line only (the baseline every speedup is relative to).
+    NextLineOnly,
+    /// Entangling prefetcher with full-address destinations (EIP-K).
+    Eip { entries: u32 },
+    /// Compressed-entry EIP (CEIP-K) with the 36-bit entry.
+    Ceip { entries: u32, window: u8, whole_window: bool },
+    /// CEIP + hierarchical metadata (CHEIP): L1-attached entries plus a
+    /// virtualized table of `vt_entries` (2K or 4K in the paper).
+    Cheip { vt_entries: u32, window: u8, whole_window: bool },
+    /// Oracle lookahead prefetcher (Fig 6 upper bound).
+    Perfect,
+}
+
+impl PrefetcherKind {
+    pub fn label(&self) -> String {
+        match self {
+            PrefetcherKind::NextLineOnly => "nl".into(),
+            PrefetcherKind::Eip { entries } => format!("eip{entries}"),
+            PrefetcherKind::Ceip { entries, window, whole_window } => {
+                format!("ceip{entries}w{window}{}", if *whole_window { "" } else { "s" })
+            }
+            PrefetcherKind::Cheip { vt_entries, window, whole_window } => {
+                format!("cheip{vt_entries}w{window}{}", if *whole_window { "" } else { "s" })
+            }
+            PrefetcherKind::Perfect => "perfect".into(),
+        }
+    }
+}
+
+/// Online ML controller configuration (paper §IV).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ControllerCfg {
+    /// Enable the logistic gate + bandit threshold.
+    pub enabled: bool,
+    /// Initial decision threshold (bandit-adjusted afterwards).
+    pub threshold: f32,
+    /// Cycles between training steps ("millisecond granularity": 1 ms at
+    /// 2.5 GHz = 2.5 M cycles).
+    pub train_interval_cycles: u64,
+    /// SGD learning rate.
+    pub lr: f32,
+    /// Bandit exploration rate.
+    pub epsilon: f64,
+    /// Allow the bandit to choose window size in {4, 8, 12}.
+    pub adapt_window: bool,
+    /// Hard issuance budget: max prefetches per 1k cycles (0 = uncapped) —
+    /// the deployment playbook's "tokens per ms" knob.
+    pub issue_budget_per_kcycle: u32,
+    /// Shadow mode (§VI-A step 1): make decisions and log predicted
+    /// utility + hypothetical bandwidth, but issue no fills.
+    pub shadow: bool,
+}
+
+impl Default for ControllerCfg {
+    fn default() -> Self {
+        ControllerCfg {
+            enabled: true,
+            threshold: 0.45,
+            train_interval_cycles: 2_500_000,
+            lr: 0.05,
+            epsilon: 0.05,
+            adapt_window: false,
+            issue_budget_per_kcycle: 0,
+            shadow: false,
+        }
+    }
+}
+
+/// A complete single-core simulation configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub hierarchy: HierarchyCfg,
+    pub prefetcher: PrefetcherKind,
+    /// Controller; `None` = always-issue (the paper's CEIP/EIP baselines).
+    pub controller: Option<ControllerCfg>,
+    /// Base CPI of a non-stalled core (4-wide issue ≈ 0.25).
+    pub base_cpi: f64,
+    /// Branch mispredict rate (bad-speculation top-down bucket, Fig 1).
+    pub mispredict_rate: f64,
+    /// Mispredict penalty in cycles.
+    pub mispredict_penalty: f64,
+    /// Fraction of D-miss latency exposed (OoO hides the rest).
+    pub backend_expose: f64,
+    /// Confidence threshold for issuing EIP/selective-CEIP destinations.
+    pub conf_threshold: u8,
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            hierarchy: HierarchyCfg::table1(),
+            prefetcher: PrefetcherKind::NextLineOnly,
+            controller: None,
+            base_cpi: 0.25,
+            mispredict_rate: 0.01,
+            mispredict_penalty: 15.0,
+            backend_expose: 0.35,
+            // Issue destinations as soon as they are learned (conf ≥ 1) —
+            // both EIP and whole-window CEIP behave this way; selective
+            // modes raise this.
+            conf_threshold: 1,
+            seed: 1,
+        }
+    }
+}
+
+// ---------- JSON (de)serialization ----------
+
+impl SimConfig {
+    pub fn to_json(&self) -> Json {
+        let h = &self.hierarchy;
+        let cache = |c: &CacheCfg| {
+            Json::obj(vec![
+                ("size_kb", Json::num(c.size_kb as f64)),
+                ("ways", Json::num(c.ways as f64)),
+                ("line_b", Json::num(c.line_b as f64)),
+                ("latency", Json::num(c.latency as f64)),
+            ])
+        };
+        let pf = match &self.prefetcher {
+            PrefetcherKind::NextLineOnly => Json::obj(vec![("kind", Json::str("nl"))]),
+            PrefetcherKind::Eip { entries } => Json::obj(vec![
+                ("kind", Json::str("eip")),
+                ("entries", Json::num(*entries as f64)),
+            ]),
+            PrefetcherKind::Ceip { entries, window, whole_window } => Json::obj(vec![
+                ("kind", Json::str("ceip")),
+                ("entries", Json::num(*entries as f64)),
+                ("window", Json::num(*window as f64)),
+                ("whole_window", Json::Bool(*whole_window)),
+            ]),
+            PrefetcherKind::Cheip { vt_entries, window, whole_window } => Json::obj(vec![
+                ("kind", Json::str("cheip")),
+                ("vt_entries", Json::num(*vt_entries as f64)),
+                ("window", Json::num(*window as f64)),
+                ("whole_window", Json::Bool(*whole_window)),
+            ]),
+            PrefetcherKind::Perfect => Json::obj(vec![("kind", Json::str("perfect"))]),
+        };
+        let ctrl = match &self.controller {
+            None => Json::Null,
+            Some(c) => Json::obj(vec![
+                ("enabled", Json::Bool(c.enabled)),
+                ("threshold", Json::num(c.threshold as f64)),
+                ("train_interval_cycles", Json::num(c.train_interval_cycles as f64)),
+                ("lr", Json::num(c.lr as f64)),
+                ("epsilon", Json::num(c.epsilon)),
+                ("adapt_window", Json::Bool(c.adapt_window)),
+                ("issue_budget_per_kcycle", Json::num(c.issue_budget_per_kcycle as f64)),
+                ("shadow", Json::Bool(c.shadow)),
+            ]),
+        };
+        Json::obj(vec![
+            (
+                "hierarchy",
+                Json::obj(vec![
+                    ("l1i", cache(&h.l1i)),
+                    ("l1d", cache(&h.l1d)),
+                    ("l2", cache(&h.l2)),
+                    ("l3", cache(&h.l3)),
+                    ("dram_latency", Json::num(h.dram_latency as f64)),
+                    ("dram_bytes_per_cycle", Json::num(h.dram_bytes_per_cycle)),
+                    ("freq_ghz", Json::num(h.freq_ghz)),
+                ]),
+            ),
+            ("prefetcher", pf),
+            ("controller", ctrl),
+            ("base_cpi", Json::num(self.base_cpi)),
+            ("mispredict_rate", Json::num(self.mispredict_rate)),
+            ("mispredict_penalty", Json::num(self.mispredict_penalty)),
+            ("backend_expose", Json::num(self.backend_expose)),
+            ("conf_threshold", Json::num(self.conf_threshold as f64)),
+            ("seed", Json::num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SimConfig> {
+        let mut cfg = SimConfig::default();
+        let cache = |j: &Json, name: &str| -> Result<CacheCfg> {
+            let c = j.get(name).with_context(|| format!("missing {name}"))?;
+            Ok(CacheCfg {
+                size_kb: c.get("size_kb").and_then(Json::as_u64).context("size_kb")? as u32,
+                ways: c.get("ways").and_then(Json::as_u64).context("ways")? as u32,
+                line_b: c.get("line_b").and_then(Json::as_u64).unwrap_or(64) as u32,
+                latency: c.get("latency").and_then(Json::as_u64).context("latency")?,
+            })
+        };
+        if let Some(h) = j.get("hierarchy") {
+            cfg.hierarchy = HierarchyCfg {
+                l1i: cache(h, "l1i")?,
+                l1d: cache(h, "l1d")?,
+                l2: cache(h, "l2")?,
+                l3: cache(h, "l3")?,
+                dram_latency: h.get("dram_latency").and_then(Json::as_u64).unwrap_or(90),
+                dram_bytes_per_cycle: h
+                    .get("dram_bytes_per_cycle")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(10.24),
+                freq_ghz: h.get("freq_ghz").and_then(Json::as_f64).unwrap_or(2.5),
+            };
+        }
+        if let Some(p) = j.get("prefetcher") {
+            let kind = p.get("kind").and_then(Json::as_str).context("prefetcher.kind")?;
+            let entries = p.get("entries").and_then(Json::as_u64).unwrap_or(256) as u32;
+            let window = p.get("window").and_then(Json::as_u64).unwrap_or(8) as u8;
+            let whole = p.get("whole_window").and_then(Json::as_bool).unwrap_or(true);
+            cfg.prefetcher = match kind {
+                "nl" => PrefetcherKind::NextLineOnly,
+                "eip" => PrefetcherKind::Eip { entries },
+                "ceip" => PrefetcherKind::Ceip { entries, window, whole_window: whole },
+                "cheip" => PrefetcherKind::Cheip {
+                    vt_entries: p.get("vt_entries").and_then(Json::as_u64).unwrap_or(2048) as u32,
+                    window,
+                    whole_window: whole,
+                },
+                "perfect" => PrefetcherKind::Perfect,
+                other => bail!("unknown prefetcher kind {other}"),
+            };
+        }
+        match j.get("controller") {
+            None | Some(Json::Null) => cfg.controller = None,
+            Some(c) => {
+                let mut cc = ControllerCfg::default();
+                if let Some(v) = c.get("enabled").and_then(Json::as_bool) {
+                    cc.enabled = v;
+                }
+                if let Some(v) = c.get("threshold").and_then(Json::as_f64) {
+                    cc.threshold = v as f32;
+                }
+                if let Some(v) = c.get("train_interval_cycles").and_then(Json::as_u64) {
+                    cc.train_interval_cycles = v;
+                }
+                if let Some(v) = c.get("lr").and_then(Json::as_f64) {
+                    cc.lr = v as f32;
+                }
+                if let Some(v) = c.get("epsilon").and_then(Json::as_f64) {
+                    cc.epsilon = v;
+                }
+                if let Some(v) = c.get("adapt_window").and_then(Json::as_bool) {
+                    cc.adapt_window = v;
+                }
+                if let Some(v) = c.get("issue_budget_per_kcycle").and_then(Json::as_u64) {
+                    cc.issue_budget_per_kcycle = v as u32;
+                }
+                if let Some(v) = c.get("shadow").and_then(Json::as_bool) {
+                    cc.shadow = v;
+                }
+                cfg.controller = Some(cc);
+            }
+        }
+        for (key, dst) in [
+            ("base_cpi", &mut cfg.base_cpi),
+            ("mispredict_rate", &mut cfg.mispredict_rate),
+            ("mispredict_penalty", &mut cfg.mispredict_penalty),
+            ("backend_expose", &mut cfg.backend_expose),
+        ] {
+            if let Some(v) = j.get(key).and_then(Json::as_f64) {
+                *dst = v;
+            }
+        }
+        if let Some(v) = j.get("conf_threshold").and_then(Json::as_u64) {
+            cfg.conf_threshold = v as u8;
+        }
+        if let Some(v) = j.get("seed").and_then(Json::as_u64) {
+            cfg.seed = v;
+        }
+        Ok(cfg)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().pretty()).with_context(|| format!("write {path:?}"))
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<SimConfig> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper() {
+        let h = HierarchyCfg::table1();
+        assert_eq!(h.l1i.lines(), 512); // §V: "512 lines"
+        assert_eq!(h.l1i.sets(), 64);
+        assert_eq!(h.l1d.size_kb, 48);
+        assert_eq!(h.l1d.ways, 12);
+        assert_eq!(h.l2.latency, 15);
+        assert_eq!(h.l3.latency, 35);
+        assert_eq!(h.l3.size_kb, 2048);
+        assert!((h.dram_bytes_per_cycle - 10.24).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_roundtrip_all_prefetchers() {
+        for pf in [
+            PrefetcherKind::NextLineOnly,
+            PrefetcherKind::Eip { entries: 128 },
+            PrefetcherKind::Ceip { entries: 256, window: 8, whole_window: true },
+            PrefetcherKind::Cheip { vt_entries: 4096, window: 12, whole_window: false },
+            PrefetcherKind::Perfect,
+        ] {
+            let mut cfg = SimConfig::default();
+            cfg.prefetcher = pf.clone();
+            cfg.controller = Some(ControllerCfg::default());
+            cfg.seed = 99;
+            let back = SimConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(back.prefetcher, pf);
+            assert_eq!(back.seed, 99);
+            assert_eq!(back.controller, cfg.controller);
+            assert_eq!(back.hierarchy, cfg.hierarchy);
+        }
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(PrefetcherKind::Eip { entries: 256 }.label(), "eip256");
+        assert_eq!(
+            PrefetcherKind::Ceip { entries: 128, window: 8, whole_window: true }.label(),
+            "ceip128w8"
+        );
+        assert_eq!(
+            PrefetcherKind::Cheip { vt_entries: 2048, window: 8, whole_window: false }.label(),
+            "cheip2048w8s"
+        );
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("slofetch_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        let mut cfg = SimConfig::default();
+        cfg.prefetcher = PrefetcherKind::Eip { entries: 64 };
+        cfg.save(&path).unwrap();
+        let back = SimConfig::load(&path).unwrap();
+        assert_eq!(back.prefetcher, cfg.prefetcher);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_unknown_prefetcher() {
+        let j = Json::parse(r#"{"prefetcher": {"kind": "bogus"}}"#).unwrap();
+        assert!(SimConfig::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,107 @@
+//! Token-bucket bandwidth/issuance budgets — the playbook's "single knob,
+//! target issuance rate, which maps to a bandwidth SLO" (§VI-A).
+
+/// A token bucket with per-kilocycle refill.
+#[derive(Clone, Debug)]
+pub struct TokenBucket {
+    /// Tokens per 1000 cycles.
+    pub rate_per_kcycle: f64,
+    /// Burst capacity.
+    pub burst: f64,
+    tokens: f64,
+    last: u64,
+}
+
+impl TokenBucket {
+    pub fn new(rate_per_kcycle: f64, burst: f64) -> Self {
+        TokenBucket {
+            rate_per_kcycle,
+            burst,
+            tokens: burst,
+            last: 0,
+        }
+    }
+
+    /// Try to spend one token at `cycle`.
+    pub fn try_take(&mut self, cycle: u64) -> bool {
+        let elapsed = cycle.saturating_sub(self.last) as f64;
+        self.last = cycle;
+        self.tokens = (self.tokens + elapsed * self.rate_per_kcycle / 1000.0).min(self.burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Current fill fraction.
+    pub fn level(&self) -> f64 {
+        (self.tokens / self.burst).clamp(0.0, 1.0)
+    }
+
+    /// Halve the rate (automatic backoff on regression).
+    pub fn backoff(&mut self) {
+        self.rate_per_kcycle *= 0.5;
+    }
+
+    /// Recover the rate by 25% up to `cap`.
+    pub fn recover(&mut self, cap: f64) {
+        self.rate_per_kcycle = (self.rate_per_kcycle * 1.25).min(cap);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_then_starve_then_refill() {
+        let mut b = TokenBucket::new(1.0, 4.0); // 1 token/kcycle, burst 4
+        let mut got = 0;
+        for _ in 0..10 {
+            if b.try_take(0) {
+                got += 1;
+            }
+        }
+        assert_eq!(got, 4, "burst capacity");
+        assert!(!b.try_take(100), "0.1 tokens after 100 cycles");
+        assert!(b.try_take(2_000), "refilled after 2k cycles");
+    }
+
+    #[test]
+    fn rate_limits_long_run() {
+        let mut b = TokenBucket::new(2.0, 2.0);
+        let mut got = 0;
+        for c in 0..100_000u64 {
+            if b.try_take(c) {
+                got += 1;
+            }
+        }
+        // 2 per kcycle over 100k cycles ≈ 200 (+burst).
+        assert!((195..=210).contains(&got), "got {got}");
+    }
+
+    #[test]
+    fn backoff_and_recover() {
+        let mut b = TokenBucket::new(8.0, 16.0);
+        b.backoff();
+        assert_eq!(b.rate_per_kcycle, 4.0);
+        b.recover(8.0);
+        assert_eq!(b.rate_per_kcycle, 5.0);
+        for _ in 0..10 {
+            b.recover(8.0);
+        }
+        assert_eq!(b.rate_per_kcycle, 8.0, "capped");
+    }
+
+    #[test]
+    fn level_reflects_fill() {
+        let mut b = TokenBucket::new(1.0, 10.0);
+        assert_eq!(b.level(), 1.0);
+        for _ in 0..5 {
+            b.try_take(0);
+        }
+        assert!((b.level() - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,331 @@
+//! The deployment playbook (paper §VI-A), as an executable state machine:
+//!
+//! 1. **Shadow** — run the candidate prefetcher on a trace slice with the
+//!    controller logging decisions but *issuing nothing* (modeled by
+//!    comparing against the control cell without fills); validates
+//!    calibration (predicted-useful rate) before any blast radius.
+//! 2. **Guarded canary** — enable on one cell with budget caps; compare
+//!    P95 and pollution against the control cell; automatic backoff +
+//!    rollback on regression.
+//! 3. **Ramp** — roll out cell by cell; parameters freeze on incident.
+
+use crate::config::{ControllerCfg, SimConfig};
+use crate::rpc::{self, QueueParams, ServiceChain};
+use crate::sim::engine::{self, SimResult};
+use crate::trace::Record;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeployStage {
+    Shadow,
+    Canary,
+    Ramp,
+    RolledBack,
+    Steady,
+}
+
+#[derive(Clone, Debug)]
+pub struct StageReport {
+    pub stage: DeployStage,
+    pub detail: String,
+    /// Control/treatment P95 (µs) where applicable.
+    pub control_p95: f64,
+    pub treat_p95: f64,
+    pub pollution_rate: f64,
+    pub predicted_useful: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct DeployOutcome {
+    pub final_stage: DeployStage,
+    pub reports: Vec<StageReport>,
+}
+
+/// Gates for promotion (the playbook's guardrails).
+#[derive(Clone, Debug)]
+pub struct Gates {
+    /// Max allowed P95 regression (treatment / control).
+    pub p95_ratio_max: f64,
+    /// Max pollution misses per issued prefetch.
+    pub pollution_max: f64,
+    /// Min shadow-mode predicted-useful fraction to proceed at all.
+    pub shadow_useful_min: f64,
+}
+
+impl Default for Gates {
+    fn default() -> Self {
+        Gates {
+            p95_ratio_max: 1.05,
+            pollution_max: 0.10,
+            shadow_useful_min: 0.30,
+        }
+    }
+}
+
+pub struct DeploymentManager {
+    pub control_cfg: SimConfig,
+    pub candidate_cfg: SimConfig,
+    pub gates: Gates,
+    pub cells: usize,
+}
+
+fn p95_of(result: &SimResult, seed: u64) -> f64 {
+    // Control-plane chain with three replicas of this service's IPC.
+    let ipc = result.ipc();
+    let chain = ServiceChain::control_plane(
+        &[
+            ("admission".into(), ipc),
+            ("featurestore".into(), ipc * 0.95),
+            ("mlserve".into(), ipc * 1.05),
+        ],
+        25_000.0,
+        2.5,
+    );
+    rpc::simulate_chain(
+        &chain,
+        &QueueParams {
+            utilization: 0.65,
+            requests: 8_000,
+            seed,
+        },
+    )
+    .p95_us
+}
+
+impl DeploymentManager {
+    pub fn new(control_cfg: SimConfig, candidate_cfg: SimConfig) -> Self {
+        DeploymentManager {
+            control_cfg,
+            candidate_cfg,
+            gates: Gates::default(),
+            cells: 4,
+        }
+    }
+
+    /// Execute the full playbook over per-cell trace slices.
+    pub fn run(&self, records: &[Record]) -> DeployOutcome {
+        let mut reports = Vec::new();
+        let slice = records.len() / (self.cells + 1).max(1);
+        if slice == 0 {
+            return DeployOutcome {
+                final_stage: DeployStage::RolledBack,
+                reports: vec![StageReport {
+                    stage: DeployStage::RolledBack,
+                    detail: "trace too short".into(),
+                    control_p95: 0.0,
+                    treat_p95: 0.0,
+                    pollution_rate: 0.0,
+                    predicted_useful: 0.0,
+                }],
+            };
+        }
+
+        // --- Stage 1: shadow (§VI-A: "enable prefetch decisions but do
+        // not issue fills; log predicted utility, candidate windows, and
+        // hypothetical bandwidth"). Calibration is validated by a paired
+        // issuing run on the same slice.
+        let shadow_slice = &records[0..slice];
+        let mut shadow_cfg = self.candidate_cfg.clone();
+        let mut sc = shadow_cfg.controller.clone().unwrap_or_default();
+        sc.shadow = true;
+        shadow_cfg.controller = Some(sc);
+        let shadow = engine::run(&shadow_cfg, shadow_slice);
+        // Paired issuing run → realized utility for calibration check.
+        let realized = engine::run(&self.candidate_cfg, shadow_slice);
+        let predicted_useful = realized.stats.accuracy();
+        reports.push(StageReport {
+            stage: DeployStage::Shadow,
+            detail: format!(
+                "would_issue={} hypothetical_bw={:.0}B/kcyc realized_acc={:.3}",
+                shadow.stats.shadow_would_issue,
+                shadow.stats.shadow_bytes as f64 / (shadow.stats.cycles / 1000.0).max(1.0),
+                predicted_useful
+            ),
+            control_p95: 0.0,
+            treat_p95: 0.0,
+            pollution_rate: 0.0,
+            predicted_useful,
+        });
+        if predicted_useful < self.gates.shadow_useful_min {
+            reports.push(StageReport {
+                stage: DeployStage::RolledBack,
+                detail: format!(
+                    "shadow gate: predicted useful {predicted_useful:.3} < {}",
+                    self.gates.shadow_useful_min
+                ),
+                control_p95: 0.0,
+                treat_p95: 0.0,
+                pollution_rate: 0.0,
+                predicted_useful,
+            });
+            return DeployOutcome {
+                final_stage: DeployStage::RolledBack,
+                reports,
+            };
+        }
+
+        // --- Stage 2: guarded canary on cell 1 with a budget cap.
+        let canary_slice = &records[slice..2 * slice];
+        let mut canary_cfg = self.candidate_cfg.clone();
+        if let Some(c) = &mut canary_cfg.controller {
+            if c.issue_budget_per_kcycle == 0 {
+                c.issue_budget_per_kcycle = 64; // guarded default
+            }
+        } else {
+            canary_cfg.controller = Some(ControllerCfg {
+                issue_budget_per_kcycle: 64,
+                ..Default::default()
+            });
+        }
+        let control = engine::run(&self.control_cfg, canary_slice);
+        let treat = engine::run(&canary_cfg, canary_slice);
+        let control_p95 = p95_of(&control, 11);
+        let treat_p95 = p95_of(&treat, 11);
+        let pollution_rate = if treat.stats.pf_issued == 0 {
+            0.0
+        } else {
+            treat.stats.pollution_misses as f64 / treat.stats.pf_issued as f64
+        };
+        reports.push(StageReport {
+            stage: DeployStage::Canary,
+            detail: format!(
+                "p95 {:.1}→{:.1}µs pollution={:.4}",
+                control_p95, treat_p95, pollution_rate
+            ),
+            control_p95,
+            treat_p95,
+            pollution_rate,
+            predicted_useful,
+        });
+        if treat_p95 > control_p95 * self.gates.p95_ratio_max
+            || pollution_rate > self.gates.pollution_max
+        {
+            reports.push(StageReport {
+                stage: DeployStage::RolledBack,
+                detail: "canary gate tripped: automatic backoff + rollback".into(),
+                control_p95,
+                treat_p95,
+                pollution_rate,
+                predicted_useful,
+            });
+            return DeployOutcome {
+                final_stage: DeployStage::RolledBack,
+                reports,
+            };
+        }
+
+        // --- Stage 3: ramp across remaining cells, uncapped budget.
+        let mut worst_ratio = 0.0f64;
+        for cell in 2..=self.cells {
+            let lo = cell * slice;
+            let hi = ((cell + 1) * slice).min(records.len());
+            if lo >= hi {
+                break;
+            }
+            let s = &records[lo..hi];
+            let control = engine::run(&self.control_cfg, s);
+            let treat = engine::run(&self.candidate_cfg, s);
+            let cp = p95_of(&control, cell as u64);
+            let tp = p95_of(&treat, cell as u64);
+            worst_ratio = worst_ratio.max(tp / cp);
+            reports.push(StageReport {
+                stage: DeployStage::Ramp,
+                detail: format!("cell {cell}: p95 {cp:.1}→{tp:.1}µs"),
+                control_p95: cp,
+                treat_p95: tp,
+                pollution_rate,
+                predicted_useful,
+            });
+        }
+        let final_stage = if worst_ratio <= self.gates.p95_ratio_max {
+            DeployStage::Steady
+        } else {
+            DeployStage::RolledBack
+        };
+        DeployOutcome {
+            final_stage,
+            reports,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PrefetcherKind;
+    use crate::trace::gen::{apps, generate_records};
+
+    fn records() -> Vec<Record> {
+        generate_records(&apps::app("admission").unwrap(), 3, 250_000)
+    }
+
+    fn nl() -> SimConfig {
+        SimConfig::default()
+    }
+
+    fn cheip() -> SimConfig {
+        SimConfig {
+            prefetcher: PrefetcherKind::Cheip { vt_entries: 2048, window: 8, whole_window: true },
+            controller: Some(ControllerCfg {
+                train_interval_cycles: 200_000,
+                ..Default::default()
+            }),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn good_candidate_reaches_steady_state() {
+        let recs = records();
+        let dm = DeploymentManager::new(nl(), cheip());
+        let out = dm.run(&recs);
+        assert_eq!(
+            out.final_stage,
+            DeployStage::Steady,
+            "reports: {:#?}",
+            out.reports
+        );
+        assert!(out.reports.iter().any(|r| r.stage == DeployStage::Shadow));
+        assert!(out.reports.iter().any(|r| r.stage == DeployStage::Canary));
+        assert!(out.reports.iter().filter(|r| r.stage == DeployStage::Ramp).count() >= 2);
+    }
+
+    #[test]
+    fn hopeless_candidate_rolls_back_in_shadow() {
+        let recs = records();
+        let dm = DeploymentManager {
+            gates: Gates {
+                shadow_useful_min: 1.01, // impossible gate
+                ..Default::default()
+            },
+            ..DeploymentManager::new(nl(), cheip())
+        };
+        let out = dm.run(&recs);
+        assert_eq!(out.final_stage, DeployStage::RolledBack);
+        assert_eq!(out.reports.len(), 2, "must stop after shadow");
+    }
+
+    #[test]
+    fn canary_gate_trips_on_tight_p95() {
+        let recs = records();
+        let dm = DeploymentManager {
+            gates: Gates {
+                p95_ratio_max: 0.5, // require 2x improvement: impossible
+                ..Default::default()
+            },
+            ..DeploymentManager::new(nl(), cheip())
+        };
+        let out = dm.run(&recs);
+        assert_eq!(out.final_stage, DeployStage::RolledBack);
+        assert!(out
+            .reports
+            .iter()
+            .any(|r| r.detail.contains("canary gate tripped")));
+    }
+
+    #[test]
+    fn empty_trace_is_graceful() {
+        let dm = DeploymentManager::new(nl(), cheip());
+        let out = dm.run(&[]);
+        assert_eq!(out.final_stage, DeployStage::RolledBack);
+    }
+}

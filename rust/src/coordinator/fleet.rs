@@ -1,0 +1,133 @@
+//! Fleet driver: runs (app × prefetcher-config) simulation cells across
+//! OS threads (no tokio offline — std::thread + channels) and collects
+//! per-cell results. This is what the figure harness and the deployment
+//! playbook drive.
+
+use crate::config::SimConfig;
+use crate::sim::engine::{self, SimResult};
+use crate::trace::gen::{apps::AppSpec, generate_records};
+use std::sync::mpsc;
+use std::thread;
+
+/// One simulation cell.
+#[derive(Clone)]
+pub struct FleetJob {
+    pub app: AppSpec,
+    pub cfg: SimConfig,
+    pub records: u64,
+    pub trace_seed: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub app: String,
+    pub label: String,
+    pub result: SimResult,
+}
+
+/// Run all jobs, `parallelism` at a time. Results return in job order.
+pub fn run_fleet(jobs: Vec<FleetJob>, parallelism: usize) -> Vec<CellResult> {
+    let parallelism = parallelism.max(1);
+    let n = jobs.len();
+    let (tx, rx) = mpsc::channel::<(usize, CellResult)>();
+    let mut results: Vec<Option<CellResult>> = (0..n).map(|_| None).collect();
+    let mut next = 0usize;
+    let mut inflight = 0usize;
+    let mut done = 0usize;
+    let mut jobs_iter = jobs.into_iter().enumerate();
+
+    thread::scope(|scope| {
+        let spawn_one = |idx: usize, job: FleetJob| {
+            let tx = tx.clone();
+            scope.spawn(move || {
+                let records = generate_records(&job.app, job.trace_seed, job.records);
+                let mut result = engine::run(&job.cfg, &records);
+                result.app = job.app.name.to_string();
+                let cell = CellResult {
+                    app: job.app.name.to_string(),
+                    label: result.label.clone(),
+                    result,
+                };
+                // Receiver never hangs up before all results arrive.
+                let _ = tx.send((idx, cell));
+            });
+        };
+        // Prime the pipeline.
+        while inflight < parallelism {
+            match jobs_iter.next() {
+                Some((idx, job)) => {
+                    spawn_one(idx, job);
+                    inflight += 1;
+                    next += 1;
+                }
+                None => break,
+            }
+        }
+        let _ = next;
+        while done < n {
+            let (idx, cell) = rx.recv().expect("worker channel closed");
+            results[idx] = Some(cell);
+            done += 1;
+            inflight -= 1;
+            if let Some((idx, job)) = jobs_iter.next() {
+                spawn_one(idx, job);
+                inflight += 1;
+            }
+        }
+    });
+    results.into_iter().map(|r| r.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PrefetcherKind;
+    use crate::trace::gen::apps;
+
+    fn job(app: &str, kind: PrefetcherKind) -> FleetJob {
+        FleetJob {
+            app: apps::app(app).unwrap(),
+            cfg: SimConfig {
+                prefetcher: kind,
+                ..Default::default()
+            },
+            records: 20_000,
+            trace_seed: 5,
+        }
+    }
+
+    #[test]
+    fn runs_jobs_in_order_with_parallelism() {
+        let jobs = vec![
+            job("crypto", PrefetcherKind::NextLineOnly),
+            job("serde", PrefetcherKind::Eip { entries: 1024 }),
+            job("logging", PrefetcherKind::NextLineOnly),
+            job("crypto", PrefetcherKind::Perfect),
+        ];
+        let out = run_fleet(jobs, 3);
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[0].app, "crypto");
+        assert_eq!(out[1].app, "serde");
+        assert_eq!(out[1].label, "eip1024");
+        assert_eq!(out[3].label, "perfect");
+        for c in &out {
+            assert!(c.result.stats.instrs > 0);
+        }
+    }
+
+    #[test]
+    fn parallel_equals_serial() {
+        let jobs = || {
+            vec![
+                job("serde", PrefetcherKind::Eip { entries: 1024 }),
+                job("logging", PrefetcherKind::Eip { entries: 1024 }),
+            ]
+        };
+        let par = run_fleet(jobs(), 2);
+        let ser = run_fleet(jobs(), 1);
+        for (a, b) in par.iter().zip(&ser) {
+            assert_eq!(a.result.stats.cycles, b.result.stats.cycles);
+            assert_eq!(a.result.stats.pf_issued, b.result.stats.pf_issued);
+        }
+    }
+}

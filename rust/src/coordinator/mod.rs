@@ -1,0 +1,14 @@
+//! The SLO-driven coordination layer (Layer 3's system contribution
+//! beyond the prefetcher itself): a multi-core fleet driver that runs
+//! per-service simulations in parallel, the paper's three-stage deployment
+//! playbook (§VI-A: shadow → guarded canary → ramp) with automatic backoff
+//! on pollution/P95 regression, and the budget/tenant guardrails (§I
+//! challenge (iv)).
+
+pub mod budget;
+pub mod deploy;
+pub mod fleet;
+pub mod tenant;
+
+pub use deploy::{DeployOutcome, DeployStage, DeploymentManager, StageReport};
+pub use fleet::{run_fleet, CellResult, FleetJob};

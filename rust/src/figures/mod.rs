@@ -1,0 +1,654 @@
+//! Figure/table regeneration harness: one driver per table and figure in
+//! the paper's evaluation (DESIGN.md §5 experiment index). Shared runs are
+//! computed once in a [`Matrix`] (11 apps × 8 prefetcher configs via the
+//! fleet driver) and every figure reads from it.
+//!
+//! Absolute numbers differ from the paper (synthetic traces, analytic
+//! timing — §X-D's caveat applies doubly); the *shape* assertions live in
+//! `rust/tests/integration_figures.rs`.
+
+pub mod report;
+pub mod schematics;
+
+use crate::config::{ControllerCfg, HierarchyCfg, PrefetcherKind, SimConfig};
+use crate::coordinator::fleet::{run_fleet, CellResult, FleetJob};
+use crate::rpc::{self, QueueParams, ServiceChain};
+use crate::sim::engine::SimResult;
+use crate::trace::gen::apps::{self, AppSpec};
+use report::{f2, f3, kb, pct, Table};
+use std::collections::HashMap;
+
+/// Experiment-scale knobs.
+#[derive(Clone, Debug)]
+pub struct FigureCtx {
+    pub records_per_app: u64,
+    pub seed: u64,
+    pub parallelism: usize,
+    pub out_dir: Option<std::path::PathBuf>,
+}
+
+impl Default for FigureCtx {
+    fn default() -> Self {
+        FigureCtx {
+            records_per_app: 600_000,
+            seed: 7,
+            parallelism: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+            out_dir: Some(std::path::PathBuf::from("results")),
+        }
+    }
+}
+
+impl FigureCtx {
+    /// Small-scale context for tests.
+    pub fn quick() -> Self {
+        FigureCtx {
+            records_per_app: 60_000,
+            out_dir: None,
+            ..Default::default()
+        }
+    }
+}
+
+/// The standard config set every figure draws from. "128"/"256" follow the
+/// paper's set-count naming: K sets × 16 ways.
+pub fn standard_configs() -> Vec<(&'static str, PrefetcherKind)> {
+    vec![
+        ("nl", PrefetcherKind::NextLineOnly),
+        ("eip128", PrefetcherKind::Eip { entries: 128 * 16 }),
+        ("eip256", PrefetcherKind::Eip { entries: 256 * 16 }),
+        (
+            "ceip128",
+            PrefetcherKind::Ceip { entries: 128 * 16, window: 8, whole_window: true },
+        ),
+        (
+            "ceip256",
+            PrefetcherKind::Ceip { entries: 256 * 16, window: 8, whole_window: true },
+        ),
+        (
+            "cheip2k",
+            PrefetcherKind::Cheip { vt_entries: 2048, window: 8, whole_window: true },
+        ),
+        (
+            "cheip4k",
+            PrefetcherKind::Cheip { vt_entries: 4096, window: 8, whole_window: true },
+        ),
+        ("perfect", PrefetcherKind::Perfect),
+    ]
+}
+
+/// All (app × config) results, computed once.
+pub struct Matrix {
+    pub ctx: FigureCtx,
+    pub apps: Vec<AppSpec>,
+    /// (app name, config name) → result.
+    results: HashMap<(String, String), SimResult>,
+}
+
+impl Matrix {
+    /// Run the full matrix (parallel across cells).
+    pub fn compute(ctx: FigureCtx) -> Matrix {
+        let apps = apps::all_apps();
+        let mut jobs = Vec::new();
+        let mut keys = Vec::new();
+        for app in &apps {
+            for (name, kind) in standard_configs() {
+                keys.push((app.name.to_string(), name.to_string()));
+                jobs.push(FleetJob {
+                    app: app.clone(),
+                    cfg: SimConfig {
+                        prefetcher: kind,
+                        seed: ctx.seed,
+                        ..Default::default()
+                    },
+                    records: ctx.records_per_app,
+                    trace_seed: ctx.seed,
+                });
+            }
+        }
+        let cells = run_fleet(jobs, ctx.parallelism);
+        let mut results = HashMap::new();
+        for (key, cell) in keys.into_iter().zip(cells) {
+            results.insert(key, cell.result);
+        }
+        Matrix { ctx, apps, results }
+    }
+
+    pub fn get(&self, app: &str, config: &str) -> &SimResult {
+        self.results
+            .get(&(app.to_string(), config.to_string()))
+            .unwrap_or_else(|| panic!("no result for ({app}, {config})"))
+    }
+
+    /// Speedup of `config` over the NL baseline for `app`.
+    pub fn speedup(&self, app: &str, config: &str) -> f64 {
+        self.get(app, config).ipc() / self.get(app, "nl").ipc()
+    }
+
+    /// Geometric-mean speedup across apps.
+    pub fn geomean_speedup(&self, config: &str) -> f64 {
+        let logs: f64 = self
+            .apps
+            .iter()
+            .map(|a| self.speedup(a.name, config).ln())
+            .sum();
+        (logs / self.apps.len() as f64).exp()
+    }
+
+    fn app_names(&self) -> Vec<&'static str> {
+        self.apps.iter().map(|a| a.name).collect()
+    }
+}
+
+// ---------------------------------------------------------------- figures
+
+/// Table I: the simulated system.
+pub fn table1() -> Table {
+    let h = HierarchyCfg::table1();
+    let mut t = Table::new("table1", "Simulated system", &["Parameter", "Values"]);
+    t.row(vec!["CPU frequency".into(), format!("{} GHz", h.freq_ghz)]);
+    let cache = |c: &crate::config::CacheCfg| {
+        format!("{} KB, {}-way, {}-cycle", c.size_kb, c.ways, c.latency)
+    };
+    t.row(vec!["L1 I cache".into(), cache(&h.l1i)]);
+    t.row(vec!["L1 D cache".into(), format!("{} with NLP", cache(&h.l1d))]);
+    t.row(vec!["L2 cache".into(), cache(&h.l2)]);
+    t.row(vec!["L3 cache".into(), cache(&h.l3)]);
+    t.row(vec![
+        "DRAM".into(),
+        format!(
+            "1 channel, {:.1} GB/s, {}-cycle access",
+            h.dram_bytes_per_cycle * h.freq_ghz,
+            h.dram_latency
+        ),
+    ]);
+    t
+}
+
+/// Fig 1: top-down breakdown on the web-search binary (NL baseline).
+pub fn fig1(m: &Matrix) -> Table {
+    let mut t = Table::new(
+        "fig1",
+        "Top-down performance breakdown (websearch)",
+        &["bucket", "share"],
+    );
+    let r = m.get("websearch", "nl");
+    let f = r.stats.topdown.fractions();
+    for (name, v) in [("retiring", f[0]), ("frontend", f[1]), ("backend", f[2]), ("bad_spec", f[3])]
+    {
+        t.row(vec![name.into(), pct(v)]);
+    }
+    t.note("paper: frontend stalls are a leading bucket on web search");
+    t
+}
+
+/// Fig 2: instruction MPKI across the eleven applications.
+pub fn fig2(m: &Matrix) -> Table {
+    let mut t = Table::new(
+        "fig2",
+        "Instruction MPKI across eleven applications (NL baseline)",
+        &["app", "I-MPKI", "L1D-MPKI"],
+    );
+    for app in m.app_names() {
+        let r = m.get(app, "nl");
+        t.row(vec![app.into(), f2(r.stats.mpki()), f2(r.stats.l1d_mpki())]);
+    }
+    t.note("paper shape: managed-runtime + deep-stack services highest; crypto lowest");
+    t
+}
+
+/// Fig 6: EIP vs a perfect prefetcher.
+pub fn fig6(m: &Matrix) -> Table {
+    let mut t = Table::new(
+        "fig6",
+        "EIP versus a perfect prefetcher (speedup over NL)",
+        &["app", "eip256", "perfect", "gap"],
+    );
+    for app in m.app_names() {
+        let e = m.speedup(app, "eip256");
+        let p = m.speedup(app, "perfect");
+        t.row(vec![app.into(), f3(e), f3(p), f3(p - e)]);
+    }
+    t.row(vec![
+        "geomean".into(),
+        f3(m.geomean_speedup("eip256")),
+        f3(m.geomean_speedup("perfect")),
+        "".into(),
+    ]);
+    t.note("paper: capacity limits coverage — EIP leaves a gap to the oracle");
+    t
+}
+
+/// Fig 7: share of entangled pairs whose delta fits in 20 bits.
+pub fn fig7(m: &Matrix) -> Table {
+    let mut t = Table::new(
+        "fig7",
+        "Share of pairs within a 20-bit delta",
+        &["app", "fit20"],
+    );
+    for app in m.app_names() {
+        let ps = m.get(app, "ceip256").pair_stats;
+        t.row(vec![app.into(), pct(ps.fit20_frac())]);
+    }
+    t.note("paper: deltas overwhelmingly fall within 20 bits; managed runtimes lower");
+    t
+}
+
+/// Fig 8: share of destinations covered by an 8-line window.
+pub fn fig8(m: &Matrix) -> Table {
+    let mut t = Table::new(
+        "fig8",
+        "Share of destinations covered within an 8-line window",
+        &["app", "covered"],
+    );
+    for app in m.app_names() {
+        let ps = m.get(app, "eip256").pair_stats;
+        t.row(vec![app.into(), pct(ps.window_frac())]);
+    }
+    t.note("measured over the uncompressed EIP table: best 8-line window per destination set");
+    t
+}
+
+/// Fig 9: speedup of CEIP and EIP at both table scales.
+pub fn fig9(m: &Matrix) -> Table {
+    let mut t = Table::new(
+        "fig9",
+        "Speedup of CEIP and EIP (over NL baseline)",
+        &["app", "eip128", "ceip128", "eip256", "ceip256"],
+    );
+    for app in m.app_names() {
+        t.row(vec![
+            app.into(),
+            f3(m.speedup(app, "eip128")),
+            f3(m.speedup(app, "ceip128")),
+            f3(m.speedup(app, "eip256")),
+            f3(m.speedup(app, "ceip256")),
+        ]);
+    }
+    t.row(vec![
+        "geomean".into(),
+        f3(m.geomean_speedup("eip128")),
+        f3(m.geomean_speedup("ceip128")),
+        f3(m.geomean_speedup("eip256")),
+        f3(m.geomean_speedup("ceip256")),
+    ]);
+    // "X% below in speedup" = percentage points of speedup (§X-C).
+    let d256 = (m.geomean_speedup("eip256") - m.geomean_speedup("ceip256")) * 100.0;
+    let d128 = (m.geomean_speedup("eip128") - m.geomean_speedup("ceip128")) * 100.0;
+    t.note(&format!(
+        "paper §X-C: CEIP-256 is on average 2.3% below EIP-256 in speedup, \
+         CEIP-128 2.0% below EIP-128. measured: {d256:.1}pp / {d128:.1}pp"
+    ));
+    t
+}
+
+/// Fig 10: relative speedup reduction vs uncovered destinations.
+pub fn fig10(m: &Matrix) -> Table {
+    let mut t = Table::new(
+        "fig10",
+        "Relative reduction in speedup versus uncovered destinations",
+        &["app", "uncovered", "speedup_reduction"],
+    );
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for app in m.app_names() {
+        let uncovered = m.get(app, "ceip256").pair_stats.uncovered_frac();
+        let eip = m.speedup(app, "eip256") - 1.0;
+        let ceip = m.speedup(app, "ceip256") - 1.0;
+        let reduction = if eip > 1e-6 { ((eip - ceip) / eip).max(-1.0) } else { 0.0 };
+        xs.push(uncovered);
+        ys.push(reduction);
+        t.row(vec![app.into(), pct(uncovered), pct(reduction)]);
+    }
+    let r = pearson(&xs, &ys);
+    t.note(&format!(
+        "paper: the reduction closely follows the excluded-destination fraction; \
+         Pearson r = {r:.2}"
+    ));
+    t
+}
+
+/// Fig 11: MPKI reduction relative to the NL baseline.
+pub fn fig11(m: &Matrix) -> Table {
+    let mut t = Table::new(
+        "fig11",
+        "MPKI reduction (vs NL baseline)",
+        &["app", "eip256", "ceip256", "cheip2k", "cheip4k"],
+    );
+    for app in m.app_names() {
+        let base = m.get(app, "nl").stats.mpki();
+        let red = |cfg: &str| {
+            let v = m.get(app, cfg).stats.mpki();
+            if base > 0.0 {
+                pct((base - v) / base)
+            } else {
+                "n/a".into()
+            }
+        };
+        t.row(vec![
+            app.into(),
+            red("eip256"),
+            red("ceip256"),
+            red("cheip2k"),
+            red("cheip4k"),
+        ]);
+    }
+    t.note("paper: MPKI reductions remain strong under compression; virtualization adds L1-side metadata");
+    t
+}
+
+/// Fig 12: prefetch accuracy.
+pub fn fig12(m: &Matrix) -> Table {
+    let mut t = Table::new(
+        "fig12",
+        "Prefetch accuracy",
+        &["app", "eip256", "ceip256", "cheip2k"],
+    );
+    let mut eip_sum = 0.0;
+    let mut ceip_sum = 0.0;
+    for app in m.app_names() {
+        let e = m.get(app, "eip256").stats.accuracy();
+        let c = m.get(app, "ceip256").stats.accuracy();
+        let h = m.get(app, "cheip2k").stats.accuracy();
+        eip_sum += e;
+        ceip_sum += c;
+        t.row(vec![app.into(), pct(e), pct(c), pct(h)]);
+    }
+    let n = m.apps.len() as f64;
+    t.note(&format!(
+        "paper: CEIP improves accuracy by concentrating on dense regions — mean {} vs {}",
+        pct(ceip_sum / n),
+        pct(eip_sum / n)
+    ));
+    t
+}
+
+/// Fig 13: storage versus speedup.
+pub fn fig13(m: &Matrix) -> Table {
+    let mut t = Table::new(
+        "fig13",
+        "Storage versus speedup",
+        &["config", "on-chip state", "geomean speedup"],
+    );
+    for cfg in ["eip128", "eip256", "ceip128", "ceip256", "cheip2k", "cheip4k"] {
+        // Metadata bytes are identical across apps; take the first.
+        let bytes = m.get(m.app_names()[0], cfg).metadata_bytes;
+        t.row(vec![cfg.into(), kb(bytes), f3(m.geomean_speedup(cfg))]);
+    }
+    t.note("paper: CEIP/CHEIP preserve EIP-like speedups at a fraction of the state");
+    t
+}
+
+/// §X-C headline summary (the end-to-end validation record).
+pub fn summary(m: &Matrix) -> Table {
+    let mut t = Table::new(
+        "summary",
+        "Headline claims (paper §X-C ↔ measured)",
+        &["claim", "paper", "measured"],
+    );
+    let gm = |c: &str| m.geomean_speedup(c);
+    let deficit_pp = |ceip: f64, eip: f64| (eip - ceip) * 100.0;
+    t.row(vec![
+        "CEIP-256 below EIP-256 in speedup".into(),
+        "~2.3%".into(),
+        format!("{:.1}pp", deficit_pp(gm("ceip256"), gm("eip256"))),
+    ]);
+    t.row(vec![
+        "CEIP-128 below EIP-128 in speedup".into(),
+        "~2.0%".into(),
+        format!("{:.1}pp", deficit_pp(gm("ceip128"), gm("eip128"))),
+    ]);
+    let acc = |cfg: &str| {
+        m.apps
+            .iter()
+            .map(|a| m.get(a.name, cfg).stats.accuracy())
+            .sum::<f64>()
+            / m.apps.len() as f64
+    };
+    t.row(vec![
+        "CEIP accuracy vs EIP".into(),
+        "higher".into(),
+        format!("{} vs {}", pct(acc("ceip256")), pct(acc("eip256"))),
+    ]);
+    t.row(vec![
+        "CHEIP-2K total metadata".into(),
+        "24.75 KB".into(),
+        kb(m.get("websearch", "cheip2k").metadata_bytes),
+    ]);
+    t.row(vec![
+        "CHEIP-4K total metadata".into(),
+        "46.5 KB".into(),
+        kb(m.get("websearch", "cheip4k").metadata_bytes),
+    ]);
+    t.row(vec![
+        "CHEIP speedup vs CEIP (virtualization preserved)".into(),
+        "≈ preserved".into(),
+        format!("{} vs {}", f3(gm("cheip4k")), f3(gm("ceip256"))),
+    ]);
+    t
+}
+
+/// Ablations (§IX window sensitivity, §XIII whole-vs-selective, controller).
+pub fn ablation(ctx: &FigureCtx) -> Table {
+    let apps_sel = ["websearch", "retail-java", "admission"];
+    let mut jobs = Vec::new();
+    let mut labels = Vec::new();
+    let variants: Vec<(String, PrefetcherKind, Option<ControllerCfg>)> = vec![
+        ("nl".into(), PrefetcherKind::NextLineOnly, None),
+        (
+            "w4".into(),
+            PrefetcherKind::Ceip { entries: 4096, window: 4, whole_window: true },
+            None,
+        ),
+        (
+            "w8".into(),
+            PrefetcherKind::Ceip { entries: 4096, window: 8, whole_window: true },
+            None,
+        ),
+        (
+            "w12".into(),
+            PrefetcherKind::Ceip { entries: 4096, window: 12, whole_window: true },
+            None,
+        ),
+        (
+            "w8-selective".into(),
+            PrefetcherKind::Ceip { entries: 4096, window: 8, whole_window: false },
+            None,
+        ),
+        (
+            "w8+ml".into(),
+            PrefetcherKind::Ceip { entries: 4096, window: 8, whole_window: true },
+            Some(ControllerCfg {
+                train_interval_cycles: 200_000,
+                ..Default::default()
+            }),
+        ),
+        (
+            "w12+ml-adapt".into(),
+            PrefetcherKind::Ceip { entries: 4096, window: 12, whole_window: true },
+            Some(ControllerCfg {
+                adapt_window: true,
+                train_interval_cycles: 200_000,
+                ..Default::default()
+            }),
+        ),
+    ];
+    for app in apps_sel {
+        for (label, kind, ctrl) in &variants {
+            labels.push((app.to_string(), label.clone()));
+            jobs.push(FleetJob {
+                app: apps::app(app).unwrap(),
+                cfg: SimConfig {
+                    prefetcher: kind.clone(),
+                    controller: ctrl.clone(),
+                    seed: ctx.seed,
+                    ..Default::default()
+                },
+                records: ctx.records_per_app,
+                trace_seed: ctx.seed,
+            });
+        }
+    }
+    let cells = run_fleet(jobs, ctx.parallelism);
+    let mut by_key: HashMap<(String, String), CellResult> = HashMap::new();
+    for (key, cell) in labels.into_iter().zip(cells) {
+        by_key.insert(key, cell);
+    }
+    let mut t = Table::new(
+        "ablation",
+        "Window size / policy / controller ablations (speedup over NL; accuracy)",
+        &["app", "variant", "speedup", "accuracy", "issued/ki", "skipped"],
+    );
+    for app in apps_sel {
+        let nl_ipc = by_key[&(app.to_string(), "nl".to_string())].result.ipc();
+        for (label, _, _) in &variants {
+            if label == "nl" {
+                continue;
+            }
+            let r = &by_key[&(app.to_string(), label.clone())].result;
+            let ki = r.stats.instrs as f64 / 1000.0;
+            t.row(vec![
+                app.into(),
+                label.clone(),
+                f3(r.ipc() / nl_ipc),
+                pct(r.stats.accuracy()),
+                f2(r.stats.pf_issued as f64 / ki),
+                r.stats.pf_skipped.to_string(),
+            ]);
+        }
+    }
+    t.note("paper §IX: window 8 balances coverage/accuracy; whole-window beats selective (§XIII); ML gate trades issue volume for accuracy");
+    t
+}
+
+/// Control-plane RPC tail latencies per prefetcher (§XI).
+pub fn rpc_tails(m: &Matrix) -> Table {
+    let mut t = Table::new(
+        "rpc",
+        "Control-plane RPC latency (admission→featurestore→mlserve chain, 65% util)",
+        &["config", "P50 µs", "P95 µs", "P99 µs", "P99/P50"],
+    );
+    for cfg in ["nl", "eip256", "ceip256", "cheip2k", "perfect"] {
+        let chain = ServiceChain::control_plane(
+            &[
+                ("admission".into(), m.get("admission", cfg).ipc()),
+                ("featurestore".into(), m.get("featurestore-go", cfg).ipc()),
+                ("mlserve".into(), m.get("mlserve", cfg).ipc()),
+            ],
+            25_000.0,
+            2.5,
+        );
+        // Fixed absolute arrival rate across configs (the NL bottleneck at
+        // 65%), so faster configs see lower utilization — the operational
+        // win the paper describes (§XI).
+        let nl_chain = ServiceChain::control_plane(
+            &[
+                ("admission".into(), m.get("admission", "nl").ipc()),
+                ("featurestore".into(), m.get("featurestore-go", "nl").ipc()),
+                ("mlserve".into(), m.get("mlserve", "nl").ipc()),
+            ],
+            25_000.0,
+            2.5,
+        );
+        let lambda = nl_chain.bottleneck_rate() * 0.65;
+        let util = lambda / chain.bottleneck_rate();
+        let r = rpc::simulate_chain(
+            &chain,
+            &QueueParams {
+                utilization: util,
+                requests: 40_000,
+                seed: 17,
+            },
+        );
+        t.row(vec![
+            cfg.into(),
+            f2(r.p50_us),
+            f2(r.p95_us),
+            f2(r.p99_us),
+            f2(r.p99_us / r.p50_us),
+        ]);
+    }
+    t.note("paper: single-digit IPC gains compound into P95/P99 reductions at fixed load");
+    t
+}
+
+fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let cov: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let vx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    let vy: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
+    if vx <= 0.0 || vy <= 0.0 {
+        return 0.0;
+    }
+    cov / (vx * vy).sqrt()
+}
+
+/// Run every figure; returns all tables (and writes them to `ctx.out_dir`).
+pub fn all(ctx: FigureCtx) -> anyhow::Result<Vec<Table>> {
+    let out_dir = ctx.out_dir.clone();
+    let m = Matrix::compute(ctx.clone());
+    let mut tables = vec![
+        table1(),
+        fig1(&m),
+        fig2(&m),
+        schematics::fig3(),
+        schematics::fig4(),
+        schematics::fig5(),
+        fig6(&m),
+        fig7(&m),
+        fig8(&m),
+        fig9(&m),
+        fig10(&m),
+        fig11(&m),
+        fig12(&m),
+        fig13(&m),
+        summary(&m),
+        rpc_tails(&m),
+    ];
+    tables.push(ablation(&ctx));
+    if let Some(dir) = out_dir {
+        for t in &tables {
+            t.save(&dir)?;
+        }
+    }
+    Ok(tables)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper_text() {
+        let t = table1();
+        let md = t.markdown();
+        assert!(md.contains("2.5 GHz"));
+        assert!(md.contains("32 KB, 8-way, 4-cycle"));
+        assert!(md.contains("48 KB, 12-way, 5-cycle with NLP"));
+        assert!(md.contains("2048 KB, 16-way, 35-cycle"));
+        assert!(md.contains("25.6 GB/s"));
+    }
+
+    #[test]
+    fn pearson_basics() {
+        let xs = [1.0, 2.0, 3.0];
+        assert!((pearson(&xs, &[2.0, 4.0, 6.0]) - 1.0).abs() < 1e-9);
+        assert!((pearson(&xs, &[3.0, 2.0, 1.0]) + 1.0).abs() < 1e-9);
+        assert_eq!(pearson(&[1.0], &[1.0]), 0.0);
+    }
+
+    #[test]
+    fn standard_configs_cover_paper_variants() {
+        let names: Vec<&str> = standard_configs().iter().map(|(n, _)| *n).collect();
+        for want in ["nl", "eip128", "eip256", "ceip128", "ceip256", "cheip2k", "cheip4k", "perfect"]
+        {
+            assert!(names.contains(&want), "{want} missing");
+        }
+    }
+}

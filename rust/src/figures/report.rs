@@ -1,0 +1,167 @@
+//! Report tables: markdown + JSON rendering for every figure/table the
+//! harness regenerates, so EXPERIMENTS.md entries are copy-paste
+//! reproducible.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub id: String,
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    /// Free-form notes (expected paper shape, caveats).
+    pub notes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(id: &str, title: &str, headers: &[&str]) -> Self {
+        Table {
+            id: id.to_string(),
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        debug_assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn note(&mut self, n: &str) -> &mut Self {
+        self.notes.push(n.to_string());
+        self
+    }
+
+    /// Render as GitHub-flavored markdown.
+    pub fn markdown(&self) -> String {
+        let mut out = format!("### {} — {}\n\n", self.id, self.title);
+        let widths: Vec<usize> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| {
+                self.rows
+                    .iter()
+                    .map(|r| r[i].len())
+                    .chain(std::iter::once(h.len()))
+                    .max()
+                    .unwrap_or(3)
+            })
+            .collect();
+        let fmt_row = |cells: &[String]| {
+            let padded: Vec<String> = cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect();
+            format!("| {} |\n", padded.join(" | "))
+        };
+        out.push_str(&fmt_row(&self.headers));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&format!("|-{}-|\n", sep.join("-|-")));
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+        }
+        for n in &self.notes {
+            out.push_str(&format!("\n> {n}\n"));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::str(&self.id)),
+            ("title", Json::str(&self.title)),
+            (
+                "headers",
+                Json::Arr(self.headers.iter().map(|h| Json::str(h)).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(|c| Json::str(c)).collect()))
+                        .collect(),
+                ),
+            ),
+            (
+                "notes",
+                Json::Arr(self.notes.iter().map(|n| Json::str(n)).collect()),
+            ),
+        ])
+    }
+
+    /// Write `<dir>/<id>.md` and `<dir>/<id>.json`.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir).with_context(|| format!("mkdir {dir:?}"))?;
+        std::fs::write(dir.join(format!("{}.md", self.id)), self.markdown())?;
+        std::fs::write(dir.join(format!("{}.json", self.id)), self.to_json().pretty())?;
+        Ok(())
+    }
+}
+
+/// Format helpers shared by figure drivers.
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+pub fn kb(bytes: u64) -> String {
+    format!("{:.2} KB", bytes as f64 / 1024.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_renders_aligned() {
+        let mut t = Table::new("fig9", "Speedup", &["app", "eip256"]);
+        t.row(vec!["websearch".into(), "1.043".into()]);
+        t.note("expected: CEIP ~2% below EIP");
+        let md = t.markdown();
+        assert!(md.contains("### fig9"));
+        assert!(md.contains("| websearch | 1.043  |"));
+        assert!(md.contains("> expected"));
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut t = Table::new("x", "y", &["a"]);
+        t.row(vec!["1".into()]);
+        let j = t.to_json();
+        assert_eq!(j.path(&["rows"]).unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn save_writes_files() {
+        let dir = std::env::temp_dir().join("slofetch_report_test");
+        let mut t = Table::new("t1", "test", &["c"]);
+        t.row(vec!["v".into()]);
+        t.save(&dir).unwrap();
+        assert!(dir.join("t1.md").exists());
+        assert!(dir.join("t1.json").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn format_helpers() {
+        assert_eq!(f2(1.2345), "1.23");
+        assert_eq!(pct(0.123), "12.3%");
+        assert_eq!(kb(25200), "24.61 KB");
+    }
+}

@@ -1,0 +1,27 @@
+//! # SLOFetch
+//!
+//! Full reproduction of *SLOFetch: Compressed-Hierarchical Instruction
+//! Prefetching for Cloud Microservices* (2025): the CEIP compressed
+//! 36-bit entangling entry, the CHEIP hierarchical metadata store, the
+//! online ML issue controller (logistic scorer + contextual bandit), and
+//! every substrate the evaluation depends on — a ZSim-like trace-driven
+//! cache/timing simulator, a synthetic microservice trace generator, the
+//! EIP/next-line/perfect baselines, an RPC tail-latency layer, and the
+//! SLO-driven deployment coordinator.
+//!
+//! Architecture (see DESIGN.md): Layer 3 is this Rust crate; Layer 2/1 are
+//! JAX/Pallas controller kernels AOT-lowered to HLO at build time and
+//! executed from [`runtime`] via the PJRT CPU client. Python is never on
+//! the request path.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod figures;
+pub mod ml;
+pub mod prefetch;
+pub mod rpc;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+pub mod util;

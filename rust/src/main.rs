@@ -1,0 +1,276 @@
+//! `slofetch` — launcher for the SLOFetch reproduction.
+//!
+//! ```text
+//! slofetch figure <1|2|...|13|table1|summary|rpc|ablation|all> [--records N] [--seed S] [--out DIR]
+//! slofetch simulate --app websearch --prefetcher ceip256 [--records N] [--ml] [--budget N]
+//! slofetch gen-trace --app websearch --records N --out trace.slft
+//! slofetch deploy --app admission --candidate cheip2k [--records N]
+//! slofetch apps
+//! slofetch runtime-check
+//! ```
+
+use anyhow::{bail, Context, Result};
+use slofetch::cli::{parse_prefetcher, Args};
+use slofetch::config::{ControllerCfg, SimConfig};
+use slofetch::coordinator::deploy::DeploymentManager;
+use slofetch::figures::{self, FigureCtx};
+use slofetch::ml::controller::{Backend, OnlineController};
+use slofetch::runtime::PjrtEngine;
+use slofetch::sim::engine::Engine;
+use slofetch::trace::gen::{self, apps};
+use slofetch::trace::{codec, stats as trace_stats};
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("figure") => cmd_figure(args),
+        Some("simulate") => cmd_simulate(args),
+        Some("gen-trace") => cmd_gen_trace(args),
+        Some("deploy") => cmd_deploy(args),
+        Some("apps") => cmd_apps(),
+        Some("runtime-check") => cmd_runtime_check(),
+        Some(other) => bail!("unknown subcommand '{other}'\n{USAGE}"),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "usage:
+  slofetch figure <1..13|table1|summary|rpc|ablation|all> [--records N] [--seed S] [--out DIR]
+  slofetch simulate --app A --prefetcher P [--records N] [--ml] [--adapt-window] [--budget N] [--pjrt]
+  slofetch gen-trace --app A --records N --out FILE
+  slofetch deploy --app A --candidate P [--records N]
+  slofetch apps
+  slofetch runtime-check";
+
+fn figure_ctx(args: &Args) -> Result<FigureCtx> {
+    let mut ctx = FigureCtx {
+        records_per_app: args.u64_opt("records", 600_000)?,
+        seed: args.u64_opt("seed", 7)?,
+        ..Default::default()
+    };
+    if let Some(out) = args.opt("out") {
+        ctx.out_dir = Some(out.into());
+    }
+    Ok(ctx)
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let ctx = figure_ctx(args)?;
+    if which == "all" {
+        for t in figures::all(ctx)? {
+            println!("{}", t.markdown());
+        }
+        return Ok(());
+    }
+    // Single figure: schematics and table1 don't need the matrix.
+    let table = match which {
+        "table1" => figures::table1(),
+        "3" => figures::schematics::fig3(),
+        "4" => figures::schematics::fig4(),
+        "5" => figures::schematics::fig5(),
+        "ablation" => figures::ablation(&ctx),
+        _ => {
+            let m = figures::Matrix::compute(ctx.clone());
+            match which {
+                "1" => figures::fig1(&m),
+                "2" => figures::fig2(&m),
+                "6" => figures::fig6(&m),
+                "7" => figures::fig7(&m),
+                "8" => figures::fig8(&m),
+                "9" => figures::fig9(&m),
+                "10" => figures::fig10(&m),
+                "11" => figures::fig11(&m),
+                "12" => figures::fig12(&m),
+                "13" => figures::fig13(&m),
+                "summary" => figures::summary(&m),
+                "rpc" => figures::rpc_tails(&m),
+                other => bail!("unknown figure '{other}'"),
+            }
+        }
+    };
+    println!("{}", table.markdown());
+    if let Some(dir) = &ctx.out_dir {
+        table.save(dir)?;
+        println!("(saved to {}/{}.md)", dir.display(), table.id);
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let app_name = args.opt("app").context("--app required")?;
+    let spec = apps::app(app_name)
+        .with_context(|| format!("unknown app '{app_name}' (see `slofetch apps`)"))?;
+    let kind = parse_prefetcher(args.opt("prefetcher").unwrap_or("ceip256"))?;
+    let records_n = args.u64_opt("records", 600_000)?;
+    let seed = args.u64_opt("seed", 7)?;
+    let mut cfg = SimConfig {
+        prefetcher: kind,
+        seed,
+        ..Default::default()
+    };
+    if args.flag("ml") || args.opt("budget").is_some() || args.flag("adapt-window") {
+        cfg.controller = Some(ControllerCfg {
+            adapt_window: args.flag("adapt-window"),
+            issue_budget_per_kcycle: args.u64_opt("budget", 0)? as u32,
+            ..Default::default()
+        });
+    }
+    let records = gen::generate_records(&spec, seed, records_n);
+    let ts = trace_stats::analyze(&records);
+    println!(
+        "app={app_name} records={} unique-I-lines={} seq={:.2} fit20={:.2}",
+        records.len(),
+        ts.unique_ilines,
+        ts.seq_frac,
+        ts.fit20_frac
+    );
+
+    let mut engine = Engine::new(cfg.clone(), &records);
+    // `--pjrt` routes controller training through the AOT artifacts.
+    if args.flag("pjrt") {
+        let ctrl_cfg = cfg.controller.clone().unwrap_or_default();
+        let pjrt = PjrtEngine::load_default().context("loading AOT artifacts")?;
+        println!("pjrt platform: {}", pjrt.platform());
+        engine = engine.with_controller(OnlineController::with_backend(
+            ctrl_cfg,
+            seed,
+            Backend::Pjrt(pjrt),
+        ));
+    }
+    let r = engine.run();
+    println!(
+        "label={} ipc={:.4} mpki={:.2} accuracy={:.3} coverage={:.3} timeliness={:.3}",
+        r.label,
+        r.ipc(),
+        r.stats.mpki(),
+        r.stats.accuracy(),
+        r.stats.coverage(),
+        r.stats.timeliness()
+    );
+    println!(
+        "issued={} timely={} late={} useless={} pollution={} skipped={} metadata={}",
+        r.stats.pf_issued,
+        r.stats.pf_timely,
+        r.stats.pf_late,
+        r.stats.pf_useless,
+        r.stats.pollution_misses,
+        r.stats.pf_skipped,
+        figures::report::kb(r.metadata_bytes),
+    );
+    if let Some(cs) = r.controller {
+        println!(
+            "controller: decisions={} issued={} skipped={} trains={} last_loss={:.4} backend={}",
+            cs.decisions,
+            cs.issued,
+            cs.skipped,
+            cs.trains,
+            cs.last_loss,
+            if args.flag("pjrt") { "pjrt" } else { "native" },
+        );
+    }
+    let f = r.stats.topdown.fractions();
+    println!(
+        "topdown: retiring={:.1}% frontend={:.1}% backend={:.1}% badspec={:.1}%",
+        f[0] * 100.0,
+        f[1] * 100.0,
+        f[2] * 100.0,
+        f[3] * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_gen_trace(args: &Args) -> Result<()> {
+    let app_name = args.opt("app").context("--app required")?;
+    let spec = apps::app(app_name).with_context(|| format!("unknown app '{app_name}'"))?;
+    let records_n = args.u64_opt("records", 1_000_000)?;
+    let seed = args.u64_opt("seed", 7)?;
+    let out = args.opt("out").context("--out required")?;
+    let (meta, records, _) = gen::generate(&spec, seed, records_n);
+    codec::write_trace_file(std::path::Path::new(out), &meta, &records)?;
+    let bytes = std::fs::metadata(out)?.len();
+    println!(
+        "wrote {} records to {out} ({:.1} MB, {:.2} B/record)",
+        records.len(),
+        bytes as f64 / 1e6,
+        bytes as f64 / records.len() as f64
+    );
+    Ok(())
+}
+
+fn cmd_deploy(args: &Args) -> Result<()> {
+    let app_name = args.opt("app").unwrap_or("admission");
+    let spec = apps::app(app_name).with_context(|| format!("unknown app '{app_name}'"))?;
+    let candidate = parse_prefetcher(args.opt("candidate").unwrap_or("cheip2k"))?;
+    let records_n = args.u64_opt("records", 500_000)?;
+    let records = gen::generate_records(&spec, args.u64_opt("seed", 3)?, records_n);
+    let control = SimConfig::default();
+    let cand_cfg = SimConfig {
+        prefetcher: candidate,
+        controller: Some(ControllerCfg {
+            train_interval_cycles: 200_000,
+            ..Default::default()
+        }),
+        ..Default::default()
+    };
+    let dm = DeploymentManager::new(control, cand_cfg);
+    let out = dm.run(&records);
+    for r in &out.reports {
+        println!("[{:?}] {}", r.stage, r.detail);
+    }
+    println!("final stage: {:?}", out.final_stage);
+    Ok(())
+}
+
+fn cmd_apps() -> Result<()> {
+    println!("{:<18} {:<6} {:>9} {:>8}", "app", "rt", "churn", "handlers");
+    for a in apps::all_apps() {
+        println!(
+            "{:<18} {:<6} {:>9} {:>8}",
+            a.name,
+            format!("{:?}", a.runtime),
+            a.churn_period,
+            a.layout.handler_types
+        );
+    }
+    Ok(())
+}
+
+fn cmd_runtime_check() -> Result<()> {
+    let engine = PjrtEngine::load_default().context("loading AOT artifacts")?;
+    println!("platform: {}", engine.platform());
+    // Parity spot-check against the native mirror.
+    let weights = slofetch::ml::logistic::Weights::default();
+    let x: Vec<f32> = (0..16 * 4).map(|i| (i as f32 * 0.37).sin()).collect();
+    let pjrt = engine.score(&weights.w, weights.b, &x)?;
+    let native = weights.score_batch(&x);
+    let max_err = pjrt
+        .iter()
+        .zip(&native)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("score parity (pjrt vs native mirror): max |delta| = {max_err:.2e}");
+    anyhow::ensure!(max_err < 1e-5, "parity failure");
+    println!("runtime OK");
+    Ok(())
+}

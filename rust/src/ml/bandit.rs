@@ -1,0 +1,182 @@
+//! Contextual bandit for the decision threshold and (optionally) the
+//! prefetch window size (paper §IV-B): ε-greedy over a small per-context
+//! action-value table, updated incrementally with the shaped reward
+//! (future hits minus eviction/useless-fill penalties over a short
+//! horizon). "Fast, monotone adaptations" — the value update is
+//! v ← v + lr·(r − v), the same math as the AOT `bandit.hlo.txt` module.
+
+use crate::util::rng::Rng;
+
+/// Candidate thresholds the bandit arbitrates between.
+pub const THRESHOLDS: [f32; 4] = [0.30, 0.45, 0.60, 0.75];
+/// Window-size arms (§IV-B: "optionally choose among window sizes
+/// {4, 8, 12}").
+pub const WINDOWS: [u8; 3] = [4, 8, 12];
+/// Context buckets: (density-high, headroom-high, short-loop) → 8.
+pub const CONTEXTS: usize = 8;
+
+/// Flattened value-table sizes (threshold table then window table) — the
+/// AOT bandit module operates on the concatenation (64 slots, padded).
+pub const THRESHOLD_SLOTS: usize = CONTEXTS * THRESHOLDS.len(); // 32
+pub const WINDOW_SLOTS: usize = CONTEXTS * WINDOWS.len(); // 24
+pub const TOTAL_SLOTS: usize = 64; // matches python aot BANDIT_SLOTS
+
+/// Context bucket from decision-time signals.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Context(pub usize);
+
+impl Context {
+    pub fn from_signals(density_high: bool, headroom_high: bool, short_loop: bool) -> Self {
+        Context((density_high as usize) | (headroom_high as usize) << 1 | (short_loop as usize) << 2)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Bandit {
+    /// Concatenated value tables, padded to [`TOTAL_SLOTS`].
+    pub values: [f32; TOTAL_SLOTS],
+    pub epsilon: f64,
+    pub lr: f32,
+    rng: Rng,
+    /// Pulls per slot (diagnostics / tests).
+    pub pulls: [u32; TOTAL_SLOTS],
+}
+
+impl Bandit {
+    pub fn new(epsilon: f64, lr: f32, seed: u64) -> Self {
+        Bandit {
+            // Optimistic initialization encourages early exploration.
+            values: [0.5; TOTAL_SLOTS],
+            epsilon,
+            lr,
+            rng: Rng::new(seed),
+            pulls: [0; TOTAL_SLOTS],
+        }
+    }
+
+    fn pick(&mut self, base: usize, n: usize) -> usize {
+        let arm = if self.rng.chance(self.epsilon) {
+            self.rng.below(n as u64) as usize
+        } else {
+            (0..n)
+                .max_by(|&a, &b| {
+                    self.values[base + a]
+                        .partial_cmp(&self.values[base + b])
+                        .unwrap()
+                })
+                .unwrap()
+        };
+        self.pulls[base + arm] += 1;
+        arm
+    }
+
+    /// Choose the decision threshold for this context. Returns
+    /// (threshold, slot index for the later reward update).
+    pub fn choose_threshold(&mut self, ctx: Context) -> (f32, usize) {
+        let base = ctx.0 * THRESHOLDS.len();
+        let arm = self.pick(base, THRESHOLDS.len());
+        (THRESHOLDS[arm], base + arm)
+    }
+
+    /// Choose the effective window size. Returns (window, slot index).
+    pub fn choose_window(&mut self, ctx: Context) -> (u8, usize) {
+        let base = THRESHOLD_SLOTS + ctx.0 * WINDOWS.len();
+        let arm = self.pick(base, WINDOWS.len());
+        (WINDOWS[arm], base + arm)
+    }
+
+    /// Incremental value update: v ← v + lr·(r − v). Mirrors the AOT
+    /// bandit module; the coordinator can route this through PJRT.
+    pub fn update(&mut self, slot: usize, reward: f32) {
+        let v = self.values[slot];
+        self.values[slot] = v + self.lr * (reward - v);
+    }
+
+    /// Apply an externally-computed value table (PJRT path).
+    pub fn set_values(&mut self, values: &[f32]) {
+        self.values[..values.len().min(TOTAL_SLOTS)]
+            .copy_from_slice(&values[..values.len().min(TOTAL_SLOTS)]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_buckets_are_distinct() {
+        let mut seen = std::collections::HashSet::new();
+        for d in [false, true] {
+            for h in [false, true] {
+                for s in [false, true] {
+                    seen.insert(Context::from_signals(d, h, s).0);
+                }
+            }
+        }
+        assert_eq!(seen.len(), 8);
+        assert!(seen.iter().all(|&c| c < CONTEXTS));
+    }
+
+    #[test]
+    fn converges_to_best_threshold_arm() {
+        let mut b = Bandit::new(0.1, 0.2, 42);
+        let ctx = Context(3);
+        // Reward structure: arm 1 (threshold 0.45) is best.
+        for _ in 0..2000 {
+            let (t, slot) = b.choose_threshold(ctx);
+            let r = if (t - 0.45).abs() < 1e-6 { 1.0 } else { 0.1 };
+            b.update(slot, r);
+        }
+        let base = ctx.0 * THRESHOLDS.len();
+        let best = (0..4).max_by(|&a, &c| b.values[base + a].partial_cmp(&b.values[base + c]).unwrap()).unwrap();
+        assert_eq!(best, 1, "values: {:?}", &b.values[base..base + 4]);
+        // Greedy pulls concentrate on the best arm.
+        assert!(b.pulls[base + 1] > 1000);
+    }
+
+    #[test]
+    fn window_arm_selection_in_range() {
+        let mut b = Bandit::new(0.5, 0.1, 7);
+        for _ in 0..100 {
+            let (w, slot) = b.choose_window(Context(5));
+            assert!(WINDOWS.contains(&w));
+            assert!((THRESHOLD_SLOTS..THRESHOLD_SLOTS + WINDOW_SLOTS).contains(&slot));
+        }
+    }
+
+    #[test]
+    fn update_moves_toward_reward() {
+        let mut b = Bandit::new(0.0, 0.5, 1);
+        b.update(0, 1.0);
+        assert!((b.values[0] - 0.75).abs() < 1e-6);
+        b.update(0, 0.0);
+        assert!((b.values[0] - 0.375).abs() < 1e-6);
+    }
+
+    #[test]
+    fn contexts_learn_independently() {
+        let mut b = Bandit::new(0.05, 0.3, 9);
+        for _ in 0..1500 {
+            let (t, s) = b.choose_threshold(Context(0));
+            b.update(s, if t < 0.4 { 1.0 } else { 0.0 }); // ctx0: low best
+            let (t, s) = b.choose_threshold(Context(7));
+            b.update(s, if t > 0.7 { 1.0 } else { 0.0 }); // ctx7: high best
+        }
+        let argmax = |ctx: usize| {
+            let base = ctx * THRESHOLDS.len();
+            (0..4)
+                .max_by(|&a, &c| b.values[base + a].partial_cmp(&b.values[base + c]).unwrap())
+                .unwrap()
+        };
+        assert_eq!(argmax(0), 0);
+        assert_eq!(argmax(7), 3);
+    }
+
+    #[test]
+    fn set_values_applies_external_table() {
+        let mut b = Bandit::new(0.0, 0.1, 1);
+        let ext = [0.9f32; TOTAL_SLOTS];
+        b.set_values(&ext);
+        assert!(b.values.iter().all(|&v| (v - 0.9).abs() < 1e-7));
+    }
+}

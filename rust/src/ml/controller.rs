@@ -1,0 +1,450 @@
+//! The Online ML Controller (paper §IV): a logistic scorer gates each
+//! prefetch candidate; a contextual bandit adapts the decision threshold
+//! (and optionally the effective window size). Training runs periodically
+//! at millisecond granularity on batched experience — through the AOT
+//! PJRT artifact when available ([`Backend::Pjrt`]), or the bit-identical
+//! native mirror otherwise.
+
+use super::bandit::{Bandit, Context};
+use super::features::{self, DecisionCtx, FeatureVec, DIM};
+use super::logistic::Weights;
+use crate::config::ControllerCfg;
+use crate::prefetch::{Candidate, Outcome};
+use crate::runtime::PjrtEngine;
+use std::collections::HashMap;
+
+/// Where training (and batch scoring) executes.
+pub enum Backend {
+    /// Rust mirror (identical math; used in the simulator hot path and
+    /// when artifacts are absent).
+    Native,
+    /// AOT JAX/Pallas modules via the PJRT CPU client.
+    Pjrt(PjrtEngine),
+}
+
+struct Pending {
+    x: FeatureVec,
+    thr_slot: usize,
+    win_slot: Option<usize>,
+}
+
+/// Rolling decision statistics the engine reads for reporting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ControllerStats {
+    pub decisions: u64,
+    pub issued: u64,
+    pub skipped: u64,
+    pub budget_denials: u64,
+    pub trains: u64,
+    pub last_loss: f32,
+}
+
+pub struct OnlineController {
+    pub weights: Weights,
+    bandit: Bandit,
+    cfg: ControllerCfg,
+    /// Decision-time context, maintained from outcome feedback + engine
+    /// signals (bandwidth headroom, issue rate, churn, RPC tag).
+    pub ctx: DecisionCtx,
+    pending: HashMap<u64, Pending>,
+    batch_x: Vec<f32>,
+    batch_y: Vec<f32>,
+    last_train: u64,
+    // Token-bucket issue budget (the playbook's single knob, §VI-A).
+    tokens: f64,
+    last_refill: u64,
+    backend: Backend,
+    pub stats: ControllerStats,
+}
+
+/// Experience ring capacity (samples).
+const MAX_EXPERIENCE: usize = 4096;
+/// Minimum labeled samples before a training step fires.
+const MIN_TRAIN_SAMPLES: usize = 64;
+/// AOT batch size (must match python BATCH).
+const AOT_BATCH: usize = 256;
+
+impl OnlineController {
+    pub fn new(cfg: ControllerCfg, seed: u64) -> Self {
+        Self::with_backend(cfg, seed, Backend::Native)
+    }
+
+    pub fn with_backend(cfg: ControllerCfg, seed: u64, backend: Backend) -> Self {
+        OnlineController {
+            weights: Weights::default(),
+            bandit: Bandit::new(cfg.epsilon, 0.1, seed ^ 0xBAD17),
+            tokens: cfg.issue_budget_per_kcycle as f64,
+            cfg,
+            ctx: DecisionCtx {
+                hit_ewma: 0.5,
+                accuracy_ewma: 0.5,
+                bw_headroom: 1.0,
+                ..Default::default()
+            },
+            pending: HashMap::new(),
+            batch_x: Vec::new(),
+            batch_y: Vec::new(),
+            last_train: 0,
+            last_refill: 0,
+            backend,
+            stats: ControllerStats::default(),
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        match self.backend {
+            Backend::Native => "native",
+            Backend::Pjrt(_) => "pjrt",
+        }
+    }
+
+    fn budget_ok(&mut self, cycle: u64) -> bool {
+        let cap = self.cfg.issue_budget_per_kcycle;
+        if cap == 0 {
+            return true;
+        }
+        let elapsed = cycle.saturating_sub(self.last_refill);
+        self.tokens = (self.tokens + elapsed as f64 * cap as f64 / 1000.0).min(cap as f64);
+        self.last_refill = cycle;
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Gate one candidate. Returns true to issue.
+    pub fn decide(&mut self, cand: &Candidate, cycle: u64) -> bool {
+        self.stats.decisions += 1;
+        if !self.cfg.enabled {
+            self.stats.issued += 1;
+            return true;
+        }
+        let bctx = Context::from_signals(
+            cand.window_density > 0.5,
+            self.ctx.bw_headroom > 0.5,
+            cand.short_loop,
+        );
+        // Optional window-size arm: truncate the candidate stream to the
+        // chosen effective window.
+        let mut win_slot = None;
+        if self.cfg.adapt_window {
+            let (win, slot) = self.bandit.choose_window(bctx);
+            win_slot = Some(slot);
+            if cand.offset >= win {
+                self.stats.skipped += 1;
+                return false;
+            }
+        }
+        let x = features::extract(cand, &self.ctx);
+        let p = self.weights.score(&x);
+        let (thr, thr_slot) = self.bandit.choose_threshold(bctx);
+        if p < thr {
+            self.stats.skipped += 1;
+            return false;
+        }
+        if !self.budget_ok(cycle) {
+            self.stats.budget_denials += 1;
+            return false;
+        }
+        self.stats.issued += 1;
+        self.pending.insert(
+            cand.line,
+            Pending {
+                x,
+                thr_slot,
+                win_slot,
+            },
+        );
+        true
+    }
+
+    /// Outcome feedback for an issued prefetch (reward shaping, §IV-B:
+    /// "future hits minus penalties for evictions and useless fills").
+    pub fn on_outcome(&mut self, line: u64, outcome: Outcome, caused_pollution: bool) {
+        let (label, mut reward) = match outcome {
+            Outcome::Timely => (1.0f32, 1.0f32),
+            Outcome::Late => (1.0, 0.25),
+            Outcome::Useless => (0.0, -0.5),
+        };
+        if caused_pollution {
+            reward -= 1.0;
+        }
+        // EWMAs feeding the feature vector.
+        let a = 0.02f32;
+        let useful = matches!(outcome, Outcome::Timely | Outcome::Late);
+        self.ctx.hit_ewma += a * (useful as u8 as f32 - self.ctx.hit_ewma);
+        self.ctx.accuracy_ewma += a * (useful as u8 as f32 - self.ctx.accuracy_ewma);
+        self.ctx.pollution_ewma += a * (caused_pollution as u8 as f32 - self.ctx.pollution_ewma);
+        if let Some(p) = self.pending.remove(&line) {
+            self.bandit.update(p.thr_slot, reward);
+            if let Some(ws) = p.win_slot {
+                self.bandit.update(ws, reward);
+            }
+            if self.batch_x.len() / DIM >= MAX_EXPERIENCE {
+                // Drop the oldest half (ring semantics without a deque).
+                let keep = MAX_EXPERIENCE / 2 * DIM;
+                let cut = self.batch_x.len() - keep;
+                self.batch_x.drain(..cut);
+                self.batch_y.drain(..self.batch_y.len() - MAX_EXPERIENCE / 2);
+            }
+            self.batch_x.extend_from_slice(&p.x);
+            self.batch_y.push(label);
+        }
+    }
+
+    /// Engine-side signal refresh (bandwidth headroom, issue rate, churn,
+    /// current RPC tag).
+    pub fn set_signals(&mut self, bw_headroom: f32, issue_rate: f32, churn: f32, rpc_tag: u8) {
+        self.ctx.bw_headroom = bw_headroom;
+        self.ctx.issue_rate = issue_rate;
+        self.ctx.churn = churn;
+        self.ctx.rpc_tag = rpc_tag;
+    }
+
+    /// Periodic training step ("millisecond granularity", §IV-A). Returns
+    /// the pre-step loss when a step ran.
+    pub fn maybe_train(&mut self, cycle: u64) -> Option<f32> {
+        if cycle.saturating_sub(self.last_train) < self.cfg.train_interval_cycles {
+            return None;
+        }
+        self.last_train = cycle;
+        let n = self.batch_y.len();
+        if n < MIN_TRAIN_SAMPLES {
+            return None;
+        }
+        let loss = match &mut self.backend {
+            Backend::Native => {
+                self.weights
+                    .train_step(&self.batch_x, &self.batch_y, self.cfg.lr)
+            }
+            Backend::Pjrt(engine) => {
+                // Fixed AOT batch: most recent 256 samples, resampled with
+                // replacement when fewer are available.
+                let mut xs = Vec::with_capacity(AOT_BATCH * DIM);
+                let mut ys = Vec::with_capacity(AOT_BATCH);
+                for i in 0..AOT_BATCH {
+                    let idx = if n >= AOT_BATCH { n - AOT_BATCH + i } else { i % n };
+                    xs.extend_from_slice(&self.batch_x[idx * DIM..(idx + 1) * DIM]);
+                    ys.push(self.batch_y[idx]);
+                }
+                match engine.train_step(&self.weights.w, self.weights.b, &xs, &ys, self.cfg.lr) {
+                    Ok((w, b, loss)) => {
+                        self.weights.w = w;
+                        self.weights.b = b;
+                        loss
+                    }
+                    Err(e) => {
+                        // Freeze parameters on failure (playbook: "freezing
+                        // parameters during incidents").
+                        eprintln!("controller: pjrt train failed, freezing: {e:#}");
+                        return None;
+                    }
+                }
+            }
+        };
+        self.stats.trains += 1;
+        self.stats.last_loss = loss;
+        Some(loss)
+    }
+
+    /// Drop experience and pending state (phase boundary / deployment
+    /// rollback).
+    pub fn reset_experience(&mut self) {
+        self.batch_x.clear();
+        self.batch_y.clear();
+        self.pending.clear();
+    }
+
+    pub fn experience_len(&self) -> usize {
+        self.batch_y.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(conf: u8, density: f32) -> Candidate {
+        Candidate {
+            line: 0x2000,
+            src: 0x1000,
+            conf,
+            offset: 1,
+            window_density: density,
+            short_loop: false,
+        }
+    }
+
+    fn cfg() -> ControllerCfg {
+        ControllerCfg {
+            train_interval_cycles: 1000,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn issues_confident_skips_weak() {
+        let mut c = OnlineController::new(cfg(), 1);
+        // Make the bandit deterministic-greedy.
+        c.bandit.epsilon = 0.0;
+        let hi = c.decide(&cand(3, 0.9), 100);
+        assert!(hi, "high-confidence dense candidate must issue");
+        // Push pollution high, drop headroom, and remove the optimistic
+        // bias → the weak candidate scores below every threshold arm.
+        c.ctx.pollution_ewma = 1.0;
+        c.ctx.bw_headroom = 0.0;
+        c.weights.b = -1.0;
+        let lo = c.decide(&cand(0, 0.0), 200);
+        assert!(!lo, "weak candidate under pollution must be skipped");
+        assert_eq!(c.stats.decisions, 2);
+        assert_eq!(c.stats.issued, 1);
+        assert_eq!(c.stats.skipped, 1);
+    }
+
+    #[test]
+    fn disabled_controller_always_issues() {
+        let mut c = OnlineController::new(
+            ControllerCfg {
+                enabled: false,
+                ..cfg()
+            },
+            1,
+        );
+        for _ in 0..10 {
+            assert!(c.decide(&cand(0, 0.0), 1));
+        }
+    }
+
+    #[test]
+    fn budget_cap_denies_when_exhausted() {
+        let mut c = OnlineController::new(
+            ControllerCfg {
+                issue_budget_per_kcycle: 2,
+                ..cfg()
+            },
+            1,
+        );
+        c.bandit.epsilon = 0.0;
+        let mut issued = 0;
+        for i in 0..10 {
+            if c.decide(&cand(3, 0.9), 100 + i) {
+                issued += 1;
+            }
+        }
+        assert!(issued <= 2, "budget 2/kcycle, ~0 cycles elapsed: {issued}");
+        assert!(c.stats.budget_denials >= 8);
+        // Tokens refill with time.
+        assert!(c.decide(&cand(3, 0.9), 5_000));
+    }
+
+    #[test]
+    fn outcome_labels_and_trains_native() {
+        let mut c = OnlineController::new(cfg(), 2);
+        c.bandit.epsilon = 0.0;
+        // Generate decisions + outcomes: dense/confident → timely,
+        // sparse/weak → useless.
+        let mut cycle = 0;
+        while c.experience_len() < 200 {
+            cycle += 10;
+            let good = cand(3, 1.0);
+            if c.decide(&good, cycle) {
+                c.on_outcome(good.line, Outcome::Timely, false);
+            }
+            let bad = Candidate {
+                line: 0x3000,
+                ..cand(1, 0.125)
+            };
+            if c.decide(&bad, cycle) {
+                c.on_outcome(bad.line, Outcome::Useless, true);
+            }
+            if cycle > 1_000_000 {
+                break;
+            }
+        }
+        assert!(c.experience_len() >= MIN_TRAIN_SAMPLES);
+        let loss = c.maybe_train(cycle + 10_000);
+        assert!(loss.is_some());
+        assert_eq!(c.stats.trains, 1);
+        // Second call inside the interval: no train.
+        assert!(c.maybe_train(cycle + 10_001).is_none());
+    }
+
+    #[test]
+    fn ewmas_track_outcomes() {
+        let mut c = OnlineController::new(cfg(), 3);
+        let h0 = c.ctx.hit_ewma;
+        for _ in 0..100 {
+            c.on_outcome(0x999, Outcome::Timely, false);
+        }
+        assert!(c.ctx.hit_ewma > h0);
+        let p0 = c.ctx.pollution_ewma;
+        for _ in 0..100 {
+            c.on_outcome(0x999, Outcome::Useless, true);
+        }
+        assert!(c.ctx.pollution_ewma > p0);
+    }
+
+    #[test]
+    fn experience_ring_is_bounded() {
+        let mut c = OnlineController::new(cfg(), 4);
+        c.bandit.epsilon = 0.0;
+        for i in 0..(MAX_EXPERIENCE * 2) {
+            let cd = Candidate {
+                line: 0x4000 + i as u64,
+                ..cand(3, 1.0)
+            };
+            if c.decide(&cd, i as u64 * 3) {
+                c.on_outcome(cd.line, Outcome::Timely, false);
+            }
+        }
+        assert!(c.experience_len() <= MAX_EXPERIENCE);
+        assert_eq!(c.batch_x.len(), c.batch_y.len() * DIM);
+    }
+
+    #[test]
+    fn training_improves_discrimination() {
+        // After enough labeled experience, the scorer should separate the
+        // good candidate pattern from the bad one more than it did at init.
+        let mut c = OnlineController::new(
+            ControllerCfg {
+                threshold: 0.0,
+                train_interval_cycles: 500,
+                lr: 0.3,
+                epsilon: 0.0,
+                ..cfg()
+            },
+            5,
+        );
+        c.bandit.epsilon = 0.0;
+        let good = cand(3, 1.0);
+        let bad = Candidate { line: 0x3000, conf: 1, window_density: 0.125, ..good };
+        let gx = features::extract(&good, &c.ctx);
+        let bx = features::extract(&bad, &c.ctx);
+        let sep0 = c.weights.score(&gx) - c.weights.score(&bx);
+        let mut cycle = 0u64;
+        for _ in 0..40 {
+            for _ in 0..64 {
+                cycle += 100;
+                if c.decide(&good, cycle) {
+                    c.on_outcome(good.line, Outcome::Timely, false);
+                }
+                if c.decide(&bad, cycle) {
+                    c.on_outcome(bad.line, Outcome::Useless, true);
+                }
+            }
+            c.maybe_train(cycle + 1000);
+            cycle += 1000;
+        }
+        // Score the *same* feature vectors used at sep0 for a fair compare.
+        let sep1 = c.weights.score(&gx) - c.weights.score(&bx);
+        // Labels dry up for the bad pattern once the scorer learns to skip
+        // it (bandit feedback loop), so the gain is modest but must be
+        // clearly positive.
+        assert!(
+            sep1 > sep0 + 0.02,
+            "training did not improve separation: {sep0} -> {sep1}"
+        );
+    }
+}

@@ -1,0 +1,119 @@
+//! Feature extraction for the online controller (paper §IV-A): "compact,
+//! stable features: 20-bit PC delta pattern summary, window density,
+//! recent hit and pollution counters, short loop indicator, and a
+//! lightweight thread/RPC tag" — plus the operational signals (bandwidth
+//! headroom, issue rate, churn) the deployment playbook keys on.
+
+use crate::prefetch::Candidate;
+
+/// Feature dimensionality — must match `python/compile/kernels/logistic.py
+/// FEATURES` (checked against the AOT manifest at runtime load).
+pub const DIM: usize = 16;
+
+/// Engine-side context sampled at decision time.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DecisionCtx {
+    /// EWMA of recent prefetch hit (useful) rate.
+    pub hit_ewma: f32,
+    /// EWMA of recent pollution rate.
+    pub pollution_ewma: f32,
+    /// EWMA of recent accuracy.
+    pub accuracy_ewma: f32,
+    /// DRAM bandwidth headroom in [0,1].
+    pub bw_headroom: f32,
+    /// Prefetches issued per kilocycle (normalized /32).
+    pub issue_rate: f32,
+    /// Phase-churn indicator: relative miss-rate delta vs previous window.
+    pub churn: f32,
+    /// RPC/handler tag of the triggering fetch.
+    pub rpc_tag: u8,
+}
+
+/// A fixed-size feature vector.
+pub type FeatureVec = [f32; DIM];
+
+/// Build the scorer input for one candidate.
+pub fn extract(cand: &Candidate, ctx: &DecisionCtx) -> FeatureVec {
+    let mut f = [0.0f32; DIM];
+    f[0] = 1.0; // bias
+    f[1] = cand.conf as f32 / 3.0;
+    f[2] = cand.window_density;
+    f[3] = cand.offset as f32 / 12.0;
+    f[4] = if cand.short_loop { 1.0 } else { 0.0 };
+    f[5] = ctx.hit_ewma;
+    f[6] = ctx.pollution_ewma;
+    f[7] = ctx.accuracy_ewma;
+    f[8] = ctx.bw_headroom;
+    f[9] = (ctx.issue_rate / 32.0).min(1.0);
+    // 20-bit PC delta pattern summary: popcount of the low-order XOR —
+    // distinguishes near-sequential deltas (low popcount) from scattered
+    // ones without storing addresses (privacy note, §VII).
+    let delta_pattern = ((cand.src ^ cand.line) & 0xF_FFFF).count_ones();
+    f[10] = delta_pattern as f32 / 20.0;
+    // RPC tag one-hot (4 buckets).
+    f[11 + (ctx.rpc_tag as usize % 4)] = 1.0;
+    f[15] = ctx.churn.clamp(0.0, 1.0);
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand() -> Candidate {
+        Candidate {
+            line: 0x1005,
+            src: 0x1000,
+            conf: 3,
+            offset: 5,
+            window_density: 0.5,
+            short_loop: true,
+        }
+    }
+
+    #[test]
+    fn bias_and_ranges() {
+        let ctx = DecisionCtx {
+            hit_ewma: 0.7,
+            pollution_ewma: 0.1,
+            accuracy_ewma: 0.8,
+            bw_headroom: 0.9,
+            issue_rate: 16.0,
+            churn: 2.0, // clamped
+            rpc_tag: 2,
+        };
+        let f = extract(&cand(), &ctx);
+        assert_eq!(f[0], 1.0);
+        assert_eq!(f[1], 1.0);
+        assert_eq!(f[4], 1.0);
+        assert_eq!(f[9], 0.5);
+        assert_eq!(f[13], 1.0); // tag 2 one-hot
+        assert_eq!(f[15], 1.0); // clamped churn
+        for v in f {
+            assert!((0.0..=1.0).contains(&v), "feature out of range: {v}");
+        }
+    }
+
+    #[test]
+    fn delta_pattern_reflects_distance() {
+        let near = extract(
+            &Candidate { line: 0x1001, ..cand() },
+            &DecisionCtx::default(),
+        );
+        let far = extract(
+            &Candidate { line: 0x1000 ^ 0xF_F0F0, ..cand() },
+            &DecisionCtx::default(),
+        );
+        assert!(near[10] < far[10]);
+    }
+
+    #[test]
+    fn rpc_tags_are_distinct() {
+        for t in 0..4u8 {
+            let f = extract(&cand(), &DecisionCtx { rpc_tag: t, ..Default::default() });
+            assert_eq!(f[11 + t as usize], 1.0);
+            let hot: usize = (11..15).filter(|&i| f[i] > 0.0).count();
+            assert_eq!(hot, 1);
+        }
+    }
+}

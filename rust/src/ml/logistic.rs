@@ -1,0 +1,192 @@
+//! Native logistic scorer — the Rust mirror of the Pallas kernel
+//! (`python/compile/kernels/logistic.py`).
+//!
+//! The per-decision inner loop uses this fixed-path implementation (a
+//! hardware controller would be a small MAC array); the AOT/PJRT artifact
+//! executes the *identical math* for periodic training and batch
+//! calibration. Integration tests assert parity ≤ 1e-5 between the two
+//! (`rust/tests/integration_runtime.rs`).
+
+use super::features::{FeatureVec, DIM};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Weights {
+    pub w: [f32; DIM],
+    pub b: f32,
+}
+
+impl Default for Weights {
+    fn default() -> Self {
+        // Mildly optimistic prior: confidence and density vote for issue,
+        // pollution votes against — converges fast either way; chosen so
+        // an untrained controller behaves like a sane static filter.
+        let mut w = [0.0f32; DIM];
+        w[1] = 1.0; // confidence
+        w[2] = 0.8; // window density
+        w[6] = -1.0; // pollution EWMA
+        w[8] = 0.5; // bandwidth headroom
+        Weights { w, b: 0.2 }
+    }
+}
+
+#[inline]
+pub fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+impl Weights {
+    /// Score one candidate: the calibrated issue probability.
+    #[inline]
+    pub fn score(&self, x: &FeatureVec) -> f32 {
+        let mut z = self.b;
+        for i in 0..DIM {
+            z += self.w[i] * x[i];
+        }
+        sigmoid(z)
+    }
+
+    /// Score a batch laid out row-major `[n, DIM]` (mirrors the Pallas
+    /// kernel's batched GEMV; used for parity tests and shadow scoring).
+    pub fn score_batch(&self, xs: &[f32]) -> Vec<f32> {
+        assert_eq!(xs.len() % DIM, 0);
+        xs.chunks_exact(DIM)
+            .map(|row| {
+                let mut z = self.b;
+                for i in 0..DIM {
+                    z += self.w[i] * row[i];
+                }
+                sigmoid(z)
+            })
+            .collect()
+    }
+
+    /// One BCE-SGD step — the same analytic gradient as the Pallas
+    /// `_grad_kernel` (g = p - y; dw = xᵀg/B; db = mean g). Returns the
+    /// pre-step mean BCE loss. Native fallback when no PJRT artifacts are
+    /// present; bit-compared against the AOT path in integration tests.
+    pub fn train_step(&mut self, xs: &[f32], ys: &[f32], lr: f32) -> f32 {
+        assert_eq!(xs.len(), ys.len() * DIM);
+        let n = ys.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let inv_n = 1.0 / n as f32;
+        let mut dw = [0.0f32; DIM];
+        let mut db = 0.0f32;
+        let mut loss = 0.0f32;
+        for (row, &y) in xs.chunks_exact(DIM).zip(ys) {
+            let p = {
+                let mut z = self.b;
+                for i in 0..DIM {
+                    z += self.w[i] * row[i];
+                }
+                sigmoid(z)
+            };
+            let g = p - y;
+            for i in 0..DIM {
+                dw[i] += g * row[i];
+            }
+            db += g;
+            let pc = p.clamp(1e-7, 1.0 - 1e-7);
+            loss -= y * pc.ln() + (1.0 - y) * (1.0 - pc).ln();
+        }
+        for i in 0..DIM {
+            self.w[i] -= lr * dw[i] * inv_n;
+        }
+        self.b -= lr * db * inv_n;
+        loss * inv_n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn sigmoid_basics() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        assert!(sigmoid(20.0) > 0.999);
+        assert!(sigmoid(-20.0) < 0.001);
+    }
+
+    #[test]
+    fn score_batch_matches_single() {
+        let wts = Weights::default();
+        let mut r = Rng::new(3);
+        let mut xs = Vec::new();
+        let mut singles = Vec::new();
+        for _ in 0..10 {
+            let mut f = [0.0f32; DIM];
+            for v in f.iter_mut() {
+                *v = r.f32();
+            }
+            singles.push(wts.score(&f));
+            xs.extend_from_slice(&f);
+        }
+        let batch = wts.score_batch(&xs);
+        for (a, b) in batch.iter().zip(&singles) {
+            assert!((a - b).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn training_learns_separable_rule() {
+        // Same scenario as python/tests/test_kernel.py
+        // ::test_training_reduces_loss_on_separable_data.
+        let mut r = Rng::new(7);
+        let mut true_w = [0.0f32; DIM];
+        for v in true_w.iter_mut() {
+            *v = r.f32() * 2.0 - 1.0;
+        }
+        let n = 256;
+        let mut xs = Vec::with_capacity(n * DIM);
+        let mut ys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut dot = 0.0f32;
+            let mut row = [0.0f32; DIM];
+            for i in 0..DIM {
+                row[i] = r.f32() * 2.0 - 1.0;
+                dot += row[i] * true_w[i];
+            }
+            xs.extend_from_slice(&row);
+            ys.push(if dot > 0.0 { 1.0 } else { 0.0 });
+        }
+        let mut wts = Weights {
+            w: [0.0; DIM],
+            b: 0.0,
+        };
+        let first = wts.train_step(&xs, &ys, 0.5);
+        let mut last = first;
+        for _ in 0..80 {
+            last = wts.train_step(&xs, &ys, 0.5);
+        }
+        assert!(
+            last < 0.4 * first,
+            "loss did not drop: {first} -> {last}"
+        );
+    }
+
+    #[test]
+    fn empty_batch_is_noop() {
+        let mut wts = Weights::default();
+        let before = wts;
+        assert_eq!(wts.train_step(&[], &[], 0.1), 0.0);
+        assert_eq!(wts, before);
+    }
+
+    #[test]
+    fn default_prior_prefers_confident_dense() {
+        let wts = Weights::default();
+        let mut hi = [0.0f32; DIM];
+        hi[0] = 1.0;
+        hi[1] = 1.0;
+        hi[2] = 1.0;
+        hi[8] = 1.0;
+        let mut lo = [0.0f32; DIM];
+        lo[0] = 1.0;
+        lo[6] = 1.0; // pure pollution signal
+        assert!(wts.score(&hi) > 0.7);
+        assert!(wts.score(&lo) < 0.4);
+    }
+}

@@ -1,0 +1,8 @@
+//! The online ML controller (paper §IV): feature extraction, the logistic
+//! scorer (native mirror of the Pallas kernel), the contextual bandit, and
+//! the controller state machine tying them together.
+
+pub mod bandit;
+pub mod controller;
+pub mod features;
+pub mod logistic;

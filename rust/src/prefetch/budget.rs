@@ -1,0 +1,79 @@
+//! Metadata cost model (paper §V and Fig 13): on-chip bits for every
+//! prefetcher variant, centralized so the storage-vs-speedup figure and
+//! the per-prefetcher `metadata_bytes()` impls agree.
+
+use super::centry::CEntry;
+
+/// History buffer: 64 × (58-bit tag + 20-bit timestamp) = 624 B (§V).
+pub const HISTORY_BYTES: u64 = 64 * (58 + 20) / 8;
+
+/// One EIP table entry: 58-bit source tag + 8 × (38-bit destination line +
+/// 2-bit confidence).
+pub const EIP_ENTRY_BITS: u64 = 58 + 8 * (38 + 2);
+
+/// One flat-CEIP table entry: 51-bit tag + compressed payload.
+pub fn ceip_entry_bits(window: u8) -> u64 {
+    51 + CEntry::storage_bits(window) as u64
+}
+
+/// Total bytes for an EIP-K configuration.
+pub fn eip_bytes(entries: u32) -> u64 {
+    (entries as u64 * EIP_ENTRY_BITS).div_ceil(8) + HISTORY_BYTES
+}
+
+/// Total bytes for a flat CEIP-K configuration.
+pub fn ceip_bytes(entries: u32, window: u8) -> u64 {
+    (entries as u64 * ceip_entry_bits(window)).div_ceil(8) + HISTORY_BYTES
+}
+
+/// Total bytes for CHEIP with `l1_lines` attached entries and a `vt`
+/// entry virtual table.
+pub fn cheip_bytes(l1_lines: u32, vt: u32, window: u8) -> u64 {
+    (l1_lines as u64 * CEntry::storage_bits(window) as u64).div_ceil(8)
+        + (vt as u64 * ceip_entry_bits(window)).div_ceil(8)
+        + HISTORY_BYTES
+}
+
+/// Of CHEIP's budget, the part that competes for *private L1-adjacent*
+/// storage (the paper's headline: only L1-resident metadata stays on the
+/// critical silicon; the vtable lives in shared L2/L3 capacity).
+pub fn cheip_l1_resident_bytes(l1_lines: u32, window: u8) -> u64 {
+    (l1_lines as u64 * CEntry::storage_bits(window) as u64).div_ceil(8) + HISTORY_BYTES
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn history_is_624_bytes() {
+        assert_eq!(HISTORY_BYTES, 624);
+    }
+
+    #[test]
+    fn paper_section_v_numbers() {
+        // 512 L1 lines × 36 b = 2304 B.
+        assert_eq!(512 * 36 / 8, 2304);
+        // 2K/4K × 87 b = 21.75 / 43.5 KB.
+        assert_eq!(2048 * ceip_entry_bits(8) / 8, 22_272);
+        assert_eq!((22_272) as f64 / 1024.0, 21.75);
+        assert_eq!(4096 * ceip_entry_bits(8) / 8, 44_544);
+        assert_eq!((44_544) as f64 / 1024.0, 43.5);
+    }
+
+    #[test]
+    fn cheip_totals() {
+        let b2k = cheip_bytes(512, 2048, 8);
+        assert_eq!(b2k, 2304 + 22_272 + 624);
+        let l1_only = cheip_l1_resident_bytes(512, 8);
+        assert_eq!(l1_only, 2304 + 624);
+        assert!(l1_only * 8 < b2k, "L1-resident share is small");
+    }
+
+    #[test]
+    fn compression_ratio_vs_eip() {
+        // Same entry count: CEIP entry (87 b) vs EIP entry (378 b).
+        assert!(EIP_ENTRY_BITS > 4 * ceip_entry_bits(8));
+        assert!(eip_bytes(256) > 3 * ceip_bytes(256, 8));
+    }
+}

@@ -1,0 +1,300 @@
+//! CEIP: the Compressed-Entry entangling prefetcher (paper §III-A).
+//! Same learning loop as EIP (history buffer → entangle on resolved miss)
+//! but destinations live in a 36-bit [`CEntry`] — a 20-bit base plus eight
+//! 2-bit confidences. Destinations outside the 20-bit region or squeezed
+//! out by window slides are lost; Figs 7/8/10 quantify exactly that loss
+//! via [`PairStats`].
+
+use super::centry::{CEntry, Mark};
+use super::history::HistoryBuffer;
+use super::{Candidate, Feedback, Outcome, PairStats, Prefetcher};
+use crate::util::bits;
+use crate::util::hashfx::FxHashMap;
+
+struct Entry {
+    centry: CEntry,
+    lru: u64,
+}
+
+pub struct Ceip {
+    sets: Vec<FxHashMap<u64, Entry>>,
+    ways: usize,
+    n_sets: u64,
+    history: HistoryBuffer,
+    window: u8,
+    /// Issue every marked offset (paper §XIII: whole-window beat
+    /// selective); when false only conf ≥ threshold offsets issue.
+    whole_window: bool,
+    conf_threshold: u8,
+    clock: u64,
+    entries_cfg: u32,
+    stats: PairStats,
+    recent_srcs: [u64; 4],
+}
+
+impl Ceip {
+    /// `entries` = total table entries, 16-way (see [`super::eip::Eip::new`]
+    /// on the paper's set-count naming).
+    pub fn new(entries: u32, window: u8, whole_window: bool, conf_threshold: u8) -> Self {
+        let ways = 16usize.min(entries as usize).max(1);
+        let n_sets = (entries as usize / ways).max(1) as u64;
+        Ceip {
+            sets: (0..n_sets).map(|_| FxHashMap::default()).collect(),
+            ways,
+            n_sets,
+            history: HistoryBuffer::paper(),
+            window,
+            whole_window,
+            conf_threshold,
+            clock: 0,
+            entries_cfg: entries,
+            stats: PairStats::default(),
+            recent_srcs: [u64::MAX; 4],
+        }
+    }
+
+    #[inline]
+    fn set_of(&self, src: u64) -> usize {
+        (src % self.n_sets) as usize
+    }
+
+    fn entangle(&mut self, src: u64, dst: u64) {
+        self.clock += 1;
+        let clock = self.clock;
+        self.stats.pairs_total += 1;
+        self.stats.dests_total += 1;
+        let fits = bits::shares_high_bits(src, dst, 20);
+        if fits {
+            self.stats.pairs_fit20 += 1;
+        } else {
+            // Not representable by the compressed entry at all.
+            self.stats.dests_dropped += 1;
+            return;
+        }
+        let window = self.window;
+        let ways = self.ways;
+        let set_idx = self.set_of(src);
+        let set = &mut self.sets[set_idx];
+        if let Some(e) = set.get_mut(&src) {
+            e.lru = clock;
+            match e.centry.mark(src, dst) {
+                Mark::InWindow => self.stats.dests_in_window += 1,
+                Mark::Rebased { dropped } => {
+                    // The new destination landed (or not) after a slide;
+                    // count it plus collateral marks lost.
+                    self.stats.dests_in_window += 1;
+                    self.stats.dests_dropped += dropped as u64;
+                }
+                Mark::TooFar => unreachable!("checked above"),
+            }
+            return;
+        }
+        if set.len() >= ways {
+            let victim = *set.iter().min_by_key(|(_, e)| e.lru).map(|(k, _)| k).unwrap();
+            set.remove(&victim);
+        }
+        set.insert(
+            src,
+            Entry {
+                centry: CEntry::new(window, dst),
+                lru: clock,
+            },
+        );
+        self.stats.dests_in_window += 1;
+    }
+
+    fn is_short_loop(&self, src: u64) -> bool {
+        self.recent_srcs.contains(&src)
+    }
+
+    /// Emit candidates from a compressed entry (shared with CHEIP).
+    pub(crate) fn emit(
+        centry: &CEntry,
+        src: u64,
+        whole_window: bool,
+        conf_threshold: u8,
+        short_loop: bool,
+        out: &mut Vec<Candidate>,
+    ) {
+        let density = centry.density();
+        let min_conf = if whole_window { 1 } else { conf_threshold };
+        for off in 0..centry.window() {
+            let conf = centry.conf_at(off);
+            if conf >= min_conf {
+                out.push(Candidate {
+                    line: centry.line_at(src, off),
+                    src,
+                    conf,
+                    offset: off,
+                    window_density: density,
+                    short_loop,
+                });
+            }
+        }
+    }
+}
+
+impl Prefetcher for Ceip {
+    fn name(&self) -> String {
+        format!(
+            "ceip{}w{}{}",
+            self.entries_cfg,
+            self.window,
+            if self.whole_window { "" } else { "s" }
+        )
+    }
+
+    fn on_fetch(&mut self, line: u64, _cycle: u64, out: &mut Vec<Candidate>) {
+        self.clock += 1;
+        let clock = self.clock;
+        let short_loop = self.is_short_loop(line);
+        let whole = self.whole_window;
+        let threshold = self.conf_threshold;
+        let set_idx = self.set_of(line);
+        if let Some(e) = self.sets[set_idx].get_mut(&line) {
+            e.lru = clock;
+            Self::emit(&e.centry, line, whole, threshold, short_loop, out);
+        }
+        self.recent_srcs.rotate_right(1);
+        self.recent_srcs[0] = line;
+    }
+
+    fn on_demand_miss(&mut self, line: u64, cycle: u64) {
+        self.history.push(line, cycle);
+    }
+
+    fn on_miss_resolved(&mut self, line: u64, fetch_cycle: u64, latency: u64) {
+        if let Some(src) = self.history.find_source(line, fetch_cycle, latency) {
+            self.entangle(src.line, line);
+        }
+    }
+
+    fn feedback(&mut self, fb: &Feedback) {
+        let set_idx = self.set_of(fb.src);
+        if let Some(e) = self.sets[set_idx].get_mut(&fb.src) {
+            // Recover the offset from the line address.
+            let base = e.centry.line_at(fb.src, 0);
+            if fb.line >= base && fb.line < base + e.centry.window() as u64 {
+                let off = (fb.line - base) as u8;
+                match fb.outcome {
+                    Outcome::Timely | Outcome::Late => e.centry.reinforce(off),
+                    Outcome::Useless => e.centry.decay(off),
+                }
+            }
+        }
+    }
+
+    /// §VII guardrail: decay every confidence by one step; offsets at 0
+    /// disappear from the issue set ("rapid eviction" of stale marks).
+    fn on_anomaly(&mut self) {
+        for set in &mut self.sets {
+            for e in set.values_mut() {
+                for off in 0..e.centry.window() {
+                    e.centry.decay(off);
+                }
+            }
+        }
+    }
+
+    /// §V cost model: entries × (51-bit tag + compressed payload) + history.
+    fn metadata_bytes(&self) -> u64 {
+        let payload = CEntry::storage_bits(self.window) as u64;
+        bits::bits_to_bytes(self.entries_cfg as u64 * (51 + payload))
+            + self.history.metadata_bytes()
+    }
+
+    fn pair_stats(&self) -> PairStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SRC: u64 = 0x0040_1000;
+
+    fn drive_miss(c: &mut Ceip, src: u64, sc: u64, dst: u64, dc: u64, lat: u64) {
+        c.on_demand_miss(src, sc);
+        c.on_demand_miss(dst, dc);
+        c.on_miss_resolved(dst, dc, lat);
+    }
+
+    #[test]
+    fn learns_clustered_dests_and_triggers_window() {
+        let mut c = Ceip::new(256, 8, true, 2);
+        for (i, d) in [3u64, 4, 5].iter().enumerate() {
+            drive_miss(&mut c, SRC, 1000 * i as u64, SRC + d, 1000 * i as u64 + 500, 100);
+        }
+        let mut out = Vec::new();
+        c.on_fetch(SRC, 10_000, &mut out);
+        let lines: Vec<u64> = out.iter().map(|c| c.line).collect();
+        assert!(lines.contains(&(SRC + 3)));
+        assert!(lines.contains(&(SRC + 4)));
+        assert!(lines.contains(&(SRC + 5)));
+        assert!(out.iter().all(|c| c.window_density > 0.3));
+    }
+
+    #[test]
+    fn selective_mode_gates_on_confidence() {
+        let mut c = Ceip::new(256, 8, false, 2);
+        drive_miss(&mut c, SRC, 0, SRC + 3, 500, 100);
+        let mut out = Vec::new();
+        c.on_fetch(SRC, 1000, &mut out);
+        assert!(out.is_empty(), "conf 1 < 2 in selective mode");
+        drive_miss(&mut c, SRC, 2000, SRC + 3, 2500, 100);
+        c.on_fetch(SRC, 3000, &mut out);
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn far_destination_dropped_and_counted() {
+        let mut c = Ceip::new(256, 8, true, 2);
+        drive_miss(&mut c, SRC, 0, SRC + (1 << 21), 500, 100);
+        let ps = c.pair_stats();
+        assert_eq!(ps.pairs_total, 1);
+        assert_eq!(ps.pairs_fit20, 0);
+        assert_eq!(ps.dests_dropped, 1);
+        let mut out = Vec::new();
+        c.on_fetch(SRC, 1000, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn feedback_decays_useless_offsets() {
+        let mut c = Ceip::new(256, 8, true, 2);
+        drive_miss(&mut c, SRC, 0, SRC + 2, 500, 100);
+        let mut out = Vec::new();
+        c.on_fetch(SRC, 1000, &mut out);
+        assert_eq!(out.len(), 1);
+        c.feedback(&Feedback {
+            src: SRC,
+            line: out[0].line,
+            outcome: Outcome::Useless,
+        });
+        out.clear();
+        c.on_fetch(SRC, 2000, &mut out);
+        assert!(out.is_empty(), "conf decayed to 0");
+    }
+
+    #[test]
+    fn metadata_smaller_than_eip_at_same_entries() {
+        let ceip = Ceip::new(256, 8, true, 2);
+        let eip = super::super::eip::Eip::new(256, 2);
+        assert!(ceip.metadata_bytes() < eip.metadata_bytes() / 3);
+        // 256 * 87 bits = 2784 B + 624.
+        assert_eq!(ceip.metadata_bytes(), 2784 + 624);
+    }
+
+    #[test]
+    fn window_4_and_12_work() {
+        for w in [4u8, 12] {
+            let mut c = Ceip::new(128, w, true, 2);
+            drive_miss(&mut c, SRC, 0, SRC + 1, 500, 100);
+            let mut out = Vec::new();
+            c.on_fetch(SRC, 1000, &mut out);
+            assert_eq!(out.len(), 1);
+            assert_eq!(out[0].line, SRC + 1);
+        }
+    }
+}

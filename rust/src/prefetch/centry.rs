@@ -1,0 +1,423 @@
+//! The Compressed Entry (paper §III-A, Fig 4): a 20-bit base holding the
+//! low-order line-address bits of a destination window (high bits are
+//! inherited from the source) plus one 2-bit confidence per window offset.
+//! For the paper's 8-line window this is exactly 36 bits.
+//!
+//! Updates slide the window along linear memory to cover the most marked
+//! lines, breaking ties toward the window that includes the new block
+//! (§III-A). Destinations whose delta does not fit in the 20 LSBs cannot
+//! be represented and are dropped — the loss Figs 7/10 quantify.
+
+use crate::util::bits::{self, conf2};
+
+/// Low-order bits kept for the base (paper: 20).
+pub const BASE_BITS: u32 = 20;
+
+/// Result of offering a destination to the entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mark {
+    /// Destination was inside the current window; confidence bumped.
+    InWindow,
+    /// Window slid to a new base; `dropped` previously-marked lines fell
+    /// outside the new window and were lost.
+    Rebased { dropped: u32 },
+    /// Delta exceeds `BASE_BITS` low-order bits — not representable.
+    TooFar,
+}
+
+/// A compressed destination entry with window size `W` (4, 8, or 12 —
+/// §IV-B lets the bandit choose; 8 is the paper's operating point).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CEntry {
+    /// Window base in low-order line-address space (`BASE_BITS` wide).
+    base_lsb: u32,
+    /// 2-bit confidence per offset; `len() == window`.
+    conf: Vec<u8>,
+}
+
+impl CEntry {
+    /// New entry whose window starts at the destination that created it.
+    pub fn new(window: u8, dst: u64) -> Self {
+        let mut e = CEntry {
+            base_lsb: Self::clamp_base(bits::field(dst, 0, BASE_BITS) as u32, window),
+            conf: vec![0; window as usize],
+        };
+        let off = (bits::field(dst, 0, BASE_BITS) as u32 - e.base_lsb) as usize;
+        e.conf[off] = 1;
+        e
+    }
+
+    /// Empty entry (no marks yet) — the fresh L1-attached slot CHEIP
+    /// creates when a line fills with no virtualized metadata behind it.
+    pub fn empty(window: u8) -> Self {
+        CEntry {
+            base_lsb: 0,
+            conf: vec![0; window as usize],
+        }
+    }
+
+    fn clamp_base(pos: u32, window: u8) -> u32 {
+        let max_base = (1u32 << BASE_BITS) - window as u32;
+        pos.min(max_base)
+    }
+
+    pub fn window(&self) -> u8 {
+        self.conf.len() as u8
+    }
+
+    pub fn base_lsb(&self) -> u32 {
+        self.base_lsb
+    }
+
+    pub fn conf_at(&self, offset: u8) -> u8 {
+        self.conf[offset as usize]
+    }
+
+    /// Marked offsets (confidence > 0).
+    pub fn marked(&self) -> u32 {
+        self.conf.iter().filter(|&&c| c > 0).count() as u32
+    }
+
+    /// Fraction of the window that is marked (the controller's
+    /// window-density feature, §IV-A).
+    pub fn density(&self) -> f32 {
+        self.marked() as f32 / self.conf.len() as f32
+    }
+
+    /// Storage cost in bits: 20-bit base + 2 bits per offset (36 bits for
+    /// the paper's 8-line window).
+    pub fn storage_bits(window: u8) -> u32 {
+        BASE_BITS + 2 * window as u32
+    }
+
+    /// Absolute line address of `offset`, inheriting high bits from `src`
+    /// (§III-A: "inheriting high bits from the source").
+    pub fn line_at(&self, src: u64, offset: u8) -> u64 {
+        (src >> BASE_BITS << BASE_BITS) | (self.base_lsb + offset as u32) as u64
+    }
+
+    /// Does `dst` share the high-order bits with `src` (representable)?
+    pub fn representable(src: u64, dst: u64) -> bool {
+        bits::shares_high_bits(src, dst, BASE_BITS)
+    }
+
+    /// Offer destination `dst` (same high bits as the source — caller
+    /// checks [`Self::representable`] and counts `TooFar` otherwise).
+    pub fn mark(&mut self, src: u64, dst: u64) -> Mark {
+        if !Self::representable(src, dst) {
+            return Mark::TooFar;
+        }
+        let w = self.conf.len() as u32;
+        let pos = bits::field(dst, 0, BASE_BITS) as u32;
+        // Inside current window?
+        if pos >= self.base_lsb && pos < self.base_lsb + w {
+            let off = (pos - self.base_lsb) as usize;
+            self.conf[off] = conf2::inc(self.conf[off]);
+            return Mark::InWindow;
+        }
+        // Slide: choose the window covering the most marked lines, ties
+        // prefer covering the new block, then retaining confidence mass,
+        // then staying near the old base.
+        let mut marked: Vec<(u32, u8)> = self
+            .conf
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (self.base_lsb + i as u32, c))
+            .collect();
+        marked.push((pos, 1)); // the new block, weak confidence
+        // Candidate bases: windows anchored at each marked point's start or
+        // end (a maximum-coverage window can always be shifted to touch a
+        // point), plus the old base. O(|marked|²) with |marked| <= W+1.
+        let mut cands: Vec<u32> = Vec::with_capacity(2 * marked.len() + 1);
+        for &(p, _) in &marked {
+            cands.push(Self::clamp_base(p, w as u8));
+            cands.push(Self::clamp_base(p.saturating_sub(w - 1), w as u8));
+        }
+        cands.push(self.base_lsb);
+        cands.sort_unstable();
+        cands.dedup();
+        let mut best: Option<(u32, u32, u32, bool)> = None; // (count, mass, base, covers_new)
+        for cand in cands {
+            let count = marked
+                .iter()
+                .filter(|&&(p, _)| p >= cand && p < cand + w)
+                .count() as u32;
+            let mass: u32 = marked
+                .iter()
+                .filter(|&&(p, _)| p >= cand && p < cand + w)
+                .map(|&(_, c)| c as u32)
+                .sum();
+            let covers_new = pos >= cand && pos < cand + w;
+            let better = match &best {
+                None => true,
+                Some((bc, bm, bb, bn)) => {
+                    (count, covers_new as u32, mass, std::cmp::Reverse(cand.abs_diff(self.base_lsb)))
+                        > (*bc, *bn as u32, *bm, std::cmp::Reverse(bb.abs_diff(self.base_lsb)))
+                }
+            };
+            if better {
+                best = Some((count, mass, cand, covers_new));
+            }
+        }
+        let (_count, _mass, new_base, _covers) = best.unwrap();
+        // Rebase: translate surviving confidences.
+        let mut new_conf = vec![0u8; w as usize];
+        let mut dropped = 0u32;
+        for (i, &c) in self.conf.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let p = self.base_lsb + i as u32;
+            if p >= new_base && p < new_base + w {
+                new_conf[(p - new_base) as usize] = c;
+            } else {
+                dropped += 1;
+            }
+        }
+        if pos >= new_base && pos < new_base + w {
+            let off = (pos - new_base) as usize;
+            new_conf[off] = conf2::inc(new_conf[off]);
+        } else {
+            dropped += 1; // new block itself not representable in best window
+        }
+        self.base_lsb = new_base;
+        self.conf = new_conf;
+        Mark::Rebased { dropped }
+    }
+
+    /// Confidence feedback on an offset.
+    pub fn reinforce(&mut self, offset: u8) {
+        let c = &mut self.conf[offset as usize];
+        *c = conf2::inc(*c);
+    }
+
+    pub fn decay(&mut self, offset: u8) {
+        let c = &mut self.conf[offset as usize];
+        *c = conf2::dec(*c);
+    }
+
+    /// Pack into the paper's bit layout (Fig 4): base in the low 20 bits,
+    /// then 2-bit confidences ascending. Only defined for window <= 12
+    /// (catalogued encodings); 8 → exactly 36 bits.
+    pub fn pack(&self) -> u64 {
+        let mut v = self.base_lsb as u64;
+        for (i, &c) in self.conf.iter().enumerate() {
+            v = bits::set_field(v, BASE_BITS + 2 * i as u32, 2, c as u64);
+        }
+        v
+    }
+
+    pub fn unpack(v: u64, window: u8) -> Self {
+        let base = bits::field(v, 0, BASE_BITS) as u32;
+        let conf = (0..window)
+            .map(|i| bits::field(v, BASE_BITS + 2 * i as u32, 2) as u8)
+            .collect();
+        CEntry {
+            base_lsb: base,
+            conf,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    const SRC: u64 = 0x0040_1234; // arbitrary source line
+
+    fn same_region(lsb: u32) -> u64 {
+        (SRC >> BASE_BITS << BASE_BITS) | lsb as u64
+    }
+
+    #[test]
+    fn paper_entry_is_36_bits() {
+        assert_eq!(CEntry::storage_bits(8), 36);
+        assert_eq!(CEntry::storage_bits(4), 28);
+        assert_eq!(CEntry::storage_bits(12), 44);
+    }
+
+    #[test]
+    fn new_entry_marks_creator() {
+        let e = CEntry::new(8, same_region(100));
+        assert_eq!(e.base_lsb(), 100);
+        assert_eq!(e.conf_at(0), 1);
+        assert_eq!(e.marked(), 1);
+    }
+
+    #[test]
+    fn in_window_bumps_confidence() {
+        let mut e = CEntry::new(8, same_region(100));
+        assert_eq!(e.mark(SRC, same_region(105)), Mark::InWindow);
+        assert_eq!(e.conf_at(5), 1);
+        assert_eq!(e.mark(SRC, same_region(105)), Mark::InWindow);
+        assert_eq!(e.conf_at(5), 2);
+        assert_eq!(e.density(), 2.0 / 8.0);
+    }
+
+    #[test]
+    fn too_far_rejected() {
+        let mut e = CEntry::new(8, same_region(100));
+        let far = SRC + (1 << BASE_BITS); // different high bits
+        assert_eq!(e.mark(SRC, far), Mark::TooFar);
+    }
+
+    #[test]
+    fn slide_prefers_dense_region() {
+        // Window at 100 with marks at 100..103 (4 marks); new dst at 96.
+        // Best window covering {96,100,101,102,103}: base 96 covers all 5.
+        let mut e = CEntry::new(8, same_region(100));
+        e.mark(SRC, same_region(101));
+        e.mark(SRC, same_region(102));
+        e.mark(SRC, same_region(103));
+        let m = e.mark(SRC, same_region(96));
+        assert_eq!(m, Mark::Rebased { dropped: 0 });
+        assert_eq!(e.base_lsb(), 96);
+        assert_eq!(e.marked(), 5);
+    }
+
+    #[test]
+    fn slide_tie_break_prefers_new_block() {
+        // Marks at {100}; new dst at 120 (disjoint). Candidate windows
+        // covering one mark each — tie on count; must pick one containing
+        // the new block.
+        let mut e = CEntry::new(8, same_region(100));
+        let m = e.mark(SRC, same_region(120));
+        match m {
+            Mark::Rebased { .. } => {}
+            other => panic!("expected rebase, got {other:?}"),
+        }
+        let base = e.base_lsb();
+        assert!(
+            (base..base + 8).contains(&120),
+            "window [{base}, {}) must cover the new block",
+            base + 8
+        );
+    }
+
+    #[test]
+    fn slide_keeps_majority_drops_minority() {
+        // Dense cluster at 200..206 (7 marks), then one at 100: the dense
+        // region must win and the outlier be dropped.
+        let mut e = CEntry::new(8, same_region(200));
+        for p in 201..=206 {
+            e.mark(SRC, same_region(p));
+        }
+        let m = e.mark(SRC, same_region(100));
+        assert_eq!(m, Mark::Rebased { dropped: 1 });
+        // Tie between bases 199/200 (both cover all 7) resolves toward the
+        // old base.
+        assert_eq!(e.base_lsb(), 200);
+        assert_eq!(e.marked(), 7);
+    }
+
+    #[test]
+    fn line_at_inherits_high_bits() {
+        let e = CEntry::new(8, same_region(100));
+        assert_eq!(e.line_at(SRC, 3), same_region(103));
+        // A source in another region projects the same LSBs there.
+        let other_src = SRC + (5 << BASE_BITS);
+        assert_eq!(e.line_at(other_src, 0) & 0xF_FFFF, 100);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut e = CEntry::new(8, same_region(77));
+        e.mark(SRC, same_region(80));
+        e.mark(SRC, same_region(80));
+        e.mark(SRC, same_region(83));
+        let packed = e.pack();
+        assert!(packed < (1u64 << 36), "must fit 36 bits");
+        assert_eq!(CEntry::unpack(packed, 8), e);
+    }
+
+    #[test]
+    fn base_clamped_at_region_edge() {
+        let edge = (1u64 << BASE_BITS) - 2;
+        let e = CEntry::new(8, same_region(edge as u32));
+        assert!(e.base_lsb() as u64 + 8 <= (1 << BASE_BITS));
+        // The creating mark must still be inside.
+        let off = edge as u32 - e.base_lsb();
+        assert!(off < 8);
+        assert_eq!(e.conf_at(off as u8), 1);
+    }
+
+    #[test]
+    fn reinforce_and_decay_saturate() {
+        let mut e = CEntry::new(8, same_region(10));
+        for _ in 0..10 {
+            e.reinforce(0);
+        }
+        assert_eq!(e.conf_at(0), 3);
+        for _ in 0..10 {
+            e.decay(0);
+        }
+        assert_eq!(e.conf_at(0), 0);
+    }
+
+    #[test]
+    fn prop_pack_roundtrip_and_budget() {
+        for window in [4u8, 8, 12] {
+            prop::check_unit(
+                "centry pack roundtrip",
+                60,
+                move |r: &mut Rng, size| {
+                    let mut e = CEntry::new(window, same_region(r.below(1 << BASE_BITS) as u32));
+                    for _ in 0..size {
+                        let lsb = r.below(1 << BASE_BITS) as u32;
+                        e.mark(SRC, same_region(lsb));
+                    }
+                    e
+                },
+                move |e| {
+                    let p = e.pack();
+                    assert!(p < 1u64 << CEntry::storage_bits(window));
+                    assert_eq!(&CEntry::unpack(p, window), e);
+                    // Base always leaves the whole window representable.
+                    assert!(e.base_lsb() as u64 + window as u64 <= 1 << BASE_BITS);
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn prop_window_always_covers_max_marked() {
+        // Invariant: after any mark, no alternative window position covers
+        // strictly more currently-marked lines than the chosen one. (The
+        // chosen window maximizes coverage of lines marked at slide time;
+        // since marks only accumulate inside the window afterwards, the
+        // current marked set is always optimally covered or tied.)
+        prop::check_unit(
+            "window local-optimality",
+            80,
+            |r: &mut Rng, size| {
+                let mut e = CEntry::new(8, same_region(r.below(1000) as u32 + 500));
+                let cluster = r.below(900) as u32 + 500;
+                for _ in 0..size {
+                    // Mostly clustered marks, occasional outliers.
+                    let lsb = if r.chance(0.8) {
+                        cluster + r.below(10) as u32
+                    } else {
+                        r.below(1 << BASE_BITS) as u32
+                    };
+                    e.mark(SRC, same_region(lsb));
+                }
+                e
+            },
+            |e| {
+                let w = e.window() as u32;
+                let marked: Vec<u32> = (0..w)
+                    .filter(|&i| e.conf_at(i as u8) > 0)
+                    .map(|i| e.base_lsb() + i)
+                    .collect();
+                if marked.is_empty() {
+                    return;
+                }
+                let span = marked.last().unwrap() - marked.first().unwrap();
+                assert!(span < w, "marked lines span beyond the window");
+            },
+        );
+    }
+}

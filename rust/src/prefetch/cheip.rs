@@ -1,0 +1,346 @@
+//! CHEIP: CEIP + Hierarchical Metadata Storage (paper §III-B, Fig 5).
+//!
+//! One compressed entry is *attached* to every L1-I line (512 × 36 b =
+//! 2304 B); the bulk entangle table is virtualized into L2/L3 (the
+//! [`VTable`]). Metadata migrates with the cache line: on L1 fill the
+//! entry is fetched from the virtual table (paying L2-class latency —
+//! modeled as delayed availability), on L1 evict it is written back.
+//! Entries for resident sources are therefore served at L1 latency, and
+//! lower-yield entries persist until source eviction (§X-C).
+
+use super::centry::{CEntry, Mark};
+use super::history::HistoryBuffer;
+use super::vtable::VTable;
+use super::{Candidate, Feedback, Outcome, PairStats, Prefetcher};
+use crate::util::bits;
+use crate::util::hashfx::FxHashMap;
+
+struct Attached {
+    centry: CEntry,
+    /// Cycle at which the migrated metadata becomes usable (the virtual-
+    /// table fetch latency, §III-B timeliness cost).
+    available_at: u64,
+}
+
+pub struct Cheip {
+    /// L1-attached entries: one per resident L1-I line (bounded by the
+    /// engine's fill/evict callbacks to l1_lines entries).
+    l1: FxHashMap<u64, Attached>,
+    l1_lines: u32,
+    vtable: VTable,
+    history: HistoryBuffer,
+    window: u8,
+    whole_window: bool,
+    conf_threshold: u8,
+    /// Metadata-fetch latency charged on migration (L2 latency).
+    migrate_latency: u64,
+    stats: PairStats,
+    recent_srcs: [u64; 4],
+    /// Diagnostics.
+    pub migrations_in: u64,
+    pub migrations_out: u64,
+}
+
+impl Cheip {
+    pub fn new(
+        vt_entries: u32,
+        window: u8,
+        whole_window: bool,
+        conf_threshold: u8,
+        l1_lines: u32,
+        migrate_latency: u64,
+    ) -> Self {
+        Cheip {
+            l1: FxHashMap::with_capacity_and_hasher(l1_lines as usize, Default::default()),
+            l1_lines,
+            vtable: VTable::new(vt_entries, window),
+            history: HistoryBuffer::paper(),
+            window,
+            whole_window,
+            conf_threshold,
+            migrate_latency,
+            stats: PairStats::default(),
+            recent_srcs: [u64::MAX; 4],
+            migrations_in: 0,
+            migrations_out: 0,
+        }
+    }
+
+    fn account_mark(&mut self, m: Mark) {
+        match m {
+            Mark::InWindow => self.stats.dests_in_window += 1,
+            Mark::Rebased { dropped } => {
+                self.stats.dests_in_window += 1;
+                self.stats.dests_dropped += dropped as u64;
+            }
+            Mark::TooFar => unreachable!(),
+        }
+    }
+
+    fn entangle(&mut self, src: u64, dst: u64) {
+        self.stats.pairs_total += 1;
+        self.stats.dests_total += 1;
+        if !bits::shares_high_bits(src, dst, 20) {
+            self.stats.dests_dropped += 1;
+            return;
+        }
+        self.stats.pairs_fit20 += 1;
+        // Resident source: update the attached entry (L1-speed update).
+        if let Some(a) = self.l1.get_mut(&src) {
+            let m = a.centry.mark(src, dst);
+            self.account_mark(m);
+            return;
+        }
+        // Cold source: learn into the virtual table.
+        if let Some(e) = self.vtable.get_mut(src) {
+            let m = e.mark(src, dst);
+            self.account_mark(m);
+        } else {
+            self.vtable.put(src, CEntry::new(self.window, dst));
+            self.stats.dests_in_window += 1;
+        }
+    }
+
+    fn is_short_loop(&self, src: u64) -> bool {
+        self.recent_srcs.contains(&src)
+    }
+}
+
+impl Prefetcher for Cheip {
+    fn name(&self) -> String {
+        format!(
+            "cheip{}w{}{}",
+            self.vtable.metadata_bytes() * 8 / (51 + CEntry::storage_bits(self.window) as u64),
+            self.window,
+            if self.whole_window { "" } else { "s" }
+        )
+    }
+
+    fn on_fetch(&mut self, line: u64, cycle: u64, out: &mut Vec<Candidate>) {
+        let short_loop = self.is_short_loop(line);
+        if let Some(a) = self.l1.get(&line) {
+            // Only fire once the migrated metadata has arrived (§III-B).
+            if cycle >= a.available_at {
+                super::ceip::Ceip::emit(
+                    &a.centry,
+                    line,
+                    self.whole_window,
+                    self.conf_threshold,
+                    short_loop,
+                    out,
+                );
+            }
+        }
+        self.recent_srcs.rotate_right(1);
+        self.recent_srcs[0] = line;
+    }
+
+    fn on_demand_miss(&mut self, line: u64, cycle: u64) {
+        self.history.push(line, cycle);
+    }
+
+    fn on_miss_resolved(&mut self, line: u64, fetch_cycle: u64, latency: u64) {
+        if let Some(src) = self.history.find_source(line, fetch_cycle, latency) {
+            self.entangle(src.line, line);
+        }
+    }
+
+    fn feedback(&mut self, fb: &Feedback) {
+        let centry = if let Some(a) = self.l1.get_mut(&fb.src) {
+            Some(&mut a.centry)
+        } else {
+            self.vtable.get_mut(fb.src)
+        };
+        if let Some(e) = centry {
+            let base = e.line_at(fb.src, 0);
+            if fb.line >= base && fb.line < base + e.window() as u64 {
+                let off = (fb.line - base) as u8;
+                match fb.outcome {
+                    Outcome::Timely | Outcome::Late => e.reinforce(off),
+                    Outcome::Useless => e.decay(off),
+                }
+            }
+        }
+    }
+
+    /// L1 fill: migrate metadata in from the virtual table (if any).
+    fn on_l1i_fill(&mut self, line: u64, cycle: u64) {
+        debug_assert!(self.l1.len() <= self.l1_lines as usize);
+        if let Some(e) = self.vtable.take(line) {
+            self.migrations_in += 1;
+            self.l1.insert(
+                line,
+                Attached {
+                    centry: e,
+                    available_at: cycle + self.migrate_latency,
+                },
+            );
+        } else {
+            // Fresh attachment slot (no virtualized history): subsequent
+            // entangles to this resident source update it at L1 speed.
+            self.l1.insert(
+                line,
+                Attached {
+                    centry: CEntry::empty(self.window),
+                    available_at: cycle,
+                },
+            );
+        }
+    }
+
+    /// L1 evict: write the attached entry back to the virtual table.
+    fn on_l1i_evict(&mut self, line: u64) {
+        if let Some(a) = self.l1.remove(&line) {
+            if a.centry.marked() > 0 {
+                self.migrations_out += 1;
+                self.vtable.put(line, a.centry);
+            }
+        }
+    }
+
+    /// §VII guardrail: decay attached-entry confidences (the hot set that
+    /// actively steers prefetches); the virtual table ages via its LRU.
+    fn on_anomaly(&mut self) {
+        for a in self.l1.values_mut() {
+            for off in 0..a.centry.window() {
+                a.centry.decay(off);
+            }
+        }
+    }
+
+    /// §V budget: L1-attached (lines × 36 b = 2304 B for 512 lines) +
+    /// virtualized table (21.75 / 43.5 KB) + history (624 B) ⇒ 24.75 /
+    /// 46.5 KB totals. Note the virtual table occupies *shared L2/L3*
+    /// capacity, but the paper's §V budget counts it, so we do too.
+    fn metadata_bytes(&self) -> u64 {
+        bits::bits_to_bytes(self.l1_lines as u64 * CEntry::storage_bits(self.window) as u64)
+            + self.vtable.metadata_bytes()
+            + self.history.metadata_bytes()
+    }
+
+    fn pair_stats(&self) -> PairStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SRC: u64 = 0x0040_2000;
+
+    fn mk() -> Cheip {
+        Cheip::new(2048, 8, true, 2, 512, 15)
+    }
+
+    fn drive_miss(c: &mut Cheip, src: u64, sc: u64, dst: u64, dc: u64, lat: u64) {
+        c.on_demand_miss(src, sc);
+        c.on_demand_miss(dst, dc);
+        c.on_miss_resolved(dst, dc, lat);
+    }
+
+    #[test]
+    fn paper_budget_24_75_kb_and_46_5_kb() {
+        // §V components: history 624 B; L1-attach 512×36 b = 2304 B
+        // (2.25 KB); vtable 2K×87 b = 21.75 KB or 4K×87 b = 43.5 KB.
+        // Totals 25 200 B ≈ the paper's "24.75 KB" and 47 472 B ≈
+        // "46.5 KB" (the paper rounds the 624 B history to 0.75 KB).
+        let c2k = mk();
+        assert_eq!(c2k.metadata_bytes(), 2304 + 22_272 + 624);
+        assert!((c2k.metadata_bytes() as f64 / 1024.0 - 24.75).abs() < 0.2);
+        let c4k = Cheip::new(4096, 8, true, 2, 512, 15);
+        assert_eq!(c4k.metadata_bytes(), 2304 + 44_544 + 624);
+        assert!((c4k.metadata_bytes() as f64 / 1024.0 - 46.5).abs() < 0.2);
+    }
+
+    #[test]
+    fn resident_source_fires_after_migration_latency() {
+        let mut c = mk();
+        // Learn while cold → entry in vtable.
+        drive_miss(&mut c, SRC, 0, SRC + 3, 500, 100);
+        drive_miss(&mut c, SRC, 900, SRC + 3, 1400, 100);
+        assert!(!c.vtable.is_empty());
+        // Line fills into L1 at cycle 2000: metadata migrates, usable at
+        // 2000 + 15.
+        c.on_l1i_fill(SRC, 2000);
+        assert_eq!(c.migrations_in, 1);
+        let mut out = Vec::new();
+        c.on_fetch(SRC, 2005, &mut out);
+        assert!(out.is_empty(), "metadata still in flight");
+        c.on_fetch(SRC, 2015, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].line, SRC + 3);
+    }
+
+    #[test]
+    fn cold_source_does_not_fire() {
+        let mut c = mk();
+        drive_miss(&mut c, SRC, 0, SRC + 3, 500, 100);
+        let mut out = Vec::new();
+        // Source never filled into L1: vtable is not queried on fetch.
+        c.on_fetch(SRC, 1000, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn evict_writes_back_and_later_refill_restores() {
+        let mut c = mk();
+        drive_miss(&mut c, SRC, 0, SRC + 2, 500, 100);
+        c.on_l1i_fill(SRC, 1000);
+        // Update while resident.
+        drive_miss(&mut c, SRC, 2000, SRC + 4, 2500, 100);
+        c.on_l1i_evict(SRC);
+        assert_eq!(c.migrations_out, 1);
+        assert!(c.l1.is_empty());
+        // Refill: both marks must survive the round trip.
+        c.on_l1i_fill(SRC, 5000);
+        let mut out = Vec::new();
+        c.on_fetch(SRC, 5100, &mut out);
+        let lines: Vec<u64> = out.iter().map(|x| x.line).collect();
+        assert!(lines.contains(&(SRC + 2)) && lines.contains(&(SRC + 4)));
+    }
+
+    #[test]
+    fn resident_entry_updates_at_l1() {
+        let mut c = mk();
+        c.on_l1i_fill(SRC, 100);
+        drive_miss(&mut c, SRC, 200, SRC + 1, 700, 100);
+        let mut out = Vec::new();
+        c.on_fetch(SRC, 800, &mut out);
+        assert_eq!(out.len(), 1, "entangle to resident source is immediately usable");
+    }
+
+    #[test]
+    fn feedback_reaches_both_levels() {
+        let mut c = mk();
+        // Cold: feedback via vtable.
+        drive_miss(&mut c, SRC, 0, SRC + 2, 500, 100);
+        c.feedback(&Feedback {
+            src: SRC,
+            line: SRC + 2,
+            outcome: Outcome::Timely,
+        });
+        c.on_l1i_fill(SRC, 1000);
+        let mut out = Vec::new();
+        c.on_fetch(SRC, 1100, &mut out);
+        assert_eq!(out[0].conf, 2, "vtable feedback persisted through migration");
+        // Resident: feedback via attached entry.
+        c.feedback(&Feedback {
+            src: SRC,
+            line: SRC + 2,
+            outcome: Outcome::Useless,
+        });
+        out.clear();
+        c.on_fetch(SRC, 1200, &mut out);
+        assert_eq!(out[0].conf, 1);
+    }
+
+    #[test]
+    fn unmarked_attached_entries_not_written_back() {
+        let mut c = mk();
+        c.on_l1i_fill(SRC, 100); // nothing to migrate
+        c.on_l1i_evict(SRC);
+        assert_eq!(c.migrations_out, 0);
+        assert!(c.vtable.is_empty());
+    }
+}

@@ -1,0 +1,135 @@
+//! EIP history buffer (paper §V): a 64-entry FIFO of recent demand misses
+//! used to pick the *entangling source* for a resolved miss — the youngest
+//! source old enough that a prefetch triggered by it would have arrived on
+//! time (§II-B, Fig 3).
+//!
+//! The hardware entry is a 58-bit tag + 20-bit timestamp (624 B total);
+//! the simulator stores full values and charges the paper's bit budget in
+//! [`super::budget`].
+
+use std::collections::VecDeque;
+
+#[derive(Clone, Copy, Debug)]
+pub struct HistEntry {
+    pub line: u64,
+    /// Cycle at which the miss was issued.
+    pub ts: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct HistoryBuffer {
+    buf: VecDeque<HistEntry>,
+    cap: usize,
+}
+
+impl HistoryBuffer {
+    pub fn new(cap: usize) -> Self {
+        HistoryBuffer {
+            buf: VecDeque::with_capacity(cap),
+            cap,
+        }
+    }
+
+    /// Paper configuration: 64 entries.
+    pub fn paper() -> Self {
+        Self::new(64)
+    }
+
+    pub fn push(&mut self, line: u64, ts: u64) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(HistEntry { line, ts });
+    }
+
+    /// Find the entangling source for a miss of `dst` that stalled at
+    /// `fetch_cycle` and cost `latency`: the *youngest* entry whose
+    /// timestamp satisfies `ts + latency <= fetch_cycle` (a prefetch
+    /// issued then would have completed in time). Falls back to the oldest
+    /// entry when none is old enough; never returns `dst` itself.
+    pub fn find_source(&self, dst: u64, fetch_cycle: u64, latency: u64) -> Option<HistEntry> {
+        let deadline = fetch_cycle.saturating_sub(latency);
+        let mut fallback: Option<HistEntry> = None;
+        for e in self.buf.iter().rev() {
+            if e.line == dst {
+                continue;
+            }
+            if e.ts <= deadline {
+                return Some(*e);
+            }
+            fallback = Some(*e); // oldest-so-far that isn't dst
+        }
+        fallback
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Paper bit budget: entries * (58-bit tag + 20-bit timestamp).
+    pub fn metadata_bytes(&self) -> u64 {
+        crate::util::bits::bits_to_bytes(self.cap as u64 * (58 + 20))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_budget_is_624_bytes() {
+        assert_eq!(HistoryBuffer::paper().metadata_bytes(), 624);
+    }
+
+    #[test]
+    fn fifo_capacity() {
+        let mut h = HistoryBuffer::new(3);
+        for i in 0..5 {
+            h.push(i, i * 10);
+        }
+        assert_eq!(h.len(), 3);
+        // Oldest remaining is line 2.
+        let src = h.find_source(99, 1000, 10).unwrap();
+        assert_eq!(src.line, 4, "youngest satisfying entry wins");
+    }
+
+    #[test]
+    fn picks_youngest_timely_source() {
+        let mut h = HistoryBuffer::new(8);
+        h.push(1, 100);
+        h.push(2, 200);
+        h.push(3, 290);
+        // Miss at 300 with latency 50: deadline 250. Entries 1 (100) and
+        // 2 (200) qualify; youngest is 2.
+        let src = h.find_source(9, 300, 50).unwrap();
+        assert_eq!(src.line, 2);
+    }
+
+    #[test]
+    fn falls_back_to_oldest_when_none_timely() {
+        let mut h = HistoryBuffer::new(8);
+        h.push(1, 295);
+        h.push(2, 298);
+        let src = h.find_source(9, 300, 50).unwrap();
+        assert_eq!(src.line, 1);
+    }
+
+    #[test]
+    fn never_entangles_self() {
+        let mut h = HistoryBuffer::new(8);
+        h.push(7, 10);
+        assert!(h.find_source(7, 300, 50).is_none());
+        h.push(8, 20);
+        assert_eq!(h.find_source(7, 300, 50).unwrap().line, 8);
+    }
+
+    #[test]
+    fn empty_returns_none() {
+        let h = HistoryBuffer::new(8);
+        assert!(h.find_source(1, 100, 10).is_none());
+    }
+}

@@ -1,0 +1,222 @@
+//! Instruction prefetchers: the paper's CEIP/CHEIP plus every baseline the
+//! evaluation compares against (next-line, EIP, perfect-oracle — the last
+//! is engine-integrated because it needs trace lookahead).
+//!
+//! All prefetchers speak the [`Prefetcher`] trait; the engine feeds demand
+//! fetches/misses in and receives [`Candidate`]s out, optionally gated by
+//! the ML controller (`ml::controller`).
+
+pub mod budget;
+pub mod centry;
+pub mod ceip;
+pub mod cheip;
+pub mod eip;
+pub mod history;
+pub mod next_line;
+pub mod vtable;
+
+use crate::config::{PrefetcherKind, SimConfig};
+
+/// A prefetch candidate produced by a prefetcher, carrying the context
+/// features the ML controller scores (paper §IV-A).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Candidate {
+    /// Line to prefetch.
+    pub line: u64,
+    /// Trigger (source) line.
+    pub src: u64,
+    /// Confidence 0..=3 of this destination.
+    pub conf: u8,
+    /// Offset within the window (0 when not window-based).
+    pub offset: u8,
+    /// Fraction of window offsets marked (0 when not window-based).
+    pub window_density: f32,
+    /// Source was a short-loop trigger (repeated recent fetch).
+    pub short_loop: bool,
+}
+
+/// What ultimately happened to an issued prefetch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Demanded after fill completed.
+    Timely,
+    /// Demanded while still in flight.
+    Late,
+    /// Evicted before any demand.
+    Useless,
+}
+
+/// Feedback routed from the engine back to the prefetcher.
+#[derive(Clone, Copy, Debug)]
+pub struct Feedback {
+    pub src: u64,
+    pub line: u64,
+    pub outcome: Outcome,
+}
+
+/// Instrumentation counters behind Figs 7, 8, and 10.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PairStats {
+    /// Entangle attempts (source, destination pairs observed).
+    pub pairs_total: u64,
+    /// Pairs whose delta fits within 20 low-order bits (Fig 7).
+    pub pairs_fit20: u64,
+    /// Destinations offered to a window entry.
+    pub dests_total: u64,
+    /// Destinations representable in the current window (Fig 8).
+    pub dests_in_window: u64,
+    /// Destinations dropped (window slide loss + >20-bit) (Fig 10).
+    pub dests_dropped: u64,
+}
+
+impl PairStats {
+    pub fn fit20_frac(&self) -> f64 {
+        if self.pairs_total == 0 {
+            0.0
+        } else {
+            self.pairs_fit20 as f64 / self.pairs_total as f64
+        }
+    }
+
+    pub fn window_frac(&self) -> f64 {
+        if self.dests_total == 0 {
+            0.0
+        } else {
+            self.dests_in_window as f64 / self.dests_total as f64
+        }
+    }
+
+    pub fn uncovered_frac(&self) -> f64 {
+        if self.dests_total == 0 {
+            0.0
+        } else {
+            self.dests_dropped as f64 / self.dests_total as f64
+        }
+    }
+}
+
+/// The prefetcher interface driven by `sim::engine`.
+pub trait Prefetcher {
+    fn name(&self) -> String;
+
+    /// Called on every demand instruction fetch (hit or miss); candidates
+    /// are appended to `out`.
+    fn on_fetch(&mut self, line: u64, cycle: u64, out: &mut Vec<Candidate>);
+
+    /// Called when a demand miss is issued (history-buffer push).
+    fn on_demand_miss(&mut self, line: u64, cycle: u64);
+
+    /// Called when a demand miss resolves; `fetch_cycle` is when the fetch
+    /// stalled, `latency` what it cost — the entangling moment (§II-B).
+    fn on_miss_resolved(&mut self, line: u64, fetch_cycle: u64, latency: u64);
+
+    /// Outcome feedback for an issued prefetch.
+    fn feedback(&mut self, fb: &Feedback);
+
+    /// L1-I fill/evict hooks (CHEIP metadata migration, §III-B).
+    fn on_l1i_fill(&mut self, _line: u64, _cycle: u64) {}
+    fn on_l1i_evict(&mut self, _line: u64) {}
+
+    /// Anomalous-miss-burst guardrail (§VII: "confidence decay and rapid
+    /// eviction on anomalous miss bursts"): decay learned confidence so a
+    /// rollout/phase flip cannot keep steering stale prefetches.
+    fn on_anomaly(&mut self) {}
+
+    /// On-chip metadata cost in bytes (Fig 13 / §V).
+    fn metadata_bytes(&self) -> u64;
+
+    /// Fig 7/8/10 instrumentation.
+    fn pair_stats(&self) -> PairStats {
+        PairStats::default()
+    }
+}
+
+/// A no-op prefetcher (the NextLineOnly baseline: NL lives in the engine).
+pub struct Null;
+
+impl Prefetcher for Null {
+    fn name(&self) -> String {
+        "null".into()
+    }
+    fn on_fetch(&mut self, _: u64, _: u64, _: &mut Vec<Candidate>) {}
+    fn on_demand_miss(&mut self, _: u64, _: u64) {}
+    fn on_miss_resolved(&mut self, _: u64, _: u64, _: u64) {}
+    fn feedback(&mut self, _: &Feedback) {}
+    fn metadata_bytes(&self) -> u64 {
+        0
+    }
+}
+
+/// Build the configured prefetcher. `Perfect` also returns `Null` — the
+/// engine implements the oracle natively via trace lookahead.
+pub fn build(cfg: &SimConfig) -> Box<dyn Prefetcher> {
+    match &cfg.prefetcher {
+        PrefetcherKind::NextLineOnly | PrefetcherKind::Perfect => Box::new(Null),
+        PrefetcherKind::Eip { entries } => {
+            Box::new(eip::Eip::new(*entries, cfg.conf_threshold))
+        }
+        PrefetcherKind::Ceip { entries, window, whole_window } => Box::new(ceip::Ceip::new(
+            *entries,
+            *window,
+            *whole_window,
+            cfg.conf_threshold,
+        )),
+        PrefetcherKind::Cheip { vt_entries, window, whole_window } => {
+            Box::new(cheip::Cheip::new(
+                *vt_entries,
+                *window,
+                *whole_window,
+                cfg.conf_threshold,
+                cfg.hierarchy.l1i.lines(),
+                cfg.hierarchy.l2.latency,
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pair_stats_fractions() {
+        let ps = PairStats {
+            pairs_total: 100,
+            pairs_fit20: 90,
+            dests_total: 80,
+            dests_in_window: 60,
+            dests_dropped: 20,
+        };
+        assert!((ps.fit20_frac() - 0.9).abs() < 1e-12);
+        assert!((ps.window_frac() - 0.75).abs() < 1e-12);
+        assert!((ps.uncovered_frac() - 0.25).abs() < 1e-12);
+        assert_eq!(PairStats::default().fit20_frac(), 0.0);
+    }
+
+    #[test]
+    fn factory_builds_each_kind() {
+        let mut cfg = SimConfig::default();
+        for (kind, name) in [
+            (PrefetcherKind::NextLineOnly, "null"),
+            (PrefetcherKind::Eip { entries: 64 }, "eip64"),
+            (
+                PrefetcherKind::Ceip { entries: 64, window: 8, whole_window: true },
+                "ceip64",
+            ),
+            (
+                PrefetcherKind::Cheip { vt_entries: 2048, window: 8, whole_window: true },
+                "cheip2048",
+            ),
+            (PrefetcherKind::Perfect, "null"),
+        ] {
+            cfg.prefetcher = kind;
+            let p = build(&cfg);
+            assert!(
+                p.name().starts_with(name),
+                "{} vs {}",
+                p.name(),
+                name
+            );
+        }
+    }
+}

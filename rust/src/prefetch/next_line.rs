@@ -1,0 +1,80 @@
+//! Next-line instruction prefetcher. Per the paper's methodology (§X-B)
+//! "a next line prefetcher remains enabled for all variants" — the engine
+//! embeds one unconditionally; this standalone impl exists for unit tests
+//! and the NL-only baseline ablation.
+
+use super::{Candidate, Feedback, Prefetcher};
+
+pub struct NextLine {
+    /// How many sequential lines to issue per fetch (degree).
+    pub degree: u8,
+    last_line: u64,
+}
+
+impl NextLine {
+    pub fn new(degree: u8) -> Self {
+        NextLine {
+            degree,
+            last_line: u64::MAX,
+        }
+    }
+}
+
+impl Prefetcher for NextLine {
+    fn name(&self) -> String {
+        format!("nl{}", self.degree)
+    }
+
+    fn on_fetch(&mut self, line: u64, _cycle: u64, out: &mut Vec<Candidate>) {
+        // Suppress re-issue while streaming through the same line.
+        if line == self.last_line {
+            return;
+        }
+        self.last_line = line;
+        for d in 1..=self.degree as u64 {
+            out.push(Candidate {
+                line: line + d,
+                src: line,
+                conf: 3,
+                offset: d as u8,
+                window_density: 0.0,
+                short_loop: false,
+            });
+        }
+    }
+
+    fn on_demand_miss(&mut self, _: u64, _: u64) {}
+    fn on_miss_resolved(&mut self, _: u64, _: u64, _: u64) {}
+    fn feedback(&mut self, _: &Feedback) {}
+
+    fn metadata_bytes(&self) -> u64 {
+        8 // one line register
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emits_next_lines() {
+        let mut nl = NextLine::new(2);
+        let mut out = Vec::new();
+        nl.on_fetch(100, 0, &mut out);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].line, 101);
+        assert_eq!(out[1].line, 102);
+        assert_eq!(out[0].src, 100);
+    }
+
+    #[test]
+    fn suppresses_duplicate_trigger() {
+        let mut nl = NextLine::new(1);
+        let mut out = Vec::new();
+        nl.on_fetch(100, 0, &mut out);
+        nl.on_fetch(100, 1, &mut out);
+        assert_eq!(out.len(), 1);
+        nl.on_fetch(101, 2, &mut out);
+        assert_eq!(out.len(), 2);
+    }
+}

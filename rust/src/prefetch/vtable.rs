@@ -1,0 +1,154 @@
+//! The virtualized entangle table (paper §III-B, §V): a set-associative
+//! metadata store logically resident in L2/L3 ("predictor virtualization",
+//! paper ref [6]). 16 ways; 2K or 4K entries; each entry a 51-bit tag +
+//! 36-bit compressed payload (21.75 KB / 43.5 KB).
+
+use super::centry::CEntry;
+use crate::util::bits;
+use crate::util::hashfx::FxHashMap;
+
+pub const WAYS: usize = 16;
+pub const TAG_BITS: u64 = 51;
+
+pub struct VTable {
+    sets: Vec<FxHashMap<u64, (CEntry, u64)>>, // src → (entry, lru)
+    n_sets: u64,
+    entries_cfg: u32,
+    window: u8,
+    clock: u64,
+    pub evictions: u64,
+}
+
+impl VTable {
+    pub fn new(entries: u32, window: u8) -> Self {
+        let n_sets = (entries as usize / WAYS).max(1) as u64;
+        VTable {
+            sets: (0..n_sets).map(|_| FxHashMap::default()).collect(),
+            n_sets,
+            entries_cfg: entries,
+            window,
+            clock: 0,
+            evictions: 0,
+        }
+    }
+
+    #[inline]
+    fn set_of(&self, src: u64) -> usize {
+        (src % self.n_sets) as usize
+    }
+
+    /// Look up (and LRU-touch) the entry for `src`.
+    pub fn get_mut(&mut self, src: u64) -> Option<&mut CEntry> {
+        self.clock += 1;
+        let clock = self.clock;
+        let set = self.set_of(src);
+        self.sets[set].get_mut(&src).map(|(e, lru)| {
+            *lru = clock;
+            e
+        })
+    }
+
+    /// Remove and return the entry for `src` (metadata migration to L1).
+    pub fn take(&mut self, src: u64) -> Option<CEntry> {
+        let set = self.set_of(src);
+        self.sets[set].remove(&src).map(|(e, _)| e)
+    }
+
+    /// Insert (metadata migration from L1, or cold learning). Evicts the
+    /// set's LRU entry when full.
+    pub fn put(&mut self, src: u64, entry: CEntry) {
+        self.clock += 1;
+        let clock = self.clock;
+        let set_idx = self.set_of(src);
+        let set = &mut self.sets[set_idx];
+        if let Some(slot) = set.get_mut(&src) {
+            *slot = (entry, clock);
+            return;
+        }
+        if set.len() >= WAYS {
+            let victim = *set.iter().min_by_key(|(_, (_, lru))| *lru).map(|(k, _)| k).unwrap();
+            set.remove(&victim);
+            self.evictions += 1;
+        }
+        set.insert(src, (entry, clock));
+    }
+
+    /// Get-or-create for learning updates that miss both levels.
+    pub fn get_or_insert(&mut self, src: u64, dst: u64) -> &mut CEntry {
+        let set_idx = self.set_of(src);
+        if !self.sets[set_idx].contains_key(&src) {
+            let e = CEntry::new(self.window, dst);
+            self.put(src, e);
+        }
+        self.get_mut(src).unwrap()
+    }
+
+    pub fn len(&self) -> usize {
+        self.sets.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Paper §V: entries × (51-bit tag + payload bits).
+    pub fn metadata_bytes(&self) -> u64 {
+        let payload = CEntry::storage_bits(self.window) as u64;
+        bits::bits_to_bytes(self.entries_cfg as u64 * (TAG_BITS + payload))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SRC: u64 = 0x0040_0000;
+
+    #[test]
+    fn paper_sizes_2k_and_4k() {
+        // §V: 2K entries → 21.75 KB; 4K → 43.5 KB (51+36 = 87 bits/entry).
+        assert_eq!(VTable::new(2048, 8).metadata_bytes(), 22_272); // 21.75 KB
+        assert_eq!(VTable::new(4096, 8).metadata_bytes(), 44_544); // 43.5 KB
+        assert_eq!(22_272, (21.75 * 1024.0) as u64);
+        assert_eq!(44_544, (43.5 * 1024.0) as u64);
+    }
+
+    #[test]
+    fn put_get_take_roundtrip() {
+        let mut vt = VTable::new(2048, 8);
+        let e = CEntry::new(8, SRC + 5);
+        vt.put(SRC, e.clone());
+        assert_eq!(vt.get_mut(SRC).map(|x| x.clone()), Some(e.clone()));
+        assert_eq!(vt.take(SRC), Some(e));
+        assert!(vt.get_mut(SRC).is_none());
+        assert!(vt.is_empty());
+    }
+
+    #[test]
+    fn set_associativity_evicts_lru() {
+        let mut vt = VTable::new(16, 8); // one set of 16 ways
+        for i in 0..17u64 {
+            vt.put(SRC + i, CEntry::new(8, SRC + i));
+            // Touch early entries except the very first to make it LRU.
+            if i > 0 && i < 16 {
+                vt.get_mut(SRC + i);
+            }
+        }
+        assert_eq!(vt.len(), 16);
+        assert_eq!(vt.evictions, 1);
+        assert!(vt.get_mut(SRC).is_none(), "LRU (first, untouched) evicted");
+    }
+
+    #[test]
+    fn get_or_insert_creates_once() {
+        let mut vt = VTable::new(2048, 8);
+        {
+            let e = vt.get_or_insert(SRC, SRC + 3);
+            assert_eq!(e.marked(), 1);
+            e.reinforce(3);
+        }
+        let e2 = vt.get_or_insert(SRC, SRC + 9);
+        assert!(e2.conf_at(3) >= 1, "existing entry reused, not recreated");
+        assert_eq!(vt.len(), 1);
+    }
+}

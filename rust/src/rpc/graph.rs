@@ -1,0 +1,114 @@
+//! Service-chain topology: a request traverses admission → feature lookup
+//! → model dispatch → logging (the paper's §X-A service mix).
+
+/// One microservice node.
+#[derive(Clone, Debug)]
+pub struct ServiceNode {
+    pub name: String,
+    /// Mean instructions executed per request at this node.
+    pub instrs_per_req: f64,
+    /// Measured IPC of this node's binary under the evaluated prefetcher
+    /// (from `sim::engine`).
+    pub ipc: f64,
+    /// Coefficient of variation of per-request work (the trace generator's
+    /// request-size dispersion).
+    pub cv: f64,
+}
+
+impl ServiceNode {
+    /// Mean service time in microseconds at `freq_ghz`.
+    pub fn mean_service_us(&self, freq_ghz: f64) -> f64 {
+        let cycles = self.instrs_per_req / self.ipc;
+        cycles / (freq_ghz * 1000.0)
+    }
+}
+
+/// A linear chain of services (control-plane RPC path).
+#[derive(Clone, Debug)]
+pub struct ServiceChain {
+    pub nodes: Vec<ServiceNode>,
+    pub freq_ghz: f64,
+}
+
+impl ServiceChain {
+    /// The paper's canonical control-plane path, parameterized by per-node
+    /// IPC measurements.
+    pub fn control_plane(ipcs: &[(String, f64)], instrs_per_req: f64, freq_ghz: f64) -> Self {
+        ServiceChain {
+            nodes: ipcs
+                .iter()
+                .map(|(name, ipc)| ServiceNode {
+                    name: name.clone(),
+                    instrs_per_req,
+                    ipc: *ipc,
+                    cv: 0.35,
+                })
+                .collect(),
+            freq_ghz,
+        }
+    }
+
+    /// Sum of mean service times (zero-load latency), µs.
+    pub fn base_latency_us(&self) -> f64 {
+        self.nodes.iter().map(|n| n.mean_service_us(self.freq_ghz)).sum()
+    }
+
+    /// Max utilization-normalizing arrival rate: the bottleneck node's
+    /// service rate (req/µs).
+    pub fn bottleneck_rate(&self) -> f64 {
+        self.nodes
+            .iter()
+            .map(|n| 1.0 / n.mean_service_us(self.freq_ghz))
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain() -> ServiceChain {
+        ServiceChain::control_plane(
+            &[
+                ("admission".into(), 2.0),
+                ("featurestore".into(), 1.5),
+                ("mlserve".into(), 2.5),
+            ],
+            25_000.0,
+            2.5,
+        )
+    }
+
+    #[test]
+    fn service_time_math() {
+        let n = ServiceNode {
+            name: "x".into(),
+            instrs_per_req: 25_000.0,
+            ipc: 2.0,
+            cv: 0.3,
+        };
+        // 12.5k cycles at 2.5 GHz = 5 µs.
+        assert!((n.mean_service_us(2.5) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn base_latency_sums_nodes() {
+        let c = chain();
+        let expect = 25_000.0 / 2.0 / 2500.0 + 25_000.0 / 1.5 / 2500.0 + 25_000.0 / 2.5 / 2500.0;
+        assert!((c.base_latency_us() - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bottleneck_is_slowest_node() {
+        let c = chain();
+        // Slowest node: ipc 1.5 → service 6.67 µs → rate 0.15 req/µs.
+        assert!((c.bottleneck_rate() - 1.0 / (25_000.0 / 1.5 / 2500.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn higher_ipc_lowers_latency() {
+        let slow = ServiceChain::control_plane(&[("a".into(), 1.0)], 10_000.0, 2.5);
+        let fast = ServiceChain::control_plane(&[("a".into(), 1.2)], 10_000.0, 2.5);
+        assert!(fast.base_latency_us() < slow.base_latency_us());
+    }
+}

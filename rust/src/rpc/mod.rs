@@ -1,0 +1,15 @@
+//! Microservice RPC tail-latency layer (paper §I, §VI, §XI): turns per-core
+//! IPC from the cache simulator into end-to-end P50/P95/P99 request
+//! latency through a queueing model of a service chain.
+//!
+//! This is the substitution for the paper's production-fleet measurements
+//! (DESIGN.md): queueing amplification of service-time variance is exactly
+//! the mechanism by which frontend stalls inflate tails, and that is what
+//! we model — each node is a FCFS single-server queue whose service time
+//! is `instructions-per-request / (IPC × frequency)` plus workload jitter.
+
+pub mod graph;
+pub mod queue;
+
+pub use graph::{ServiceChain, ServiceNode};
+pub use queue::{simulate_chain, ChainResult, QueueParams};

@@ -1,0 +1,192 @@
+//! FCFS queueing simulation over a service chain: Poisson arrivals, one
+//! server per node, lognormal-ish service jitter. Exact recursive form for
+//! tandem FCFS queues: `depart[i] = max(arrive[i], depart[i-1]) + service`.
+
+use super::graph::ServiceChain;
+use crate::util::percentile::Digest;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct QueueParams {
+    /// Offered load as a fraction of the bottleneck rate (0, 1).
+    pub utilization: f64,
+    /// Requests to simulate.
+    pub requests: usize,
+    pub seed: u64,
+}
+
+impl Default for QueueParams {
+    fn default() -> Self {
+        QueueParams {
+            utilization: 0.6,
+            requests: 20_000,
+            seed: 1,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ChainResult {
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub mean_us: f64,
+    pub stddev_us: f64,
+    /// Fraction of requests within `slo_us` (set by the caller's check).
+    pub base_latency_us: f64,
+    pub arrival_rate_per_us: f64,
+}
+
+/// Simulate `params.requests` requests through the chain. Returns the
+/// latency distribution summary; `slo_us` (if finite) also yields the
+/// compliance fraction as the second tuple element.
+pub fn simulate_chain_with_slo(
+    chain: &ServiceChain,
+    params: &QueueParams,
+    slo_us: f64,
+) -> (ChainResult, f64) {
+    let mut rng = Rng::new(params.seed);
+    let lambda = chain.bottleneck_rate() * params.utilization;
+    let mean_iat = 1.0 / lambda;
+    let n = params.requests;
+
+    // Per-node service-time generators (mean × jitter with the node's CV).
+    let means: Vec<f64> = chain
+        .nodes
+        .iter()
+        .map(|nd| nd.mean_service_us(chain.freq_ghz))
+        .collect();
+
+    let mut arrive = 0.0f64;
+    let mut last_depart = vec![0.0f64; chain.nodes.len()];
+    let mut digest = Digest::new();
+    let mut met = 0usize;
+    for _ in 0..n {
+        arrive += rng.exp(mean_iat);
+        let mut t = arrive;
+        for (i, nd) in chain.nodes.iter().enumerate() {
+            // Lognormal-flavored jitter: exp(cv * normal) normalized to
+            // mean 1 (second-order), clamped for stability.
+            let jitter = (nd.cv * rng.normal() - 0.5 * nd.cv * nd.cv).exp();
+            let service = means[i] * jitter.clamp(0.05, 8.0);
+            let start = t.max(last_depart[i]);
+            let depart = start + service;
+            last_depart[i] = depart;
+            t = depart;
+        }
+        let latency = t - arrive;
+        digest.add(latency);
+        if latency <= slo_us {
+            met += 1;
+        }
+    }
+    (
+        ChainResult {
+            p50_us: digest.percentile(50.0),
+            p95_us: digest.percentile(95.0),
+            p99_us: digest.percentile(99.0),
+            mean_us: digest.mean(),
+            stddev_us: digest.stddev(),
+            base_latency_us: chain.base_latency_us(),
+            arrival_rate_per_us: lambda,
+        },
+        met as f64 / n as f64,
+    )
+}
+
+/// Simulate without an SLO bound.
+pub fn simulate_chain(chain: &ServiceChain, params: &QueueParams) -> ChainResult {
+    simulate_chain_with_slo(chain, params, f64::INFINITY).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rpc::graph::ServiceChain;
+
+    fn chain(ipc: f64) -> ServiceChain {
+        ServiceChain::control_plane(
+            &[
+                ("admission".into(), ipc),
+                ("featurestore".into(), ipc * 0.9),
+                ("mlserve".into(), ipc * 1.1),
+            ],
+            25_000.0,
+            2.5,
+        )
+    }
+
+    #[test]
+    fn percentiles_are_ordered_and_above_base() {
+        let r = simulate_chain(&chain(2.0), &QueueParams::default());
+        assert!(r.p50_us <= r.p95_us && r.p95_us <= r.p99_us);
+        assert!(r.p50_us >= r.base_latency_us * 0.5, "p50 below base/2?");
+        assert!(r.p99_us > r.base_latency_us, "no queueing tail at 60% load?");
+    }
+
+    #[test]
+    fn higher_ipc_tightens_tail() {
+        // The paper's core operational claim (§XI): faster frontends (higher
+        // IPC) narrow P95/P99 at fixed arrival rate.
+        let p = QueueParams {
+            utilization: 0.7,
+            requests: 30_000,
+            seed: 3,
+        };
+        let slow = simulate_chain(&chain(1.8), &p);
+        // Same *absolute* arrival rate for the fast system: utilization
+        // scales down with the speedup, so reuse utilization adjusted.
+        let fast_chain = chain(1.8 * 1.05); // 5% speedup
+        let fast_util = 0.7 / 1.05;
+        let fast = simulate_chain(
+            &fast_chain,
+            &QueueParams {
+                utilization: fast_util,
+                ..p
+            },
+        );
+        assert!(fast.p95_us < slow.p95_us);
+        assert!(fast.p99_us < slow.p99_us);
+        // Single-digit speedup compounds into a larger tail reduction.
+        let p99_gain = slow.p99_us / fast.p99_us;
+        assert!(p99_gain > 1.05, "p99 gain {p99_gain}");
+    }
+
+    #[test]
+    fn utilization_increases_tails() {
+        let lo = simulate_chain(
+            &chain(2.0),
+            &QueueParams {
+                utilization: 0.3,
+                ..Default::default()
+            },
+        );
+        let hi = simulate_chain(
+            &chain(2.0),
+            &QueueParams {
+                utilization: 0.85,
+                ..Default::default()
+            },
+        );
+        assert!(hi.p99_us > lo.p99_us * 1.3);
+    }
+
+    #[test]
+    fn slo_compliance_counts() {
+        let (r, frac) = simulate_chain_with_slo(
+            &chain(2.0),
+            &QueueParams::default(),
+            1e9, // everything meets an absurd SLO
+        );
+        assert_eq!(frac, 1.0);
+        let (_, tight) = simulate_chain_with_slo(&chain(2.0), &QueueParams::default(), r.p50_us);
+        assert!((tight - 0.5).abs() < 0.05, "P50 SLO ≈ 50% compliance, got {tight}");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = simulate_chain(&chain(2.0), &QueueParams::default());
+        let b = simulate_chain(&chain(2.0), &QueueParams::default());
+        assert_eq!(a.p99_us, b.p99_us);
+    }
+}

@@ -1,0 +1,201 @@
+//! The PJRT execution engine for the controller's AOT modules.
+
+use crate::ml::features::DIM;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// AOT contract (must agree with `python/compile/aot.py`; verified against
+/// the manifest at load time).
+pub const AOT_BATCH: usize = 256;
+pub const BANDIT_SLOTS: usize = 64;
+
+/// Locate the artifacts directory: `$SLOFETCH_ARTIFACTS`, else
+/// `./artifacts`, else `../artifacts` (tests run from the crate root).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("SLOFETCH_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    for cand in ["artifacts", "../artifacts"] {
+        let p = PathBuf::from(cand);
+        if p.join("manifest.json").exists() {
+            return p;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    score_exe: xla::PjRtLoadedExecutable,
+    train_exe: xla::PjRtLoadedExecutable,
+    bandit_exe: xla::PjRtLoadedExecutable,
+    /// Executions performed (diagnostics / §Perf accounting).
+    pub executions: std::cell::Cell<u64>,
+}
+
+impl PjrtEngine {
+    /// Load and compile all three modules from `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?} (run `make artifacts`)"))?;
+        let manifest = Json::parse(&manifest_text).context("parsing manifest.json")?;
+        let batch = manifest.get("batch").and_then(Json::as_u64).context("manifest.batch")?;
+        let feats = manifest
+            .get("features")
+            .and_then(Json::as_u64)
+            .context("manifest.features")?;
+        let slots = manifest
+            .get("bandit_slots")
+            .and_then(Json::as_u64)
+            .context("manifest.bandit_slots")?;
+        if batch as usize != AOT_BATCH || feats as usize != DIM || slots as usize != BANDIT_SLOTS {
+            bail!(
+                "AOT contract mismatch: manifest says batch={batch} features={feats} slots={slots}, \
+                 runtime expects {AOT_BATCH}/{DIM}/{BANDIT_SLOTS} — re-run `make artifacts`"
+            );
+        }
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let load = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).with_context(|| format!("compiling {name}"))
+        };
+        Ok(PjrtEngine {
+            score_exe: load("score")?,
+            train_exe: load("train")?,
+            bandit_exe: load("bandit")?,
+            client,
+            executions: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Load from the default artifacts location.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&artifacts_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn bump(&self) {
+        self.executions.set(self.executions.get() + 1);
+    }
+
+    /// Score a feature batch. `x` is row-major `[AOT_BATCH, DIM]`; shorter
+    /// batches are zero-padded (padded scores are returned but meaningless
+    /// — callers slice to their real length).
+    pub fn score(&self, w: &[f32; DIM], b: f32, x: &[f32]) -> Result<Vec<f32>> {
+        let rows = x.len() / DIM;
+        if x.len() % DIM != 0 || rows > AOT_BATCH {
+            bail!("score: bad batch shape ({} values)", x.len());
+        }
+        let mut padded = x.to_vec();
+        padded.resize(AOT_BATCH * DIM, 0.0);
+        let lw = xla::Literal::vec1(&w[..]);
+        let lb = xla::Literal::scalar(b);
+        let lx = xla::Literal::vec1(&padded).reshape(&[AOT_BATCH as i64, DIM as i64])?;
+        self.bump();
+        let result = self.score_exe.execute::<xla::Literal>(&[lw, lb, lx])?[0][0]
+            .to_literal_sync()?;
+        let p = result.to_tuple1()?;
+        let mut v = p.to_vec::<f32>()?;
+        v.truncate(rows);
+        Ok(v)
+    }
+
+    /// One SGD step on a full AOT batch. Returns (w', b', loss).
+    pub fn train_step(
+        &self,
+        w: &[f32; DIM],
+        b: f32,
+        x: &[f32],
+        y: &[f32],
+        lr: f32,
+    ) -> Result<([f32; DIM], f32, f32)> {
+        if x.len() != AOT_BATCH * DIM || y.len() != AOT_BATCH {
+            bail!(
+                "train_step requires a full batch ({} x {DIM}), got {}/{}",
+                AOT_BATCH,
+                x.len(),
+                y.len()
+            );
+        }
+        let lw = xla::Literal::vec1(&w[..]);
+        let lb = xla::Literal::scalar(b);
+        let lx = xla::Literal::vec1(x).reshape(&[AOT_BATCH as i64, DIM as i64])?;
+        let ly = xla::Literal::vec1(y);
+        let llr = xla::Literal::scalar(lr);
+        self.bump();
+        let result = self
+            .train_exe
+            .execute::<xla::Literal>(&[lw, lb, lx, ly, llr])?[0][0]
+            .to_literal_sync()?;
+        let (nw, nb, loss) = result.to_tuple3()?;
+        let nw_v = nw.to_vec::<f32>()?;
+        let mut w_out = [0.0f32; DIM];
+        w_out.copy_from_slice(&nw_v);
+        Ok((
+            w_out,
+            nb.to_vec::<f32>()?[0],
+            loss.to_vec::<f32>()?[0],
+        ))
+    }
+
+    /// Bandit value-table update: v' = v + lr * onehot * (r - v).
+    pub fn bandit_update(
+        &self,
+        values: &[f32; BANDIT_SLOTS],
+        slot: usize,
+        reward: f32,
+        lr: f32,
+    ) -> Result<[f32; BANDIT_SLOTS]> {
+        if slot >= BANDIT_SLOTS {
+            bail!("bandit slot {slot} out of range");
+        }
+        let mut onehot = [0.0f32; BANDIT_SLOTS];
+        onehot[slot] = 1.0;
+        let lv = xla::Literal::vec1(&values[..]);
+        let lo = xla::Literal::vec1(&onehot[..]);
+        let lr_ = xla::Literal::scalar(lr);
+        let lrw = xla::Literal::scalar(reward);
+        self.bump();
+        let result = self
+            .bandit_exe
+            .execute::<xla::Literal>(&[lv, lo, lrw, lr_])?[0][0]
+            .to_literal_sync()?;
+        let v = result.to_tuple1()?.to_vec::<f32>()?;
+        let mut out = [0.0f32; BANDIT_SLOTS];
+        out.copy_from_slice(&v);
+        Ok(out)
+    }
+}
+
+// Unit tests requiring artifacts live in rust/tests/integration_runtime.rs
+// (they need `make artifacts` to have run). Here only the pure helpers.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_dir_env_override() {
+        std::env::set_var("SLOFETCH_ARTIFACTS", "/tmp/custom_artifacts");
+        assert_eq!(artifacts_dir(), PathBuf::from("/tmp/custom_artifacts"));
+        std::env::remove_var("SLOFETCH_ARTIFACTS");
+    }
+
+    #[test]
+    fn load_missing_dir_fails_with_hint() {
+        let err = match PjrtEngine::load(Path::new("/nonexistent/artifacts")) {
+            Err(e) => e,
+            Ok(_) => panic!("load must fail for a missing directory"),
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

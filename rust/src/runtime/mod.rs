@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `make artifacts`) and executes them on the XLA PJRT CPU client.
+//! This is the only place the Rust coordinator touches the JAX/Pallas
+//! layers — Python is never on the request path.
+//!
+//! Interchange is HLO *text* (the image's xla_extension 0.5.1 rejects
+//! jax≥0.5 serialized protos with 64-bit instruction ids; the text parser
+//! reassigns ids — see DESIGN.md and /opt/xla-example).
+
+mod engine;
+
+pub use engine::{artifacts_dir, PjrtEngine};

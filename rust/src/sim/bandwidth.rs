@@ -1,0 +1,119 @@
+//! DRAM bandwidth model: a single-channel service queue (Table I: one
+//! channel, 3200 MT/s = 25.6 GB/s = 10.24 B/cycle at 2.5 GHz).
+//!
+//! Every DRAM transfer (demand fill or prefetch fill) occupies the channel
+//! for `bytes / bytes_per_cycle` cycles after a fixed access latency.
+//! Over-aggressive prefetching therefore delays demand fills — the
+//! mechanism behind the paper's bandwidth-cap concerns (§I challenge (ii),
+//! §VI-A "budget caps").
+
+#[derive(Clone, Debug)]
+pub struct DramModel {
+    /// Fixed access latency (row activation + CAS, cycles).
+    pub latency: u64,
+    /// Channel throughput.
+    pub bytes_per_cycle: f64,
+    /// Next cycle at which the channel is free.
+    free_at: f64,
+    /// Total bytes transferred (bandwidth accounting for reports).
+    pub bytes_total: u64,
+    /// Demand transfers that queued behind earlier transfers.
+    pub queued_demand: u64,
+    pub transfers: u64,
+}
+
+impl DramModel {
+    pub fn new(latency: u64, bytes_per_cycle: f64) -> Self {
+        DramModel {
+            latency,
+            bytes_per_cycle,
+            free_at: 0.0,
+            bytes_total: 0,
+            queued_demand: 0,
+            transfers: 0,
+        }
+    }
+
+    /// Schedule a transfer of `bytes` starting no earlier than `now`.
+    /// Returns the completion cycle.
+    pub fn transfer(&mut self, now: u64, bytes: u32, is_demand: bool) -> u64 {
+        let start = self.free_at.max(now as f64);
+        if is_demand && start > now as f64 {
+            self.queued_demand += 1;
+        }
+        let occupancy = bytes as f64 / self.bytes_per_cycle;
+        self.free_at = start + occupancy;
+        self.bytes_total += bytes as u64;
+        self.transfers += 1;
+        (start + self.latency as f64 + occupancy).ceil() as u64
+    }
+
+    /// Bandwidth headroom in [0,1]: 1 = idle channel, 0 = saturated
+    /// (queue extends ≥ `horizon` cycles past `now`). A controller feature.
+    pub fn headroom(&self, now: u64, horizon: f64) -> f64 {
+        let backlog = (self.free_at - now as f64).max(0.0);
+        (1.0 - backlog / horizon).clamp(0.0, 1.0)
+    }
+
+    /// Average bytes/cycle over the run.
+    pub fn avg_bytes_per_cycle(&self, cycles: u64) -> f64 {
+        if cycles == 0 {
+            0.0
+        } else {
+            self.bytes_total as f64 / cycles as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_channel_completes_at_latency_plus_occupancy() {
+        let mut d = DramModel::new(90, 10.24);
+        let done = d.transfer(1000, 64, true);
+        // 64/10.24 = 6.25 → 1000 + 90 + 6.25 → ceil 1097.
+        assert_eq!(done, 1097);
+        assert_eq!(d.queued_demand, 0);
+    }
+
+    #[test]
+    fn back_to_back_transfers_queue() {
+        let mut d = DramModel::new(90, 10.24);
+        let a = d.transfer(0, 64, true);
+        let b = d.transfer(0, 64, true);
+        assert!(b > a);
+        assert_eq!(d.queued_demand, 1);
+        assert_eq!(d.bytes_total, 128);
+    }
+
+    #[test]
+    fn headroom_degrades_under_load() {
+        let mut d = DramModel::new(90, 10.24);
+        assert_eq!(d.headroom(0, 100.0), 1.0);
+        for _ in 0..100 {
+            d.transfer(0, 64, false);
+        }
+        assert!(d.headroom(0, 100.0) < 0.1);
+        // After time passes, headroom recovers.
+        assert!(d.headroom(100_000, 100.0) > 0.99);
+    }
+
+    #[test]
+    fn channel_drains_with_time() {
+        let mut d = DramModel::new(90, 10.24);
+        d.transfer(0, 64, true);
+        // Far in the future: no queueing.
+        let done = d.transfer(10_000, 64, true);
+        assert_eq!(done, 10_097);
+        assert_eq!(d.queued_demand, 0, "non-overlapping transfers never queue");
+    }
+
+    #[test]
+    fn avg_bandwidth() {
+        let mut d = DramModel::new(90, 10.0);
+        d.transfer(0, 100, true);
+        assert!((d.avg_bytes_per_cycle(50) - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,343 @@
+//! Set-associative cache model with true-LRU replacement and an optional
+//! per-slot metadata side-array (CHEIP attaches a compressed entry to each
+//! L1-I line; metadata migrates with the line, §III-B).
+
+use crate::config::CacheCfg;
+
+/// Result of an insertion.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Evicted {
+    pub line: u64,
+    /// True when the victim slot was filled by a prefetch that was never
+    /// demanded (the "useless fill" the controller penalizes).
+    pub was_prefetch_unused: bool,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct Slot {
+    tag: u64,
+    valid: bool,
+    lru: u64,
+    /// Filled by prefetch and not yet demanded.
+    prefetched: bool,
+}
+
+/// Set-associative cache. Tags are full line addresses (simulator fidelity
+/// beats tag-bit realism here; the *cost model* in `prefetch::budget` uses
+/// the paper's bit counts).
+/// Outcome of a demand access (rich form: the engine uses the
+/// `prefetched` bit to claim in-flight entries without a map probe on the
+/// hit path — §Perf L3 optimization #1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Access {
+    Miss,
+    Hit,
+    /// Hit on a line that was filled by a prefetch and not yet demanded.
+    HitPrefetched,
+}
+
+impl Access {
+    #[inline]
+    pub fn is_hit(self) -> bool {
+        !matches!(self, Access::Miss)
+    }
+}
+
+pub struct Cache {
+    sets: u32,
+    /// `sets - 1` when `sets` is a power of two (fast index mask).
+    set_mask: Option<u64>,
+    ways: u32,
+    slots: Vec<Slot>,
+    clock: u64,
+    pub cfg: CacheCfg,
+    // stats
+    pub hits: u64,
+    pub misses: u64,
+    pub prefetch_fills: u64,
+    pub useless_prefetch_evictions: u64,
+}
+
+impl Cache {
+    pub fn new(cfg: CacheCfg) -> Self {
+        let sets = cfg.sets();
+        let ways = cfg.ways;
+        Cache {
+            sets,
+            set_mask: sets.is_power_of_two().then(|| sets as u64 - 1),
+            ways,
+            slots: vec![Slot::default(); (sets * ways) as usize],
+            clock: 0,
+            cfg,
+            hits: 0,
+            misses: 0,
+            prefetch_fills: 0,
+            useless_prefetch_evictions: 0,
+        }
+    }
+
+    #[inline]
+    fn set_of(&self, line: u64) -> u32 {
+        match self.set_mask {
+            Some(m) => (line & m) as u32,
+            None => (line % self.sets as u64) as u32,
+        }
+    }
+
+    #[inline]
+    fn set_slots(&mut self, set: u32) -> &mut [Slot] {
+        let start = (set * self.ways) as usize;
+        &mut self.slots[start..start + self.ways as usize]
+    }
+
+    /// Demand access: updates LRU; on hit clears the prefetched flag (the
+    /// prefetch was useful) and reports whether it was set.
+    pub fn access_rich(&mut self, line: u64) -> Access {
+        self.clock += 1;
+        let clock = self.clock;
+        let set = self.set_of(line);
+        for s in self.set_slots(set).iter_mut() {
+            if s.valid && s.tag == line {
+                s.lru = clock;
+                let was_pf = s.prefetched;
+                s.prefetched = false;
+                self.hits += 1;
+                return if was_pf { Access::HitPrefetched } else { Access::Hit };
+            }
+        }
+        self.misses += 1;
+        Access::Miss
+    }
+
+    /// Demand access: returns true on hit (boolean convenience form).
+    #[inline]
+    pub fn access(&mut self, line: u64) -> bool {
+        self.access_rich(line).is_hit()
+    }
+
+    /// Probe without LRU update or stats (used by prefetch dedup).
+    pub fn contains(&self, line: u64) -> bool {
+        let set = self.set_of(line);
+        let start = (set * self.ways) as usize;
+        self.slots[start..start + self.ways as usize]
+            .iter()
+            .any(|s| s.valid && s.tag == line)
+    }
+
+    /// Insert a line (demand fill or prefetch fill). Returns the victim if
+    /// a valid line was evicted. No-op if already present (refreshes LRU).
+    /// Single pass over the set: presence, free way, and LRU victim are
+    /// found together (§Perf L3).
+    pub fn insert(&mut self, line: u64, is_prefetch: bool) -> Option<Evicted> {
+        self.clock += 1;
+        let clock = self.clock;
+        let set = self.set_of(line);
+        let slots = self.set_slots(set);
+        let mut free: Option<usize> = None;
+        let mut lru_idx = 0usize;
+        let mut lru_min = u64::MAX;
+        let mut found: Option<usize> = None;
+        for (i, s) in slots.iter().enumerate() {
+            if !s.valid {
+                if free.is_none() {
+                    free = Some(i);
+                }
+            } else if s.tag == line {
+                found = Some(i);
+                break;
+            } else if s.lru < lru_min {
+                lru_min = s.lru;
+                lru_idx = i;
+            }
+        }
+        if let Some(i) = found {
+            slots[i].lru = clock;
+            return None;
+        }
+        let victim_idx = free.unwrap_or(lru_idx);
+        let victim = &mut slots[victim_idx];
+        let evicted = if victim.valid {
+            Some(Evicted {
+                line: victim.tag,
+                was_prefetch_unused: victim.prefetched,
+            })
+        } else {
+            None
+        };
+        *victim = Slot {
+            tag: line,
+            valid: true,
+            lru: clock,
+            prefetched: is_prefetch,
+        };
+        if matches!(&evicted, Some(e) if e.was_prefetch_unused) {
+            self.useless_prefetch_evictions += 1;
+        }
+        if is_prefetch {
+            self.prefetch_fills += 1;
+        }
+        evicted
+    }
+
+    /// Invalidate a line if present; returns whether it was there.
+    pub fn invalidate(&mut self, line: u64) -> bool {
+        let set = self.set_of(line);
+        for s in self.set_slots(set).iter_mut() {
+            if s.valid && s.tag == line {
+                s.valid = false;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Iterate over all resident lines (diagnostics).
+    pub fn resident_lines(&self) -> impl Iterator<Item = u64> + '_ {
+        self.slots.iter().filter(|s| s.valid).map(|s| s.tag)
+    }
+
+    pub fn capacity_lines(&self) -> u32 {
+        self.sets * self.ways
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HierarchyCfg;
+    use crate::util::prop;
+
+    fn small_cfg(sets: u32, ways: u32) -> Cache {
+        let mut c = Cache::new(CacheCfg {
+            size_kb: sets * ways * 64 / 1024,
+            ways,
+            line_b: 64,
+            latency: 1,
+        });
+        // size_kb arithmetic can floor to 0 for tiny caches; construct
+        // directly instead.
+        c.sets = sets;
+        c.ways = ways;
+        c.slots = vec![Slot::default(); (sets * ways) as usize];
+        c
+    }
+
+    #[test]
+    fn hit_after_insert() {
+        let mut c = small_cfg(4, 2);
+        assert!(!c.access(100));
+        c.insert(100, false);
+        assert!(c.access(100));
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut c = small_cfg(1, 2);
+        c.insert(1, false);
+        c.insert(2, false);
+        c.access(1); // 2 is now LRU
+        let ev = c.insert(3, false).unwrap();
+        assert_eq!(ev.line, 2);
+        assert!(c.contains(1) && c.contains(3) && !c.contains(2));
+    }
+
+    #[test]
+    fn prefetched_flag_cleared_on_demand_hit() {
+        let mut c = small_cfg(1, 2);
+        c.insert(7, true);
+        assert!(c.access(7)); // demand hit clears flag
+        c.insert(8, false);
+        let ev = c.insert(9, false).unwrap();
+        assert_eq!(ev.line, 7);
+        assert!(!ev.was_prefetch_unused, "used prefetch must not count as useless");
+    }
+
+    #[test]
+    fn unused_prefetch_eviction_counted() {
+        let mut c = small_cfg(1, 1);
+        c.insert(7, true);
+        let ev = c.insert(8, false).unwrap();
+        assert!(ev.was_prefetch_unused);
+        assert_eq!(c.useless_prefetch_evictions, 1);
+    }
+
+    #[test]
+    fn reinsert_refreshes_not_duplicates() {
+        let mut c = small_cfg(1, 2);
+        c.insert(1, false);
+        c.insert(1, false);
+        c.insert(2, false);
+        assert!(c.insert(1, false).is_none()); // refresh, no eviction
+        // 2 is older now.
+        let ev = c.insert(3, false).unwrap();
+        assert_eq!(ev.line, 2);
+    }
+
+    #[test]
+    fn table1_l1i_geometry() {
+        let c = Cache::new(HierarchyCfg::table1().l1i);
+        assert_eq!(c.capacity_lines(), 512);
+        assert_eq!(c.sets, 64);
+    }
+
+    #[test]
+    fn invalidate_works() {
+        let mut c = small_cfg(2, 2);
+        c.insert(4, false);
+        assert!(c.invalidate(4));
+        assert!(!c.contains(4));
+        assert!(!c.invalidate(4));
+    }
+
+    #[test]
+    fn prop_capacity_never_exceeded_and_no_duplicates() {
+        prop::check_unit(
+            "cache invariants",
+            40,
+            prop::addr_stream(),
+            |lines| {
+                let mut c = small_cfg(4, 4);
+                for &l in lines {
+                    if !c.access(l) {
+                        c.insert(l, l % 3 == 0);
+                    }
+                    let mut resident: Vec<u64> = c.resident_lines().collect();
+                    assert!(resident.len() <= 16);
+                    resident.sort_unstable();
+                    let before = resident.len();
+                    resident.dedup();
+                    assert_eq!(before, resident.len(), "duplicate resident line");
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_most_recent_k_of_set_always_resident() {
+        // For a single-set cache of W ways, the W most recently touched
+        // distinct lines must all be resident (true-LRU property).
+        prop::check_unit(
+            "lru recency",
+            30,
+            prop::addr_stream(),
+            |lines| {
+                let ways = 4usize;
+                let mut c = small_cfg(1, ways as u32);
+                let mut recent: Vec<u64> = Vec::new();
+                for &l in lines {
+                    if !c.access(l) {
+                        c.insert(l, false);
+                    }
+                    recent.retain(|&x| x != l);
+                    recent.push(l);
+                    let start = recent.len().saturating_sub(ways);
+                    for &r in &recent[start..] {
+                        assert!(c.contains(r), "recently used line {r} evicted early");
+                    }
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,590 @@
+//! The trace-driven simulation engine: decoupled-frontend timing over the
+//! Table-I hierarchy with prefetching, timeliness, pollution, bandwidth,
+//! and the online ML controller in the loop.
+//!
+//! Timing model (DESIGN.md "Simulator timing model"): retiring cycles are
+//! `instrs × base_cpi`; an uncovered L1-I miss stalls the frontend for the
+//! serving level's latency (plus DRAM queueing); late prefetches expose
+//! their residual; bad speculation is a per-instruction expectation. This
+//! reproduces the *relative* speedup/MPKI/accuracy structure the paper
+//! reports without a full OoO pipeline (the paper's own threats-to-
+//! validity note applies the same caveat to ZSim, §X-D).
+
+use super::bandwidth::DramModel;
+use super::cache::Cache;
+use super::inflight::{Inflight, InflightEntry, PrefetchMatch};
+use super::stats::SimStats;
+use crate::config::{PrefetcherKind, SimConfig};
+use crate::ml::controller::OnlineController;
+use crate::prefetch::{self, Candidate, Feedback, Outcome, PairStats, Prefetcher};
+use crate::trace::{Kind, Record};
+use crate::util::hashfx::FxHashMap;
+use std::collections::VecDeque;
+
+/// Pollution attribution horizon: a demand miss on a line evicted by a
+/// prefetch within this many cycles counts as a harmful eviction.
+const POLLUTION_HORIZON: u64 = 50_000;
+/// Victim-tracking capacity (recent L1-I evictions).
+const VICTIM_CAP: usize = 4096;
+/// Oracle lookahead depth (records) for the perfect prefetcher.
+const PERFECT_LOOKAHEAD: usize = 64;
+/// Controller signal refresh period (records).
+const SIGNAL_PERIOD: u64 = 256;
+
+/// Everything a run produces.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub app: String,
+    pub label: String,
+    pub stats: SimStats,
+    pub pair_stats: PairStats,
+    pub metadata_bytes: u64,
+    pub controller: Option<crate::ml::controller::ControllerStats>,
+}
+
+impl SimResult {
+    pub fn ipc(&self) -> f64 {
+        self.stats.ipc()
+    }
+}
+
+pub struct Engine<'t> {
+    cfg: SimConfig,
+    records: &'t [Record],
+    pos: usize,
+    /// Integer cycle counter plus a fractional accumulator.
+    cycle: u64,
+    frac_acc: f64,
+    l1i: Cache,
+    l1d: Cache,
+    l2: Cache,
+    l3: Cache,
+    dram: DramModel,
+    inflight: Inflight,
+    pf: Box<dyn Prefetcher>,
+    pub controller: Option<OnlineController>,
+    stats: SimStats,
+    /// Recent L1-I evictions: line → (evict cycle, evicted-by-prefetch).
+    victims: FxHashMap<u64, (u64, bool)>,
+    victim_fifo: VecDeque<u64>,
+    cand_buf: Vec<Candidate>,
+    nl_last: u64,
+    perfect: bool,
+    /// §VI-A shadow mode: decide + log, never fill.
+    shadow: bool,
+    /// Cooldown marker for the §VII anomaly guardrail.
+    last_anomaly_window: u64,
+    signal_windows: u64,
+    // Controller signal bookkeeping.
+    issued_recent: u32,
+    signal_mark: u64,
+    misses_this_window: u64,
+    misses_prev_window: u64,
+}
+
+impl<'t> Engine<'t> {
+    pub fn new(cfg: SimConfig, records: &'t [Record]) -> Self {
+        let h = cfg.hierarchy;
+        let perfect = matches!(cfg.prefetcher, PrefetcherKind::Perfect);
+        let pf = prefetch::build(&cfg);
+        let controller = cfg
+            .controller
+            .clone()
+            .filter(|c| c.enabled)
+            .map(|c| OnlineController::new(c, cfg.seed));
+        Engine {
+            records,
+            pos: 0,
+            cycle: 0,
+            frac_acc: 0.0,
+            l1i: Cache::new(h.l1i),
+            l1d: Cache::new(h.l1d),
+            l2: Cache::new(h.l2),
+            l3: Cache::new(h.l3),
+            dram: DramModel::new(h.dram_latency, h.dram_bytes_per_cycle),
+            inflight: Inflight::new(),
+            pf,
+            controller,
+            stats: SimStats::default(),
+            victims: FxHashMap::default(),
+            victim_fifo: VecDeque::new(),
+            cand_buf: Vec::with_capacity(16),
+            nl_last: u64::MAX,
+            perfect,
+            shadow: cfg.controller.as_ref().map(|c| c.shadow).unwrap_or(false),
+            last_anomaly_window: 0,
+            signal_windows: 0,
+            issued_recent: 0,
+            signal_mark: 0,
+            misses_this_window: 0,
+            misses_prev_window: 0,
+            cfg,
+        }
+    }
+
+    /// Attach a pre-built controller (e.g. with a PJRT backend).
+    pub fn with_controller(mut self, c: OnlineController) -> Self {
+        self.controller = Some(c);
+        self
+    }
+
+    /// Advance fractional cycles (retire / bad-spec expectations).
+    #[inline]
+    fn advance_frac(&mut self, amount: f64) {
+        self.frac_acc += amount;
+        let whole = self.frac_acc as u64;
+        self.cycle += whole;
+        self.frac_acc -= whole as f64;
+    }
+
+    /// Serve a fill from L2 → L3 → DRAM; fills the touched levels.
+    /// Returns the fill latency.
+    fn serve_fill(&mut self, line: u64, is_demand: bool) -> u64 {
+        if self.l2.access(line) {
+            return self.cfg.hierarchy.l2.latency;
+        }
+        if self.l3.access(line) {
+            self.l2.insert(line, !is_demand);
+            return self.cfg.hierarchy.l3.latency;
+        }
+        let done = self
+            .dram
+            .transfer(self.cycle, self.cfg.hierarchy.l1i.line_b, is_demand);
+        self.l3.insert(line, !is_demand);
+        self.l2.insert(line, !is_demand);
+        done - self.cycle
+    }
+
+    /// Record an L1-I eviction for pollution attribution + CHEIP hooks.
+    fn note_eviction(&mut self, victim: super::cache::Evicted, by_prefetch: bool) {
+        self.pf.on_l1i_evict(victim.line);
+        if victim.was_prefetch_unused {
+            self.stats.pf_useless += 1;
+            if let Some(e) = self.inflight.evict(victim.line) {
+                self.pf.feedback(&Feedback {
+                    src: e.src,
+                    line: victim.line,
+                    outcome: Outcome::Useless,
+                });
+                if let Some(c) = &mut self.controller {
+                    c.on_outcome(victim.line, Outcome::Useless, false);
+                }
+            }
+        }
+        if self.victim_fifo.len() >= VICTIM_CAP {
+            if let Some(old) = self.victim_fifo.pop_front() {
+                self.victims.remove(&old);
+            }
+        }
+        self.victim_fifo.push_back(victim.line);
+        self.victims.insert(victim.line, (self.cycle, by_prefetch));
+    }
+
+    /// Insert into L1-I, wiring eviction bookkeeping.
+    fn l1i_fill(&mut self, line: u64, is_prefetch: bool) {
+        if let Some(victim) = self.l1i.insert(line, is_prefetch) {
+            self.note_eviction(victim, is_prefetch);
+        }
+        self.pf.on_l1i_fill(line, self.cycle);
+    }
+
+    /// Try to issue one prefetch (after dedup). Returns whether issued.
+    fn issue_prefetch(&mut self, line: u64, src: u64) -> bool {
+        if self.l1i.contains(line) || self.inflight.contains(line) {
+            return false;
+        }
+        let latency = self.serve_fill(line, false);
+        let entry = InflightEntry {
+            ready_at: self.cycle + 1 + latency,
+            src,
+            decision: usize::MAX,
+        };
+        self.inflight.issue(line, entry);
+        self.l1i_fill(line, true);
+        self.stats.pf_issued += 1;
+        self.issued_recent += 1;
+        true
+    }
+
+    /// One instruction-fetch record.
+    fn step_fetch(&mut self, rec: Record) {
+        let line = rec.line;
+        self.stats.instrs += rec.instrs as u64;
+        self.stats.l1i_accesses += 1;
+        // Retiring + bad-speculation cycle expectations.
+        let retire = rec.instrs as f64 * self.cfg.base_cpi;
+        let badspec =
+            rec.instrs as f64 * self.cfg.mispredict_rate * self.cfg.mispredict_penalty;
+        self.stats.topdown.retiring += retire;
+        self.stats.topdown.bad_spec += badspec;
+        self.advance_frac(retire + badspec);
+
+        let access = self.l1i.access_rich(line);
+        if access == super::cache::Access::Miss {
+            self.misses_this_window += 1;
+            let (m, entry) = self.inflight.demand(line, self.cycle);
+            match m {
+                PrefetchMatch::Timely => {
+                    self.stats.pf_timely += 1;
+                    let e = entry.unwrap();
+                    self.pf.feedback(&Feedback {
+                        src: e.src,
+                        line,
+                        outcome: Outcome::Timely,
+                    });
+                    if let Some(c) = &mut self.controller {
+                        c.on_outcome(line, Outcome::Timely, false);
+                    }
+                    self.l1i_fill(line, false);
+                }
+                PrefetchMatch::Late { residual } => {
+                    self.stats.pf_late += 1;
+                    self.stats.topdown.frontend += residual as f64;
+                    self.cycle += residual;
+                    let e = entry.unwrap();
+                    self.pf.feedback(&Feedback {
+                        src: e.src,
+                        line,
+                        outcome: Outcome::Late,
+                    });
+                    if let Some(c) = &mut self.controller {
+                        c.on_outcome(line, Outcome::Late, false);
+                    }
+                    self.l1i_fill(line, false);
+                }
+                PrefetchMatch::None => {
+                    // Uncovered demand miss.
+                    self.stats.l1i_demand_misses += 1;
+                    if let Some(&(t, by_pf)) = self.victims.get(&line) {
+                        if by_pf && self.cycle.saturating_sub(t) < POLLUTION_HORIZON {
+                            self.stats.pollution_misses += 1;
+                        }
+                    }
+                    self.pf.on_demand_miss(line, self.cycle);
+                    let fetch_cycle = self.cycle;
+                    let latency = self.serve_fill(line, true);
+                    self.stats.topdown.frontend += latency as f64;
+                    self.cycle += latency;
+                    self.l1i_fill(line, false);
+                    self.pf.on_miss_resolved(line, fetch_cycle, latency);
+                }
+            }
+        } else if access == super::cache::Access::HitPrefetched {
+            // First demand hit on a prefetch-resident line claims the
+            // in-flight entry (no map probe on ordinary hits — §Perf).
+            // Lines fill at issue time, so *this* is where timeliness
+            // resolves: a still-in-flight prefetch exposes its residual.
+            let (m, entry) = self.inflight.demand(line, self.cycle);
+            match (m, entry) {
+                (PrefetchMatch::Timely, Some(e)) => {
+                    self.stats.pf_timely += 1;
+                    self.pf.feedback(&Feedback {
+                        src: e.src,
+                        line,
+                        outcome: Outcome::Timely,
+                    });
+                    if let Some(c) = &mut self.controller {
+                        c.on_outcome(line, Outcome::Timely, false);
+                    }
+                }
+                (PrefetchMatch::Late { residual }, Some(e)) => {
+                    self.stats.pf_late += 1;
+                    self.stats.topdown.frontend += residual as f64;
+                    self.cycle += residual;
+                    self.pf.feedback(&Feedback {
+                        src: e.src,
+                        line,
+                        outcome: Outcome::Late,
+                    });
+                    if let Some(c) = &mut self.controller {
+                        c.on_outcome(line, Outcome::Late, false);
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        // Built-in next-line prefetcher (always on, §X-B).
+        if line != self.nl_last {
+            self.nl_last = line;
+            self.issue_prefetch(line + 1, line);
+        }
+
+        // Main prefetcher candidates, gated by the controller.
+        let mut cand_buf = std::mem::take(&mut self.cand_buf);
+        cand_buf.clear();
+        self.pf.on_fetch(line, self.cycle, &mut cand_buf);
+        for cand in &cand_buf {
+            let issue = match &mut self.controller {
+                Some(c) => c.decide(cand, self.cycle),
+                None => true,
+            };
+            if issue {
+                if self.shadow {
+                    // §VI-A shadow mode: log predicted utility +
+                    // hypothetical bandwidth, issue nothing.
+                    self.stats.shadow_would_issue += 1;
+                    self.stats.shadow_bytes += self.cfg.hierarchy.l1i.line_b as u64;
+                } else {
+                    self.issue_prefetch(cand.line, cand.src);
+                }
+            } else {
+                self.stats.pf_skipped += 1;
+            }
+        }
+        self.cand_buf = cand_buf;
+
+        // Oracle mode: prefetch the literal future.
+        if self.perfect {
+            let end = (self.pos + 1 + PERFECT_LOOKAHEAD).min(self.records.len());
+            for i in self.pos + 1..end {
+                let r = self.records[i];
+                if r.kind == Kind::Fetch {
+                    self.issue_prefetch(r.line, line);
+                }
+            }
+        }
+    }
+
+    /// One data-access record (L1D with its NLP, Table I).
+    fn step_data(&mut self, rec: Record) {
+        self.stats.l1d_accesses += 1;
+        if !self.l1d.access(rec.line) {
+            self.stats.l1d_misses += 1;
+            let latency = self.serve_fill(rec.line, true);
+            let exposed = latency as f64 * self.cfg.backend_expose;
+            self.stats.topdown.backend += exposed;
+            self.advance_frac(exposed);
+            self.l1d.insert(rec.line, false);
+            // L1D next-line prefetch ("with NLP").
+            if !self.l1d.contains(rec.line + 1) {
+                self.serve_fill(rec.line + 1, false);
+                self.l1d.insert(rec.line + 1, true);
+            }
+        }
+    }
+
+    fn refresh_signals(&mut self, ctx_tag: u8) {
+        self.signal_windows += 1;
+        let issued = self.issued_recent;
+        self.issued_recent = 0;
+        let churn = if self.misses_prev_window > 0 {
+            let cur = self.misses_this_window as f64;
+            let prev = self.misses_prev_window as f64;
+            ((cur - prev).abs() / prev).min(1.0) as f32
+        } else {
+            0.0
+        };
+        // §VII guardrail: an anomalous miss burst (miss rate doubling
+        // within a window) decays learned confidence, with a cooldown so
+        // sustained churn doesn't permanently wipe the tables.
+        if churn > 0.75
+            && self.misses_this_window > 16
+            && self.misses_prev_window >= 8
+            && self.signal_windows - self.last_anomaly_window > 16
+        {
+            self.last_anomaly_window = self.signal_windows;
+            self.stats.anomaly_resets += 1;
+            self.pf.on_anomaly();
+        }
+        self.misses_prev_window = self.misses_this_window;
+        self.misses_this_window = 0;
+        let elapsed_kcycles =
+            (self.cycle.saturating_sub(self.signal_mark)).max(1) as f32 / 1000.0;
+        self.signal_mark = self.cycle;
+        let headroom = self.dram.headroom(self.cycle, 1000.0) as f32;
+        if let Some(c) = &mut self.controller {
+            c.set_signals(headroom, issued as f32 / elapsed_kcycles, churn, ctx_tag);
+            c.maybe_train(self.cycle);
+        }
+    }
+
+    /// Run to completion.
+    pub fn run(mut self) -> SimResult {
+        for i in 0..self.records.len() {
+            self.pos = i;
+            let rec = self.records[i];
+            match rec.kind {
+                Kind::Fetch => self.step_fetch(rec),
+                Kind::Load | Kind::Store => self.step_data(rec),
+            }
+            if i as u64 % SIGNAL_PERIOD == SIGNAL_PERIOD - 1 {
+                self.refresh_signals(rec.ctx);
+            }
+        }
+        self.stats.cycles = self.cycle as f64 + self.frac_acc;
+        self.stats.dram_bytes = self.dram.bytes_total;
+        self.stats.dram_transfers = self.dram.transfers;
+        SimResult {
+            app: String::new(),
+            label: self.cfg.prefetcher.label(),
+            stats: self.stats,
+            pair_stats: self.pf.pair_stats(),
+            metadata_bytes: self.pf.metadata_bytes(),
+            controller: self.controller.as_ref().map(|c| c.stats),
+        }
+    }
+}
+
+/// Convenience: run one config over records.
+pub fn run(cfg: &SimConfig, records: &[Record]) -> SimResult {
+    Engine::new(cfg.clone(), records).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ControllerCfg, PrefetcherKind, SimConfig};
+    use crate::trace::gen::{apps, generate_records};
+
+    fn trace(name: &str, n: u64) -> Vec<Record> {
+        generate_records(&apps::app(name).unwrap(), 7, n)
+    }
+
+    fn run_kind(records: &[Record], kind: PrefetcherKind) -> SimResult {
+        let cfg = SimConfig {
+            prefetcher: kind,
+            ..Default::default()
+        };
+        run(&cfg, records)
+    }
+
+    #[test]
+    fn sequential_trace_nl_covers_everything() {
+        let recs: Vec<Record> = (0..20_000u64).map(|i| Record::fetch(i, 16, 0)).collect();
+        let r = run_kind(&recs, PrefetcherKind::NextLineOnly);
+        assert!(
+            r.stats.l1i_demand_misses < 20,
+            "uncovered misses on a pure stream: {}",
+            r.stats.l1i_demand_misses
+        );
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let recs = trace("serde", 30_000);
+        let a = run_kind(&recs, PrefetcherKind::Eip { entries: 256 });
+        let b = run_kind(&recs, PrefetcherKind::Eip { entries: 256 });
+        assert_eq!(a.stats.cycles, b.stats.cycles);
+        assert_eq!(a.stats.pf_issued, b.stats.pf_issued);
+    }
+
+    #[test]
+    fn eip_beats_nl_baseline_on_microservice_trace() {
+        let recs = trace("websearch", 200_000);
+        let nl = run_kind(&recs, PrefetcherKind::NextLineOnly);
+        let eip = run_kind(&recs, PrefetcherKind::Eip { entries: 256 });
+        assert!(
+            eip.ipc() > nl.ipc(),
+            "EIP must beat NL: {} vs {}",
+            eip.ipc(),
+            nl.ipc()
+        );
+        assert!(eip.stats.mpki() < nl.stats.mpki());
+    }
+
+    #[test]
+    fn perfect_is_upper_bound() {
+        let recs = trace("admission", 150_000);
+        let nl = run_kind(&recs, PrefetcherKind::NextLineOnly);
+        let eip = run_kind(&recs, PrefetcherKind::Eip { entries: 256 });
+        let perfect = run_kind(&recs, PrefetcherKind::Perfect);
+        assert!(perfect.ipc() >= eip.ipc());
+        assert!(perfect.ipc() > nl.ipc() * 1.01);
+    }
+
+    #[test]
+    fn ceip_close_to_eip_with_less_metadata() {
+        let recs = trace("websearch", 200_000);
+        let nl = run_kind(&recs, PrefetcherKind::NextLineOnly);
+        let eip = run_kind(&recs, PrefetcherKind::Eip { entries: 256 });
+        let ceip = run_kind(
+            &recs,
+            PrefetcherKind::Ceip { entries: 256, window: 8, whole_window: true },
+        );
+        assert!(ceip.metadata_bytes < eip.metadata_bytes / 3);
+        let eip_speedup = eip.ipc() / nl.ipc();
+        let ceip_speedup = ceip.ipc() / nl.ipc();
+        assert!(ceip_speedup > 1.0, "CEIP must beat the NL baseline");
+        // Paper §X-C: CEIP within a few percent of EIP.
+        assert!(
+            ceip_speedup > eip_speedup * 0.90,
+            "CEIP too far below EIP: {ceip_speedup} vs {eip_speedup}"
+        );
+    }
+
+    #[test]
+    fn prefetch_accounting_consistent() {
+        let recs = trace("logging", 100_000);
+        let r = run_kind(
+            &recs,
+            PrefetcherKind::Ceip { entries: 256, window: 8, whole_window: true },
+        );
+        let used = r.stats.pf_timely + r.stats.pf_late;
+        assert!(used <= r.stats.pf_issued);
+        assert!(r.stats.accuracy() <= 1.0);
+        assert!(r.stats.coverage() <= 1.0);
+        assert!(r.stats.pf_issued > 0);
+    }
+
+    #[test]
+    fn controller_reduces_useless_prefetches() {
+        let recs = trace("abscheduler-java", 200_000);
+        let base_cfg = SimConfig {
+            prefetcher: PrefetcherKind::Ceip { entries: 256, window: 8, whole_window: true },
+            ..Default::default()
+        };
+        let no_ctrl = run(&base_cfg, &recs);
+        let with_ctrl = run(
+            &SimConfig {
+                controller: Some(ControllerCfg {
+                    train_interval_cycles: 100_000,
+                    ..Default::default()
+                }),
+                ..base_cfg
+            },
+            &recs,
+        );
+        assert!(with_ctrl.stats.pf_skipped > 0, "controller never skipped");
+        assert!(
+            with_ctrl.stats.accuracy() >= no_ctrl.stats.accuracy() * 0.95,
+            "controller must not destroy accuracy: {} vs {}",
+            with_ctrl.stats.accuracy(),
+            no_ctrl.stats.accuracy()
+        );
+    }
+
+    #[test]
+    fn topdown_buckets_populated() {
+        let recs = trace("websearch", 50_000);
+        let r = run_kind(&recs, PrefetcherKind::NextLineOnly);
+        let t = &r.stats.topdown;
+        assert!(t.retiring > 0.0);
+        assert!(t.frontend > 0.0, "microservice trace must have I-stalls");
+        assert!(t.backend > 0.0);
+        assert!(t.bad_spec > 0.0);
+        // Cycle accounting closes against the cycle counter.
+        assert!((t.total() - r.stats.cycles).abs() <= 1.0 + r.stats.cycles * 1e-9);
+    }
+
+    #[test]
+    fn bandwidth_accounted() {
+        let recs = trace("kvstore-go", 50_000);
+        let r = run_kind(&recs, PrefetcherKind::Eip { entries: 256 });
+        assert!(r.stats.dram_bytes > 0);
+        assert!(r.stats.dram_bytes_per_cycle() < 10.24, "cannot exceed channel");
+    }
+
+    #[test]
+    fn cheip_runs_and_tracks_migrations() {
+        let recs = trace("social", 150_000);
+        let r = run_kind(
+            &recs,
+            PrefetcherKind::Cheip { vt_entries: 2048, window: 8, whole_window: true },
+        );
+        assert!(r.stats.pf_issued > 0, "CHEIP issued nothing");
+        assert!(r.ipc() > 0.0);
+        // §V budget: ~24.75 KB total.
+        assert_eq!(r.metadata_bytes, 2304 + 22_272 + 624);
+    }
+}

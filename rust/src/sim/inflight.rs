@@ -1,0 +1,152 @@
+//! In-flight prefetch tracking: models prefetch timeliness (paper Fig 3 —
+//! "timely prefetching avoids late arrivals and early pollution").
+//!
+//! A prefetch issued at cycle C with fill latency L is *timely* for a
+//! demand at C' ≥ C+L (fully hidden), *late* for C < C' < C+L (exposes the
+//! residual L-(C'-C)), and *unused* if evicted before any demand.
+
+use crate::util::hashfx::FxHashMap;
+
+/// Outcome of matching a demand access against in-flight prefetches.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PrefetchMatch {
+    /// No prefetch in flight for this line.
+    None,
+    /// Prefetch completed before the demand: full hit.
+    Timely,
+    /// Prefetch still in flight: demand stalls `residual` cycles.
+    Late { residual: u64 },
+}
+
+/// Metadata kept per in-flight (or completed-but-unclaimed) prefetch.
+#[derive(Clone, Copy, Debug)]
+pub struct InflightEntry {
+    pub ready_at: u64,
+    /// Source (trigger) line — routed back to the prefetcher and the ML
+    /// controller for confidence/reward updates.
+    pub src: u64,
+    /// Controller decision id (usize::MAX = not gated).
+    pub decision: usize,
+}
+
+/// Tracks prefetches from issue until first demand use (or eviction).
+#[derive(Default)]
+pub struct Inflight {
+    map: FxHashMap<u64, InflightEntry>,
+}
+
+impl Inflight {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register an issued prefetch. Returns false if one is already in
+    /// flight for the line (duplicate issue — caller should not re-issue).
+    pub fn issue(&mut self, line: u64, entry: InflightEntry) -> bool {
+        if self.map.contains_key(&line) {
+            return false;
+        }
+        self.map.insert(line, entry);
+        true
+    }
+
+    pub fn contains(&self, line: u64) -> bool {
+        self.map.contains_key(&line)
+    }
+
+    /// Match a demand access at `now`; removes the entry when matched.
+    pub fn demand(&mut self, line: u64, now: u64) -> (PrefetchMatch, Option<InflightEntry>) {
+        match self.map.remove(&line) {
+            None => (PrefetchMatch::None, None),
+            Some(e) => {
+                if now >= e.ready_at {
+                    (PrefetchMatch::Timely, Some(e))
+                } else {
+                    (
+                        PrefetchMatch::Late {
+                            residual: e.ready_at - now,
+                        },
+                        Some(e),
+                    )
+                }
+            }
+        }
+    }
+
+    /// Drop tracking for an evicted line (prefetched but never used).
+    pub fn evict(&mut self, line: u64) -> Option<InflightEntry> {
+        self.map.remove(&line)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(ready: u64) -> InflightEntry {
+        InflightEntry {
+            ready_at: ready,
+            src: 1,
+            decision: usize::MAX,
+        }
+    }
+
+    #[test]
+    fn timely_when_demand_after_ready() {
+        let mut inf = Inflight::new();
+        inf.issue(10, entry(100));
+        let (m, e) = inf.demand(10, 150);
+        assert_eq!(m, PrefetchMatch::Timely);
+        assert_eq!(e.unwrap().src, 1);
+        assert!(inf.is_empty());
+    }
+
+    #[test]
+    fn late_exposes_residual() {
+        let mut inf = Inflight::new();
+        inf.issue(10, entry(100));
+        let (m, _) = inf.demand(10, 60);
+        assert_eq!(m, PrefetchMatch::Late { residual: 40 });
+    }
+
+    #[test]
+    fn exact_boundary_is_timely() {
+        let mut inf = Inflight::new();
+        inf.issue(10, entry(100));
+        let (m, _) = inf.demand(10, 100);
+        assert_eq!(m, PrefetchMatch::Timely);
+    }
+
+    #[test]
+    fn no_match_for_unknown_line() {
+        let mut inf = Inflight::new();
+        let (m, e) = inf.demand(99, 5);
+        assert_eq!(m, PrefetchMatch::None);
+        assert!(e.is_none());
+    }
+
+    #[test]
+    fn duplicate_issue_rejected() {
+        let mut inf = Inflight::new();
+        assert!(inf.issue(10, entry(100)));
+        assert!(!inf.issue(10, entry(200)));
+        assert_eq!(inf.len(), 1);
+    }
+
+    #[test]
+    fn evict_removes() {
+        let mut inf = Inflight::new();
+        inf.issue(10, entry(100));
+        assert!(inf.evict(10).is_some());
+        let (m, _) = inf.demand(10, 500);
+        assert_eq!(m, PrefetchMatch::None);
+    }
+}

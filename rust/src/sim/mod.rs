@@ -1,0 +1,8 @@
+//! ZSim-like trace-driven timing simulation (the evaluation substrate —
+//! see DESIGN.md "Substitutions" for the fidelity argument).
+
+pub mod bandwidth;
+pub mod cache;
+pub mod engine;
+pub mod inflight;
+pub mod stats;

@@ -1,0 +1,185 @@
+//! Simulation statistics: MPKI, prefetch accuracy/coverage/timeliness,
+//! top-down cycle buckets (Fig 1), and bandwidth — the quantities every
+//! figure in the paper's evaluation is built from.
+
+/// Top-down breakdown (Fig 1): where cycles went.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TopDown {
+    pub retiring: f64,
+    pub frontend: f64,
+    pub backend: f64,
+    pub bad_spec: f64,
+}
+
+impl TopDown {
+    pub fn total(&self) -> f64 {
+        self.retiring + self.frontend + self.backend + self.bad_spec
+    }
+
+    /// Fractions summing to 1 (or zeros when empty).
+    pub fn fractions(&self) -> [f64; 4] {
+        let t = self.total();
+        if t <= 0.0 {
+            return [0.0; 4];
+        }
+        [
+            self.retiring / t,
+            self.frontend / t,
+            self.backend / t,
+            self.bad_spec / t,
+        ]
+    }
+}
+
+/// Counters accumulated by the engine during a run.
+#[derive(Clone, Debug, Default)]
+pub struct SimStats {
+    pub instrs: u64,
+    pub cycles: f64,
+    // L1I demand behaviour.
+    pub l1i_accesses: u64,
+    /// Demand misses that no prefetch covered (full latency exposed).
+    pub l1i_demand_misses: u64,
+    /// Demand accesses converted to hits by a timely prefetch.
+    pub pf_timely: u64,
+    /// Demand accesses partially covered by a late prefetch.
+    pub pf_late: u64,
+    /// Prefetches issued.
+    pub pf_issued: u64,
+    /// Prefetched lines evicted before any demand use.
+    pub pf_useless: u64,
+    /// Demand misses on lines recently evicted by a prefetch fill
+    /// (harmful evictions / pollution).
+    pub pollution_misses: u64,
+    /// Candidates suppressed by the ML controller.
+    pub pf_skipped: u64,
+    /// Shadow mode (§VI-A): candidates the controller *would* have issued,
+    /// and the bandwidth they would have consumed.
+    pub shadow_would_issue: u64,
+    pub shadow_bytes: u64,
+    /// Anomalous-miss-burst guardrail activations (§VII).
+    pub anomaly_resets: u64,
+    // L1D.
+    pub l1d_accesses: u64,
+    pub l1d_misses: u64,
+    // Cycle buckets.
+    pub topdown: TopDown,
+    // Bandwidth.
+    pub dram_bytes: u64,
+    pub dram_transfers: u64,
+}
+
+impl SimStats {
+    /// Instruction misses per kilo-instruction. Late-covered accesses still
+    /// count as misses (the fetch stalled), timely-covered do not.
+    pub fn mpki(&self) -> f64 {
+        if self.instrs == 0 {
+            return 0.0;
+        }
+        (self.l1i_demand_misses + self.pf_late) as f64 * 1000.0 / self.instrs as f64
+    }
+
+    pub fn l1d_mpki(&self) -> f64 {
+        if self.instrs == 0 {
+            return 0.0;
+        }
+        self.l1d_misses as f64 * 1000.0 / self.instrs as f64
+    }
+
+    pub fn ipc(&self) -> f64 {
+        if self.cycles <= 0.0 {
+            0.0
+        } else {
+            self.instrs as f64 / self.cycles
+        }
+    }
+
+    /// Useful prefetches / issued prefetches (Fig 12).
+    pub fn accuracy(&self) -> f64 {
+        if self.pf_issued == 0 {
+            return 0.0;
+        }
+        (self.pf_timely + self.pf_late) as f64 / self.pf_issued as f64
+    }
+
+    /// Fraction of would-be misses covered (timely or late).
+    pub fn coverage(&self) -> f64 {
+        let would_miss = self.l1i_demand_misses + self.pf_timely + self.pf_late;
+        if would_miss == 0 {
+            return 0.0;
+        }
+        (self.pf_timely + self.pf_late) as f64 / would_miss as f64
+    }
+
+    /// Of useful prefetches, the fraction that arrived on time.
+    pub fn timeliness(&self) -> f64 {
+        let useful = self.pf_timely + self.pf_late;
+        if useful == 0 {
+            return 0.0;
+        }
+        self.pf_timely as f64 / useful as f64
+    }
+
+    pub fn dram_bytes_per_cycle(&self) -> f64 {
+        if self.cycles <= 0.0 {
+            0.0
+        } else {
+            self.dram_bytes as f64 / self.cycles
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mpki_counts_late_as_miss() {
+        let s = SimStats {
+            instrs: 10_000,
+            l1i_demand_misses: 50,
+            pf_late: 10,
+            pf_timely: 40,
+            ..Default::default()
+        };
+        assert!((s.mpki() - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accuracy_and_coverage() {
+        let s = SimStats {
+            pf_issued: 100,
+            pf_timely: 60,
+            pf_late: 10,
+            pf_useless: 30,
+            l1i_demand_misses: 30,
+            ..Default::default()
+        };
+        assert!((s.accuracy() - 0.7).abs() < 1e-9);
+        assert!((s.coverage() - 0.7).abs() < 1e-9);
+        assert!((s.timeliness() - 6.0 / 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_division_safe() {
+        let s = SimStats::default();
+        assert_eq!(s.mpki(), 0.0);
+        assert_eq!(s.ipc(), 0.0);
+        assert_eq!(s.accuracy(), 0.0);
+        assert_eq!(s.coverage(), 0.0);
+        assert_eq!(s.timeliness(), 0.0);
+    }
+
+    #[test]
+    fn topdown_fractions_sum_to_one() {
+        let t = TopDown {
+            retiring: 25.0,
+            frontend: 50.0,
+            backend: 20.0,
+            bad_spec: 5.0,
+        };
+        let f = t.fractions();
+        assert!((f.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((f[1] - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,364 @@
+//! Compact binary trace codec.
+//!
+//! Format (little-endian):
+//! ```text
+//!   magic   "SLFT"            4 bytes
+//!   version u32               = 1
+//!   line_bytes u32            = 64
+//!   seed    u64
+//!   app     u16 len + utf-8
+//!   records u64               count
+//!   stream: per record
+//!     head byte: kind(2 LSBs) | has_ctx_change(bit 2) | instrs-follow(bit 3)
+//!     zigzag-varint line delta vs previous record's line (any kind)
+//!     [ctx u8 if changed]  [instrs u8 if !=16 for Fetch]
+//! ```
+//! Fetches dominated by +1 deltas and instrs==16 encode to 2 bytes.
+
+use super::{Kind, Record, TraceMeta};
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+
+const MAGIC: &[u8; 4] = b"SLFT";
+const VERSION: u32 = 1;
+
+fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+fn write_varint(out: &mut impl Write, mut v: u64) -> Result<()> {
+    loop {
+        let byte = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.write_all(&[byte])?;
+            return Ok(());
+        }
+        out.write_all(&[byte | 0x80])?;
+    }
+}
+
+fn read_varint(inp: &mut impl Read) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0;
+    loop {
+        let mut b = [0u8; 1];
+        inp.read_exact(&mut b)?;
+        v |= ((b[0] & 0x7F) as u64) << shift;
+        if b[0] & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+        if shift >= 64 {
+            bail!("varint too long");
+        }
+    }
+}
+
+/// Write a trace (meta + records) to any writer.
+pub fn write_trace(
+    w: &mut impl Write,
+    meta: &TraceMeta,
+    records: impl Iterator<Item = Record>,
+    count_hint: u64,
+) -> Result<u64> {
+    let mut out = BufWriter::new(w);
+    out.write_all(MAGIC)?;
+    out.write_all(&VERSION.to_le_bytes())?;
+    out.write_all(&meta.line_bytes.to_le_bytes())?;
+    out.write_all(&meta.seed.to_le_bytes())?;
+    let name = meta.app.as_bytes();
+    out.write_all(&(name.len() as u16).to_le_bytes())?;
+    out.write_all(name)?;
+    // Record count is written up front from the hint; the reader trusts it.
+    out.write_all(&count_hint.to_le_bytes())?;
+
+    let mut prev_line = 0u64;
+    let mut prev_ctx = 0u8;
+    let mut written = 0u64;
+    for r in records {
+        let kind_bits = match r.kind {
+            Kind::Fetch => 0u8,
+            Kind::Load => 1,
+            Kind::Store => 2,
+        };
+        let ctx_changed = r.ctx != prev_ctx;
+        let nonstd_instrs = r.kind == Kind::Fetch && r.instrs != 16;
+        let head = kind_bits | (u8::from(ctx_changed) << 2) | (u8::from(nonstd_instrs) << 3);
+        out.write_all(&[head])?;
+        write_varint(&mut out, zigzag(r.line as i64 - prev_line as i64))?;
+        if ctx_changed {
+            out.write_all(&[r.ctx])?;
+            prev_ctx = r.ctx;
+        }
+        if nonstd_instrs {
+            out.write_all(&[r.instrs])?;
+        }
+        prev_line = r.line;
+        written += 1;
+    }
+    out.flush()?;
+    if written != count_hint {
+        bail!("record count mismatch: wrote {written}, hint {count_hint}");
+    }
+    Ok(written)
+}
+
+/// Streaming trace reader.
+pub struct TraceReader<R: Read> {
+    inp: BufReader<R>,
+    pub meta: TraceMeta,
+    remaining: u64,
+    prev_line: u64,
+    prev_ctx: u8,
+}
+
+impl<R: Read> TraceReader<R> {
+    pub fn new(r: R) -> Result<Self> {
+        let mut inp = BufReader::new(r);
+        let mut magic = [0u8; 4];
+        inp.read_exact(&mut magic).context("reading magic")?;
+        if &magic != MAGIC {
+            bail!("not a SLFT trace (bad magic)");
+        }
+        let mut u32b = [0u8; 4];
+        inp.read_exact(&mut u32b)?;
+        let version = u32::from_le_bytes(u32b);
+        if version != VERSION {
+            bail!("unsupported trace version {version}");
+        }
+        inp.read_exact(&mut u32b)?;
+        let line_bytes = u32::from_le_bytes(u32b);
+        let mut u64b = [0u8; 8];
+        inp.read_exact(&mut u64b)?;
+        let seed = u64::from_le_bytes(u64b);
+        let mut u16b = [0u8; 2];
+        inp.read_exact(&mut u16b)?;
+        let name_len = u16::from_le_bytes(u16b) as usize;
+        let mut name = vec![0u8; name_len];
+        inp.read_exact(&mut name)?;
+        inp.read_exact(&mut u64b)?;
+        let records = u64::from_le_bytes(u64b);
+        Ok(TraceReader {
+            inp,
+            meta: TraceMeta {
+                app: String::from_utf8(name).context("app name utf-8")?,
+                seed,
+                line_bytes,
+                records,
+            },
+            remaining: records,
+            prev_line: 0,
+            prev_ctx: 0,
+        })
+    }
+}
+
+impl<R: Read> Iterator for TraceReader<R> {
+    type Item = Result<Record>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let mut head = [0u8; 1];
+        if let Err(e) = self.inp.read_exact(&mut head) {
+            return Some(Err(e.into()));
+        }
+        let kind = match head[0] & 0b11 {
+            0 => Kind::Fetch,
+            1 => Kind::Load,
+            2 => Kind::Store,
+            _ => return Some(Err(anyhow::anyhow!("bad kind bits"))),
+        };
+        let delta = match read_varint(&mut self.inp) {
+            Ok(v) => unzigzag(v),
+            Err(e) => return Some(Err(e)),
+        };
+        let line = (self.prev_line as i64 + delta) as u64;
+        self.prev_line = line;
+        if head[0] & 0b100 != 0 {
+            let mut c = [0u8; 1];
+            if let Err(e) = self.inp.read_exact(&mut c) {
+                return Some(Err(e.into()));
+            }
+            self.prev_ctx = c[0];
+        }
+        let instrs = if kind == Kind::Fetch {
+            if head[0] & 0b1000 != 0 {
+                let mut c = [0u8; 1];
+                if let Err(e) = self.inp.read_exact(&mut c) {
+                    return Some(Err(e.into()));
+                }
+                c[0]
+            } else {
+                16
+            }
+        } else {
+            0
+        };
+        Some(Ok(Record {
+            kind,
+            line,
+            instrs,
+            ctx: self.prev_ctx,
+        }))
+    }
+}
+
+/// Convenience: write records to a file path.
+pub fn write_trace_file(path: &std::path::Path, meta: &TraceMeta, records: &[Record]) -> Result<()> {
+    let mut f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    write_trace(&mut f, meta, records.iter().copied(), records.len() as u64)?;
+    Ok(())
+}
+
+/// Convenience: read an entire trace file.
+pub fn read_trace_file(path: &std::path::Path) -> Result<(TraceMeta, Vec<Record>)> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let reader = TraceReader::new(f)?;
+    let meta = reader.meta.clone();
+    let records: Result<Vec<_>> = reader.collect();
+    Ok((meta, records?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn meta(n: u64) -> TraceMeta {
+        TraceMeta {
+            app: "unit".into(),
+            seed: 7,
+            line_bytes: 64,
+            records: n,
+        }
+    }
+
+    #[test]
+    fn zigzag_roundtrip() {
+        for v in [0i64, 1, -1, i64::MAX, i64::MIN, 12345, -98765] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+    }
+
+    #[test]
+    fn varint_roundtrip() {
+        let mut buf = Vec::new();
+        let vals = [0u64, 1, 127, 128, 300, u64::MAX, 1 << 35];
+        for v in vals {
+            write_varint(&mut buf, v).unwrap();
+        }
+        let mut cur = std::io::Cursor::new(buf);
+        for v in vals {
+            assert_eq!(read_varint(&mut cur).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn empty_trace_roundtrip() {
+        let mut buf = Vec::new();
+        write_trace(&mut buf, &meta(0), std::iter::empty(), 0).unwrap();
+        let r = TraceReader::new(std::io::Cursor::new(buf)).unwrap();
+        assert_eq!(r.meta.app, "unit");
+        assert_eq!(r.count(), 0);
+    }
+
+    #[test]
+    fn trace_roundtrip_mixed_kinds() {
+        let recs = vec![
+            Record::fetch(100, 16, 0),
+            Record::fetch(101, 16, 0),
+            Record::load(50_000, 0),
+            Record::fetch(102, 7, 3),
+            Record::store(50_001, 3),
+            Record::fetch(5, 16, 3),
+        ];
+        let mut buf = Vec::new();
+        write_trace(&mut buf, &meta(recs.len() as u64), recs.iter().copied(), 6).unwrap();
+        let r = TraceReader::new(std::io::Cursor::new(buf)).unwrap();
+        let got: Vec<Record> = r.map(|x| x.unwrap()).collect();
+        assert_eq!(got, recs);
+    }
+
+    #[test]
+    fn sequential_fetches_are_two_bytes() {
+        let recs: Vec<Record> = (0..1000).map(|i| Record::fetch(1000 + i, 16, 0)).collect();
+        let mut buf = Vec::new();
+        write_trace(&mut buf, &meta(1000), recs.iter().copied(), 1000).unwrap();
+        let header = 4 + 4 + 4 + 8 + 2 + 4 + 8;
+        // First record carries a larger delta; the rest are head+delta(+1).
+        assert!(buf.len() <= header + 3 + 999 * 2, "len {}", buf.len());
+    }
+
+    #[test]
+    fn count_mismatch_is_error() {
+        let mut buf = Vec::new();
+        let recs = vec![Record::fetch(1, 16, 0)];
+        assert!(write_trace(&mut buf, &meta(1), recs.into_iter(), 2).is_err());
+    }
+
+    #[test]
+    fn truncated_stream_is_error_not_panic() {
+        let recs = vec![Record::fetch(100, 16, 0), Record::fetch(1 << 40, 16, 0)];
+        let mut buf = Vec::new();
+        write_trace(&mut buf, &meta(2), recs.into_iter(), 2).unwrap();
+        buf.truncate(buf.len() - 2);
+        let r = TraceReader::new(std::io::Cursor::new(buf)).unwrap();
+        let out: Vec<_> = r.collect();
+        assert!(out.last().unwrap().is_err());
+    }
+
+    #[test]
+    fn prop_random_traces_roundtrip() {
+        prop::check_unit(
+            "codec roundtrip",
+            60,
+            |r: &mut Rng, size| {
+                (0..size * 3)
+                    .map(|_| {
+                        let line = r.range(0, 1 << 44);
+                        match r.below(3) {
+                            0 => Record::fetch(line, r.range(1, 17) as u8, r.below(8) as u8),
+                            1 => Record::load(line, r.below(8) as u8),
+                            _ => Record::store(line, r.below(8) as u8),
+                        }
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |recs| {
+                let mut buf = Vec::new();
+                write_trace(
+                    &mut buf,
+                    &meta(recs.len() as u64),
+                    recs.iter().copied(),
+                    recs.len() as u64,
+                )
+                .unwrap();
+                let r = TraceReader::new(std::io::Cursor::new(buf)).unwrap();
+                let got: Vec<Record> = r.map(|x| x.unwrap()).collect();
+                assert_eq!(&got, recs);
+            },
+        );
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("slofetch_codec_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.slft");
+        let recs = vec![Record::fetch(42, 16, 1), Record::load(7, 1)];
+        write_trace_file(&path, &meta(2), &recs).unwrap();
+        let (m, got) = read_trace_file(&path).unwrap();
+        assert_eq!(m.app, "unit");
+        assert_eq!(got, recs);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,233 @@
+//! The eleven named workloads of Fig 2, as generator presets.
+//!
+//! The paper stratifies its service mix by language runtime (C/C++, Java,
+//! Go) and library stack (RPC, serialization, crypto) (§X-A). Each preset
+//! tunes the layout/walk/churn parameters to produce a distinct I-footprint
+//! and MPKI profile: managed runtimes get *far* code regions (JIT analogue
+//! → more >20-bit deltas, lower Fig 7 share), logging/serde get long
+//! fall-through chains (dense windows), crypto gets tight loops (small
+//! footprint, low MPKI).
+
+use super::churn::ChurnSchedule;
+use super::layout::LayoutParams;
+use super::walk::WalkParams;
+
+/// Language runtime of a service (affects layout statistics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Runtime {
+    Cpp,
+    Java,
+    Go,
+}
+
+/// A complete per-app generation spec.
+#[derive(Clone, Debug)]
+pub struct AppSpec {
+    pub name: &'static str,
+    pub runtime: Runtime,
+    pub layout: LayoutParams,
+    pub walk: WalkParams,
+    /// Churn period in records (0 = steady state) and redirect fraction.
+    pub churn_period: u64,
+    pub churn_redirect: f64,
+}
+
+impl AppSpec {
+    pub fn churn(&self, seed: u64) -> ChurnSchedule {
+        if self.churn_period == 0 {
+            ChurnSchedule::none()
+        } else {
+            ChurnSchedule::periodic(
+                self.churn_period,
+                self.churn_redirect,
+                self.layout.handler_types,
+                seed,
+            )
+        }
+    }
+}
+
+fn layout(
+    libraries: usize,
+    funcs_per_lib: usize,
+    mean_blocks: usize,
+    far_frac: f64,
+    handlers: usize,
+) -> LayoutParams {
+    LayoutParams {
+        libraries,
+        funcs_per_lib,
+        mean_blocks,
+        far_lib_frac: far_frac,
+        mean_callees: 3,
+        intra_lib_call_p: 0.75,
+        handler_types: handlers,
+        data_lines: 1 << 16,
+    }
+}
+
+fn walk(fall_through: f64, call_p: f64, depth: usize, data_p: f64, chain: usize) -> WalkParams {
+    WalkParams {
+        fall_through_p: fall_through,
+        call_p,
+        max_depth: depth,
+        data_access_p: data_p,
+        store_frac: 0.3,
+        chain_len: chain,
+        // Big-footprint services take more cold paths; scaled with depth.
+        cold_call_p: 0.03 + 0.002 * depth as f64,
+    }
+}
+
+/// All eleven applications (Fig 2). Order is the reporting order.
+pub fn all_apps() -> Vec<AppSpec> {
+    vec![
+        AppSpec {
+            // Deep stack, huge footprint — the Fig 1 "web search binary".
+            name: "websearch",
+            runtime: Runtime::Cpp,
+            layout: layout(8, 260, 7, 0.12, 6),
+            walk: walk(0.68, 0.45, 28, 0.35, 4),
+            churn_period: 400_000,
+            churn_redirect: 0.25,
+        },
+        AppSpec {
+            name: "social",
+            runtime: Runtime::Cpp,
+            layout: layout(7, 220, 6, 0.14, 5),
+            walk: walk(0.70, 0.40, 24, 0.32, 4),
+            churn_period: 500_000,
+            churn_redirect: 0.2,
+        },
+        AppSpec {
+            // Managed runtime: JIT regions far from main text.
+            name: "retail-java",
+            runtime: Runtime::Java,
+            layout: layout(9, 240, 6, 0.33, 5),
+            walk: walk(0.66, 0.42, 26, 0.34, 4),
+            churn_period: 350_000,
+            churn_redirect: 0.3,
+        },
+        AppSpec {
+            name: "mlserve",
+            runtime: Runtime::Cpp,
+            layout: layout(6, 180, 8, 0.17, 4),
+            walk: walk(0.74, 0.35, 20, 0.40, 3),
+            churn_period: 600_000,
+            churn_redirect: 0.15,
+        },
+        AppSpec {
+            name: "featurestore-go",
+            runtime: Runtime::Go,
+            layout: layout(7, 200, 5, 0.28, 4),
+            walk: walk(0.69, 0.38, 22, 0.42, 3),
+            churn_period: 450_000,
+            churn_redirect: 0.25,
+        },
+        AppSpec {
+            // Control-plane admission: modest footprint, heavy RPC churn.
+            name: "admission",
+            runtime: Runtime::Cpp,
+            layout: layout(5, 140, 5, 0.10, 6),
+            walk: walk(0.71, 0.36, 18, 0.28, 5),
+            churn_period: 300_000,
+            churn_redirect: 0.3,
+        },
+        AppSpec {
+            // Logging pipeline: long fall-through formatting chains.
+            name: "logging",
+            runtime: Runtime::Cpp,
+            layout: layout(5, 160, 9, 0.08, 3),
+            walk: walk(0.82, 0.25, 14, 0.36, 2),
+            churn_period: 0,
+            churn_redirect: 0.0,
+        },
+        AppSpec {
+            // Crypto: tight loops over small hot code — lowest MPKI.
+            name: "crypto",
+            runtime: Runtime::Cpp,
+            layout: layout(3, 60, 4, 0.05, 2),
+            walk: walk(0.78, 0.18, 8, 0.45, 2),
+            churn_period: 0,
+            churn_redirect: 0.0,
+        },
+        AppSpec {
+            // Serialization: dense sequential encode/decode loops.
+            name: "serde",
+            runtime: Runtime::Cpp,
+            layout: layout(4, 120, 8, 0.07, 3),
+            walk: walk(0.80, 0.28, 12, 0.38, 2),
+            churn_period: 0,
+            churn_redirect: 0.0,
+        },
+        AppSpec {
+            name: "kvstore-go",
+            runtime: Runtime::Go,
+            layout: layout(6, 170, 5, 0.30, 4),
+            walk: walk(0.70, 0.33, 18, 0.44, 3),
+            churn_period: 550_000,
+            churn_redirect: 0.2,
+        },
+        AppSpec {
+            // A/B scheduler: branchy policy evaluation, frequent toggles.
+            name: "abscheduler-java",
+            runtime: Runtime::Java,
+            layout: layout(8, 210, 5, 0.35, 6),
+            walk: walk(0.62, 0.44, 24, 0.30, 5),
+            churn_period: 250_000,
+            churn_redirect: 0.35,
+        },
+    ]
+}
+
+/// Look up an app by name.
+pub fn app(name: &str) -> Option<AppSpec> {
+    all_apps().into_iter().find(|a| a.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exactly_eleven_apps() {
+        assert_eq!(all_apps().len(), 11);
+    }
+
+    #[test]
+    fn names_unique() {
+        let apps = all_apps();
+        let mut names: Vec<_> = apps.iter().map(|a| a.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 11);
+    }
+
+    #[test]
+    fn lookup_works() {
+        assert!(app("websearch").is_some());
+        assert!(app("crypto").is_some());
+        assert!(app("nonexistent").is_none());
+    }
+
+    #[test]
+    fn managed_runtimes_have_more_far_code() {
+        let apps = all_apps();
+        let avg = |rt: Runtime| {
+            let (s, n) = apps
+                .iter()
+                .filter(|a| a.runtime == rt)
+                .fold((0.0, 0), |(s, n), a| (s + a.layout.far_lib_frac, n + 1));
+            s / n as f64
+        };
+        assert!(avg(Runtime::Java) > avg(Runtime::Cpp));
+        assert!(avg(Runtime::Go) > avg(Runtime::Cpp));
+    }
+
+    #[test]
+    fn steady_state_apps_use_no_churn() {
+        let a = app("crypto").unwrap();
+        assert_eq!(a.churn_period, 0);
+        assert!(!a.churn(1).in_odd_phase());
+    }
+}

@@ -1,0 +1,164 @@
+//! Phase churn: canary rollouts and configuration toggles (paper §I
+//! challenge (iii), §X-A "steady state phases and rollout transitions").
+//!
+//! Two mechanisms:
+//! * **Function redirection** — a rollout replaces a fraction of call
+//!   targets with their "v2" alias (a different address region), modeling
+//!   binary releases that relocate hot code and invalidate learned
+//!   correlations.
+//! * **Handler-mix drift** — the RPC type distribution changes between
+//!   phases, shifting which handler chains are hot.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ChurnSchedule {
+    /// Records between phase toggles (0 = never).
+    pub period: u64,
+    /// Fraction of calls redirected during an "odd" phase.
+    pub redirect_frac: f64,
+    /// Offset (in function indices) applied to redirected calls.
+    pub redirect_stride: usize,
+    /// Handler-popularity weights per phase parity.
+    even_weights: Vec<f64>,
+    odd_weights: Vec<f64>,
+    /// Current phase parity.
+    odd_phase: bool,
+    next_toggle: u64,
+}
+
+impl ChurnSchedule {
+    /// No churn at all (steady state).
+    pub fn none() -> Self {
+        ChurnSchedule {
+            period: 0,
+            redirect_frac: 0.0,
+            redirect_stride: 0,
+            even_weights: vec![1.0],
+            odd_weights: vec![1.0],
+            odd_phase: false,
+            next_toggle: u64::MAX,
+        }
+    }
+
+    /// Periodic churn with the given intensity.
+    pub fn periodic(period: u64, redirect_frac: f64, handlers: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xC0FFEE);
+        let even: Vec<f64> = (0..handlers.max(1)).map(|_| 0.2 + rng.f64()).collect();
+        let odd: Vec<f64> = (0..handlers.max(1)).map(|_| 0.2 + rng.f64()).collect();
+        ChurnSchedule {
+            period,
+            redirect_frac,
+            redirect_stride: 17,
+            even_weights: even,
+            odd_weights: odd,
+            odd_phase: false,
+            next_toggle: period.max(1),
+        }
+    }
+
+    /// Advance the schedule; flips phase when the toggle point is reached.
+    #[inline]
+    pub fn tick(&mut self, emitted: u64, _rng: &mut Rng) {
+        if self.period > 0 && emitted >= self.next_toggle {
+            self.odd_phase = !self.odd_phase;
+            self.next_toggle = emitted + self.period;
+        }
+    }
+
+    /// Possibly redirect a call target (only in the odd phase).
+    #[inline]
+    pub fn redirect(&self, target: usize, rng: &mut Rng) -> usize {
+        if self.odd_phase && self.redirect_frac > 0.0 && rng.chance(self.redirect_frac) {
+            // Deterministic-ish alias: shift within the function table.
+            target.wrapping_add(self.redirect_stride)
+        } else {
+            target
+        }
+    }
+
+    /// Pick a handler index according to the current phase's mix.
+    #[inline]
+    pub fn pick_handler(&self, n: usize, rng: &mut Rng) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        let w = if self.odd_phase {
+            &self.odd_weights
+        } else {
+            &self.even_weights
+        };
+        if w.len() < n {
+            return rng.below(n as u64) as usize;
+        }
+        rng.weighted(&w[..n])
+    }
+
+    pub fn in_odd_phase(&self) -> bool {
+        self.odd_phase
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_never_toggles_or_redirects() {
+        let mut c = ChurnSchedule::none();
+        let mut r = Rng::new(1);
+        for i in 0..100_000 {
+            c.tick(i, &mut r);
+        }
+        assert!(!c.in_odd_phase());
+        assert_eq!(c.redirect(5, &mut r), 5);
+    }
+
+    #[test]
+    fn periodic_toggles_phase() {
+        let mut c = ChurnSchedule::periodic(100, 0.5, 4, 1);
+        let mut r = Rng::new(2);
+        let mut toggles = 0;
+        let mut last = c.in_odd_phase();
+        for i in 0..1000 {
+            c.tick(i, &mut r);
+            if c.in_odd_phase() != last {
+                toggles += 1;
+                last = c.in_odd_phase();
+            }
+        }
+        assert!(toggles >= 8, "toggles {toggles}");
+    }
+
+    #[test]
+    fn redirect_only_in_odd_phase() {
+        let mut c = ChurnSchedule::periodic(10, 1.0, 4, 3);
+        let mut r = Rng::new(3);
+        assert_eq!(c.redirect(100, &mut r), 100); // even phase
+        c.tick(10, &mut r); // flip to odd
+        assert!(c.in_odd_phase());
+        assert_eq!(c.redirect(100, &mut r), 117);
+    }
+
+    #[test]
+    fn handler_mix_changes_between_phases() {
+        let mut c = ChurnSchedule::periodic(1, 0.0, 4, 4);
+        let mut r = Rng::new(5);
+        let sample = |c: &ChurnSchedule, r: &mut Rng| {
+            let mut counts = [0u32; 4];
+            for _ in 0..20_000 {
+                counts[c.pick_handler(4, r)] += 1;
+            }
+            counts
+        };
+        let even = sample(&c, &mut r);
+        c.tick(1, &mut r);
+        let odd = sample(&c, &mut r);
+        let diff: i64 = even
+            .iter()
+            .zip(odd.iter())
+            .map(|(a, b)| (*a as i64 - *b as i64).abs())
+            .sum();
+        assert!(diff > 1000, "mix barely changed: {even:?} vs {odd:?}");
+    }
+}

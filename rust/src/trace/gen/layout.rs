@@ -1,0 +1,289 @@
+//! Synthetic binary-image model: libraries → functions → basic blocks.
+//!
+//! The generator reproduces the code-layout phenomena the paper's
+//! compressed entry exploits (§IX): function-local basic-block sequences
+//! and short fall-through chains (destination clustering within a few
+//! lines), library regions whose internal deltas fit in 20 line-address
+//! LSBs, and occasional far regions (JIT/dlopen analogues) whose deltas do
+//! not. All addresses are cache-line addresses.
+
+use crate::util::rng::Rng;
+
+/// A basic block: contiguous cache lines inside a function.
+#[derive(Clone, Debug)]
+pub struct Block {
+    /// First line address of the block.
+    pub start: u64,
+    /// Length in lines (1..=4).
+    pub lines: u32,
+    /// Instructions in the final (possibly partial) line.
+    pub tail_instrs: u8,
+}
+
+/// A function: a run of basic blocks plus control-flow metadata.
+#[derive(Clone, Debug)]
+pub struct Function {
+    pub blocks: Vec<Block>,
+    /// Indices into `Image::functions` this function may call, with weights.
+    pub callees: Vec<(usize, f64)>,
+    /// Probability a block ends in a backward branch (short loop).
+    pub loop_back_p: f64,
+    /// Library this function belongs to.
+    pub library: usize,
+    /// Handler/RPC context tag propagated into trace records.
+    pub ctx: u8,
+}
+
+/// A library: a contiguous address region holding functions.
+#[derive(Clone, Debug)]
+pub struct Library {
+    pub name: String,
+    pub base_line: u64,
+    pub end_line: u64,
+}
+
+/// The whole binary image.
+#[derive(Clone, Debug)]
+pub struct Image {
+    pub libraries: Vec<Library>,
+    pub functions: Vec<Function>,
+    /// Entry dispatcher function index (the RPC loop).
+    pub dispatcher: usize,
+    /// Handler entry points (per RPC type).
+    pub handlers: Vec<usize>,
+    /// Data region base (loads/stores).
+    pub data_base: u64,
+    pub data_lines: u64,
+}
+
+/// Parameters controlling image construction (per-app presets set these).
+#[derive(Clone, Debug)]
+pub struct LayoutParams {
+    pub libraries: usize,
+    /// Functions per library.
+    pub funcs_per_lib: usize,
+    /// Mean blocks per function.
+    pub mean_blocks: usize,
+    /// Fraction of libraries placed in a "far" region whose delta from the
+    /// main text region exceeds 20 line-address bits (JIT / dlopen model).
+    pub far_lib_frac: f64,
+    /// Mean callees per function.
+    pub mean_callees: usize,
+    /// Probability calls stay within the same library (call locality).
+    pub intra_lib_call_p: f64,
+    /// Number of distinct RPC handler types.
+    pub handler_types: usize,
+    /// Data footprint in lines.
+    pub data_lines: u64,
+}
+
+impl Default for LayoutParams {
+    fn default() -> Self {
+        LayoutParams {
+            libraries: 6,
+            funcs_per_lib: 120,
+            mean_blocks: 6,
+            far_lib_frac: 0.15,
+            mean_callees: 3,
+            intra_lib_call_p: 0.75,
+            handler_types: 4,
+            data_lines: 1 << 16,
+        }
+    }
+}
+
+/// Main text region starts here (arbitrary but away from zero).
+const TEXT_BASE: u64 = 0x0040_0000; // line address
+/// Far regions (JIT/dlopen) start beyond a 20-bit line-delta from text.
+const FAR_BASE: u64 = TEXT_BASE + (1 << 22);
+/// Gap between libraries inside a region, in lines.
+const LIB_GAP: u64 = 1 << 14;
+
+impl Image {
+    pub fn build(params: &LayoutParams, rng: &mut Rng) -> Image {
+        let mut libraries = Vec::with_capacity(params.libraries);
+        let mut functions: Vec<Function> = Vec::new();
+        let mut lib_fn_ranges: Vec<(usize, usize)> = Vec::new();
+
+        let n_far = ((params.libraries as f64 * params.far_lib_frac).round() as usize)
+            .min(params.libraries.saturating_sub(1));
+        let mut near_cursor = TEXT_BASE;
+        let mut far_cursor = FAR_BASE;
+
+        for lib_idx in 0..params.libraries {
+            let far = lib_idx >= params.libraries - n_far;
+            let cursor = if far { &mut far_cursor } else { &mut near_cursor };
+            let base = *cursor;
+            let fn_start = functions.len();
+            let mut line = base;
+            for _ in 0..params.funcs_per_lib {
+                // Function-local blocks laid out contiguously: this is the
+                // fall-through chain that produces 8-line clustering.
+                let n_blocks = 1 + rng.below(params.mean_blocks as u64 * 2 - 1) as usize;
+                let mut blocks = Vec::with_capacity(n_blocks);
+                for _ in 0..n_blocks {
+                    let lines = 1 + rng.below(3) as u32; // 1..=3 lines
+                    blocks.push(Block {
+                        start: line,
+                        lines,
+                        tail_instrs: 1 + rng.below(16) as u8,
+                    });
+                    line += lines as u64;
+                }
+                // Small inter-function padding (alignment holes).
+                line += rng.below(2);
+                functions.push(Function {
+                    blocks,
+                    callees: Vec::new(),
+                    loop_back_p: 0.05 + rng.f64() * 0.2,
+                    library: lib_idx,
+                    ctx: 0,
+                });
+            }
+            lib_fn_ranges.push((fn_start, functions.len()));
+            libraries.push(Library {
+                name: format!("lib{lib_idx}{}", if far { "_far" } else { "" }),
+                base_line: base,
+                end_line: line,
+            });
+            *cursor = line + LIB_GAP;
+        }
+
+        // Call graph: mostly intra-library, popularity-skewed (hot callees).
+        let n_fns = functions.len();
+        for i in 0..n_fns {
+            let lib = functions[i].library;
+            let (lo, hi) = lib_fn_ranges[lib];
+            let n_callees = 1 + rng.below(params.mean_callees as u64 * 2 - 1) as usize;
+            let mut callees = Vec::with_capacity(n_callees);
+            for _ in 0..n_callees {
+                let target = if rng.chance(params.intra_lib_call_p) {
+                    lo + rng.zipf(hi - lo, 1.2)
+                } else {
+                    rng.zipf(n_fns, 1.1)
+                };
+                if target != i {
+                    callees.push((target, 0.2 + rng.f64()));
+                }
+            }
+            functions[i].callees = callees;
+        }
+
+        // Dispatcher = function 0; handlers = hot functions, one per RPC
+        // type, tagged with their context id.
+        let dispatcher = 0;
+        let mut handlers = Vec::with_capacity(params.handler_types);
+        let mut used = std::collections::HashSet::new();
+        used.insert(dispatcher);
+        for h in 0..params.handler_types {
+            let lib = h % params.libraries;
+            let (lo, hi) = lib_fn_ranges[lib];
+            let mut f = lo + rng.zipf(hi - lo, 1.1);
+            while used.contains(&f) {
+                f = lo + rng.below((hi - lo) as u64) as usize;
+            }
+            used.insert(f);
+            functions[f].ctx = (h + 1) as u8;
+            handlers.push(f);
+        }
+
+        Image {
+            libraries,
+            functions,
+            dispatcher,
+            handlers,
+            data_base: 0x4000_0000,
+            data_lines: params.data_lines,
+        }
+    }
+
+    /// Total code footprint in lines (sum of library extents).
+    pub fn code_lines(&self) -> u64 {
+        self.libraries
+            .iter()
+            .map(|l| l.end_line - l.base_line)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn image() -> Image {
+        Image::build(&LayoutParams::default(), &mut Rng::new(1))
+    }
+
+    #[test]
+    fn builds_expected_counts() {
+        let p = LayoutParams::default();
+        let img = image();
+        assert_eq!(img.libraries.len(), p.libraries);
+        assert_eq!(img.functions.len(), p.libraries * p.funcs_per_lib);
+        assert_eq!(img.handlers.len(), p.handler_types);
+    }
+
+    #[test]
+    fn blocks_are_contiguous_within_functions() {
+        let img = image();
+        for f in &img.functions {
+            for pair in f.blocks.windows(2) {
+                let end = pair[0].start + pair[0].lines as u64;
+                assert!(pair[1].start >= end, "blocks overlap");
+                assert!(pair[1].start - end <= 2, "blocks not fall-through-adjacent");
+            }
+        }
+    }
+
+    #[test]
+    fn far_libraries_exceed_20bit_delta() {
+        let img = image();
+        let far: Vec<_> = img.libraries.iter().filter(|l| l.name.ends_with("_far")).collect();
+        assert!(!far.is_empty());
+        for l in far {
+            assert!(l.base_line >> 20 != TEXT_BASE >> 20);
+        }
+    }
+
+    #[test]
+    fn near_libraries_share_high_bits_mostly() {
+        let img = image();
+        let near: Vec<_> = img
+            .libraries
+            .iter()
+            .filter(|l| !l.name.ends_with("_far"))
+            .collect();
+        // All near libraries fit under FAR_BASE.
+        for l in near {
+            assert!(l.end_line < FAR_BASE);
+        }
+    }
+
+    #[test]
+    fn callees_exist_and_are_not_self() {
+        let img = image();
+        for (i, f) in img.functions.iter().enumerate() {
+            for &(c, w) in &f.callees {
+                assert!(c < img.functions.len());
+                assert_ne!(c, i);
+                assert!(w > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn footprint_vastly_exceeds_l1i() {
+        // Paper §II-A: footprints exceed the 512-line L1I by orders of
+        // magnitude.
+        assert!(image().code_lines() > 512 * 8);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = Image::build(&LayoutParams::default(), &mut Rng::new(9));
+        let b = Image::build(&LayoutParams::default(), &mut Rng::new(9));
+        assert_eq!(a.code_lines(), b.code_lines());
+        assert_eq!(a.functions.len(), b.functions.len());
+        assert_eq!(a.functions[37].blocks[0].start, b.functions[37].blocks[0].start);
+    }
+}

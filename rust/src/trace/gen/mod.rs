@@ -1,0 +1,87 @@
+//! Synthetic microservice trace generation (the paper-trace substitute —
+//! see DESIGN.md "Substitutions").
+
+pub mod apps;
+pub mod churn;
+pub mod layout;
+pub mod walk;
+
+use crate::trace::{Record, TraceMeta};
+use crate::util::rng::Rng;
+use apps::AppSpec;
+use layout::Image;
+use walk::Walk;
+
+/// Generate `limit` records for an app preset. Returns (meta, records,
+/// per-request record sizes for the RPC layer).
+pub fn generate(spec: &AppSpec, seed: u64, limit: u64) -> (TraceMeta, Vec<Record>, Vec<u32>) {
+    let mut rng = Rng::new(seed);
+    let img = Image::build(&spec.layout, &mut rng);
+    let mut w = Walk::new(&img, spec.walk.clone(), spec.churn(seed), seed ^ 0x9E37, limit);
+    let mut records = Vec::with_capacity(limit as usize);
+    for r in &mut w {
+        records.push(r);
+    }
+    let sizes = std::mem::take(&mut w.request_sizes);
+    (
+        TraceMeta {
+            app: spec.name.to_string(),
+            seed,
+            line_bytes: 64,
+            records: records.len() as u64,
+        },
+        records,
+        sizes,
+    )
+}
+
+/// Generate just the records (most callers).
+pub fn generate_records(spec: &AppSpec, seed: u64, limit: u64) -> Vec<Record> {
+    generate(spec, seed, limit).1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Kind;
+
+    #[test]
+    fn generate_respects_limit_and_meta() {
+        let spec = apps::app("logging").unwrap();
+        let (meta, recs, sizes) = generate(&spec, 42, 20_000);
+        assert_eq!(recs.len(), 20_000);
+        assert_eq!(meta.records, 20_000);
+        assert_eq!(meta.app, "logging");
+        assert!(!sizes.is_empty(), "no request boundaries recorded");
+    }
+
+    #[test]
+    fn apps_have_distinct_footprints() {
+        let mut footprints = Vec::new();
+        for name in ["websearch", "crypto", "logging"] {
+            let spec = apps::app(name).unwrap();
+            let recs = generate_records(&spec, 1, 100_000);
+            let mut lines: Vec<u64> = recs
+                .iter()
+                .filter(|r| r.kind == Kind::Fetch)
+                .map(|r| r.line)
+                .collect();
+            lines.sort_unstable();
+            lines.dedup();
+            footprints.push((name, lines.len()));
+        }
+        // websearch footprint must dwarf crypto's.
+        assert!(footprints[0].1 > footprints[1].1 * 4, "{footprints:?}");
+    }
+
+    #[test]
+    fn roundtrips_through_codec() {
+        let spec = apps::app("serde").unwrap();
+        let (meta, recs, _) = generate(&spec, 3, 5_000);
+        let mut buf = Vec::new();
+        crate::trace::codec::write_trace(&mut buf, &meta, recs.iter().copied(), 5_000).unwrap();
+        let r = crate::trace::codec::TraceReader::new(std::io::Cursor::new(buf)).unwrap();
+        let got: Vec<Record> = r.map(|x| x.unwrap()).collect();
+        assert_eq!(got, recs);
+    }
+}

@@ -1,0 +1,364 @@
+//! Control-flow walk over a synthetic [`Image`]: produces the instruction
+//! (and data) access stream as an iterator of [`Record`]s.
+//!
+//! The walk models the steady-state fetch behaviour the paper describes
+//! (§IX): hot basic-block sequences and fall-throughs (sequential line
+//! fetches), short loops (backward branches), call/return regions (stack
+//! walk over the call graph), and RPC dispatch (dispatcher → handler chain
+//! per request, tagging records with the handler context). Phase churn
+//! (canary rollouts / config toggles, §I "systems challenge (iii)") is
+//! injected by [`super::churn::ChurnSchedule`].
+
+use super::churn::ChurnSchedule;
+use super::layout::Image;
+use crate::trace::{Kind, Record};
+use crate::util::rng::Rng;
+
+/// Tunables for the walk (per-app presets set these).
+#[derive(Clone, Debug)]
+pub struct WalkParams {
+    /// Probability a block falls through to the next block (vs branch).
+    pub fall_through_p: f64,
+    /// Probability of making a call after a block (if callees exist).
+    pub call_p: f64,
+    /// Maximum call depth (stack clamp).
+    pub max_depth: usize,
+    /// Probability of a data access per fetched block.
+    pub data_access_p: f64,
+    /// Fraction of data accesses that are stores.
+    pub store_frac: f64,
+    /// Requests per dispatcher loop iteration (handler chain length).
+    pub chain_len: usize,
+    /// Probability a call targets a uniformly random function instead of a
+    /// call-graph callee (cold paths: allocator, error handling, logging
+    /// helpers — this is what inflates microservice I-footprints, §II-A).
+    pub cold_call_p: f64,
+}
+
+impl Default for WalkParams {
+    fn default() -> Self {
+        WalkParams {
+            fall_through_p: 0.72,
+            call_p: 0.35,
+            max_depth: 24,
+            data_access_p: 0.30,
+            store_frac: 0.3,
+            chain_len: 3,
+            cold_call_p: 0.06,
+        }
+    }
+}
+
+/// Iterator yielding trace records from the control-flow walk.
+pub struct Walk<'a> {
+    img: &'a Image,
+    p: WalkParams,
+    rng: Rng,
+    churn: ChurnSchedule,
+    /// (function, block index) call stack.
+    stack: Vec<(usize, usize)>,
+    /// Current function / block.
+    cur_fn: usize,
+    cur_block: usize,
+    /// Queued records not yet emitted (lines of the current block + data).
+    queue: std::collections::VecDeque<Record>,
+    /// Current RPC context tag.
+    ctx: u8,
+    /// Remaining handler-chain hops for the in-flight request.
+    chain_left: usize,
+    /// Backward-loop iterations taken in the current function visit
+    /// (capped so short loops terminate — real loops have trip counts).
+    loops_in_fn: u32,
+    /// Records emitted so far (drives churn schedule).
+    emitted: u64,
+    /// Stop after this many records.
+    limit: u64,
+    /// Per-request record counts (for RPC-layer calibration).
+    pub request_sizes: Vec<u32>,
+    cur_request_size: u32,
+}
+
+impl<'a> Walk<'a> {
+    pub fn new(
+        img: &'a Image,
+        params: WalkParams,
+        churn: ChurnSchedule,
+        seed: u64,
+        limit: u64,
+    ) -> Self {
+        let mut w = Walk {
+            img,
+            p: params,
+            rng: Rng::new(seed),
+            churn,
+            stack: Vec::new(),
+            cur_fn: img.dispatcher,
+            cur_block: 0,
+            queue: std::collections::VecDeque::new(),
+            ctx: 0,
+            chain_left: 0,
+            loops_in_fn: 0,
+            emitted: 0,
+            limit,
+            request_sizes: Vec::new(),
+            cur_request_size: 0,
+        };
+        w.enqueue_block();
+        w
+    }
+
+    /// Push the lines of the current block (plus possible data accesses)
+    /// into the emit queue.
+    fn enqueue_block(&mut self) {
+        let f = &self.img.functions[self.cur_fn];
+        let b = &f.blocks[self.cur_block];
+        for i in 0..b.lines {
+            let last = i == b.lines - 1;
+            let instrs = if last { b.tail_instrs } else { 16 };
+            self.queue
+                .push_back(Record::fetch(b.start + i as u64, instrs.max(1), self.ctx));
+        }
+        if self.rng.chance(self.p.data_access_p) {
+            let dline = self.img.data_base + self.rng.below(self.img.data_lines);
+            let rec = if self.rng.chance(self.p.store_frac) {
+                Record::store(dline, self.ctx)
+            } else {
+                Record::load(dline, self.ctx)
+            };
+            self.queue.push_back(rec);
+        }
+    }
+
+    /// Decide where control flows after the current block.
+    fn advance_control(&mut self) {
+        let f = &self.img.functions[self.cur_fn];
+        let n_blocks = f.blocks.len();
+
+        // Early return: functions can exit from any block (error paths,
+        // guard clauses). Keeps per-visit residence bounded so the walk
+        // regularly unwinds to the dispatcher.
+        if !self.stack.is_empty() && self.rng.chance(0.10) {
+            let (rf, rb) = self.stack.pop().unwrap();
+            self.cur_fn = rf;
+            let n = self.img.functions[rf].blocks.len();
+            self.cur_block = (rb + 1).min(n - 1);
+            self.loops_in_fn = 0;
+            self.enqueue_block();
+            return;
+        }
+
+        // Call? Probability decays with stack depth so the call tree is
+        // subcritical (real services have bounded stack residence; without
+        // this the branching process never returns to the dispatcher).
+        let depth_frac = self.stack.len() as f64 / self.p.max_depth as f64;
+        let eff_call_p = self.p.call_p * (1.0 - depth_frac) * (1.0 - depth_frac);
+        if !f.callees.is_empty()
+            && self.stack.len() < self.p.max_depth
+            && self.rng.chance(eff_call_p)
+        {
+            let callee = if self.rng.chance(self.p.cold_call_p) {
+                // Cold path: uniform over the whole image.
+                self.rng.below(self.img.functions.len() as u64) as usize
+            } else {
+                let weights: Vec<f64> = f.callees.iter().map(|&(_, w)| w).collect();
+                let pick = self.rng.weighted(&weights);
+                self.churn.redirect(f.callees[pick].0, &mut self.rng)
+            };
+            let callee = callee.min(self.img.functions.len() - 1);
+            self.stack.push((self.cur_fn, self.cur_block));
+            self.cur_fn = callee;
+            self.cur_block = 0;
+            self.loops_in_fn = 0;
+            self.enqueue_block();
+            return;
+        }
+
+        // Short loop: branch back a few blocks (the paper's "short loop
+        // indicator" feature keys off this). Trip counts are capped — real
+        // loops terminate.
+        if self.cur_block > 0 && self.loops_in_fn < 8 && self.rng.chance(f.loop_back_p) {
+            self.loops_in_fn += 1;
+            let back = 1 + self.rng.below(self.cur_block.min(3) as u64 + 1) as usize;
+            self.cur_block = self.cur_block.saturating_sub(back);
+            self.enqueue_block();
+            return;
+        }
+
+        // Fall through or branch forward within the function.
+        if self.cur_block + 1 < n_blocks {
+            if self.rng.chance(self.p.fall_through_p) {
+                self.cur_block += 1;
+            } else {
+                // Forward branch: skip 1-3 blocks (cold-path skip).
+                let skip = 1 + self.rng.below(3) as usize;
+                self.cur_block = (self.cur_block + skip).min(n_blocks - 1);
+            }
+            self.enqueue_block();
+            return;
+        }
+
+        // Function end: return, or if stack empty, next RPC dispatch.
+        if let Some((rf, rb)) = self.stack.pop() {
+            self.cur_fn = rf;
+            let n = self.img.functions[rf].blocks.len();
+            self.cur_block = (rb + 1).min(n - 1);
+            self.loops_in_fn = 0;
+            self.enqueue_block();
+        } else {
+            self.dispatch_next();
+        }
+    }
+
+    /// Dispatcher loop: pick the next handler in the chain (or start a new
+    /// request), updating the RPC context tag.
+    fn dispatch_next(&mut self) {
+        if self.chain_left == 0 {
+            // Request boundary.
+            if self.cur_request_size > 0 {
+                self.request_sizes.push(self.cur_request_size);
+                self.cur_request_size = 0;
+            }
+            self.chain_left = self.p.chain_len;
+            // Re-fetch dispatcher code between requests.
+            self.cur_fn = self.img.dispatcher;
+            self.cur_block = 0;
+            self.ctx = 0;
+            self.loops_in_fn = 0;
+            self.enqueue_block();
+            return;
+        }
+        self.chain_left -= 1;
+        let h_idx = self
+            .churn
+            .pick_handler(self.img.handlers.len(), &mut self.rng);
+        let handler = self
+            .churn
+            .redirect(self.img.handlers[h_idx], &mut self.rng)
+            .min(self.img.functions.len() - 1);
+        // Tag by handler identity (the paper's lightweight RPC tag).
+        self.ctx = (h_idx + 1) as u8;
+        self.cur_fn = handler;
+        self.cur_block = 0;
+        self.loops_in_fn = 0;
+        self.enqueue_block();
+    }
+}
+
+impl<'a> Iterator for Walk<'a> {
+    type Item = Record;
+
+    fn next(&mut self) -> Option<Record> {
+        if self.emitted >= self.limit {
+            return None;
+        }
+        while self.queue.is_empty() {
+            self.advance_control();
+        }
+        let rec = self.queue.pop_front().unwrap();
+        self.emitted += 1;
+        self.cur_request_size += 1;
+        self.churn.tick(self.emitted, &mut self.rng);
+        if rec.kind == Kind::Fetch {
+            Some(rec)
+        } else {
+            Some(rec)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::gen::churn::ChurnSchedule;
+    use crate::trace::gen::layout::{Image, LayoutParams};
+
+    fn walk_records(n: u64, seed: u64) -> Vec<Record> {
+        let mut rng = Rng::new(seed);
+        let img = Image::build(&LayoutParams::default(), &mut rng);
+        let img = Box::leak(Box::new(img));
+        Walk::new(
+            img,
+            WalkParams::default(),
+            ChurnSchedule::none(),
+            seed,
+            n,
+        )
+        .collect()
+    }
+
+    #[test]
+    fn produces_exactly_limit_records() {
+        assert_eq!(walk_records(10_000, 1).len(), 10_000);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        assert_eq!(walk_records(5_000, 2), walk_records(5_000, 2));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        assert_ne!(walk_records(5_000, 3), walk_records(5_000, 4));
+    }
+
+    #[test]
+    fn mostly_fetches_with_some_data() {
+        let recs = walk_records(50_000, 5);
+        let fetches = recs.iter().filter(|r| r.kind == Kind::Fetch).count();
+        let data = recs.len() - fetches;
+        assert!(fetches > recs.len() * 7 / 10);
+        assert!(data > 0);
+    }
+
+    #[test]
+    fn sequential_runs_exist() {
+        // Fall-through chains must produce +1 line deltas — the property
+        // the 8-line window encoding (Fig 8) depends on.
+        let recs = walk_records(50_000, 6);
+        let fetch_lines: Vec<u64> = recs
+            .iter()
+            .filter(|r| r.kind == Kind::Fetch)
+            .map(|r| r.line)
+            .collect();
+        let seq = fetch_lines
+            .windows(2)
+            .filter(|w| w[1] == w[0] + 1)
+            .count();
+        assert!(
+            seq as f64 / fetch_lines.len() as f64 > 0.35,
+            "sequential fraction too low: {}",
+            seq as f64 / fetch_lines.len() as f64
+        );
+    }
+
+    #[test]
+    fn multiple_contexts_appear() {
+        let recs = walk_records(100_000, 7);
+        let mut ctxs: Vec<u8> = recs.iter().map(|r| r.ctx).collect();
+        ctxs.sort_unstable();
+        ctxs.dedup();
+        assert!(ctxs.len() >= 3, "contexts: {ctxs:?}");
+    }
+
+    #[test]
+    fn working_set_exceeds_l1i() {
+        let recs = walk_records(200_000, 8);
+        let mut lines: Vec<u64> = recs
+            .iter()
+            .filter(|r| r.kind == Kind::Fetch)
+            .map(|r| r.line)
+            .collect();
+        lines.sort_unstable();
+        lines.dedup();
+        assert!(lines.len() > 512 * 2, "unique I-lines: {}", lines.len());
+    }
+
+    #[test]
+    fn instrs_always_nonzero_on_fetch() {
+        for r in walk_records(20_000, 9) {
+            if r.kind == Kind::Fetch {
+                assert!(r.instrs >= 1 && r.instrs <= 16);
+            }
+        }
+    }
+}

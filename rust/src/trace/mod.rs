@@ -1,0 +1,97 @@
+//! Instruction/data trace substrate.
+//!
+//! The paper evaluates on traces collected from production microservices
+//! (request admission, feature lookup, model dispatch, logging pipelines —
+//! §X-A). Those traces are proprietary, so this module provides the
+//! substitute documented in DESIGN.md: a synthetic generator
+//! ([`gen`]) that reproduces the *layout statistics the paper's encoding
+//! relies on* (20-bit source→destination deltas from shared-region code
+//! layout, 8-line destination clustering from basic-block sequences and
+//! fall-through chains), plus a compact binary codec ([`codec`]) and
+//! stream analyzers ([`stats`]).
+//!
+//! Addresses in records are **cache-line addresses** (byte address >> 6),
+//! matching the paper's 64 B lines (Table I).
+
+pub mod codec;
+pub mod gen;
+pub mod stats;
+
+/// What kind of access a record describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// Instruction fetch of a cache line; `instrs` instructions are
+    /// consumed sequentially from it before the next record.
+    Fetch,
+    /// Data read (exercises L1D/NLP and shares hierarchy bandwidth).
+    Load,
+    /// Data write.
+    Store,
+}
+
+/// One trace record.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Record {
+    pub kind: Kind,
+    /// Cache-line address (byte addr >> 6).
+    pub line: u64,
+    /// Instructions consumed from this line (Fetch; 0 for Load/Store).
+    pub instrs: u8,
+    /// RPC/handler context tag (paper §IV-A "lightweight thread/RPC tag").
+    pub ctx: u8,
+}
+
+impl Record {
+    pub fn fetch(line: u64, instrs: u8, ctx: u8) -> Self {
+        Record {
+            kind: Kind::Fetch,
+            line,
+            instrs,
+            ctx,
+        }
+    }
+
+    pub fn load(line: u64, ctx: u8) -> Self {
+        Record {
+            kind: Kind::Load,
+            line,
+            instrs: 0,
+            ctx,
+        }
+    }
+
+    pub fn store(line: u64, ctx: u8) -> Self {
+        Record {
+            kind: Kind::Store,
+            line,
+            instrs: 0,
+            ctx,
+        }
+    }
+}
+
+/// Trace-level metadata carried in file headers and reports.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceMeta {
+    pub app: String,
+    pub seed: u64,
+    pub line_bytes: u32,
+    pub records: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_constructors() {
+        let f = Record::fetch(0x40, 16, 2);
+        assert_eq!(f.kind, Kind::Fetch);
+        assert_eq!(f.instrs, 16);
+        let l = Record::load(7, 0);
+        assert_eq!(l.kind, Kind::Load);
+        assert_eq!(l.instrs, 0);
+        let s = Record::store(9, 1);
+        assert_eq!(s.kind, Kind::Store);
+    }
+}

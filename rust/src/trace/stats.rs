@@ -1,0 +1,137 @@
+//! Trace-stream analyzers: footprint, sequential-run, and delta statistics.
+//!
+//! These quantify the layout properties the paper's encoding depends on
+//! and feed Fig 7/8-style analyses (the authoritative Fig 7/8 numbers come
+//! from the instrumented EIP trainer during simulation; this module gives
+//! the trace-level view used in reports and sanity tests).
+
+use super::{Kind, Record};
+use std::collections::HashMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct TraceStats {
+    pub records: u64,
+    pub fetches: u64,
+    pub loads: u64,
+    pub stores: u64,
+    pub instrs: u64,
+    pub unique_ilines: u64,
+    pub unique_dlines: u64,
+    /// Fraction of consecutive fetch pairs with delta == +1.
+    pub seq_frac: f64,
+    /// Histogram of |fetch line delta| bucketed by bit-width (0..=44).
+    pub delta_bits_hist: Vec<u64>,
+    /// Fraction of fetch transitions whose delta fits in 20 bits of
+    /// low-order addressing (shares high bits).
+    pub fit20_frac: f64,
+}
+
+/// Single-pass analysis of a record stream.
+pub fn analyze(records: &[Record]) -> TraceStats {
+    let mut s = TraceStats {
+        delta_bits_hist: vec![0u64; 45],
+        ..Default::default()
+    };
+    let mut ilines: HashMap<u64, ()> = HashMap::new();
+    let mut dlines: HashMap<u64, ()> = HashMap::new();
+    let mut prev_fetch: Option<u64> = None;
+    let mut seq = 0u64;
+    let mut pairs = 0u64;
+    let mut fit20 = 0u64;
+    for r in records {
+        s.records += 1;
+        match r.kind {
+            Kind::Fetch => {
+                s.fetches += 1;
+                s.instrs += r.instrs as u64;
+                ilines.insert(r.line, ());
+                if let Some(p) = prev_fetch {
+                    pairs += 1;
+                    if r.line == p + 1 {
+                        seq += 1;
+                    }
+                    let delta = r.line.abs_diff(p);
+                    let bits = 64 - delta.leading_zeros();
+                    s.delta_bits_hist[(bits as usize).min(44)] += 1;
+                    if crate::util::bits::shares_high_bits(p, r.line, 20) {
+                        fit20 += 1;
+                    }
+                }
+                prev_fetch = Some(r.line);
+            }
+            Kind::Load => {
+                s.loads += 1;
+                dlines.insert(r.line, ());
+            }
+            Kind::Store => {
+                s.stores += 1;
+                dlines.insert(r.line, ());
+            }
+        }
+    }
+    s.unique_ilines = ilines.len() as u64;
+    s.unique_dlines = dlines.len() as u64;
+    if pairs > 0 {
+        s.seq_frac = seq as f64 / pairs as f64;
+        s.fit20_frac = fit20 as f64 / pairs as f64;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::gen::{apps, generate_records};
+
+    #[test]
+    fn counts_kinds() {
+        let recs = vec![
+            Record::fetch(1, 16, 0),
+            Record::fetch(2, 8, 0),
+            Record::load(100, 0),
+            Record::store(101, 0),
+        ];
+        let s = analyze(&recs);
+        assert_eq!(s.fetches, 2);
+        assert_eq!(s.loads, 1);
+        assert_eq!(s.stores, 1);
+        assert_eq!(s.instrs, 24);
+        assert_eq!(s.unique_ilines, 2);
+        assert_eq!(s.unique_dlines, 2);
+        assert_eq!(s.seq_frac, 1.0);
+    }
+
+    #[test]
+    fn generated_traces_mostly_fit_20_bits() {
+        // The core layout property behind Fig 7: most deltas share high
+        // bits above bit 20.
+        let spec = apps::app("websearch").unwrap();
+        let recs = generate_records(&spec, 11, 200_000);
+        let s = analyze(&recs);
+        assert!(s.fit20_frac > 0.80, "fit20 {}", s.fit20_frac);
+        assert!(s.fit20_frac < 1.0, "far regions never crossed");
+    }
+
+    #[test]
+    fn managed_runtime_has_lower_fit20() {
+        let cpp = analyze(&generate_records(&apps::app("websearch").unwrap(), 5, 150_000));
+        let java = analyze(&generate_records(
+            &apps::app("abscheduler-java").unwrap(),
+            5,
+            150_000,
+        ));
+        assert!(
+            java.fit20_frac < cpp.fit20_frac,
+            "java {} vs cpp {}",
+            java.fit20_frac,
+            cpp.fit20_frac
+        );
+    }
+
+    #[test]
+    fn empty_stream() {
+        let s = analyze(&[]);
+        assert_eq!(s.records, 0);
+        assert_eq!(s.seq_frac, 0.0);
+    }
+}

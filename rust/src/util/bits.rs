@@ -1,0 +1,112 @@
+//! Bit-field helpers used by the compressed-entry encodings (paper Fig 4)
+//! and the metadata cost model (§V).
+
+/// Extract `len` bits of `x` starting at bit `lo` (LSB = bit 0).
+#[inline]
+pub const fn field(x: u64, lo: u32, len: u32) -> u64 {
+    (x >> lo) & mask(len)
+}
+
+/// Set `len` bits of `x` at `lo` to `v` (v is masked to width).
+#[inline]
+pub const fn set_field(x: u64, lo: u32, len: u32, v: u64) -> u64 {
+    let m = mask(len) << lo;
+    (x & !m) | ((v & mask(len)) << lo)
+}
+
+/// `len`-bit all-ones mask (len <= 64).
+#[inline]
+pub const fn mask(len: u32) -> u64 {
+    if len >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << len) - 1
+    }
+}
+
+/// Does the signed delta between two line addresses fit in `bits` bits of
+/// *low-order* addressing, i.e. do the lines share all high-order bits above
+/// `bits`? This is the paper's "delta fits within 20 LSBs" predicate
+/// (§III-A, Fig 7): high bits are inherited from the source.
+#[inline]
+pub fn shares_high_bits(a: u64, b: u64, bits: u32) -> bool {
+    (a >> bits) == (b >> bits)
+}
+
+/// Bytes needed for `n` bits, rounded up.
+#[inline]
+pub const fn bits_to_bytes(n: u64) -> u64 {
+    n.div_ceil(8)
+}
+
+/// Saturating 2-bit counter ops (confidence counters in every prefetcher).
+pub mod conf2 {
+    pub const MAX: u8 = 3;
+
+    #[inline]
+    pub fn inc(c: u8) -> u8 {
+        if c >= MAX {
+            MAX
+        } else {
+            c + 1
+        }
+    }
+
+    #[inline]
+    pub fn dec(c: u8) -> u8 {
+        c.saturating_sub(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_widths() {
+        assert_eq!(mask(0), 0);
+        assert_eq!(mask(1), 1);
+        assert_eq!(mask(20), 0xF_FFFF);
+        assert_eq!(mask(64), u64::MAX);
+    }
+
+    #[test]
+    fn field_roundtrip() {
+        let x = set_field(0, 4, 20, 0xABCDE);
+        assert_eq!(field(x, 4, 20), 0xABCDE);
+        // Adjacent fields untouched.
+        let y = set_field(x, 24, 8, 0xFF);
+        assert_eq!(field(y, 4, 20), 0xABCDE);
+        assert_eq!(field(y, 24, 8), 0xFF);
+    }
+
+    #[test]
+    fn set_field_masks_overwide_values() {
+        let x = set_field(0, 0, 4, 0xFFFF);
+        assert_eq!(x, 0xF);
+    }
+
+    #[test]
+    fn high_bit_sharing() {
+        assert!(shares_high_bits(0x10_00001, 0x10_FFFFF, 20));
+        assert!(!shares_high_bits(0x10_00001, 0x11_00001, 20));
+        assert!(shares_high_bits(5, 5, 0));
+    }
+
+    #[test]
+    fn conf2_saturates() {
+        use conf2::*;
+        assert_eq!(inc(MAX), MAX);
+        assert_eq!(inc(0), 1);
+        assert_eq!(dec(0), 0);
+        assert_eq!(dec(2), 1);
+    }
+
+    #[test]
+    fn bytes_rounding() {
+        assert_eq!(bits_to_bytes(0), 0);
+        assert_eq!(bits_to_bytes(1), 1);
+        assert_eq!(bits_to_bytes(8), 1);
+        assert_eq!(bits_to_bytes(36 * 512), 2304);
+    }
+}

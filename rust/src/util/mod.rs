@@ -1,0 +1,11 @@
+//! Foundation substrates built in-repo for the offline environment:
+//! deterministic RNG, bit-field helpers, JSON, streaming percentiles,
+//! a mini property-testing harness, and a wall-clock bench timer.
+
+pub mod bits;
+pub mod hashfx;
+pub mod json;
+pub mod percentile;
+pub mod prop;
+pub mod rng;
+pub mod timer;

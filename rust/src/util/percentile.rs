@@ -1,0 +1,267 @@
+//! Latency-percentile estimation for the RPC/tail-latency layer.
+//!
+//! Two tools: an exact [`Digest`] (sorted sample buffer — fine for the
+//! request counts we simulate) and a streaming [`P2Quantile`] estimator
+//! (Jain & Chlamtac's P² algorithm) used inside the coordinator where we
+//! cannot afford to retain samples (per-cell online P95 regression
+//! detection during canary rollout).
+
+/// Exact percentile digest over retained samples.
+#[derive(Clone, Debug, Default)]
+pub struct Digest {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Digest {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.samples.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Percentile in [0, 100] with linear interpolation.
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        if !self.sorted {
+            self.samples
+                .sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+        let n = self.samples.len();
+        let rank = (p / 100.0) * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            self.samples[lo]
+        } else {
+            let frac = rank - lo as f64;
+            self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.samples.iter().sum::<f64>() / self.samples.len() as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::MIN, f64::max)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+}
+
+/// Streaming P² single-quantile estimator: O(1) memory, no samples kept.
+#[derive(Clone, Debug)]
+pub struct P2Quantile {
+    p: f64,
+    // Marker heights and positions per Jain & Chlamtac 1985.
+    q: [f64; 5],
+    n: [f64; 5],
+    np: [f64; 5],
+    dn: [f64; 5],
+    count: usize,
+    init: Vec<f64>,
+}
+
+impl P2Quantile {
+    /// `p` in (0, 1), e.g. 0.95 for P95.
+    pub fn new(p: f64) -> Self {
+        assert!(p > 0.0 && p < 1.0);
+        P2Quantile {
+            p,
+            q: [0.0; 5],
+            n: [0.0; 5],
+            np: [0.0; 5],
+            dn: [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0],
+            count: 0,
+            init: Vec::with_capacity(5),
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.count += 1;
+        if self.init.len() < 5 {
+            self.init.push(x);
+            if self.init.len() == 5 {
+                self.init.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+                for i in 0..5 {
+                    self.q[i] = self.init[i];
+                    self.n[i] = (i + 1) as f64;
+                }
+                self.np = [
+                    1.0,
+                    1.0 + 2.0 * self.p,
+                    1.0 + 4.0 * self.p,
+                    3.0 + 2.0 * self.p,
+                    5.0,
+                ];
+            }
+            return;
+        }
+        // Find cell k containing x; clamp extremes.
+        let k = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x >= self.q[4] {
+            self.q[4] = x;
+            3
+        } else {
+            let mut k = 0;
+            for i in 0..4 {
+                if x >= self.q[i] && x < self.q[i + 1] {
+                    k = i;
+                    break;
+                }
+            }
+            k
+        };
+        for i in (k + 1)..5 {
+            self.n[i] += 1.0;
+        }
+        for i in 0..5 {
+            self.np[i] += self.dn[i];
+        }
+        // Adjust interior markers with parabolic interpolation.
+        for i in 1..4 {
+            let d = self.np[i] - self.n[i];
+            if (d >= 1.0 && self.n[i + 1] - self.n[i] > 1.0)
+                || (d <= -1.0 && self.n[i - 1] - self.n[i] < -1.0)
+            {
+                let ds = d.signum();
+                let qp = self.parabolic(i, ds);
+                self.q[i] = if self.q[i - 1] < qp && qp < self.q[i + 1] {
+                    qp
+                } else {
+                    self.linear(i, ds)
+                };
+                self.n[i] += ds;
+            }
+        }
+    }
+
+    fn parabolic(&self, i: usize, d: f64) -> f64 {
+        let q = &self.q;
+        let n = &self.n;
+        q[i] + d / (n[i + 1] - n[i - 1])
+            * ((n[i] - n[i - 1] + d) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+                + (n[i + 1] - n[i] - d) * (q[i] - q[i - 1]) / (n[i] - n[i - 1]))
+    }
+
+    fn linear(&self, i: usize, d: f64) -> f64 {
+        let j = (i as f64 + d) as usize;
+        self.q[i] + d * (self.q[j] - self.q[i]) / (self.n[j] - self.n[i])
+    }
+
+    pub fn value(&self) -> f64 {
+        if self.init.len() < 5 {
+            if self.init.is_empty() {
+                return 0.0;
+            }
+            let mut v = self.init.clone();
+            v.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+            let idx = ((v.len() - 1) as f64 * self.p).round() as usize;
+            return v[idx];
+        }
+        self.q[2]
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn digest_exact_percentiles() {
+        let mut d = Digest::new();
+        for i in 1..=100 {
+            d.add(i as f64);
+        }
+        assert_eq!(d.percentile(0.0), 1.0);
+        assert_eq!(d.percentile(100.0), 100.0);
+        assert!((d.percentile(50.0) - 50.5).abs() < 1e-9);
+        assert!((d.percentile(95.0) - 95.05).abs() < 1e-9);
+        assert!((d.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn digest_empty_is_zero() {
+        let mut d = Digest::new();
+        assert_eq!(d.percentile(95.0), 0.0);
+        assert_eq!(d.mean(), 0.0);
+    }
+
+    #[test]
+    fn p2_tracks_uniform_p95() {
+        let mut est = P2Quantile::new(0.95);
+        let mut r = Rng::new(5);
+        for _ in 0..200_000 {
+            est.add(r.f64() * 100.0);
+        }
+        assert!((est.value() - 95.0).abs() < 1.0, "got {}", est.value());
+    }
+
+    #[test]
+    fn p2_tracks_exponential_p99() {
+        let mut est = P2Quantile::new(0.99);
+        let mut r = Rng::new(6);
+        for _ in 0..300_000 {
+            est.add(r.exp(10.0));
+        }
+        // True P99 of Exp(mean 10) = -10 ln(0.01) ≈ 46.05.
+        assert!((est.value() - 46.05).abs() < 3.0, "got {}", est.value());
+    }
+
+    #[test]
+    fn p2_small_counts_fall_back_to_exact() {
+        let mut est = P2Quantile::new(0.5);
+        for x in [3.0, 1.0, 2.0] {
+            est.add(x);
+        }
+        assert_eq!(est.value(), 2.0);
+        assert_eq!(est.count(), 3);
+    }
+
+    #[test]
+    fn p2_matches_digest_on_normal_data() {
+        let mut est = P2Quantile::new(0.95);
+        let mut d = Digest::new();
+        let mut r = Rng::new(9);
+        for _ in 0..100_000 {
+            let x = 50.0 + 10.0 * r.normal();
+            est.add(x);
+            d.add(x);
+        }
+        let exact = d.percentile(95.0);
+        assert!((est.value() - exact).abs() / exact < 0.02);
+    }
+}

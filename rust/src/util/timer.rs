@@ -1,0 +1,80 @@
+//! Wall-clock measurement helpers for the custom bench harness
+//! (no criterion offline). Median-of-runs with warmup, reporting
+//! ns/op and ops/s.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub ns_per_op: f64,
+    pub ops_per_s: f64,
+    pub runs: usize,
+    pub ops_per_run: u64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12.1} ns/op {:>14.0} ops/s  ({} runs x {} ops)",
+            self.name, self.ns_per_op, self.ops_per_s, self.runs, self.ops_per_run
+        )
+    }
+}
+
+/// Run `f` (which performs `ops` operations per call) `runs` times after
+/// `warmup` calls; report the median run.
+pub fn bench(name: &str, warmup: usize, runs: usize, ops: u64, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<f64> = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_nanos() as f64);
+    }
+    times.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    let ns_per_op = median / ops as f64;
+    BenchResult {
+        name: name.to_string(),
+        ns_per_op,
+        ops_per_s: 1e9 / ns_per_op,
+        runs,
+        ops_per_run: ops,
+    }
+}
+
+/// Measure one closure once, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_numbers() {
+        let mut acc = 0u64;
+        let r = bench("noop-loop", 1, 5, 1000, || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(std::hint::black_box(i));
+            }
+        });
+        assert!(r.ns_per_op > 0.0 && r.ns_per_op < 1e6);
+        assert!(r.ops_per_s > 0.0);
+        assert!(r.report().contains("noop-loop"));
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, secs) = time_it(|| 42);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

@@ -1,0 +1,200 @@
+//! Figure-shape integration tests: run the (reduced-scale) experiment
+//! matrix and assert the paper's qualitative results hold — who wins, by
+//! roughly what factor, where the orderings fall (DESIGN.md §5).
+
+use slofetch::figures::{self, FigureCtx, Matrix};
+use std::sync::OnceLock;
+
+fn matrix() -> &'static Matrix {
+    static M: OnceLock<Matrix> = OnceLock::new();
+    M.get_or_init(|| {
+        Matrix::compute(FigureCtx {
+            records_per_app: 150_000,
+            ..FigureCtx::quick()
+        })
+    })
+}
+
+#[test]
+fn fig2_shape_mpki_ordering() {
+    let m = matrix();
+    let mpki = |app: &str| m.get(app, "nl").stats.mpki();
+    // Deep-stack services dwarf crypto (the paper's motivation).
+    assert!(mpki("websearch") > 4.0 * mpki("crypto"));
+    assert!(mpki("retail-java") > 2.0 * mpki("crypto"));
+    // Every app has a nonzero I-MPKI.
+    for app in m.apps.iter().map(|a| a.name) {
+        assert!(mpki(app) > 0.0, "{app} has zero MPKI");
+    }
+}
+
+#[test]
+fn fig6_shape_perfect_bounds_eip() {
+    let m = matrix();
+    for app in m.apps.iter().map(|a| a.name) {
+        let eip = m.speedup(app, "eip256");
+        let perfect = m.speedup(app, "perfect");
+        assert!(
+            perfect >= eip - 0.01,
+            "{app}: perfect {perfect} below eip {eip}"
+        );
+    }
+    assert!(m.geomean_speedup("perfect") > m.geomean_speedup("eip256"));
+}
+
+#[test]
+fn fig7_shape_most_pairs_fit_20_bits() {
+    let m = matrix();
+    for app in m.apps.iter().map(|a| a.name) {
+        let f = m.get(app, "ceip256").pair_stats.fit20_frac();
+        assert!(f > 0.6, "{app}: fit20 {f}");
+    }
+    // Managed runtimes have more far (JIT) code → lower fit20.
+    let java = m.get("abscheduler-java", "ceip256").pair_stats.fit20_frac();
+    let cpp = m.get("logging", "ceip256").pair_stats.fit20_frac();
+    assert!(java < cpp, "java {java} !< cpp {cpp}");
+}
+
+#[test]
+fn fig8_shape_window_covers_most_destinations() {
+    let m = matrix();
+    for app in m.apps.iter().map(|a| a.name) {
+        let f = m.get(app, "eip256").pair_stats.window_frac();
+        assert!(f > 0.5, "{app}: window coverage {f}");
+    }
+}
+
+#[test]
+fn fig9_shape_ceip_slightly_below_eip() {
+    let m = matrix();
+    let eip = m.geomean_speedup("eip256");
+    let ceip = m.geomean_speedup("ceip256");
+    assert!(eip > 1.0 && ceip > 1.0, "both must beat NL: {eip} {ceip}");
+    // CEIP below EIP (compression loses some destinations)…
+    assert!(ceip <= eip + 1e-6, "ceip {ceip} above eip {eip}");
+    // …but by a few percentage points of speedup (paper §X-C: "CEIP 256
+    // is on average 2.3% below EIP 256 in speedup").
+    let deficit_pp = (eip - ceip) * 100.0;
+    assert!(
+        (0.0..5.0).contains(&deficit_pp),
+        "CEIP speedup deficit out of band: {deficit_pp}pp"
+    );
+}
+
+#[test]
+fn fig10_shape_reduction_tracks_uncovered() {
+    let m = matrix();
+    // Apps with more uncovered destinations should lose more speedup;
+    // check the extremes rather than full rank correlation at small scale.
+    let mut pts: Vec<(f64, f64)> = m
+        .apps
+        .iter()
+        .map(|a| {
+            let unc = m.get(a.name, "ceip256").pair_stats.uncovered_frac();
+            let eip = m.speedup(a.name, "eip256") - 1.0;
+            let ceip = m.speedup(a.name, "ceip256") - 1.0;
+            let red = if eip > 1e-3 { (eip - ceip) / eip } else { 0.0 };
+            (unc, red)
+        })
+        .collect();
+    pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let lo_third: f64 = pts[..3].iter().map(|p| p.1).sum::<f64>() / 3.0;
+    let hi_third: f64 = pts[pts.len() - 3..].iter().map(|p| p.1).sum::<f64>() / 3.0;
+    assert!(
+        hi_third >= lo_third - 0.05,
+        "high-uncovered apps lose less: lo {lo_third} hi {hi_third}"
+    );
+}
+
+#[test]
+fn fig11_shape_mpki_reductions_positive() {
+    let m = matrix();
+    let mut pos = 0;
+    let mut total = 0;
+    for app in m.apps.iter().map(|a| a.name) {
+        let base = m.get(app, "nl").stats.mpki();
+        for cfg in ["eip256", "ceip256", "cheip2k"] {
+            total += 1;
+            if m.get(app, cfg).stats.mpki() < base {
+                pos += 1;
+            }
+        }
+    }
+    assert!(
+        pos as f64 / total as f64 > 0.8,
+        "only {pos}/{total} (app, cfg) pairs reduce MPKI"
+    );
+}
+
+#[test]
+fn fig12_shape_ceip_accuracy_above_eip() {
+    let m = matrix();
+    let mean_acc = |cfg: &str| {
+        m.apps
+            .iter()
+            .map(|a| m.get(a.name, cfg).stats.accuracy())
+            .sum::<f64>()
+            / m.apps.len() as f64
+    };
+    let eip = mean_acc("eip256");
+    let ceip = mean_acc("ceip256");
+    assert!(
+        ceip > eip,
+        "paper Fig 12: CEIP concentrates on dense regions: ceip {ceip} !> eip {eip}"
+    );
+}
+
+#[test]
+fn fig13_shape_compressed_state_is_smaller_speedup_close() {
+    let m = matrix();
+    let app = m.apps[0].name;
+    let eip_bytes = m.get(app, "eip256").metadata_bytes;
+    let ceip_bytes = m.get(app, "ceip256").metadata_bytes;
+    let cheip_bytes = m.get(app, "cheip2k").metadata_bytes;
+    assert!(ceip_bytes * 3 < eip_bytes, "compression ratio lost");
+    assert_eq!(cheip_bytes, 25_200, "§V budget (24.75 KB + history)");
+    // CHEIP-2K keeps most of CEIP-128's speedup (same vtable capacity).
+    let ceip128 = m.geomean_speedup("ceip128");
+    let cheip2k = m.geomean_speedup("cheip2k");
+    assert!(
+        cheip2k > 1.0 && cheip2k > (ceip128 - 1.0) * 0.5 + 1.0,
+        "virtualization lost too much: cheip2k {cheip2k} vs ceip128 {ceip128}"
+    );
+}
+
+#[test]
+fn rpc_tails_narrow_with_prefetching() {
+    let m = matrix();
+    let t = figures::rpc_tails(m);
+    // Parse P99 column (index 3) for nl (row 0) and ceip256 (row 2).
+    let p99 = |row: usize| t.rows[row][3].parse::<f64>().unwrap();
+    let nl = p99(0);
+    let ceip = p99(2);
+    assert!(
+        ceip < nl,
+        "paper §XI: prefetching must narrow P99: ceip {ceip} !< nl {nl}"
+    );
+}
+
+#[test]
+fn all_figure_tables_render() {
+    let m = matrix();
+    for t in [
+        figures::table1(),
+        figures::fig1(m),
+        figures::fig2(m),
+        figures::fig6(m),
+        figures::fig7(m),
+        figures::fig8(m),
+        figures::fig9(m),
+        figures::fig10(m),
+        figures::fig11(m),
+        figures::fig12(m),
+        figures::fig13(m),
+        figures::summary(m),
+    ] {
+        let md = t.markdown();
+        assert!(md.contains("###"), "{} renders", t.id);
+        assert!(!t.rows.is_empty(), "{} has rows", t.id);
+    }
+}

@@ -1,0 +1,172 @@
+//! Runtime integration: the AOT artifacts (JAX/Pallas → HLO text) must
+//! compute exactly what the native Rust mirror computes. This is the
+//! load-bearing test of the three-layer architecture: if it passes, the
+//! controller math running on the request path (native) and the math
+//! trained via PJRT are interchangeable.
+//!
+//! Requires `make artifacts` (the Makefile `test` target guarantees it).
+
+use slofetch::ml::features::DIM;
+use slofetch::ml::logistic::Weights;
+use slofetch::runtime::{artifacts_dir, PjrtEngine};
+use slofetch::util::rng::Rng;
+
+fn engine() -> PjrtEngine {
+    PjrtEngine::load(&artifacts_dir()).expect(
+        "AOT artifacts missing or stale — run `make artifacts` before `cargo test`",
+    )
+}
+
+fn rand_weights(rng: &mut Rng) -> Weights {
+    let mut w = [0.0f32; DIM];
+    for v in w.iter_mut() {
+        *v = rng.f32() * 2.0 - 1.0;
+    }
+    Weights {
+        w,
+        b: rng.f32() - 0.5,
+    }
+}
+
+fn rand_batch(rng: &mut Rng, rows: usize) -> Vec<f32> {
+    (0..rows * DIM).map(|_| rng.f32() * 2.0 - 1.0).collect()
+}
+
+#[test]
+fn score_parity_native_vs_pjrt() {
+    let e = engine();
+    let mut rng = Rng::new(42);
+    for rows in [1usize, 7, 64, 256] {
+        let wts = rand_weights(&mut rng);
+        let x = rand_batch(&mut rng, rows);
+        let pjrt = e.score(&wts.w, wts.b, &x).unwrap();
+        let native = wts.score_batch(&x);
+        assert_eq!(pjrt.len(), rows);
+        for (i, (a, b)) in pjrt.iter().zip(&native).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-5,
+                "rows={rows} i={i}: pjrt={a} native={b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn train_parity_native_vs_pjrt() {
+    let e = engine();
+    let mut rng = Rng::new(43);
+    let mut wts_native = rand_weights(&mut rng);
+    let wts0 = wts_native;
+    let x = rand_batch(&mut rng, 256);
+    let y: Vec<f32> = (0..256).map(|_| f32::from(rng.chance(0.5))).collect();
+    let lr = 0.1f32;
+
+    let native_loss = wts_native.train_step(&x, &y, lr);
+    let (w_pjrt, b_pjrt, loss_pjrt) = e.train_step(&wts0.w, wts0.b, &x, &y, lr).unwrap();
+
+    assert!(
+        (native_loss - loss_pjrt).abs() < 1e-4,
+        "loss: native={native_loss} pjrt={loss_pjrt}"
+    );
+    for i in 0..DIM {
+        assert!(
+            (wts_native.w[i] - w_pjrt[i]).abs() < 1e-5,
+            "w[{i}]: native={} pjrt={}",
+            wts_native.w[i],
+            w_pjrt[i]
+        );
+    }
+    assert!((wts_native.b - b_pjrt).abs() < 1e-5);
+}
+
+#[test]
+fn multi_step_training_stays_in_lockstep() {
+    // Run 10 alternating steps through both backends from the same start;
+    // divergence would indicate accumulation error or a math mismatch.
+    let e = engine();
+    let mut rng = Rng::new(44);
+    let mut native = rand_weights(&mut rng);
+    let mut pjrt_w = native.w;
+    let mut pjrt_b = native.b;
+    for step in 0..10 {
+        let x = rand_batch(&mut rng, 256);
+        let y: Vec<f32> = (0..256).map(|_| f32::from(rng.chance(0.5))).collect();
+        native.train_step(&x, &y, 0.05);
+        let (w2, b2, _) = e.train_step(&pjrt_w, pjrt_b, &x, &y, 0.05).unwrap();
+        pjrt_w = w2;
+        pjrt_b = b2;
+        for i in 0..DIM {
+            assert!(
+                (native.w[i] - pjrt_w[i]).abs() < 1e-4,
+                "diverged at step {step}, w[{i}]"
+            );
+        }
+    }
+}
+
+#[test]
+fn bandit_update_parity() {
+    let e = engine();
+    let mut rng = Rng::new(45);
+    let mut values = [0.0f32; 64];
+    for v in values.iter_mut() {
+        *v = rng.f32();
+    }
+    let out = e.bandit_update(&values, 13, 2.5, 0.25).unwrap();
+    for (i, (o, v)) in out.iter().zip(&values).enumerate() {
+        let expect = if i == 13 { v + 0.25 * (2.5 - v) } else { *v };
+        assert!((o - expect).abs() < 1e-6, "slot {i}: {o} vs {expect}");
+    }
+}
+
+#[test]
+fn training_on_separable_data_converges_via_pjrt() {
+    // Same convergence check as python/tests/test_kernel.py, but through
+    // the Rust-side PJRT path — proving the full loop works from Rust.
+    let e = engine();
+    let mut rng = Rng::new(46);
+    let mut true_w = [0.0f32; DIM];
+    for v in true_w.iter_mut() {
+        *v = rng.f32() * 2.0 - 1.0;
+    }
+    let x = rand_batch(&mut rng, 256);
+    let y: Vec<f32> = x
+        .chunks_exact(DIM)
+        .map(|row| {
+            let dot: f32 = row.iter().zip(&true_w).map(|(a, b)| a * b).sum();
+            f32::from(dot > 0.0)
+        })
+        .collect();
+    let mut w = [0.0f32; DIM];
+    let mut b = 0.0f32;
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..60 {
+        let (w2, b2, loss) = e.train_step(&w, b, &x, &y, 0.5).unwrap();
+        w = w2;
+        b = b2;
+        first.get_or_insert(loss);
+        last = loss;
+    }
+    let first = first.unwrap();
+    assert!(
+        last < 0.4 * first,
+        "PJRT training failed to converge: {first} -> {last}"
+    );
+}
+
+#[test]
+fn rejects_malformed_batches() {
+    let e = engine();
+    let w = [0.0f32; DIM];
+    // Wrong row width.
+    assert!(e.score(&w, 0.0, &[0.0; 17]).is_err());
+    // Oversized batch.
+    assert!(e.score(&w, 0.0, &vec![0.0; (256 + 1) * DIM]).is_err());
+    // Short train batch.
+    assert!(e
+        .train_step(&w, 0.0, &[0.0; DIM], &[0.0], 0.1)
+        .is_err());
+    // Bandit slot out of range.
+    assert!(e.bandit_update(&[0.0; 64], 64, 1.0, 0.1).is_err());
+}

@@ -1,0 +1,249 @@
+//! Cross-module integration: trace → codec → simulator → controller →
+//! deployment playbook → RPC layer, plus failure-injection cases.
+
+use slofetch::config::{ControllerCfg, PrefetcherKind, SimConfig};
+use slofetch::coordinator::deploy::{DeployStage, DeploymentManager};
+use slofetch::coordinator::fleet::{run_fleet, FleetJob};
+use slofetch::rpc::{self, QueueParams, ServiceChain};
+use slofetch::sim::engine;
+use slofetch::trace::gen::{self, apps};
+use slofetch::trace::{codec, Record};
+
+#[test]
+fn trace_file_roundtrip_preserves_sim_results() {
+    // Simulating a trace that went through the codec must give identical
+    // results to the in-memory stream (bit-exact substrate).
+    let spec = apps::app("serde").unwrap();
+    let (meta, records, _) = gen::generate(&spec, 9, 60_000);
+    let dir = std::env::temp_dir().join("slofetch_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("serde.slft");
+    codec::write_trace_file(&path, &meta, &records).unwrap();
+    let (meta2, records2) = codec::read_trace_file(&path).unwrap();
+    assert_eq!(meta.app, meta2.app);
+    assert_eq!(records, records2);
+    let cfg = SimConfig {
+        prefetcher: PrefetcherKind::Ceip { entries: 2048, window: 8, whole_window: true },
+        ..Default::default()
+    };
+    let a = engine::run(&cfg, &records);
+    let b = engine::run(&cfg, &records2);
+    assert_eq!(a.stats.cycles, b.stats.cycles);
+    assert_eq!(a.stats.pf_issued, b.stats.pf_issued);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn full_pipeline_trace_to_tail_latency() {
+    // The end-to-end path every figure depends on: generate traces, run
+    // the fleet over configs, feed IPCs into the queueing layer.
+    let jobs: Vec<FleetJob> = ["admission", "featurestore-go", "mlserve"]
+        .iter()
+        .flat_map(|app| {
+            [PrefetcherKind::NextLineOnly, PrefetcherKind::Cheip {
+                vt_entries: 2048,
+                window: 8,
+                whole_window: true,
+            }]
+            .into_iter()
+            .map(|kind| FleetJob {
+                app: apps::app(app).unwrap(),
+                cfg: SimConfig {
+                    prefetcher: kind,
+                    ..Default::default()
+                },
+                records: 120_000,
+                trace_seed: 5,
+            })
+        })
+        .collect();
+    let cells = run_fleet(jobs, 4);
+    assert_eq!(cells.len(), 6);
+    let chain_for = |offset: usize| {
+        ServiceChain::control_plane(
+            &[
+                ("admission".into(), cells[offset].result.ipc()),
+                ("featurestore".into(), cells[2 + offset].result.ipc()),
+                ("mlserve".into(), cells[4 + offset].result.ipc()),
+            ],
+            25_000.0,
+            2.5,
+        )
+    };
+    let nl_chain = chain_for(0);
+    let pf_chain = chain_for(1);
+    let lambda = nl_chain.bottleneck_rate() * 0.65;
+    let run_chain = |chain: &ServiceChain| {
+        rpc::simulate_chain(
+            chain,
+            &QueueParams {
+                utilization: lambda / chain.bottleneck_rate(),
+                requests: 15_000,
+                seed: 2,
+            },
+        )
+    };
+    let nl = run_chain(&nl_chain);
+    let pf = run_chain(&pf_chain);
+    assert!(
+        pf.p95_us < nl.p95_us,
+        "CHEIP must narrow P95: {} !< {}",
+        pf.p95_us,
+        nl.p95_us
+    );
+}
+
+#[test]
+fn deployment_playbook_end_to_end() {
+    let records = gen::generate_records(&apps::app("admission").unwrap(), 3, 200_000);
+    let dm = DeploymentManager::new(
+        SimConfig::default(),
+        SimConfig {
+            prefetcher: PrefetcherKind::Cheip { vt_entries: 2048, window: 8, whole_window: true },
+            controller: Some(ControllerCfg {
+                train_interval_cycles: 150_000,
+                ..Default::default()
+            }),
+            ..Default::default()
+        },
+    );
+    let out = dm.run(&records);
+    assert_eq!(out.final_stage, DeployStage::Steady, "{:#?}", out.reports);
+}
+
+#[test]
+fn budget_cap_bounds_issue_rate_end_to_end() {
+    let records = gen::generate_records(&apps::app("websearch").unwrap(), 5, 150_000);
+    let uncapped = engine::run(
+        &SimConfig {
+            prefetcher: PrefetcherKind::Ceip { entries: 4096, window: 8, whole_window: true },
+            controller: Some(ControllerCfg::default()),
+            ..Default::default()
+        },
+        &records,
+    );
+    let capped = engine::run(
+        &SimConfig {
+            prefetcher: PrefetcherKind::Ceip { entries: 4096, window: 8, whole_window: true },
+            controller: Some(ControllerCfg {
+                issue_budget_per_kcycle: 4,
+                ..Default::default()
+            }),
+            ..Default::default()
+        },
+        &records,
+    );
+    assert!(
+        capped.stats.pf_issued < uncapped.stats.pf_issued,
+        "budget must bite: {} !< {}",
+        capped.stats.pf_issued,
+        uncapped.stats.pf_issued
+    );
+    // The cap maps to a bandwidth SLO: DRAM traffic must drop too.
+    assert!(capped.stats.dram_bytes <= uncapped.stats.dram_bytes);
+}
+
+#[test]
+fn shadow_mode_issues_nothing_but_logs_utility() {
+    // §VI-A step 1: decisions are made and logged; no fills happen beyond
+    // the always-on NL baseline.
+    let records = gen::generate_records(&apps::app("websearch").unwrap(), 5, 150_000);
+    let kind = PrefetcherKind::Ceip { entries: 4096, window: 8, whole_window: true };
+    let nl_only = engine::run(&SimConfig::default(), &records);
+    let shadow = engine::run(
+        &SimConfig {
+            prefetcher: kind.clone(),
+            controller: Some(ControllerCfg {
+                shadow: true,
+                ..Default::default()
+            }),
+            ..Default::default()
+        },
+        &records,
+    );
+    let live = engine::run(
+        &SimConfig {
+            prefetcher: kind,
+            controller: Some(ControllerCfg::default()),
+            ..Default::default()
+        },
+        &records,
+    );
+    assert!(shadow.stats.shadow_would_issue > 0, "nothing logged in shadow");
+    assert!(shadow.stats.shadow_bytes > 0);
+    // Shadow issues exactly what NL-only issues (the NL baseline).
+    assert_eq!(shadow.stats.pf_issued, nl_only.stats.pf_issued);
+    // And performs like the baseline, not like the live candidate.
+    assert!((shadow.ipc() - nl_only.ipc()).abs() / nl_only.ipc() < 0.002);
+    assert!(live.stats.pf_issued > shadow.stats.pf_issued);
+}
+
+#[test]
+fn anomaly_guardrail_fires_on_churny_workloads() {
+    // §VII: anomalous miss bursts must decay confidence. The churniest
+    // app (canary flips every 250k records) must trigger at least once.
+    let records =
+        gen::generate_records(&apps::app("abscheduler-java").unwrap(), 13, 600_000);
+    let r = engine::run(
+        &SimConfig {
+            prefetcher: PrefetcherKind::Ceip { entries: 4096, window: 8, whole_window: true },
+            ..Default::default()
+        },
+        &records,
+    );
+    assert!(r.stats.anomaly_resets > 0, "guardrail never fired");
+    // Steady-state app: must NOT fire.
+    let steady = gen::generate_records(&apps::app("crypto").unwrap(), 13, 300_000);
+    let rs = engine::run(&SimConfig::default(), &steady);
+    assert_eq!(rs.stats.anomaly_resets, 0, "false positive on steady state");
+}
+
+#[test]
+fn corrupted_trace_fails_loudly_not_silently() {
+    let spec = apps::app("crypto").unwrap();
+    let (meta, records, _) = gen::generate(&spec, 1, 1_000);
+    let mut buf = Vec::new();
+    codec::write_trace(&mut buf, &meta, records.iter().copied(), 1_000).unwrap();
+    // Flip the magic.
+    buf[0] ^= 0xFF;
+    assert!(codec::TraceReader::new(std::io::Cursor::new(buf)).is_err());
+}
+
+#[test]
+fn empty_and_tiny_traces_are_safe() {
+    let cfg = SimConfig::default();
+    let r = engine::run(&cfg, &[]);
+    assert_eq!(r.stats.instrs, 0);
+    assert_eq!(r.ipc(), 0.0);
+    let one = [Record::fetch(42, 16, 0)];
+    let r = engine::run(&cfg, &one);
+    assert_eq!(r.stats.instrs, 16);
+    assert!(r.stats.cycles > 0.0);
+}
+
+#[test]
+fn phase_churn_degrades_static_prefetcher_less_with_controller() {
+    // Churn-heavy app: the controller should not *hurt* and usually trims
+    // useless issues during phase flips.
+    let records = gen::generate_records(&apps::app("abscheduler-java").unwrap(), 11, 200_000);
+    let base = SimConfig {
+        prefetcher: PrefetcherKind::Ceip { entries: 4096, window: 8, whole_window: true },
+        ..Default::default()
+    };
+    let plain = engine::run(&base, &records);
+    let ml = engine::run(
+        &SimConfig {
+            controller: Some(ControllerCfg {
+                train_interval_cycles: 100_000,
+                ..Default::default()
+            }),
+            ..base
+        },
+        &records,
+    );
+    let ipc_ratio = ml.ipc() / plain.ipc();
+    assert!(
+        ipc_ratio > 0.97,
+        "controller cost too high under churn: {ipc_ratio}"
+    );
+}

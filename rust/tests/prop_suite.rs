@@ -1,0 +1,145 @@
+//! Cross-module property suite: invariants that must hold for arbitrary
+//! generated inputs (coordinator routing/batching/state per the project
+//! testing bar, plus prefetcher/codec laws at system level).
+
+use slofetch::config::{PrefetcherKind, SimConfig};
+use slofetch::prefetch::centry::{CEntry, Mark};
+use slofetch::sim::engine;
+use slofetch::trace::{codec, Kind, Record, TraceMeta};
+use slofetch::util::prop;
+use slofetch::util::rng::Rng;
+
+/// Random-but-clustered record stream (what the generator would emit).
+fn record_stream() -> impl FnMut(&mut Rng, usize) -> Vec<Record> {
+    move |r, size| {
+        let mut out = Vec::with_capacity(size * 4);
+        let mut line = r.range(0x40_0000, 0x41_0000);
+        for _ in 0..size * 4 {
+            match r.below(10) {
+                0 => line = r.range(0x40_0000, 0x41_0000),
+                1 => {
+                    out.push(Record::load(r.range(0x100_0000, 0x101_0000), 0));
+                    continue;
+                }
+                _ => line += 1,
+            }
+            out.push(Record::fetch(line, 1 + r.below(16) as u8, r.below(4) as u8));
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_engine_accounting_identities() {
+    prop::check_unit(
+        "engine accounting identities",
+        25,
+        record_stream(),
+        |records| {
+            for kind in [
+                PrefetcherKind::NextLineOnly,
+                PrefetcherKind::Eip { entries: 512 },
+                PrefetcherKind::Ceip { entries: 512, window: 8, whole_window: true },
+                PrefetcherKind::Cheip { vt_entries: 2048, window: 8, whole_window: true },
+            ] {
+                let cfg = SimConfig {
+                    prefetcher: kind,
+                    ..Default::default()
+                };
+                let r = engine::run(&cfg, records);
+                let s = &r.stats;
+                // Identity: every fetch is a hit, covered miss, or miss.
+                assert!(s.pf_timely + s.pf_late + s.l1i_demand_misses <= s.l1i_accesses);
+                // Useful prefetches cannot exceed issued.
+                assert!(s.pf_timely + s.pf_late <= s.pf_issued);
+                // Useless evictions cannot exceed issued.
+                assert!(s.pf_useless <= s.pf_issued);
+                // Instructions accumulate exactly.
+                let expect: u64 = records
+                    .iter()
+                    .filter(|r| r.kind == Kind::Fetch)
+                    .map(|r| r.instrs as u64)
+                    .sum();
+                assert_eq!(s.instrs, expect);
+                // Cycle accounting closes.
+                assert!((s.topdown.total() - s.cycles).abs() <= 1.0 + s.cycles * 1e-9);
+                // Rates in range.
+                for v in [s.accuracy(), s.coverage(), s.timeliness()] {
+                    assert!((0.0..=1.0).contains(&v));
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_codec_total_roundtrip() {
+    prop::check_unit("codec roundtrip (system)", 30, record_stream(), |records| {
+        let meta = TraceMeta {
+            app: "prop".into(),
+            seed: 0,
+            line_bytes: 64,
+            records: records.len() as u64,
+        };
+        let mut buf = Vec::new();
+        codec::write_trace(&mut buf, &meta, records.iter().copied(), records.len() as u64)
+            .unwrap();
+        let back: Vec<Record> = codec::TraceReader::new(std::io::Cursor::new(buf))
+            .unwrap()
+            .map(|x| x.unwrap())
+            .collect();
+        assert_eq!(&back, records);
+    });
+}
+
+#[test]
+fn prop_centry_mark_laws() {
+    // For any source/destination sequence in one 20-bit region:
+    // (1) pack/unpack is lossless, (2) the creating mark is never silently
+    // lost when it's the only mark, (3) density ∈ [1/W, 1] when any mark
+    // exists.
+    prop::check_unit(
+        "centry mark laws",
+        80,
+        |r: &mut Rng, size| {
+            let src = 0x0040_0000u64 | r.below(1 << 20);
+            let dsts: Vec<u64> = (0..size.max(1))
+                .map(|_| (src >> 20 << 20) | r.below(1 << 20))
+                .collect();
+            (src, dsts)
+        },
+        |(src, dsts)| {
+            let mut e = CEntry::new(8, dsts[0]);
+            assert_eq!(e.marked(), 1);
+            for &d in &dsts[1..] {
+                let m = e.mark(*src, d);
+                assert!(!matches!(m, Mark::TooFar), "same-region dst rejected");
+                assert!(e.marked() >= 1, "entry lost all marks");
+                assert!(e.density() > 0.0 && e.density() <= 1.0);
+                let packed = e.pack();
+                assert_eq!(CEntry::unpack(packed, 8), e);
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_deterministic_simulation() {
+    prop::check_unit(
+        "simulation determinism",
+        10,
+        record_stream(),
+        |records| {
+            let cfg = SimConfig {
+                prefetcher: PrefetcherKind::Ceip { entries: 1024, window: 8, whole_window: true },
+                controller: Some(Default::default()),
+                ..Default::default()
+            };
+            let a = engine::run(&cfg, records);
+            let b = engine::run(&cfg, records);
+            assert_eq!(a.stats.cycles, b.stats.cycles);
+            assert_eq!(a.stats.pf_issued, b.stats.pf_issued);
+            assert_eq!(a.stats.pf_skipped, b.stats.pf_skipped);
+        },
+    );
+}
