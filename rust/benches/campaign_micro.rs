@@ -1,0 +1,51 @@
+//! Campaign throughput bench: cells/sec at 1 vs N worker threads on a
+//! reduced-records matrix, tracking the parallel speedup across PRs.
+//! Scale with SLOFETCH_BENCH_RECORDS (default 60k records/cell).
+
+use slofetch::campaign::{runner, CampaignSpec};
+use slofetch::util::timer::time_it;
+
+fn main() {
+    let records = std::env::var("SLOFETCH_BENCH_RECORDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60_000u64);
+    let spec = CampaignSpec {
+        name: "bench".into(),
+        apps: vec![
+            "websearch".into(),
+            "admission".into(),
+            "serde".into(),
+            "crypto".into(),
+        ],
+        prefetchers: vec!["nl".into(), "eip256".into(), "ceip256".into(), "cheip2k".into()],
+        records,
+        seeds: vec![7],
+        ml: vec![false],
+        churn_scale: vec![1.0],
+    };
+    let cells: Vec<runner::Cell> =
+        spec.expand().unwrap().into_iter().map(|c| c.cell).collect();
+    let n = cells.len();
+    let max_threads = runner::default_threads();
+    println!("== campaign_micro: {n} cells x {records} records ==");
+
+    let mut serial_secs = 0.0;
+    let mut threads = 1usize;
+    loop {
+        let (out, secs) = time_it(|| runner::run_cells(&cells, threads));
+        assert_eq!(out.len(), n);
+        if threads == 1 {
+            serial_secs = secs;
+        }
+        println!(
+            "threads={threads:<3} {:>6.2} cells/s  ({secs:.2}s, speedup {:.2}x)",
+            n as f64 / secs,
+            serial_secs / secs
+        );
+        if threads >= max_threads {
+            break;
+        }
+        threads = (threads * 2).min(max_threads);
+    }
+}

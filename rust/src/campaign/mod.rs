@@ -1,0 +1,283 @@
+//! Experiment-campaign subsystem: scenario matrix → sharded execution →
+//! JSONL result store → aggregate reports (DESIGN.md "Campaign
+//! subsystem").
+//!
+//! A campaign is a declarative sweep over the paper's evaluation axes
+//! ([`spec::CampaignSpec`]): apps × prefetchers × seeds × ML gate ×
+//! churn regimes. [`runner`] shards the expanded cells across worker
+//! threads; [`store`] persists one JSONL line per cell and lets repeated
+//! campaigns resume instead of recompute; [`report`] aggregates the
+//! store back into the markdown tables the figure harness uses.
+//!
+//! Determinism contract: cells are seeded per-key ([`spec::cell_seed`]),
+//! executed independently, and written in spec-expansion order — the
+//! result file is byte-identical for any `--threads` value. Lines are
+//! flushed incrementally (as soon as a cell *and* its baseline finish),
+//! so a killed campaign keeps its completed prefix and resumes from
+//! there.
+
+pub mod report;
+pub mod runner;
+pub mod spec;
+pub mod store;
+
+pub use spec::CampaignSpec;
+pub use store::ResultStore;
+
+use anyhow::Result;
+use std::collections::HashMap;
+use store::CellRecord;
+
+/// What one `run_to_store` call did.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CampaignOutcome {
+    /// Cells in the expanded matrix.
+    pub total: usize,
+    /// Cells simulated in this run.
+    pub computed: usize,
+    /// Cells skipped because the store already had them.
+    pub skipped: usize,
+}
+
+/// Baseline labels in preference order: the plain `nl` cell, with
+/// `nl+ml` as the fallback for all-ML campaigns. Single source for both
+/// the run-time speedup computation and the report layer.
+pub(crate) const BASELINE_LABELS: [&str; 2] = ["nl", "nl+ml"];
+
+/// Scenario coordinates that identify a baseline group: speedup compares
+/// against the `nl` cell sharing the same app, scale, trace seed, and
+/// churn regime.
+pub(crate) type Group = (String, u64, u64, u64);
+
+pub(crate) fn group_of(app: &str, records: u64, trace_seed: u64, churn_scale: f64) -> Group {
+    (app.to_string(), records, trace_seed, churn_scale.to_bits())
+}
+
+/// Where a scenario's baseline IPC comes from.
+#[derive(Clone, Copy)]
+enum Baseline {
+    /// Reloaded from a previous run's store line.
+    Stored(f64),
+    /// Computed by this run: index into the pending-cell list.
+    Pending(usize),
+}
+
+/// Baseline lookup per group, preferring the plain `nl` cell and falling
+/// back to `nl+ml` (so an all-ML campaign still gets speedups).
+#[derive(Default)]
+struct Baselines {
+    plain: HashMap<Group, Baseline>,
+    gated: HashMap<Group, Baseline>,
+}
+
+impl Baselines {
+    fn insert(&mut self, label: &str, group: Group, src: Baseline) {
+        if label == BASELINE_LABELS[0] {
+            self.plain.insert(group, src);
+        } else if label == BASELINE_LABELS[1] {
+            self.gated.insert(group, src);
+        }
+    }
+
+    fn get(&self, group: &Group) -> Option<Baseline> {
+        self.plain.get(group).or_else(|| self.gated.get(group)).copied()
+    }
+}
+
+/// Run a campaign against a store: expand the matrix, skip cells the
+/// store already holds, shard the rest across `threads` workers
+/// (0 = auto), compute speedups against each scenario's `nl` baseline,
+/// and append results incrementally in expansion order.
+pub fn run_to_store(
+    spec: &CampaignSpec,
+    threads: usize,
+    store: &mut ResultStore,
+) -> Result<CampaignOutcome> {
+    let cells = spec.expand()?;
+    let total = cells.len();
+    let pending: Vec<&spec::ExpandedCell> =
+        cells.iter().filter(|c| !store.contains(&c.key)).collect();
+    let cell_list: Vec<runner::Cell> = pending.iter().map(|c| c.cell.clone()).collect();
+    let n = pending.len();
+
+    let mut baselines = Baselines::default();
+    for r in store.records() {
+        baselines.insert(
+            &r.label,
+            group_of(&r.app, r.records, r.trace_seed, r.churn_scale),
+            Baseline::Stored(r.ipc),
+        );
+    }
+    for (i, meta) in pending.iter().enumerate() {
+        baselines.insert(
+            &meta.cell.label,
+            group_of(
+                meta.cell.app.name,
+                meta.cell.records,
+                meta.cell.trace_seed,
+                meta.churn_scale,
+            ),
+            Baseline::Pending(i),
+        );
+    }
+
+    // Stream results into the store: the write frontier advances in
+    // expansion order as soon as a cell and its baseline have finished,
+    // so a killed run keeps every flushed line.
+    let mut results: Vec<Option<crate::sim::engine::SimResult>> =
+        (0..n).map(|_| None).collect();
+    let mut write_pos = 0usize;
+    let mut computed = 0usize;
+    let mut io_err: Option<anyhow::Error> = None;
+    // The runner stops invoking the callback after the first `false`
+    // (cancellation), so no io_err re-entry guard is needed here.
+    runner::run_cells_each(&cell_list, threads, |i, result| {
+        results[i] = Some(result);
+        while write_pos < n {
+            let result = match &results[write_pos] {
+                Some(r) => r,
+                None => break,
+            };
+            let meta = pending[write_pos];
+            let group = group_of(
+                meta.cell.app.name,
+                meta.cell.records,
+                meta.cell.trace_seed,
+                meta.churn_scale,
+            );
+            // A baseline still in flight stalls the frontier (never a
+            // deadlock: every pending cell eventually completes).
+            let base_ipc = match baselines.get(&group) {
+                None => None,
+                Some(Baseline::Stored(v)) => Some(v),
+                Some(Baseline::Pending(j)) => match &results[j] {
+                    Some(b) => Some(b.ipc()),
+                    None => break,
+                },
+            };
+            let mut rec = CellRecord::from_result(
+                &meta.key,
+                meta.ml,
+                meta.churn_scale,
+                meta.cell.records,
+                meta.cell.trace_seed,
+                meta.cell.cfg.seed,
+                result,
+            );
+            rec.speedup = base_ipc.map(|base| rec.ipc / base);
+            match store.push(rec) {
+                Ok(true) => computed += 1,
+                Ok(false) => {}
+                Err(e) => {
+                    // Cancel the sweep: simulating cells whose results
+                    // can no longer be persisted is wasted compute.
+                    io_err = Some(e);
+                    return false;
+                }
+            }
+            write_pos += 1;
+        }
+        true
+    });
+    if let Some(e) = io_err {
+        return Err(e);
+    }
+    Ok(CampaignOutcome { total, computed, skipped: total - computed })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_spec() -> CampaignSpec {
+        CampaignSpec {
+            name: "quick".into(),
+            apps: vec!["crypto".into(), "serde".into()],
+            prefetchers: vec!["nl".into(), "eip256".into()],
+            records: 15_000,
+            seeds: vec![3],
+            ml: vec![false],
+            churn_scale: vec![1.0],
+        }
+    }
+
+    #[test]
+    fn runs_full_matrix_and_fills_speedups() {
+        let spec = quick_spec();
+        let mut store = ResultStore::in_memory();
+        let out = run_to_store(&spec, 2, &mut store).unwrap();
+        assert_eq!(out, CampaignOutcome { total: 4, computed: 4, skipped: 0 });
+        assert_eq!(store.len(), 4);
+        for rec in store.records() {
+            let s = rec.speedup.expect("nl baseline present → speedup set");
+            if rec.label == "nl" {
+                assert_eq!(s, 1.0);
+            } else {
+                assert!(s > 0.5 && s < 3.0, "implausible speedup {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn second_run_skips_everything() {
+        let spec = quick_spec();
+        let mut store = ResultStore::in_memory();
+        run_to_store(&spec, 2, &mut store).unwrap();
+        let again = run_to_store(&spec, 2, &mut store).unwrap();
+        assert_eq!(again, CampaignOutcome { total: 4, computed: 0, skipped: 4 });
+        assert_eq!(store.len(), 4);
+    }
+
+    #[test]
+    fn resume_uses_stored_baseline_for_new_cells() {
+        let mut spec = quick_spec();
+        spec.prefetchers = vec!["nl".into()];
+        let mut store = ResultStore::in_memory();
+        run_to_store(&spec, 1, &mut store).unwrap();
+        // Extend the matrix: only the new prefetcher's cells run, and
+        // their speedup comes from the stored nl baseline.
+        spec.prefetchers = vec!["nl".into(), "ceip256".into()];
+        let out = run_to_store(&spec, 1, &mut store).unwrap();
+        assert_eq!(out.computed, 2);
+        assert_eq!(out.skipped, 2);
+        for rec in store.records().iter().filter(|r| r.label == "ceip256") {
+            assert!(rec.speedup.is_some(), "baseline lookup across runs failed");
+        }
+    }
+
+    #[test]
+    fn baseline_listed_after_dependents_still_resolves() {
+        // nl *last* in the prefetcher axis: the write frontier must
+        // stall until the baseline lands, then flush with speedups.
+        let spec = CampaignSpec {
+            prefetchers: vec!["eip256".into(), "nl".into()],
+            ..quick_spec()
+        };
+        let mut store = ResultStore::in_memory();
+        run_to_store(&spec, 2, &mut store).unwrap();
+        assert_eq!(store.len(), 4);
+        for rec in store.records() {
+            assert!(rec.speedup.is_some(), "{}: speedup missing", rec.key);
+        }
+        // Emission stayed in expansion order.
+        assert_eq!(store.records()[0].label, "eip256");
+        assert_eq!(store.records()[1].label, "nl");
+    }
+
+    #[test]
+    fn all_ml_campaign_falls_back_to_gated_baseline() {
+        let spec = CampaignSpec {
+            prefetchers: vec!["nl".into(), "ceip256".into()],
+            ml: vec![true],
+            ..quick_spec()
+        };
+        let mut store = ResultStore::in_memory();
+        run_to_store(&spec, 2, &mut store).unwrap();
+        for rec in store.records() {
+            let s = rec.speedup.expect("nl+ml fallback baseline missing");
+            if rec.label == "nl+ml" {
+                assert_eq!(s, 1.0);
+            }
+        }
+    }
+}

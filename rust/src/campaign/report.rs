@@ -1,0 +1,309 @@
+//! Aggregate reports over a campaign's result store: per-app speedup
+//! matrix, geomean summary per config, and best-config-per-app — the
+//! same [`crate::figures::report::Table`] markdown the figure harness
+//! emits, so campaign output drops straight into EXPERIMENTS.md.
+
+use super::store::{CellRecord, ResultStore};
+use super::{group_of, Group, BASELINE_LABELS};
+use crate::figures::report::{f2, f3, kb, pct, Table};
+use std::collections::{BTreeMap, HashMap};
+
+/// Geometric mean (0 when empty).
+fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let logs: f64 = xs.iter().map(|x| x.max(1e-12).ln()).sum();
+    (logs / xs.len() as f64).exp()
+}
+
+/// One-pass index over the store, so table builders stay O(n): records
+/// grouped by (app, label) plus the baseline IPC per scenario group.
+struct Index<'a> {
+    /// (app, label) → records, sorted by key (stable table order).
+    cells: BTreeMap<(&'a str, &'a str), Vec<&'a CellRecord>>,
+    /// Scenario group → baseline IPC ([`BASELINE_LABELS`] preference).
+    baseline: HashMap<Group, f64>,
+}
+
+impl<'a> Index<'a> {
+    fn build(store: &'a ResultStore) -> Index<'a> {
+        let mut cells: BTreeMap<(&str, &str), Vec<&CellRecord>> = BTreeMap::new();
+        let mut baseline = HashMap::new();
+        // Lowest preference first, so preferred labels overwrite.
+        for pass_label in BASELINE_LABELS.iter().rev() {
+            for r in store.records().iter().filter(|r| &r.label == pass_label) {
+                baseline.insert(
+                    group_of(&r.app, r.records, r.trace_seed, r.churn_scale),
+                    r.ipc,
+                );
+            }
+        }
+        for r in store.records() {
+            cells.entry((r.app.as_str(), r.label.as_str())).or_default().push(r);
+        }
+        Index { cells, baseline }
+    }
+
+    fn apps(&self) -> Vec<&'a str> {
+        let mut out: Vec<&str> = self.cells.keys().map(|(a, _)| *a).collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    fn labels(&self) -> Vec<&'a str> {
+        let mut out: Vec<&str> = self.cells.keys().map(|(_, l)| *l).collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// A record's speedup, recomputed from the indexed baselines when
+    /// the line predates its baseline (incremental campaigns append the
+    /// baseline later).
+    fn speedup_of(&self, r: &'a CellRecord) -> Option<f64> {
+        r.speedup.or_else(|| {
+            self.baseline
+                .get(&group_of(&r.app, r.records, r.trace_seed, r.churn_scale))
+                .map(|base| r.ipc / base)
+        })
+    }
+
+    /// Speedups for one (app, label) across the scenario axes.
+    fn speedups(&self, app: &'a str, label: &'a str) -> Vec<f64> {
+        self.cells
+            .get(&(app, label))
+            .map(|rs| rs.iter().filter_map(|r| self.speedup_of(r)).collect())
+            .unwrap_or_default()
+    }
+}
+
+/// Per-app speedup table: apps × configs, geomean across seeds/churn.
+pub fn per_app_speedup(store: &ResultStore) -> Table {
+    let idx = Index::build(store);
+    let labels = idx.labels();
+    let mut headers: Vec<&str> = vec!["app"];
+    headers.extend(&labels);
+    let mut t = Table::new(
+        "campaign_speedup",
+        "Campaign speedup over the nl baseline (geomean across seeds/churn)",
+        &headers,
+    );
+    for app in idx.apps() {
+        let mut row = vec![app.to_string()];
+        for &label in &labels {
+            let s = idx.speedups(app, label);
+            row.push(if s.is_empty() { "-".into() } else { f3(geomean(&s)) });
+        }
+        t.row(row);
+    }
+    t.note("'-' = no nl baseline cell in this campaign for that scenario");
+    t
+}
+
+/// Per-config summary: geomean speedup across apps, mean accuracy, mean
+/// MPKI, metadata footprint, cell count.
+pub fn geomean_summary(store: &ResultStore) -> Table {
+    let idx = Index::build(store);
+    let apps = idx.apps();
+    let mut t = Table::new(
+        "campaign_summary",
+        "Campaign geomean summary per config",
+        &["config", "geomean speedup", "mean accuracy", "mean I-MPKI", "metadata", "cells"],
+    );
+    for label in idx.labels() {
+        let per_app: Vec<f64> = apps
+            .iter()
+            .map(|a| idx.speedups(a, label))
+            .filter(|s| !s.is_empty())
+            .map(|s| geomean(&s))
+            .collect();
+        let cells: Vec<&CellRecord> = apps
+            .iter()
+            .filter_map(|a| idx.cells.get(&(*a, label)))
+            .flatten()
+            .copied()
+            .collect();
+        let n = cells.len().max(1) as f64;
+        let mean_acc = cells.iter().map(|r| r.accuracy).sum::<f64>() / n;
+        let mean_mpki = cells.iter().map(|r| r.mpki).sum::<f64>() / n;
+        let meta = cells.iter().map(|r| r.metadata_bytes).max().unwrap_or(0);
+        t.row(vec![
+            label.to_string(),
+            if per_app.is_empty() { "-".into() } else { f3(geomean(&per_app)) },
+            pct(mean_acc),
+            f2(mean_mpki),
+            kb(meta),
+            cells.len().to_string(),
+        ]);
+    }
+    t
+}
+
+/// Best non-baseline config per app, by geomean speedup.
+pub fn best_config(store: &ResultStore) -> Table {
+    let idx = Index::build(store);
+    let labels = idx.labels();
+    let mut t = Table::new(
+        "campaign_best",
+        "Best config per app (by speedup; nl/perfect excluded)",
+        &["app", "best config", "speedup", "metadata"],
+    );
+    for app in idx.apps() {
+        let mut best: Option<(&str, f64)> = None;
+        for &label in &labels {
+            // Baselines (nl, nl+ml) and the oracle are not candidates.
+            if BASELINE_LABELS.contains(&label) || label.starts_with("perfect") {
+                continue;
+            }
+            let s = idx.speedups(app, label);
+            if s.is_empty() {
+                continue;
+            }
+            let g = geomean(&s);
+            if best.map(|(_, b)| g > b).unwrap_or(true) {
+                best = Some((label, g));
+            }
+        }
+        match best {
+            Some((label, g)) => {
+                let meta = idx
+                    .cells
+                    .get(&(app, label))
+                    .into_iter()
+                    .flatten()
+                    .map(|r| r.metadata_bytes)
+                    .max()
+                    .unwrap_or(0);
+                t.row(vec![app.to_string(), label.to_string(), f3(g), kb(meta)]);
+            }
+            None => {
+                t.row(vec![app.to_string(), "-".into(), "-".into(), "-".into()]);
+            }
+        }
+    }
+    t
+}
+
+/// All campaign tables, in print order.
+pub fn reports(store: &ResultStore) -> Vec<Table> {
+    vec![per_app_speedup(store), geomean_summary(store), best_config(store)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::store::ResultStore;
+
+    fn rec(app: &str, label: &str, speedup: Option<f64>) -> CellRecord {
+        CellRecord {
+            key: format!("{app}|{label}"),
+            app: app.into(),
+            label: label.into(),
+            records: 1000,
+            trace_seed: 7,
+            sim_seed: 1,
+            ml: false,
+            churn_scale: 1.0,
+            ipc: 2.0,
+            speedup,
+            mpki: 10.0,
+            l1d_mpki: 2.0,
+            accuracy: 0.75,
+            coverage: 0.5,
+            timeliness: 0.9,
+            metadata_bytes: 4096,
+            pf_issued: 10,
+            pf_timely: 7,
+            pf_late: 1,
+            pf_useless: 2,
+            pf_skipped: 0,
+            instrs: 1000,
+            cycles: 500.0,
+            controller: None,
+        }
+    }
+
+    fn store() -> ResultStore {
+        let mut s = ResultStore::in_memory();
+        s.push(rec("crypto", "nl", Some(1.0))).unwrap();
+        s.push(rec("crypto", "eip256", Some(1.08))).unwrap();
+        s.push(rec("crypto", "ceip256", Some(1.06))).unwrap();
+        s.push(rec("serde", "nl", Some(1.0))).unwrap();
+        s.push(rec("serde", "eip256", Some(1.12))).unwrap();
+        s.push(rec("serde", "ceip256", Some(1.11))).unwrap();
+        s
+    }
+
+    #[test]
+    fn geomean_math() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-9);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn speedup_table_has_app_rows_and_config_cols() {
+        let t = per_app_speedup(&store());
+        assert_eq!(t.headers, vec!["app", "ceip256", "eip256", "nl"]);
+        assert_eq!(t.rows.len(), 2);
+        let md = t.markdown();
+        assert!(md.contains("crypto"));
+        assert!(md.contains("1.080"));
+    }
+
+    #[test]
+    fn summary_and_best() {
+        let s = store();
+        let sum = geomean_summary(&s);
+        assert_eq!(sum.rows.len(), 3); // ceip256, eip256, nl
+        let best = best_config(&s);
+        // eip256 wins both apps.
+        for row in &best.rows {
+            assert_eq!(row[1], "eip256");
+        }
+    }
+
+    #[test]
+    fn missing_baseline_renders_dash() {
+        let mut s = ResultStore::in_memory();
+        s.push(rec("crypto", "eip256", None)).unwrap();
+        let t = per_app_speedup(&s);
+        assert_eq!(t.rows[0][1], "-");
+        let b = best_config(&s);
+        assert_eq!(b.rows[0][1], "-");
+    }
+
+    #[test]
+    fn null_speedup_recomputed_once_baseline_lands() {
+        // Incremental campaign: eip line stored before its nl baseline.
+        let mut s = ResultStore::in_memory();
+        let mut eip = rec("crypto", "eip256", None);
+        eip.ipc = 2.2;
+        s.push(eip).unwrap();
+        let mut nl = rec("crypto", "nl", Some(1.0));
+        nl.ipc = 2.0;
+        s.push(nl).unwrap();
+        let t = per_app_speedup(&s);
+        // headers: app, eip256, nl
+        assert_eq!(t.rows[0][1], "1.100");
+        assert_eq!(t.rows[0][2], "1.000");
+    }
+
+    #[test]
+    fn gated_baseline_used_when_no_plain_nl() {
+        let mut s = ResultStore::in_memory();
+        let mut nlml = rec("crypto", "nl+ml", None);
+        nlml.ipc = 2.0;
+        s.push(nlml).unwrap();
+        let mut c = rec("crypto", "ceip256+ml", None);
+        c.ipc = 2.4;
+        s.push(c).unwrap();
+        let t = per_app_speedup(&s);
+        // headers: app, ceip256+ml, nl+ml
+        assert_eq!(t.rows[0][1], "1.200");
+        // The gated baseline must not be crowned best config.
+        let b = best_config(&s);
+        assert_eq!(b.rows[0][1], "ceip256+ml");
+    }
+}

@@ -1,0 +1,391 @@
+//! Declarative campaign specs: the scenario matrix (apps × prefetchers ×
+//! seeds × ML gate × churn regimes) as a small JSON document, expanded
+//! into deterministic per-cell simulation configs.
+//!
+//! Expansion order is the nested cartesian product in field order
+//! (apps ▸ prefetchers ▸ seeds ▸ ml ▸ churn_scale) and is part of the
+//! determinism contract: the JSONL store is written in this order, so a
+//! campaign's output is byte-identical at any `--threads` value.
+
+use super::runner::Cell;
+use crate::cli::parse_prefetcher;
+use crate::config::{ControllerCfg, SimConfig};
+use crate::trace::gen::apps::{self, AppSpec};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// A declarative scenario matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CampaignSpec {
+    pub name: String,
+    /// App preset names (see `slofetch apps`).
+    pub apps: Vec<String>,
+    /// Prefetcher specs in CLI syntax (`nl`, `eip256`, `ceip256s`, ...).
+    pub prefetchers: Vec<String>,
+    /// Records per trace.
+    pub records: u64,
+    /// Trace seeds; one full sub-matrix per seed.
+    pub seeds: Vec<u64>,
+    /// ML issue-controller gate off/on. `true` cells get a `+ml` label
+    /// suffix so they never collide with ungated cells.
+    pub ml: Vec<bool>,
+    /// Churn intensity multipliers: scale `s` divides each app's churn
+    /// period by `s` and multiplies the redirect fraction by `s`
+    /// (capped at 1.0); `0` disables churn entirely.
+    pub churn_scale: Vec<f64>,
+}
+
+impl Default for CampaignSpec {
+    fn default() -> Self {
+        CampaignSpec {
+            name: "campaign".into(),
+            apps: Vec::new(),
+            prefetchers: Vec::new(),
+            records: 200_000,
+            seeds: vec![7],
+            ml: vec![false],
+            churn_scale: vec![1.0],
+        }
+    }
+}
+
+/// One expanded cell: the runnable [`Cell`] plus the scenario coordinates
+/// the result store records alongside it.
+#[derive(Clone)]
+pub struct ExpandedCell {
+    /// Stable identity used for store dedup/resume.
+    pub key: String,
+    pub ml: bool,
+    pub churn_scale: f64,
+    pub cell: Cell,
+}
+
+/// Deterministic per-cell simulation seed: a splitmix64 hash
+/// ([`crate::util::rng::mix64`]) of the base seed and the cell key, so
+/// controller/bandit RNG streams are independent across cells yet
+/// reproducible across runs, hosts, and thread counts.
+pub fn cell_seed(base: u64, key: &str) -> u64 {
+    use crate::util::rng::mix64;
+    let mut h = mix64(base ^ 0x510F_E7C4_0DE5_1A7E);
+    for b in key.bytes() {
+        h = mix64(h ^ b as u64);
+    }
+    h
+}
+
+/// Apply a churn-intensity multiplier to an app preset.
+fn scaled_app(app: &AppSpec, scale: f64) -> AppSpec {
+    let mut a = app.clone();
+    if scale <= 0.0 {
+        a.churn_period = 0;
+        a.churn_redirect = 0.0;
+    } else if scale != 1.0 && a.churn_period > 0 {
+        a.churn_period = ((a.churn_period as f64 / scale).round().max(1.0)) as u64;
+        a.churn_redirect = (a.churn_redirect * scale).min(1.0);
+    }
+    a
+}
+
+impl CampaignSpec {
+    /// Validate the matrix axes (unknown apps/prefetchers, empty axes).
+    pub fn validate(&self) -> Result<()> {
+        if self.apps.is_empty() {
+            bail!("campaign '{}' lists no apps", self.name);
+        }
+        if self.prefetchers.is_empty() {
+            bail!("campaign '{}' lists no prefetchers", self.name);
+        }
+        if self.records == 0 {
+            bail!("campaign '{}' has records = 0", self.name);
+        }
+        if self.seeds.is_empty() || self.ml.is_empty() || self.churn_scale.is_empty() {
+            bail!("campaign '{}' has an empty axis", self.name);
+        }
+        for app in &self.apps {
+            apps::app(app).with_context(|| {
+                format!("unknown app '{app}' in campaign (see `slofetch apps`)")
+            })?;
+        }
+        for pf in &self.prefetchers {
+            parse_prefetcher(pf).with_context(|| format!("in campaign '{}'", self.name))?;
+        }
+        Ok(())
+    }
+
+    /// Total cell count of the matrix.
+    pub fn cell_count(&self) -> usize {
+        self.apps.len()
+            * self.prefetchers.len()
+            * self.seeds.len()
+            * self.ml.len()
+            * self.churn_scale.len()
+    }
+
+    /// Expand the matrix into runnable cells (deterministic order).
+    pub fn expand(&self) -> Result<Vec<ExpandedCell>> {
+        self.validate()?;
+        let mut out = Vec::with_capacity(self.cell_count());
+        for app_name in &self.apps {
+            let base_app = apps::app(app_name).unwrap();
+            for pf in &self.prefetchers {
+                let kind = parse_prefetcher(pf)?;
+                // Normalized label so baseline detection (`nl`) is
+                // case-insensitive like the parser.
+                let pf = pf.to_lowercase();
+                for &seed in &self.seeds {
+                    for &ml in &self.ml {
+                        let label =
+                            if ml { format!("{pf}+ml") } else { pf.clone() };
+                        for &cs in &self.churn_scale {
+                            // `{cs}` is Rust's shortest round-trip float
+                            // form: distinct scales never collide.
+                            let key = format!(
+                                "{app_name}|{label}|r{}|s{seed}|c{cs}",
+                                self.records
+                            );
+                            let controller = ml.then(|| ControllerCfg {
+                                train_interval_cycles: 200_000,
+                                ..Default::default()
+                            });
+                            let cfg = SimConfig {
+                                prefetcher: kind.clone(),
+                                controller,
+                                seed: cell_seed(seed, &key),
+                                ..Default::default()
+                            };
+                            out.push(ExpandedCell {
+                                key,
+                                ml,
+                                churn_scale: cs,
+                                cell: Cell {
+                                    app: scaled_app(&base_app, cs),
+                                    label: label.clone(),
+                                    cfg,
+                                    records: self.records,
+                                    trace_seed: seed,
+                                },
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        let mut seen = std::collections::HashSet::new();
+        for c in &out {
+            if !seen.insert(c.key.as_str()) {
+                bail!(
+                    "campaign '{}': duplicate cell key '{}' (repeated axis value)",
+                    self.name,
+                    c.key
+                );
+            }
+        }
+        Ok(out)
+    }
+
+    // ---------- JSON (de)serialization ----------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            (
+                "apps",
+                Json::Arr(self.apps.iter().map(|a| Json::str(a)).collect()),
+            ),
+            (
+                "prefetchers",
+                Json::Arr(self.prefetchers.iter().map(|p| Json::str(p)).collect()),
+            ),
+            ("records", Json::num(self.records as f64)),
+            (
+                "seeds",
+                Json::Arr(self.seeds.iter().map(|s| Json::num(*s as f64)).collect()),
+            ),
+            (
+                "ml",
+                Json::Arr(self.ml.iter().map(|m| Json::Bool(*m)).collect()),
+            ),
+            (
+                "churn_scale",
+                Json::Arr(self.churn_scale.iter().map(|c| Json::num(*c)).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<CampaignSpec> {
+        let mut spec = CampaignSpec::default();
+        if let Some(n) = j.get("name").and_then(Json::as_str) {
+            spec.name = n.to_string();
+        }
+        let strings = |key: &str| -> Result<Vec<String>> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .with_context(|| format!("campaign spec: '{key}' must be an array"))?
+                .iter()
+                .map(|v| {
+                    v.as_str()
+                        .map(str::to_string)
+                        .with_context(|| format!("'{key}' entries must be strings"))
+                })
+                .collect()
+        };
+        spec.apps = strings("apps")?;
+        spec.prefetchers = strings("prefetchers")?;
+        if let Some(r) = j.get("records").and_then(Json::as_u64) {
+            spec.records = r;
+        }
+        if let Some(arr) = j.get("seeds").and_then(Json::as_arr) {
+            spec.seeds = arr
+                .iter()
+                .map(|v| v.as_u64().context("'seeds' entries must be integers"))
+                .collect::<Result<_>>()?;
+        }
+        if let Some(arr) = j.get("ml").and_then(Json::as_arr) {
+            spec.ml = arr
+                .iter()
+                .map(|v| v.as_bool().context("'ml' entries must be booleans"))
+                .collect::<Result<_>>()?;
+        }
+        if let Some(arr) = j.get("churn_scale").and_then(Json::as_arr) {
+            spec.churn_scale = arr
+                .iter()
+                .map(|v| v.as_f64().context("'churn_scale' entries must be numbers"))
+                .collect::<Result<_>>()?;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn load(path: &Path) -> Result<CampaignSpec> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        let j = Json::parse(&text).with_context(|| format!("parse {path:?}"))?;
+        Self::from_json(&j).with_context(|| format!("in {path:?}"))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().pretty())
+            .with_context(|| format!("write {path:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> CampaignSpec {
+        CampaignSpec {
+            name: "t".into(),
+            apps: vec!["crypto".into(), "serde".into()],
+            prefetchers: vec!["nl".into(), "ceip256".into()],
+            records: 10_000,
+            seeds: vec![3, 4],
+            ml: vec![false, true],
+            churn_scale: vec![1.0],
+        }
+    }
+
+    #[test]
+    fn expansion_is_full_cartesian_product() {
+        let spec = small();
+        let cells = spec.expand().unwrap();
+        assert_eq!(cells.len(), spec.cell_count());
+        assert_eq!(cells.len(), 2 * 2 * 2 * 2);
+        // Keys are unique.
+        let mut keys: Vec<&str> = cells.iter().map(|c| c.key.as_str()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), cells.len());
+        // ML cells get the +ml label and a controller.
+        let ml_cell = cells.iter().find(|c| c.ml).unwrap();
+        assert!(ml_cell.cell.label.ends_with("+ml"));
+        assert!(ml_cell.cell.cfg.controller.is_some());
+        let plain = cells.iter().find(|c| !c.ml).unwrap();
+        assert!(plain.cell.cfg.controller.is_none());
+    }
+
+    #[test]
+    fn expansion_order_is_stable() {
+        let a = small().expand().unwrap();
+        let b = small().expand().unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.key, y.key);
+            assert_eq!(x.cell.cfg.seed, y.cell.cfg.seed);
+        }
+        // apps ▸ prefetchers ▸ seeds ▸ ml ▸ churn order.
+        assert!(a[0].key.starts_with("crypto|nl|"));
+        assert!(a.last().unwrap().key.starts_with("serde|ceip256+ml|"));
+    }
+
+    #[test]
+    fn cell_seeds_are_distinct_and_deterministic() {
+        let cells = small().expand().unwrap();
+        let mut seeds: Vec<u64> = cells.iter().map(|c| c.cell.cfg.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), cells.len(), "cell seeds collide");
+        assert_eq!(cell_seed(7, "a|b"), cell_seed(7, "a|b"));
+        assert_ne!(cell_seed(7, "a|b"), cell_seed(8, "a|b"));
+    }
+
+    #[test]
+    fn churn_scaling() {
+        let app = apps::app("websearch").unwrap();
+        let faster = scaled_app(&app, 2.0);
+        assert_eq!(faster.churn_period, app.churn_period / 2);
+        assert!(faster.churn_redirect > app.churn_redirect);
+        let off = scaled_app(&app, 0.0);
+        assert_eq!(off.churn_period, 0);
+        let same = scaled_app(&app, 1.0);
+        assert_eq!(same.churn_period, app.churn_period);
+        // Steady-state apps stay steady at any scale.
+        let crypto = apps::app("crypto").unwrap();
+        assert_eq!(scaled_app(&crypto, 4.0).churn_period, 0);
+    }
+
+    #[test]
+    fn near_identical_churn_scales_get_distinct_keys() {
+        let spec = CampaignSpec {
+            churn_scale: vec![0.1001, 0.1002],
+            ..small()
+        };
+        let cells = spec.expand().unwrap();
+        let mut keys: Vec<&str> = cells.iter().map(|c| c.key.as_str()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), cells.len());
+    }
+
+    #[test]
+    fn duplicate_axis_values_are_rejected() {
+        let spec = CampaignSpec {
+            prefetchers: vec!["nl".into(), "NL".into()],
+            ..small()
+        };
+        assert!(spec.expand().is_err(), "case-normalized duplicate not caught");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let spec = small();
+        let back = CampaignSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(CampaignSpec::from_json(
+            &Json::parse(r#"{"apps": ["nope"], "prefetchers": ["nl"]}"#).unwrap()
+        )
+        .is_err());
+        assert!(CampaignSpec::from_json(
+            &Json::parse(r#"{"apps": ["crypto"], "prefetchers": ["bogus9"]}"#).unwrap()
+        )
+        .is_err());
+        assert!(CampaignSpec::from_json(
+            &Json::parse(r#"{"apps": [], "prefetchers": ["nl"]}"#).unwrap()
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,541 @@
+//! Append-only JSONL result store: one line per completed campaign cell.
+//!
+//! The store is the campaign's memory — reloading it before a run lets
+//! repeated campaigns *resume* (cells whose key is already present are
+//! skipped, not recomputed), and `merge` folds stores from different
+//! machines or shards into one. Lines are emitted in spec-expansion
+//! order with sorted object keys, so a given (spec, seed set) always
+//! produces byte-identical files.
+
+use crate::sim::engine::SimResult;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::HashSet;
+use std::io::Write;
+use std::path::Path;
+
+/// One JSONL line: the scenario coordinates plus every scalar the report
+/// layer aggregates.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellRecord {
+    pub key: String,
+    pub app: String,
+    pub label: String,
+    pub records: u64,
+    pub trace_seed: u64,
+    pub sim_seed: u64,
+    pub ml: bool,
+    pub churn_scale: f64,
+    pub ipc: f64,
+    /// Speedup over the same-scenario `nl` baseline (absent when the
+    /// campaign has no such baseline cell).
+    pub speedup: Option<f64>,
+    pub mpki: f64,
+    pub l1d_mpki: f64,
+    pub accuracy: f64,
+    pub coverage: f64,
+    pub timeliness: f64,
+    pub metadata_bytes: u64,
+    pub pf_issued: u64,
+    pub pf_timely: u64,
+    pub pf_late: u64,
+    pub pf_useless: u64,
+    pub pf_skipped: u64,
+    pub instrs: u64,
+    pub cycles: f64,
+    pub controller: Option<ControllerRecord>,
+}
+
+/// Controller counters, present on `+ml` cells.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ControllerRecord {
+    pub decisions: u64,
+    pub issued: u64,
+    pub skipped: u64,
+    pub trains: u64,
+    pub last_loss: f64,
+}
+
+impl CellRecord {
+    /// Build from a finished simulation (speedup filled in later, once
+    /// the baseline's IPC is known).
+    pub fn from_result(
+        key: &str,
+        ml: bool,
+        churn_scale: f64,
+        records: u64,
+        trace_seed: u64,
+        sim_seed: u64,
+        r: &SimResult,
+    ) -> CellRecord {
+        CellRecord {
+            key: key.to_string(),
+            app: r.app.clone(),
+            label: r.label.clone(),
+            records,
+            trace_seed,
+            sim_seed,
+            ml,
+            churn_scale,
+            ipc: r.ipc(),
+            speedup: None,
+            mpki: r.stats.mpki(),
+            l1d_mpki: r.stats.l1d_mpki(),
+            accuracy: r.stats.accuracy(),
+            coverage: r.stats.coverage(),
+            timeliness: r.stats.timeliness(),
+            metadata_bytes: r.metadata_bytes,
+            pf_issued: r.stats.pf_issued,
+            pf_timely: r.stats.pf_timely,
+            pf_late: r.stats.pf_late,
+            pf_useless: r.stats.pf_useless,
+            pf_skipped: r.stats.pf_skipped,
+            instrs: r.stats.instrs,
+            cycles: r.stats.cycles,
+            controller: r.controller.as_ref().map(|c| ControllerRecord {
+                decisions: c.decisions,
+                issued: c.issued,
+                skipped: c.skipped,
+                trains: c.trains,
+                last_loss: c.last_loss as f64,
+            }),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let controller = match &self.controller {
+            None => Json::Null,
+            Some(c) => Json::obj(vec![
+                ("decisions", Json::num(c.decisions as f64)),
+                ("issued", Json::num(c.issued as f64)),
+                ("skipped", Json::num(c.skipped as f64)),
+                ("trains", Json::num(c.trains as f64)),
+                ("last_loss", Json::num(c.last_loss)),
+            ]),
+        };
+        Json::obj(vec![
+            ("key", Json::str(&self.key)),
+            ("app", Json::str(&self.app)),
+            ("label", Json::str(&self.label)),
+            ("records", Json::num(self.records as f64)),
+            ("trace_seed", Json::num(self.trace_seed as f64)),
+            // As a string: full-range 64-bit hashes do not survive the
+            // f64 JSON number path (2^53 mantissa).
+            ("sim_seed", Json::str(&self.sim_seed.to_string())),
+            ("ml", Json::Bool(self.ml)),
+            ("churn_scale", Json::num(self.churn_scale)),
+            ("ipc", Json::num(self.ipc)),
+            (
+                "speedup",
+                self.speedup.map(Json::num).unwrap_or(Json::Null),
+            ),
+            ("mpki", Json::num(self.mpki)),
+            ("l1d_mpki", Json::num(self.l1d_mpki)),
+            ("accuracy", Json::num(self.accuracy)),
+            ("coverage", Json::num(self.coverage)),
+            ("timeliness", Json::num(self.timeliness)),
+            ("metadata_bytes", Json::num(self.metadata_bytes as f64)),
+            ("pf_issued", Json::num(self.pf_issued as f64)),
+            ("pf_timely", Json::num(self.pf_timely as f64)),
+            ("pf_late", Json::num(self.pf_late as f64)),
+            ("pf_useless", Json::num(self.pf_useless as f64)),
+            ("pf_skipped", Json::num(self.pf_skipped as f64)),
+            ("instrs", Json::num(self.instrs as f64)),
+            ("cycles", Json::num(self.cycles)),
+            ("controller", controller),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<CellRecord> {
+        let s = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .with_context(|| format!("cell record: missing string '{k}'"))
+        };
+        let u = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_u64)
+                .with_context(|| format!("cell record: missing integer '{k}'"))
+        };
+        let f = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("cell record: missing number '{k}'"))
+        };
+        let controller = match j.get("controller") {
+            None | Some(Json::Null) => None,
+            Some(c) => Some(ControllerRecord {
+                decisions: c.get("decisions").and_then(Json::as_u64).unwrap_or(0),
+                issued: c.get("issued").and_then(Json::as_u64).unwrap_or(0),
+                skipped: c.get("skipped").and_then(Json::as_u64).unwrap_or(0),
+                trains: c.get("trains").and_then(Json::as_u64).unwrap_or(0),
+                last_loss: c.get("last_loss").and_then(Json::as_f64).unwrap_or(0.0),
+            }),
+        };
+        Ok(CellRecord {
+            key: s("key")?,
+            app: s("app")?,
+            label: s("label")?,
+            records: u("records")?,
+            trace_seed: u("trace_seed")?,
+            sim_seed: j
+                .get("sim_seed")
+                .and_then(Json::as_str)
+                .and_then(|v| v.parse().ok())
+                .context("cell record: missing u64 string 'sim_seed'")?,
+            ml: j.get("ml").and_then(Json::as_bool).unwrap_or(false),
+            churn_scale: j.get("churn_scale").and_then(Json::as_f64).unwrap_or(1.0),
+            ipc: f("ipc")?,
+            speedup: j.get("speedup").and_then(Json::as_f64),
+            mpki: f("mpki")?,
+            l1d_mpki: f("l1d_mpki")?,
+            accuracy: f("accuracy")?,
+            coverage: f("coverage")?,
+            timeliness: f("timeliness")?,
+            metadata_bytes: u("metadata_bytes")?,
+            pf_issued: u("pf_issued")?,
+            pf_timely: u("pf_timely")?,
+            pf_late: u("pf_late")?,
+            pf_useless: u("pf_useless")?,
+            pf_skipped: u("pf_skipped")?,
+            instrs: u("instrs")?,
+            cycles: f("cycles")?,
+            controller,
+        })
+    }
+
+    /// The single JSONL line (sorted keys, no trailing newline).
+    pub fn to_line(&self) -> String {
+        self.to_json().dump()
+    }
+}
+
+/// The append-only store: in-memory records + optional backing file
+/// (held open in append mode — one syscall per line, not per open).
+pub struct ResultStore {
+    file: Option<std::fs::File>,
+    records: Vec<CellRecord>,
+    keys: HashSet<String>,
+}
+
+impl ResultStore {
+    /// A store with no backing file (tests, ad-hoc aggregation).
+    pub fn in_memory() -> ResultStore {
+        ResultStore { file: None, records: Vec::new(), keys: HashSet::new() }
+    }
+
+    /// Parse a JSONL file into an in-memory store (a missing file is an
+    /// empty store). A final line with no trailing newline is the
+    /// signature of a killed mid-write campaign and is tolerated; a
+    /// malformed *complete* line is an error. Also returns the byte
+    /// length to truncate to (partial unparseable tail) and whether the
+    /// tail lacked its newline, for [`ResultStore::open`]'s repair.
+    fn parse_file(path: &Path) -> Result<(ResultStore, Option<u64>, bool)> {
+        let mut store = ResultStore::in_memory();
+        let mut keep_bytes: Option<u64> = None;
+        let mut truncated_tail = false;
+        if path.exists() {
+            let text =
+                std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+            truncated_tail = !text.is_empty() && !text.ends_with('\n');
+            let mut offset = 0usize;
+            for (no, line) in text.split_inclusive('\n').enumerate() {
+                let complete = line.ends_with('\n');
+                let trimmed = line.trim();
+                if !trimmed.is_empty() {
+                    let parsed = Json::parse(trimmed)
+                        .map_err(anyhow::Error::from)
+                        .and_then(|j| CellRecord::from_json(&j));
+                    match parsed {
+                        Ok(rec) => {
+                            // Mirror push(): first record wins on key
+                            // conflicts (e.g. concatenated shard files).
+                            if store.keys.insert(rec.key.clone()) {
+                                store.records.push(rec);
+                            }
+                        }
+                        Err(_) if !complete && truncated_tail => {
+                            // Partial final write: drop it from the file.
+                            keep_bytes = Some(offset as u64);
+                            break;
+                        }
+                        Err(e) => {
+                            return Err(e.context(format!("{path:?} line {}", no + 1)))
+                        }
+                    }
+                }
+                offset += line.len();
+            }
+        }
+        Ok((store, keep_bytes, truncated_tail))
+    }
+
+    /// Read a result file without touching it — no write access needed,
+    /// no crash repair. For aggregating shard files (feed into
+    /// [`ResultStore::merge`]) and read-only reporting.
+    pub fn load(path: &Path) -> Result<ResultStore> {
+        Ok(Self::parse_file(path)?.0)
+    }
+
+    /// Open a backing file for a campaign run: load existing lines, then
+    /// repair any killed-mid-write tail (truncate a partial line, or
+    /// newline-terminate a complete one) so appends land on a clean line
+    /// boundary (crash-resume contract, DESIGN.md §6).
+    pub fn open(path: &Path) -> Result<ResultStore> {
+        let (mut store, keep_bytes, truncated_tail) = Self::parse_file(path)?;
+        let mut file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("open {path:?}"))?;
+        if let Some(len) = keep_bytes {
+            file.set_len(len).with_context(|| format!("truncate {path:?}"))?;
+        } else if truncated_tail {
+            file.write_all(b"\n").with_context(|| format!("repair {path:?}"))?;
+        }
+        store.file = Some(file);
+        Ok(store)
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.keys.contains(key)
+    }
+
+    pub fn records(&self) -> &[CellRecord] {
+        &self.records
+    }
+
+    /// Append one record (no-op returning `false` if the key is already
+    /// present). Writes through to the backing file when one is open.
+    pub fn push(&mut self, rec: CellRecord) -> Result<bool> {
+        if self.keys.contains(&rec.key) {
+            return Ok(false);
+        }
+        if let Some(file) = &mut self.file {
+            writeln!(file, "{}", rec.to_line()).context("append to result store")?;
+        }
+        self.keys.insert(rec.key.clone());
+        self.records.push(rec);
+        Ok(true)
+    }
+
+    /// Fold another store's records into this one (first writer wins on
+    /// key conflicts). Returns how many records were new.
+    pub fn merge(&mut self, other: &ResultStore) -> Result<usize> {
+        let mut added = 0;
+        for rec in other.records() {
+            if self.push(rec.clone())? {
+                added += 1;
+            }
+        }
+        Ok(added)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(key: &str, app: &str, label: &str, ipc: f64) -> CellRecord {
+        CellRecord {
+            key: key.into(),
+            app: app.into(),
+            label: label.into(),
+            records: 1000,
+            trace_seed: 7,
+            sim_seed: 42,
+            ml: false,
+            churn_scale: 1.0,
+            ipc,
+            speedup: Some(1.05),
+            mpki: 12.0,
+            l1d_mpki: 3.0,
+            accuracy: 0.8,
+            coverage: 0.6,
+            timeliness: 0.9,
+            metadata_bytes: 25_200,
+            pf_issued: 100,
+            pf_timely: 70,
+            pf_late: 10,
+            pf_useless: 20,
+            pf_skipped: 0,
+            instrs: 16_000,
+            cycles: 9_000.0,
+            controller: Some(ControllerRecord {
+                decisions: 50,
+                issued: 40,
+                skipped: 10,
+                trains: 3,
+                last_loss: 0.25,
+            }),
+        }
+    }
+
+    #[test]
+    fn record_json_roundtrip() {
+        let r = rec("k1", "crypto", "ceip256", 2.5);
+        let back = CellRecord::from_json(&Json::parse(&r.to_line()).unwrap()).unwrap();
+        assert_eq!(back, r);
+        // Null speedup/controller round-trip too.
+        let mut r2 = r;
+        r2.speedup = None;
+        r2.controller = None;
+        let back2 = CellRecord::from_json(&Json::parse(&r2.to_line()).unwrap()).unwrap();
+        assert_eq!(back2, r2);
+    }
+
+    #[test]
+    fn store_dedups_by_key() {
+        let mut s = ResultStore::in_memory();
+        assert!(s.push(rec("a", "crypto", "nl", 1.0)).unwrap());
+        assert!(!s.push(rec("a", "crypto", "nl", 9.9)).unwrap());
+        assert!(s.push(rec("b", "crypto", "eip256", 1.1)).unwrap());
+        assert_eq!(s.len(), 2);
+        assert!(s.contains("a"));
+        assert!(!s.contains("c"));
+        // First writer won.
+        assert_eq!(s.records()[0].ipc, 1.0);
+    }
+
+    #[test]
+    fn file_roundtrip_and_resume() {
+        let dir = std::env::temp_dir().join("slofetch_store_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("r.jsonl");
+        std::fs::remove_file(&path).ok();
+        {
+            let mut s = ResultStore::open(&path).unwrap();
+            s.push(rec("a", "crypto", "nl", 1.0)).unwrap();
+            s.push(rec("b", "serde", "eip256", 1.2)).unwrap();
+        }
+        let reloaded = ResultStore::open(&path).unwrap();
+        assert_eq!(reloaded.len(), 2);
+        assert!(reloaded.contains("a") && reloaded.contains("b"));
+        assert_eq!(reloaded.records()[1].ipc, 1.2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn merge_counts_new_records_only() {
+        let mut a = ResultStore::in_memory();
+        a.push(rec("a", "crypto", "nl", 1.0)).unwrap();
+        let mut b = ResultStore::in_memory();
+        b.push(rec("a", "crypto", "nl", 2.0)).unwrap();
+        b.push(rec("c", "crypto", "perfect", 3.0)).unwrap();
+        assert_eq!(a.merge(&b).unwrap(), 1);
+        assert_eq!(a.len(), 2);
+    }
+
+    #[test]
+    fn full_range_sim_seed_roundtrips_exactly() {
+        // cell_seed() yields full 64-bit hashes; the f64 JSON number
+        // path would round anything above 2^53.
+        let mut r = rec("k", "crypto", "nl", 1.0);
+        r.sim_seed = 0xDEAD_BEEF_CAFE_F00D;
+        let back = CellRecord::from_json(&Json::parse(&r.to_line()).unwrap()).unwrap();
+        assert_eq!(back.sim_seed, 0xDEAD_BEEF_CAFE_F00D);
+    }
+
+    #[test]
+    fn truncated_final_line_is_dropped_and_store_resumes() {
+        let dir = std::env::temp_dir().join("slofetch_store_truncated");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("killed.jsonl");
+        // Two complete lines, then a partial write (no trailing newline)
+        // as left behind by a killed campaign.
+        let mut content = String::new();
+        content.push_str(&rec("a", "crypto", "nl", 1.0).to_line());
+        content.push('\n');
+        content.push_str(&rec("b", "crypto", "eip256", 1.1).to_line());
+        content.push('\n');
+        content.push_str("{\"key\":\"c\",\"app\":\"cry");
+        std::fs::write(&path, &content).unwrap();
+        let mut store = ResultStore::open(&path).unwrap();
+        assert_eq!(store.len(), 2, "completed prefix must survive");
+        // Appending after recovery lands on a clean line boundary.
+        store.push(rec("c", "crypto", "perfect", 1.3)).unwrap();
+        drop(store);
+        let reloaded = ResultStore::open(&path).unwrap();
+        assert_eq!(reloaded.len(), 3);
+        assert!(reloaded.contains("c"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn complete_tail_missing_newline_is_repaired() {
+        let dir = std::env::temp_dir().join("slofetch_store_nonewline");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("killed2.jsonl");
+        // Killed between the JSON bytes and the '\n': the tail parses
+        // but must be newline-terminated before the next append.
+        let content = format!(
+            "{}\n{}",
+            rec("a", "crypto", "nl", 1.0).to_line(),
+            rec("b", "crypto", "eip256", 1.1).to_line()
+        );
+        std::fs::write(&path, &content).unwrap();
+        let mut store = ResultStore::open(&path).unwrap();
+        assert_eq!(store.len(), 2, "parseable tail must be kept");
+        store.push(rec("c", "crypto", "perfect", 1.3)).unwrap();
+        drop(store);
+        let reloaded = ResultStore::open(&path).unwrap();
+        assert_eq!(reloaded.len(), 3, "append after repair corrupted the file");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_is_read_only_even_with_truncated_tail() {
+        let dir = std::env::temp_dir().join("slofetch_store_load");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("shard.jsonl");
+        // Shard with a killed tail: load must read it without repair.
+        let content =
+            format!("{}\n{{\"key\":\"partial", rec("a", "crypto", "nl", 1.0).to_line());
+        std::fs::write(&path, &content).unwrap();
+        let loaded = ResultStore::load(&path).unwrap();
+        assert_eq!(loaded.len(), 1);
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), content, "load modified file");
+        // And it feeds merge like any other store.
+        let mut main = ResultStore::in_memory();
+        assert_eq!(main.merge(&loaded).unwrap(), 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn open_dedups_concatenated_shards() {
+        let dir = std::env::temp_dir().join("slofetch_store_dedup");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cat.jsonl");
+        // `cat shard1 shard2` with one overlapping cell.
+        let content = format!(
+            "{}\n{}\n{}\n",
+            rec("a", "crypto", "nl", 1.0).to_line(),
+            rec("b", "crypto", "eip256", 1.1).to_line(),
+            rec("a", "crypto", "nl", 9.9).to_line()
+        );
+        std::fs::write(&path, &content).unwrap();
+        let store = ResultStore::open(&path).unwrap();
+        assert_eq!(store.len(), 2, "duplicate key double-counted");
+        assert_eq!(store.records()[0].ipc, 1.0, "first record must win");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn open_rejects_corrupt_lines() {
+        let dir = std::env::temp_dir().join("slofetch_store_corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.jsonl");
+        std::fs::write(&path, "{not json\n").unwrap();
+        assert!(ResultStore::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -65,6 +65,13 @@ impl Args {
                 .map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'")),
         }
     }
+
+    /// The global `--threads N` knob (0 or absent = available
+    /// parallelism), shared by `campaign` and the figure harness.
+    pub fn threads(&self) -> Result<usize> {
+        let n = self.u64_opt("threads", 0)? as usize;
+        Ok(if n == 0 { crate::campaign::runner::default_threads() } else { n })
+    }
 }
 
 /// Parse a prefetcher spec like `nl`, `eip256`, `ceip128`, `ceip256s`
@@ -146,6 +153,15 @@ mod tests {
     fn bad_number_is_error() {
         let a = args("simulate --records abc");
         assert!(a.u64_opt("records", 0).is_err());
+    }
+
+    #[test]
+    fn threads_defaults_to_available_parallelism() {
+        assert_eq!(args("campaign --threads 3").threads().unwrap(), 3);
+        let auto = args("campaign").threads().unwrap();
+        assert!(auto >= 1);
+        assert_eq!(args("campaign --threads 0").threads().unwrap(), auto);
+        assert!(args("campaign --threads x").threads().is_err());
     }
 
     #[test]

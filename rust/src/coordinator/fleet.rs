@@ -1,13 +1,12 @@
 //! Fleet driver: runs (app × prefetcher-config) simulation cells across
-//! OS threads (no tokio offline — std::thread + channels) and collects
-//! per-cell results. This is what the figure harness and the deployment
-//! playbook drive.
+//! OS threads and collects per-cell results — now a thin compatibility
+//! wrapper over [`crate::campaign::runner`], which owns the work-queue
+//! executor (one sharding implementation to keep deterministic).
 
+use crate::campaign::runner::{run_cells, Cell};
 use crate::config::SimConfig;
-use crate::sim::engine::{self, SimResult};
-use crate::trace::gen::{apps::AppSpec, generate_records};
-use std::sync::mpsc;
-use std::thread;
+use crate::sim::engine::SimResult;
+use crate::trace::gen::apps::AppSpec;
 
 /// One simulation cell.
 #[derive(Clone)]
@@ -27,55 +26,24 @@ pub struct CellResult {
 
 /// Run all jobs, `parallelism` at a time. Results return in job order.
 pub fn run_fleet(jobs: Vec<FleetJob>, parallelism: usize) -> Vec<CellResult> {
-    let parallelism = parallelism.max(1);
-    let n = jobs.len();
-    let (tx, rx) = mpsc::channel::<(usize, CellResult)>();
-    let mut results: Vec<Option<CellResult>> = (0..n).map(|_| None).collect();
-    let mut next = 0usize;
-    let mut inflight = 0usize;
-    let mut done = 0usize;
-    let mut jobs_iter = jobs.into_iter().enumerate();
-
-    thread::scope(|scope| {
-        let spawn_one = |idx: usize, job: FleetJob| {
-            let tx = tx.clone();
-            scope.spawn(move || {
-                let records = generate_records(&job.app, job.trace_seed, job.records);
-                let mut result = engine::run(&job.cfg, &records);
-                result.app = job.app.name.to_string();
-                let cell = CellResult {
-                    app: job.app.name.to_string(),
-                    label: result.label.clone(),
-                    result,
-                };
-                // Receiver never hangs up before all results arrive.
-                let _ = tx.send((idx, cell));
-            });
-        };
-        // Prime the pipeline.
-        while inflight < parallelism {
-            match jobs_iter.next() {
-                Some((idx, job)) => {
-                    spawn_one(idx, job);
-                    inflight += 1;
-                    next += 1;
-                }
-                None => break,
-            }
-        }
-        let _ = next;
-        while done < n {
-            let (idx, cell) = rx.recv().expect("worker channel closed");
-            results[idx] = Some(cell);
-            done += 1;
-            inflight -= 1;
-            if let Some((idx, job)) = jobs_iter.next() {
-                spawn_one(idx, job);
-                inflight += 1;
-            }
-        }
-    });
-    results.into_iter().map(|r| r.unwrap()).collect()
+    let cells: Vec<Cell> = jobs
+        .into_iter()
+        .map(|j| Cell {
+            label: j.cfg.prefetcher.label(),
+            app: j.app,
+            cfg: j.cfg,
+            records: j.records,
+            trace_seed: j.trace_seed,
+        })
+        .collect();
+    run_cells(&cells, parallelism.max(1))
+        .into_iter()
+        .map(|result| CellResult {
+            app: result.app.clone(),
+            label: result.label.clone(),
+            result,
+        })
+        .collect()
 }
 
 #[cfg(test)]

@@ -1,7 +1,7 @@
 //! Figure/table regeneration harness: one driver per table and figure in
 //! the paper's evaluation (DESIGN.md §5 experiment index). Shared runs are
 //! computed once in a [`Matrix`] (11 apps × 8 prefetcher configs via the
-//! fleet driver) and every figure reads from it.
+//! campaign runner) and every figure reads from it.
 //!
 //! Absolute numbers differ from the paper (synthetic traces, analytic
 //! timing — §X-D's caveat applies doubly); the *shape* assertions live in
@@ -10,8 +10,8 @@
 pub mod report;
 pub mod schematics;
 
+use crate::campaign::runner::{run_cells, Cell};
 use crate::config::{ControllerCfg, HierarchyCfg, PrefetcherKind, SimConfig};
-use crate::coordinator::fleet::{run_fleet, CellResult, FleetJob};
 use crate::rpc::{self, QueueParams, ServiceChain};
 use crate::sim::engine::SimResult;
 use crate::trace::gen::apps::{self, AppSpec};
@@ -32,9 +32,7 @@ impl Default for FigureCtx {
         FigureCtx {
             records_per_app: 600_000,
             seed: 7,
-            parallelism: std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(4),
+            parallelism: crate::campaign::runner::default_threads(),
             out_dir: Some(std::path::PathBuf::from("results")),
         }
     }
@@ -87,16 +85,17 @@ pub struct Matrix {
 }
 
 impl Matrix {
-    /// Run the full matrix (parallel across cells).
+    /// Run the full matrix (sharded across cells by the campaign runner).
     pub fn compute(ctx: FigureCtx) -> Matrix {
         let apps = apps::all_apps();
-        let mut jobs = Vec::new();
+        let mut cells = Vec::new();
         let mut keys = Vec::new();
         for app in &apps {
             for (name, kind) in standard_configs() {
                 keys.push((app.name.to_string(), name.to_string()));
-                jobs.push(FleetJob {
+                cells.push(Cell {
                     app: app.clone(),
+                    label: name.to_string(),
                     cfg: SimConfig {
                         prefetcher: kind,
                         seed: ctx.seed,
@@ -107,10 +106,10 @@ impl Matrix {
                 });
             }
         }
-        let cells = run_fleet(jobs, ctx.parallelism);
+        let outputs = run_cells(&cells, ctx.parallelism);
         let mut results = HashMap::new();
-        for (key, cell) in keys.into_iter().zip(cells) {
-            results.insert(key, cell.result);
+        for (key, result) in keys.into_iter().zip(outputs) {
+            results.insert(key, result);
         }
         Matrix { ctx, apps, results }
     }
@@ -432,7 +431,7 @@ pub fn summary(m: &Matrix) -> Table {
 /// Ablations (§IX window sensitivity, §XIII whole-vs-selective, controller).
 pub fn ablation(ctx: &FigureCtx) -> Table {
     let apps_sel = ["websearch", "retail-java", "admission"];
-    let mut jobs = Vec::new();
+    let mut cells = Vec::new();
     let mut labels = Vec::new();
     let variants: Vec<(String, PrefetcherKind, Option<ControllerCfg>)> = vec![
         ("nl".into(), PrefetcherKind::NextLineOnly, None),
@@ -477,8 +476,9 @@ pub fn ablation(ctx: &FigureCtx) -> Table {
     for app in apps_sel {
         for (label, kind, ctrl) in &variants {
             labels.push((app.to_string(), label.clone()));
-            jobs.push(FleetJob {
+            cells.push(Cell {
                 app: apps::app(app).unwrap(),
+                label: label.clone(),
                 cfg: SimConfig {
                     prefetcher: kind.clone(),
                     controller: ctrl.clone(),
@@ -490,10 +490,10 @@ pub fn ablation(ctx: &FigureCtx) -> Table {
             });
         }
     }
-    let cells = run_fleet(jobs, ctx.parallelism);
-    let mut by_key: HashMap<(String, String), CellResult> = HashMap::new();
-    for (key, cell) in labels.into_iter().zip(cells) {
-        by_key.insert(key, cell);
+    let outputs = run_cells(&cells, ctx.parallelism);
+    let mut by_key: HashMap<(String, String), SimResult> = HashMap::new();
+    for (key, result) in labels.into_iter().zip(outputs) {
+        by_key.insert(key, result);
     }
     let mut t = Table::new(
         "ablation",
@@ -501,12 +501,12 @@ pub fn ablation(ctx: &FigureCtx) -> Table {
         &["app", "variant", "speedup", "accuracy", "issued/ki", "skipped"],
     );
     for app in apps_sel {
-        let nl_ipc = by_key[&(app.to_string(), "nl".to_string())].result.ipc();
+        let nl_ipc = by_key[&(app.to_string(), "nl".to_string())].ipc();
         for (label, _, _) in &variants {
             if label == "nl" {
                 continue;
             }
-            let r = &by_key[&(app.to_string(), label.clone())].result;
+            let r = &by_key[&(app.to_string(), label.clone())];
             let ki = r.stats.instrs as f64 / 1000.0;
             t.row(vec![
                 app.into(),

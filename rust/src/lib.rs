@@ -14,6 +14,7 @@
 //! executed from [`runtime`] via the PJRT CPU client. Python is never on
 //! the request path.
 
+pub mod campaign;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

@@ -1,7 +1,8 @@
 //! `slofetch` — launcher for the SLOFetch reproduction.
 //!
 //! ```text
-//! slofetch figure <1|2|...|13|table1|summary|rpc|ablation|all> [--records N] [--seed S] [--out DIR]
+//! slofetch figure <1|2|...|13|table1|summary|rpc|ablation|all> [--records N] [--seed S] [--out DIR] [--threads N]
+//! slofetch campaign --spec FILE [--threads N] [--out results.jsonl]
 //! slofetch simulate --app websearch --prefetcher ceip256 [--records N] [--ml] [--budget N]
 //! slofetch gen-trace --app websearch --records N --out trace.slft
 //! slofetch deploy --app admission --candidate cheip2k [--records N]
@@ -10,6 +11,7 @@
 //! ```
 
 use anyhow::{bail, Context, Result};
+use slofetch::campaign::{self, CampaignSpec, ResultStore};
 use slofetch::cli::{parse_prefetcher, Args};
 use slofetch::config::{ControllerCfg, SimConfig};
 use slofetch::coordinator::deploy::DeploymentManager;
@@ -37,6 +39,7 @@ fn main() {
 fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("figure") => cmd_figure(args),
+        Some("campaign") => cmd_campaign(args),
         Some("simulate") => cmd_simulate(args),
         Some("gen-trace") => cmd_gen_trace(args),
         Some("deploy") => cmd_deploy(args),
@@ -51,17 +54,22 @@ fn dispatch(args: &Args) -> Result<()> {
 }
 
 const USAGE: &str = "usage:
-  slofetch figure <1..13|table1|summary|rpc|ablation|all> [--records N] [--seed S] [--out DIR]
+  slofetch figure <1..13|table1|summary|rpc|ablation|all> [--records N] [--seed S] [--out DIR] [--threads N]
+  slofetch campaign --spec FILE [--threads N] [--out results.jsonl]
   slofetch simulate --app A --prefetcher P [--records N] [--ml] [--adapt-window] [--budget N] [--pjrt]
   slofetch gen-trace --app A --records N --out FILE
   slofetch deploy --app A --candidate P [--records N]
   slofetch apps
-  slofetch runtime-check";
+  slofetch runtime-check
+
+global options:
+  --threads N   worker threads for matrix/campaign runs (default: available parallelism)";
 
 fn figure_ctx(args: &Args) -> Result<FigureCtx> {
     let mut ctx = FigureCtx {
         records_per_app: args.u64_opt("records", 600_000)?,
         seed: args.u64_opt("seed", 7)?,
+        parallelism: args.threads()?,
         ..Default::default()
     };
     if let Some(out) = args.opt("out") {
@@ -113,6 +121,32 @@ fn cmd_figure(args: &Args) -> Result<()> {
     if let Some(dir) = &ctx.out_dir {
         table.save(dir)?;
         println!("(saved to {}/{}.md)", dir.display(), table.id);
+    }
+    Ok(())
+}
+
+fn cmd_campaign(args: &Args) -> Result<()> {
+    let spec_path = args.opt("spec").context("--spec FILE required")?;
+    let spec = CampaignSpec::load(std::path::Path::new(spec_path))?;
+    let threads = args.threads()?;
+    let out = args.opt("out").unwrap_or("results.jsonl");
+    let mut store = ResultStore::open(std::path::Path::new(out))?;
+    let t0 = std::time::Instant::now();
+    let outcome = campaign::run_to_store(&spec, threads, &mut store)?;
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "campaign '{}': {} cells ({} computed, {} resumed) in {:.1}s \
+         ({:.2} cells/s, {} threads) -> {out}",
+        spec.name,
+        outcome.total,
+        outcome.computed,
+        outcome.skipped,
+        secs,
+        outcome.computed as f64 / secs.max(1e-9),
+        threads,
+    );
+    for t in campaign::report::reports(&store) {
+        println!("{}", t.markdown());
     }
     Ok(())
 }

@@ -1,0 +1,116 @@
+//! Campaign determinism + resume integration tests (DESIGN.md §6):
+//! (a) the JSONL store is byte-identical at --threads 1 vs --threads 4,
+//! (b) re-running against an existing store recomputes zero cells,
+//! (c) the campaign runner and the serial path agree cell-for-cell.
+
+use slofetch::campaign::{self, runner, CampaignSpec, ResultStore};
+use slofetch::sim::engine;
+use slofetch::trace::gen::{self, apps};
+use std::path::PathBuf;
+
+fn spec() -> CampaignSpec {
+    CampaignSpec {
+        name: "itest".into(),
+        apps: vec!["crypto".into(), "serde".into()],
+        prefetchers: vec!["nl".into(), "eip256".into(), "ceip256".into()],
+        records: 25_000,
+        seeds: vec![3],
+        ml: vec![false],
+        churn_scale: vec![1.0],
+    }
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("slofetch_campaign_itest");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(name);
+    std::fs::remove_file(&path).ok();
+    path
+}
+
+#[test]
+fn jsonl_is_byte_identical_across_thread_counts() {
+    let spec = spec();
+    let p1 = tmp("threads1.jsonl");
+    let p4 = tmp("threads4.jsonl");
+    {
+        let mut s1 = ResultStore::open(&p1).unwrap();
+        let out = campaign::run_to_store(&spec, 1, &mut s1).unwrap();
+        assert_eq!(out.computed, 6);
+    }
+    {
+        let mut s4 = ResultStore::open(&p4).unwrap();
+        let out = campaign::run_to_store(&spec, 4, &mut s4).unwrap();
+        assert_eq!(out.computed, 6);
+    }
+    let b1 = std::fs::read(&p1).unwrap();
+    let b4 = std::fs::read(&p4).unwrap();
+    assert!(!b1.is_empty());
+    assert_eq!(b1, b4, "thread count changed the result bytes");
+    std::fs::remove_file(&p1).ok();
+    std::fs::remove_file(&p4).ok();
+}
+
+#[test]
+fn rerun_against_existing_store_recomputes_nothing() {
+    let spec = spec();
+    let path = tmp("resume.jsonl");
+    {
+        let mut store = ResultStore::open(&path).unwrap();
+        let first = campaign::run_to_store(&spec, 4, &mut store).unwrap();
+        assert_eq!(first.computed, 6);
+        assert_eq!(first.skipped, 0);
+    }
+    let bytes_after_first = std::fs::read(&path).unwrap();
+    {
+        // Fresh process simulation: reload the store from disk.
+        let mut store = ResultStore::open(&path).unwrap();
+        assert_eq!(store.len(), 6);
+        let second = campaign::run_to_store(&spec, 2, &mut store).unwrap();
+        assert_eq!(second.computed, 0, "resume recomputed cells");
+        assert_eq!(second.skipped, 6);
+    }
+    // A pure resume must not touch the file either.
+    assert_eq!(std::fs::read(&path).unwrap(), bytes_after_first);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn store_lines_match_direct_engine_runs() {
+    // One cell cross-checked against a hand-built serial run.
+    let spec = spec();
+    let mut store = ResultStore::in_memory();
+    campaign::run_to_store(&spec, 4, &mut store).unwrap();
+    let cells = spec.expand().unwrap();
+    let target = cells.iter().find(|c| c.key.starts_with("serde|ceip256|")).unwrap();
+    let records =
+        gen::generate_records(&apps::app("serde").unwrap(), target.cell.trace_seed, spec.records);
+    let direct = engine::run(&target.cell.cfg, &records);
+    let stored = store
+        .records()
+        .iter()
+        .find(|r| r.key == target.key)
+        .expect("cell missing from store");
+    assert_eq!(stored.ipc, direct.ipc());
+    assert_eq!(stored.pf_issued, direct.stats.pf_issued);
+    assert_eq!(stored.metadata_bytes, direct.metadata_bytes);
+}
+
+#[test]
+fn runner_matches_figures_serial_semantics() {
+    // The figure harness routes through the campaign runner; a serial
+    // run of the same cells must agree exactly.
+    let cells: Vec<runner::Cell> = spec()
+        .expand()
+        .unwrap()
+        .into_iter()
+        .map(|c| c.cell)
+        .collect();
+    let parallel = runner::run_cells(&cells, 4);
+    let serial = runner::run_cells(&cells, 1);
+    for (a, b) in parallel.iter().zip(&serial) {
+        assert_eq!(a.stats.cycles, b.stats.cycles);
+        assert_eq!(a.stats.pf_issued, b.stats.pf_issued);
+        assert_eq!(a.stats.instrs, b.stats.instrs);
+    }
+}
