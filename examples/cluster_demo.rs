@@ -1,0 +1,46 @@
+//! Cluster simulator walkthrough: run the fan-out frontend DAG from
+//! `examples/cluster.json` — 3 static prefetcher configs plus the
+//! SLO-control-loop scenario under stationary and bursty traffic — and
+//! show that (a) faster prefetchers tighten P99 at fixed offered load
+//! and (b) the control loop buys back SLO compliance during bursts.
+//!
+//! Run: `cargo run --release --example cluster_demo [requests]`
+
+use slofetch::cluster::{self, ClusterSpec};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let spec_path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/cluster.json");
+    let mut spec = ClusterSpec::load(&spec_path)?;
+    // Re-validated override: the spec's own `requests = 0` check already
+    // ran at load, so the CLI arg must not sneak a zero past it.
+    if let Some(n) = std::env::args().nth(1).and_then(|s| s.parse().ok()) {
+        anyhow::ensure!(n > 0, "requests override must be > 0");
+        spec.requests = n;
+    }
+    println!(
+        "== cluster demo: '{}' — {} services, {} configs, {} shapes, {} req/scenario ==",
+        spec.name,
+        spec.topology.services.len(),
+        spec.prefetchers.len(),
+        spec.traffic.len(),
+        spec.requests
+    );
+    let t0 = std::time::Instant::now();
+    let out = cluster::run_spec(&spec, 0)?;
+    println!(
+        "({} requests, {} events in {:.1}s — {:.1}M events/s)\n",
+        out.total_requests,
+        out.total_events,
+        t0.elapsed().as_secs_f64(),
+        out.total_events as f64 / t0.elapsed().as_secs_f64().max(1e-9) / 1e6,
+    );
+    println!("{}", cluster::report(&out).markdown());
+    if let Some(t) = cluster::action_report(&out) {
+        println!("{}", t.markdown());
+    }
+    println!("the adaptive row trades a handful of control actions for the");
+    println!("burst scenario's burned windows — the paper's operational claim");
+    println!("(§XI) driven end-to-end through the DAG engine.");
+    Ok(())
+}

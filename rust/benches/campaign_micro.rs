@@ -23,6 +23,7 @@ fn main() {
         seeds: vec![7],
         ml: vec![false],
         churn_scale: vec![1.0],
+        traffic: vec!["none".into()],
     };
     let cells: Vec<runner::Cell> =
         spec.expand().unwrap().into_iter().map(|c| c.cell).collect();

@@ -1,0 +1,85 @@
+//! Cluster event-loop throughput bench: events/sec at 1M+ requests on
+//! synthetic topologies (no trace simulation — pure queueing), tracking
+//! the hot path across PRs. Scale with SLOFETCH_BENCH_REQUESTS
+//! (default 1M requests per scenario).
+
+use slofetch::cluster::engine::{self, RunParams};
+use slofetch::cluster::topology::{Candidate, ResolvedService, ResolvedTopology};
+use slofetch::cluster::workload::TrafficShape;
+use slofetch::util::timer::time_it;
+
+fn chain(n: usize) -> ResolvedTopology {
+    let services = (0..n)
+        .map(|i| ResolvedService {
+            name: format!("s{i}"),
+            replicas: 2,
+            cv: 0.35,
+            candidates: vec![Candidate { label: "static".into(), mean_us: 5.0 }],
+            children: if i + 1 < n { vec![(i + 1) as u32] } else { Vec::new() },
+            indegree: u32::from(i > 0),
+        })
+        .collect();
+    ResolvedTopology { services }
+}
+
+fn fanout() -> ResolvedTopology {
+    let svc = |name: &str, mean: f64, replicas: u32, children: Vec<u32>, indegree: u32| {
+        ResolvedService {
+            name: name.into(),
+            replicas,
+            cv: 0.35,
+            candidates: vec![Candidate { label: "static".into(), mean_us: mean }],
+            children,
+            indegree,
+        }
+    };
+    ResolvedTopology {
+        services: vec![
+            svc("gateway", 4.0, 2, vec![1, 2, 3], 0),
+            svc("search", 12.0, 3, vec![4], 1),
+            svc("ads", 8.0, 2, vec![4], 1),
+            svc("profile", 8.0, 2, vec![4], 1),
+            svc("render", 5.0, 2, vec![], 3),
+        ],
+    }
+}
+
+fn bench(name: &str, topo: &ResolvedTopology, shape: &TrafficShape, requests: u64) {
+    let params = RunParams {
+        requests,
+        seed: 17,
+        slo_us: topo.zero_load_us() * 4.0,
+        base_rate_per_us: topo.bottleneck_rate() * 0.7,
+    };
+    let (r, secs) = time_it(|| engine::run(topo, shape, &params, None));
+    assert_eq!(r.requests, requests);
+    println!(
+        "{name:<22} {:>7.2}M events/s  ({} events, {:.2}s, p99 {:.1} µs)",
+        r.events as f64 / secs / 1e6,
+        r.events,
+        secs,
+        r.p99_us,
+    );
+}
+
+fn main() {
+    let requests = std::env::var("SLOFETCH_BENCH_REQUESTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1_000_000u64);
+    println!("== cluster_micro: {requests} requests/scenario ==");
+    bench("chain3/poisson", &chain(3), &TrafficShape::Poisson { util: 1.0 }, requests);
+    bench(
+        "chain3/burst",
+        &chain(3),
+        &TrafficShape::Burst { util: 0.7, mult: 1.8, period_us: 50_000.0, duty: 0.2 },
+        requests,
+    );
+    bench("fanout5/poisson", &fanout(), &TrafficShape::Poisson { util: 1.0 }, requests);
+    bench(
+        "fanout5/diurnal",
+        &fanout(),
+        &TrafficShape::Diurnal { util: 0.8, amplitude: 0.3, period_us: 200_000.0 },
+        requests,
+    );
+}

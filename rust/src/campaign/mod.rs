@@ -4,7 +4,7 @@
 //!
 //! A campaign is a declarative sweep over the paper's evaluation axes
 //! ([`spec::CampaignSpec`]): apps × prefetchers × seeds × ML gate ×
-//! churn regimes. [`runner`] shards the expanded cells across worker
+//! churn regimes × traffic shapes. [`runner`] shards the expanded cells across worker
 //! threads; [`store`] persists one JSONL line per cell and lets repeated
 //! campaigns resume instead of recompute; [`report`] aggregates the
 //! store back into the markdown tables the figure harness uses.
@@ -26,14 +26,16 @@ pub use store::ResultStore;
 
 use anyhow::Result;
 use std::collections::HashMap;
-use store::CellRecord;
+use store::{CellRecord, TailRecord};
 
 /// What one `run_to_store` call did.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CampaignOutcome {
     /// Cells in the expanded matrix.
     pub total: usize,
-    /// Cells simulated in this run.
+    /// Cells written to the store this run. Traffic-axis twins share
+    /// one deduplicated core simulation, so this counts result lines,
+    /// not simulations.
     pub computed: usize,
     /// Cells skipped because the store already had them.
     pub skipped: usize,
@@ -58,7 +60,7 @@ pub(crate) fn group_of(app: &str, records: u64, trace_seed: u64, churn_scale: f6
 enum Baseline {
     /// Reloaded from a previous run's store line.
     Stored(f64),
-    /// Computed by this run: index into the pending-cell list.
+    /// Computed by this run: index into the deduplicated sim list.
     Pending(usize),
 }
 
@@ -97,8 +99,20 @@ pub fn run_to_store(
     let total = cells.len();
     let pending: Vec<&spec::ExpandedCell> =
         cells.iter().filter(|c| !store.contains(&c.key)).collect();
-    let cell_list: Vec<runner::Cell> = pending.iter().map(|c| c.cell.clone()).collect();
     let n = pending.len();
+    // Traffic-axis twins share their `base_key` and are bit-identical
+    // core simulations — simulate each distinct base once and fan the
+    // result out to every line that needs it.
+    let mut sim_of: HashMap<&str, usize> = HashMap::new();
+    let mut cell_list: Vec<runner::Cell> = Vec::new();
+    let mut base_of: Vec<usize> = Vec::with_capacity(n);
+    for c in &pending {
+        let idx = *sim_of.entry(c.base_key.as_str()).or_insert_with(|| {
+            cell_list.push(c.cell.clone());
+            cell_list.len() - 1
+        });
+        base_of.push(idx);
+    }
 
     let mut baselines = Baselines::default();
     for r in store.records() {
@@ -117,15 +131,15 @@ pub fn run_to_store(
                 meta.cell.trace_seed,
                 meta.churn_scale,
             ),
-            Baseline::Pending(i),
+            Baseline::Pending(base_of[i]),
         );
     }
 
     // Stream results into the store: the write frontier advances in
-    // expansion order as soon as a cell and its baseline have finished,
-    // so a killed run keeps every flushed line.
+    // expansion order as soon as a cell's sim and its baseline have
+    // finished, so a killed run keeps every flushed line.
     let mut results: Vec<Option<crate::sim::engine::SimResult>> =
-        (0..n).map(|_| None).collect();
+        (0..cell_list.len()).map(|_| None).collect();
     let mut write_pos = 0usize;
     let mut computed = 0usize;
     let mut io_err: Option<anyhow::Error> = None;
@@ -134,7 +148,7 @@ pub fn run_to_store(
     runner::run_cells_each(&cell_list, threads, |i, result| {
         results[i] = Some(result);
         while write_pos < n {
-            let result = match &results[write_pos] {
+            let result = match &results[base_of[write_pos]] {
                 Some(r) => r,
                 None => break,
             };
@@ -165,6 +179,30 @@ pub fn run_to_store(
                 result,
             );
             rec.speedup = base_ipc.map(|base| rec.ipc / base);
+            // Traffic-axis cells additionally get a queueing-tail
+            // evaluation: the measured IPC drives a single-service
+            // cluster under the cell's arrival shape. Seeded from the
+            // full (traffic-suffixed) key, it is a pure function of the
+            // cell — deterministic at any thread count. It runs on the
+            // writer thread: a tail eval is ~100k heap events, noise
+            // next to the core sims the workers are busy with (revisit
+            // if traffic axes grow — see ROADMAP "cluster-scale
+            // campaign axis").
+            if let Some(shape) = &meta.traffic {
+                let t = crate::cluster::evaluate_tail(
+                    rec.ipc,
+                    shape,
+                    spec::cell_seed(meta.cell.trace_seed, &meta.key),
+                );
+                rec.tail = Some(TailRecord {
+                    traffic: shape.label(),
+                    p50_us: t.p50_us,
+                    p95_us: t.p95_us,
+                    p99_us: t.p99_us,
+                    compliance: t.compliance,
+                    slo_us: t.slo_us,
+                });
+            }
             match store.push(rec) {
                 Ok(true) => computed += 1,
                 Ok(false) => {}
@@ -198,6 +236,7 @@ mod tests {
             seeds: vec![3],
             ml: vec![false],
             churn_scale: vec![1.0],
+            traffic: vec!["none".into()],
         }
     }
 
@@ -262,6 +301,38 @@ mod tests {
         // Emission stayed in expansion order.
         assert_eq!(store.records()[0].label, "eip256");
         assert_eq!(store.records()[1].label, "nl");
+    }
+
+    #[test]
+    fn traffic_axis_fills_tail_records_and_keeps_baselines_exact() {
+        let spec = CampaignSpec {
+            traffic: vec!["none".into(), "poisson:0.65".into()],
+            ..quick_spec()
+        };
+        let mut store = ResultStore::in_memory();
+        let out = run_to_store(&spec, 2, &mut store).unwrap();
+        assert_eq!(out.total, 8);
+        for rec in store.records() {
+            let shaped = rec.key.contains("|t");
+            assert_eq!(rec.tail.is_some(), shaped, "{}: tail presence wrong", rec.key);
+            if rec.label == "nl" {
+                // Traffic-free sim seeding keeps the baseline exact.
+                assert_eq!(rec.speedup, Some(1.0), "{}", rec.key);
+            }
+            if let Some(t) = &rec.tail {
+                assert_eq!(t.traffic, "poisson:0.65");
+                assert!(t.p50_us <= t.p95_us && t.p95_us <= t.p99_us);
+                assert!(t.compliance > 0.0 && t.compliance <= 1.0);
+            }
+        }
+        // The IPC of a shaped cell equals its `none` twin bit-for-bit.
+        let plain = store.records().iter().find(|r| !r.key.contains("|t")).unwrap();
+        let twin = store
+            .records()
+            .iter()
+            .find(|r| r.key.starts_with(&plain.key) && r.key.contains("|t"))
+            .unwrap();
+        assert_eq!(plain.ipc.to_bits(), twin.ipc.to_bits());
     }
 
     #[test]

@@ -186,9 +186,45 @@ pub fn best_config(store: &ResultStore) -> Table {
     t
 }
 
+/// Tail-latency table over traffic-axis cells: one row per
+/// (app, config, shape), geomean-free (tails don't average well —
+/// show the scenario values directly). `None` when the campaign had no
+/// traffic axis.
+pub fn tail_table(store: &ResultStore) -> Option<Table> {
+    let mut t = Table::new(
+        "campaign_tails",
+        "Queueing tails per traffic shape (single-service cluster at the cell's IPC)",
+        &["app", "config", "traffic", "P50 µs", "P95 µs", "P99 µs", "compliance"],
+    );
+    // Store order is expansion order — already deterministic and grouped.
+    for r in store.records() {
+        if let Some(tail) = &r.tail {
+            t.row(vec![
+                r.app.clone(),
+                r.label.clone(),
+                tail.traffic.clone(),
+                f2(tail.p50_us),
+                f2(tail.p95_us),
+                f2(tail.p99_us),
+                pct(tail.compliance),
+            ]);
+        }
+    }
+    if t.rows.is_empty() {
+        None
+    } else {
+        t.note("SLO for compliance = 5× the cell's zero-load service time");
+        Some(t)
+    }
+}
+
 /// All campaign tables, in print order.
 pub fn reports(store: &ResultStore) -> Vec<Table> {
-    vec![per_app_speedup(store), geomean_summary(store), best_config(store)]
+    let mut out = vec![per_app_speedup(store), geomean_summary(store), best_config(store)];
+    if let Some(t) = tail_table(store) {
+        out.push(t);
+    }
+    out
 }
 
 #[cfg(test)]
@@ -222,6 +258,7 @@ mod tests {
             instrs: 1000,
             cycles: 500.0,
             controller: None,
+            tail: None,
         }
     }
 
@@ -262,6 +299,29 @@ mod tests {
         for row in &best.rows {
             assert_eq!(row[1], "eip256");
         }
+    }
+
+    #[test]
+    fn tail_table_only_renders_shaped_cells() {
+        let s = store();
+        assert!(tail_table(&s).is_none(), "tail table without a traffic axis");
+        assert_eq!(reports(&s).len(), 3);
+        let mut s = ResultStore::in_memory();
+        let mut r = rec("crypto", "ceip256", Some(1.1));
+        r.tail = Some(crate::campaign::store::TailRecord {
+            traffic: "poisson:0.65".into(),
+            p50_us: 6.0,
+            p95_us: 12.0,
+            p99_us: 20.0,
+            compliance: 0.98,
+            slo_us: 25.0,
+        });
+        s.push(r).unwrap();
+        s.push(rec("crypto", "nl", Some(1.0))).unwrap();
+        let t = tail_table(&s).expect("shaped cell missing from tail table");
+        assert_eq!(t.rows.len(), 1);
+        assert!(t.markdown().contains("poisson:0.65"));
+        assert_eq!(reports(&s).len(), 4);
     }
 
     #[test]

@@ -4,6 +4,11 @@
 //! instance — so the result vector is a pure function of the cell list
 //! and byte-identical regardless of thread count or scheduling (the
 //! determinism contract in DESIGN.md "Campaign subsystem").
+//!
+//! Cells are *core-simulation* units only: the campaign `traffic` axis
+//! (queueing-tail evaluation per arrival shape) is layered on top by
+//! `campaign::run_to_store` at write time, so a cell's identity — and
+//! its result — never depends on how it will be evaluated downstream.
 
 use crate::config::SimConfig;
 use crate::sim::engine::{self, SimResult};
@@ -77,6 +82,44 @@ where
     });
 }
 
+/// Generic deterministic parallel map: evaluate `f(0..n)` across
+/// `threads` scoped workers (0 = auto) and return results in index
+/// order — equal inputs yield equal outputs at any thread count. The
+/// cluster scenario runner shards through this; [`run_cells_each`]
+/// keeps its own loop because it additionally streams results and
+/// supports cancellation.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = if threads == 0 { default_threads() } else { threads };
+    let threads = threads.clamp(1, n.max(1));
+    let next = AtomicUsize::new(0);
+    let next = &next;
+    let f = &f;
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                // Receiver outlives every worker; send cannot fail.
+                let _ = tx.send((i, f(i)));
+            });
+        }
+        drop(tx);
+        for (i, r) in rx {
+            slots[i] = Some(r);
+        }
+    });
+    slots.into_iter().map(|s| s.expect("worker skipped an item")).collect()
+}
+
 /// Run all cells and return results in cell order: equal inputs yield
 /// equal outputs at any thread count.
 pub fn run_cells(cells: &[Cell], threads: usize) -> Vec<SimResult> {
@@ -145,6 +188,14 @@ mod tests {
         assert!(run_cells(&[], 8).is_empty());
         let one = vec![cell("crypto", PrefetcherKind::NextLineOnly, "nl")];
         assert_eq!(run_cells(&one, 64).len(), 1);
+    }
+
+    #[test]
+    fn parallel_map_returns_results_in_index_order() {
+        let out = parallel_map(17, 4, |i| i * i);
+        assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>());
+        assert!(parallel_map(0, 4, |i| i).is_empty());
+        assert_eq!(parallel_map(3, 0, |i| i), vec![0, 1, 2]);
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 use super::runner::Cell;
 use crate::cli::parse_prefetcher;
+use crate::cluster::workload::TrafficShape;
 use crate::config::{ControllerCfg, SimConfig};
 use crate::trace::gen::apps::{self, AppSpec};
 use crate::util::json::Json;
@@ -34,6 +35,14 @@ pub struct CampaignSpec {
     /// period by `s` and multiplies the redirect fraction by `s`
     /// (capped at 1.0); `0` disables churn entirely.
     pub churn_scale: Vec<f64>,
+    /// Traffic shapes (see [`TrafficShape::parse`]): each non-`"none"`
+    /// entry adds a per-cell tail-latency evaluation — the cell's
+    /// measured IPC drives a single-service cluster under that arrival
+    /// shape (`cluster::evaluate_tail`) and the resulting P50/P95/P99 and
+    /// SLO compliance land on the stored record. `"none"` (the default)
+    /// keeps the cell IPC-only and its key identical to pre-traffic
+    /// campaigns, so existing stores resume cleanly.
+    pub traffic: Vec<String>,
 }
 
 impl Default for CampaignSpec {
@@ -46,6 +55,7 @@ impl Default for CampaignSpec {
             seeds: vec![7],
             ml: vec![false],
             churn_scale: vec![1.0],
+            traffic: vec!["none".into()],
         }
     }
 }
@@ -56,8 +66,15 @@ impl Default for CampaignSpec {
 pub struct ExpandedCell {
     /// Stable identity used for store dedup/resume.
     pub key: String,
+    /// The traffic-free prefix of `key`: cells sharing it run the exact
+    /// same core simulation (same trace, same sim seed), so the runner
+    /// simulates each distinct `base_key` once and fans the result out.
+    pub base_key: String,
     pub ml: bool,
     pub churn_scale: f64,
+    /// Traffic shape for the tail-latency evaluation (`None` = the
+    /// `"none"` axis value: IPC-only cell).
+    pub traffic: Option<TrafficShape>,
     pub cell: Cell,
 }
 
@@ -99,8 +116,25 @@ impl CampaignSpec {
         if self.records == 0 {
             bail!("campaign '{}' has records = 0", self.name);
         }
-        if self.seeds.is_empty() || self.ml.is_empty() || self.churn_scale.is_empty() {
+        if self.seeds.is_empty()
+            || self.ml.is_empty()
+            || self.churn_scale.is_empty()
+            || self.traffic.is_empty()
+        {
             bail!("campaign '{}' has an empty axis", self.name);
+        }
+        for &cs in &self.churn_scale {
+            if !(cs.is_finite() && cs >= 0.0) {
+                bail!(
+                    "campaign '{}': churn_scale must be finite and ≥ 0, got {cs}",
+                    self.name
+                );
+            }
+        }
+        for t in &self.traffic {
+            if t != "none" {
+                TrafficShape::parse(t).with_context(|| format!("in campaign '{}'", self.name))?;
+            }
         }
         for app in &self.apps {
             apps::app(app).with_context(|| {
@@ -120,11 +154,17 @@ impl CampaignSpec {
             * self.seeds.len()
             * self.ml.len()
             * self.churn_scale.len()
+            * self.traffic.len()
     }
 
     /// Expand the matrix into runnable cells (deterministic order).
     pub fn expand(&self) -> Result<Vec<ExpandedCell>> {
         self.validate()?;
+        // Parse each shape once, not once per expanded cell.
+        let mut shapes = Vec::with_capacity(self.traffic.len());
+        for t in &self.traffic {
+            shapes.push(if t == "none" { None } else { Some(TrafficShape::parse(t)?) });
+        }
         let mut out = Vec::with_capacity(self.cell_count());
         for app_name in &self.apps {
             let base_app = apps::app(app_name).unwrap();
@@ -138,34 +178,54 @@ impl CampaignSpec {
                         let label =
                             if ml { format!("{pf}+ml") } else { pf.clone() };
                         for &cs in &self.churn_scale {
-                            // `{cs}` is Rust's shortest round-trip float
-                            // form: distinct scales never collide.
-                            let key = format!(
-                                "{app_name}|{label}|r{}|s{seed}|c{cs}",
-                                self.records
-                            );
-                            let controller = ml.then(|| ControllerCfg {
-                                train_interval_cycles: 200_000,
-                                ..Default::default()
-                            });
-                            let cfg = SimConfig {
-                                prefetcher: kind.clone(),
-                                controller,
-                                seed: cell_seed(seed, &key),
-                                ..Default::default()
-                            };
-                            out.push(ExpandedCell {
-                                key,
-                                ml,
-                                churn_scale: cs,
-                                cell: Cell {
-                                    app: scaled_app(&base_app, cs),
-                                    label: label.clone(),
-                                    cfg,
-                                    records: self.records,
-                                    trace_seed: seed,
-                                },
-                            });
+                            for shape in &shapes {
+                                // Shape labels are normalized so e.g.
+                                // `poisson:0.65` and `POISSON:0.65` share
+                                // a key (and get rejected as duplicates).
+                                // `{cs}` is Rust's shortest round-trip
+                                // float form: distinct scales never
+                                // collide. The `|t...` suffix is omitted
+                                // for `"none"` so pre-traffic stores
+                                // keep resuming.
+                                let base_key = format!(
+                                    "{app_name}|{label}|r{}|s{seed}|c{cs}",
+                                    self.records
+                                );
+                                let mut key = base_key.clone();
+                                if let Some(shape) = shape {
+                                    key.push_str("|t");
+                                    key.push_str(&shape.label());
+                                }
+                                let controller = ml.then(|| ControllerCfg {
+                                    train_interval_cycles: 200_000,
+                                    ..Default::default()
+                                });
+                                // The sim seed hashes the *traffic-free*
+                                // key: arrival shape is an evaluation
+                                // axis, so the same scenario yields
+                                // bit-identical IPC under every shape
+                                // (and `nl` baselines stay exact).
+                                let cfg = SimConfig {
+                                    prefetcher: kind.clone(),
+                                    controller,
+                                    seed: cell_seed(seed, &base_key),
+                                    ..Default::default()
+                                };
+                                out.push(ExpandedCell {
+                                    key,
+                                    base_key,
+                                    ml,
+                                    churn_scale: cs,
+                                    traffic: shape.clone(),
+                                    cell: Cell {
+                                        app: scaled_app(&base_app, cs),
+                                        label: label.clone(),
+                                        cfg,
+                                        records: self.records,
+                                        trace_seed: seed,
+                                    },
+                                });
+                            }
                         }
                     }
                 }
@@ -210,6 +270,10 @@ impl CampaignSpec {
                 "churn_scale",
                 Json::Arr(self.churn_scale.iter().map(|c| Json::num(*c)).collect()),
             ),
+            (
+                "traffic",
+                Json::Arr(self.traffic.iter().map(|t| Json::str(t)).collect()),
+            ),
         ])
     }
 
@@ -253,6 +317,16 @@ impl CampaignSpec {
                 .map(|v| v.as_f64().context("'churn_scale' entries must be numbers"))
                 .collect::<Result<_>>()?;
         }
+        if let Some(arr) = j.get("traffic").and_then(Json::as_arr) {
+            spec.traffic = arr
+                .iter()
+                .map(|v| {
+                    v.as_str()
+                        .map(str::to_string)
+                        .context("'traffic' entries must be strings")
+                })
+                .collect::<Result<_>>()?;
+        }
         spec.validate()?;
         Ok(spec)
     }
@@ -283,6 +357,7 @@ mod tests {
             seeds: vec![3, 4],
             ml: vec![false, true],
             churn_scale: vec![1.0],
+            traffic: vec!["none".into()],
         }
     }
 
@@ -355,6 +430,57 @@ mod tests {
         keys.sort_unstable();
         keys.dedup();
         assert_eq!(keys.len(), cells.len());
+    }
+
+    #[test]
+    fn traffic_axis_expands_and_preserves_sim_seeds() {
+        let spec = CampaignSpec {
+            traffic: vec!["none".into(), "poisson:0.65".into(), "burst:0.5:3:50000:0.2".into()],
+            ..small()
+        };
+        let cells = spec.expand().unwrap();
+        assert_eq!(cells.len(), spec.cell_count());
+        assert_eq!(cells.len(), 2 * 2 * 2 * 2 * 3);
+        // `none` keys match the pre-traffic format exactly.
+        let plain = cells.iter().find(|c| c.traffic.is_none()).unwrap();
+        assert!(!plain.key.contains("|t"), "none cell key changed: {}", plain.key);
+        // Shaped cells append a normalized |t suffix...
+        let shaped = cells.iter().find(|c| c.traffic.is_some()).unwrap();
+        assert!(shaped.key.contains("|tpoisson:0.65") || shaped.key.contains("|tburst"));
+        // ...but share the traffic-free sim seed with their `none` twin,
+        // so the core simulation (and the nl baseline) is identical.
+        let twin = cells
+            .iter()
+            .find(|c| c.traffic.is_some() && c.key.starts_with(&plain.key))
+            .unwrap();
+        assert_eq!(plain.cell.cfg.seed, twin.cell.cfg.seed);
+        // Keys are still globally unique.
+        let mut keys: Vec<&str> = cells.iter().map(|c| c.key.as_str()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), cells.len());
+    }
+
+    #[test]
+    fn negative_churn_scale_is_rejected_with_clear_error() {
+        let spec = CampaignSpec { churn_scale: vec![-1.0], ..small() };
+        let err = spec.validate().unwrap_err().to_string();
+        assert!(err.contains("churn_scale"), "unhelpful error: {err}");
+        assert!(CampaignSpec { churn_scale: vec![f64::NAN], ..small() }.validate().is_err());
+    }
+
+    #[test]
+    fn bad_traffic_axis_is_rejected() {
+        let spec = CampaignSpec { traffic: vec!["tsunami".into()], ..small() };
+        assert!(spec.validate().is_err());
+        let spec = CampaignSpec { traffic: vec![], ..small() };
+        assert!(spec.validate().is_err());
+        // Case-variant duplicates normalize to the same key.
+        let spec = CampaignSpec {
+            traffic: vec!["poisson:0.65".into(), "POISSON:0.65".into()],
+            ..small()
+        };
+        assert!(spec.expand().is_err(), "normalized duplicate shape not caught");
     }
 
     #[test]

@@ -44,6 +44,9 @@ pub struct CellRecord {
     pub instrs: u64,
     pub cycles: f64,
     pub controller: Option<ControllerRecord>,
+    /// Tail-latency evaluation, present on cells with a traffic shape
+    /// (the campaign `traffic` axis; see `cluster::evaluate_tail`).
+    pub tail: Option<TailRecord>,
 }
 
 /// Controller counters, present on `+ml` cells.
@@ -54,6 +57,19 @@ pub struct ControllerRecord {
     pub skipped: u64,
     pub trains: u64,
     pub last_loss: f64,
+}
+
+/// Queueing-tail summary of a cell under one traffic shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TailRecord {
+    /// Normalized shape label (e.g. `poisson:0.65`).
+    pub traffic: String,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    /// Fraction of requests within the evaluation SLO.
+    pub compliance: f64,
+    pub slo_us: f64,
 }
 
 impl CellRecord {
@@ -99,6 +115,7 @@ impl CellRecord {
                 trains: c.trains,
                 last_loss: c.last_loss as f64,
             }),
+            tail: None,
         }
     }
 
@@ -111,6 +128,17 @@ impl CellRecord {
                 ("skipped", Json::num(c.skipped as f64)),
                 ("trains", Json::num(c.trains as f64)),
                 ("last_loss", Json::num(c.last_loss)),
+            ]),
+        };
+        let tail = match &self.tail {
+            None => Json::Null,
+            Some(t) => Json::obj(vec![
+                ("traffic", Json::str(&t.traffic)),
+                ("p50_us", Json::num(t.p50_us)),
+                ("p95_us", Json::num(t.p95_us)),
+                ("p99_us", Json::num(t.p99_us)),
+                ("compliance", Json::num(t.compliance)),
+                ("slo_us", Json::num(t.slo_us)),
             ]),
         };
         Json::obj(vec![
@@ -143,6 +171,7 @@ impl CellRecord {
             ("instrs", Json::num(self.instrs as f64)),
             ("cycles", Json::num(self.cycles)),
             ("controller", controller),
+            ("tail", tail),
         ])
     }
 
@@ -171,6 +200,18 @@ impl CellRecord {
                 skipped: c.get("skipped").and_then(Json::as_u64).unwrap_or(0),
                 trains: c.get("trains").and_then(Json::as_u64).unwrap_or(0),
                 last_loss: c.get("last_loss").and_then(Json::as_f64).unwrap_or(0.0),
+            }),
+        };
+        // Absent on pre-traffic-axis lines: they reload as tail-less.
+        let tail = match j.get("tail") {
+            None | Some(Json::Null) => None,
+            Some(t) => Some(TailRecord {
+                traffic: t.get("traffic").and_then(Json::as_str).unwrap_or("").to_string(),
+                p50_us: t.get("p50_us").and_then(Json::as_f64).unwrap_or(0.0),
+                p95_us: t.get("p95_us").and_then(Json::as_f64).unwrap_or(0.0),
+                p99_us: t.get("p99_us").and_then(Json::as_f64).unwrap_or(0.0),
+                compliance: t.get("compliance").and_then(Json::as_f64).unwrap_or(0.0),
+                slo_us: t.get("slo_us").and_then(Json::as_f64).unwrap_or(0.0),
             }),
         };
         Ok(CellRecord {
@@ -202,6 +243,7 @@ impl CellRecord {
             instrs: u("instrs")?,
             cycles: f("cycles")?,
             controller,
+            tail,
         })
     }
 
@@ -377,20 +419,40 @@ mod tests {
                 trains: 3,
                 last_loss: 0.25,
             }),
+            tail: None,
         }
     }
 
     #[test]
     fn record_json_roundtrip() {
-        let r = rec("k1", "crypto", "ceip256", 2.5);
+        let mut r = rec("k1", "crypto", "ceip256", 2.5);
+        r.tail = Some(TailRecord {
+            traffic: "burst:0.5:3:50000:0.2".into(),
+            p50_us: 6.1,
+            p95_us: 14.9,
+            p99_us: 31.5,
+            compliance: 0.97,
+            slo_us: 25.0,
+        });
         let back = CellRecord::from_json(&Json::parse(&r.to_line()).unwrap()).unwrap();
         assert_eq!(back, r);
-        // Null speedup/controller round-trip too.
+        // Null speedup/controller/tail round-trip too.
         let mut r2 = r;
         r2.speedup = None;
         r2.controller = None;
+        r2.tail = None;
         let back2 = CellRecord::from_json(&Json::parse(&r2.to_line()).unwrap()).unwrap();
         assert_eq!(back2, r2);
+    }
+
+    #[test]
+    fn pre_traffic_lines_reload_without_tail() {
+        // Lines written before the traffic axis have no "tail" key.
+        let r = rec("old", "crypto", "nl", 1.0);
+        let line = r.to_line().replace(",\"tail\":null", "");
+        assert!(!line.contains("tail"), "test setup failed to strip the key");
+        let back = CellRecord::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, r);
     }
 
     #[test]

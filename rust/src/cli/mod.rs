@@ -89,6 +89,11 @@ pub fn parse_prefetcher(spec: &str) -> Result<crate::config::PrefetcherKind> {
         Some(b) if b != "nl" => (b.to_string(), true),
         _ => (s.clone(), false),
     };
+    // Selective mode only exists for the windowed compressed variants;
+    // `eip256s` used to fall through and silently parse as plain EIP.
+    if selective && body.starts_with("eip") {
+        bail!("eip has no selective mode: '{spec}' (did you mean ceip{}s?)", &body[3..]);
+    }
     let window_split = |b: &str| -> (String, u8) {
         if let Some((head, w)) = b.rsplit_once('w') {
             if let Ok(win) = w.parse::<u8>() {
@@ -190,5 +195,54 @@ mod tests {
             P::Cheip { vt_entries: 4096, window: 4, whole_window: true }
         );
         assert!(parse_prefetcher("bogus").is_err());
+    }
+
+    #[test]
+    fn eip_selective_is_rejected_not_silently_accepted() {
+        // `eip256s` used to fall through and parse as plain EIP-256.
+        let err = parse_prefetcher("eip256s").unwrap_err().to_string();
+        assert!(err.contains("no selective mode"), "unhelpful error: {err}");
+        assert!(err.contains("ceip256s"), "no suggestion in: {err}");
+        assert!(parse_prefetcher("eip128s").is_err());
+    }
+
+    #[test]
+    fn empty_head_window_specs_are_errors() {
+        // `ceipw8` has an empty set count before the window suffix.
+        assert!(parse_prefetcher("ceipw8").is_err());
+        assert!(parse_prefetcher("cheipw8").is_err());
+        assert!(parse_prefetcher("ceip").is_err());
+        assert!(parse_prefetcher("eip").is_err());
+    }
+
+    #[test]
+    fn specs_are_case_insensitive() {
+        assert_eq!(parse_prefetcher("NL").unwrap(), P::NextLineOnly);
+        assert_eq!(parse_prefetcher("Perfect").unwrap(), P::Perfect);
+        assert_eq!(
+            parse_prefetcher("CEIP256S").unwrap(),
+            parse_prefetcher("ceip256s").unwrap()
+        );
+        assert_eq!(
+            parse_prefetcher("ChEiP2K").unwrap(),
+            parse_prefetcher("cheip2k").unwrap()
+        );
+        assert!(parse_prefetcher("EIP256S").is_err(), "case must not bypass the eip-s check");
+    }
+
+    #[test]
+    fn option_values_may_start_with_a_single_dash() {
+        // `--churn-scale -1` must reach the domain validator (which
+        // rejects negatives with its own message), not be eaten as a flag.
+        let a = args("campaign --churn-scale -1 --records 10");
+        assert_eq!(a.opt("churn-scale"), Some("-1"));
+        assert_eq!(a.f64_opt("churn-scale", 1.0).unwrap(), -1.0);
+        assert_eq!(a.u64_opt("records", 0).unwrap(), 10);
+        // A `--`-prefixed token is never consumed as a value: the first
+        // option becomes a flag and the second parses independently.
+        let b = args("campaign --out --threads 3");
+        assert!(b.flag("out"));
+        assert_eq!(b.opt("out"), None);
+        assert_eq!(b.threads().unwrap(), 3);
     }
 }

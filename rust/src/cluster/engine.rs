@@ -1,0 +1,598 @@
+//! Deterministic discrete-event cluster simulator: a binary-heap event
+//! loop over request DAGs with replicated services — FCFS per replica,
+//! least-outstanding-requests load balancing, open-loop arrivals from
+//! [`super::workload`], and an optional SLO control loop
+//! ([`super::slo`]) that reconfigures services mid-run.
+//!
+//! Determinism contract (DESIGN.md §8): the loop is single-threaded, the
+//! heap orders events by `(time bits, sequence number)` so ties break
+//! identically on every run, and all randomness flows through one
+//! seeded [`Rng`] whose draw order is a pure function of the event
+//! order. Request state lives in a reusable slab — after warm-up the
+//! completion hot path performs no per-request allocation.
+
+use super::slo::{SloAction, SloCfg, SloController};
+use super::topology::{Candidate, ResolvedTopology};
+use super::workload::{ArrivalGen, TrafficShape};
+use crate::util::percentile::Digest;
+use crate::util::rng::{mix64, Rng};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// Per-scenario run knobs.
+#[derive(Clone, Debug)]
+pub struct RunParams {
+    pub requests: u64,
+    pub seed: u64,
+    /// Latency SLO (µs) for compliance/burn accounting.
+    pub slo_us: f64,
+    /// Absolute reference rate (req/µs) that shape utilization 1.0 maps
+    /// to — typically the baseline config's bottleneck rate, so faster
+    /// configs see the same offered load at lower utilization.
+    pub base_rate_per_us: f64,
+}
+
+/// One control action taken during a run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ActionLog {
+    pub t_us: f64,
+    pub service: String,
+    pub action: String,
+}
+
+/// Scenario outcome: the latency distribution plus SLO burn accounting
+/// and the control loop's trace.
+#[derive(Clone, Debug)]
+pub struct ClusterResult {
+    /// Config label (filled by the caller, e.g. `ceip256` or `adaptive`).
+    pub label: String,
+    /// Traffic-shape label (filled by the caller).
+    pub traffic: String,
+    pub requests: u64,
+    /// Events processed (arrivals + completions).
+    pub events: u64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub mean_us: f64,
+    pub max_us: f64,
+    pub slo_us: f64,
+    /// Fraction of requests within the SLO.
+    pub compliance: f64,
+    /// Evaluation windows seen / windows that burned.
+    pub windows: u32,
+    pub violated_windows: u32,
+    pub actions: Vec<ActionLog>,
+    /// Final replica count per service (spec order).
+    pub final_replicas: Vec<u32>,
+    /// Final config label per service (spec order).
+    pub final_configs: Vec<String>,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum EvKind {
+    Arrival,
+    Complete { svc: u32, rep: u32 },
+}
+
+struct Ev {
+    t: f64,
+    seq: u64,
+    kind: EvKind,
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Self) -> bool {
+        self.t.to_bits() == other.t.to_bits() && self.seq == other.seq
+    }
+}
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Event times are non-negative finite, where IEEE bit order
+        // agrees with numeric order; seq breaks ties deterministically.
+        (self.t.to_bits(), self.seq).cmp(&(other.t.to_bits(), other.seq))
+    }
+}
+
+#[derive(Default)]
+struct Replica {
+    queue: VecDeque<u32>,
+    in_service: Option<u32>,
+}
+
+struct Svc {
+    replicas: Vec<Replica>,
+    /// Current candidate index (the SLO loop advances this).
+    current: usize,
+    /// Cached `candidates[current].mean_us`.
+    mean_us: f64,
+    cv: f64,
+    children: Vec<u32>,
+}
+
+/// Reusable request slab: slots are recycled through a free list, so
+/// steady-state throughput allocates nothing per request.
+struct Slab {
+    nsvc: usize,
+    arrive: Vec<f64>,
+    /// Unfinished upstream count per (slot, service), flattened.
+    pending: Vec<u32>,
+    /// Services not yet completed for this slot.
+    remaining: Vec<u32>,
+    free: Vec<u32>,
+}
+
+impl Slab {
+    fn new(nsvc: usize) -> Slab {
+        Slab {
+            nsvc,
+            arrive: Vec::new(),
+            pending: Vec::new(),
+            remaining: Vec::new(),
+            free: Vec::new(),
+        }
+    }
+
+    fn alloc(&mut self, t: f64, indegrees: &[u32]) -> u32 {
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                let s = self.arrive.len() as u32;
+                self.arrive.push(0.0);
+                self.remaining.push(0);
+                self.pending.resize(self.pending.len() + self.nsvc, 0);
+                s
+            }
+        };
+        let i = slot as usize;
+        self.arrive[i] = t;
+        self.remaining[i] = self.nsvc as u32;
+        self.pending[i * self.nsvc..(i + 1) * self.nsvc].copy_from_slice(indegrees);
+        slot
+    }
+}
+
+struct Sim {
+    svc: Vec<Svc>,
+    names: Vec<String>,
+    cands: Vec<Vec<Candidate>>,
+    indegrees: Vec<u32>,
+    roots: Vec<u32>,
+    heap: BinaryHeap<Reverse<Ev>>,
+    seq: u64,
+    rng: Rng,
+    gen: ArrivalGen,
+    slab: Slab,
+    digest: Digest,
+    met: u64,
+    arrived: u64,
+    completed: u64,
+    events: u64,
+    requests: u64,
+    slo_us: f64,
+    ctrl: SloController,
+    adaptive: bool,
+    actions: Vec<ActionLog>,
+}
+
+impl Sim {
+    fn schedule(&mut self, t: f64, kind: EvKind) {
+        self.seq += 1;
+        self.heap.push(Reverse(Ev { t, seq: self.seq, kind }));
+    }
+
+    fn sample_service(&mut self, svc: usize) -> f64 {
+        // Same lognormal-flavored jitter as the rpc tandem model.
+        let mean = self.svc[svc].mean_us;
+        let cv = self.svc[svc].cv;
+        let jitter = (cv * self.rng.normal() - 0.5 * cv * cv).exp();
+        mean * jitter.clamp(0.05, 8.0)
+    }
+
+    fn dispatch(&mut self, svc: usize, slot: u32, now: f64) {
+        // Least-outstanding-requests balancing, lowest index on ties.
+        let mut best = 0usize;
+        let mut best_out = usize::MAX;
+        for (i, r) in self.svc[svc].replicas.iter().enumerate() {
+            let out = r.queue.len() + usize::from(r.in_service.is_some());
+            if out < best_out {
+                best_out = out;
+                best = i;
+            }
+        }
+        if self.svc[svc].replicas[best].in_service.is_none() {
+            self.svc[svc].replicas[best].in_service = Some(slot);
+            let dt = self.sample_service(svc);
+            self.schedule(now + dt, EvKind::Complete { svc: svc as u32, rep: best as u32 });
+        } else {
+            self.svc[svc].replicas[best].queue.push_back(slot);
+        }
+    }
+
+    /// Bottleneck service: lowest aggregate service rate right now.
+    fn bottleneck(&self) -> usize {
+        let mut best = 0usize;
+        let mut worst_rate = f64::INFINITY;
+        for (i, s) in self.svc.iter().enumerate() {
+            let rate = s.replicas.len() as f64 / s.mean_us;
+            if rate < worst_rate {
+                worst_rate = rate;
+                best = i;
+            }
+        }
+        best
+    }
+
+    fn headroom(&self) -> bool {
+        let b = self.bottleneck();
+        self.svc[b].current + 1 < self.cands[b].len()
+            || (self.svc[b].replicas.len() as u32) < self.ctrl.cfg.max_replicas
+    }
+
+    /// Apply a control action to the bottleneck service, falling back to
+    /// the other lever when the chosen one is exhausted. Returns the
+    /// action actually executed (None = dropped) so the controller can
+    /// credit its bandit reward to the right arm.
+    fn apply_action(&mut self, act: SloAction, now: f64) -> Option<SloAction> {
+        let b = self.bottleneck();
+        let can_upgrade = self.svc[b].current + 1 < self.cands[b].len();
+        let can_scale = (self.svc[b].replicas.len() as u32) < self.ctrl.cfg.max_replicas;
+        let act = match act {
+            SloAction::Upgrade if can_upgrade => SloAction::Upgrade,
+            SloAction::AddReplica if can_scale => SloAction::AddReplica,
+            _ if can_upgrade => SloAction::Upgrade,
+            _ if can_scale => SloAction::AddReplica,
+            _ => return None,
+        };
+        match act {
+            SloAction::Upgrade => {
+                self.svc[b].current += 1;
+                self.svc[b].mean_us = self.cands[b][self.svc[b].current].mean_us;
+                self.actions.push(ActionLog {
+                    t_us: now,
+                    service: self.names[b].clone(),
+                    action: format!("upgrade→{}", self.cands[b][self.svc[b].current].label),
+                });
+            }
+            SloAction::AddReplica => {
+                self.svc[b].replicas.push(Replica::default());
+                self.actions.push(ActionLog {
+                    t_us: now,
+                    service: self.names[b].clone(),
+                    action: format!("replicas→{}", self.svc[b].replicas.len()),
+                });
+            }
+        }
+        Some(act)
+    }
+
+    fn finish(&mut self, slot: u32, now: f64) {
+        let latency = now - self.slab.arrive[slot as usize];
+        self.digest.add(latency);
+        if latency <= self.slo_us {
+            self.met += 1;
+        }
+        self.completed += 1;
+        self.slab.free.push(slot);
+        let headroom = self.adaptive && self.headroom();
+        if let Some(act) = self.ctrl.on_complete(latency, headroom) {
+            let applied = self.apply_action(act, now);
+            self.ctrl.settle_applied(applied);
+        }
+    }
+
+    fn step(&mut self) -> bool {
+        let ev = match self.heap.pop() {
+            Some(Reverse(ev)) => ev,
+            None => return false,
+        };
+        self.events += 1;
+        match ev.kind {
+            EvKind::Arrival => {
+                let slot = self.slab.alloc(ev.t, &self.indegrees);
+                let roots = std::mem::take(&mut self.roots);
+                for &r in &roots {
+                    self.dispatch(r as usize, slot, ev.t);
+                }
+                self.roots = roots;
+                self.arrived += 1;
+                if self.arrived < self.requests {
+                    let t = self.gen.next_arrival();
+                    self.schedule(t, EvKind::Arrival);
+                }
+            }
+            EvKind::Complete { svc, rep } => {
+                let (svc, rep) = (svc as usize, rep as usize);
+                let slot = self.svc[svc].replicas[rep]
+                    .in_service
+                    .take()
+                    .expect("completion on an idle replica");
+                if let Some(next) = self.svc[svc].replicas[rep].queue.pop_front() {
+                    self.svc[svc].replicas[rep].in_service = Some(next);
+                    let dt = self.sample_service(svc);
+                    self.schedule(ev.t + dt, EvKind::Complete {
+                        svc: svc as u32,
+                        rep: rep as u32,
+                    });
+                }
+                let children = std::mem::take(&mut self.svc[svc].children);
+                for &c in &children {
+                    let ci = c as usize;
+                    let idx = slot as usize * self.slab.nsvc + ci;
+                    self.slab.pending[idx] -= 1;
+                    if self.slab.pending[idx] == 0 {
+                        self.dispatch(ci, slot, ev.t);
+                    }
+                }
+                self.svc[svc].children = children;
+                self.slab.remaining[slot as usize] -= 1;
+                if self.slab.remaining[slot as usize] == 0 {
+                    self.finish(slot, ev.t);
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Run one scenario to completion. `ctrl = None` tracks SLO burn but
+/// never acts (static config); `Some(cfg)` enables the control loop.
+/// Equal inputs produce bit-equal results on every run.
+pub fn run(
+    topo: &ResolvedTopology,
+    shape: &TrafficShape,
+    params: &RunParams,
+    ctrl: Option<SloCfg>,
+) -> ClusterResult {
+    assert!(params.requests > 0, "cluster run with 0 requests");
+    assert!(params.base_rate_per_us > 0.0, "non-positive reference rate");
+    let adaptive = ctrl.is_some();
+    let mut ctrl_cfg =
+        ctrl.unwrap_or_else(|| SloCfg::new(params.slo_us, mix64(params.seed ^ 0xC1A5_7E55)));
+    ctrl_cfg.slo_us = params.slo_us; // single source of truth for the SLO
+    let n = topo.services.len();
+    let mut sim = Sim {
+        svc: topo
+            .services
+            .iter()
+            .map(|s| Svc {
+                replicas: (0..s.replicas).map(|_| Replica::default()).collect(),
+                current: 0,
+                mean_us: s.candidates[0].mean_us,
+                cv: s.cv,
+                children: s.children.clone(),
+            })
+            .collect(),
+        names: topo.services.iter().map(|s| s.name.clone()).collect(),
+        cands: topo.services.iter().map(|s| s.candidates.clone()).collect(),
+        indegrees: topo.services.iter().map(|s| s.indegree).collect(),
+        roots: topo.roots(),
+        heap: BinaryHeap::with_capacity(1024),
+        seq: 0,
+        rng: Rng::new(mix64(params.seed ^ 0x5E41_71CE)),
+        gen: ArrivalGen::new(
+            shape.clone(),
+            params.base_rate_per_us,
+            mix64(params.seed ^ 0xA441_1A7E),
+        ),
+        slab: Slab::new(n),
+        digest: Digest::with_capacity(params.requests as usize),
+        met: 0,
+        arrived: 0,
+        completed: 0,
+        events: 0,
+        requests: params.requests,
+        slo_us: params.slo_us,
+        ctrl: SloController::new(ctrl_cfg),
+        adaptive,
+        actions: Vec::new(),
+    };
+    let t0 = sim.gen.next_arrival();
+    sim.schedule(t0, EvKind::Arrival);
+    while sim.step() {}
+    debug_assert_eq!(sim.completed, params.requests);
+    let mut digest = sim.digest;
+    ClusterResult {
+        label: String::new(),
+        traffic: shape.label(),
+        requests: sim.completed,
+        events: sim.events,
+        p50_us: digest.percentile(50.0),
+        p95_us: digest.percentile(95.0),
+        p99_us: digest.percentile(99.0),
+        mean_us: digest.mean(),
+        max_us: digest.max(),
+        slo_us: params.slo_us,
+        compliance: sim.met as f64 / sim.completed.max(1) as f64,
+        windows: sim.ctrl.windows,
+        violated_windows: sim.ctrl.violated,
+        actions: sim.actions,
+        final_replicas: sim.svc.iter().map(|s| s.replicas.len() as u32).collect(),
+        final_configs: sim
+            .svc
+            .iter()
+            .enumerate()
+            .map(|(i, s)| sim.cands[i][s.current].label.clone())
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::topology::ResolvedService;
+
+    fn chain(ipcs: &[f64]) -> ResolvedTopology {
+        let named: Vec<(String, f64)> =
+            ipcs.iter().enumerate().map(|(i, &x)| (format!("s{i}"), x)).collect();
+        ResolvedTopology::chain_from_ipcs(&named, 25_000.0, 0.35, 2.5)
+    }
+
+    fn params(topo: &ResolvedTopology, util: f64, requests: u64, slo_us: f64) -> RunParams {
+        RunParams {
+            requests,
+            seed: 17,
+            slo_us,
+            base_rate_per_us: topo.bottleneck_rate() * util,
+        }
+    }
+
+    #[test]
+    fn completes_every_request_and_orders_percentiles() {
+        let topo = chain(&[2.0, 1.5, 2.5]);
+        let p = params(&topo, 0.6, 20_000, 1e9);
+        let r = run(&topo, &TrafficShape::Poisson { util: 1.0 }, &p, None);
+        assert_eq!(r.requests, 20_000);
+        assert!(r.events >= 20_000 * 4, "arrival + 3 completions per request");
+        assert!(r.p50_us <= r.p95_us && r.p95_us <= r.p99_us && r.p99_us <= r.max_us);
+        assert!(r.p50_us >= topo.zero_load_us() * 0.5);
+        assert!(r.p99_us > topo.zero_load_us(), "no queueing tail at 60% load");
+        assert_eq!(r.compliance, 1.0);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let topo = chain(&[2.0, 1.8]);
+        let p = params(&topo, 0.7, 15_000, 50.0);
+        let shape = TrafficShape::Burst { util: 1.0, mult: 2.0, period_us: 5_000.0, duty: 0.3 };
+        let a = run(&topo, &shape, &p, None);
+        let b = run(&topo, &shape, &p, None);
+        assert_eq!(a.p99_us.to_bits(), b.p99_us.to_bits());
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.compliance.to_bits(), b.compliance.to_bits());
+    }
+
+    #[test]
+    fn faster_services_tighten_the_tail() {
+        // Fixed absolute arrival rate, 10% faster services → lower P99
+        // (the paper's §XI compounding claim, now through the DAG engine).
+        let slow = chain(&[1.8, 1.62, 1.98]);
+        let fast = chain(&[1.98, 1.782, 2.178]);
+        let lambda = slow.bottleneck_rate() * 0.7;
+        let p = |_topo: &ResolvedTopology| RunParams {
+            requests: 30_000,
+            seed: 3,
+            slo_us: 1e9,
+            base_rate_per_us: lambda,
+        };
+        let rs = run(&slow, &TrafficShape::Poisson { util: 1.0 }, &p(&slow), None);
+        let rf = run(&fast, &TrafficShape::Poisson { util: 1.0 }, &p(&fast), None);
+        assert!(rf.p95_us < rs.p95_us, "p95 {} !< {}", rf.p95_us, rs.p95_us);
+        assert!(rf.p99_us < rs.p99_us, "p99 {} !< {}", rf.p99_us, rs.p99_us);
+    }
+
+    #[test]
+    fn fan_out_latency_is_governed_by_slowest_branch() {
+        // root → {fast branch, slow branch} → join: zero-load latency
+        // must track the slow branch, and the engine must wait for both.
+        let svc = |name: &str, mean: f64, children: Vec<u32>, indeg: u32| ResolvedService {
+            name: name.into(),
+            replicas: 1,
+            cv: 0.0,
+            candidates: vec![Candidate { label: "static".into(), mean_us: mean }],
+            children,
+            indegree: indeg,
+        };
+        let topo = ResolvedTopology {
+            services: vec![
+                svc("root", 1.0, vec![1, 2], 0),
+                svc("fast", 2.0, vec![3], 1),
+                svc("slow", 9.0, vec![3], 1),
+                svc("join", 1.0, vec![], 2),
+            ],
+        };
+        let p = params(&topo, 0.2, 5_000, 1e9);
+        let r = run(&topo, &TrafficShape::Poisson { util: 1.0 }, &p, None);
+        // cv=0 ⇒ at light load latency ≈ 1 + max(2, 9) + 1 = 11 µs.
+        assert!(r.p50_us >= 11.0 - 1e-6, "p50 {} ignores the slow branch", r.p50_us);
+        assert!(r.p50_us < 13.0, "p50 {} queues too much at 20% load", r.p50_us);
+    }
+
+    #[test]
+    fn replicas_raise_throughput_capacity() {
+        // Same offered load: 1 replica at util 0.9 queues hard; 2 replicas
+        // (half the per-replica utilization) cut the tail sharply.
+        let one = chain(&[2.0]);
+        let mut two = one.clone();
+        two.services[0].replicas = 2;
+        let lambda = one.bottleneck_rate() * 0.9;
+        let p = RunParams { requests: 30_000, seed: 5, slo_us: 1e9, base_rate_per_us: lambda };
+        let r1 = run(&one, &TrafficShape::Poisson { util: 1.0 }, &p, None);
+        let r2 = run(&two, &TrafficShape::Poisson { util: 1.0 }, &p, None);
+        assert!(
+            r2.p99_us < r1.p99_us * 0.8,
+            "2 replicas {} !<< 1 replica {}",
+            r2.p99_us,
+            r1.p99_us
+        );
+    }
+
+    #[test]
+    fn burst_overload_burns_windows() {
+        let topo = chain(&[2.0, 1.8]);
+        // Peak 1.8× capacity for 30% of each period.
+        let shape = TrafficShape::Burst { util: 0.6, mult: 3.0, period_us: 20_000.0, duty: 0.3 };
+        let slo = topo.zero_load_us() * 4.0;
+        let p = params(&topo, 1.0, 60_000, slo);
+        let r = run(&topo, &shape, &p, None);
+        assert!(r.windows > 0);
+        assert!(r.violated_windows > 0, "overload bursts never burned the SLO");
+        assert!(r.compliance < 1.0);
+        assert!(r.actions.is_empty(), "static run must not act");
+    }
+
+    #[test]
+    fn control_loop_reduces_burn_under_bursts() {
+        // Candidates: slow nl-like config first, then a 25% faster one.
+        let mk = |label: &str, ipc: f64| Candidate {
+            label: label.into(),
+            mean_us: 25_000.0 / ipc / 2500.0,
+        };
+        let topo = ResolvedTopology {
+            services: vec![ResolvedService {
+                name: "frontend".into(),
+                replicas: 1,
+                cv: 0.35,
+                candidates: vec![mk("nl", 1.6), mk("ceip", 2.0)],
+                children: vec![],
+                indegree: 0,
+            }],
+        };
+        let shape = TrafficShape::Burst { util: 0.55, mult: 2.4, period_us: 30_000.0, duty: 0.35 };
+        let slo = topo.zero_load_us() * 5.0;
+        let p = RunParams {
+            requests: 80_000,
+            seed: 11,
+            slo_us: slo,
+            base_rate_per_us: topo.bottleneck_rate(),
+        };
+        let stat = run(&topo, &shape, &p, None);
+        // Same window size as the static run's tracker, so burn counts
+        // are directly comparable.
+        let adap = run(&topo, &shape, &p, Some(SloCfg::new(slo, 99)));
+        assert_eq!(adap.windows, stat.windows, "trackers diverged");
+        assert!(!adap.actions.is_empty(), "control loop never acted");
+        assert!(
+            adap.violated_windows < stat.violated_windows,
+            "burn not reduced: adaptive {}/{} vs static {}/{}",
+            adap.violated_windows,
+            adap.windows,
+            stat.violated_windows,
+            stat.windows
+        );
+        assert!(adap.p99_us < stat.p99_us, "p99 not reduced");
+        // The loop actually reconfigured: faster config or more replicas.
+        assert!(
+            adap.final_configs[0] == "ceip" || adap.final_replicas[0] > 1,
+            "final state unchanged: {:?} {:?}",
+            adap.final_configs,
+            adap.final_replicas
+        );
+    }
+}

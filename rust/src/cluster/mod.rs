@@ -1,0 +1,371 @@
+//! Discrete-event microservice-cluster simulator (DESIGN.md §8): request
+//! DAGs with fan-out/fan-in and per-service replicas ([`topology`]),
+//! time-varying open-loop traffic ([`workload`]), a binary-heap event
+//! loop ([`engine`]), and a windowed SLO tracker + burn-driven control
+//! loop ([`slo`]). The linear `rpc/` tandem chain is the degenerate case
+//! (every node one parent, one replica); this module is what the
+//! ROADMAP's "heavy traffic, many scenarios" north star plugs into.
+//!
+//! Per-service timing comes from the same place as every other figure:
+//! `sim::engine` IPC measurements per (app preset, prefetcher config),
+//! resolved once per spec through the campaign runner and shared by all
+//! scenarios. Scenario runs are independent and deterministically
+//! seeded, so [`run_spec`] output is identical at any `--threads` value.
+
+pub mod engine;
+pub mod slo;
+pub mod spec;
+pub mod topology;
+pub mod workload;
+
+pub use engine::{ClusterResult, RunParams};
+pub use slo::SloCfg;
+pub use spec::ClusterSpec;
+pub use topology::{ResolvedTopology, ServiceSpec, Topology};
+pub use workload::TrafficShape;
+
+use crate::campaign::runner::{self, Cell};
+use crate::campaign::spec::cell_seed;
+use crate::cli::parse_prefetcher;
+use crate::config::SimConfig;
+use crate::figures::report::{f2, pct, Table};
+use crate::trace::gen::apps;
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Everything one [`run_spec`] invocation produced.
+pub struct ClusterOutcome {
+    /// Scenario results in deterministic expansion order
+    /// (configs ▸ traffic shapes, adaptive last).
+    pub scenarios: Vec<ClusterResult>,
+    pub total_requests: u64,
+    pub total_events: u64,
+    /// (app, prefetcher) IPC measurement cells that were simulated.
+    pub ipc_cells: usize,
+    /// The SLO every scenario was held to (spec value or derived).
+    pub slo_us: f64,
+}
+
+struct ScenarioDef {
+    label: String,
+    shape: TrafficShape,
+    topo: ResolvedTopology,
+    params: RunParams,
+    ctrl: Option<SloCfg>,
+}
+
+/// Expand and run a cluster spec: measure the (app × prefetcher) IPC
+/// matrix through the campaign runner, resolve one topology per config
+/// (plus a multi-candidate one for the adaptive scenario), and run every
+/// (config × traffic) scenario — sharded across `threads` workers
+/// (0 = auto) with byte-identical results at any thread count.
+pub fn run_spec(spec: &ClusterSpec, threads: usize) -> Result<ClusterOutcome> {
+    spec.validate()?;
+    let labels: Vec<String> = spec.prefetchers.iter().map(|p| p.to_lowercase()).collect();
+
+    // 1. IPC matrix (one sim cell per distinct app × config).
+    let pairs = spec.ipc_cells();
+    let cells: Vec<Cell> = pairs
+        .iter()
+        .map(|(app, pf)| {
+            let key = format!("cluster|{app}|{pf}|r{}|s{}", spec.records, spec.seed);
+            Cell {
+                app: apps::app(app).expect("validated app"),
+                label: pf.clone(),
+                cfg: SimConfig {
+                    prefetcher: parse_prefetcher(pf).expect("validated prefetcher"),
+                    seed: cell_seed(spec.seed, &key),
+                    ..Default::default()
+                },
+                records: spec.records,
+                trace_seed: spec.seed,
+            }
+        })
+        .collect();
+    let sims = runner::run_cells(&cells, threads);
+    let mut ipc: HashMap<(String, String), f64> = HashMap::new();
+    for ((app, pf), r) in pairs.iter().zip(&sims) {
+        ipc.insert((app.clone(), pf.clone()), r.ipc());
+    }
+    let lookup = |app: &str, label: &str| ipc.get(&(app.to_string(), label.to_string())).copied();
+
+    // 2. Topologies: one single-candidate per static config; the
+    //    adaptive scenario sees all configs in spec order.
+    let static_topos: Vec<ResolvedTopology> = labels
+        .iter()
+        .map(|l| spec.topology.resolve(std::slice::from_ref(l), lookup))
+        .collect::<Result<_>>()?;
+    // Offered load and the derived SLO are anchored on the *slowest
+    // measured* config (the baseline — typically `nl`), so every
+    // scenario sees the same absolute arrival process and an achievable
+    // SLO regardless of the spec's listing order. Ties break to the
+    // lowest index, deterministically.
+    let base_idx = (0..static_topos.len())
+        .min_by(|&a, &b| {
+            static_topos[a]
+                .bottleneck_rate()
+                .partial_cmp(&static_topos[b].bottleneck_rate())
+                .unwrap()
+        })
+        .unwrap();
+    let base_rate = static_topos[base_idx].bottleneck_rate() * spec.utilization;
+    let slo_us = if spec.slo_us > 0.0 {
+        spec.slo_us
+    } else {
+        static_topos[base_idx].zero_load_us() * 4.0
+    };
+
+    // 3. Deterministic scenario expansion: configs ▸ shapes, adaptive last.
+    let mut variants: Vec<(String, ResolvedTopology, Option<SloCfg>)> = labels
+        .iter()
+        .zip(&static_topos)
+        .map(|(l, t)| (l.clone(), t.clone(), None))
+        .collect();
+    if spec.adaptive {
+        let mut topo = spec.topology.resolve(&labels, lookup)?;
+        // Order each service's candidates by *measured* service time,
+        // slowest first, so the control loop's Upgrade lever is always a
+        // strict improvement (e.g. cheip2k can measure slower than
+        // ceip256 on some apps). Stable sort keeps ties deterministic.
+        for s in &mut topo.services {
+            s.candidates.sort_by(|a, b| b.mean_us.partial_cmp(&a.mean_us).unwrap());
+        }
+        let seed = cell_seed(spec.seed, "adaptive-ctrl");
+        variants.push(("adaptive".into(), topo, Some(SloCfg::new(slo_us, seed))));
+    }
+    let shapes: Vec<TrafficShape> = spec
+        .traffic
+        .iter()
+        .map(|t| TrafficShape::parse(t))
+        .collect::<Result<_>>()?;
+    let mut defs = Vec::new();
+    for (label, topo, ctrl) in &variants {
+        for shape in &shapes {
+            let seed = cell_seed(spec.seed, &format!("{label}|{}", shape.label()));
+            defs.push(ScenarioDef {
+                label: label.clone(),
+                shape: shape.clone(),
+                topo: topo.clone(),
+                params: RunParams {
+                    requests: spec.requests,
+                    seed,
+                    slo_us,
+                    base_rate_per_us: base_rate,
+                },
+                ctrl: ctrl.clone(),
+            });
+        }
+    }
+
+    // 4. Shard scenarios across workers; collect by index (scenario runs
+    //    are independent and self-seeded, so order of completion is
+    //    irrelevant to the result).
+    let scenarios = run_scenarios(&defs, threads);
+    let total_requests = scenarios.iter().map(|s| s.requests).sum();
+    let total_events = scenarios.iter().map(|s| s.events).sum();
+    Ok(ClusterOutcome {
+        scenarios,
+        total_requests,
+        total_events,
+        ipc_cells: cells.len(),
+        slo_us,
+    })
+}
+
+fn run_scenarios(defs: &[ScenarioDef], threads: usize) -> Vec<ClusterResult> {
+    runner::parallel_map(defs.len(), threads, |i| {
+        let d = &defs[i];
+        let mut r = engine::run(&d.topo, &d.shape, &d.params, d.ctrl.clone());
+        r.label = d.label.clone();
+        r
+    })
+}
+
+/// Scenario summary table (deterministic: pure function of the outcome).
+pub fn report(out: &ClusterOutcome) -> Table {
+    let mut t = Table::new(
+        "cluster",
+        &format!("Cluster scenarios (SLO {} µs)", f2(out.slo_us)),
+        &[
+            "config",
+            "traffic",
+            "P50 µs",
+            "P95 µs",
+            "P99 µs",
+            "compliance",
+            "burn",
+            "actions",
+            "replicas",
+        ],
+    );
+    for s in &out.scenarios {
+        let replicas: Vec<String> = s.final_replicas.iter().map(|r| r.to_string()).collect();
+        t.row(vec![
+            s.label.clone(),
+            s.traffic.clone(),
+            f2(s.p50_us),
+            f2(s.p95_us),
+            f2(s.p99_us),
+            pct(s.compliance),
+            format!("{}/{}", s.violated_windows, s.windows),
+            s.actions.len().to_string(),
+            replicas.join(","),
+        ]);
+    }
+    t.note("burn = windows below target compliance / windows evaluated; offered load is anchored on the slowest config's bottleneck");
+    t
+}
+
+/// Control-action trace table for adaptive scenarios (empty-safe).
+pub fn action_report(out: &ClusterOutcome) -> Option<Table> {
+    let mut t = Table::new(
+        "cluster_actions",
+        "SLO control-loop actions",
+        &["config", "traffic", "t µs", "service", "action"],
+    );
+    for s in &out.scenarios {
+        for a in &s.actions {
+            t.row(vec![
+                s.label.clone(),
+                s.traffic.clone(),
+                f2(a.t_us),
+                a.service.clone(),
+                a.action.clone(),
+            ]);
+        }
+    }
+    if t.rows.is_empty() {
+        None
+    } else {
+        Some(t)
+    }
+}
+
+/// Tail summary of one campaign cell under a traffic shape: the cell's
+/// measured IPC sets the service time of a single-service cluster
+/// (1 replica, 25k instrs/req, cv 0.35 at 2.5 GHz) and the shape drives
+/// arrivals. SLO = 5× the zero-load service time.
+#[derive(Clone, Copy, Debug)]
+pub struct TailSummary {
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub compliance: f64,
+    pub slo_us: f64,
+}
+
+/// Requests simulated per campaign-cell tail evaluation.
+pub const TAIL_EVAL_REQUESTS: u64 = 30_000;
+
+pub fn evaluate_tail(ipc: f64, shape: &TrafficShape, seed: u64) -> TailSummary {
+    let topo = ResolvedTopology::chain_from_ipcs(
+        &[("svc".to_string(), ipc)],
+        25_000.0,
+        0.35,
+        2.5,
+    );
+    let slo_us = topo.zero_load_us() * 5.0;
+    let params = RunParams {
+        requests: TAIL_EVAL_REQUESTS,
+        seed,
+        slo_us,
+        base_rate_per_us: topo.bottleneck_rate(),
+    };
+    let r = engine::run(&topo, shape, &params, None);
+    TailSummary {
+        p50_us: r.p50_us,
+        p95_us: r.p95_us,
+        p99_us: r.p99_us,
+        compliance: r.compliance,
+        slo_us,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> ClusterSpec {
+        ClusterSpec {
+            name: "tiny".into(),
+            topology: Topology {
+                services: vec![
+                    ServiceSpec {
+                        // Clear bottleneck (1 replica, prefetch-sensitive app).
+                        name: "gw".into(),
+                        app: "websearch".into(),
+                        replicas: 1,
+                        instrs_per_req: 30_000.0,
+                        cv: 0.35,
+                        deps: vec![],
+                    },
+                    ServiceSpec {
+                        name: "be".into(),
+                        app: "serde".into(),
+                        replicas: 2,
+                        instrs_per_req: 20_000.0,
+                        cv: 0.35,
+                        deps: vec!["gw".into()],
+                    },
+                ],
+                freq_ghz: 2.5,
+            },
+            prefetchers: vec!["nl".into(), "ceip256".into()],
+            traffic: vec!["poisson:0.6".into()],
+            requests: 8_000,
+            records: 10_000,
+            seed: 5,
+            slo_us: 0.0,
+            utilization: 1.0,
+            adaptive: true,
+        }
+    }
+
+    #[test]
+    fn run_spec_is_thread_count_invariant() {
+        let spec = tiny_spec();
+        let a = run_spec(&spec, 1).unwrap();
+        let b = run_spec(&spec, 4).unwrap();
+        assert_eq!(a.scenarios.len(), spec.scenario_count());
+        assert_eq!(a.total_requests, spec.requests * spec.scenario_count() as u64);
+        assert_eq!(report(&a).markdown(), report(&b).markdown());
+        for (x, y) in a.scenarios.iter().zip(&b.scenarios) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.p99_us.to_bits(), y.p99_us.to_bits());
+            assert_eq!(x.events, y.events);
+        }
+    }
+
+    #[test]
+    fn faster_config_orders_p99_in_run_spec() {
+        let spec = ClusterSpec { adaptive: false, requests: 25_000, ..tiny_spec() };
+        let out = run_spec(&spec, 0).unwrap();
+        let p99 = |label: &str| {
+            out.scenarios.iter().find(|s| s.label == label).unwrap().p99_us
+        };
+        // Same offered load; the faster prefetcher tightens the tail.
+        assert!(p99("ceip256") < p99("nl"), "ceip {} !< nl {}", p99("ceip256"), p99("nl"));
+    }
+
+    #[test]
+    fn evaluate_tail_is_deterministic_and_sane() {
+        let shape = TrafficShape::Poisson { util: 0.65 };
+        let a = evaluate_tail(2.0, &shape, 9);
+        let b = evaluate_tail(2.0, &shape, 9);
+        assert_eq!(a.p99_us.to_bits(), b.p99_us.to_bits());
+        assert!(a.p50_us <= a.p95_us && a.p95_us <= a.p99_us);
+        assert!(a.compliance > 0.0 && a.compliance <= 1.0);
+        // Faster core ⇒ shorter absolute tail (same utilization).
+        let fast = evaluate_tail(2.4, &shape, 9);
+        assert!(fast.p99_us < a.p99_us);
+    }
+
+    #[test]
+    fn report_contains_every_scenario_row() {
+        let spec = ClusterSpec { adaptive: false, requests: 4_000, ..tiny_spec() };
+        let out = run_spec(&spec, 2).unwrap();
+        let t = report(&out);
+        assert_eq!(t.rows.len(), out.scenarios.len());
+        assert!(t.markdown().contains("ceip256"));
+    }
+}

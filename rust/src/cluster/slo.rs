@@ -1,0 +1,293 @@
+//! Windowed SLO tracking and the burn-driven control loop (paper §XI /
+//! §VI): per-window P95/P99/compliance over completed requests, plus a
+//! controller that reacts to SLO burn by either switching the bottleneck
+//! service to a faster prefetcher config or adding a replica.
+//!
+//! Reuses the repo's existing adaptation machinery: arm selection is the
+//! contextual bandit ([`crate::ml::bandit::Bandit`], rewarded with the
+//! next window's compliance) and action frequency is bounded by the
+//! deployment token bucket ([`crate::coordinator::budget::TokenBucket`],
+//! reinterpreted over completions instead of cycles).
+
+use crate::coordinator::budget::TokenBucket;
+use crate::ml::bandit::{Bandit, Context};
+use crate::util::percentile::Digest;
+
+/// Control-loop configuration.
+#[derive(Clone, Debug)]
+pub struct SloCfg {
+    /// Latency target (µs).
+    pub slo_us: f64,
+    /// Completions per evaluation window.
+    pub window: u32,
+    /// Compliance target: a window with a smaller met-fraction burns.
+    pub target: f64,
+    /// Per-service replica cap for scale-out actions.
+    pub max_replicas: u32,
+    /// Control actions per 1000 completions (token-bucket rate).
+    pub action_rate_per_kreq: f64,
+    /// Token-bucket burst (actions available immediately).
+    pub action_burst: f64,
+    /// Bandit RNG seed (derived from the scenario seed by the caller).
+    pub seed: u64,
+}
+
+impl SloCfg {
+    pub fn new(slo_us: f64, seed: u64) -> SloCfg {
+        SloCfg {
+            slo_us,
+            window: 2_000,
+            target: 0.99,
+            max_replicas: 8,
+            action_rate_per_kreq: 2.0,
+            action_burst: 2.0,
+            seed,
+        }
+    }
+}
+
+/// What the controller asks the engine to do.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SloAction {
+    /// Switch the bottleneck service to its next faster candidate config.
+    Upgrade,
+    /// Add one replica to the bottleneck service.
+    AddReplica,
+}
+
+/// One window's summary (diagnostics and tests).
+#[derive(Clone, Copy, Debug)]
+pub struct WindowStats {
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub compliance: f64,
+}
+
+/// Windowed SLO burn tracker + bandit-arbitrated control loop.
+pub struct SloController {
+    pub cfg: SloCfg,
+    win: Digest,
+    met: u32,
+    bandit: Bandit,
+    bucket: TokenBucket,
+    completions: u64,
+    /// Windows evaluated so far.
+    pub windows: u32,
+    /// Windows that burned (compliance below target).
+    pub violated: u32,
+    last_p99: f64,
+    /// Bandit slot awaiting its reward (next window's compliance),
+    /// plus the context base it was chosen in — [`Self::settle_applied`]
+    /// re-points the slot when the engine executes the other lever.
+    pending_slot: Option<usize>,
+    pending_base: Option<usize>,
+    pub last_window: Option<WindowStats>,
+}
+
+fn arm_of(act: SloAction) -> usize {
+    match act {
+        SloAction::Upgrade => 0,
+        SloAction::AddReplica => 1,
+    }
+}
+
+impl SloController {
+    pub fn new(cfg: SloCfg) -> SloController {
+        let bandit = Bandit::new(0.1, 0.3, cfg.seed);
+        let bucket = TokenBucket::new(cfg.action_rate_per_kreq, cfg.action_burst);
+        SloController {
+            win: Digest::with_capacity(cfg.window as usize),
+            met: 0,
+            bandit,
+            bucket,
+            completions: 0,
+            windows: 0,
+            violated: 0,
+            last_p99: 0.0,
+            pending_slot: None,
+            pending_base: None,
+            last_window: None,
+            cfg,
+        }
+    }
+
+    /// Feed one completed request. At window boundaries, evaluates burn
+    /// and may return an action; `headroom` tells the bandit whether the
+    /// engine still has a faster config or spare replica slot to apply.
+    pub fn on_complete(&mut self, latency_us: f64, headroom: bool) -> Option<SloAction> {
+        self.completions += 1;
+        self.win.add(latency_us);
+        if latency_us <= self.cfg.slo_us {
+            self.met += 1;
+        }
+        if self.win.len() < self.cfg.window as usize {
+            return None;
+        }
+        let compliance = self.met as f64 / self.cfg.window as f64;
+        let stats = WindowStats {
+            p95_us: self.win.percentile(95.0),
+            p99_us: self.win.percentile(99.0),
+            compliance,
+        };
+        self.windows += 1;
+        let burned = compliance < self.cfg.target;
+        if burned {
+            self.violated += 1;
+        }
+        // Settle the previous action's reward with this window's
+        // compliance: the arm that restored the SLO gets reinforced.
+        if let Some(slot) = self.pending_slot.take() {
+            self.bandit.update(slot, compliance.clamp(0.0, 1.0) as f32);
+        }
+        self.pending_base = None;
+        let growing = stats.p99_us > self.last_p99;
+        self.last_p99 = stats.p99_us;
+        self.last_window = Some(stats);
+        self.win.clear();
+        self.met = 0;
+        if burned && headroom && self.bucket.try_take(self.completions) {
+            let severe = compliance < self.cfg.target - 0.05;
+            let ctx = Context::from_signals(severe, headroom, growing);
+            let (arm, slot) = self.bandit.choose_arm(ctx, 2);
+            self.pending_slot = Some(slot);
+            self.pending_base = Some(slot - arm);
+            return Some(if arm == 0 { SloAction::Upgrade } else { SloAction::AddReplica });
+        }
+        None
+    }
+
+    /// Tell the controller what the engine actually did with the last
+    /// proposed action. The engine may fall back to the other lever when
+    /// the chosen one is exhausted for the bottleneck service — the next
+    /// window's reward must then land on the arm that *executed*, and a
+    /// dropped action must not be rewarded at all.
+    pub fn settle_applied(&mut self, applied: Option<SloAction>) {
+        match (applied, self.pending_base) {
+            (Some(act), Some(base)) => self.pending_slot = Some(base + arm_of(act)),
+            _ => self.pending_slot = None,
+        }
+        self.pending_base = None;
+    }
+
+    /// Burn rate: fraction of evaluated windows below target compliance.
+    pub fn burn_rate(&self) -> f64 {
+        if self.windows == 0 {
+            0.0
+        } else {
+            self.violated as f64 / self.windows as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(window: u32) -> SloCfg {
+        SloCfg { window, ..SloCfg::new(10.0, 42) }
+    }
+
+    #[test]
+    fn no_action_before_a_full_window() {
+        let mut c = SloController::new(cfg(100));
+        for _ in 0..99 {
+            assert_eq!(c.on_complete(50.0, true), None);
+        }
+        assert_eq!(c.windows, 0);
+    }
+
+    #[test]
+    fn compliant_windows_do_not_act() {
+        let mut c = SloController::new(cfg(100));
+        for _ in 0..500 {
+            assert_eq!(c.on_complete(1.0, true), None, "action on a healthy window");
+        }
+        assert_eq!(c.windows, 5);
+        assert_eq!(c.violated, 0);
+        assert_eq!(c.burn_rate(), 0.0);
+    }
+
+    #[test]
+    fn burned_window_triggers_an_action() {
+        let mut c = SloController::new(cfg(100));
+        let mut acted = false;
+        for _ in 0..100 {
+            // Every request misses the 10 µs SLO.
+            if c.on_complete(100.0, true).is_some() {
+                acted = true;
+            }
+        }
+        assert!(acted, "no action after a fully-burned window");
+        assert_eq!(c.violated, 1);
+        assert!((c.burn_rate() - 1.0).abs() < 1e-9);
+        assert!(c.last_window.unwrap().compliance < 1e-9);
+    }
+
+    #[test]
+    fn no_headroom_means_no_action() {
+        let mut c = SloController::new(cfg(100));
+        for _ in 0..300 {
+            assert_eq!(c.on_complete(100.0, false), None);
+        }
+        assert_eq!(c.violated, 3, "burn is still tracked without headroom");
+    }
+
+    #[test]
+    fn token_bucket_bounds_action_rate() {
+        // Burst 2, refill 2/kreq: 10 consecutive burned 100-req windows
+        // can fire at most burst + refilled ≈ 2 + 2 actions.
+        let mut c = SloController::new(cfg(100));
+        let mut actions = 0;
+        for _ in 0..1000 {
+            if c.on_complete(100.0, true).is_some() {
+                actions += 1;
+            }
+        }
+        assert!(actions >= 2, "bucket burst unused: {actions}");
+        assert!(actions <= 4, "bucket failed to bound actions: {actions}");
+    }
+
+    #[test]
+    fn settle_applied_repoints_or_clears_the_reward() {
+        // Drive the controller to a proposal, then tell it the engine
+        // fell back to the other lever: the pending reward must follow.
+        let propose = |c: &mut SloController| -> SloAction {
+            loop {
+                if let Some(a) = c.on_complete(100.0, true) {
+                    return a;
+                }
+            }
+        };
+        let mut c = SloController::new(cfg(100));
+        let chosen = propose(&mut c);
+        let other = match chosen {
+            SloAction::Upgrade => SloAction::AddReplica,
+            SloAction::AddReplica => SloAction::Upgrade,
+        };
+        c.settle_applied(Some(other));
+        let base = c.pending_base; // cleared by settle
+        assert_eq!(base, None);
+        let slot = c.pending_slot.expect("reward slot lost");
+        assert_eq!(slot % crate::ml::bandit::THRESHOLDS.len(), arm_of(other));
+
+        // A dropped action must not be rewarded at all.
+        let mut c = SloController::new(cfg(100));
+        propose(&mut c);
+        c.settle_applied(None);
+        assert_eq!(c.pending_slot, None);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let run = || {
+            let mut c = SloController::new(cfg(50));
+            let mut log = Vec::new();
+            for i in 0..2000u64 {
+                let lat = if i % 3 == 0 { 100.0 } else { 1.0 };
+                log.push(c.on_complete(lat, true));
+            }
+            log
+        };
+        assert_eq!(run(), run());
+    }
+}

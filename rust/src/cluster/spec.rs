@@ -1,0 +1,361 @@
+//! Declarative cluster-scenario specs: a JSON document (serde-free, via
+//! [`crate::util::json`], same discipline as `campaign::spec`) naming a
+//! request-DAG topology, the prefetcher configs to evaluate, the traffic
+//! shapes to offer, and the SLO — expanded by [`super::run_spec`] into
+//! (config × shape) scenarios plus an optional adaptive scenario driven
+//! by the SLO control loop.
+
+use super::topology::{ServiceSpec, Topology};
+use super::workload::TrafficShape;
+use crate::cli::parse_prefetcher;
+use crate::trace::gen::apps;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// A complete cluster experiment description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterSpec {
+    pub name: String,
+    pub topology: Topology,
+    /// Prefetcher configs (CLI syntax). Listing order only sets report
+    /// order: the load/SLO anchor is the slowest *measured* config, and
+    /// the adaptive scenario orders its candidates by measured service
+    /// time (slowest first) before upgrading rightwards.
+    pub prefetchers: Vec<String>,
+    /// Traffic-shape specs (see [`TrafficShape::parse`]).
+    pub traffic: Vec<String>,
+    /// Requests per scenario.
+    pub requests: u64,
+    /// Records per (app, prefetcher) IPC measurement cell.
+    pub records: u64,
+    pub seed: u64,
+    /// Latency SLO in µs; 0 = derive as 4× the slowest config's
+    /// zero-load critical path.
+    pub slo_us: f64,
+    /// Offered load as a fraction of the slowest measured (baseline)
+    /// config's bottleneck rate; shapes scale relative to this.
+    pub utilization: f64,
+    /// Also run the SLO-control-loop scenario per traffic shape.
+    pub adaptive: bool,
+}
+
+impl Default for ClusterSpec {
+    fn default() -> Self {
+        ClusterSpec {
+            name: "cluster".into(),
+            topology: Topology { services: Vec::new(), freq_ghz: 2.5 },
+            prefetchers: Vec::new(),
+            traffic: vec!["poisson:0.65".into()],
+            requests: 100_000,
+            records: 60_000,
+            seed: 7,
+            slo_us: 0.0,
+            utilization: 1.0,
+            adaptive: false,
+        }
+    }
+}
+
+impl ClusterSpec {
+    pub fn validate(&self) -> Result<()> {
+        if self.prefetchers.is_empty() {
+            bail!("cluster '{}' lists no prefetchers", self.name);
+        }
+        if self.traffic.is_empty() {
+            bail!("cluster '{}' lists no traffic shapes", self.name);
+        }
+        if self.requests == 0 || self.records == 0 {
+            bail!("cluster '{}' has requests = 0 or records = 0", self.name);
+        }
+        if self.utilization <= 0.0 || !self.utilization.is_finite() {
+            bail!("cluster '{}': utilization must be > 0", self.name);
+        }
+        if self.slo_us < 0.0 {
+            bail!("cluster '{}': slo_us must be ≥ 0 (0 = derived)", self.name);
+        }
+        self.topology.validate().with_context(|| format!("in cluster '{}'", self.name))?;
+        for s in &self.topology.services {
+            apps::app(&s.app).with_context(|| {
+                format!("service '{}': unknown app '{}' (see `slofetch apps`)", s.name, s.app)
+            })?;
+        }
+        let mut seen = std::collections::HashSet::new();
+        for pf in &self.prefetchers {
+            parse_prefetcher(pf).with_context(|| format!("in cluster '{}'", self.name))?;
+            if !seen.insert(pf.to_lowercase()) {
+                bail!("cluster '{}': duplicate prefetcher '{pf}'", self.name);
+            }
+        }
+        let mut seen = std::collections::HashSet::new();
+        for t in &self.traffic {
+            let shape =
+                TrafficShape::parse(t).with_context(|| format!("in cluster '{}'", self.name))?;
+            if !seen.insert(shape.label()) {
+                bail!("cluster '{}': duplicate traffic shape '{t}'", self.name);
+            }
+        }
+        Ok(())
+    }
+
+    /// Distinct (app, prefetcher-label) pairs needing an IPC measurement.
+    pub fn ipc_cells(&self) -> Vec<(String, String)> {
+        let mut apps_seen = Vec::new();
+        for s in &self.topology.services {
+            if !apps_seen.contains(&s.app) {
+                apps_seen.push(s.app.clone());
+            }
+        }
+        let mut out = Vec::new();
+        for app in &apps_seen {
+            for pf in &self.prefetchers {
+                out.push((app.clone(), pf.to_lowercase()));
+            }
+        }
+        out
+    }
+
+    /// Scenario count: prefetchers × shapes, plus shapes again when the
+    /// adaptive scenario is enabled.
+    pub fn scenario_count(&self) -> usize {
+        (self.prefetchers.len() + usize::from(self.adaptive)) * self.traffic.len()
+    }
+
+    // ---------- JSON (de)serialization ----------
+
+    pub fn to_json(&self) -> Json {
+        let services = self
+            .topology
+            .services
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("name", Json::str(&s.name)),
+                    ("app", Json::str(&s.app)),
+                    ("replicas", Json::num(s.replicas as f64)),
+                    ("instrs_per_req", Json::num(s.instrs_per_req)),
+                    ("cv", Json::num(s.cv)),
+                    (
+                        "deps",
+                        Json::Arr(s.deps.iter().map(|d| Json::str(d)).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("services", Json::Arr(services)),
+            ("freq_ghz", Json::num(self.topology.freq_ghz)),
+            (
+                "prefetchers",
+                Json::Arr(self.prefetchers.iter().map(|p| Json::str(p)).collect()),
+            ),
+            (
+                "traffic",
+                Json::Arr(self.traffic.iter().map(|t| Json::str(t)).collect()),
+            ),
+            ("requests", Json::num(self.requests as f64)),
+            ("records", Json::num(self.records as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("slo_us", Json::num(self.slo_us)),
+            ("utilization", Json::num(self.utilization)),
+            ("adaptive", Json::Bool(self.adaptive)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ClusterSpec> {
+        let mut spec = ClusterSpec::default();
+        if let Some(n) = j.get("name").and_then(Json::as_str) {
+            spec.name = n.to_string();
+        }
+        let services = j
+            .get("services")
+            .and_then(Json::as_arr)
+            .context("cluster spec: 'services' must be an array")?;
+        for (i, s) in services.iter().enumerate() {
+            let name = s
+                .get("name")
+                .and_then(Json::as_str)
+                .with_context(|| format!("service #{i}: missing 'name'"))?;
+            let app = s
+                .get("app")
+                .and_then(Json::as_str)
+                .with_context(|| format!("service '{name}': missing 'app'"))?;
+            let deps = match s.get("deps") {
+                None => Vec::new(),
+                Some(d) => d
+                    .as_arr()
+                    .with_context(|| format!("service '{name}': 'deps' must be an array"))?
+                    .iter()
+                    .map(|v| {
+                        v.as_str()
+                            .map(str::to_string)
+                            .with_context(|| format!("service '{name}': deps must be strings"))
+                    })
+                    .collect::<Result<_>>()?,
+            };
+            spec.topology.services.push(ServiceSpec {
+                name: name.to_string(),
+                app: app.to_string(),
+                replicas: s.get("replicas").and_then(Json::as_u64).unwrap_or(1) as u32,
+                instrs_per_req: s
+                    .get("instrs_per_req")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(25_000.0),
+                cv: s.get("cv").and_then(Json::as_f64).unwrap_or(0.35),
+                deps,
+            });
+        }
+        if let Some(f) = j.get("freq_ghz").and_then(Json::as_f64) {
+            spec.topology.freq_ghz = f;
+        }
+        let strings = |key: &str| -> Result<Option<Vec<String>>> {
+            match j.get(key) {
+                None => Ok(None),
+                Some(v) => v
+                    .as_arr()
+                    .with_context(|| format!("cluster spec: '{key}' must be an array"))?
+                    .iter()
+                    .map(|v| {
+                        v.as_str()
+                            .map(str::to_string)
+                            .with_context(|| format!("'{key}' entries must be strings"))
+                    })
+                    .collect::<Result<_>>()
+                    .map(Some),
+            }
+        };
+        spec.prefetchers = strings("prefetchers")?.unwrap_or_default();
+        if let Some(t) = strings("traffic")? {
+            spec.traffic = t;
+        }
+        if let Some(v) = j.get("requests").and_then(Json::as_u64) {
+            spec.requests = v;
+        }
+        if let Some(v) = j.get("records").and_then(Json::as_u64) {
+            spec.records = v;
+        }
+        if let Some(v) = j.get("seed").and_then(Json::as_u64) {
+            spec.seed = v;
+        }
+        if let Some(v) = j.get("slo_us").and_then(Json::as_f64) {
+            spec.slo_us = v;
+        }
+        if let Some(v) = j.get("utilization").and_then(Json::as_f64) {
+            spec.utilization = v;
+        }
+        if let Some(v) = j.get("adaptive").and_then(Json::as_bool) {
+            spec.adaptive = v;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn load(path: &Path) -> Result<ClusterSpec> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        let j = Json::parse(&text).with_context(|| format!("parse {path:?}"))?;
+        Self::from_json(&j).with_context(|| format!("in {path:?}"))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().pretty())
+            .with_context(|| format!("write {path:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> ClusterSpec {
+        ClusterSpec {
+            name: "t".into(),
+            topology: Topology {
+                services: vec![
+                    ServiceSpec {
+                        name: "gw".into(),
+                        app: "admission".into(),
+                        replicas: 2,
+                        instrs_per_req: 25_000.0,
+                        cv: 0.35,
+                        deps: vec![],
+                    },
+                    ServiceSpec {
+                        name: "search".into(),
+                        app: "websearch".into(),
+                        replicas: 2,
+                        instrs_per_req: 40_000.0,
+                        cv: 0.4,
+                        deps: vec!["gw".into()],
+                    },
+                ],
+                freq_ghz: 2.5,
+            },
+            prefetchers: vec!["nl".into(), "ceip256".into()],
+            traffic: vec!["poisson:0.6".into(), "burst:0.5:3:40000:0.25".into()],
+            requests: 10_000,
+            records: 5_000,
+            seed: 3,
+            slo_us: 0.0,
+            utilization: 1.0,
+            adaptive: true,
+        }
+    }
+
+    #[test]
+    fn validates_and_counts() {
+        let s = small();
+        assert!(s.validate().is_ok());
+        // (2 prefetchers + adaptive) × 2 shapes.
+        assert_eq!(s.scenario_count(), 6);
+        // 2 apps × 2 prefetchers.
+        assert_eq!(s.ipc_cells().len(), 4);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = small();
+        let back = ClusterSpec::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        let mut bad = small();
+        bad.prefetchers = vec!["bogus9".into()];
+        assert!(ClusterSpec::from_json(&bad.to_json()).is_err());
+
+        let mut bad = small();
+        bad.traffic = vec!["tsunami".into()];
+        assert!(ClusterSpec::from_json(&bad.to_json()).is_err());
+
+        let mut bad = small();
+        bad.topology.services[1].app = "nope".into();
+        assert!(ClusterSpec::from_json(&bad.to_json()).is_err());
+
+        let mut bad = small();
+        bad.topology.services[1].deps = vec!["missing".into()];
+        assert!(ClusterSpec::from_json(&bad.to_json()).is_err());
+
+        let mut bad = small();
+        bad.prefetchers = vec!["nl".into(), "NL".into()];
+        assert!(bad.validate().is_err(), "case-normalized duplicate not caught");
+    }
+
+    #[test]
+    fn defaults_fill_optional_fields() {
+        let j = Json::parse(
+            r#"{
+                "services": [{"name": "a", "app": "crypto"}],
+                "prefetchers": ["nl"]
+            }"#,
+        )
+        .unwrap();
+        let s = ClusterSpec::from_json(&j).unwrap();
+        assert_eq!(s.topology.services[0].replicas, 1);
+        assert_eq!(s.topology.services[0].instrs_per_req, 25_000.0);
+        assert_eq!(s.traffic, vec!["poisson:0.65".to_string()]);
+        assert!(!s.adaptive);
+    }
+}

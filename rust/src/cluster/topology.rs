@@ -1,0 +1,451 @@
+//! Request-DAG topologies: services with parallel fan-out/fan-in edges
+//! and per-service replica pools, generalizing the linear `rpc/` chain
+//! (which is recovered exactly as a DAG whose every node has one parent).
+//!
+//! Two levels: [`ServiceSpec`]/[`Topology`] are the declarative form the
+//! JSON spec deserializes into (app preset + prefetcher names), and
+//! [`ResolvedTopology`] is the runnable form where each service carries
+//! concrete mean service times derived from `sim::engine` IPC
+//! measurements — one candidate per prefetcher config, so the SLO
+//! control loop can switch between them at run time.
+
+use anyhow::{bail, Result};
+
+/// One service in the declarative DAG.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServiceSpec {
+    pub name: String,
+    /// App preset whose instruction stream this service executes
+    /// (see `slofetch apps`); supplies the per-prefetcher IPC.
+    pub app: String,
+    pub replicas: u32,
+    /// Mean instructions executed per request at this service.
+    pub instrs_per_req: f64,
+    /// Coefficient of variation of per-request work.
+    pub cv: f64,
+    /// Upstream services (parents): this service starts for a request
+    /// once all of them have completed it. Empty = entry point.
+    pub deps: Vec<String>,
+}
+
+/// A declarative request DAG.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Topology {
+    pub services: Vec<ServiceSpec>,
+    pub freq_ghz: f64,
+}
+
+impl Topology {
+    /// A linear chain (the degenerate DAG the `rpc/` tandem model is a
+    /// special case of): service i depends on service i−1.
+    pub fn linear(names_apps: &[(&str, &str)], instrs_per_req: f64, freq_ghz: f64) -> Topology {
+        let services = names_apps
+            .iter()
+            .enumerate()
+            .map(|(i, (name, app))| ServiceSpec {
+                name: name.to_string(),
+                app: app.to_string(),
+                replicas: 1,
+                instrs_per_req,
+                cv: 0.35,
+                deps: if i == 0 {
+                    Vec::new()
+                } else {
+                    vec![names_apps[i - 1].0.to_string()]
+                },
+            })
+            .collect();
+        Topology { services, freq_ghz }
+    }
+
+    fn index_of(&self, name: &str) -> Option<usize> {
+        self.services.iter().position(|s| s.name == name)
+    }
+
+    /// Structural validation: unique names, known deps, ≥1 replica,
+    /// positive work, at least one entry point, and acyclicity.
+    pub fn validate(&self) -> Result<()> {
+        if self.services.is_empty() {
+            bail!("topology has no services");
+        }
+        if self.freq_ghz <= 0.0 {
+            bail!("topology freq_ghz must be > 0, got {}", self.freq_ghz);
+        }
+        let mut seen = std::collections::HashSet::new();
+        for s in &self.services {
+            if !seen.insert(s.name.as_str()) {
+                bail!("duplicate service name '{}'", s.name);
+            }
+            if s.replicas == 0 {
+                bail!("service '{}' has 0 replicas", s.name);
+            }
+            if s.instrs_per_req <= 0.0 {
+                bail!("service '{}' has non-positive instrs_per_req", s.name);
+            }
+            if s.cv < 0.0 {
+                bail!("service '{}' has negative cv", s.name);
+            }
+            for d in &s.deps {
+                if self.index_of(d).is_none() {
+                    bail!("service '{}' depends on unknown service '{d}'", s.name);
+                }
+                if d == &s.name {
+                    bail!("service '{}' depends on itself", s.name);
+                }
+            }
+        }
+        self.topo_order()?; // acyclicity + entry-point check
+        Ok(())
+    }
+
+    /// Kahn topological order over service indexes; errors on cycles.
+    pub fn topo_order(&self) -> Result<Vec<usize>> {
+        let n = self.services.len();
+        let mut indegree = vec![0u32; n];
+        let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, s) in self.services.iter().enumerate() {
+            for d in &s.deps {
+                let p = self
+                    .index_of(d)
+                    .ok_or_else(|| anyhow::anyhow!("unknown dep '{d}'"))?;
+                children[p].push(i);
+                indegree[i] += 1;
+            }
+        }
+        let mut queue: Vec<usize> =
+            (0..n).filter(|&i| indegree[i] == 0).collect();
+        if queue.is_empty() {
+            bail!("topology has no entry point (every service has deps)");
+        }
+        let mut order = Vec::with_capacity(n);
+        let mut head = 0;
+        while head < queue.len() {
+            let u = queue[head];
+            head += 1;
+            order.push(u);
+            for &c in &children[u] {
+                indegree[c] -= 1;
+                if indegree[c] == 0 {
+                    queue.push(c);
+                }
+            }
+        }
+        if order.len() != n {
+            bail!("topology contains a dependency cycle");
+        }
+        Ok(order)
+    }
+
+    /// Resolve into a runnable topology. `ipc_of(app, label)` returns the
+    /// measured IPC for a (service app, prefetcher config) pair; one
+    /// candidate service time is derived per label, in `labels` order
+    /// (the engine starts every service at candidate 0, and the SLO
+    /// control loop may advance to later — faster — candidates).
+    pub fn resolve<F>(&self, labels: &[String], ipc_of: F) -> Result<ResolvedTopology>
+    where
+        F: Fn(&str, &str) -> Option<f64>,
+    {
+        self.validate()?;
+        if labels.is_empty() {
+            bail!("resolve: no prefetcher labels");
+        }
+        let n = self.services.len();
+        let mut services = Vec::with_capacity(n);
+        for s in &self.services {
+            let mut candidates = Vec::with_capacity(labels.len());
+            for label in labels {
+                let ipc = ipc_of(&s.app, label).ok_or_else(|| {
+                    anyhow::anyhow!("no IPC measurement for ({}, {label})", s.app)
+                })?;
+                if ipc <= 0.0 {
+                    bail!("non-positive IPC for ({}, {label})", s.app);
+                }
+                let cycles = s.instrs_per_req / ipc;
+                candidates.push(Candidate {
+                    label: label.clone(),
+                    mean_us: cycles / (self.freq_ghz * 1000.0),
+                });
+            }
+            services.push(ResolvedService {
+                name: s.name.clone(),
+                replicas: s.replicas,
+                cv: s.cv,
+                candidates,
+                children: Vec::new(),
+                indegree: 0,
+            });
+        }
+        for (i, s) in self.services.iter().enumerate() {
+            for d in &s.deps {
+                let p = self.index_of(d).unwrap();
+                services[p].children.push(i as u32);
+                services[i].indegree += 1;
+            }
+        }
+        Ok(ResolvedTopology { services })
+    }
+}
+
+/// One runnable service-time option (a prefetcher config's effect).
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub label: String,
+    pub mean_us: f64,
+}
+
+/// A service ready for the event loop.
+#[derive(Clone, Debug)]
+pub struct ResolvedService {
+    pub name: String,
+    pub replicas: u32,
+    pub cv: f64,
+    /// Service-time options in spec order; the engine starts at index 0.
+    pub candidates: Vec<Candidate>,
+    /// Downstream service indexes (fan-out edges).
+    pub children: Vec<u32>,
+    /// Number of upstream services (fan-in width; 0 = entry point).
+    pub indegree: u32,
+}
+
+/// A runnable request DAG with per-service timing candidates.
+#[derive(Clone, Debug)]
+pub struct ResolvedTopology {
+    pub services: Vec<ResolvedService>,
+}
+
+impl ResolvedTopology {
+    /// Build a chain directly from (name, IPC) pairs — the degenerate
+    /// linear DAG the figure harness routes the paper's §XI table
+    /// through. One candidate per service, one replica each.
+    pub fn chain_from_ipcs(
+        ipcs: &[(String, f64)],
+        instrs_per_req: f64,
+        cv: f64,
+        freq_ghz: f64,
+    ) -> ResolvedTopology {
+        let n = ipcs.len();
+        let services = ipcs
+            .iter()
+            .enumerate()
+            .map(|(i, (name, ipc))| ResolvedService {
+                name: name.clone(),
+                replicas: 1,
+                cv,
+                candidates: vec![Candidate {
+                    label: "static".into(),
+                    mean_us: instrs_per_req / ipc / (freq_ghz * 1000.0),
+                }],
+                children: if i + 1 < n { vec![(i + 1) as u32] } else { Vec::new() },
+                indegree: u32::from(i > 0),
+            })
+            .collect();
+        ResolvedTopology { services }
+    }
+
+    /// Aggregate service rate (req/µs) of the bottleneck service at the
+    /// given candidate index (clamped per service): `replicas / mean`.
+    pub fn bottleneck_rate_at(&self, candidate: usize) -> f64 {
+        self.services
+            .iter()
+            .map(|s| {
+                let c = candidate.min(s.candidates.len() - 1);
+                s.replicas as f64 / s.candidates[c].mean_us
+            })
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Bottleneck rate at every service's starting (slowest) candidate.
+    pub fn bottleneck_rate(&self) -> f64 {
+        self.bottleneck_rate_at(0)
+    }
+
+    /// Zero-load latency: the critical (longest mean) path through the
+    /// DAG at candidate 0.
+    pub fn zero_load_us(&self) -> f64 {
+        // Longest path via one pass in topological order. The resolved
+        // edges are acyclic by construction (Topology::resolve validated
+        // them; chain_from_ipcs builds a chain).
+        let n = self.services.len();
+        let mut indegree: Vec<u32> = self.services.iter().map(|s| s.indegree).collect();
+        let mut finish = vec![0.0f64; n];
+        let mut queue: Vec<usize> = (0..n).filter(|&i| indegree[i] == 0).collect();
+        for i in &queue {
+            finish[*i] = self.services[*i].candidates[0].mean_us;
+        }
+        let mut head = 0;
+        let mut best: f64 = 0.0;
+        while head < queue.len() {
+            let u = queue[head];
+            head += 1;
+            best = best.max(finish[u]);
+            for &c in &self.services[u].children {
+                let c = c as usize;
+                let cand = finish[u] + self.services[c].candidates[0].mean_us;
+                if cand > finish[c] {
+                    finish[c] = cand;
+                }
+                indegree[c] -= 1;
+                if indegree[c] == 0 {
+                    queue.push(c);
+                }
+            }
+        }
+        best
+    }
+
+    /// Entry-point service indexes.
+    pub fn roots(&self) -> Vec<u32> {
+        (0..self.services.len() as u32)
+            .filter(|&i| self.services[i as usize].indegree == 0)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// gateway → {search, ads} → render.
+    fn diamond() -> Topology {
+        Topology {
+            services: vec![
+                ServiceSpec {
+                    name: "gateway".into(),
+                    app: "admission".into(),
+                    replicas: 2,
+                    instrs_per_req: 25_000.0,
+                    cv: 0.3,
+                    deps: vec![],
+                },
+                ServiceSpec {
+                    name: "search".into(),
+                    app: "websearch".into(),
+                    replicas: 3,
+                    instrs_per_req: 50_000.0,
+                    cv: 0.4,
+                    deps: vec!["gateway".into()],
+                },
+                ServiceSpec {
+                    name: "ads".into(),
+                    app: "mlserve".into(),
+                    replicas: 2,
+                    instrs_per_req: 40_000.0,
+                    cv: 0.4,
+                    deps: vec!["gateway".into()],
+                },
+                ServiceSpec {
+                    name: "render".into(),
+                    app: "serde".into(),
+                    replicas: 2,
+                    instrs_per_req: 20_000.0,
+                    cv: 0.3,
+                    deps: vec!["search".into(), "ads".into()],
+                },
+            ],
+            freq_ghz: 2.5,
+        }
+    }
+
+    fn resolved() -> ResolvedTopology {
+        // IPC 2.0 everywhere, one candidate.
+        diamond().resolve(&["nl".into()], |_, _| Some(2.0)).unwrap()
+    }
+
+    #[test]
+    fn validation_catches_structural_errors() {
+        assert!(diamond().validate().is_ok());
+        let mut dup = diamond();
+        dup.services[1].name = "gateway".into();
+        assert!(dup.validate().is_err());
+
+        let mut unknown = diamond();
+        unknown.services[3].deps = vec!["nope".into()];
+        assert!(unknown.validate().is_err());
+
+        let mut cycle = diamond();
+        cycle.services[0].deps = vec!["render".into()];
+        assert!(cycle.validate().is_err(), "cycle not caught");
+
+        let mut zero = diamond();
+        zero.services[2].replicas = 0;
+        assert!(zero.validate().is_err());
+    }
+
+    #[test]
+    fn topo_order_respects_deps() {
+        let t = diamond();
+        let order = t.topo_order().unwrap();
+        let pos = |n: usize| order.iter().position(|&x| x == n).unwrap();
+        assert!(pos(0) < pos(1) && pos(0) < pos(2));
+        assert!(pos(1) < pos(3) && pos(2) < pos(3));
+    }
+
+    #[test]
+    fn resolve_sets_edges_and_service_times() {
+        let r = resolved();
+        // gateway: 25k instrs / IPC 2.0 / 2.5 GHz = 5 µs.
+        assert!((r.services[0].candidates[0].mean_us - 5.0).abs() < 1e-9);
+        assert_eq!(r.services[0].children, vec![1, 2]);
+        assert_eq!(r.services[3].indegree, 2);
+        assert_eq!(r.roots(), vec![0]);
+    }
+
+    #[test]
+    fn bottleneck_and_zero_load() {
+        let r = resolved();
+        // Rates: gw 2/5, search 3/10, ads 2/8, render 2/4 → bottleneck 0.25 (ads).
+        assert!((r.bottleneck_rate() - 0.25).abs() < 1e-9);
+        // Critical path: gateway 5 + search 10 + render 4 = 19 µs.
+        assert!((r.zero_load_us() - 19.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn faster_candidate_raises_bottleneck_rate() {
+        let t = diamond();
+        let r = t
+            .resolve(&["nl".into(), "ceip256".into()], |_, label| {
+                Some(if label == "nl" { 2.0 } else { 2.4 })
+            })
+            .unwrap();
+        assert!(r.bottleneck_rate_at(1) > r.bottleneck_rate_at(0));
+    }
+
+    #[test]
+    fn resolve_fails_on_missing_ipc() {
+        let t = diamond();
+        assert!(t
+            .resolve(&["nl".into()], |app, _| (app != "serde").then_some(2.0))
+            .is_err());
+    }
+
+    #[test]
+    fn linear_chain_matches_rpc_special_case() {
+        let t = Topology::linear(
+            &[("admission", "admission"), ("fs", "featurestore-go"), ("ml", "mlserve")],
+            25_000.0,
+            2.5,
+        );
+        assert!(t.validate().is_ok());
+        let r = t.resolve(&["nl".into()], |_, _| Some(2.0)).unwrap();
+        // Chain: zero-load = sum of node means, bottleneck = slowest node.
+        assert!((r.zero_load_us() - 15.0).abs() < 1e-9);
+        assert!((r.bottleneck_rate() - 0.2).abs() < 1e-9);
+        assert_eq!(r.roots(), vec![0]);
+        assert_eq!(r.services[1].indegree, 1);
+    }
+
+    #[test]
+    fn chain_from_ipcs_is_the_degenerate_dag() {
+        let r = ResolvedTopology::chain_from_ipcs(
+            &[("a".into(), 2.0), ("b".into(), 1.5), ("c".into(), 2.5)],
+            25_000.0,
+            0.35,
+            2.5,
+        );
+        // Same math as rpc::ServiceChain::{base_latency_us, bottleneck_rate}.
+        let expect_zero =
+            25_000.0 / 2.0 / 2500.0 + 25_000.0 / 1.5 / 2500.0 + 25_000.0 / 2.5 / 2500.0;
+        assert!((r.zero_load_us() - expect_zero).abs() < 1e-9);
+        assert!((r.bottleneck_rate() - 1.0 / (25_000.0 / 1.5 / 2500.0)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,321 @@
+//! Open-loop arrival processes for the cluster simulator: stationary
+//! Poisson plus the time-varying shapes cloud frontends actually see —
+//! diurnal sinusoid, MMPP-style on/off bursts, and linear ramps.
+//!
+//! A shape is a utilization curve `util_at(t)` in units of the scenario's
+//! reference capacity; the generator turns it into arrival instants by
+//! thinning a Poisson process at the peak rate (Lewis & Shedler), which
+//! keeps the draw sequence — and therefore the whole event loop — a pure
+//! function of the seed.
+
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+/// A time-varying offered-load curve. Utilization is relative to a
+/// reference service rate supplied at run time (`ArrivalGen::new`), so
+/// the same shape can be replayed against any topology. Burst peaks may
+/// exceed 1.0 — transient overload is exactly the scenario the SLO
+/// control loop exists for.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TrafficShape {
+    /// Stationary Poisson arrivals at `util` × reference rate.
+    Poisson { util: f64 },
+    /// Diurnal sinusoid: `util × (1 + amplitude · sin(2πt/period))`.
+    Diurnal { util: f64, amplitude: f64, period_us: f64 },
+    /// MMPP-style on/off: `util × mult` for the first `duty` fraction of
+    /// each period, `util` otherwise.
+    Burst { util: f64, mult: f64, period_us: f64, duty: f64 },
+    /// Linear ramp from `from` to `to` over `duration_us`, then hold.
+    Ramp { from: f64, to: f64, duration_us: f64 },
+}
+
+impl TrafficShape {
+    /// Parse a colon-separated shape spec:
+    /// `poisson[:U]`, `diurnal[:U[:A[:P]]]`, `burst[:U[:M[:P[:D]]]]`,
+    /// `ramp[:U0[:U1[:T]]]` (times in µs).
+    pub fn parse(spec: &str) -> Result<TrafficShape> {
+        let mut parts = spec.split(':');
+        let kind = parts.next().unwrap_or("").to_lowercase();
+        let mut nums = Vec::new();
+        for p in parts {
+            match p.parse::<f64>() {
+                Ok(v) if v.is_finite() => nums.push(v),
+                _ => bail!("traffic shape '{spec}': '{p}' is not a finite number"),
+            }
+        }
+        let arg = |i: usize, default: f64| nums.get(i).copied().unwrap_or(default);
+        let (shape, max_args) = match kind.as_str() {
+            "poisson" => (TrafficShape::Poisson { util: arg(0, 0.65) }, 1),
+            "diurnal" => (
+                TrafficShape::Diurnal {
+                    util: arg(0, 0.6),
+                    amplitude: arg(1, 0.4),
+                    period_us: arg(2, 200_000.0),
+                },
+                3,
+            ),
+            "burst" => (
+                TrafficShape::Burst {
+                    util: arg(0, 0.5),
+                    mult: arg(1, 3.0),
+                    period_us: arg(2, 50_000.0),
+                    duty: arg(3, 0.2),
+                },
+                4,
+            ),
+            "ramp" => (
+                TrafficShape::Ramp {
+                    from: arg(0, 0.3),
+                    to: arg(1, 0.9),
+                    duration_us: arg(2, 200_000.0),
+                },
+                3,
+            ),
+            other => bail!(
+                "unknown traffic shape '{other}' \
+                 (try poisson:0.65|diurnal:0.6:0.4:200000|burst:0.5:3:50000:0.2|ramp:0.3:0.9)"
+            ),
+        };
+        // Surplus fields are a typo (e.g. burst params on a poisson
+        // spec), not something to silently drop.
+        if nums.len() > max_args {
+            bail!("traffic shape '{spec}': {kind} takes at most {max_args} numeric fields");
+        }
+        shape.validate(spec)?;
+        Ok(shape)
+    }
+
+    fn validate(&self, spec: &str) -> Result<()> {
+        let positive = |v: f64, what: &str| -> Result<()> {
+            if v <= 0.0 || !v.is_finite() {
+                bail!("traffic shape '{spec}': {what} must be > 0, got {v}");
+            }
+            Ok(())
+        };
+        match self {
+            TrafficShape::Poisson { util } => positive(*util, "util")?,
+            TrafficShape::Diurnal { util, amplitude, period_us } => {
+                positive(*util, "util")?;
+                positive(*period_us, "period")?;
+                if !(0.0..1.0).contains(amplitude) {
+                    bail!("traffic shape '{spec}': amplitude must be in [0, 1), got {amplitude}");
+                }
+            }
+            TrafficShape::Burst { util, mult, period_us, duty } => {
+                positive(*util, "util")?;
+                positive(*period_us, "period")?;
+                if *mult < 1.0 || !mult.is_finite() {
+                    bail!("traffic shape '{spec}': mult must be ≥ 1, got {mult}");
+                }
+                if !(0.0..=1.0).contains(duty) {
+                    bail!("traffic shape '{spec}': duty must be in [0, 1], got {duty}");
+                }
+            }
+            TrafficShape::Ramp { from, to, duration_us } => {
+                positive(*from, "start util")?;
+                positive(*to, "end util")?;
+                positive(*duration_us, "duration")?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Canonical label used in cell keys and report rows.
+    pub fn label(&self) -> String {
+        match self {
+            TrafficShape::Poisson { util } => format!("poisson:{util}"),
+            TrafficShape::Diurnal { util, amplitude, period_us } => {
+                format!("diurnal:{util}:{amplitude}:{period_us}")
+            }
+            TrafficShape::Burst { util, mult, period_us, duty } => {
+                format!("burst:{util}:{mult}:{period_us}:{duty}")
+            }
+            TrafficShape::Ramp { from, to, duration_us } => {
+                format!("ramp:{from}:{to}:{duration_us}")
+            }
+        }
+    }
+
+    /// Instantaneous utilization at time `t` (µs).
+    pub fn util_at(&self, t: f64) -> f64 {
+        match self {
+            TrafficShape::Poisson { util } => *util,
+            TrafficShape::Diurnal { util, amplitude, period_us } => {
+                util * (1.0 + amplitude * (2.0 * std::f64::consts::PI * t / period_us).sin())
+            }
+            TrafficShape::Burst { util, mult, period_us, duty } => {
+                let phase = (t / period_us).fract();
+                if phase < *duty {
+                    util * mult
+                } else {
+                    *util
+                }
+            }
+            TrafficShape::Ramp { from, to, duration_us } => {
+                if t >= *duration_us {
+                    *to
+                } else {
+                    from + (to - from) * (t / duration_us)
+                }
+            }
+        }
+    }
+
+    /// Peak utilization over all time (the thinning envelope).
+    pub fn peak_util(&self) -> f64 {
+        match self {
+            TrafficShape::Poisson { util } => *util,
+            TrafficShape::Diurnal { util, amplitude, .. } => util * (1.0 + amplitude),
+            TrafficShape::Burst { util, mult, .. } => util * mult,
+            TrafficShape::Ramp { from, to, .. } => from.max(*to),
+        }
+    }
+}
+
+/// Arrival-instant generator: thinning against the shape's peak rate.
+/// `rate_per_us` is the reference capacity that utilization 1.0 maps to.
+#[derive(Clone, Debug)]
+pub struct ArrivalGen {
+    shape: TrafficShape,
+    rate_per_us: f64,
+    peak_rate: f64,
+    t: f64,
+    rng: Rng,
+}
+
+impl ArrivalGen {
+    pub fn new(shape: TrafficShape, rate_per_us: f64, seed: u64) -> ArrivalGen {
+        debug_assert!(rate_per_us > 0.0);
+        let peak_rate = shape.peak_util() * rate_per_us;
+        ArrivalGen { shape, rate_per_us, peak_rate, t: 0.0, rng: Rng::new(seed) }
+    }
+
+    /// Next arrival instant (µs, strictly increasing).
+    pub fn next_arrival(&mut self) -> f64 {
+        loop {
+            self.t += self.rng.exp(1.0 / self.peak_rate);
+            let lambda = self.shape.util_at(self.t) * self.rate_per_us;
+            // Accept with probability λ(t)/λmax; the draw is taken even
+            // for stationary shapes so all shapes share one code path
+            // (and one RNG consumption pattern).
+            if self.rng.f64() * self.peak_rate < lambda {
+                return self.t;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_defaults_and_full_forms() {
+        assert_eq!(TrafficShape::parse("poisson").unwrap(), TrafficShape::Poisson { util: 0.65 });
+        assert_eq!(
+            TrafficShape::parse("poisson:0.8").unwrap(),
+            TrafficShape::Poisson { util: 0.8 }
+        );
+        assert_eq!(
+            TrafficShape::parse("burst:0.5:3:40000:0.25").unwrap(),
+            TrafficShape::Burst { util: 0.5, mult: 3.0, period_us: 40_000.0, duty: 0.25 }
+        );
+        assert_eq!(
+            TrafficShape::parse("diurnal:0.6:0.4:100000").unwrap(),
+            TrafficShape::Diurnal { util: 0.6, amplitude: 0.4, period_us: 100_000.0 }
+        );
+        assert_eq!(
+            TrafficShape::parse("ramp:0.3:0.9:50000").unwrap(),
+            TrafficShape::Ramp { from: 0.3, to: 0.9, duration_us: 50_000.0 }
+        );
+        // Uppercase kinds parse like the prefetcher specs do.
+        assert!(TrafficShape::parse("POISSON:0.5").is_ok());
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(TrafficShape::parse("tsunami").is_err());
+        assert!(TrafficShape::parse("poisson:abc").is_err());
+        assert!(TrafficShape::parse("poisson:0").is_err());
+        assert!(TrafficShape::parse("poisson:-0.5").is_err());
+        assert!(TrafficShape::parse("burst:0.5:0.5").is_err(), "mult < 1");
+        assert!(TrafficShape::parse("burst:0.5:3:1000:1.5").is_err(), "duty > 1");
+        assert!(TrafficShape::parse("diurnal:0.6:1.5").is_err(), "amplitude ≥ 1");
+        // Surplus fields are rejected, not silently dropped.
+        assert!(
+            TrafficShape::parse("poisson:0.65:3:50000:0.2").is_err(),
+            "burst params on a poisson spec must not be dropped"
+        );
+        assert!(TrafficShape::parse("ramp:0.3:0.9:1000:7").is_err());
+    }
+
+    #[test]
+    fn labels_roundtrip_through_parse() {
+        for spec in ["poisson:0.65", "diurnal:0.6:0.4:200000", "burst:0.5:3:50000:0.2"] {
+            let shape = TrafficShape::parse(spec).unwrap();
+            assert_eq!(TrafficShape::parse(&shape.label()).unwrap(), shape);
+        }
+    }
+
+    #[test]
+    fn util_curves_match_definitions() {
+        let b = TrafficShape::Burst { util: 0.5, mult: 3.0, period_us: 100.0, duty: 0.2 };
+        assert_eq!(b.util_at(10.0), 1.5); // on-phase
+        assert_eq!(b.util_at(50.0), 0.5); // off-phase
+        assert_eq!(b.util_at(110.0), 1.5); // periodic
+        assert_eq!(b.peak_util(), 1.5);
+
+        let r = TrafficShape::Ramp { from: 0.2, to: 0.8, duration_us: 100.0 };
+        assert!((r.util_at(50.0) - 0.5).abs() < 1e-12);
+        assert_eq!(r.util_at(1000.0), 0.8);
+
+        let d = TrafficShape::Diurnal { util: 0.5, amplitude: 0.4, period_us: 100.0 };
+        assert!((d.util_at(25.0) - 0.7).abs() < 1e-12); // sin peak
+        assert!((d.peak_util() - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn arrivals_are_increasing_and_deterministic() {
+        let shape = TrafficShape::Burst { util: 0.5, mult: 3.0, period_us: 1000.0, duty: 0.2 };
+        let mut a = ArrivalGen::new(shape.clone(), 0.2, 42);
+        let mut b = ArrivalGen::new(shape, 0.2, 42);
+        let mut last = 0.0;
+        for _ in 0..5_000 {
+            let ta = a.next_arrival();
+            assert_eq!(ta, b.next_arrival());
+            assert!(ta > last);
+            last = ta;
+        }
+    }
+
+    #[test]
+    fn poisson_rate_is_respected() {
+        // util 0.5 × rate 0.2/µs = 0.1 arrivals/µs → mean IAT 10 µs.
+        let mut g = ArrivalGen::new(TrafficShape::Poisson { util: 0.5 }, 0.2, 7);
+        let n = 50_000;
+        let mut t = 0.0;
+        for _ in 0..n {
+            t = g.next_arrival();
+        }
+        let mean_iat = t / n as f64;
+        assert!((mean_iat - 10.0).abs() < 0.3, "mean IAT {mean_iat}");
+    }
+
+    #[test]
+    fn burst_concentrates_arrivals_in_on_phase() {
+        let shape = TrafficShape::Burst { util: 0.4, mult: 4.0, period_us: 1000.0, duty: 0.25 };
+        let mut g = ArrivalGen::new(shape, 0.1, 9);
+        let mut on = 0u32;
+        let mut total = 0u32;
+        for _ in 0..20_000 {
+            let t = g.next_arrival();
+            total += 1;
+            if (t / 1000.0).fract() < 0.25 {
+                on += 1;
+            }
+        }
+        // On-phase carries mult×duty/(mult×duty + (1−duty)) = 4/7 ≈ 57%.
+        let frac = on as f64 / total as f64;
+        assert!((0.47..0.67).contains(&frac), "on-phase fraction {frac}");
+    }
+}

@@ -12,7 +12,6 @@ pub mod schematics;
 
 use crate::campaign::runner::{run_cells, Cell};
 use crate::config::{ControllerCfg, HierarchyCfg, PrefetcherKind, SimConfig};
-use crate::rpc::{self, QueueParams, ServiceChain};
 use crate::sim::engine::SimResult;
 use crate::trace::gen::apps::{self, AppSpec};
 use report::{f2, f3, kb, pct, Table};
@@ -522,44 +521,41 @@ pub fn ablation(ctx: &FigureCtx) -> Table {
     t
 }
 
-/// Control-plane RPC tail latencies per prefetcher (§XI).
+/// Control-plane RPC tail latencies per prefetcher (§XI), computed on
+/// the cluster event-loop engine with the linear chain as the degenerate
+/// request DAG (DESIGN.md §4/§8). The legacy tandem recursion in `rpc/`
+/// remains as the analytic cross-check of this special case.
 pub fn rpc_tails(m: &Matrix) -> Table {
+    use crate::cluster::{engine as cluster_engine, ResolvedTopology, RunParams, TrafficShape};
     let mut t = Table::new(
         "rpc",
         "Control-plane RPC latency (admission→featurestore→mlserve chain, 65% util)",
         &["config", "P50 µs", "P95 µs", "P99 µs", "P99/P50"],
     );
+    let chain_ipcs = |cfg: &str| -> Vec<(String, f64)> {
+        vec![
+            ("admission".into(), m.get("admission", cfg).ipc()),
+            ("featurestore".into(), m.get("featurestore-go", cfg).ipc()),
+            ("mlserve".into(), m.get("mlserve", cfg).ipc()),
+        ]
+    };
+    // Fixed absolute arrival rate across configs (the NL bottleneck at
+    // 65%), so faster configs see lower utilization — the operational
+    // win the paper describes (§XI).
+    let nl_topo = ResolvedTopology::chain_from_ipcs(&chain_ipcs("nl"), 25_000.0, 0.35, 2.5);
+    let lambda = nl_topo.bottleneck_rate() * 0.65;
     for cfg in ["nl", "eip256", "ceip256", "cheip2k", "perfect"] {
-        let chain = ServiceChain::control_plane(
-            &[
-                ("admission".into(), m.get("admission", cfg).ipc()),
-                ("featurestore".into(), m.get("featurestore-go", cfg).ipc()),
-                ("mlserve".into(), m.get("mlserve", cfg).ipc()),
-            ],
-            25_000.0,
-            2.5,
-        );
-        // Fixed absolute arrival rate across configs (the NL bottleneck at
-        // 65%), so faster configs see lower utilization — the operational
-        // win the paper describes (§XI).
-        let nl_chain = ServiceChain::control_plane(
-            &[
-                ("admission".into(), m.get("admission", "nl").ipc()),
-                ("featurestore".into(), m.get("featurestore-go", "nl").ipc()),
-                ("mlserve".into(), m.get("mlserve", "nl").ipc()),
-            ],
-            25_000.0,
-            2.5,
-        );
-        let lambda = nl_chain.bottleneck_rate() * 0.65;
-        let util = lambda / chain.bottleneck_rate();
-        let r = rpc::simulate_chain(
-            &chain,
-            &QueueParams {
-                utilization: util,
+        let topo = ResolvedTopology::chain_from_ipcs(&chain_ipcs(cfg), 25_000.0, 0.35, 2.5);
+        let r = cluster_engine::run(
+            &topo,
+            &TrafficShape::Poisson { util: 1.0 },
+            &RunParams {
                 requests: 40_000,
                 seed: 17,
+                slo_us: f64::INFINITY,
+                base_rate_per_us: lambda,
             },
+            None,
         );
         t.row(vec![
             cfg.into(),

@@ -6,8 +6,9 @@
 //! online ML issue controller (logistic scorer + contextual bandit), and
 //! every substrate the evaluation depends on — a ZSim-like trace-driven
 //! cache/timing simulator, a synthetic microservice trace generator, the
-//! EIP/next-line/perfect baselines, an RPC tail-latency layer, and the
-//! SLO-driven deployment coordinator.
+//! EIP/next-line/perfect baselines, an RPC tail-latency layer, a
+//! discrete-event microservice-cluster simulator (request DAGs, traffic
+//! shapes, SLO control loop), and the SLO-driven deployment coordinator.
 //!
 //! Architecture (see DESIGN.md): Layer 3 is this Rust crate; Layer 2/1 are
 //! JAX/Pallas controller kernels AOT-lowered to HLO at build time and
@@ -16,6 +17,7 @@
 
 pub mod campaign;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod figures;

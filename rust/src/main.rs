@@ -3,6 +3,7 @@
 //! ```text
 //! slofetch figure <1|2|...|13|table1|summary|rpc|ablation|all> [--records N] [--seed S] [--out DIR] [--threads N]
 //! slofetch campaign --spec FILE [--threads N] [--out results.jsonl]
+//! slofetch cluster --spec FILE [--threads N]
 //! slofetch simulate --app websearch --prefetcher ceip256 [--records N] [--ml] [--budget N]
 //! slofetch gen-trace --app websearch --records N --out trace.slft
 //! slofetch deploy --app admission --candidate cheip2k [--records N]
@@ -40,6 +41,7 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("figure") => cmd_figure(args),
         Some("campaign") => cmd_campaign(args),
+        Some("cluster") => cmd_cluster(args),
         Some("simulate") => cmd_simulate(args),
         Some("gen-trace") => cmd_gen_trace(args),
         Some("deploy") => cmd_deploy(args),
@@ -56,6 +58,7 @@ fn dispatch(args: &Args) -> Result<()> {
 const USAGE: &str = "usage:
   slofetch figure <1..13|table1|summary|rpc|ablation|all> [--records N] [--seed S] [--out DIR] [--threads N]
   slofetch campaign --spec FILE [--threads N] [--out results.jsonl]
+  slofetch cluster --spec FILE [--threads N]
   slofetch simulate --app A --prefetcher P [--records N] [--ml] [--adapt-window] [--budget N] [--pjrt]
   slofetch gen-trace --app A --records N --out FILE
   slofetch deploy --app A --candidate P [--records N]
@@ -148,6 +151,37 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     for t in campaign::report::reports(&store) {
         println!("{}", t.markdown());
     }
+    Ok(())
+}
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let spec_path = args.opt("spec").context("--spec FILE required")?;
+    let spec = slofetch::cluster::ClusterSpec::load(std::path::Path::new(spec_path))?;
+    let threads = args.threads()?;
+    let t0 = std::time::Instant::now();
+    let out = slofetch::cluster::run_spec(&spec, threads)?;
+    // Timing goes to stderr: stdout is byte-identical across reruns and
+    // thread counts (the determinism contract, DESIGN.md §8).
+    eprintln!(
+        "cluster '{}': {} scenarios in {:.1}s ({:.1}M events/s, {threads} threads)",
+        spec.name,
+        out.scenarios.len(),
+        t0.elapsed().as_secs_f64(),
+        out.total_events as f64 / t0.elapsed().as_secs_f64().max(1e-9) / 1e6,
+    );
+    println!("{}", slofetch::cluster::report(&out).markdown());
+    if let Some(t) = slofetch::cluster::action_report(&out) {
+        println!("{}", t.markdown());
+    }
+    println!(
+        "cluster '{}': {} scenarios, {} requests, {} events, {} IPC cells, SLO {:.2} µs",
+        spec.name,
+        out.scenarios.len(),
+        out.total_requests,
+        out.total_events,
+        out.ipc_cells,
+        out.slo_us,
+    );
     Ok(())
 }
 

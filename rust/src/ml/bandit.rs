@@ -85,6 +85,17 @@ impl Bandit {
         (WINDOWS[arm], base + arm)
     }
 
+    /// Choose among the first `n` arms of this context's threshold table
+    /// for an external decision (the cluster SLO control loop arbitrates
+    /// config-switch vs. scale-out this way, reusing the same value
+    /// table and update rule). Returns (arm index, slot index).
+    pub fn choose_arm(&mut self, ctx: Context, n: usize) -> (usize, usize) {
+        let n = n.clamp(1, THRESHOLDS.len());
+        let base = ctx.0 * THRESHOLDS.len();
+        let arm = self.pick(base, n);
+        (arm, base + arm)
+    }
+
     /// Incremental value update: v ← v + lr·(r − v). Mirrors the AOT
     /// bandit module; the coordinator can route this through PJRT.
     pub fn update(&mut self, slot: usize, reward: f32) {
@@ -170,6 +181,22 @@ mod tests {
         };
         assert_eq!(argmax(0), 0);
         assert_eq!(argmax(7), 3);
+    }
+
+    #[test]
+    fn choose_arm_stays_in_range_and_learns() {
+        let mut b = Bandit::new(0.1, 0.3, 11);
+        let ctx = Context(2);
+        for _ in 0..1500 {
+            let (arm, slot) = b.choose_arm(ctx, 2);
+            assert!(arm < 2);
+            assert_eq!(slot, ctx.0 * THRESHOLDS.len() + arm);
+            // Arm 0 pays off, arm 1 doesn't.
+            b.update(slot, if arm == 0 { 1.0 } else { 0.0 });
+        }
+        let base = ctx.0 * THRESHOLDS.len();
+        assert!(b.values[base] > b.values[base + 1]);
+        assert!(b.pulls[base] > b.pulls[base + 1]);
     }
 
     #[test]

@@ -32,7 +32,10 @@ pub struct ChainResult {
     pub p99_us: f64,
     pub mean_us: f64,
     pub stddev_us: f64,
-    /// Fraction of requests within `slo_us` (set by the caller's check).
+    /// Zero-load latency of the chain (sum of mean service times, µs) —
+    /// the floor the queueing tail is measured against. The SLO
+    /// compliance fraction is *not* stored here; it is the second tuple
+    /// element returned by [`simulate_chain_with_slo`].
     pub base_latency_us: f64,
     pub arrival_rate_per_us: f64,
 }

@@ -18,6 +18,18 @@ impl Digest {
         Self::default()
     }
 
+    /// Pre-sized digest: the cluster event loop reserves its sample
+    /// buffer up front so the completion hot path never reallocates.
+    pub fn with_capacity(n: usize) -> Self {
+        Digest { samples: Vec::with_capacity(n), sorted: false }
+    }
+
+    /// Drop all samples, keeping the allocation (windowed SLO tracking).
+    pub fn clear(&mut self) {
+        self.samples.clear();
+        self.sorted = false;
+    }
+
     pub fn add(&mut self, x: f64) {
         self.samples.push(x);
         self.sorted = false;
@@ -211,6 +223,20 @@ mod tests {
         assert!((d.percentile(50.0) - 50.5).abs() < 1e-9);
         assert!((d.percentile(95.0) - 95.05).abs() < 1e-9);
         assert!((d.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn digest_clear_keeps_capacity_and_resets_stats() {
+        let mut d = Digest::with_capacity(64);
+        for i in 0..50 {
+            d.add(i as f64);
+        }
+        assert_eq!(d.len(), 50);
+        d.clear();
+        assert!(d.is_empty());
+        assert_eq!(d.percentile(99.0), 0.0);
+        d.add(3.0);
+        assert_eq!(d.percentile(50.0), 3.0);
     }
 
     #[test]

@@ -17,6 +17,7 @@ fn spec() -> CampaignSpec {
         seeds: vec![3],
         ml: vec![false],
         churn_scale: vec![1.0],
+        traffic: vec!["none".into()],
     }
 }
 
@@ -73,6 +74,39 @@ fn rerun_against_existing_store_recomputes_nothing() {
     // A pure resume must not touch the file either.
     assert_eq!(std::fs::read(&path).unwrap(), bytes_after_first);
     std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn traffic_axis_store_is_byte_identical_across_thread_counts() {
+    let spec = CampaignSpec {
+        traffic: vec!["none".into(), "burst:0.5:3:50000:0.2".into()],
+        records: 15_000,
+        ..spec()
+    };
+    let p1 = tmp("traffic1.jsonl");
+    let p4 = tmp("traffic4.jsonl");
+    {
+        let mut s = ResultStore::open(&p1).unwrap();
+        let out = campaign::run_to_store(&spec, 1, &mut s).unwrap();
+        assert_eq!(out.computed, 12);
+    }
+    {
+        let mut s = ResultStore::open(&p4).unwrap();
+        campaign::run_to_store(&spec, 4, &mut s).unwrap();
+    }
+    let b1 = std::fs::read(&p1).unwrap();
+    assert_eq!(b1, std::fs::read(&p4).unwrap(), "traffic axis broke determinism");
+    // Shaped cells carry tails; their IPC matches the `none` twin.
+    let store = ResultStore::load(&p1).unwrap();
+    let shaped: Vec<_> = store.records().iter().filter(|r| r.tail.is_some()).collect();
+    assert_eq!(shaped.len(), 6);
+    for r in shaped {
+        let base_key = r.key.split("|t").next().unwrap();
+        let twin = store.records().iter().find(|x| x.key == base_key).unwrap();
+        assert_eq!(r.ipc.to_bits(), twin.ipc.to_bits(), "{}", r.key);
+    }
+    std::fs::remove_file(&p1).ok();
+    std::fs::remove_file(&p4).ok();
 }
 
 #[test]

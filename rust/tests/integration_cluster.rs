@@ -1,0 +1,151 @@
+//! Cluster-simulator integration tests (DESIGN.md §8): (a) the shipped
+//! `examples/cluster.json` spec runs ≥1M requests across a fan-out DAG
+//! under ≥2 traffic shapes with output identical across `--threads`
+//! values and reruns, (b) the degenerate linear-chain topology
+//! reproduces the `rpc` figure's qualitative ordering (faster
+//! prefetcher ⇒ tighter P99), and (c) the SLO control loop reduces P99
+//! burn versus a static config in a bursty scenario.
+
+use slofetch::cluster::{self, engine, ClusterSpec, ResolvedTopology, RunParams, TrafficShape};
+use std::path::Path;
+use std::sync::OnceLock;
+
+fn example_spec() -> ClusterSpec {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/cluster.json");
+    ClusterSpec::load(&path).expect("examples/cluster.json must load")
+}
+
+/// The shipped spec, run once at --threads 1 (shared across tests).
+fn outcome() -> &'static cluster::ClusterOutcome {
+    static OUT: OnceLock<cluster::ClusterOutcome> = OnceLock::new();
+    OUT.get_or_init(|| cluster::run_spec(&example_spec(), 1).unwrap())
+}
+
+#[test]
+fn example_spec_covers_the_acceptance_envelope() {
+    let spec = example_spec();
+    // Fan-out DAG: some service has >1 child, some has >1 parent.
+    assert!(spec.topology.services.iter().any(|s| s.deps.len() > 1), "no fan-in");
+    let fan_out = spec
+        .topology
+        .services
+        .iter()
+        .filter(|s| s.deps.iter().any(|d| d == "gateway"))
+        .count();
+    assert!(fan_out > 1, "no fan-out");
+    assert!(spec.traffic.len() >= 2, "need ≥2 traffic shapes");
+    let out = outcome();
+    assert!(out.total_requests >= 1_000_000, "only {} requests", out.total_requests);
+    assert!(out.total_events > out.total_requests * 5, "DAG events missing");
+    assert_eq!(out.scenarios.len(), spec.scenario_count());
+}
+
+#[test]
+fn output_is_identical_across_thread_counts_and_reruns() {
+    // threads=4 is both a rerun and a different shard schedule; the
+    // rendered report (every percentile, burn counter, and action) and
+    // the raw P99 bits must match the threads=1 run exactly.
+    let a = outcome();
+    let b = cluster::run_spec(&example_spec(), 4).unwrap();
+    assert_eq!(
+        cluster::report(a).markdown(),
+        cluster::report(&b).markdown(),
+        "cluster output depends on --threads"
+    );
+    for (x, y) in a.scenarios.iter().zip(&b.scenarios) {
+        assert_eq!(x.label, y.label);
+        assert_eq!(x.traffic, y.traffic);
+        assert_eq!(x.p99_us.to_bits(), y.p99_us.to_bits(), "{}|{}", x.label, x.traffic);
+        assert_eq!(x.events, y.events);
+        assert_eq!(x.actions, y.actions);
+    }
+}
+
+#[test]
+fn faster_prefetcher_tightens_p99_in_the_example() {
+    // The rpc figure's qualitative ordering, through the DAG engine at
+    // fixed offered load: every service speeds up under ceip256, so the
+    // stationary scenario's tail must tighten vs the nl baseline.
+    let out = outcome();
+    let p99 = |label: &str, traffic_prefix: &str| {
+        out.scenarios
+            .iter()
+            .find(|s| s.label == label && s.traffic.starts_with(traffic_prefix))
+            .unwrap_or_else(|| panic!("missing scenario {label}/{traffic_prefix}"))
+            .p99_us
+    };
+    assert!(
+        p99("ceip256", "poisson") < p99("nl", "poisson"),
+        "ceip256 {} !< nl {}",
+        p99("ceip256", "poisson"),
+        p99("nl", "poisson")
+    );
+}
+
+#[test]
+fn control_loop_reduces_p99_burn_in_the_bursty_scenario() {
+    let out = outcome();
+    let find = |label: &str| {
+        out.scenarios
+            .iter()
+            .find(|s| s.label == label && s.traffic.starts_with("burst"))
+            .unwrap_or_else(|| panic!("missing burst scenario for {label}"))
+    };
+    let stat = find("nl");
+    let adap = find("adaptive");
+    assert!(stat.violated_windows > 0, "burst scenario never burned — not a stress test");
+    assert!(!adap.actions.is_empty(), "control loop never acted");
+    assert!(
+        adap.violated_windows < stat.violated_windows,
+        "burn not reduced: adaptive {}/{} vs static {}/{}",
+        adap.violated_windows,
+        adap.windows,
+        stat.violated_windows,
+        stat.windows
+    );
+    assert!(
+        adap.p99_us < stat.p99_us,
+        "P99 not reduced: adaptive {} vs static {}",
+        adap.p99_us,
+        stat.p99_us
+    );
+}
+
+#[test]
+fn degenerate_chain_matches_rpc_orderings() {
+    // Synthetic IPCs, no trace simulation: the linear chain through the
+    // cluster engine must show the tandem model's shape properties.
+    let chain = |scale: f64| {
+        ResolvedTopology::chain_from_ipcs(
+            &[
+                ("admission".into(), 2.0 * scale),
+                ("featurestore".into(), 1.5 * scale),
+                ("mlserve".into(), 2.5 * scale),
+            ],
+            25_000.0,
+            0.35,
+            2.5,
+        )
+    };
+    let nl = chain(1.0);
+    let lambda = nl.bottleneck_rate() * 0.65;
+    let run = |topo: &ResolvedTopology| {
+        engine::run(
+            topo,
+            &TrafficShape::Poisson { util: 1.0 },
+            &RunParams { requests: 40_000, seed: 17, slo_us: 1e9, base_rate_per_us: lambda },
+            None,
+        )
+    };
+    let base = run(&nl);
+    // Queueing tail above zero-load latency, ordered percentiles.
+    assert!(base.p50_us <= base.p95_us && base.p95_us <= base.p99_us);
+    assert!(base.p99_us > nl.zero_load_us());
+    // 10% faster chain at the same absolute arrival rate: tighter tail
+    // (the §XI compounding claim the rpc figure asserts).
+    let fast = run(&chain(1.10));
+    assert!(fast.p95_us < base.p95_us, "p95 {} !< {}", fast.p95_us, base.p95_us);
+    assert!(fast.p99_us < base.p99_us, "p99 {} !< {}", fast.p99_us, base.p99_us);
+    // Deterministic rerun.
+    assert_eq!(run(&nl).p99_us.to_bits(), base.p99_us.to_bits());
+}
