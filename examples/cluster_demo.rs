@@ -1,8 +1,9 @@
 //! Cluster simulator walkthrough: run the fan-out frontend DAG from
-//! `examples/cluster.json` — 3 static prefetcher configs plus the
-//! SLO-control-loop scenario under stationary and bursty traffic — and
-//! show that (a) faster prefetchers tighten P99 at fixed offered load
-//! and (b) the control loop buys back SLO compliance during bursts.
+//! `examples/cluster.json` — 3 static prefetcher configs plus one
+//! SLO-control-loop scenario per autoscaler policy under stationary and
+//! bursty traffic — and show that (a) faster prefetchers tighten P99 at
+//! fixed offered load and (b) the control loops buy back SLO compliance
+//! during bursts at different replica/metadata cost points.
 //!
 //! Run: `cargo run --release --example cluster_demo [requests]`
 
@@ -19,10 +20,11 @@ fn main() -> anyhow::Result<()> {
         spec.requests = n;
     }
     println!(
-        "== cluster demo: '{}' — {} services, {} configs, {} shapes, {} req/scenario ==",
+        "== cluster demo: '{}' — {} services, {} configs, {} policies, {} shapes, {} req/scenario ==",
         spec.name,
         spec.topology.services.len(),
         spec.prefetchers.len(),
+        spec.effective_policies()?.len(),
         spec.traffic.len(),
         spec.requests
     );
@@ -39,8 +41,9 @@ fn main() -> anyhow::Result<()> {
     if let Some(t) = cluster::action_report(&out) {
         println!("{}", t.markdown());
     }
-    println!("the adaptive row trades a handful of control actions for the");
-    println!("burst scenario's burned windows — the paper's operational claim");
-    println!("(§XI) driven end-to-end through the DAG engine.");
+    println!("each policy row trades a handful of control actions for the");
+    println!("burst scenario's burned windows — compare their replica·s and");
+    println!("metadata columns to see what that insurance costs: the paper's");
+    println!("operational claim (§XI) driven end-to-end through the DAG engine.");
     Ok(())
 }

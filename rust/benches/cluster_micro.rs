@@ -1,11 +1,14 @@
 //! Cluster event-loop throughput bench: events/sec at 1M+ requests on
 //! synthetic topologies (no trace simulation — pure queueing), tracking
 //! the hot path across PRs. Scale with SLOFETCH_BENCH_REQUESTS
-//! (default 1M requests per scenario).
+//! (default 1M requests per scenario); set SLOFETCH_BENCH_JSON=PATH to
+//! also emit a machine-readable events/sec report (the CI bench-smoke
+//! job uploads it as the `BENCH_cluster.json` artifact).
 
 use slofetch::cluster::engine::{self, RunParams};
 use slofetch::cluster::topology::{Candidate, ResolvedService, ResolvedTopology};
 use slofetch::cluster::workload::TrafficShape;
+use slofetch::util::json::Json;
 use slofetch::util::timer::time_it;
 
 fn chain(n: usize) -> ResolvedTopology {
@@ -14,7 +17,11 @@ fn chain(n: usize) -> ResolvedTopology {
             name: format!("s{i}"),
             replicas: 2,
             cv: 0.35,
-            candidates: vec![Candidate { label: "static".into(), mean_us: 5.0 }],
+            candidates: vec![Candidate {
+                label: "static".into(),
+                mean_us: 5.0,
+                metadata_bytes: 0,
+            }],
             children: if i + 1 < n { vec![(i + 1) as u32] } else { Vec::new() },
             indegree: u32::from(i > 0),
         })
@@ -28,7 +35,11 @@ fn fanout() -> ResolvedTopology {
             name: name.into(),
             replicas,
             cv: 0.35,
-            candidates: vec![Candidate { label: "static".into(), mean_us: mean }],
+            candidates: vec![Candidate {
+                label: "static".into(),
+                mean_us: mean,
+                metadata_bytes: 0,
+            }],
             children,
             indegree,
         }
@@ -44,7 +55,8 @@ fn fanout() -> ResolvedTopology {
     }
 }
 
-fn bench(name: &str, topo: &ResolvedTopology, shape: &TrafficShape, requests: u64) {
+/// Run one scenario and return its events/sec (also printed).
+fn bench(name: &str, topo: &ResolvedTopology, shape: &TrafficShape, requests: u64) -> f64 {
     let params = RunParams {
         requests,
         seed: 17,
@@ -53,13 +65,15 @@ fn bench(name: &str, topo: &ResolvedTopology, shape: &TrafficShape, requests: u6
     };
     let (r, secs) = time_it(|| engine::run(topo, shape, &params, None));
     assert_eq!(r.requests, requests);
+    let events_per_sec = r.events as f64 / secs;
     println!(
         "{name:<22} {:>7.2}M events/s  ({} events, {:.2}s, p99 {:.1} µs)",
-        r.events as f64 / secs / 1e6,
+        events_per_sec / 1e6,
         r.events,
         secs,
         r.p99_us,
     );
+    events_per_sec
 }
 
 fn main() {
@@ -68,18 +82,35 @@ fn main() {
         .and_then(|s| s.parse().ok())
         .unwrap_or(1_000_000u64);
     println!("== cluster_micro: {requests} requests/scenario ==");
-    bench("chain3/poisson", &chain(3), &TrafficShape::Poisson { util: 1.0 }, requests);
-    bench(
-        "chain3/burst",
-        &chain(3),
-        &TrafficShape::Burst { util: 0.7, mult: 1.8, period_us: 50_000.0, duty: 0.2 },
-        requests,
-    );
-    bench("fanout5/poisson", &fanout(), &TrafficShape::Poisson { util: 1.0 }, requests);
-    bench(
-        "fanout5/diurnal",
-        &fanout(),
-        &TrafficShape::Diurnal { util: 0.8, amplitude: 0.3, period_us: 200_000.0 },
-        requests,
-    );
+    let scenarios: [(&str, ResolvedTopology, TrafficShape); 4] = [
+        ("chain3/poisson", chain(3), TrafficShape::Poisson { util: 1.0 }),
+        (
+            "chain3/burst",
+            chain(3),
+            TrafficShape::Burst { util: 0.7, mult: 1.8, period_us: 50_000.0, duty: 0.2 },
+        ),
+        ("fanout5/poisson", fanout(), TrafficShape::Poisson { util: 1.0 }),
+        (
+            "fanout5/diurnal",
+            fanout(),
+            TrafficShape::Diurnal { util: 0.8, amplitude: 0.3, period_us: 200_000.0 },
+        ),
+    ];
+    let mut results: Vec<(&str, f64)> = Vec::new();
+    for (name, topo, shape) in &scenarios {
+        results.push((*name, bench(name, topo, shape, requests)));
+    }
+    // Machine-readable trajectory point for CI (events/sec per scenario).
+    if let Ok(path) = std::env::var("SLOFETCH_BENCH_JSON") {
+        let j = Json::obj(vec![
+            ("bench", Json::str("cluster_micro")),
+            ("requests", Json::num(requests as f64)),
+            (
+                "events_per_sec",
+                Json::obj(results.iter().map(|(n, e)| (*n, Json::num(*e))).collect()),
+            ),
+        ]);
+        std::fs::write(&path, j.pretty()).expect("write bench json");
+        println!("(wrote {path})");
+    }
 }

@@ -26,7 +26,7 @@ pub use store::ResultStore;
 
 use anyhow::Result;
 use std::collections::HashMap;
-use store::{CellRecord, TailRecord};
+use store::{CellRecord, ClusterCellRecord, TailRecord};
 
 /// What one `run_to_store` call did.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -89,14 +89,19 @@ impl Baselines {
 /// Run a campaign against a store: expand the matrix, skip cells the
 /// store already holds, shard the rest across `threads` workers
 /// (0 = auto), compute speedups against each scenario's `nl` baseline,
-/// and append results incrementally in expansion order.
+/// and append results incrementally in expansion order. Cluster-scenario
+/// cells (the `clusters` × `policies` axis) run after the simulation
+/// matrix: each cluster's (app × config) measurement matrix is prepared
+/// once — and only when that cluster still has pending cells — then the
+/// policy scenarios shard across the same workers.
 pub fn run_to_store(
     spec: &CampaignSpec,
     threads: usize,
     store: &mut ResultStore,
 ) -> Result<CampaignOutcome> {
     let cells = spec.expand()?;
-    let total = cells.len();
+    let ccells = spec.expand_clusters()?;
+    let total = cells.len() + ccells.len();
     let pending: Vec<&spec::ExpandedCell> =
         cells.iter().filter(|c| !store.contains(&c.key)).collect();
     let n = pending.len();
@@ -220,6 +225,42 @@ pub fn run_to_store(
     if let Some(e) = io_err {
         return Err(e);
     }
+
+    // Cluster-scenario cells. Preparation (IPC matrix + topology
+    // resolution) is itself sharded and deterministic; scenario runs are
+    // self-seeded, so collecting by index keeps the append order equal
+    // to expansion order at any thread count.
+    let cpending: Vec<&spec::ClusterCell> =
+        ccells.iter().filter(|c| !store.contains(&c.key)).collect();
+    let mut prepared: HashMap<usize, crate::cluster::PreparedSpec> = HashMap::new();
+    for c in &cpending {
+        if !prepared.contains_key(&c.cluster) {
+            prepared.insert(
+                c.cluster,
+                crate::cluster::prepare_spec(&spec.clusters[c.cluster], threads)?,
+            );
+        }
+    }
+    let results = runner::parallel_map(cpending.len(), threads, |i| {
+        let c = cpending[i];
+        crate::cluster::run_policy_scenario(
+            &prepared[&c.cluster],
+            &spec.clusters[c.cluster],
+            &c.policy,
+            &c.shape,
+        )
+    });
+    for (c, r) in cpending.iter().zip(&results) {
+        let rec = ClusterCellRecord::from_result(
+            &c.key,
+            &spec.clusters[c.cluster].name,
+            &c.policy.label(),
+            r,
+        );
+        if store.push_cluster(rec)? {
+            computed += 1;
+        }
+    }
     Ok(CampaignOutcome { total, computed, skipped: total - computed })
 }
 
@@ -237,7 +278,27 @@ mod tests {
             ml: vec![false],
             churn_scale: vec![1.0],
             traffic: vec!["none".into()],
+            clusters: Vec::new(),
+            policies: vec!["reactive".into()],
         }
+    }
+
+    fn tiny_cluster() -> crate::cluster::ClusterSpec {
+        let j = crate::util::json::Json::parse(
+            r#"{
+                "name": "mini",
+                "services": [
+                    {"name": "gw", "app": "admission"},
+                    {"name": "be", "app": "serde", "deps": ["gw"]}
+                ],
+                "prefetchers": ["nl", "ceip256"],
+                "traffic": ["poisson:0.6"],
+                "requests": 5000,
+                "records": 5000
+            }"#,
+        )
+        .unwrap();
+        crate::cluster::ClusterSpec::from_json(&j).unwrap()
     }
 
     #[test]
@@ -333,6 +394,33 @@ mod tests {
             .find(|r| r.key.starts_with(&plain.key) && r.key.contains("|t"))
             .unwrap();
         assert_eq!(plain.ipc.to_bits(), twin.ipc.to_bits());
+    }
+
+    #[test]
+    fn cluster_axis_records_burn_and_costs_then_resumes() {
+        let spec = CampaignSpec {
+            clusters: vec![tiny_cluster()],
+            policies: vec!["reactive".into(), "hysteresis".into()],
+            ..quick_spec()
+        };
+        let mut store = ResultStore::in_memory();
+        let out = run_to_store(&spec, 2, &mut store).unwrap();
+        // 4 sim cells + (2 policies × 1 shape) cluster cells.
+        assert_eq!(out, CampaignOutcome { total: 6, computed: 6, skipped: 0 });
+        assert_eq!(store.cluster_records().len(), 2);
+        for r in store.cluster_records() {
+            assert_eq!(r.cluster, "mini");
+            assert_eq!(r.traffic, "poisson:0.6");
+            assert!(r.windows > 0, "no SLO windows evaluated");
+            assert!(r.replica_us > 0.0, "replica-seconds not accounted");
+            assert!(r.events >= r.requests * 2, "arrival + completions per request");
+            assert!(r.p50_us <= r.p95_us && r.p95_us <= r.p99_us);
+            assert!(r.compliance > 0.0 && r.compliance <= 1.0);
+        }
+        // Rerun against the same store: nothing recomputes.
+        let again = run_to_store(&spec, 4, &mut store).unwrap();
+        assert_eq!(again, CampaignOutcome { total: 6, computed: 0, skipped: 6 });
+        assert_eq!(store.len(), 6);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! same [`crate::figures::report::Table`] markdown the figure harness
 //! emits, so campaign output drops straight into EXPERIMENTS.md.
 
-use super::store::{CellRecord, ResultStore};
+use super::store::{CellRecord, ClusterCellRecord, ResultStore};
 use super::{group_of, Group, BASELINE_LABELS};
 use crate::figures::report::{f2, f3, kb, pct, Table};
 use std::collections::{BTreeMap, HashMap};
@@ -218,10 +218,107 @@ pub fn tail_table(store: &ResultStore) -> Option<Table> {
     }
 }
 
+/// Cluster-scenario sweep table: one row per stored (cluster, policy,
+/// traffic) cell with its SLO burn and cost metrics. `None` when the
+/// campaign had no cluster axis.
+pub fn cluster_table(store: &ResultStore) -> Option<Table> {
+    let recs = store.cluster_records();
+    if recs.is_empty() {
+        return None;
+    }
+    let mut t = Table::new(
+        "campaign_cluster",
+        "Cluster-scenario sweep: SLO burn and cost per autoscaler policy",
+        &[
+            "cluster",
+            "policy",
+            "traffic",
+            "P99 µs",
+            "compliance",
+            "burn",
+            "replica·s",
+            "metadata",
+            "actions",
+        ],
+    );
+    // Store order is expansion order — already deterministic.
+    for r in recs {
+        let mean_meta = if r.duration_us > 0.0 { r.meta_byte_us / r.duration_us } else { 0.0 };
+        t.row(vec![
+            r.cluster.clone(),
+            r.policy.clone(),
+            r.traffic.clone(),
+            f2(r.p99_us),
+            pct(r.compliance),
+            format!("{}/{}", r.violated_windows, r.windows),
+            f2(r.replica_us / 1e6),
+            kb(mean_meta as u64),
+            r.actions.to_string(),
+        ]);
+    }
+    t.note(
+        "burn = windows below target compliance / windows evaluated; replica·s = \
+         ∫ provisioned replicas dt; metadata = time-averaged footprint",
+    );
+    Some(t)
+}
+
+/// Policy ranking per (cluster, traffic) group: fewest burned windows
+/// first, cheapest replica-seconds on ties, then P99. `None` without a
+/// cluster axis.
+pub fn cluster_ranking(store: &ResultStore) -> Option<Table> {
+    let recs = store.cluster_records();
+    if recs.is_empty() {
+        return None;
+    }
+    // Group in first-seen (expansion) order.
+    let mut groups: Vec<((String, String), Vec<&ClusterCellRecord>)> = Vec::new();
+    for r in recs {
+        let k = (r.cluster.clone(), r.traffic.clone());
+        match groups.iter_mut().find(|(g, _)| *g == k) {
+            Some((_, v)) => v.push(r),
+            None => groups.push((k, vec![r])),
+        }
+    }
+    let mut t = Table::new(
+        "campaign_cluster_rank",
+        "Autoscaler policy ranking per (cluster, traffic)",
+        &["cluster", "traffic", "rank", "policy", "burn", "replica·s", "P99 µs"],
+    );
+    for ((cluster, traffic), mut v) in groups {
+        v.sort_by(|a, b| {
+            a.burn_rate()
+                .partial_cmp(&b.burn_rate())
+                .unwrap()
+                .then(a.replica_us.partial_cmp(&b.replica_us).unwrap())
+                .then(a.p99_us.partial_cmp(&b.p99_us).unwrap())
+        });
+        for (i, r) in v.iter().enumerate() {
+            t.row(vec![
+                cluster.clone(),
+                traffic.clone(),
+                (i + 1).to_string(),
+                r.policy.clone(),
+                format!("{}/{}", r.violated_windows, r.windows),
+                f2(r.replica_us / 1e6),
+                f2(r.p99_us),
+            ]);
+        }
+    }
+    t.note("rank 1 = fewest burned windows, cheapest replica-seconds on ties");
+    Some(t)
+}
+
 /// All campaign tables, in print order.
 pub fn reports(store: &ResultStore) -> Vec<Table> {
     let mut out = vec![per_app_speedup(store), geomean_summary(store), best_config(store)];
     if let Some(t) = tail_table(store) {
+        out.push(t);
+    }
+    if let Some(t) = cluster_table(store) {
+        out.push(t);
+    }
+    if let Some(t) = cluster_ranking(store) {
         out.push(t);
     }
     out
@@ -322,6 +419,53 @@ mod tests {
         assert_eq!(t.rows.len(), 1);
         assert!(t.markdown().contains("poisson:0.65"));
         assert_eq!(reports(&s).len(), 4);
+    }
+
+    fn crec(policy: &str, traffic: &str, violated: u32, replica_us: f64) -> ClusterCellRecord {
+        ClusterCellRecord {
+            key: format!("cluster|web#0|{policy}|t{traffic}"),
+            cluster: "web".into(),
+            policy: policy.into(),
+            traffic: traffic.into(),
+            requests: 50_000,
+            slo_us: 100.0,
+            p50_us: 20.0,
+            p95_us: 55.0,
+            p99_us: 80.0,
+            compliance: 0.99,
+            windows: 25,
+            violated_windows: violated,
+            actions: 3,
+            final_replicas: 8,
+            replica_us,
+            meta_byte_us: 5.0e9,
+            final_metadata_bytes: 65_536,
+            duration_us: 5.0e5,
+            events: 400_000,
+        }
+    }
+
+    #[test]
+    fn cluster_tables_rank_policies_per_group() {
+        let s = store();
+        assert!(cluster_table(&s).is_none(), "cluster table without a cluster axis");
+        assert!(cluster_ranking(&s).is_none());
+
+        let mut s = ResultStore::in_memory();
+        s.push_cluster(crec("reactive", "poisson:0.65", 5, 9.0e6)).unwrap();
+        s.push_cluster(crec("hysteresis:4:0.7", "poisson:0.65", 5, 6.0e6)).unwrap();
+        s.push_cluster(crec("predictive:30000:4", "poisson:0.65", 1, 8.0e6)).unwrap();
+        let t = cluster_table(&s).expect("cluster rows missing");
+        assert_eq!(t.rows.len(), 3);
+        let rank = cluster_ranking(&s).expect("ranking missing");
+        assert_eq!(rank.rows.len(), 3);
+        // Fewest burned windows wins; replica-seconds break the tie.
+        assert_eq!(rank.rows[0][3], "predictive:30000:4");
+        assert_eq!(rank.rows[1][3], "hysteresis:4:0.7");
+        assert_eq!(rank.rows[2][3], "reactive");
+        assert_eq!(rank.rows[0][2], "1");
+        // Both cluster tables ride along in reports().
+        assert_eq!(reports(&s).len(), 5);
     }
 
     #[test]

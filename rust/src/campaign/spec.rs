@@ -9,7 +9,9 @@
 
 use super::runner::Cell;
 use crate::cli::parse_prefetcher;
+use crate::cluster::slo::Policy;
 use crate::cluster::workload::TrafficShape;
+use crate::cluster::ClusterSpec;
 use crate::config::{ControllerCfg, SimConfig};
 use crate::trace::gen::apps::{self, AppSpec};
 use crate::util::json::Json;
@@ -43,6 +45,15 @@ pub struct CampaignSpec {
     /// keeps the cell IPC-only and its key identical to pre-traffic
     /// campaigns, so existing stores resume cleanly.
     pub traffic: Vec<String>,
+    /// Cluster-scenario axis: whole cluster specs (topology + prefetcher
+    /// candidate set + traffic shapes), each swept under every
+    /// autoscaler policy in `policies` through the discrete-event
+    /// engine. Empty (the default) adds no cluster cells, so
+    /// pre-cluster campaigns — and their stores — are untouched.
+    pub clusters: Vec<ClusterSpec>,
+    /// Autoscaler policies ([`Policy::parse`] syntax) applied to every
+    /// cluster scenario. Only consulted when `clusters` is non-empty.
+    pub policies: Vec<String>,
 }
 
 impl Default for CampaignSpec {
@@ -56,6 +67,8 @@ impl Default for CampaignSpec {
             ml: vec![false],
             churn_scale: vec![1.0],
             traffic: vec!["none".into()],
+            clusters: Vec::new(),
+            policies: vec!["reactive".into()],
         }
     }
 }
@@ -76,6 +89,20 @@ pub struct ExpandedCell {
     /// `"none"` axis value: IPC-only cell).
     pub traffic: Option<TrafficShape>,
     pub cell: Cell,
+}
+
+/// One expanded cluster-scenario cell: a (cluster, policy, traffic
+/// shape) coordinate plus its stable store key.
+#[derive(Clone)]
+pub struct ClusterCell {
+    /// Stable identity used for store dedup/resume. Includes a content
+    /// hash of the full cluster spec, so editing the scenario definition
+    /// invalidates its old lines.
+    pub key: String,
+    /// Index into the campaign's `clusters` list.
+    pub cluster: usize,
+    pub policy: Policy,
+    pub shape: TrafficShape,
 }
 
 /// Deterministic per-cell simulation seed: a splitmix64 hash
@@ -144,10 +171,39 @@ impl CampaignSpec {
         for pf in &self.prefetchers {
             parse_prefetcher(pf).with_context(|| format!("in campaign '{}'", self.name))?;
         }
+        let mut seen = std::collections::HashSet::new();
+        for c in &self.clusters {
+            c.validate().with_context(|| format!("in campaign '{}'", self.name))?;
+            if c.adaptive || !c.policies.is_empty() {
+                bail!(
+                    "campaign '{}': cluster '{}' sets its own control scenarios — \
+                     autoscaler policies are a campaign axis (set campaign.policies)",
+                    self.name,
+                    c.name
+                );
+            }
+            if !seen.insert(c.name.as_str()) {
+                bail!("campaign '{}': duplicate cluster name '{}'", self.name, c.name);
+            }
+        }
+        if !self.clusters.is_empty() {
+            if self.policies.is_empty() {
+                bail!("campaign '{}': clusters need at least one policy", self.name);
+            }
+            let mut seen = std::collections::HashSet::new();
+            for p in &self.policies {
+                let policy =
+                    Policy::parse(p).with_context(|| format!("in campaign '{}'", self.name))?;
+                if !seen.insert(policy.label()) {
+                    bail!("campaign '{}': duplicate policy '{p}'", self.name);
+                }
+            }
+        }
         Ok(())
     }
 
-    /// Total cell count of the matrix.
+    /// Total simulation-cell count of the matrix (cluster cells are
+    /// counted separately by [`Self::cluster_cell_count`]).
     pub fn cell_count(&self) -> usize {
         self.apps.len()
             * self.prefetchers.len()
@@ -155,6 +211,15 @@ impl CampaignSpec {
             * self.ml.len()
             * self.churn_scale.len()
             * self.traffic.len()
+    }
+
+    /// Cluster-scenario cell count: Σ over clusters of
+    /// (policies × that cluster's traffic shapes).
+    pub fn cluster_cell_count(&self) -> usize {
+        if self.clusters.is_empty() {
+            return 0;
+        }
+        self.policies.len() * self.clusters.iter().map(|c| c.traffic.len()).sum::<usize>()
     }
 
     /// Expand the matrix into runnable cells (deterministic order).
@@ -244,6 +309,49 @@ impl CampaignSpec {
         Ok(out)
     }
 
+    /// Expand the cluster-scenario axis into runnable cells
+    /// (deterministic order: clusters ▸ policies ▸ that cluster's
+    /// traffic shapes).
+    pub fn expand_clusters(&self) -> Result<Vec<ClusterCell>> {
+        self.validate()?;
+        let mut out = Vec::with_capacity(self.cluster_cell_count());
+        for (ci, cluster) in self.clusters.iter().enumerate() {
+            // Content hash over the canonical spec JSON: editing any part
+            // of the scenario definition (topology, prefetcher set,
+            // requests, seed, ...) changes the key, so stale store lines
+            // are never mistaken for this cell.
+            let hash = cell_seed(0xC1A5_7E55, &cluster.to_json().dump());
+            for pol in &self.policies {
+                let policy = Policy::parse(pol)?;
+                for t in &cluster.traffic {
+                    let shape = TrafficShape::parse(t)?;
+                    out.push(ClusterCell {
+                        key: format!(
+                            "cluster|{}#{hash:016x}|{}|t{}",
+                            cluster.name,
+                            policy.label(),
+                            shape.label()
+                        ),
+                        cluster: ci,
+                        policy: policy.clone(),
+                        shape,
+                    });
+                }
+            }
+        }
+        let mut seen = std::collections::HashSet::new();
+        for c in &out {
+            if !seen.insert(c.key.as_str()) {
+                bail!(
+                    "campaign '{}': duplicate cluster cell key '{}'",
+                    self.name,
+                    c.key
+                );
+            }
+        }
+        Ok(out)
+    }
+
     // ---------- JSON (de)serialization ----------
 
     pub fn to_json(&self) -> Json {
@@ -273,6 +381,14 @@ impl CampaignSpec {
             (
                 "traffic",
                 Json::Arr(self.traffic.iter().map(|t| Json::str(t)).collect()),
+            ),
+            (
+                "clusters",
+                Json::Arr(self.clusters.iter().map(|c| c.to_json()).collect()),
+            ),
+            (
+                "policies",
+                Json::Arr(self.policies.iter().map(|p| Json::str(p)).collect()),
             ),
         ])
     }
@@ -327,6 +443,25 @@ impl CampaignSpec {
                 })
                 .collect::<Result<_>>()?;
         }
+        if let Some(arr) = j.get("clusters").and_then(Json::as_arr) {
+            spec.clusters = arr
+                .iter()
+                .enumerate()
+                .map(|(i, v)| {
+                    ClusterSpec::from_json(v).with_context(|| format!("in cluster #{i}"))
+                })
+                .collect::<Result<_>>()?;
+        }
+        if let Some(arr) = j.get("policies").and_then(Json::as_arr) {
+            spec.policies = arr
+                .iter()
+                .map(|v| {
+                    v.as_str()
+                        .map(str::to_string)
+                        .context("'policies' entries must be strings")
+                })
+                .collect::<Result<_>>()?;
+        }
         spec.validate()?;
         Ok(spec)
     }
@@ -358,7 +493,27 @@ mod tests {
             ml: vec![false, true],
             churn_scale: vec![1.0],
             traffic: vec!["none".into()],
+            clusters: Vec::new(),
+            policies: vec!["reactive".into()],
         }
+    }
+
+    fn tiny_cluster(name: &str) -> ClusterSpec {
+        let j = Json::parse(&format!(
+            r#"{{
+                "name": "{name}",
+                "services": [
+                    {{"name": "gw", "app": "admission"}},
+                    {{"name": "be", "app": "serde", "deps": ["gw"]}}
+                ],
+                "prefetchers": ["nl", "ceip256"],
+                "traffic": ["poisson:0.6", "burst:0.5:3:40000:0.25"],
+                "requests": 5000,
+                "records": 4000
+            }}"#
+        ))
+        .unwrap();
+        ClusterSpec::from_json(&j).unwrap()
     }
 
     #[test]
@@ -497,6 +652,83 @@ mod tests {
         let spec = small();
         let back = CampaignSpec::from_json(&spec.to_json()).unwrap();
         assert_eq!(back, spec);
+        // With the cluster axis populated too.
+        let spec = CampaignSpec {
+            clusters: vec![tiny_cluster("edge")],
+            policies: vec!["reactive".into(), "hysteresis:6:0.5".into()],
+            ..small()
+        };
+        let back = CampaignSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn cluster_axis_expands_with_stable_hashed_keys() {
+        let spec = CampaignSpec {
+            clusters: vec![tiny_cluster("edge")],
+            policies: vec!["reactive".into(), "hysteresis".into()],
+            ..small()
+        };
+        let cells = spec.expand_clusters().unwrap();
+        // 2 policies × 2 shapes.
+        assert_eq!(cells.len(), spec.cluster_cell_count());
+        assert_eq!(cells.len(), 4);
+        for c in &cells {
+            assert!(c.key.starts_with("cluster|edge#"), "key {}", c.key);
+        }
+        // Keys are unique and stable across expansions.
+        let keys: Vec<String> = cells.iter().map(|c| c.key.clone()).collect();
+        let mut dedup = keys.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), keys.len());
+        let again: Vec<String> =
+            spec.expand_clusters().unwrap().iter().map(|c| c.key.clone()).collect();
+        assert_eq!(again, keys);
+        // Editing the scenario definition invalidates every key.
+        let mut edited = spec.clone();
+        edited.clusters[0].requests = 6_000;
+        let new_keys: Vec<String> =
+            edited.expand_clusters().unwrap().iter().map(|c| c.key.clone()).collect();
+        for (a, b) in keys.iter().zip(&new_keys) {
+            assert_ne!(a, b, "content hash ignored the spec edit");
+        }
+        // The sim-cell matrix is untouched by the cluster axis.
+        assert_eq!(spec.expand().unwrap().len(), small().expand().unwrap().len());
+    }
+
+    #[test]
+    fn cluster_axis_validation_rejects_misconfiguration() {
+        // A cluster carrying its own control scenarios is ambiguous.
+        let mut adaptive = tiny_cluster("a");
+        adaptive.adaptive = true;
+        let spec = CampaignSpec { clusters: vec![adaptive], ..small() };
+        assert!(spec.validate().is_err(), "embedded adaptive flag not rejected");
+
+        let spec = CampaignSpec {
+            clusters: vec![tiny_cluster("a"), tiny_cluster("a")],
+            ..small()
+        };
+        assert!(spec.validate().is_err(), "duplicate cluster name not rejected");
+
+        let spec = CampaignSpec {
+            clusters: vec![tiny_cluster("a")],
+            policies: vec![],
+            ..small()
+        };
+        assert!(spec.validate().is_err(), "clusters without policies not rejected");
+
+        let spec = CampaignSpec {
+            clusters: vec![tiny_cluster("a")],
+            policies: vec!["chaos-monkey".into()],
+            ..small()
+        };
+        assert!(spec.validate().is_err(), "unknown policy not rejected");
+
+        // Without clusters, the policies axis is inert: bogus entries
+        // don't break pre-cluster campaigns.
+        let spec = CampaignSpec { policies: vec![], ..small() };
+        assert!(spec.validate().is_ok());
     }
 
     #[test]

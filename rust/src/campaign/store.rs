@@ -7,9 +7,10 @@
 //! order with sorted object keys, so a given (spec, seed set) always
 //! produces byte-identical files.
 
+use crate::cluster::ClusterResult;
 use crate::sim::engine::SimResult;
 use crate::util::json::Json;
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::collections::HashSet;
 use std::io::Write;
 use std::path::Path;
@@ -253,18 +254,185 @@ impl CellRecord {
     }
 }
 
+/// One JSONL line for a campaign cluster-scenario cell (tagged
+/// `"kind": "cluster"`; untagged lines stay [`CellRecord`]s, so
+/// pre-cluster stores load unchanged): per-scenario SLO burn,
+/// replica-seconds, and metadata cost of one (cluster, policy, traffic)
+/// coordinate.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterCellRecord {
+    pub key: String,
+    /// Cluster scenario name (from the campaign spec).
+    pub cluster: String,
+    /// Autoscaler policy label ([`crate::cluster::Policy::label`]).
+    pub policy: String,
+    /// Normalized traffic-shape label.
+    pub traffic: String,
+    pub requests: u64,
+    pub slo_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub compliance: f64,
+    pub windows: u32,
+    pub violated_windows: u32,
+    /// Control actions the policy executed.
+    pub actions: u64,
+    /// Final active replicas across all services.
+    pub final_replicas: u32,
+    /// ∫ provisioned replicas dt (replica-µs).
+    pub replica_us: f64,
+    /// ∫ metadata footprint dt (byte-µs).
+    pub meta_byte_us: f64,
+    pub final_metadata_bytes: u64,
+    /// Simulated duration (µs).
+    pub duration_us: f64,
+    pub events: u64,
+}
+
+impl ClusterCellRecord {
+    pub fn from_result(key: &str, cluster: &str, policy: &str, r: &ClusterResult) -> Self {
+        ClusterCellRecord {
+            key: key.to_string(),
+            cluster: cluster.to_string(),
+            policy: policy.to_string(),
+            traffic: r.traffic.clone(),
+            requests: r.requests,
+            slo_us: r.slo_us,
+            p50_us: r.p50_us,
+            p95_us: r.p95_us,
+            p99_us: r.p99_us,
+            compliance: r.compliance,
+            windows: r.windows,
+            violated_windows: r.violated_windows,
+            actions: r.actions.len() as u64,
+            final_replicas: r.final_replicas.iter().sum(),
+            replica_us: r.replica_us,
+            meta_byte_us: r.meta_byte_us,
+            final_metadata_bytes: r.final_metadata_bytes,
+            duration_us: r.duration_us,
+            events: r.events,
+        }
+    }
+
+    /// Fraction of evaluated windows that burned.
+    pub fn burn_rate(&self) -> f64 {
+        if self.windows == 0 {
+            0.0
+        } else {
+            self.violated_windows as f64 / self.windows as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str("cluster")),
+            ("key", Json::str(&self.key)),
+            ("cluster", Json::str(&self.cluster)),
+            ("policy", Json::str(&self.policy)),
+            ("traffic", Json::str(&self.traffic)),
+            ("requests", Json::num(self.requests as f64)),
+            ("slo_us", Json::num(self.slo_us)),
+            ("p50_us", Json::num(self.p50_us)),
+            ("p95_us", Json::num(self.p95_us)),
+            ("p99_us", Json::num(self.p99_us)),
+            ("compliance", Json::num(self.compliance)),
+            ("windows", Json::num(self.windows as f64)),
+            ("violated_windows", Json::num(self.violated_windows as f64)),
+            ("actions", Json::num(self.actions as f64)),
+            ("final_replicas", Json::num(self.final_replicas as f64)),
+            ("replica_us", Json::num(self.replica_us)),
+            ("meta_byte_us", Json::num(self.meta_byte_us)),
+            (
+                "final_metadata_bytes",
+                Json::num(self.final_metadata_bytes as f64),
+            ),
+            ("duration_us", Json::num(self.duration_us)),
+            ("events", Json::num(self.events as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ClusterCellRecord> {
+        let s = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .with_context(|| format!("cluster record: missing string '{k}'"))
+        };
+        let u = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_u64)
+                .with_context(|| format!("cluster record: missing integer '{k}'"))
+        };
+        let f = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("cluster record: missing number '{k}'"))
+        };
+        Ok(ClusterCellRecord {
+            key: s("key")?,
+            cluster: s("cluster")?,
+            policy: s("policy")?,
+            traffic: s("traffic")?,
+            requests: u("requests")?,
+            slo_us: f("slo_us")?,
+            p50_us: f("p50_us")?,
+            p95_us: f("p95_us")?,
+            p99_us: f("p99_us")?,
+            compliance: f("compliance")?,
+            windows: u("windows")? as u32,
+            violated_windows: u("violated_windows")? as u32,
+            actions: u("actions")?,
+            final_replicas: u("final_replicas")? as u32,
+            replica_us: f("replica_us")?,
+            meta_byte_us: f("meta_byte_us")?,
+            final_metadata_bytes: u("final_metadata_bytes")?,
+            duration_us: f("duration_us")?,
+            events: u("events")?,
+        })
+    }
+
+    /// The single JSONL line (sorted keys, no trailing newline).
+    pub fn to_line(&self) -> String {
+        self.to_json().dump()
+    }
+}
+
+/// A parsed store line: untagged lines are simulation cells, lines
+/// tagged `"kind": "cluster"` are cluster-scenario cells.
+enum Record {
+    Sim(CellRecord),
+    Cluster(ClusterCellRecord),
+}
+
+impl Record {
+    fn from_json(j: &Json) -> Result<Record> {
+        match j.get("kind").and_then(Json::as_str) {
+            None => Ok(Record::Sim(CellRecord::from_json(j)?)),
+            Some("cluster") => Ok(Record::Cluster(ClusterCellRecord::from_json(j)?)),
+            Some(other) => bail!("unknown record kind '{other}'"),
+        }
+    }
+}
+
 /// The append-only store: in-memory records + optional backing file
 /// (held open in append mode — one syscall per line, not per open).
 pub struct ResultStore {
     file: Option<std::fs::File>,
     records: Vec<CellRecord>,
+    cluster_records: Vec<ClusterCellRecord>,
     keys: HashSet<String>,
 }
 
 impl ResultStore {
     /// A store with no backing file (tests, ad-hoc aggregation).
     pub fn in_memory() -> ResultStore {
-        ResultStore { file: None, records: Vec::new(), keys: HashSet::new() }
+        ResultStore {
+            file: None,
+            records: Vec::new(),
+            cluster_records: Vec::new(),
+            keys: HashSet::new(),
+        }
     }
 
     /// Parse a JSONL file into an in-memory store (a missing file is an
@@ -288,13 +456,18 @@ impl ResultStore {
                 if !trimmed.is_empty() {
                     let parsed = Json::parse(trimmed)
                         .map_err(anyhow::Error::from)
-                        .and_then(|j| CellRecord::from_json(&j));
+                        .and_then(|j| Record::from_json(&j));
                     match parsed {
-                        Ok(rec) => {
-                            // Mirror push(): first record wins on key
-                            // conflicts (e.g. concatenated shard files).
+                        // Mirror push(): first record wins on key
+                        // conflicts (e.g. concatenated shard files).
+                        Ok(Record::Sim(rec)) => {
                             if store.keys.insert(rec.key.clone()) {
                                 store.records.push(rec);
+                            }
+                        }
+                        Ok(Record::Cluster(rec)) => {
+                            if store.keys.insert(rec.key.clone()) {
+                                store.cluster_records.push(rec);
                             }
                         }
                         Err(_) if !complete && truncated_tail => {
@@ -340,12 +513,13 @@ impl ResultStore {
         Ok(store)
     }
 
+    /// Total stored lines (simulation + cluster cells).
     pub fn len(&self) -> usize {
-        self.records.len()
+        self.records.len() + self.cluster_records.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.records.is_empty()
+        self.records.is_empty() && self.cluster_records.is_empty()
     }
 
     pub fn contains(&self, key: &str) -> bool {
@@ -354,6 +528,10 @@ impl ResultStore {
 
     pub fn records(&self) -> &[CellRecord] {
         &self.records
+    }
+
+    pub fn cluster_records(&self) -> &[ClusterCellRecord] {
+        &self.cluster_records
     }
 
     /// Append one record (no-op returning `false` if the key is already
@@ -370,12 +548,31 @@ impl ResultStore {
         Ok(true)
     }
 
+    /// Append one cluster-scenario record (same dedup/write-through
+    /// semantics as [`ResultStore::push`]; the key space is shared).
+    pub fn push_cluster(&mut self, rec: ClusterCellRecord) -> Result<bool> {
+        if self.keys.contains(&rec.key) {
+            return Ok(false);
+        }
+        if let Some(file) = &mut self.file {
+            writeln!(file, "{}", rec.to_line()).context("append to result store")?;
+        }
+        self.keys.insert(rec.key.clone());
+        self.cluster_records.push(rec);
+        Ok(true)
+    }
+
     /// Fold another store's records into this one (first writer wins on
     /// key conflicts). Returns how many records were new.
     pub fn merge(&mut self, other: &ResultStore) -> Result<usize> {
         let mut added = 0;
         for rec in other.records() {
             if self.push(rec.clone())? {
+                added += 1;
+            }
+        }
+        for rec in other.cluster_records() {
+            if self.push_cluster(rec.clone())? {
                 added += 1;
             }
         }
@@ -421,6 +618,77 @@ mod tests {
             }),
             tail: None,
         }
+    }
+
+    fn crec(key: &str, policy: &str) -> ClusterCellRecord {
+        ClusterCellRecord {
+            key: key.into(),
+            cluster: "frontend".into(),
+            policy: policy.into(),
+            traffic: "poisson:0.65".into(),
+            requests: 50_000,
+            slo_us: 120.0,
+            p50_us: 22.0,
+            p95_us: 61.0,
+            p99_us: 98.5,
+            compliance: 0.993,
+            windows: 25,
+            violated_windows: 2,
+            actions: 5,
+            final_replicas: 9,
+            replica_us: 4.2e6,
+            meta_byte_us: 9.1e9,
+            final_metadata_bytes: 131_072,
+            duration_us: 6.0e5,
+            events: 550_000,
+        }
+    }
+
+    #[test]
+    fn cluster_record_json_roundtrip_and_kind_tag() {
+        let r = crec("cluster|frontend#abc|reactive|tpoisson:0.65", "reactive");
+        let line = r.to_line();
+        assert!(line.contains("\"kind\":\"cluster\""), "missing kind tag: {line}");
+        let back =
+            ClusterCellRecord::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, r);
+        assert!((r.burn_rate() - 0.08).abs() < 1e-9);
+    }
+
+    #[test]
+    fn store_holds_sim_and_cluster_records_side_by_side() {
+        let dir = std::env::temp_dir().join("slofetch_store_mixed");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mixed.jsonl");
+        std::fs::remove_file(&path).ok();
+        {
+            let mut s = ResultStore::open(&path).unwrap();
+            assert!(s.push(rec("a", "crypto", "nl", 1.0)).unwrap());
+            assert!(s.push_cluster(crec("cl1", "reactive")).unwrap());
+            assert!(!s.push_cluster(crec("cl1", "hysteresis")).unwrap(), "dedup failed");
+            assert_eq!(s.len(), 2);
+        }
+        let reloaded = ResultStore::open(&path).unwrap();
+        assert_eq!(reloaded.records().len(), 1);
+        assert_eq!(reloaded.cluster_records().len(), 1);
+        assert_eq!(reloaded.cluster_records()[0].policy, "reactive");
+        assert!(reloaded.contains("cl1"));
+        // Merge folds both record kinds.
+        let mut main = ResultStore::in_memory();
+        main.push_cluster(crec("cl1", "stale")).unwrap();
+        assert_eq!(main.merge(&reloaded).unwrap(), 1, "only the sim line is new");
+        assert_eq!(main.cluster_records()[0].policy, "stale", "first writer must win");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn unknown_record_kind_is_an_error() {
+        let dir = std::env::temp_dir().join("slofetch_store_kind");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("kind.jsonl");
+        std::fs::write(&path, "{\"kind\":\"martian\",\"key\":\"x\"}\n").unwrap();
+        assert!(ResultStore::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

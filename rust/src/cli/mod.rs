@@ -66,6 +66,19 @@ impl Args {
         }
     }
 
+    /// A comma-separated list option: `--policies a,b,c` → `["a", "b",
+    /// "c"]` (`None` when absent; blank items are dropped, so trailing
+    /// commas are harmless).
+    pub fn list_opt(&self, key: &str) -> Option<Vec<String>> {
+        self.opt(key).map(|v| {
+            v.split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect()
+        })
+    }
+
     /// The global `--threads N` knob (0 or absent = available
     /// parallelism), shared by `campaign` and the figure harness.
     pub fn threads(&self) -> Result<usize> {
@@ -152,6 +165,19 @@ mod tests {
         assert!(a.flag("quiet"));
         assert!(!a.flag("verbose"));
         assert_eq!(a.u64_opt("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn list_opt_splits_on_commas() {
+        let a = args("cluster --policies reactive,hysteresis:4:0.7,cost-aware");
+        assert_eq!(
+            a.list_opt("policies").unwrap(),
+            vec!["reactive", "hysteresis:4:0.7", "cost-aware"]
+        );
+        assert_eq!(a.list_opt("missing"), None);
+        // Blank items (trailing/double commas) are dropped.
+        let b = args("cluster --policies reactive,,hysteresis,");
+        assert_eq!(b.list_opt("policies").unwrap(), vec!["reactive", "hysteresis"]);
     }
 
     #[test]

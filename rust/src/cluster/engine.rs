@@ -11,7 +11,7 @@
 //! order. Request state lives in a reusable slab — after warm-up the
 //! completion hot path performs no per-request allocation.
 
-use super::slo::{SloAction, SloCfg, SloController};
+use super::slo::{EngineView, SloAction, SloCfg, SloController};
 use super::topology::{Candidate, ResolvedTopology};
 use super::workload::{ArrivalGen, TrafficShape};
 use crate::util::percentile::Digest;
@@ -44,7 +44,8 @@ pub struct ActionLog {
 /// and the control loop's trace.
 #[derive(Clone, Debug)]
 pub struct ClusterResult {
-    /// Config label (filled by the caller, e.g. `ceip256` or `adaptive`).
+    /// Config or policy label (filled by the caller, e.g. `ceip256` or
+    /// `reactive`).
     pub label: String,
     /// Traffic-shape label (filled by the caller).
     pub traffic: String,
@@ -63,10 +64,20 @@ pub struct ClusterResult {
     pub windows: u32,
     pub violated_windows: u32,
     pub actions: Vec<ActionLog>,
-    /// Final replica count per service (spec order).
+    /// Final *active* replica count per service (spec order): retired
+    /// replicas are excluded.
     pub final_replicas: Vec<u32>,
     /// Final config label per service (spec order).
     pub final_configs: Vec<String>,
+    /// ∫ provisioned replicas dt over the run (replica-µs) — the
+    /// capacity cost an autoscaler policy is judged on.
+    pub replica_us: f64,
+    /// ∫ prefetcher-metadata footprint dt (byte-µs).
+    pub meta_byte_us: f64,
+    /// Metadata footprint at the end of the run (bytes).
+    pub final_metadata_bytes: u64,
+    /// Simulated duration (µs, time of the last processed event).
+    pub duration_us: f64,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -104,6 +115,10 @@ impl Ord for Ev {
 struct Replica {
     queue: VecDeque<u32>,
     in_service: Option<u32>,
+    /// Retired by a scale-down: the load balancer skips it and it drains
+    /// its residual work, but the slot stays in place — pending
+    /// completion events keep valid indexes. A later scale-up revives it.
+    retired: bool,
 }
 
 struct Svc {
@@ -114,6 +129,13 @@ struct Svc {
     mean_us: f64,
     cv: f64,
     children: Vec<u32>,
+}
+
+impl Svc {
+    /// Non-retired replicas (the provisioned capacity).
+    fn active_replicas(&self) -> u32 {
+        self.replicas.iter().filter(|r| !r.retired).count() as u32
+    }
 }
 
 /// Reusable request slab: slots are recycled through a free list, so
@@ -179,6 +201,16 @@ struct Sim {
     ctrl: SloController,
     adaptive: bool,
     actions: Vec<ActionLog>,
+    /// Current metadata footprint: Σ active replicas × config bytes.
+    meta_now: u64,
+    /// Current provisioned (non-retired) replicas across all services.
+    live_replicas: u32,
+    /// Time the capacity/metadata integrals were last advanced to.
+    last_change_us: f64,
+    replica_us: f64,
+    meta_byte_us: f64,
+    /// Time of the most recently processed event (integral upper bound).
+    last_event_us: f64,
 }
 
 impl Sim {
@@ -196,16 +228,22 @@ impl Sim {
     }
 
     fn dispatch(&mut self, svc: usize, slot: u32, now: f64) {
-        // Least-outstanding-requests balancing, lowest index on ties.
-        let mut best = 0usize;
+        // Least-outstanding-requests balancing over *active* replicas,
+        // lowest index on ties (at least one is always active: retire
+        // is gated on ≥ 2 active).
+        let mut best = usize::MAX;
         let mut best_out = usize::MAX;
         for (i, r) in self.svc[svc].replicas.iter().enumerate() {
+            if r.retired {
+                continue;
+            }
             let out = r.queue.len() + usize::from(r.in_service.is_some());
             if out < best_out {
                 best_out = out;
                 best = i;
             }
         }
+        debug_assert!(best != usize::MAX, "service with no active replica");
         if self.svc[svc].replicas[best].in_service.is_none() {
             self.svc[svc].replicas[best].in_service = Some(slot);
             let dt = self.sample_service(svc);
@@ -215,12 +253,12 @@ impl Sim {
         }
     }
 
-    /// Bottleneck service: lowest aggregate service rate right now.
+    /// Bottleneck service: lowest aggregate active service rate.
     fn bottleneck(&self) -> usize {
         let mut best = 0usize;
         let mut worst_rate = f64::INFINITY;
         for (i, s) in self.svc.iter().enumerate() {
-            let rate = s.replicas.len() as f64 / s.mean_us;
+            let rate = s.active_replicas() as f64 / s.mean_us;
             if rate < worst_rate {
                 worst_rate = rate;
                 best = i;
@@ -229,20 +267,103 @@ impl Sim {
         best
     }
 
-    fn headroom(&self) -> bool {
-        let b = self.bottleneck();
-        self.svc[b].current + 1 < self.cands[b].len()
-            || (self.svc[b].replicas.len() as u32) < self.ctrl.cfg.max_replicas
+    /// Advance the capacity/metadata integrals to `now` (call before any
+    /// change to `live_replicas` or `meta_now`, and once at end of run).
+    fn account(&mut self, now: f64) {
+        let dt = now - self.last_change_us;
+        self.replica_us += dt * self.live_replicas as f64;
+        self.meta_byte_us += dt * self.meta_now as f64;
+        self.last_change_us = now;
     }
 
-    /// Apply a control action to the bottleneck service, falling back to
-    /// the other lever when the chosen one is exhausted. Returns the
-    /// action actually executed (None = dropped) so the controller can
-    /// credit its bandit reward to the right arm.
+    /// Service to release a replica from: the non-bottleneck service
+    /// with the most aggregate headroom (highest active rate) and ≥ 2
+    /// active replicas; ties break to the lowest index. Falls back to
+    /// the bottleneck itself so single-service topologies still scale
+    /// down.
+    fn scale_down_target(&self) -> Option<usize> {
+        let b = self.bottleneck();
+        let mut best: Option<(usize, f64)> = None;
+        for (i, s) in self.svc.iter().enumerate() {
+            if i == b || s.active_replicas() < 2 {
+                continue;
+            }
+            let rate = s.active_replicas() as f64 / s.mean_us;
+            if best.map(|(_, r)| rate > r).unwrap_or(true) {
+                best = Some((i, rate));
+            }
+        }
+        best.map(|(i, _)| i)
+            .or_else(|| (self.svc[b].active_replicas() >= 2).then_some(b))
+    }
+
+    /// Service to move to a cheaper config: the non-bottleneck service
+    /// whose downgrade reclaims the most metadata bytes (None when no
+    /// downgrade would reclaim anything).
+    fn downgrade_target(&self) -> Option<usize> {
+        let b = self.bottleneck();
+        let mut best: Option<(usize, u64)> = None;
+        for (i, s) in self.svc.iter().enumerate() {
+            if i == b || s.current == 0 {
+                continue;
+            }
+            let cand = &self.cands[i];
+            let per = cand[s.current]
+                .metadata_bytes
+                .saturating_sub(cand[s.current - 1].metadata_bytes);
+            if per == 0 {
+                continue;
+            }
+            let reclaim = per.saturating_mul(s.active_replicas() as u64);
+            if best.map(|(_, r)| reclaim > r).unwrap_or(true) {
+                best = Some((i, reclaim));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    /// Engine-side facts for the policy, snapshotted at `now`.
+    fn view(&self, now: f64) -> EngineView {
+        let b = self.bottleneck();
+        let cur = self.svc[b].current;
+        let can_upgrade = cur + 1 < self.cands[b].len();
+        let active_b = self.svc[b].active_replicas();
+        let upgrade_meta_delta = if can_upgrade {
+            self.cands[b][cur + 1]
+                .metadata_bytes
+                .saturating_sub(self.cands[b][cur].metadata_bytes)
+                .saturating_mul(active_b as u64)
+        } else {
+            0
+        };
+        EngineView {
+            now_us: now,
+            can_upgrade,
+            can_scale_up: active_b < self.ctrl.cfg.max_replicas,
+            can_scale_down: self.scale_down_target().is_some(),
+            can_downgrade: self.downgrade_target().is_some(),
+            metadata_bytes: self.meta_now,
+            upgrade_meta_delta,
+            scale_up_meta_delta: self.cands[b][cur].metadata_bytes,
+        }
+    }
+
+    /// Apply a control action, falling back to the other scale-up lever
+    /// when the chosen one is exhausted. Returns the action actually
+    /// executed (None = dropped) so the controller can credit its bandit
+    /// reward to the right arm.
     fn apply_action(&mut self, act: SloAction, now: f64) -> Option<SloAction> {
+        match act {
+            SloAction::Upgrade | SloAction::AddReplica => self.apply_scale_up(act, now),
+            SloAction::RemoveReplica => self.apply_remove(now),
+            SloAction::Downgrade => self.apply_downgrade(now),
+        }
+    }
+
+    fn apply_scale_up(&mut self, act: SloAction, now: f64) -> Option<SloAction> {
         let b = self.bottleneck();
         let can_upgrade = self.svc[b].current + 1 < self.cands[b].len();
-        let can_scale = (self.svc[b].replicas.len() as u32) < self.ctrl.cfg.max_replicas;
+        let can_scale = self.svc[b].active_replicas() < self.ctrl.cfg.max_replicas;
         let act = match act {
             SloAction::Upgrade if can_upgrade => SloAction::Upgrade,
             SloAction::AddReplica if can_scale => SloAction::AddReplica,
@@ -250,26 +371,91 @@ impl Sim {
             _ if can_scale => SloAction::AddReplica,
             _ => return None,
         };
+        self.account(now);
         match act {
             SloAction::Upgrade => {
-                self.svc[b].current += 1;
-                self.svc[b].mean_us = self.cands[b][self.svc[b].current].mean_us;
+                let cur = self.svc[b].current;
+                let delta = self.cands[b][cur + 1].metadata_bytes as i64
+                    - self.cands[b][cur].metadata_bytes as i64;
+                let n = self.svc[b].active_replicas() as i64;
+                self.meta_now = (self.meta_now as i64 + delta * n).max(0) as u64;
+                self.svc[b].current = cur + 1;
+                self.svc[b].mean_us = self.cands[b][cur + 1].mean_us;
                 self.actions.push(ActionLog {
                     t_us: now,
                     service: self.names[b].clone(),
-                    action: format!("upgrade→{}", self.cands[b][self.svc[b].current].label),
+                    action: format!("upgrade→{}", self.cands[b][cur + 1].label),
                 });
             }
             SloAction::AddReplica => {
-                self.svc[b].replicas.push(Replica::default());
+                // Revive a retired slot when one exists (index-stable);
+                // otherwise grow the pool.
+                if let Some(r) = self.svc[b].replicas.iter_mut().find(|r| r.retired) {
+                    r.retired = false;
+                } else {
+                    self.svc[b].replicas.push(Replica::default());
+                }
+                self.live_replicas += 1;
+                self.meta_now += self.cands[b][self.svc[b].current].metadata_bytes;
                 self.actions.push(ActionLog {
                     t_us: now,
                     service: self.names[b].clone(),
-                    action: format!("replicas→{}", self.svc[b].replicas.len()),
+                    action: format!("replicas→{}", self.svc[b].active_replicas()),
                 });
             }
+            _ => unreachable!(),
         }
         Some(act)
+    }
+
+    fn apply_remove(&mut self, now: f64) -> Option<SloAction> {
+        let t = self.scale_down_target()?;
+        // Retire the emptiest active replica: capacity is handed back at
+        // the action; residual queued work drains in place (the slot —
+        // and any pending completion event pointing at it — stays put).
+        let mut pick = usize::MAX;
+        let mut least = usize::MAX;
+        for (i, r) in self.svc[t].replicas.iter().enumerate() {
+            if r.retired {
+                continue;
+            }
+            let out = r.queue.len() + usize::from(r.in_service.is_some());
+            if out < least {
+                least = out;
+                pick = i;
+            }
+        }
+        debug_assert!(pick != usize::MAX, "scale-down target had no active replica");
+        self.account(now);
+        self.svc[t].replicas[pick].retired = true;
+        self.live_replicas -= 1;
+        self.meta_now = self
+            .meta_now
+            .saturating_sub(self.cands[t][self.svc[t].current].metadata_bytes);
+        self.actions.push(ActionLog {
+            t_us: now,
+            service: self.names[t].clone(),
+            action: format!("replicas→{}", self.svc[t].active_replicas()),
+        });
+        Some(SloAction::RemoveReplica)
+    }
+
+    fn apply_downgrade(&mut self, now: f64) -> Option<SloAction> {
+        let t = self.downgrade_target()?;
+        self.account(now);
+        let cur = self.svc[t].current;
+        let delta = self.cands[t][cur - 1].metadata_bytes as i64
+            - self.cands[t][cur].metadata_bytes as i64;
+        let n = self.svc[t].active_replicas() as i64;
+        self.meta_now = (self.meta_now as i64 + delta * n).max(0) as u64;
+        self.svc[t].current = cur - 1;
+        self.svc[t].mean_us = self.cands[t][cur - 1].mean_us;
+        self.actions.push(ActionLog {
+            t_us: now,
+            service: self.names[t].clone(),
+            action: format!("downgrade→{}", self.cands[t][cur - 1].label),
+        });
+        Some(SloAction::Downgrade)
     }
 
     fn finish(&mut self, slot: u32, now: f64) {
@@ -280,8 +466,10 @@ impl Sim {
         }
         self.completed += 1;
         self.slab.free.push(slot);
-        let headroom = self.adaptive && self.headroom();
-        if let Some(act) = self.ctrl.on_complete(latency, headroom) {
+        // Static scenarios feed a lever-less view: the controller tracks
+        // windows/burn but its policy can never propose anything.
+        let view = if self.adaptive { self.view(now) } else { EngineView::frozen(now) };
+        if let Some(act) = self.ctrl.on_complete(latency, &view) {
             let applied = self.apply_action(act, now);
             self.ctrl.settle_applied(applied);
         }
@@ -293,6 +481,7 @@ impl Sim {
             None => return false,
         };
         self.events += 1;
+        self.last_event_us = ev.t;
         match ev.kind {
             EvKind::Arrival => {
                 let slot = self.slab.alloc(ev.t, &self.indegrees);
@@ -357,6 +546,12 @@ pub fn run(
         ctrl.unwrap_or_else(|| SloCfg::new(params.slo_us, mix64(params.seed ^ 0xC1A5_7E55)));
     ctrl_cfg.slo_us = params.slo_us; // single source of truth for the SLO
     let n = topo.services.len();
+    let live_replicas: u32 = topo.services.iter().map(|s| s.replicas).sum();
+    let meta_now: u64 = topo
+        .services
+        .iter()
+        .map(|s| s.candidates[0].metadata_bytes * s.replicas as u64)
+        .sum();
     let mut sim = Sim {
         svc: topo
             .services
@@ -392,11 +587,20 @@ pub fn run(
         ctrl: SloController::new(ctrl_cfg),
         adaptive,
         actions: Vec::new(),
+        meta_now,
+        live_replicas,
+        last_change_us: 0.0,
+        replica_us: 0.0,
+        meta_byte_us: 0.0,
+        last_event_us: 0.0,
     };
     let t0 = sim.gen.next_arrival();
     sim.schedule(t0, EvKind::Arrival);
     while sim.step() {}
     debug_assert_eq!(sim.completed, params.requests);
+    // Close the capacity/metadata integrals at the last event.
+    let end = sim.last_event_us;
+    sim.account(end);
     let mut digest = sim.digest;
     ClusterResult {
         label: String::new(),
@@ -413,19 +617,24 @@ pub fn run(
         windows: sim.ctrl.windows,
         violated_windows: sim.ctrl.violated,
         actions: sim.actions,
-        final_replicas: sim.svc.iter().map(|s| s.replicas.len() as u32).collect(),
+        final_replicas: sim.svc.iter().map(Svc::active_replicas).collect(),
         final_configs: sim
             .svc
             .iter()
             .enumerate()
             .map(|(i, s)| sim.cands[i][s.current].label.clone())
             .collect(),
+        replica_us: sim.replica_us,
+        meta_byte_us: sim.meta_byte_us,
+        final_metadata_bytes: sim.meta_now,
+        duration_us: sim.last_event_us,
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::slo::Policy;
     use crate::cluster::topology::ResolvedService;
 
     fn chain(ipcs: &[f64]) -> ResolvedTopology {
@@ -466,6 +675,30 @@ mod tests {
         assert_eq!(a.p99_us.to_bits(), b.p99_us.to_bits());
         assert_eq!(a.events, b.events);
         assert_eq!(a.compliance.to_bits(), b.compliance.to_bits());
+        // Policy-driven runs are bit-equal too (scale-downs included).
+        let cfg = || {
+            SloCfg::new(50.0, 7)
+                .with_policy(Policy::Hysteresis { idle_windows: 2, headroom: 0.8 })
+        };
+        let c = run(&topo, &shape, &p, Some(cfg()));
+        let d = run(&topo, &shape, &p, Some(cfg()));
+        assert_eq!(c.p99_us.to_bits(), d.p99_us.to_bits());
+        assert_eq!(c.actions, d.actions);
+        assert_eq!(c.replica_us.to_bits(), d.replica_us.to_bits());
+        assert_eq!(c.meta_byte_us.to_bits(), d.meta_byte_us.to_bits());
+    }
+
+    #[test]
+    fn static_run_tracks_capacity_integrals() {
+        let topo = chain(&[2.0, 1.8]);
+        let p = params(&topo, 0.6, 10_000, 1e9);
+        let r = run(&topo, &TrafficShape::Poisson { util: 1.0 }, &p, None);
+        assert!(r.duration_us > 0.0);
+        // 2 static replicas for the whole run: ∫ = 2 × duration exactly.
+        assert!((r.replica_us - 2.0 * r.duration_us).abs() < 1e-6 * r.duration_us);
+        // chain_from_ipcs carries no metadata.
+        assert_eq!(r.final_metadata_bytes, 0);
+        assert_eq!(r.meta_byte_us, 0.0);
     }
 
     #[test]
@@ -495,7 +728,11 @@ mod tests {
             name: name.into(),
             replicas: 1,
             cv: 0.0,
-            candidates: vec![Candidate { label: "static".into(), mean_us: mean }],
+            candidates: vec![Candidate {
+                label: "static".into(),
+                mean_us: mean,
+                metadata_bytes: 0,
+            }],
             children,
             indegree: indeg,
         };
@@ -553,6 +790,7 @@ mod tests {
         let mk = |label: &str, ipc: f64| Candidate {
             label: label.into(),
             mean_us: 25_000.0 / ipc / 2500.0,
+            metadata_bytes: 0,
         };
         let topo = ResolvedTopology {
             services: vec![ResolvedService {
@@ -593,6 +831,84 @@ mod tests {
             "final state unchanged: {:?} {:?}",
             adap.final_configs,
             adap.final_replicas
+        );
+    }
+
+    #[test]
+    fn hysteresis_policy_releases_replicas_under_light_load() {
+        // Overprovisioned single service (4 replicas) at 35% offered
+        // load: the hysteresis policy retires replicas, cutting
+        // replica-seconds versus the static run, without losing a single
+        // request or wrecking compliance.
+        let mut topo = chain(&[2.0]);
+        topo.services[0].replicas = 4;
+        let slo = topo.zero_load_us() * 6.0;
+        let shape = TrafficShape::Poisson { util: 1.0 };
+        let p = RunParams {
+            requests: 40_000,
+            seed: 13,
+            slo_us: slo,
+            base_rate_per_us: topo.bottleneck_rate() * 0.35,
+        };
+        let stat = run(&topo, &shape, &p, None);
+        let cfg = SloCfg::new(slo, 21)
+            .with_policy(Policy::Hysteresis { idle_windows: 3, headroom: 0.7 });
+        let adap = run(&topo, &shape, &p, Some(cfg));
+        assert_eq!(adap.requests, 40_000, "draining lost requests");
+        assert!(!adap.actions.is_empty(), "sustained headroom never released capacity");
+        assert!(adap.final_replicas[0] < 4, "still at {} replicas", adap.final_replicas[0]);
+        assert!(
+            adap.replica_us < stat.replica_us,
+            "no replica-seconds saved: {} !< {}",
+            adap.replica_us,
+            stat.replica_us
+        );
+        assert!(adap.compliance > 0.9, "scale-down wrecked the SLO: {}", adap.compliance);
+    }
+
+    #[test]
+    fn cost_aware_policy_keeps_metadata_under_budget() {
+        // nl is cheap (1 KB), ceip fast but heavy (8 KB). Budget 8.5 KB
+        // admits exactly one of {upgrade to ceip, a few nl replicas} at a
+        // time — the run must never exceed it, which the time integral
+        // certifies (mean footprint ≤ budget would fail if any interval
+        // overshot while the rest sat at the cap).
+        let mk = |label: &str, ipc: f64, meta: u64| Candidate {
+            label: label.into(),
+            mean_us: 25_000.0 / ipc / 2500.0,
+            metadata_bytes: meta,
+        };
+        let topo = ResolvedTopology {
+            services: vec![ResolvedService {
+                name: "frontend".into(),
+                replicas: 1,
+                cv: 0.35,
+                candidates: vec![mk("nl", 1.6, 1_000), mk("ceip", 2.0, 8_000)],
+                children: vec![],
+                indegree: 0,
+            }],
+        };
+        let shape = TrafficShape::Burst { util: 0.55, mult: 2.4, period_us: 30_000.0, duty: 0.35 };
+        let slo = topo.zero_load_us() * 5.0;
+        let p = RunParams {
+            requests: 80_000,
+            seed: 11,
+            slo_us: slo,
+            base_rate_per_us: topo.bottleneck_rate(),
+        };
+        let budget = 8_500u64;
+        let cfg = SloCfg::new(slo, 99)
+            .with_policy(Policy::CostAware { budget_bytes: budget, idle_windows: 4 });
+        let r = run(&topo, &shape, &p, Some(cfg));
+        assert!(!r.actions.is_empty(), "cost-aware never acted under burst pressure");
+        assert!(
+            r.final_metadata_bytes <= budget,
+            "budget busted: {} > {budget}",
+            r.final_metadata_bytes
+        );
+        assert!(
+            r.meta_byte_us <= budget as f64 * r.duration_us * (1.0 + 1e-9),
+            "metadata footprint exceeded the budget at some point"
         );
     }
 }

@@ -1,8 +1,10 @@
-//! Discrete-event microservice-cluster simulator (DESIGN.md §8): request
-//! DAGs with fan-out/fan-in and per-service replicas ([`topology`]),
-//! time-varying open-loop traffic ([`workload`]), a binary-heap event
-//! loop ([`engine`]), and a windowed SLO tracker + burn-driven control
-//! loop ([`slo`]). The linear `rpc/` tandem chain is the degenerate case
+//! Discrete-event microservice-cluster simulator (DESIGN.md §8/§9):
+//! request DAGs with fan-out/fan-in and per-service replicas
+//! ([`topology`]), time-varying open-loop traffic ([`workload`]), a
+//! binary-heap event loop ([`engine`]), and a windowed SLO tracker
+//! driving an autoscaler policy suite ([`slo`]: reactive, hysteresis
+//! scale-down, predictive, cost-aware). The linear `rpc/` tandem chain
+//! is the degenerate case
 //! (every node one parent, one replica); this module is what the
 //! ROADMAP's "heavy traffic, many scenarios" north star plugs into.
 //!
@@ -19,16 +21,16 @@ pub mod topology;
 pub mod workload;
 
 pub use engine::{ClusterResult, RunParams};
-pub use slo::SloCfg;
+pub use slo::{EngineView, Policy, SloCfg};
 pub use spec::ClusterSpec;
-pub use topology::{ResolvedTopology, ServiceSpec, Topology};
+pub use topology::{Measure, ResolvedTopology, ServiceSpec, Topology};
 pub use workload::TrafficShape;
 
 use crate::campaign::runner::{self, Cell};
 use crate::campaign::spec::cell_seed;
 use crate::cli::parse_prefetcher;
 use crate::config::SimConfig;
-use crate::figures::report::{f2, pct, Table};
+use crate::figures::report::{f2, kb, pct, Table};
 use crate::trace::gen::apps;
 use anyhow::Result;
 use std::collections::HashMap;
@@ -36,7 +38,7 @@ use std::collections::HashMap;
 /// Everything one [`run_spec`] invocation produced.
 pub struct ClusterOutcome {
     /// Scenario results in deterministic expansion order
-    /// (configs ▸ traffic shapes, adaptive last).
+    /// (configs ▸ traffic shapes, then policies ▸ traffic shapes).
     pub scenarios: Vec<ClusterResult>,
     pub total_requests: u64,
     pub total_events: u64,
@@ -54,16 +56,32 @@ struct ScenarioDef {
     ctrl: Option<SloCfg>,
 }
 
-/// Expand and run a cluster spec: measure the (app × prefetcher) IPC
-/// matrix through the campaign runner, resolve one topology per config
-/// (plus a multi-candidate one for the adaptive scenario), and run every
-/// (config × traffic) scenario — sharded across `threads` workers
-/// (0 = auto) with byte-identical results at any thread count.
-pub fn run_spec(spec: &ClusterSpec, threads: usize) -> Result<ClusterOutcome> {
+/// A cluster spec with its (app × prefetcher) matrix measured and its
+/// load/SLO anchors derived — everything scenario runs share. Built
+/// once per spec ([`prepare_spec`]) and reused by every (config |
+/// policy) × shape scenario, including campaign cluster cells.
+pub struct PreparedSpec {
+    /// Normalized prefetcher labels, spec order.
+    pub labels: Vec<String>,
+    /// One single-candidate topology per static config.
+    pub static_topos: Vec<ResolvedTopology>,
+    /// Multi-candidate topology for policy scenarios: every service
+    /// carries all configs, sorted by measured service time (slowest
+    /// first), so the Upgrade lever is always a strict improvement.
+    pub policy_topo: ResolvedTopology,
+    /// Absolute offered-load anchor (req/µs at utilization 1.0).
+    pub base_rate: f64,
+    /// The SLO every scenario is held to (spec value or derived).
+    pub slo_us: f64,
+    /// (app, prefetcher) cells that were simulated.
+    pub ipc_cells: usize,
+}
+
+/// Measure the (app × config) IPC/metadata matrix through the campaign
+/// runner and resolve the spec's topologies and load/SLO anchors.
+pub fn prepare_spec(spec: &ClusterSpec, threads: usize) -> Result<PreparedSpec> {
     spec.validate()?;
     let labels: Vec<String> = spec.prefetchers.iter().map(|p| p.to_lowercase()).collect();
-
-    // 1. IPC matrix (one sim cell per distinct app × config).
     let pairs = spec.ipc_cells();
     let cells: Vec<Cell> = pairs
         .iter()
@@ -83,14 +101,16 @@ pub fn run_spec(spec: &ClusterSpec, threads: usize) -> Result<ClusterOutcome> {
         })
         .collect();
     let sims = runner::run_cells(&cells, threads);
-    let mut ipc: HashMap<(String, String), f64> = HashMap::new();
+    let mut measures: HashMap<(String, String), Measure> = HashMap::new();
     for ((app, pf), r) in pairs.iter().zip(&sims) {
-        ipc.insert((app.clone(), pf.clone()), r.ipc());
+        measures.insert(
+            (app.clone(), pf.clone()),
+            Measure { ipc: r.ipc(), metadata_bytes: r.metadata_bytes },
+        );
     }
-    let lookup = |app: &str, label: &str| ipc.get(&(app.to_string(), label.to_string())).copied();
+    let lookup =
+        |app: &str, label: &str| measures.get(&(app.to_string(), label.to_string())).copied();
 
-    // 2. Topologies: one single-candidate per static config; the
-    //    adaptive scenario sees all configs in spec order.
     let static_topos: Vec<ResolvedTopology> = labels
         .iter()
         .map(|l| spec.topology.resolve(std::slice::from_ref(l), lookup))
@@ -114,32 +134,82 @@ pub fn run_spec(spec: &ClusterSpec, threads: usize) -> Result<ClusterOutcome> {
     } else {
         static_topos[base_idx].zero_load_us() * 4.0
     };
-
-    // 3. Deterministic scenario expansion: configs ▸ shapes, adaptive last.
-    let mut variants: Vec<(String, ResolvedTopology, Option<SloCfg>)> = labels
-        .iter()
-        .zip(&static_topos)
-        .map(|(l, t)| (l.clone(), t.clone(), None))
-        .collect();
-    if spec.adaptive {
-        let mut topo = spec.topology.resolve(&labels, lookup)?;
-        // Order each service's candidates by *measured* service time,
-        // slowest first, so the control loop's Upgrade lever is always a
-        // strict improvement (e.g. cheip2k can measure slower than
-        // ceip256 on some apps). Stable sort keeps ties deterministic.
-        for s in &mut topo.services {
-            s.candidates.sort_by(|a, b| b.mean_us.partial_cmp(&a.mean_us).unwrap());
-        }
-        let seed = cell_seed(spec.seed, "adaptive-ctrl");
-        variants.push(("adaptive".into(), topo, Some(SloCfg::new(slo_us, seed))));
+    let mut policy_topo = spec.topology.resolve(&labels, lookup)?;
+    // Order each service's candidates by *measured* service time,
+    // slowest first, so the control loop's Upgrade lever is always a
+    // strict improvement (e.g. cheip2k can measure slower than ceip256
+    // on some apps). Stable sort keeps ties deterministic.
+    for s in &mut policy_topo.services {
+        s.candidates.sort_by(|a, b| b.mean_us.partial_cmp(&a.mean_us).unwrap());
     }
+    Ok(PreparedSpec {
+        labels,
+        static_topos,
+        policy_topo,
+        base_rate,
+        slo_us,
+        ipc_cells: cells.len(),
+    })
+}
+
+/// Label, run knobs, and control-loop config for one (policy × shape)
+/// scenario — the single source of the determinism-critical seed
+/// formulas, shared by [`run_spec`] and [`run_policy_scenario`] so
+/// campaign cluster cells always reproduce `slofetch cluster` rows.
+fn policy_scenario_cfg(
+    prep: &PreparedSpec,
+    spec: &ClusterSpec,
+    policy: &Policy,
+    shape: &TrafficShape,
+) -> (String, RunParams, SloCfg) {
+    let label = policy.label();
+    let params = RunParams {
+        requests: spec.requests,
+        seed: cell_seed(spec.seed, &format!("{label}|{}", shape.label())),
+        slo_us: prep.slo_us,
+        base_rate_per_us: prep.base_rate,
+    };
+    let ctrl_seed = cell_seed(spec.seed, &format!("policy|{label}|{}", shape.label()));
+    let cfg = SloCfg::new(prep.slo_us, ctrl_seed)
+        .with_policy(policy.clone())
+        .with_shape(shape.clone());
+    (label, params, cfg)
+}
+
+/// Run one (policy × shape) control-loop scenario against a prepared
+/// spec — the campaign cluster axis runs through here. Self-seeded per
+/// (policy, shape): equal inputs give bit-equal results at any thread
+/// count.
+pub fn run_policy_scenario(
+    prep: &PreparedSpec,
+    spec: &ClusterSpec,
+    policy: &Policy,
+    shape: &TrafficShape,
+) -> ClusterResult {
+    let (label, params, cfg) = policy_scenario_cfg(prep, spec, policy, shape);
+    let mut r = engine::run(&prep.policy_topo, shape, &params, Some(cfg));
+    r.label = label;
+    r
+}
+
+/// Expand and run a cluster spec: measure the (app × prefetcher) IPC
+/// matrix through the campaign runner, then run every static
+/// (config × traffic) scenario plus one control-loop scenario per
+/// (policy × traffic) — sharded across `threads` workers (0 = auto)
+/// with byte-identical results at any thread count.
+pub fn run_spec(spec: &ClusterSpec, threads: usize) -> Result<ClusterOutcome> {
+    let prep = prepare_spec(spec, threads)?;
+    let policies = spec.effective_policies()?;
     let shapes: Vec<TrafficShape> = spec
         .traffic
         .iter()
         .map(|t| TrafficShape::parse(t))
         .collect::<Result<_>>()?;
+
+    // Deterministic scenario expansion: configs ▸ shapes, then policies
+    // ▸ shapes.
     let mut defs = Vec::new();
-    for (label, topo, ctrl) in &variants {
+    for (label, topo) in prep.labels.iter().zip(&prep.static_topos) {
         for shape in &shapes {
             let seed = cell_seed(spec.seed, &format!("{label}|{}", shape.label()));
             defs.push(ScenarioDef {
@@ -149,17 +219,29 @@ pub fn run_spec(spec: &ClusterSpec, threads: usize) -> Result<ClusterOutcome> {
                 params: RunParams {
                     requests: spec.requests,
                     seed,
-                    slo_us,
-                    base_rate_per_us: base_rate,
+                    slo_us: prep.slo_us,
+                    base_rate_per_us: prep.base_rate,
                 },
-                ctrl: ctrl.clone(),
+                ctrl: None,
+            });
+        }
+    }
+    for policy in &policies {
+        for shape in &shapes {
+            let (label, params, cfg) = policy_scenario_cfg(&prep, spec, policy, shape);
+            defs.push(ScenarioDef {
+                label,
+                shape: shape.clone(),
+                topo: prep.policy_topo.clone(),
+                params,
+                ctrl: Some(cfg),
             });
         }
     }
 
-    // 4. Shard scenarios across workers; collect by index (scenario runs
-    //    are independent and self-seeded, so order of completion is
-    //    irrelevant to the result).
+    // Shard scenarios across workers; collect by index (scenario runs
+    // are independent and self-seeded, so order of completion is
+    // irrelevant to the result).
     let scenarios = run_scenarios(&defs, threads);
     let total_requests = scenarios.iter().map(|s| s.requests).sum();
     let total_events = scenarios.iter().map(|s| s.events).sum();
@@ -167,8 +249,8 @@ pub fn run_spec(spec: &ClusterSpec, threads: usize) -> Result<ClusterOutcome> {
         scenarios,
         total_requests,
         total_events,
-        ipc_cells: cells.len(),
-        slo_us,
+        ipc_cells: prep.ipc_cells,
+        slo_us: prep.slo_us,
     })
 }
 
@@ -196,10 +278,13 @@ pub fn report(out: &ClusterOutcome) -> Table {
             "burn",
             "actions",
             "replicas",
+            "replica·s",
+            "metadata",
         ],
     );
     for s in &out.scenarios {
         let replicas: Vec<String> = s.final_replicas.iter().map(|r| r.to_string()).collect();
+        let mean_meta = if s.duration_us > 0.0 { s.meta_byte_us / s.duration_us } else { 0.0 };
         t.row(vec![
             s.label.clone(),
             s.traffic.clone(),
@@ -210,9 +295,15 @@ pub fn report(out: &ClusterOutcome) -> Table {
             format!("{}/{}", s.violated_windows, s.windows),
             s.actions.len().to_string(),
             replicas.join(","),
+            f2(s.replica_us / 1e6),
+            kb(mean_meta as u64),
         ]);
     }
-    t.note("burn = windows below target compliance / windows evaluated; offered load is anchored on the slowest config's bottleneck");
+    t.note(
+        "burn = windows below target compliance / windows evaluated; replica·s = \
+         ∫ provisioned replicas dt; metadata = time-averaged footprint; offered load \
+         is anchored on the slowest config's bottleneck",
+    );
     t
 }
 
@@ -318,6 +409,7 @@ mod tests {
             slo_us: 0.0,
             utilization: 1.0,
             adaptive: true,
+            policies: Vec::new(),
         }
     }
 
@@ -367,5 +459,40 @@ mod tests {
         let t = report(&out);
         assert_eq!(t.rows.len(), out.scenarios.len());
         assert!(t.markdown().contains("ceip256"));
+    }
+
+    #[test]
+    fn policy_suite_runs_one_scenario_per_policy_and_shape() {
+        let spec = ClusterSpec {
+            adaptive: false,
+            policies: vec![
+                "reactive".into(),
+                "hysteresis".into(),
+                "cost-aware:262144".into(),
+            ],
+            requests: 6_000,
+            ..tiny_spec()
+        };
+        let out = run_spec(&spec, 2).unwrap();
+        // (2 prefetchers + 3 policies) × 1 shape.
+        assert_eq!(out.scenarios.len(), 5);
+        for policy in &spec.policies {
+            let label = Policy::parse(policy).unwrap().label();
+            let s = out
+                .scenarios
+                .iter()
+                .find(|s| s.label == label)
+                .unwrap_or_else(|| panic!("missing policy scenario '{label}'"));
+            assert_eq!(s.requests, spec.requests);
+            assert!(s.p50_us <= s.p95_us && s.p95_us <= s.p99_us);
+            assert!(s.replica_us > 0.0);
+        }
+        // run_policy_scenario is the same computation the sweep did.
+        let prep = prepare_spec(&spec, 1).unwrap();
+        let shape = TrafficShape::parse(&spec.traffic[0]).unwrap();
+        let direct = run_policy_scenario(&prep, &spec, &Policy::Reactive, &shape);
+        let swept = out.scenarios.iter().find(|s| s.label == "reactive").unwrap();
+        assert_eq!(direct.p99_us.to_bits(), swept.p99_us.to_bits());
+        assert_eq!(direct.events, swept.events);
     }
 }

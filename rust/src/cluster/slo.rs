@@ -1,17 +1,139 @@
-//! Windowed SLO tracking and the burn-driven control loop (paper §XI /
+//! Windowed SLO tracking and the autoscaler policy suite (paper §XI /
 //! §VI): per-window P95/P99/compliance over completed requests, plus a
-//! controller that reacts to SLO burn by either switching the bottleneck
-//! service to a faster prefetcher config or adding a replica.
+//! family of controllers that react to SLO burn — or anticipate it —
+//! by reconfiguring the cluster.
 //!
-//! Reuses the repo's existing adaptation machinery: arm selection is the
-//! contextual bandit ([`crate::ml::bandit::Bandit`], rewarded with the
-//! next window's compliance) and action frequency is bounded by the
-//! deployment token bucket ([`crate::coordinator::budget::TokenBucket`],
-//! reinterpreted over completions instead of cycles).
+//! Four policies ([`Policy`]):
+//!
+//! - **reactive** — the original burn-driven loop: on a burned window, a
+//!   contextual bandit ([`crate::ml::bandit::Bandit`], rewarded with the
+//!   next window's compliance) chooses between switching the bottleneck
+//!   service to a faster prefetcher config and adding a replica.
+//! - **hysteresis** — reactive, plus scale *down* on sustained headroom:
+//!   after `idle_windows` consecutive windows whose P99 stays under
+//!   `headroom × SLO`, one replica is released; the streak then re-arms,
+//!   so burst-induced oscillation can never flap replicas up and down.
+//! - **predictive** — hysteresis, plus pre-provisioning against the
+//!   known traffic shape: the controller forecasts offered load
+//!   `lead_us` ahead and adds capacity *before* the diurnal peak
+//!   arrives, while windows are still healthy.
+//! - **cost-aware** — reactive, but every scale-up must keep the total
+//!   prefetcher-metadata footprint under `budget_bytes`: the cheaper
+//!   lever wins, an action that would bust the budget is withheld, and
+//!   sustained headroom reclaims bytes (downgrade or release).
+//!
+//! Action frequency for every policy is bounded by the deployment token
+//! bucket ([`crate::coordinator::budget::TokenBucket`], reinterpreted
+//! over completions instead of cycles).
 
+use super::workload::TrafficShape;
 use crate::coordinator::budget::TokenBucket;
 use crate::ml::bandit::{Bandit, Context};
 use crate::util::percentile::Digest;
+use anyhow::{bail, Result};
+
+/// Autoscaler policy selector (see the module docs for semantics).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Policy {
+    /// Burn-driven bandit loop (upgrade | add-replica only).
+    Reactive,
+    /// Reactive plus scale-down after `idle_windows` consecutive windows
+    /// with P99 below `headroom × SLO`.
+    Hysteresis { idle_windows: u32, headroom: f64 },
+    /// Hysteresis plus shape-forecast pre-provisioning `lead_us` ahead.
+    Predictive { lead_us: f64, idle_windows: u32 },
+    /// Reactive under a metadata budget, reclaiming on headroom.
+    CostAware { budget_bytes: u64, idle_windows: u32 },
+}
+
+impl Policy {
+    /// Parse a colon-separated policy spec: `reactive`,
+    /// `hysteresis[:IDLE_WINDOWS[:HEADROOM]]`,
+    /// `predictive[:LEAD_US[:IDLE_WINDOWS]]`,
+    /// `cost-aware[:BUDGET_BYTES[:IDLE_WINDOWS]]`.
+    pub fn parse(spec: &str) -> Result<Policy> {
+        let mut parts = spec.split(':');
+        let kind = parts.next().unwrap_or("").to_lowercase();
+        let mut nums = Vec::new();
+        for p in parts {
+            match p.parse::<f64>() {
+                Ok(v) if v.is_finite() => nums.push(v),
+                _ => bail!("policy '{spec}': '{p}' is not a finite number"),
+            }
+        }
+        let arg = |i: usize, default: f64| nums.get(i).copied().unwrap_or(default);
+        let (policy, max_args) = match kind.as_str() {
+            "reactive" => (Policy::Reactive, 0),
+            "hysteresis" => (
+                Policy::Hysteresis { idle_windows: arg(0, 4.0) as u32, headroom: arg(1, 0.7) },
+                2,
+            ),
+            "predictive" => (
+                Policy::Predictive { lead_us: arg(0, 30_000.0), idle_windows: arg(1, 4.0) as u32 },
+                2,
+            ),
+            "cost-aware" => (
+                Policy::CostAware {
+                    budget_bytes: arg(0, 524_288.0) as u64,
+                    idle_windows: arg(1, 4.0) as u32,
+                },
+                2,
+            ),
+            other => bail!(
+                "unknown policy '{other}' \
+                 (try reactive|hysteresis:4:0.7|predictive:30000:4|cost-aware:524288:4)"
+            ),
+        };
+        if nums.len() > max_args {
+            bail!("policy '{spec}': {kind} takes at most {max_args} numeric fields");
+        }
+        match &policy {
+            Policy::Hysteresis { idle_windows, headroom } => {
+                if *idle_windows == 0 {
+                    bail!("policy '{spec}': idle_windows must be ≥ 1");
+                }
+                if !(0.0 < *headroom && *headroom <= 1.0) {
+                    bail!("policy '{spec}': headroom must be in (0, 1], got {headroom}");
+                }
+            }
+            Policy::Predictive { lead_us, idle_windows } => {
+                if *lead_us <= 0.0 {
+                    bail!("policy '{spec}': lead_us must be > 0");
+                }
+                if *idle_windows == 0 {
+                    bail!("policy '{spec}': idle_windows must be ≥ 1");
+                }
+            }
+            Policy::CostAware { budget_bytes, idle_windows } => {
+                if *budget_bytes == 0 {
+                    bail!("policy '{spec}': budget_bytes must be > 0");
+                }
+                if *idle_windows == 0 {
+                    bail!("policy '{spec}': idle_windows must be ≥ 1");
+                }
+            }
+            Policy::Reactive => {}
+        }
+        Ok(policy)
+    }
+
+    /// Canonical label used in scenario keys and report rows; round-trips
+    /// through [`Policy::parse`].
+    pub fn label(&self) -> String {
+        match self {
+            Policy::Reactive => "reactive".into(),
+            Policy::Hysteresis { idle_windows, headroom } => {
+                format!("hysteresis:{idle_windows}:{headroom}")
+            }
+            Policy::Predictive { lead_us, idle_windows } => {
+                format!("predictive:{lead_us}:{idle_windows}")
+            }
+            Policy::CostAware { budget_bytes, idle_windows } => {
+                format!("cost-aware:{budget_bytes}:{idle_windows}")
+            }
+        }
+    }
+}
 
 /// Control-loop configuration.
 #[derive(Clone, Debug)]
@@ -30,6 +152,11 @@ pub struct SloCfg {
     pub action_burst: f64,
     /// Bandit RNG seed (derived from the scenario seed by the caller).
     pub seed: u64,
+    /// Which autoscaler policy drives the loop.
+    pub policy: Policy,
+    /// Traffic shape the predictive policy forecasts against (`None`
+    /// degrades predictive to its reactive/hysteresis parts).
+    pub shape: Option<TrafficShape>,
 }
 
 impl SloCfg {
@@ -42,7 +169,19 @@ impl SloCfg {
             action_rate_per_kreq: 2.0,
             action_burst: 2.0,
             seed,
+            policy: Policy::Reactive,
+            shape: None,
         }
+    }
+
+    pub fn with_policy(mut self, policy: Policy) -> SloCfg {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_shape(mut self, shape: TrafficShape) -> SloCfg {
+        self.shape = Some(shape);
+        self
     }
 }
 
@@ -53,6 +192,51 @@ pub enum SloAction {
     Upgrade,
     /// Add one replica to the bottleneck service.
     AddReplica,
+    /// Release one replica from the most-overprovisioned service.
+    RemoveReplica,
+    /// Switch a non-bottleneck service to its next slower (cheaper)
+    /// config, reclaiming metadata bytes.
+    Downgrade,
+}
+
+/// Engine-side facts the policy decides against, snapshotted at the
+/// completion that closes a window. Deltas are *additional* bytes an
+/// action would cost (0 when it would shrink the footprint).
+#[derive(Clone, Copy, Debug)]
+pub struct EngineView {
+    /// Simulated time of the completion (µs).
+    pub now_us: f64,
+    /// The bottleneck service has a faster candidate left.
+    pub can_upgrade: bool,
+    /// The bottleneck service is below the replica cap.
+    pub can_scale_up: bool,
+    /// Some service can release a replica (≥ 2 active).
+    pub can_scale_down: bool,
+    /// Some non-bottleneck service can move to a cheaper config.
+    pub can_downgrade: bool,
+    /// Current prefetcher-metadata footprint across all replicas.
+    pub metadata_bytes: u64,
+    /// Extra bytes if the bottleneck upgrades (all its replicas).
+    pub upgrade_meta_delta: u64,
+    /// Extra bytes if the bottleneck adds a replica.
+    pub scale_up_meta_delta: u64,
+}
+
+impl EngineView {
+    /// A view advertising no levers — static scenarios track burn
+    /// through the controller but can never act.
+    pub fn frozen(now_us: f64) -> EngineView {
+        EngineView {
+            now_us,
+            can_upgrade: false,
+            can_scale_up: false,
+            can_scale_down: false,
+            can_downgrade: false,
+            metadata_bytes: 0,
+            upgrade_meta_delta: 0,
+            scale_up_meta_delta: 0,
+        }
+    }
 }
 
 /// One window's summary (diagnostics and tests).
@@ -63,7 +247,7 @@ pub struct WindowStats {
     pub compliance: f64,
 }
 
-/// Windowed SLO burn tracker + bandit-arbitrated control loop.
+/// Windowed SLO burn tracker + policy-driven control loop.
 pub struct SloController {
     pub cfg: SloCfg,
     win: Digest,
@@ -76,6 +260,12 @@ pub struct SloController {
     /// Windows that burned (compliance below target).
     pub violated: u32,
     last_p99: f64,
+    /// Consecutive healthy windows with deep P99 headroom (scale-down
+    /// hysteresis state).
+    healthy_streak: u32,
+    /// Highest offered-load utilization the predictive policy has
+    /// provisioned for so far.
+    provisioned_util: Option<f64>,
     /// Bandit slot awaiting its reward (next window's compliance),
     /// plus the context base it was chosen in — [`Self::settle_applied`]
     /// re-points the slot when the engine executes the other lever.
@@ -88,6 +278,10 @@ fn arm_of(act: SloAction) -> usize {
     match act {
         SloAction::Upgrade => 0,
         SloAction::AddReplica => 1,
+        // Scale-downs are deterministic policy rules, never bandit arms.
+        SloAction::RemoveReplica | SloAction::Downgrade => {
+            unreachable!("bandit arms cover only scale-up levers")
+        }
     }
 }
 
@@ -104,6 +298,8 @@ impl SloController {
             windows: 0,
             violated: 0,
             last_p99: 0.0,
+            healthy_streak: 0,
+            provisioned_util: None,
             pending_slot: None,
             pending_base: None,
             last_window: None,
@@ -112,9 +308,10 @@ impl SloController {
     }
 
     /// Feed one completed request. At window boundaries, evaluates burn
-    /// and may return an action; `headroom` tells the bandit whether the
-    /// engine still has a faster config or spare replica slot to apply.
-    pub fn on_complete(&mut self, latency_us: f64, headroom: bool) -> Option<SloAction> {
+    /// and may return an action; `view` carries the engine-side facts
+    /// (available levers, metadata footprint, simulated time) the
+    /// policy decides against.
+    pub fn on_complete(&mut self, latency_us: f64, view: &EngineView) -> Option<SloAction> {
         self.completions += 1;
         self.win.add(latency_us);
         if latency_us <= self.cfg.slo_us {
@@ -133,6 +330,9 @@ impl SloController {
         let burned = compliance < self.cfg.target;
         if burned {
             self.violated += 1;
+            self.healthy_streak = 0;
+        } else {
+            self.healthy_streak += 1;
         }
         // Settle the previous action's reward with this window's
         // compliance: the arm that restored the SLO gets reinforced.
@@ -145,25 +345,172 @@ impl SloController {
         self.last_window = Some(stats);
         self.win.clear();
         self.met = 0;
-        if burned && headroom && self.bucket.try_take(self.completions) {
-            let severe = compliance < self.cfg.target - 0.05;
-            let ctx = Context::from_signals(severe, headroom, growing);
-            let (arm, slot) = self.bandit.choose_arm(ctx, 2);
-            self.pending_slot = Some(slot);
-            self.pending_base = Some(slot - arm);
-            return Some(if arm == 0 { SloAction::Upgrade } else { SloAction::AddReplica });
+        self.decide(burned, growing, compliance, &stats, view)
+    }
+
+    /// Policy dispatch at a window boundary.
+    fn decide(
+        &mut self,
+        burned: bool,
+        growing: bool,
+        compliance: f64,
+        stats: &WindowStats,
+        view: &EngineView,
+    ) -> Option<SloAction> {
+        match self.cfg.policy.clone() {
+            Policy::Reactive => {
+                if burned {
+                    self.reactive_action(compliance, growing, view, None)
+                } else {
+                    None
+                }
+            }
+            Policy::Hysteresis { idle_windows, headroom } => {
+                if burned {
+                    self.reactive_action(compliance, growing, view, None)
+                } else {
+                    self.try_scale_down(idle_windows, headroom, stats, view)
+                }
+            }
+            Policy::Predictive { lead_us, idle_windows } => {
+                if burned {
+                    return self.reactive_action(compliance, growing, view, None);
+                }
+                let shape = match self.cfg.shape.clone() {
+                    Some(s) => s,
+                    // Nothing to forecast against: degrade to the
+                    // hysteresis parts (reactive scale-up + streak-gated
+                    // scale-down), as the `SloCfg::shape` docs promise.
+                    None => return self.try_scale_down(idle_windows, 0.7, stats, view),
+                };
+                let now_util = shape.util_at(view.now_us);
+                let ahead = shape.util_at(view.now_us + lead_us);
+                let provisioned = *self.provisioned_util.get_or_insert(now_util);
+                // Rising edge: add capacity before the forecast load
+                // exceeds what we've provisioned for.
+                if ahead > provisioned * 1.05 && view.can_scale_up {
+                    if self.bucket.try_take(self.completions) {
+                        self.provisioned_util = Some(ahead);
+                        return Some(SloAction::AddReplica);
+                    }
+                    return None;
+                }
+                // Falling edge: release through the hysteresis path and
+                // remember the lower watermark.
+                if ahead < provisioned * 0.8 {
+                    let act = self.try_scale_down(idle_windows, 0.9, stats, view);
+                    if act.is_some() {
+                        self.provisioned_util = Some(ahead);
+                    }
+                    return act;
+                }
+                None
+            }
+            Policy::CostAware { budget_bytes, idle_windows } => {
+                if burned {
+                    self.reactive_action(compliance, growing, view, Some(budget_bytes))
+                } else if view.metadata_bytes > budget_bytes {
+                    // Over budget on a healthy window: reclaim bytes.
+                    // Levers are checked before the bucket so a cluster
+                    // with nothing to reclaim doesn't bleed tokens it
+                    // will need when a window eventually burns.
+                    if !(view.can_downgrade || view.can_scale_down) {
+                        return None;
+                    }
+                    if !self.bucket.try_take(self.completions) {
+                        return None;
+                    }
+                    if view.can_downgrade {
+                        Some(SloAction::Downgrade)
+                    } else {
+                        Some(SloAction::RemoveReplica)
+                    }
+                } else {
+                    self.try_scale_down(idle_windows, 0.7, stats, view)
+                }
+            }
         }
-        None
+    }
+
+    /// Burned window: bandit-arbitrated scale-up, optionally constrained
+    /// by a metadata budget (a lever that would bust it is off the
+    /// table; if both would, the action is withheld entirely).
+    fn reactive_action(
+        &mut self,
+        compliance: f64,
+        growing: bool,
+        view: &EngineView,
+        budget: Option<u64>,
+    ) -> Option<SloAction> {
+        let mut can_up = view.can_upgrade;
+        let mut can_scale = view.can_scale_up;
+        if let Some(b) = budget {
+            // A lever is admissible when it fits the budget — or adds no
+            // bytes at all, so an already-over-budget cluster can still
+            // take footprint-neutral (or shrinking) actions against burn.
+            let fits =
+                |delta: u64| delta == 0 || view.metadata_bytes.saturating_add(delta) <= b;
+            can_up = can_up && fits(view.upgrade_meta_delta);
+            can_scale = can_scale && fits(view.scale_up_meta_delta);
+        }
+        if !(can_up || can_scale) {
+            return None;
+        }
+        if !self.bucket.try_take(self.completions) {
+            return None;
+        }
+        let severe = compliance < self.cfg.target - 0.05;
+        let ctx = Context::from_signals(severe, can_up || can_scale, growing);
+        let (arm, slot) = self.bandit.choose_arm(ctx, 2);
+        self.pending_slot = Some(slot);
+        self.pending_base = Some(slot - arm);
+        let act = if arm == 0 { SloAction::Upgrade } else { SloAction::AddReplica };
+        // The bandit may pick a lever the budget forbids — steer to the
+        // other; settle_applied re-points the reward to the executed arm.
+        Some(match act {
+            SloAction::Upgrade if !can_up => SloAction::AddReplica,
+            SloAction::AddReplica if !can_scale => SloAction::Upgrade,
+            a => a,
+        })
+    }
+
+    /// Sustained-headroom scale-down with hysteresis: requires
+    /// `idle_windows` consecutive windows whose P99 stays under
+    /// `headroom × SLO`, then re-arms the streak so each release is
+    /// separated by a full re-earned streak (no flapping).
+    fn try_scale_down(
+        &mut self,
+        idle_windows: u32,
+        headroom: f64,
+        stats: &WindowStats,
+        view: &EngineView,
+    ) -> Option<SloAction> {
+        if stats.p99_us > self.cfg.slo_us * headroom {
+            // Healthy but not comfortably so: no scale-down credit.
+            self.healthy_streak = 0;
+            return None;
+        }
+        if self.healthy_streak < idle_windows || !view.can_scale_down {
+            return None;
+        }
+        if !self.bucket.try_take(self.completions) {
+            return None;
+        }
+        self.healthy_streak = 0;
+        Some(SloAction::RemoveReplica)
     }
 
     /// Tell the controller what the engine actually did with the last
     /// proposed action. The engine may fall back to the other lever when
     /// the chosen one is exhausted for the bottleneck service — the next
     /// window's reward must then land on the arm that *executed*, and a
-    /// dropped action must not be rewarded at all.
+    /// dropped action must not be rewarded at all. Scale-downs carry no
+    /// bandit reward.
     pub fn settle_applied(&mut self, applied: Option<SloAction>) {
         match (applied, self.pending_base) {
-            (Some(act), Some(base)) => self.pending_slot = Some(base + arm_of(act)),
+            (Some(act @ (SloAction::Upgrade | SloAction::AddReplica)), Some(base)) => {
+                self.pending_slot = Some(base + arm_of(act));
+            }
             _ => self.pending_slot = None,
         }
         self.pending_base = None;
@@ -187,11 +534,26 @@ mod tests {
         SloCfg { window, ..SloCfg::new(10.0, 42) }
     }
 
+    /// A view with both scale-up levers (mirrors the old `headroom`
+    /// boolean) and no cost pressure.
+    fn up(headroom: bool) -> EngineView {
+        EngineView {
+            now_us: 0.0,
+            can_upgrade: headroom,
+            can_scale_up: headroom,
+            can_scale_down: false,
+            can_downgrade: false,
+            metadata_bytes: 0,
+            upgrade_meta_delta: 0,
+            scale_up_meta_delta: 0,
+        }
+    }
+
     #[test]
     fn no_action_before_a_full_window() {
         let mut c = SloController::new(cfg(100));
         for _ in 0..99 {
-            assert_eq!(c.on_complete(50.0, true), None);
+            assert_eq!(c.on_complete(50.0, &up(true)), None);
         }
         assert_eq!(c.windows, 0);
     }
@@ -200,7 +562,7 @@ mod tests {
     fn compliant_windows_do_not_act() {
         let mut c = SloController::new(cfg(100));
         for _ in 0..500 {
-            assert_eq!(c.on_complete(1.0, true), None, "action on a healthy window");
+            assert_eq!(c.on_complete(1.0, &up(true)), None, "action on a healthy window");
         }
         assert_eq!(c.windows, 5);
         assert_eq!(c.violated, 0);
@@ -213,7 +575,7 @@ mod tests {
         let mut acted = false;
         for _ in 0..100 {
             // Every request misses the 10 µs SLO.
-            if c.on_complete(100.0, true).is_some() {
+            if c.on_complete(100.0, &up(true)).is_some() {
                 acted = true;
             }
         }
@@ -227,7 +589,7 @@ mod tests {
     fn no_headroom_means_no_action() {
         let mut c = SloController::new(cfg(100));
         for _ in 0..300 {
-            assert_eq!(c.on_complete(100.0, false), None);
+            assert_eq!(c.on_complete(100.0, &up(false)), None);
         }
         assert_eq!(c.violated, 3, "burn is still tracked without headroom");
     }
@@ -239,7 +601,7 @@ mod tests {
         let mut c = SloController::new(cfg(100));
         let mut actions = 0;
         for _ in 0..1000 {
-            if c.on_complete(100.0, true).is_some() {
+            if c.on_complete(100.0, &up(true)).is_some() {
                 actions += 1;
             }
         }
@@ -253,7 +615,7 @@ mod tests {
         // fell back to the other lever: the pending reward must follow.
         let propose = |c: &mut SloController| -> SloAction {
             loop {
-                if let Some(a) = c.on_complete(100.0, true) {
+                if let Some(a) = c.on_complete(100.0, &up(true)) {
                     return a;
                 }
             }
@@ -262,7 +624,7 @@ mod tests {
         let chosen = propose(&mut c);
         let other = match chosen {
             SloAction::Upgrade => SloAction::AddReplica,
-            SloAction::AddReplica => SloAction::Upgrade,
+            _ => SloAction::Upgrade,
         };
         c.settle_applied(Some(other));
         let base = c.pending_base; // cleared by settle
@@ -275,6 +637,12 @@ mod tests {
         propose(&mut c);
         c.settle_applied(None);
         assert_eq!(c.pending_slot, None);
+
+        // A scale-down execution must not claim the bandit reward either.
+        let mut c = SloController::new(cfg(100));
+        propose(&mut c);
+        c.settle_applied(Some(SloAction::RemoveReplica));
+        assert_eq!(c.pending_slot, None);
     }
 
     #[test]
@@ -284,10 +652,188 @@ mod tests {
             let mut log = Vec::new();
             for i in 0..2000u64 {
                 let lat = if i % 3 == 0 { 100.0 } else { 1.0 };
-                log.push(c.on_complete(lat, true));
+                log.push(c.on_complete(lat, &up(true)));
             }
             log
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn policy_specs_parse_and_roundtrip() {
+        assert_eq!(Policy::parse("reactive").unwrap(), Policy::Reactive);
+        assert_eq!(
+            Policy::parse("hysteresis").unwrap(),
+            Policy::Hysteresis { idle_windows: 4, headroom: 0.7 }
+        );
+        assert_eq!(
+            Policy::parse("hysteresis:6:0.5").unwrap(),
+            Policy::Hysteresis { idle_windows: 6, headroom: 0.5 }
+        );
+        assert_eq!(
+            Policy::parse("predictive:20000").unwrap(),
+            Policy::Predictive { lead_us: 20_000.0, idle_windows: 4 }
+        );
+        assert_eq!(
+            Policy::parse("cost-aware:262144:3").unwrap(),
+            Policy::CostAware { budget_bytes: 262_144, idle_windows: 3 }
+        );
+        // Case-insensitive like prefetcher/traffic specs.
+        assert_eq!(Policy::parse("REACTIVE").unwrap(), Policy::Reactive);
+        for spec in ["reactive", "hysteresis:6:0.5", "predictive:20000:4", "cost-aware:262144:3"] {
+            let p = Policy::parse(spec).unwrap();
+            assert_eq!(Policy::parse(&p.label()).unwrap(), p, "label roundtrip for {spec}");
+        }
+    }
+
+    #[test]
+    fn bad_policy_specs_are_rejected() {
+        assert!(Policy::parse("chaos-monkey").is_err());
+        assert!(Policy::parse("reactive:1").is_err(), "surplus fields must error");
+        assert!(Policy::parse("hysteresis:0").is_err(), "idle_windows 0");
+        assert!(Policy::parse("hysteresis:4:1.5").is_err(), "headroom > 1");
+        assert!(Policy::parse("predictive:-5").is_err());
+        assert!(Policy::parse("cost-aware:0").is_err());
+        assert!(Policy::parse("cost-aware:abc").is_err());
+    }
+
+    #[test]
+    fn hysteresis_scales_down_after_sustained_headroom() {
+        let cfg = SloCfg {
+            window: 100,
+            policy: Policy::Hysteresis { idle_windows: 4, headroom: 0.7 },
+            ..SloCfg::new(100.0, 9)
+        };
+        let mut c = SloController::new(cfg);
+        let v = EngineView { can_scale_down: true, ..up(true) };
+        // Deeply healthy windows (P99 = 5 µs ≪ 70 µs headroom line).
+        let mut downs_at = Vec::new();
+        for w in 0..12 {
+            for _ in 0..100 {
+                if let Some(SloAction::RemoveReplica) = c.on_complete(5.0, &v) {
+                    downs_at.push(w);
+                }
+            }
+        }
+        assert!(!downs_at.is_empty(), "sustained headroom never scaled down");
+        assert!(downs_at[0] >= 3, "scaled down before the hysteresis streak: {downs_at:?}");
+        if downs_at.len() >= 2 {
+            assert!(
+                downs_at[1] - downs_at[0] >= 4,
+                "releases not separated by a re-earned streak: {downs_at:?}"
+            );
+        }
+        assert_eq!(c.violated, 0);
+    }
+
+    #[test]
+    fn hysteresis_never_flaps_under_burst_traffic() {
+        // Alternating burned/healthy windows (a burst every other
+        // window): the healthy streak never reaches idle_windows, so the
+        // policy must not scale down — and therefore cannot flap.
+        let cfg = SloCfg {
+            window: 100,
+            policy: Policy::Hysteresis { idle_windows: 4, headroom: 0.7 },
+            ..SloCfg::new(100.0, 5)
+        };
+        let mut c = SloController::new(cfg);
+        let v = EngineView { can_scale_down: true, ..up(true) };
+        let (mut downs, mut ups) = (0, 0);
+        for w in 0..400 {
+            let lat = if w % 2 == 0 { 500.0 } else { 10.0 };
+            for _ in 0..100 {
+                match c.on_complete(lat, &v) {
+                    Some(SloAction::RemoveReplica) => downs += 1,
+                    Some(SloAction::Upgrade) | Some(SloAction::AddReplica) => ups += 1,
+                    _ => {}
+                }
+            }
+        }
+        assert!(ups > 0, "burned windows never drew a scale-up");
+        assert_eq!(downs, 0, "hysteresis flapped: {downs} scale-downs under bursts");
+    }
+
+    #[test]
+    fn predictive_preprovisions_before_the_diurnal_peak() {
+        // Peak offered load at t = 25 000 µs; every window is healthy, so
+        // a purely reactive policy would never act. The predictive policy
+        // must add capacity before the peak arrives.
+        let shape = TrafficShape::Diurnal { util: 0.6, amplitude: 0.5, period_us: 100_000.0 };
+        let cfg = SloCfg {
+            window: 100,
+            policy: Policy::Predictive { lead_us: 20_000.0, idle_windows: 4 },
+            shape: Some(shape),
+            ..SloCfg::new(100.0, 11)
+        };
+        let mut c = SloController::new(cfg);
+        let mut first_add: Option<f64> = None;
+        let mut t = 0.0;
+        for _ in 0..3_000 {
+            t += 5.0;
+            let v = EngineView { now_us: t, can_scale_down: true, ..up(true) };
+            if let Some(SloAction::AddReplica) = c.on_complete(10.0, &v) {
+                first_add.get_or_insert(t);
+            }
+        }
+        let t_add = first_add.expect("predictive policy never pre-provisioned");
+        assert!(t_add < 25_000.0, "pre-provision at {t_add} µs is after the peak");
+        assert_eq!(c.violated, 0, "windows were healthy by construction");
+    }
+
+    #[test]
+    fn cost_aware_respects_the_metadata_budget_cap() {
+        let mk = || {
+            SloController::new(SloCfg {
+                window: 100,
+                policy: Policy::CostAware { budget_bytes: 1_000, idle_windows: 4 },
+                ..SloCfg::new(10.0, 7)
+            })
+        };
+        // Upgrading fits the budget, adding a replica would bust it: the
+        // policy must always steer to the fitting lever.
+        let mut c = mk();
+        let v = EngineView {
+            metadata_bytes: 600,
+            upgrade_meta_delta: 300,
+            scale_up_meta_delta: 600,
+            ..up(true)
+        };
+        let mut acts = Vec::new();
+        for _ in 0..2_000 {
+            if let Some(a) = c.on_complete(100.0, &v) {
+                acts.push(a);
+            }
+        }
+        assert!(!acts.is_empty(), "budget-fitting lever never used");
+        assert!(
+            acts.iter().all(|a| *a == SloAction::Upgrade),
+            "chose a lever that busts the budget: {acts:?}"
+        );
+        // Both levers over budget: the policy must hold back entirely.
+        let mut c = mk();
+        let v = EngineView {
+            metadata_bytes: 900,
+            upgrade_meta_delta: 200,
+            scale_up_meta_delta: 600,
+            ..up(true)
+        };
+        for _ in 0..2_000 {
+            assert_eq!(c.on_complete(100.0, &v), None, "acted over budget");
+        }
+        // Over budget on healthy windows: reclaims via downgrade.
+        let mut c = mk();
+        let v = EngineView {
+            metadata_bytes: 1_500,
+            can_downgrade: true,
+            can_scale_down: true,
+            ..up(true)
+        };
+        let mut reclaimed = false;
+        for _ in 0..500 {
+            if c.on_complete(1.0, &v) == Some(SloAction::Downgrade) {
+                reclaimed = true;
+            }
+        }
+        assert!(reclaimed, "over-budget footprint never reclaimed");
     }
 }

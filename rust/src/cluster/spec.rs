@@ -1,10 +1,11 @@
 //! Declarative cluster-scenario specs: a JSON document (serde-free, via
 //! [`crate::util::json`], same discipline as `campaign::spec`) naming a
 //! request-DAG topology, the prefetcher configs to evaluate, the traffic
-//! shapes to offer, and the SLO — expanded by [`super::run_spec`] into
-//! (config × shape) scenarios plus an optional adaptive scenario driven
-//! by the SLO control loop.
+//! shapes to offer, the SLO, and the autoscaler policies — expanded by
+//! [`super::run_spec`] into (config × shape) scenarios plus one
+//! control-loop scenario per (policy × shape).
 
+use super::slo::Policy;
 use super::topology::{ServiceSpec, Topology};
 use super::workload::TrafficShape;
 use crate::cli::parse_prefetcher;
@@ -36,8 +37,13 @@ pub struct ClusterSpec {
     /// Offered load as a fraction of the slowest measured (baseline)
     /// config's bottleneck rate; shapes scale relative to this.
     pub utilization: f64,
-    /// Also run the SLO-control-loop scenario per traffic shape.
+    /// Legacy flag: also run the reactive-control-loop scenario per
+    /// traffic shape (shorthand for `policies: ["reactive"]`; mutually
+    /// exclusive with an explicit `policies` list).
     pub adaptive: bool,
+    /// Autoscaler policies ([`Policy::parse`] syntax) — one control-loop
+    /// scenario per (policy × traffic shape).
+    pub policies: Vec<String>,
 }
 
 impl Default for ClusterSpec {
@@ -53,6 +59,7 @@ impl Default for ClusterSpec {
             slo_us: 0.0,
             utilization: 1.0,
             adaptive: false,
+            policies: Vec::new(),
         }
     }
 }
@@ -95,7 +102,33 @@ impl ClusterSpec {
                 bail!("cluster '{}': duplicate traffic shape '{t}'", self.name);
             }
         }
+        if self.adaptive && !self.policies.is_empty() {
+            bail!(
+                "cluster '{}': set either 'adaptive' or 'policies', not both \
+                 (adaptive is shorthand for policies = [\"reactive\"])",
+                self.name
+            );
+        }
+        let mut seen = std::collections::HashSet::new();
+        for p in &self.policies {
+            let policy = Policy::parse(p).with_context(|| format!("in cluster '{}'", self.name))?;
+            if !seen.insert(policy.label()) {
+                bail!("cluster '{}': duplicate policy '{p}'", self.name);
+            }
+        }
         Ok(())
+    }
+
+    /// Parsed autoscaler policies: the explicit `policies` list, or the
+    /// legacy `adaptive` flag mapped to a single reactive policy.
+    pub fn effective_policies(&self) -> Result<Vec<Policy>> {
+        if !self.policies.is_empty() {
+            self.policies.iter().map(|p| Policy::parse(p)).collect()
+        } else if self.adaptive {
+            Ok(vec![Policy::Reactive])
+        } else {
+            Ok(Vec::new())
+        }
     }
 
     /// Distinct (app, prefetcher-label) pairs needing an IPC measurement.
@@ -115,10 +148,15 @@ impl ClusterSpec {
         out
     }
 
-    /// Scenario count: prefetchers × shapes, plus shapes again when the
-    /// adaptive scenario is enabled.
+    /// Scenario count: prefetchers × shapes, plus shapes again per
+    /// autoscaler policy.
     pub fn scenario_count(&self) -> usize {
-        (self.prefetchers.len() + usize::from(self.adaptive)) * self.traffic.len()
+        let n_pol = if self.policies.is_empty() {
+            usize::from(self.adaptive)
+        } else {
+            self.policies.len()
+        };
+        (self.prefetchers.len() + n_pol) * self.traffic.len()
     }
 
     // ---------- JSON (de)serialization ----------
@@ -160,6 +198,10 @@ impl ClusterSpec {
             ("slo_us", Json::num(self.slo_us)),
             ("utilization", Json::num(self.utilization)),
             ("adaptive", Json::Bool(self.adaptive)),
+            (
+                "policies",
+                Json::Arr(self.policies.iter().map(|p| Json::str(p)).collect()),
+            ),
         ])
     }
 
@@ -247,6 +289,9 @@ impl ClusterSpec {
         if let Some(v) = j.get("adaptive").and_then(Json::as_bool) {
             spec.adaptive = v;
         }
+        if let Some(p) = strings("policies")? {
+            spec.policies = p;
+        }
         spec.validate()?;
         Ok(spec)
     }
@@ -300,6 +345,7 @@ mod tests {
             slo_us: 0.0,
             utilization: 1.0,
             adaptive: true,
+            policies: Vec::new(),
         }
     }
 
@@ -341,6 +387,37 @@ mod tests {
         let mut bad = small();
         bad.prefetchers = vec!["nl".into(), "NL".into()];
         assert!(bad.validate().is_err(), "case-normalized duplicate not caught");
+
+        let mut bad = small();
+        bad.adaptive = false;
+        bad.policies = vec!["chaos-monkey".into()];
+        assert!(bad.validate().is_err(), "unknown policy not caught");
+
+        let mut bad = small();
+        bad.policies = vec!["reactive".into()];
+        assert!(bad.validate().is_err(), "adaptive + policies must conflict");
+
+        let mut bad = small();
+        bad.adaptive = false;
+        bad.policies = vec!["reactive".into(), "REACTIVE".into()];
+        assert!(bad.validate().is_err(), "duplicate policy not caught");
+    }
+
+    #[test]
+    fn policy_axis_counts_and_roundtrips() {
+        let mut s = small();
+        s.adaptive = false;
+        s.policies =
+            vec!["reactive".into(), "hysteresis".into(), "cost-aware:262144".into()];
+        assert!(s.validate().is_ok());
+        // (2 prefetchers + 3 policies) × 2 shapes.
+        assert_eq!(s.scenario_count(), 10);
+        assert_eq!(s.effective_policies().unwrap().len(), 3);
+        let back = ClusterSpec::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        // Legacy adaptive flag maps to one reactive policy.
+        let legacy = small();
+        assert_eq!(legacy.effective_policies().unwrap(), vec![Policy::Reactive]);
     }
 
     #[test]

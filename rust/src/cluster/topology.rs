@@ -136,14 +136,15 @@ impl Topology {
         Ok(order)
     }
 
-    /// Resolve into a runnable topology. `ipc_of(app, label)` returns the
-    /// measured IPC for a (service app, prefetcher config) pair; one
-    /// candidate service time is derived per label, in `labels` order
-    /// (the engine starts every service at candidate 0, and the SLO
-    /// control loop may advance to later — faster — candidates).
-    pub fn resolve<F>(&self, labels: &[String], ipc_of: F) -> Result<ResolvedTopology>
+    /// Resolve into a runnable topology. `measure_of(app, label)` returns
+    /// the measured [`Measure`] (IPC + metadata footprint) for a
+    /// (service app, prefetcher config) pair; one candidate service time
+    /// is derived per label, in `labels` order (the engine starts every
+    /// service at candidate 0, and the SLO control loop may advance to
+    /// later — faster — candidates).
+    pub fn resolve<F>(&self, labels: &[String], measure_of: F) -> Result<ResolvedTopology>
     where
-        F: Fn(&str, &str) -> Option<f64>,
+        F: Fn(&str, &str) -> Option<Measure>,
     {
         self.validate()?;
         if labels.is_empty() {
@@ -154,16 +155,17 @@ impl Topology {
         for s in &self.services {
             let mut candidates = Vec::with_capacity(labels.len());
             for label in labels {
-                let ipc = ipc_of(&s.app, label).ok_or_else(|| {
+                let m = measure_of(&s.app, label).ok_or_else(|| {
                     anyhow::anyhow!("no IPC measurement for ({}, {label})", s.app)
                 })?;
-                if ipc <= 0.0 {
+                if m.ipc <= 0.0 {
                     bail!("non-positive IPC for ({}, {label})", s.app);
                 }
-                let cycles = s.instrs_per_req / ipc;
+                let cycles = s.instrs_per_req / m.ipc;
                 candidates.push(Candidate {
                     label: label.clone(),
                     mean_us: cycles / (self.freq_ghz * 1000.0),
+                    metadata_bytes: m.metadata_bytes,
                 });
             }
             services.push(ResolvedService {
@@ -186,11 +188,31 @@ impl Topology {
     }
 }
 
+/// One measured (IPC, metadata footprint) pair for an (app, config)
+/// cell — what [`Topology::resolve`] turns into a [`Candidate`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Measure {
+    pub ipc: f64,
+    /// Prefetcher metadata bytes per replica running this config.
+    pub metadata_bytes: u64,
+}
+
+impl Measure {
+    /// An IPC-only measurement (no metadata cost), for call sites that
+    /// predate the cost-aware policies (figures, tail evaluation).
+    pub fn ipc_only(ipc: f64) -> Measure {
+        Measure { ipc, metadata_bytes: 0 }
+    }
+}
+
 /// One runnable service-time option (a prefetcher config's effect).
 #[derive(Clone, Debug)]
 pub struct Candidate {
     pub label: String,
     pub mean_us: f64,
+    /// Metadata footprint per replica at this config (cost-aware
+    /// policies budget against the sum across live replicas).
+    pub metadata_bytes: u64,
 }
 
 /// A service ready for the event loop.
@@ -234,6 +256,7 @@ impl ResolvedTopology {
                 candidates: vec![Candidate {
                     label: "static".into(),
                     mean_us: instrs_per_req / ipc / (freq_ghz * 1000.0),
+                    metadata_bytes: 0,
                 }],
                 children: if i + 1 < n { vec![(i + 1) as u32] } else { Vec::new() },
                 indegree: u32::from(i > 0),
@@ -348,7 +371,7 @@ mod tests {
 
     fn resolved() -> ResolvedTopology {
         // IPC 2.0 everywhere, one candidate.
-        diamond().resolve(&["nl".into()], |_, _| Some(2.0)).unwrap()
+        diamond().resolve(&["nl".into()], |_, _| Some(Measure::ipc_only(2.0))).unwrap()
     }
 
     #[test]
@@ -404,17 +427,26 @@ mod tests {
         let t = diamond();
         let r = t
             .resolve(&["nl".into(), "ceip256".into()], |_, label| {
-                Some(if label == "nl" { 2.0 } else { 2.4 })
+                Some(if label == "nl" {
+                    Measure { ipc: 2.0, metadata_bytes: 64 }
+                } else {
+                    Measure { ipc: 2.4, metadata_bytes: 25_000 }
+                })
             })
             .unwrap();
         assert!(r.bottleneck_rate_at(1) > r.bottleneck_rate_at(0));
+        // Metadata footprints ride along per candidate.
+        assert_eq!(r.services[0].candidates[0].metadata_bytes, 64);
+        assert_eq!(r.services[0].candidates[1].metadata_bytes, 25_000);
     }
 
     #[test]
     fn resolve_fails_on_missing_ipc() {
         let t = diamond();
         assert!(t
-            .resolve(&["nl".into()], |app, _| (app != "serde").then_some(2.0))
+            .resolve(&["nl".into()], |app, _| {
+                (app != "serde").then_some(Measure::ipc_only(2.0))
+            })
             .is_err());
     }
 
@@ -426,7 +458,7 @@ mod tests {
             2.5,
         );
         assert!(t.validate().is_ok());
-        let r = t.resolve(&["nl".into()], |_, _| Some(2.0)).unwrap();
+        let r = t.resolve(&["nl".into()], |_, _| Some(Measure::ipc_only(2.0))).unwrap();
         // Chain: zero-load = sum of node means, bottleneck = slowest node.
         assert!((r.zero_load_us() - 15.0).abs() < 1e-9);
         assert!((r.bottleneck_rate() - 0.2).abs() < 1e-9);

@@ -3,7 +3,7 @@
 //! ```text
 //! slofetch figure <1|2|...|13|table1|summary|rpc|ablation|all> [--records N] [--seed S] [--out DIR] [--threads N]
 //! slofetch campaign --spec FILE [--threads N] [--out results.jsonl]
-//! slofetch cluster --spec FILE [--threads N]
+//! slofetch cluster --spec FILE [--threads N] [--policies reactive,hysteresis,...]
 //! slofetch simulate --app websearch --prefetcher ceip256 [--records N] [--ml] [--budget N]
 //! slofetch gen-trace --app websearch --records N --out trace.slft
 //! slofetch deploy --app admission --candidate cheip2k [--records N]
@@ -58,7 +58,7 @@ fn dispatch(args: &Args) -> Result<()> {
 const USAGE: &str = "usage:
   slofetch figure <1..13|table1|summary|rpc|ablation|all> [--records N] [--seed S] [--out DIR] [--threads N]
   slofetch campaign --spec FILE [--threads N] [--out results.jsonl]
-  slofetch cluster --spec FILE [--threads N]
+  slofetch cluster --spec FILE [--threads N] [--policies reactive,hysteresis,predictive,cost-aware]
   slofetch simulate --app A --prefetcher P [--records N] [--ml] [--adapt-window] [--budget N] [--pjrt]
   slofetch gen-trace --app A --records N --out FILE
   slofetch deploy --app A --candidate P [--records N]
@@ -156,7 +156,15 @@ fn cmd_campaign(args: &Args) -> Result<()> {
 
 fn cmd_cluster(args: &Args) -> Result<()> {
     let spec_path = args.opt("spec").context("--spec FILE required")?;
-    let spec = slofetch::cluster::ClusterSpec::load(std::path::Path::new(spec_path))?;
+    let mut spec = slofetch::cluster::ClusterSpec::load(std::path::Path::new(spec_path))?;
+    // `--policies a,b,c` overrides the spec's autoscaler scenarios
+    // (replacing a legacy `adaptive` flag too); re-validated so a typo
+    // fails before any simulation runs.
+    if let Some(policies) = args.list_opt("policies") {
+        spec.adaptive = false;
+        spec.policies = policies;
+        spec.validate()?;
+    }
     let threads = args.threads()?;
     let t0 = std::time::Instant::now();
     let out = slofetch::cluster::run_spec(&spec, threads)?;

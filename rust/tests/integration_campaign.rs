@@ -18,7 +18,27 @@ fn spec() -> CampaignSpec {
         ml: vec![false],
         churn_scale: vec![1.0],
         traffic: vec!["none".into()],
+        clusters: Vec::new(),
+        policies: vec!["reactive".into()],
     }
+}
+
+fn small_cluster() -> slofetch::cluster::ClusterSpec {
+    let j = slofetch::util::json::Json::parse(
+        r#"{
+            "name": "edge",
+            "services": [
+                {"name": "gw", "app": "admission"},
+                {"name": "be", "app": "serde", "deps": ["gw"]}
+            ],
+            "prefetchers": ["nl", "ceip256"],
+            "traffic": ["poisson:0.6"],
+            "requests": 6000,
+            "records": 8000
+        }"#,
+    )
+    .unwrap();
+    slofetch::cluster::ClusterSpec::from_json(&j).unwrap()
 }
 
 fn tmp(name: &str) -> PathBuf {
@@ -107,6 +127,58 @@ fn traffic_axis_store_is_byte_identical_across_thread_counts() {
     }
     std::fs::remove_file(&p1).ok();
     std::fs::remove_file(&p4).ok();
+}
+
+#[test]
+fn cluster_axis_store_is_byte_identical_and_resumes_from_old_stores() {
+    let base = spec();
+    let extended = CampaignSpec {
+        clusters: vec![small_cluster()],
+        policies: vec!["reactive".into(), "hysteresis".into(), "cost-aware:262144".into()],
+        ..base.clone()
+    };
+    let p1 = tmp("cluster1.jsonl");
+    let p4 = tmp("cluster4.jsonl");
+    {
+        let mut s = ResultStore::open(&p1).unwrap();
+        let out = campaign::run_to_store(&extended, 1, &mut s).unwrap();
+        // 6 sim cells + 3 policies × 1 shape.
+        assert_eq!(out.computed, 9);
+    }
+    {
+        let mut s = ResultStore::open(&p4).unwrap();
+        campaign::run_to_store(&extended, 4, &mut s).unwrap();
+    }
+    let b1 = std::fs::read(&p1).unwrap();
+    assert_eq!(b1, std::fs::read(&p4).unwrap(), "cluster axis broke determinism");
+
+    // Rerun against the store: zero recomputed cells, file untouched.
+    {
+        let mut s = ResultStore::open(&p1).unwrap();
+        assert_eq!(s.cluster_records().len(), 3);
+        let again = campaign::run_to_store(&extended, 2, &mut s).unwrap();
+        assert_eq!(again.computed, 0, "resume recomputed cells");
+        assert_eq!(again.skipped, 9);
+    }
+    assert_eq!(std::fs::read(&p1).unwrap(), b1, "pure resume rewrote the store");
+
+    // A pre-cluster store resumes too: its sim cells are skipped and
+    // only the new cluster cells compute.
+    let pold = tmp("precluster.jsonl");
+    {
+        let mut s = ResultStore::open(&pold).unwrap();
+        assert_eq!(campaign::run_to_store(&base, 2, &mut s).unwrap().computed, 6);
+    }
+    {
+        let mut s = ResultStore::open(&pold).unwrap();
+        let out = campaign::run_to_store(&extended, 2, &mut s).unwrap();
+        assert_eq!(out.computed, 3, "only cluster cells should compute");
+        assert_eq!(out.skipped, 6);
+        assert_eq!(s.cluster_records().len(), 3);
+    }
+    std::fs::remove_file(&p1).ok();
+    std::fs::remove_file(&p4).ok();
+    std::fs::remove_file(&pold).ok();
 }
 
 #[test]

@@ -1,10 +1,11 @@
-//! Cluster-simulator integration tests (DESIGN.md §8): (a) the shipped
-//! `examples/cluster.json` spec runs ≥1M requests across a fan-out DAG
-//! under ≥2 traffic shapes with output identical across `--threads`
-//! values and reruns, (b) the degenerate linear-chain topology
-//! reproduces the `rpc` figure's qualitative ordering (faster
-//! prefetcher ⇒ tighter P99), and (c) the SLO control loop reduces P99
-//! burn versus a static config in a bursty scenario.
+//! Cluster-simulator integration tests (DESIGN.md §8/§9): (a) the
+//! shipped `examples/cluster.json` spec runs ≥1M requests across a
+//! fan-out DAG under ≥2 traffic shapes and the full autoscaler policy
+//! suite, with output identical across `--threads` values and reruns,
+//! (b) the degenerate linear-chain topology reproduces the `rpc`
+//! figure's qualitative ordering (faster prefetcher ⇒ tighter P99), and
+//! (c) the reactive control loop reduces P99 burn versus a static
+//! config in a bursty scenario.
 
 use slofetch::cluster::{self, engine, ClusterSpec, ResolvedTopology, RunParams, TrafficShape};
 use std::path::Path;
@@ -92,7 +93,7 @@ fn control_loop_reduces_p99_burn_in_the_bursty_scenario() {
             .unwrap_or_else(|| panic!("missing burst scenario for {label}"))
     };
     let stat = find("nl");
-    let adap = find("adaptive");
+    let adap = find("reactive");
     assert!(stat.violated_windows > 0, "burst scenario never burned — not a stress test");
     assert!(!adap.actions.is_empty(), "control loop never acted");
     assert!(
@@ -109,6 +110,27 @@ fn control_loop_reduces_p99_burn_in_the_bursty_scenario() {
         adap.p99_us,
         stat.p99_us
     );
+}
+
+#[test]
+fn policy_suite_covers_every_policy_and_shape() {
+    // The shipped spec lists all four autoscaler policies; each must
+    // produce one scenario per traffic shape with sane results and
+    // non-zero capacity accounting.
+    let spec = example_spec();
+    assert_eq!(spec.effective_policies().unwrap().len(), 4);
+    let out = outcome();
+    for prefix in ["reactive", "hysteresis", "predictive", "cost-aware"] {
+        let rows: Vec<_> =
+            out.scenarios.iter().filter(|s| s.label.starts_with(prefix)).collect();
+        assert_eq!(rows.len(), 2, "policy '{prefix}' is missing a traffic shape");
+        for s in rows {
+            assert_eq!(s.requests, spec.requests, "{}: lost requests", s.label);
+            assert!(s.p50_us <= s.p95_us && s.p95_us <= s.p99_us, "{}", s.label);
+            assert!(s.replica_us > 0.0, "{}: no replica-seconds", s.label);
+            assert!(s.duration_us > 0.0, "{}", s.label);
+        }
+    }
 }
 
 #[test]
