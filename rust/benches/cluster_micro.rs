@@ -21,6 +21,7 @@ fn chain(n: usize) -> ResolvedTopology {
                 label: "static".into(),
                 mean_us: 5.0,
                 metadata_bytes: 0,
+                table: None,
             }],
             children: if i + 1 < n { vec![(i + 1) as u32] } else { Vec::new() },
             indegree: u32::from(i > 0),
@@ -39,6 +40,7 @@ fn fanout() -> ResolvedTopology {
                 label: "static".into(),
                 mean_us: mean,
                 metadata_bytes: 0,
+                table: None,
             }],
             children,
             indegree,
@@ -63,7 +65,7 @@ fn bench(name: &str, topo: &ResolvedTopology, shape: &TrafficShape, requests: u6
         slo_us: topo.zero_load_us() * 4.0,
         base_rate_per_us: topo.bottleneck_rate() * 0.7,
     };
-    let (r, secs) = time_it(|| engine::run(topo, shape, &params, None));
+    let (r, secs) = time_it(|| engine::run(topo, shape, &params, None).unwrap());
     assert_eq!(r.requests, requests);
     let events_per_sec = r.events as f64 / secs;
     println!(

@@ -194,11 +194,18 @@ pub fn run_to_store(
             // if traffic axes grow — see ROADMAP "cluster-scale
             // campaign axis").
             if let Some(shape) = &meta.traffic {
-                let t = crate::cluster::evaluate_tail(
+                let t = match crate::cluster::evaluate_tail(
                     rec.ipc,
                     shape,
                     spec::cell_seed(meta.cell.trace_seed, &meta.key),
-                );
+                ) {
+                    Ok(t) => t,
+                    Err(e) => {
+                        // Same cancellation path as a store I/O failure.
+                        io_err = Some(e);
+                        return false;
+                    }
+                };
                 rec.tail = Some(TailRecord {
                     traffic: shape.label(),
                     p50_us: t.p50_us,
@@ -250,12 +257,14 @@ pub fn run_to_store(
             &c.shape,
         )
     });
-    for (c, r) in cpending.iter().zip(&results) {
+    for (c, r) in cpending.iter().zip(results.into_iter()) {
+        let cluster = &spec.clusters[c.cluster];
         let rec = ClusterCellRecord::from_result(
             &c.key,
-            &spec.clusters[c.cluster].name,
+            &cluster.name,
             &c.policy.label(),
-            r,
+            &cluster.service_times,
+            &r?,
         );
         if store.push_cluster(rec)? {
             computed += 1;
@@ -421,6 +430,30 @@ mod tests {
         let again = run_to_store(&spec, 4, &mut store).unwrap();
         assert_eq!(again, CampaignOutcome { total: 6, computed: 0, skipped: 6 });
         assert_eq!(store.len(), 6);
+    }
+
+    #[test]
+    fn empirical_cluster_cells_are_labelled_and_resume() {
+        let mut cluster = tiny_cluster();
+        cluster.service_times = "empirical".into();
+        let spec = CampaignSpec {
+            clusters: vec![cluster],
+            policies: vec!["reactive".into()],
+            ..quick_spec()
+        };
+        let mut store = ResultStore::in_memory();
+        let out = run_to_store(&spec, 2, &mut store).unwrap();
+        assert_eq!(out.computed, 5); // 4 sim cells + 1 cluster cell
+        assert_eq!(store.cluster_records().len(), 1);
+        let rec = &store.cluster_records()[0];
+        assert_eq!(rec.service_times, "empirical");
+        assert!(rec.windows > 0 && rec.p99_us.is_finite());
+        // The report labels the model.
+        let table = report::cluster_table(&store).expect("cluster table missing");
+        assert_eq!(table.rows[0][3], "empirical");
+        // Resume: zero recomputed cells.
+        let again = run_to_store(&spec, 4, &mut store).unwrap();
+        assert_eq!(again.computed, 0, "empirical cluster cells recomputed on resume");
     }
 
     #[test]

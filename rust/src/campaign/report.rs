@@ -233,6 +233,7 @@ pub fn cluster_table(store: &ResultStore) -> Option<Table> {
             "cluster",
             "policy",
             "traffic",
+            "model",
             "P99 µs",
             "compliance",
             "burn",
@@ -248,6 +249,7 @@ pub fn cluster_table(store: &ResultStore) -> Option<Table> {
             r.cluster.clone(),
             r.policy.clone(),
             r.traffic.clone(),
+            r.service_times.clone(),
             f2(r.p99_us),
             pct(r.compliance),
             format!("{}/{}", r.violated_windows, r.windows),
@@ -258,23 +260,28 @@ pub fn cluster_table(store: &ResultStore) -> Option<Table> {
     }
     t.note(
         "burn = windows below target compliance / windows evaluated; replica·s = \
-         ∫ provisioned replicas dt; metadata = time-averaged footprint",
+         ∫ provisioned replicas dt; metadata = time-averaged footprint; model = \
+         service-time source (analytic mean+cv vs trace-replayed empirical)",
     );
     Some(t)
 }
 
-/// Policy ranking per (cluster, traffic) group: fewest burned windows
-/// first, cheapest replica-seconds on ties, then P99. `None` without a
-/// cluster axis.
+/// Policy ranking per (cluster, traffic, service-time model) group:
+/// fewest burned windows first, cheapest replica-seconds on ties, then
+/// P99. Grouping by model keeps analytic and empirical rows of the same
+/// scenario — both present after flipping `service_times` against an
+/// existing store — from being ranked against each other. `None`
+/// without a cluster axis.
 pub fn cluster_ranking(store: &ResultStore) -> Option<Table> {
     let recs = store.cluster_records();
     if recs.is_empty() {
         return None;
     }
     // Group in first-seen (expansion) order.
-    let mut groups: Vec<((String, String), Vec<&ClusterCellRecord>)> = Vec::new();
+    type RankKey = (String, String, String);
+    let mut groups: Vec<(RankKey, Vec<&ClusterCellRecord>)> = Vec::new();
     for r in recs {
-        let k = (r.cluster.clone(), r.traffic.clone());
+        let k = (r.cluster.clone(), r.traffic.clone(), r.service_times.clone());
         match groups.iter_mut().find(|(g, _)| *g == k) {
             Some((_, v)) => v.push(r),
             None => groups.push((k, vec![r])),
@@ -282,10 +289,10 @@ pub fn cluster_ranking(store: &ResultStore) -> Option<Table> {
     }
     let mut t = Table::new(
         "campaign_cluster_rank",
-        "Autoscaler policy ranking per (cluster, traffic)",
-        &["cluster", "traffic", "rank", "policy", "burn", "replica·s", "P99 µs"],
+        "Autoscaler policy ranking per (cluster, traffic, model)",
+        &["cluster", "traffic", "model", "rank", "policy", "burn", "replica·s", "P99 µs"],
     );
-    for ((cluster, traffic), mut v) in groups {
+    for ((cluster, traffic, model), mut v) in groups {
         v.sort_by(|a, b| {
             a.burn_rate()
                 .partial_cmp(&b.burn_rate())
@@ -297,6 +304,7 @@ pub fn cluster_ranking(store: &ResultStore) -> Option<Table> {
             t.row(vec![
                 cluster.clone(),
                 traffic.clone(),
+                model.clone(),
                 (i + 1).to_string(),
                 r.policy.clone(),
                 format!("{}/{}", r.violated_windows, r.windows),
@@ -426,6 +434,7 @@ mod tests {
             key: format!("cluster|web#0|{policy}|t{traffic}"),
             cluster: "web".into(),
             policy: policy.into(),
+            service_times: "empirical".into(),
             traffic: traffic.into(),
             requests: 50_000,
             slo_us: 100.0,
@@ -457,15 +466,35 @@ mod tests {
         s.push_cluster(crec("predictive:30000:4", "poisson:0.65", 1, 8.0e6)).unwrap();
         let t = cluster_table(&s).expect("cluster rows missing");
         assert_eq!(t.rows.len(), 3);
+        // Empirical cells are labelled as such.
+        assert_eq!(t.rows[0][3], "empirical");
+        assert!(t.markdown().contains("model"));
         let rank = cluster_ranking(&s).expect("ranking missing");
         assert_eq!(rank.rows.len(), 3);
         // Fewest burned windows wins; replica-seconds break the tie.
-        assert_eq!(rank.rows[0][3], "predictive:30000:4");
-        assert_eq!(rank.rows[1][3], "hysteresis:4:0.7");
-        assert_eq!(rank.rows[2][3], "reactive");
-        assert_eq!(rank.rows[0][2], "1");
+        assert_eq!(rank.rows[0][4], "predictive:30000:4");
+        assert_eq!(rank.rows[1][4], "hysteresis:4:0.7");
+        assert_eq!(rank.rows[2][4], "reactive");
+        assert_eq!(rank.rows[0][3], "1");
         // Both cluster tables ride along in reports().
         assert_eq!(reports(&s).len(), 5);
+
+        // A stale analytic row of the same (cluster, traffic) — the
+        // store state after flipping service_times and resuming — ranks
+        // in its own model group, never against the empirical rows.
+        let mut stale = crec("reactive", "poisson:0.65", 0, 1.0e6);
+        stale.key = "cluster|web#old|reactive|tpoisson:0.65".into();
+        stale.service_times = "analytic".into();
+        s.push_cluster(stale).unwrap();
+        let rank = cluster_ranking(&s).expect("ranking missing");
+        assert_eq!(rank.rows.len(), 4);
+        // The empirical group is unchanged (the 0-burn analytic row
+        // would otherwise have stolen rank 1)...
+        assert_eq!(rank.rows[0][4], "predictive:30000:4");
+        assert_eq!(rank.rows[0][2], "empirical");
+        // ...and the analytic row ranks first in its own group.
+        let ana = rank.rows.iter().find(|r| r[2] == "analytic").unwrap();
+        assert_eq!(ana[3], "1");
     }
 
     #[test]

@@ -13,8 +13,10 @@
 use crate::config::SimConfig;
 use crate::sim::engine::{self, SimResult};
 use crate::trace::gen::{apps::AppSpec, generate_records};
+use crate::trace::Record;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
+use std::sync::Arc;
 
 /// One runnable simulation cell. The app spec is fully resolved (churn
 /// knobs already applied) so workers never consult shared state.
@@ -26,12 +28,23 @@ pub struct Cell {
     pub cfg: SimConfig,
     pub records: u64,
     pub trace_seed: u64,
+    /// Pre-loaded trace records replacing generation (`.slft` replay in
+    /// the cluster layer). Shared read-only across workers; `None` =
+    /// generate from the app preset as usual.
+    pub trace: Option<Arc<Vec<Record>>>,
 }
 
 impl Cell {
     fn run(&self) -> SimResult {
-        let records = generate_records(&self.app, self.trace_seed, self.records);
-        let mut result = engine::run(&self.cfg, &records);
+        let generated;
+        let records: &[Record] = match &self.trace {
+            Some(t) => t,
+            None => {
+                generated = generate_records(&self.app, self.trace_seed, self.records);
+                &generated
+            }
+        };
+        let mut result = engine::run(&self.cfg, records);
         result.app = self.app.name.to_string();
         result.label = self.label.clone();
         result
@@ -147,7 +160,30 @@ mod tests {
             cfg: SimConfig { prefetcher: kind, ..Default::default() },
             records: 20_000,
             trace_seed: 5,
+            trace: None,
         }
+    }
+
+    #[test]
+    fn preloaded_trace_overrides_generation() {
+        use crate::trace::gen::generate_records;
+        let app = apps::app("crypto").unwrap();
+        // Records from a *different* app: the override must win.
+        let serde_records =
+            generate_records(&apps::app("serde").unwrap(), 5, 20_000);
+        let mut with_trace = cell("crypto", PrefetcherKind::NextLineOnly, "nl");
+        with_trace.trace = Some(std::sync::Arc::new(serde_records.clone()));
+        let plain = cell("crypto", PrefetcherKind::NextLineOnly, "nl");
+        let out = run_cells(&[with_trace, plain], 2);
+        // Reporting identity still comes from the app preset…
+        assert_eq!(out[0].app, app.name);
+        // …but the simulated stream is the preloaded one.
+        let direct = engine::run(
+            &SimConfig { prefetcher: PrefetcherKind::NextLineOnly, ..Default::default() },
+            &serde_records,
+        );
+        assert_eq!(out[0].stats.cycles, direct.stats.cycles);
+        assert_ne!(out[0].stats.cycles, out[1].stats.cycles);
     }
 
     #[test]

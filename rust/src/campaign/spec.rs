@@ -118,6 +118,21 @@ pub fn cell_seed(base: u64, key: &str) -> u64 {
     h
 }
 
+/// Stable 64-bit content hash of raw bytes (splitmix64 over 8-byte
+/// chunks) — folds `.slft` trace-file contents into cluster cell keys,
+/// so the empirical quantile tables (a pure function of spec JSON +
+/// trace bytes) invalidate stored lines whenever their inputs change.
+pub fn content_hash(bytes: &[u8]) -> u64 {
+    use crate::util::rng::mix64;
+    let mut h = mix64(bytes.len() as u64 ^ 0x7ACE_C0DE_5EED_F11E);
+    for chunk in bytes.chunks(8) {
+        let mut v = [0u8; 8];
+        v[..chunk.len()].copy_from_slice(chunk);
+        h = mix64(h ^ u64::from_le_bytes(v));
+    }
+    h
+}
+
 /// Apply a churn-intensity multiplier to an app preset.
 fn scaled_app(app: &AppSpec, scale: f64) -> AppSpec {
     let mut a = app.clone();
@@ -288,6 +303,7 @@ impl CampaignSpec {
                                         cfg,
                                         records: self.records,
                                         trace_seed: seed,
+                                        trace: None,
                                     },
                                 });
                             }
@@ -315,12 +331,38 @@ impl CampaignSpec {
     pub fn expand_clusters(&self) -> Result<Vec<ClusterCell>> {
         self.validate()?;
         let mut out = Vec::with_capacity(self.cluster_cell_count());
+        // Each distinct trace file is read and hashed once per expansion,
+        // however many services (or clusters) reference it.
+        let mut file_hashes: std::collections::HashMap<&str, u64> =
+            std::collections::HashMap::new();
         for (ci, cluster) in self.clusters.iter().enumerate() {
             // Content hash over the canonical spec JSON: editing any part
             // of the scenario definition (topology, prefetcher set,
             // requests, seed, ...) changes the key, so stale store lines
-            // are never mistaken for this cell.
-            let hash = cell_seed(0xC1A5_7E55, &cluster.to_json().dump());
+            // are never mistaken for this cell. Referenced `.slft` trace
+            // files fold in by *content*, not path: the empirical
+            // quantile tables are a pure function of (spec JSON, trace
+            // bytes), so editing a trace in place invalidates its cells
+            // the same way editing the spec does.
+            let mut hash = cell_seed(0xC1A5_7E55, &cluster.to_json().dump());
+            for s in &cluster.topology.services {
+                if let Some(path) = &s.trace {
+                    let fh = if let Some(h) = file_hashes.get(path.as_str()) {
+                        *h
+                    } else {
+                        let bytes = std::fs::read(path).with_context(|| {
+                            format!(
+                                "campaign '{}': cluster '{}' service '{}': hashing trace '{path}'",
+                                self.name, cluster.name, s.name
+                            )
+                        })?;
+                        let h = content_hash(&bytes);
+                        file_hashes.insert(path.as_str(), h);
+                        h
+                    };
+                    hash = crate::util::rng::mix64(hash ^ fh);
+                }
+            }
             for pol in &self.policies {
                 let policy = Policy::parse(pol)?;
                 for t in &cluster.traffic {
@@ -695,6 +737,55 @@ mod tests {
         }
         // The sim-cell matrix is untouched by the cluster axis.
         assert_eq!(spec.expand().unwrap().len(), small().expand().unwrap().len());
+    }
+
+    #[test]
+    fn trace_file_content_feeds_the_cluster_cell_hash() {
+        let dir = std::env::temp_dir().join("slofetch_campaign_spec_trace");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("hashme.slft");
+        let meta = crate::trace::TraceMeta {
+            app: "serde".into(),
+            seed: 1,
+            line_bytes: 64,
+            records: 2,
+        };
+        let recs =
+            vec![crate::trace::Record::fetch(10, 16, 1), crate::trace::Record::fetch(11, 16, 2)];
+        crate::trace::codec::write_trace_file(&path, &meta, &recs).unwrap();
+
+        let mut cluster = tiny_cluster("edge");
+        cluster.service_times = "empirical".into();
+        cluster.topology.services[1].trace = Some(path.to_string_lossy().into_owned());
+        let spec = CampaignSpec { clusters: vec![cluster], ..small() };
+        let keys: Vec<String> =
+            spec.expand_clusters().unwrap().iter().map(|c| c.key.clone()).collect();
+        // Same content → same keys (stores resume).
+        let again: Vec<String> =
+            spec.expand_clusters().unwrap().iter().map(|c| c.key.clone()).collect();
+        assert_eq!(keys, again);
+        // Rewriting the trace with different records changes every key,
+        // even though the spec JSON (and the path) is unchanged.
+        let recs2 = vec![
+            crate::trace::Record::fetch(10, 16, 1),
+            crate::trace::Record::fetch(99, 16, 2),
+        ];
+        crate::trace::codec::write_trace_file(&path, &meta, &recs2).unwrap();
+        let rehashed: Vec<String> =
+            spec.expand_clusters().unwrap().iter().map(|c| c.key.clone()).collect();
+        for (a, b) in keys.iter().zip(&rehashed) {
+            assert_ne!(a, b, "trace content edit did not invalidate the cell key");
+        }
+        // A missing trace file is a clear error, not a silent skip.
+        std::fs::remove_file(&path).unwrap();
+        assert!(spec.expand_clusters().is_err());
+
+        // content_hash itself: deterministic, content-sensitive,
+        // length-sensitive (chunk padding must not alias).
+        assert_eq!(content_hash(b"abc"), content_hash(b"abc"));
+        assert_ne!(content_hash(b"abc"), content_hash(b"abd"));
+        assert_ne!(content_hash(b"abc\0"), content_hash(b"abc"));
+        assert_ne!(content_hash(b""), content_hash(b"\0"));
     }
 
     #[test]

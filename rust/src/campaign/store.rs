@@ -268,6 +268,10 @@ pub struct ClusterCellRecord {
     pub policy: String,
     /// Normalized traffic-shape label.
     pub traffic: String,
+    /// Service-time model the scenario ran under (`"analytic"` or
+    /// `"empirical"`); lines written before the model existed reload as
+    /// `"analytic"`.
+    pub service_times: String,
     pub requests: u64,
     pub slo_us: f64,
     pub p50_us: f64,
@@ -291,11 +295,18 @@ pub struct ClusterCellRecord {
 }
 
 impl ClusterCellRecord {
-    pub fn from_result(key: &str, cluster: &str, policy: &str, r: &ClusterResult) -> Self {
+    pub fn from_result(
+        key: &str,
+        cluster: &str,
+        policy: &str,
+        service_times: &str,
+        r: &ClusterResult,
+    ) -> Self {
         ClusterCellRecord {
             key: key.to_string(),
             cluster: cluster.to_string(),
             policy: policy.to_string(),
+            service_times: service_times.to_string(),
             traffic: r.traffic.clone(),
             requests: r.requests,
             slo_us: r.slo_us,
@@ -330,6 +341,7 @@ impl ClusterCellRecord {
             ("key", Json::str(&self.key)),
             ("cluster", Json::str(&self.cluster)),
             ("policy", Json::str(&self.policy)),
+            ("service_times", Json::str(&self.service_times)),
             ("traffic", Json::str(&self.traffic)),
             ("requests", Json::num(self.requests as f64)),
             ("slo_us", Json::num(self.slo_us)),
@@ -373,6 +385,12 @@ impl ClusterCellRecord {
             key: s("key")?,
             cluster: s("cluster")?,
             policy: s("policy")?,
+            // Absent on pre-empirical lines: those ran the analytic model.
+            service_times: j
+                .get("service_times")
+                .and_then(Json::as_str)
+                .unwrap_or("analytic")
+                .to_string(),
             traffic: s("traffic")?,
             requests: u("requests")?,
             slo_us: f("slo_us")?,
@@ -625,6 +643,7 @@ mod tests {
             key: key.into(),
             cluster: "frontend".into(),
             policy: policy.into(),
+            service_times: "analytic".into(),
             traffic: "poisson:0.65".into(),
             requests: 50_000,
             slo_us: 120.0,
@@ -646,13 +665,26 @@ mod tests {
 
     #[test]
     fn cluster_record_json_roundtrip_and_kind_tag() {
-        let r = crec("cluster|frontend#abc|reactive|tpoisson:0.65", "reactive");
+        let mut r = crec("cluster|frontend#abc|reactive|tpoisson:0.65", "reactive");
+        r.service_times = "empirical".into();
         let line = r.to_line();
         assert!(line.contains("\"kind\":\"cluster\""), "missing kind tag: {line}");
+        assert!(line.contains("\"service_times\":\"empirical\""), "model missing: {line}");
         let back =
             ClusterCellRecord::from_json(&Json::parse(&line).unwrap()).unwrap();
         assert_eq!(back, r);
         assert!((r.burn_rate() - 0.08).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pre_empirical_cluster_lines_reload_as_analytic() {
+        // Lines written before the service-time models have no
+        // "service_times" key; they ran the analytic model.
+        let r = crec("old-cluster", "reactive");
+        let line = r.to_line().replace(",\"service_times\":\"analytic\"", "");
+        assert!(!line.contains("service_times"), "test setup failed to strip the key");
+        let back = ClusterCellRecord::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, r);
     }
 
     #[test]

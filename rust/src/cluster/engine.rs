@@ -11,11 +11,13 @@
 //! order. Request state lives in a reusable slab — after warm-up the
 //! completion hot path performs no per-request allocation.
 
+use super::servicetime::ServiceTimeModel;
 use super::slo::{EngineView, SloAction, SloCfg, SloController};
 use super::topology::{Candidate, ResolvedTopology};
 use super::workload::{ArrivalGen, TrafficShape};
 use crate::util::percentile::Digest;
 use crate::util::rng::{mix64, Rng};
+use anyhow::{bail, Result};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
 
@@ -125,8 +127,11 @@ struct Svc {
     replicas: Vec<Replica>,
     /// Current candidate index (the SLO loop advances this).
     current: usize,
-    /// Cached `candidates[current].mean_us`.
-    mean_us: f64,
+    /// Cached `candidates[current].model(cv)` — analytic jitter or the
+    /// candidate's trace-replayed quantile table (DESIGN.md §8).
+    model: ServiceTimeModel,
+    /// The spec's analytic jitter knob (rebuilding `model` on
+    /// upgrade/downgrade needs it even when the table rides along).
     cv: f64,
     children: Vec<u32>,
 }
@@ -220,11 +225,10 @@ impl Sim {
     }
 
     fn sample_service(&mut self, svc: usize) -> f64 {
-        // Same lognormal-flavored jitter as the rpc tandem model.
-        let mean = self.svc[svc].mean_us;
-        let cv = self.svc[svc].cv;
-        let jitter = (cv * self.rng.normal() - 0.5 * cv * cv).exp();
-        mean * jitter.clamp(0.05, 8.0)
+        // Analytic: the same lognormal-flavored jitter as the rpc tandem
+        // model, bit-for-bit. Empirical: one inverse-CDF draw through the
+        // candidate's quantile table (the §8 one-draw rule).
+        self.svc[svc].model.sample(&mut self.rng)
     }
 
     fn dispatch(&mut self, svc: usize, slot: u32, now: f64) {
@@ -258,7 +262,7 @@ impl Sim {
         let mut best = 0usize;
         let mut worst_rate = f64::INFINITY;
         for (i, s) in self.svc.iter().enumerate() {
-            let rate = s.active_replicas() as f64 / s.mean_us;
+            let rate = s.active_replicas() as f64 / s.model.mean_us();
             if rate < worst_rate {
                 worst_rate = rate;
                 best = i;
@@ -288,7 +292,7 @@ impl Sim {
             if i == b || s.active_replicas() < 2 {
                 continue;
             }
-            let rate = s.active_replicas() as f64 / s.mean_us;
+            let rate = s.active_replicas() as f64 / s.model.mean_us();
             if best.map(|(_, r)| rate > r).unwrap_or(true) {
                 best = Some((i, rate));
             }
@@ -379,8 +383,9 @@ impl Sim {
                     - self.cands[b][cur].metadata_bytes as i64;
                 let n = self.svc[b].active_replicas() as i64;
                 self.meta_now = (self.meta_now as i64 + delta * n).max(0) as u64;
+                let cv = self.svc[b].cv;
                 self.svc[b].current = cur + 1;
-                self.svc[b].mean_us = self.cands[b][cur + 1].mean_us;
+                self.svc[b].model = self.cands[b][cur + 1].model(cv);
                 self.actions.push(ActionLog {
                     t_us: now,
                     service: self.names[b].clone(),
@@ -448,8 +453,9 @@ impl Sim {
             - self.cands[t][cur].metadata_bytes as i64;
         let n = self.svc[t].active_replicas() as i64;
         self.meta_now = (self.meta_now as i64 + delta * n).max(0) as u64;
+        let cv = self.svc[t].cv;
         self.svc[t].current = cur - 1;
-        self.svc[t].mean_us = self.cands[t][cur - 1].mean_us;
+        self.svc[t].model = self.cands[t][cur - 1].model(cv);
         self.actions.push(ActionLog {
             t_us: now,
             service: self.names[t].clone(),
@@ -532,15 +538,24 @@ impl Sim {
 
 /// Run one scenario to completion. `ctrl = None` tracks SLO burn but
 /// never acts (static config); `Some(cfg)` enables the control loop.
-/// Equal inputs produce bit-equal results on every run.
+/// Equal inputs produce bit-equal results on every run. Unrunnable
+/// parameters (0 requests, a non-positive reference or peak arrival
+/// rate) are errors, not hangs: a release build used to spin forever in
+/// `ArrivalGen::next_arrival` on a zero rate.
 pub fn run(
     topo: &ResolvedTopology,
     shape: &TrafficShape,
     params: &RunParams,
     ctrl: Option<SloCfg>,
-) -> ClusterResult {
-    assert!(params.requests > 0, "cluster run with 0 requests");
-    assert!(params.base_rate_per_us > 0.0, "non-positive reference rate");
+) -> Result<ClusterResult> {
+    if params.requests == 0 {
+        bail!("cluster run with 0 requests");
+    }
+    let gen = ArrivalGen::new(
+        shape.clone(),
+        params.base_rate_per_us,
+        mix64(params.seed ^ 0xA441_1A7E),
+    )?;
     let adaptive = ctrl.is_some();
     let mut ctrl_cfg =
         ctrl.unwrap_or_else(|| SloCfg::new(params.slo_us, mix64(params.seed ^ 0xC1A5_7E55)));
@@ -559,7 +574,7 @@ pub fn run(
             .map(|s| Svc {
                 replicas: (0..s.replicas).map(|_| Replica::default()).collect(),
                 current: 0,
-                mean_us: s.candidates[0].mean_us,
+                model: s.candidates[0].model(s.cv),
                 cv: s.cv,
                 children: s.children.clone(),
             })
@@ -571,11 +586,7 @@ pub fn run(
         heap: BinaryHeap::with_capacity(1024),
         seq: 0,
         rng: Rng::new(mix64(params.seed ^ 0x5E41_71CE)),
-        gen: ArrivalGen::new(
-            shape.clone(),
-            params.base_rate_per_us,
-            mix64(params.seed ^ 0xA441_1A7E),
-        ),
+        gen,
         slab: Slab::new(n),
         digest: Digest::with_capacity(params.requests as usize),
         met: 0,
@@ -602,7 +613,7 @@ pub fn run(
     let end = sim.last_event_us;
     sim.account(end);
     let mut digest = sim.digest;
-    ClusterResult {
+    Ok(ClusterResult {
         label: String::new(),
         traffic: shape.label(),
         requests: sim.completed,
@@ -628,7 +639,7 @@ pub fn run(
         meta_byte_us: sim.meta_byte_us,
         final_metadata_bytes: sim.meta_now,
         duration_us: sim.last_event_us,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -656,7 +667,7 @@ mod tests {
     fn completes_every_request_and_orders_percentiles() {
         let topo = chain(&[2.0, 1.5, 2.5]);
         let p = params(&topo, 0.6, 20_000, 1e9);
-        let r = run(&topo, &TrafficShape::Poisson { util: 1.0 }, &p, None);
+        let r = run(&topo, &TrafficShape::Poisson { util: 1.0 }, &p, None).unwrap();
         assert_eq!(r.requests, 20_000);
         assert!(r.events >= 20_000 * 4, "arrival + 3 completions per request");
         assert!(r.p50_us <= r.p95_us && r.p95_us <= r.p99_us && r.p99_us <= r.max_us);
@@ -670,8 +681,8 @@ mod tests {
         let topo = chain(&[2.0, 1.8]);
         let p = params(&topo, 0.7, 15_000, 50.0);
         let shape = TrafficShape::Burst { util: 1.0, mult: 2.0, period_us: 5_000.0, duty: 0.3 };
-        let a = run(&topo, &shape, &p, None);
-        let b = run(&topo, &shape, &p, None);
+        let a = run(&topo, &shape, &p, None).unwrap();
+        let b = run(&topo, &shape, &p, None).unwrap();
         assert_eq!(a.p99_us.to_bits(), b.p99_us.to_bits());
         assert_eq!(a.events, b.events);
         assert_eq!(a.compliance.to_bits(), b.compliance.to_bits());
@@ -680,8 +691,8 @@ mod tests {
             SloCfg::new(50.0, 7)
                 .with_policy(Policy::Hysteresis { idle_windows: 2, headroom: 0.8 })
         };
-        let c = run(&topo, &shape, &p, Some(cfg()));
-        let d = run(&topo, &shape, &p, Some(cfg()));
+        let c = run(&topo, &shape, &p, Some(cfg())).unwrap();
+        let d = run(&topo, &shape, &p, Some(cfg())).unwrap();
         assert_eq!(c.p99_us.to_bits(), d.p99_us.to_bits());
         assert_eq!(c.actions, d.actions);
         assert_eq!(c.replica_us.to_bits(), d.replica_us.to_bits());
@@ -692,7 +703,7 @@ mod tests {
     fn static_run_tracks_capacity_integrals() {
         let topo = chain(&[2.0, 1.8]);
         let p = params(&topo, 0.6, 10_000, 1e9);
-        let r = run(&topo, &TrafficShape::Poisson { util: 1.0 }, &p, None);
+        let r = run(&topo, &TrafficShape::Poisson { util: 1.0 }, &p, None).unwrap();
         assert!(r.duration_us > 0.0);
         // 2 static replicas for the whole run: ∫ = 2 × duration exactly.
         assert!((r.replica_us - 2.0 * r.duration_us).abs() < 1e-6 * r.duration_us);
@@ -714,8 +725,8 @@ mod tests {
             slo_us: 1e9,
             base_rate_per_us: lambda,
         };
-        let rs = run(&slow, &TrafficShape::Poisson { util: 1.0 }, &p(&slow), None);
-        let rf = run(&fast, &TrafficShape::Poisson { util: 1.0 }, &p(&fast), None);
+        let rs = run(&slow, &TrafficShape::Poisson { util: 1.0 }, &p(&slow), None).unwrap();
+        let rf = run(&fast, &TrafficShape::Poisson { util: 1.0 }, &p(&fast), None).unwrap();
         assert!(rf.p95_us < rs.p95_us, "p95 {} !< {}", rf.p95_us, rs.p95_us);
         assert!(rf.p99_us < rs.p99_us, "p99 {} !< {}", rf.p99_us, rs.p99_us);
     }
@@ -732,6 +743,7 @@ mod tests {
                 label: "static".into(),
                 mean_us: mean,
                 metadata_bytes: 0,
+                table: None,
             }],
             children,
             indegree: indeg,
@@ -745,7 +757,7 @@ mod tests {
             ],
         };
         let p = params(&topo, 0.2, 5_000, 1e9);
-        let r = run(&topo, &TrafficShape::Poisson { util: 1.0 }, &p, None);
+        let r = run(&topo, &TrafficShape::Poisson { util: 1.0 }, &p, None).unwrap();
         // cv=0 ⇒ at light load latency ≈ 1 + max(2, 9) + 1 = 11 µs.
         assert!(r.p50_us >= 11.0 - 1e-6, "p50 {} ignores the slow branch", r.p50_us);
         assert!(r.p50_us < 13.0, "p50 {} queues too much at 20% load", r.p50_us);
@@ -760,8 +772,8 @@ mod tests {
         two.services[0].replicas = 2;
         let lambda = one.bottleneck_rate() * 0.9;
         let p = RunParams { requests: 30_000, seed: 5, slo_us: 1e9, base_rate_per_us: lambda };
-        let r1 = run(&one, &TrafficShape::Poisson { util: 1.0 }, &p, None);
-        let r2 = run(&two, &TrafficShape::Poisson { util: 1.0 }, &p, None);
+        let r1 = run(&one, &TrafficShape::Poisson { util: 1.0 }, &p, None).unwrap();
+        let r2 = run(&two, &TrafficShape::Poisson { util: 1.0 }, &p, None).unwrap();
         assert!(
             r2.p99_us < r1.p99_us * 0.8,
             "2 replicas {} !<< 1 replica {}",
@@ -777,7 +789,7 @@ mod tests {
         let shape = TrafficShape::Burst { util: 0.6, mult: 3.0, period_us: 20_000.0, duty: 0.3 };
         let slo = topo.zero_load_us() * 4.0;
         let p = params(&topo, 1.0, 60_000, slo);
-        let r = run(&topo, &shape, &p, None);
+        let r = run(&topo, &shape, &p, None).unwrap();
         assert!(r.windows > 0);
         assert!(r.violated_windows > 0, "overload bursts never burned the SLO");
         assert!(r.compliance < 1.0);
@@ -791,6 +803,7 @@ mod tests {
             label: label.into(),
             mean_us: 25_000.0 / ipc / 2500.0,
             metadata_bytes: 0,
+            table: None,
         };
         let topo = ResolvedTopology {
             services: vec![ResolvedService {
@@ -810,10 +823,10 @@ mod tests {
             slo_us: slo,
             base_rate_per_us: topo.bottleneck_rate(),
         };
-        let stat = run(&topo, &shape, &p, None);
+        let stat = run(&topo, &shape, &p, None).unwrap();
         // Same window size as the static run's tracker, so burn counts
         // are directly comparable.
-        let adap = run(&topo, &shape, &p, Some(SloCfg::new(slo, 99)));
+        let adap = run(&topo, &shape, &p, Some(SloCfg::new(slo, 99))).unwrap();
         assert_eq!(adap.windows, stat.windows, "trackers diverged");
         assert!(!adap.actions.is_empty(), "control loop never acted");
         assert!(
@@ -850,10 +863,10 @@ mod tests {
             slo_us: slo,
             base_rate_per_us: topo.bottleneck_rate() * 0.35,
         };
-        let stat = run(&topo, &shape, &p, None);
+        let stat = run(&topo, &shape, &p, None).unwrap();
         let cfg = SloCfg::new(slo, 21)
             .with_policy(Policy::Hysteresis { idle_windows: 3, headroom: 0.7 });
-        let adap = run(&topo, &shape, &p, Some(cfg));
+        let adap = run(&topo, &shape, &p, Some(cfg)).unwrap();
         assert_eq!(adap.requests, 40_000, "draining lost requests");
         assert!(!adap.actions.is_empty(), "sustained headroom never released capacity");
         assert!(adap.final_replicas[0] < 4, "still at {} replicas", adap.final_replicas[0]);
@@ -877,6 +890,7 @@ mod tests {
             label: label.into(),
             mean_us: 25_000.0 / ipc / 2500.0,
             metadata_bytes: meta,
+            table: None,
         };
         let topo = ResolvedTopology {
             services: vec![ResolvedService {
@@ -899,7 +913,7 @@ mod tests {
         let budget = 8_500u64;
         let cfg = SloCfg::new(slo, 99)
             .with_policy(Policy::CostAware { budget_bytes: budget, idle_windows: 4 });
-        let r = run(&topo, &shape, &p, Some(cfg));
+        let r = run(&topo, &shape, &p, Some(cfg)).unwrap();
         assert!(!r.actions.is_empty(), "cost-aware never acted under burst pressure");
         assert!(
             r.final_metadata_bytes <= budget,
@@ -910,5 +924,69 @@ mod tests {
             r.meta_byte_us <= budget as f64 * r.duration_us * (1.0 + 1e-9),
             "metadata footprint exceeded the budget at some point"
         );
+    }
+
+    #[test]
+    fn zero_requests_and_zero_rate_are_errors_not_hangs() {
+        // Regression companions to ArrivalGen::new: unrunnable scenario
+        // parameters must fail fast in release builds too.
+        let topo = chain(&[2.0]);
+        let shape = TrafficShape::Poisson { util: 1.0 };
+        let bad_requests =
+            RunParams { requests: 0, seed: 1, slo_us: 1e9, base_rate_per_us: 0.1 };
+        assert!(run(&topo, &shape, &bad_requests, None).is_err());
+        let bad_rate =
+            RunParams { requests: 100, seed: 1, slo_us: 1e9, base_rate_per_us: 0.0 };
+        assert!(run(&topo, &shape, &bad_rate, None).is_err());
+    }
+
+    #[test]
+    fn empirical_tables_shape_the_tail_and_stay_deterministic() {
+        use crate::cluster::servicetime::QuantileTable;
+        use crate::util::rng::Rng;
+        // Two unit-mean distributions: near-constant vs heavy-tailed.
+        let flat = QuantileTable::normalized(&[1.0; 64]).unwrap();
+        let mut r = Rng::new(3);
+        let heavy: Vec<f64> = (0..20_000).map(|_| (1.2 * r.normal()).exp()).collect();
+        let heavy = QuantileTable::normalized(&heavy).unwrap();
+        let topo_with = |table: Option<QuantileTable>| ResolvedTopology {
+            services: vec![ResolvedService {
+                name: "svc".into(),
+                replicas: 1,
+                cv: 0.35,
+                candidates: vec![Candidate {
+                    label: "emp".into(),
+                    mean_us: 10.0,
+                    metadata_bytes: 0,
+                    table,
+                }],
+                children: vec![],
+                indegree: 0,
+            }],
+        };
+        let shape = TrafficShape::Poisson { util: 1.0 };
+        let p = RunParams {
+            requests: 30_000,
+            seed: 9,
+            slo_us: 1e9,
+            base_rate_per_us: 0.05, // util 0.5 of the 0.1/µs capacity
+        };
+        let flat_r = run(&topo_with(Some(flat)), &shape, &p, None).unwrap();
+        let heavy_r = run(&topo_with(Some(heavy)), &shape, &p, None).unwrap();
+        // Same mean service time, very different per-request shape: the
+        // heavy-tailed replay must widen the tail.
+        assert!(
+            heavy_r.p99_us > flat_r.p99_us * 1.3,
+            "heavy tail {} !> flat tail {}",
+            heavy_r.p99_us,
+            flat_r.p99_us
+        );
+        // Deterministic rerun, bit for bit.
+        let again = run(&topo_with(Some(heavy)), &shape, &p, None).unwrap();
+        assert_eq!(again.p99_us.to_bits(), heavy_r.p99_us.to_bits());
+        assert_eq!(again.events, heavy_r.events);
+        // And distinct from the analytic model at the same mean/seed.
+        let analytic = run(&topo_with(None), &shape, &p, None).unwrap();
+        assert_ne!(analytic.p99_us.to_bits(), flat_r.p99_us.to_bits());
     }
 }

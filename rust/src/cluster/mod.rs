@@ -9,18 +9,25 @@
 //! ROADMAP's "heavy traffic, many scenarios" north star plugs into.
 //!
 //! Per-service timing comes from the same place as every other figure:
-//! `sim::engine` IPC measurements per (app preset, prefetcher config),
+//! `sim::engine` measurements per (source, prefetcher config) — where a
+//! source is an app preset's generated trace or a `.slft` trace file —
 //! resolved once per spec through the campaign runner and shared by all
-//! scenarios. Scenario runs are independent and deterministically
+//! scenarios. In `"empirical"` service-time mode ([`ClusterSpec`]) each
+//! measurement additionally segments its trace on the `ctx` tag into
+//! per-request cycle counts, and scenarios replay that distribution
+//! through a quantile table ([`servicetime`]) instead of the analytic
+//! mean+cv model. Scenario runs are independent and deterministically
 //! seeded, so [`run_spec`] output is identical at any `--threads` value.
 
 pub mod engine;
+pub mod servicetime;
 pub mod slo;
 pub mod spec;
 pub mod topology;
 pub mod workload;
 
 pub use engine::{ClusterResult, RunParams};
+pub use servicetime::{QuantileTable, ServiceTimeModel};
 pub use slo::{EngineView, Policy, SloCfg};
 pub use spec::ClusterSpec;
 pub use topology::{Measure, ResolvedTopology, ServiceSpec, Topology};
@@ -32,8 +39,19 @@ use crate::cli::parse_prefetcher;
 use crate::config::SimConfig;
 use crate::figures::report::{f2, kb, pct, Table};
 use crate::trace::gen::apps;
-use anyhow::Result;
+use crate::trace::{codec, Record};
+use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Suffix distinguishing an empirical (trace-replayed) static scenario
+/// from its analytic twin in labels and report rows. Twins deliberately
+/// share the *base* label's scenario seed: the arrival generator draws
+/// from its own RNG stream, so equal seeds give both models the
+/// bit-identical offered-load realization and the `cluster_models`
+/// comparison is genuinely paired (the delta is model shape, not a
+/// different arrival sample).
+pub const EMPIRICAL_SUFFIX: &str = "~emp";
 
 /// Everything one [`run_spec`] invocation produced.
 pub struct ClusterOutcome {
@@ -63,63 +81,124 @@ struct ScenarioDef {
 pub struct PreparedSpec {
     /// Normalized prefetcher labels, spec order.
     pub labels: Vec<String>,
-    /// One single-candidate topology per static config.
+    /// One single-candidate topology per static config (analytic
+    /// service times — the load/SLO anchor and, in empirical mode, the
+    /// comparison twins).
     pub static_topos: Vec<ResolvedTopology>,
+    /// Trace-replayed twins of `static_topos` (same means, per-request
+    /// shape from the measurement traces); empty in analytic mode.
+    pub empirical_topos: Vec<ResolvedTopology>,
     /// Multi-candidate topology for policy scenarios: every service
     /// carries all configs, sorted by measured service time (slowest
     /// first), so the Upgrade lever is always a strict improvement.
+    /// Carries empirical tables when the spec asks for them.
     pub policy_topo: ResolvedTopology,
     /// Absolute offered-load anchor (req/µs at utilization 1.0).
     pub base_rate: f64,
     /// The SLO every scenario is held to (spec value or derived).
     pub slo_us: f64,
-    /// (app, prefetcher) cells that were simulated.
+    /// (source, prefetcher) cells that were simulated.
     pub ipc_cells: usize,
+    /// Whether scenarios replay empirical service times.
+    pub empirical: bool,
 }
 
-/// Measure the (app × config) IPC/metadata matrix through the campaign
-/// runner and resolve the spec's topologies and load/SLO anchors.
+/// Measure the (source × config) IPC/metadata matrix through the
+/// campaign runner — where a source is an app preset or a per-service
+/// `.slft` trace file — and resolve the spec's topologies and load/SLO
+/// anchors. In empirical mode each measurement also segments its trace
+/// on the `ctx` tag into per-request cycle counts and fits the
+/// unit-mean quantile table the scenarios replay.
 pub fn prepare_spec(spec: &ClusterSpec, threads: usize) -> Result<PreparedSpec> {
     spec.validate()?;
+    let empirical = spec.empirical();
     let labels: Vec<String> = spec.prefetchers.iter().map(|p| p.to_lowercase()).collect();
+    // One record set per distinct source: loaded once for `.slft` files
+    // (codec round-trip), generated per cell for app presets.
+    let mut traces: HashMap<String, Arc<Vec<Record>>> = HashMap::new();
+    for s in &spec.topology.services {
+        if let Some(path) = &s.trace {
+            let src = s.source();
+            if !traces.contains_key(&src) {
+                let (_meta, records) = codec::read_trace_file(std::path::Path::new(path))
+                    .with_context(|| format!("service '{}': loading trace '{path}'", s.name))?;
+                if records.is_empty() {
+                    bail!("service '{}': trace '{path}' holds no records", s.name);
+                }
+                traces.insert(src, Arc::new(records));
+            }
+        }
+    }
+    let app_of = |src: &str| {
+        let s = spec
+            .topology
+            .services
+            .iter()
+            .find(|s| s.source() == src)
+            .expect("ipc_cells sources come from the services");
+        apps::app(&s.app).expect("validated app")
+    };
     let pairs = spec.ipc_cells();
     let cells: Vec<Cell> = pairs
         .iter()
-        .map(|(app, pf)| {
-            let key = format!("cluster|{app}|{pf}|r{}|s{}", spec.records, spec.seed);
+        .map(|(src, pf)| {
+            let trace = traces.get(src.as_str()).cloned();
+            let records = trace.as_ref().map(|t| t.len() as u64).unwrap_or(spec.records);
+            let key = format!("cluster|{src}|{pf}|r{records}|s{}", spec.seed);
             Cell {
-                app: apps::app(app).expect("validated app"),
+                app: app_of(src),
                 label: pf.clone(),
                 cfg: SimConfig {
                     prefetcher: parse_prefetcher(pf).expect("validated prefetcher"),
                     seed: cell_seed(spec.seed, &key),
+                    track_segments: empirical,
                     ..Default::default()
                 },
-                records: spec.records,
+                records,
                 trace_seed: spec.seed,
+                trace,
             }
         })
         .collect();
     let sims = runner::run_cells(&cells, threads);
     let mut measures: HashMap<(String, String), Measure> = HashMap::new();
-    for ((app, pf), r) in pairs.iter().zip(&sims) {
+    for ((src, pf), r) in pairs.iter().zip(&sims) {
+        let table = if empirical {
+            let segments = r.segments.as_deref().unwrap_or(&[]);
+            Some(
+                QuantileTable::normalized(segments)
+                    .with_context(|| format!("empirical service times for ({src}, {pf})"))?,
+            )
+        } else {
+            None
+        };
         measures.insert(
-            (app.clone(), pf.clone()),
-            Measure { ipc: r.ipc(), metadata_bytes: r.metadata_bytes },
+            (src.clone(), pf.clone()),
+            Measure { ipc: r.ipc(), metadata_bytes: r.metadata_bytes, table },
         );
     }
     let lookup =
-        |app: &str, label: &str| measures.get(&(app.to_string(), label.to_string())).copied();
+        |src: &str, label: &str| measures.get(&(src.to_string(), label.to_string())).copied();
+    let analytic = |src: &str, label: &str| lookup(src, label).map(Measure::analytic);
 
     let static_topos: Vec<ResolvedTopology> = labels
         .iter()
-        .map(|l| spec.topology.resolve(std::slice::from_ref(l), lookup))
+        .map(|l| spec.topology.resolve(std::slice::from_ref(l), analytic))
         .collect::<Result<_>>()?;
+    let empirical_topos: Vec<ResolvedTopology> = if empirical {
+        labels
+            .iter()
+            .map(|l| spec.topology.resolve(std::slice::from_ref(l), lookup))
+            .collect::<Result<_>>()?
+    } else {
+        Vec::new()
+    };
     // Offered load and the derived SLO are anchored on the *slowest
     // measured* config (the baseline — typically `nl`), so every
     // scenario sees the same absolute arrival process and an achievable
     // SLO regardless of the spec's listing order. Ties break to the
-    // lowest index, deterministically.
+    // lowest index, deterministically. Empirical tables are unit-mean,
+    // so both models share these anchors exactly.
     let base_idx = (0..static_topos.len())
         .min_by(|&a, &b| {
             static_topos[a]
@@ -134,6 +213,9 @@ pub fn prepare_spec(spec: &ClusterSpec, threads: usize) -> Result<PreparedSpec> 
     } else {
         static_topos[base_idx].zero_load_us() * 4.0
     };
+    // In analytic mode every Measure already carries `table: None`, so
+    // the full lookup is the analytic lookup — one resolution serves
+    // both modes.
     let mut policy_topo = spec.topology.resolve(&labels, lookup)?;
     // Order each service's candidates by *measured* service time,
     // slowest first, so the control loop's Upgrade lever is always a
@@ -145,10 +227,12 @@ pub fn prepare_spec(spec: &ClusterSpec, threads: usize) -> Result<PreparedSpec> 
     Ok(PreparedSpec {
         labels,
         static_topos,
+        empirical_topos,
         policy_topo,
         base_rate,
         slo_us,
         ipc_cells: cells.len(),
+        empirical,
     })
 }
 
@@ -185,11 +269,11 @@ pub fn run_policy_scenario(
     spec: &ClusterSpec,
     policy: &Policy,
     shape: &TrafficShape,
-) -> ClusterResult {
+) -> Result<ClusterResult> {
     let (label, params, cfg) = policy_scenario_cfg(prep, spec, policy, shape);
-    let mut r = engine::run(&prep.policy_topo, shape, &params, Some(cfg));
+    let mut r = engine::run(&prep.policy_topo, shape, &params, Some(cfg))?;
     r.label = label;
-    r
+    Ok(r)
 }
 
 /// Expand and run a cluster spec: measure the (app × prefetcher) IPC
@@ -206,12 +290,16 @@ pub fn run_spec(spec: &ClusterSpec, threads: usize) -> Result<ClusterOutcome> {
         .map(|t| TrafficShape::parse(t))
         .collect::<Result<_>>()?;
 
-    // Deterministic scenario expansion: configs ▸ shapes, then policies
-    // ▸ shapes.
+    // Deterministic scenario expansion: analytic configs ▸ shapes, then
+    // (empirical mode) trace-replayed configs ▸ shapes, then policies ▸
+    // shapes. Analytic statics come first so an analytic spec's output
+    // is unchanged from pre-empirical builds.
     let mut defs = Vec::new();
-    for (label, topo) in prep.labels.iter().zip(&prep.static_topos) {
+    // Seeds derive from the *base* label for both models — see
+    // [`EMPIRICAL_SUFFIX`]: twins share the exact arrival realization.
+    let mut push_static = |label: String, seed_label: &str, topo: &ResolvedTopology| {
         for shape in &shapes {
-            let seed = cell_seed(spec.seed, &format!("{label}|{}", shape.label()));
+            let seed = cell_seed(spec.seed, &format!("{seed_label}|{}", shape.label()));
             defs.push(ScenarioDef {
                 label: label.clone(),
                 shape: shape.clone(),
@@ -225,6 +313,12 @@ pub fn run_spec(spec: &ClusterSpec, threads: usize) -> Result<ClusterOutcome> {
                 ctrl: None,
             });
         }
+    };
+    for (label, topo) in prep.labels.iter().zip(&prep.static_topos) {
+        push_static(label.clone(), label, topo);
+    }
+    for (label, topo) in prep.labels.iter().zip(&prep.empirical_topos) {
+        push_static(format!("{label}{EMPIRICAL_SUFFIX}"), label, topo);
     }
     for policy in &policies {
         for shape in &shapes {
@@ -242,7 +336,7 @@ pub fn run_spec(spec: &ClusterSpec, threads: usize) -> Result<ClusterOutcome> {
     // Shard scenarios across workers; collect by index (scenario runs
     // are independent and self-seeded, so order of completion is
     // irrelevant to the result).
-    let scenarios = run_scenarios(&defs, threads);
+    let scenarios = run_scenarios(&defs, threads)?;
     let total_requests = scenarios.iter().map(|s| s.requests).sum();
     let total_events = scenarios.iter().map(|s| s.events).sum();
     Ok(ClusterOutcome {
@@ -254,13 +348,16 @@ pub fn run_spec(spec: &ClusterSpec, threads: usize) -> Result<ClusterOutcome> {
     })
 }
 
-fn run_scenarios(defs: &[ScenarioDef], threads: usize) -> Vec<ClusterResult> {
+fn run_scenarios(defs: &[ScenarioDef], threads: usize) -> Result<Vec<ClusterResult>> {
     runner::parallel_map(defs.len(), threads, |i| {
         let d = &defs[i];
-        let mut r = engine::run(&d.topo, &d.shape, &d.params, d.ctrl.clone());
-        r.label = d.label.clone();
-        r
+        engine::run(&d.topo, &d.shape, &d.params, d.ctrl.clone()).map(|mut r| {
+            r.label = d.label.clone();
+            r
+        })
     })
+    .into_iter()
+    .collect()
 }
 
 /// Scenario summary table (deterministic: pure function of the outcome).
@@ -307,6 +404,62 @@ pub fn report(out: &ClusterOutcome) -> Table {
     t
 }
 
+/// Analytic-vs-empirical comparison for static scenarios: one row per
+/// (config, traffic) pairing the analytic twin with its trace-replayed
+/// (`~emp`) counterpart. `None` when the outcome has no empirical
+/// scenarios (analytic specs). Deterministic: a pure function of the
+/// outcome, rows in scenario-expansion order.
+pub fn model_report(out: &ClusterOutcome) -> Option<Table> {
+    let mut t = Table::new(
+        "cluster_models",
+        "Service-time models: analytic vs trace-replayed (empirical)",
+        &[
+            "config",
+            "traffic",
+            "P50 µs (ana)",
+            "P50 µs (emp)",
+            "P99 µs (ana)",
+            "P99 µs (emp)",
+            "Δ P99",
+        ],
+    );
+    for emp in &out.scenarios {
+        let base = match emp.label.strip_suffix(EMPIRICAL_SUFFIX) {
+            Some(b) => b,
+            None => continue,
+        };
+        let ana = out
+            .scenarios
+            .iter()
+            .find(|s| s.label == base && s.traffic == emp.traffic);
+        let ana = match ana {
+            Some(a) => a,
+            None => continue,
+        };
+        let delta = (emp.p99_us - ana.p99_us) / ana.p99_us * 100.0;
+        t.row(vec![
+            base.to_string(),
+            emp.traffic.clone(),
+            f2(ana.p50_us),
+            f2(emp.p50_us),
+            f2(ana.p99_us),
+            f2(emp.p99_us),
+            format!("{delta:+.1}%"),
+        ]);
+    }
+    if t.rows.is_empty() {
+        return None;
+    }
+    t.note(
+        "paired runs: twins share the arrival realization (same seed, independent \
+         arrival RNG stream) and the measured mean service time per (service, \
+         config); the empirical rows replay the per-request distribution segmented \
+         from the instruction trace (ctx-tag boundaries), so the delta is pure \
+         shape — the variance a mean+cv model cannot see",
+    );
+    Some(t)
+}
+
 /// Control-action trace table for adaptive scenarios (empty-safe).
 pub fn action_report(out: &ClusterOutcome) -> Option<Table> {
     let mut t = Table::new(
@@ -348,7 +501,7 @@ pub struct TailSummary {
 /// Requests simulated per campaign-cell tail evaluation.
 pub const TAIL_EVAL_REQUESTS: u64 = 30_000;
 
-pub fn evaluate_tail(ipc: f64, shape: &TrafficShape, seed: u64) -> TailSummary {
+pub fn evaluate_tail(ipc: f64, shape: &TrafficShape, seed: u64) -> Result<TailSummary> {
     let topo = ResolvedTopology::chain_from_ipcs(
         &[("svc".to_string(), ipc)],
         25_000.0,
@@ -362,14 +515,14 @@ pub fn evaluate_tail(ipc: f64, shape: &TrafficShape, seed: u64) -> TailSummary {
         slo_us,
         base_rate_per_us: topo.bottleneck_rate(),
     };
-    let r = engine::run(&topo, shape, &params, None);
-    TailSummary {
+    let r = engine::run(&topo, shape, &params, None)?;
+    Ok(TailSummary {
         p50_us: r.p50_us,
         p95_us: r.p95_us,
         p99_us: r.p99_us,
         compliance: r.compliance,
         slo_us,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -389,6 +542,7 @@ mod tests {
                         instrs_per_req: 30_000.0,
                         cv: 0.35,
                         deps: vec![],
+                        trace: None,
                     },
                     ServiceSpec {
                         name: "be".into(),
@@ -397,6 +551,7 @@ mod tests {
                         instrs_per_req: 20_000.0,
                         cv: 0.35,
                         deps: vec!["gw".into()],
+                        trace: None,
                     },
                 ],
                 freq_ghz: 2.5,
@@ -410,6 +565,7 @@ mod tests {
             utilization: 1.0,
             adaptive: true,
             policies: Vec::new(),
+            service_times: "analytic".into(),
         }
     }
 
@@ -442,13 +598,13 @@ mod tests {
     #[test]
     fn evaluate_tail_is_deterministic_and_sane() {
         let shape = TrafficShape::Poisson { util: 0.65 };
-        let a = evaluate_tail(2.0, &shape, 9);
-        let b = evaluate_tail(2.0, &shape, 9);
+        let a = evaluate_tail(2.0, &shape, 9).unwrap();
+        let b = evaluate_tail(2.0, &shape, 9).unwrap();
         assert_eq!(a.p99_us.to_bits(), b.p99_us.to_bits());
         assert!(a.p50_us <= a.p95_us && a.p95_us <= a.p99_us);
         assert!(a.compliance > 0.0 && a.compliance <= 1.0);
         // Faster core ⇒ shorter absolute tail (same utilization).
-        let fast = evaluate_tail(2.4, &shape, 9);
+        let fast = evaluate_tail(2.4, &shape, 9).unwrap();
         assert!(fast.p99_us < a.p99_us);
     }
 
@@ -490,9 +646,78 @@ mod tests {
         // run_policy_scenario is the same computation the sweep did.
         let prep = prepare_spec(&spec, 1).unwrap();
         let shape = TrafficShape::parse(&spec.traffic[0]).unwrap();
-        let direct = run_policy_scenario(&prep, &spec, &Policy::Reactive, &shape);
+        let direct = run_policy_scenario(&prep, &spec, &Policy::Reactive, &shape).unwrap();
         let swept = out.scenarios.iter().find(|s| s.label == "reactive").unwrap();
         assert_eq!(direct.p99_us.to_bits(), swept.p99_us.to_bits());
         assert_eq!(direct.events, swept.events);
+    }
+
+    #[test]
+    fn empirical_mode_replays_traces_and_stays_thread_invariant() {
+        let spec = ClusterSpec {
+            service_times: "empirical".into(),
+            requests: 6_000,
+            ..tiny_spec()
+        };
+        let a = run_spec(&spec, 1).unwrap();
+        let b = run_spec(&spec, 4).unwrap();
+        // (2 configs × 2 models + 1 adaptive) × 1 shape.
+        assert_eq!(a.scenarios.len(), spec.scenario_count());
+        assert_eq!(a.scenarios.len(), 5);
+        assert_eq!(report(&a).markdown(), report(&b).markdown());
+        for (x, y) in a.scenarios.iter().zip(&b.scenarios) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.p99_us.to_bits(), y.p99_us.to_bits(), "{}", x.label);
+            assert_eq!(x.events, y.events);
+        }
+        // The comparison table pairs every (config, shape).
+        let models = model_report(&a).expect("empirical run must emit the model table");
+        assert_eq!(models.rows.len(), 2);
+        assert!(models.markdown().contains("ceip256"));
+        // Empirical twins exist, are distinct runs, and share the
+        // analytic anchor (same offered load, finite sane percentiles).
+        let emp = a.scenarios.iter().find(|s| s.label == "nl~emp").unwrap();
+        let ana = a.scenarios.iter().find(|s| s.label == "nl").unwrap();
+        assert_eq!(emp.requests, ana.requests);
+        assert!(emp.p50_us.is_finite() && emp.p99_us > emp.p50_us);
+        assert_ne!(emp.p99_us.to_bits(), ana.p99_us.to_bits(), "twins ran the same model");
+        // Analytic specs emit no model table.
+        let plain = run_spec(&tiny_spec(), 2).unwrap();
+        assert!(model_report(&plain).is_none());
+    }
+
+    #[test]
+    fn prepare_spec_fits_unit_mean_tables_in_empirical_mode() {
+        let spec = ClusterSpec { service_times: "empirical".into(), ..tiny_spec() };
+        let prep = prepare_spec(&spec, 2).unwrap();
+        assert!(prep.empirical);
+        assert_eq!(prep.empirical_topos.len(), prep.labels.len());
+        for (topo, ana) in prep.empirical_topos.iter().zip(&prep.static_topos) {
+            for (s, sa) in topo.services.iter().zip(&ana.services) {
+                for (c, ca) in s.candidates.iter().zip(&sa.candidates) {
+                    let t = c.table.expect("empirical candidate lost its table");
+                    assert!(t.min() > 0.0 && t.min() <= t.max());
+                    // Unit-mean table ⇒ identical mean service time, so
+                    // load/SLO anchors are shared across models.
+                    assert_eq!(c.mean_us.to_bits(), ca.mean_us.to_bits());
+                    assert!(ca.table.is_none(), "analytic twin carries a table");
+                }
+            }
+        }
+        // The policy topology replays the tables too.
+        assert!(prep
+            .policy_topo
+            .services
+            .iter()
+            .all(|s| s.candidates.iter().all(|c| c.table.is_some())));
+        // Analytic mode is untouched: no tables anywhere.
+        let plain = prepare_spec(&tiny_spec(), 2).unwrap();
+        assert!(!plain.empirical);
+        assert!(plain.empirical_topos.is_empty());
+        assert!(plain
+            .policy_topo
+            .services
+            .iter()
+            .all(|s| s.candidates.iter().all(|c| c.table.is_none())));
     }
 }

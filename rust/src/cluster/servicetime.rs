@@ -1,0 +1,252 @@
+//! Per-request service-time models for the cluster simulator
+//! (DESIGN.md §8 "Service-time models").
+//!
+//! Two models behind one sampling interface ([`ServiceTimeModel`]):
+//!
+//! - **Analytic** — the original `instrs_per_req / IPC` mean with
+//!   lognormal-flavored jitter (`cv`). This is the unchanged default:
+//!   its RNG consumption and arithmetic are bit-identical to the
+//!   pre-model engine, so existing analytic scenarios reproduce exactly.
+//! - **Empirical** — trace-replayed per-request times: an instruction
+//!   trace is segmented on the `ctx` tag ([`crate::trace::Record`]) into
+//!   per-request cycle counts, and the resulting distribution is stored
+//!   as a compact fixed-size [`QuantileTable`] sampled by inverse-CDF.
+//!   The table is *normalized to unit mean*, so the service's measured
+//!   `mean_us` (and therefore every load/SLO anchor) is shared with the
+//!   analytic model — only the per-request *shape* (burstiness, tail
+//!   weight) comes from the trace.
+//!
+//! Determinism (DESIGN.md §8): an empirical sample consumes exactly
+//! **one** uniform draw mapped through the table — never a variable
+//! number — so the engine's RNG stream stays a pure function of the
+//! event order at any thread count.
+
+use crate::util::rng::{mix64, Rng};
+use anyhow::{bail, Result};
+
+/// Points in a quantile table (64 intervals + both endpoints).
+pub const QUANTILE_POINTS: usize = 65;
+
+/// Minimum per-request trace segments required to fit an empirical
+/// distribution; fewer means the trace has no usable `ctx` structure.
+pub const MIN_SEGMENTS: usize = 16;
+
+/// A compact fixed-size inverse-CDF table over a unit-mean distribution
+/// of per-request service-time multipliers.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantileTable {
+    /// Quantile values at ranks i/(QUANTILE_POINTS−1), ascending.
+    q: [f64; QUANTILE_POINTS],
+}
+
+impl QuantileTable {
+    /// Fit a table to raw samples (e.g. per-request cycle counts),
+    /// normalizing to unit mean. Non-finite and non-positive samples are
+    /// dropped (zero-cycle `ctx` runs are segmentation artifacts, not
+    /// requests); fitting fails below [`MIN_SEGMENTS`] usable samples.
+    pub fn normalized(samples: &[f64]) -> Result<QuantileTable> {
+        let mut xs: Vec<f64> =
+            samples.iter().copied().filter(|x| x.is_finite() && *x > 0.0).collect();
+        if xs.len() < MIN_SEGMENTS {
+            bail!(
+                "empirical service-time model needs ≥ {MIN_SEGMENTS} usable trace \
+                 segments, got {} (does the trace carry ctx tags?)",
+                xs.len()
+            );
+        }
+        xs.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mut q = [0.0f64; QUANTILE_POINTS];
+        for (i, slot) in q.iter_mut().enumerate() {
+            let rank = i as f64 / (QUANTILE_POINTS - 1) as f64 * (n - 1) as f64;
+            let lo = rank.floor() as usize;
+            let hi = rank.ceil() as usize;
+            let frac = rank - lo as f64;
+            *slot = xs[lo] * (1.0 - frac) + xs[hi] * frac;
+        }
+        // `sample` is piecewise-linear in a uniform draw, so its expected
+        // value is the table's *trapezoid* mean (not the raw sample mean
+        // — the 65-point linearization clips curvature in the tail).
+        // Normalize by it so E[sample(U)] is exactly 1 and empirical
+        // scenarios share the analytic model's mean service time — and
+        // therefore every load/SLO anchor — by construction.
+        let trapezoid: f64 = q.windows(2).map(|w| (w[0] + w[1]) * 0.5).sum::<f64>()
+            / (QUANTILE_POINTS - 1) as f64;
+        if !(trapezoid.is_finite() && trapezoid > 0.0) {
+            bail!("empirical service-time distribution has non-positive mean");
+        }
+        for slot in &mut q {
+            *slot /= trapezoid;
+        }
+        Ok(QuantileTable { q })
+    }
+
+    /// Inverse-CDF lookup: map one uniform draw `u ∈ [0, 1)` through the
+    /// table with linear interpolation. Exactly one draw per sample —
+    /// the §8 one-draw rule the determinism contract relies on.
+    pub fn sample(&self, u: f64) -> f64 {
+        let pos = u.clamp(0.0, 1.0) * (QUANTILE_POINTS - 1) as f64;
+        let lo = pos as usize;
+        if lo + 1 >= QUANTILE_POINTS {
+            return self.q[QUANTILE_POINTS - 1];
+        }
+        let frac = pos - lo as f64;
+        self.q[lo] * (1.0 - frac) + self.q[lo + 1] * frac
+    }
+
+    /// Smallest multiplier in the table.
+    pub fn min(&self) -> f64 {
+        self.q[0]
+    }
+
+    /// Largest multiplier in the table.
+    pub fn max(&self) -> f64 {
+        self.q[QUANTILE_POINTS - 1]
+    }
+
+    /// Stable content fingerprint of the table (diagnostics/tests; the
+    /// campaign cell hash covers the *inputs* the table is a pure
+    /// function of — spec JSON plus trace-file bytes — instead).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = mix64(QUANTILE_POINTS as u64);
+        for v in &self.q {
+            h = mix64(h ^ v.to_bits());
+        }
+        h
+    }
+}
+
+/// How the engine draws one request's service time at a service.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ServiceTimeModel {
+    /// Mean service time with lognormal-flavored jitter (the original
+    /// analytic path, unchanged bit-for-bit).
+    Analytic { mean_us: f64, cv: f64 },
+    /// Mean service time scaled by a trace-replayed unit-mean multiplier
+    /// drawn from a [`QuantileTable`].
+    Empirical { mean_us: f64, table: QuantileTable },
+}
+
+impl ServiceTimeModel {
+    /// Mean service time (µs) — what capacity anchors and the bottleneck
+    /// search use; identical across the two models by construction.
+    pub fn mean_us(&self) -> f64 {
+        match self {
+            ServiceTimeModel::Analytic { mean_us, .. }
+            | ServiceTimeModel::Empirical { mean_us, .. } => *mean_us,
+        }
+    }
+
+    /// Draw one service time (µs). Analytic consumes one normal draw
+    /// (two uniforms via Box–Muller, as before); empirical consumes
+    /// exactly one uniform draw (inverse-CDF).
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match self {
+            ServiceTimeModel::Analytic { mean_us, cv } => {
+                // Same lognormal-flavored jitter as the rpc tandem model.
+                let jitter = (cv * rng.normal() - 0.5 * cv * cv).exp();
+                mean_us * jitter.clamp(0.05, 8.0)
+            }
+            ServiceTimeModel::Empirical { mean_us, table } => mean_us * table.sample(rng.f64()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lognormal_samples(n: usize, seed: u64) -> Vec<f64> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| (0.4 * r.normal()).exp() * 1000.0).collect()
+    }
+
+    #[test]
+    fn table_is_unit_mean_and_monotone() {
+        let t = QuantileTable::normalized(&lognormal_samples(50_000, 7)).unwrap();
+        assert!(t.min() > 0.0);
+        assert!(t.min() <= t.max());
+        for i in 1..QUANTILE_POINTS {
+            assert!(t.q[i] >= t.q[i - 1], "table not monotone at {i}");
+        }
+        // E[sample(U)] is the table's trapezoid mean, renormalized to be
+        // exactly 1 — empirical scenarios share the analytic model's
+        // load/SLO anchors by construction.
+        let trapezoid: f64 = t.q.windows(2).map(|w| (w[0] + w[1]) * 0.5).sum::<f64>()
+            / (QUANTILE_POINTS - 1) as f64;
+        assert!((trapezoid - 1.0).abs() < 1e-12, "trapezoid mean {trapezoid}");
+        // And many inverse-CDF draws agree.
+        let mut r = Rng::new(11);
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| t.sample(r.f64())).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn sample_hits_endpoints_and_interpolates() {
+        let t = QuantileTable::normalized(&lognormal_samples(10_000, 3)).unwrap();
+        assert_eq!(t.sample(0.0), t.min());
+        assert_eq!(t.sample(1.0), t.max());
+        let mid = t.sample(0.5);
+        assert!(t.min() <= mid && mid <= t.max());
+        // Out-of-range draws clamp instead of indexing out of bounds.
+        assert_eq!(t.sample(-0.5), t.min());
+        assert_eq!(t.sample(2.0), t.max());
+    }
+
+    #[test]
+    fn too_few_or_degenerate_samples_fail() {
+        assert!(QuantileTable::normalized(&[]).is_err());
+        assert!(QuantileTable::normalized(&[1.0; MIN_SEGMENTS - 1]).is_err());
+        // Zeros and non-finite values are dropped before the count check.
+        let mut xs = vec![0.0; 100];
+        xs.push(f64::NAN);
+        assert!(QuantileTable::normalized(&xs).is_err());
+        // Exactly MIN_SEGMENTS usable samples fit.
+        assert!(QuantileTable::normalized(&[2.0; MIN_SEGMENTS]).is_ok());
+    }
+
+    #[test]
+    fn fingerprint_tracks_content() {
+        let a = QuantileTable::normalized(&lognormal_samples(10_000, 3)).unwrap();
+        let b = QuantileTable::normalized(&lognormal_samples(10_000, 3)).unwrap();
+        let c = QuantileTable::normalized(&lognormal_samples(10_000, 4)).unwrap();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn analytic_model_matches_legacy_jitter_formula() {
+        // Exact reproduction of the pre-model engine arithmetic: same
+        // draws, same clamp, same order.
+        let model = ServiceTimeModel::Analytic { mean_us: 10.0, cv: 0.35 };
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..1000 {
+            let got = model.sample(&mut a);
+            let cv = 0.35f64;
+            let jitter = (cv * b.normal() - 0.5 * cv * cv).exp();
+            let want = 10.0 * jitter.clamp(0.05, 8.0);
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn empirical_model_scales_the_table_by_the_mean() {
+        let t = QuantileTable::normalized(&lognormal_samples(20_000, 9)).unwrap();
+        let model = ServiceTimeModel::Empirical { mean_us: 8.0, table: t };
+        assert_eq!(model.mean_us(), 8.0);
+        let mut r = Rng::new(5);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| model.sample(&mut r)).sum::<f64>() / n as f64;
+        assert!((mean - 8.0).abs() < 0.2, "mean {mean}");
+        // One uniform draw per sample: two generators in lockstep.
+        let mut x = Rng::new(77);
+        let mut y = Rng::new(77);
+        for _ in 0..100 {
+            model.sample(&mut x);
+            y.f64();
+        }
+        assert_eq!(x.next_u64(), y.next_u64(), "empirical sample is not one draw");
+    }
+}

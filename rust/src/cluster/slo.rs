@@ -286,7 +286,15 @@ fn arm_of(act: SloAction) -> usize {
 }
 
 impl SloController {
-    pub fn new(cfg: SloCfg) -> SloController {
+    pub fn new(mut cfg: SloCfg) -> SloController {
+        // Window-evaluation audit (see `Digest::percentile`'s NaN
+        // contract): every evaluation happens inside `on_complete`,
+        // *after* the completion was added, so the window digest is
+        // never empty when percentiles are read — provided the window
+        // length is at least 1. Clamp `window = 0` (which would also
+        // divide compliance by zero and make every window read as
+        // non-burning) instead of trusting callers.
+        cfg.window = cfg.window.max(1);
         let bandit = Bandit::new(0.1, 0.3, cfg.seed);
         let bucket = TokenBucket::new(cfg.action_rate_per_kreq, cfg.action_burst);
         SloController {
@@ -547,6 +555,22 @@ mod tests {
             upgrade_meta_delta: 0,
             scale_up_meta_delta: 0,
         }
+    }
+
+    #[test]
+    fn zero_window_is_clamped_never_divides_by_zero() {
+        // Regression companion to the Digest NaN change: window = 0 used
+        // to evaluate compliance as met/0 (∞ or NaN), so no window could
+        // ever burn — an empty window silently counted as compliant.
+        let mut c = SloController::new(cfg(0));
+        assert_eq!(c.cfg.window, 1, "window not clamped");
+        for _ in 0..5 {
+            c.on_complete(100.0, &up(false)); // every request misses SLO
+        }
+        assert_eq!(c.windows, 5);
+        assert_eq!(c.violated, 5, "burned single-completion windows not counted");
+        let w = c.last_window.unwrap();
+        assert!(w.compliance == 0.0 && w.p99_us == 100.0);
     }
 
     #[test]

@@ -44,6 +44,14 @@ pub struct ClusterSpec {
     /// Autoscaler policies ([`Policy::parse`] syntax) — one control-loop
     /// scenario per (policy × traffic shape).
     pub policies: Vec<String>,
+    /// Per-request service-time model (DESIGN.md §8): `"analytic"` (the
+    /// default — `instrs_per_req / IPC` mean with lognormal jitter) or
+    /// `"empirical"` (trace-replayed: each measurement trace is
+    /// segmented on its `ctx` tag into per-request cycle counts, and
+    /// scenarios sample that distribution via an inverse-CDF quantile
+    /// table). Empirical mode additionally runs an analytic twin of
+    /// every static scenario so the cluster report can compare models.
+    pub service_times: String,
 }
 
 impl Default for ClusterSpec {
@@ -60,11 +68,17 @@ impl Default for ClusterSpec {
             utilization: 1.0,
             adaptive: false,
             policies: Vec::new(),
+            service_times: "analytic".into(),
         }
     }
 }
 
 impl ClusterSpec {
+    /// Whether scenarios replay trace-measured (empirical) service times.
+    pub fn empirical(&self) -> bool {
+        self.service_times == "empirical"
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.prefetchers.is_empty() {
             bail!("cluster '{}' lists no prefetchers", self.name);
@@ -116,6 +130,25 @@ impl ClusterSpec {
                 bail!("cluster '{}': duplicate policy '{p}'", self.name);
             }
         }
+        if !matches!(self.service_times.as_str(), "analytic" | "empirical") {
+            bail!(
+                "cluster '{}': service_times must be 'analytic' or 'empirical', got '{}'",
+                self.name,
+                self.service_times
+            );
+        }
+        if !self.empirical() {
+            if let Some(s) = self.topology.services.iter().find(|s| s.trace.is_some()) {
+                bail!(
+                    "cluster '{}': service '{}' names a trace file but service_times \
+                     is '{}' — set service_times to 'empirical' (traces are ignored \
+                     by the analytic model, which would silently drop them)",
+                    self.name,
+                    s.name,
+                    self.service_times
+                );
+            }
+        }
         Ok(())
     }
 
@@ -131,32 +164,37 @@ impl ClusterSpec {
         }
     }
 
-    /// Distinct (app, prefetcher-label) pairs needing an IPC measurement.
+    /// Distinct (measurement source, prefetcher-label) pairs needing a
+    /// simulation: the source is a service's app preset name, or its
+    /// `.slft` trace path when one overrides it ([`ServiceSpec::source`]).
     pub fn ipc_cells(&self) -> Vec<(String, String)> {
-        let mut apps_seen = Vec::new();
+        let mut sources_seen: Vec<String> = Vec::new();
         for s in &self.topology.services {
-            if !apps_seen.contains(&s.app) {
-                apps_seen.push(s.app.clone());
+            let src = s.source();
+            if !sources_seen.contains(&src) {
+                sources_seen.push(src);
             }
         }
         let mut out = Vec::new();
-        for app in &apps_seen {
+        for src in &sources_seen {
             for pf in &self.prefetchers {
-                out.push((app.clone(), pf.to_lowercase()));
+                out.push((src.clone(), pf.to_lowercase()));
             }
         }
         out
     }
 
-    /// Scenario count: prefetchers × shapes, plus shapes again per
-    /// autoscaler policy.
+    /// Scenario count: prefetchers × shapes (×2 in empirical mode — each
+    /// static scenario runs under both service-time models so the report
+    /// can compare them), plus shapes again per autoscaler policy.
     pub fn scenario_count(&self) -> usize {
         let n_pol = if self.policies.is_empty() {
             usize::from(self.adaptive)
         } else {
             self.policies.len()
         };
-        (self.prefetchers.len() + n_pol) * self.traffic.len()
+        let models = if self.empirical() { 2 } else { 1 };
+        (self.prefetchers.len() * models + n_pol) * self.traffic.len()
     }
 
     // ---------- JSON (de)serialization ----------
@@ -167,7 +205,7 @@ impl ClusterSpec {
             .services
             .iter()
             .map(|s| {
-                Json::obj(vec![
+                let mut fields = vec![
                     ("name", Json::str(&s.name)),
                     ("app", Json::str(&s.app)),
                     ("replicas", Json::num(s.replicas as f64)),
@@ -177,10 +215,14 @@ impl ClusterSpec {
                         "deps",
                         Json::Arr(s.deps.iter().map(|d| Json::str(d)).collect()),
                     ),
-                ])
+                ];
+                if let Some(t) = &s.trace {
+                    fields.push(("trace", Json::str(t)));
+                }
+                Json::obj(fields)
             })
             .collect();
-        Json::obj(vec![
+        let mut fields = vec![
             ("name", Json::str(&self.name)),
             ("services", Json::Arr(services)),
             ("freq_ghz", Json::num(self.topology.freq_ghz)),
@@ -202,7 +244,16 @@ impl ClusterSpec {
                 "policies",
                 Json::Arr(self.policies.iter().map(|p| Json::str(p)).collect()),
             ),
-        ])
+        ];
+        // Emitted only when non-default (as with per-service `trace`):
+        // the canonical JSON of an analytic spec stays byte-identical to
+        // pre-empirical builds, so campaign cluster-cell content hashes
+        // — and therefore store resume — are unchanged for existing
+        // analytic campaigns.
+        if self.service_times != "analytic" {
+            fields.push(("service_times", Json::str(&self.service_times)));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<ClusterSpec> {
@@ -246,6 +297,7 @@ impl ClusterSpec {
                     .unwrap_or(25_000.0),
                 cv: s.get("cv").and_then(Json::as_f64).unwrap_or(0.35),
                 deps,
+                trace: s.get("trace").and_then(Json::as_str).map(str::to_string),
             });
         }
         if let Some(f) = j.get("freq_ghz").and_then(Json::as_f64) {
@@ -292,6 +344,9 @@ impl ClusterSpec {
         if let Some(p) = strings("policies")? {
             spec.policies = p;
         }
+        if let Some(v) = j.get("service_times").and_then(Json::as_str) {
+            spec.service_times = v.to_string();
+        }
         spec.validate()?;
         Ok(spec)
     }
@@ -325,6 +380,7 @@ mod tests {
                         instrs_per_req: 25_000.0,
                         cv: 0.35,
                         deps: vec![],
+                        trace: None,
                     },
                     ServiceSpec {
                         name: "search".into(),
@@ -333,6 +389,7 @@ mod tests {
                         instrs_per_req: 40_000.0,
                         cv: 0.4,
                         deps: vec!["gw".into()],
+                        trace: None,
                     },
                 ],
                 freq_ghz: 2.5,
@@ -346,6 +403,7 @@ mod tests {
             utilization: 1.0,
             adaptive: true,
             policies: Vec::new(),
+            service_times: "analytic".into(),
         }
     }
 
@@ -421,6 +479,36 @@ mod tests {
     }
 
     #[test]
+    fn empirical_mode_roundtrips_counts_and_validates() {
+        let mut s = small();
+        s.service_times = "empirical".into();
+        assert!(s.validate().is_ok());
+        assert!(s.empirical());
+        // Statics double (analytic twin per config), adaptive stays 1×:
+        // (2 prefetchers × 2 models + 1 policy) × 2 shapes.
+        assert_eq!(s.scenario_count(), 10);
+        let back = ClusterSpec::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+
+        // Per-service trace files ride along and key the IPC cells.
+        s.topology.services[1].trace = Some("/tmp/ws.slft".into());
+        assert!(s.validate().is_ok());
+        let back = ClusterSpec::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        let cells = s.ipc_cells();
+        assert!(cells.iter().any(|(src, _)| src == "file:/tmp/ws.slft"), "{cells:?}");
+        assert!(cells.iter().any(|(src, _)| src == "admission"));
+
+        // Unknown model names and analytic-mode traces are rejected.
+        let mut bad = small();
+        bad.service_times = "psychic".into();
+        assert!(bad.validate().is_err(), "unknown service_times not caught");
+        let mut bad = small();
+        bad.topology.services[0].trace = Some("/tmp/x.slft".into());
+        assert!(bad.validate().is_err(), "trace without empirical mode not caught");
+    }
+
+    #[test]
     fn defaults_fill_optional_fields() {
         let j = Json::parse(
             r#"{
@@ -434,5 +522,8 @@ mod tests {
         assert_eq!(s.topology.services[0].instrs_per_req, 25_000.0);
         assert_eq!(s.traffic, vec!["poisson:0.65".to_string()]);
         assert!(!s.adaptive);
+        assert_eq!(s.service_times, "analytic");
+        assert!(!s.empirical());
+        assert_eq!(s.topology.services[0].trace, None);
     }
 }

@@ -9,6 +9,7 @@
 //! measurements — one candidate per prefetcher config, so the SLO
 //! control loop can switch between them at run time.
 
+use super::servicetime::{QuantileTable, ServiceTimeModel};
 use anyhow::{bail, Result};
 
 /// One service in the declarative DAG.
@@ -21,11 +22,33 @@ pub struct ServiceSpec {
     pub replicas: u32,
     /// Mean instructions executed per request at this service.
     pub instrs_per_req: f64,
-    /// Coefficient of variation of per-request work.
+    /// Coefficient of variation of per-request work (analytic
+    /// service-time model; empirical models take their shape from the
+    /// trace instead).
     pub cv: f64,
     /// Upstream services (parents): this service starts for a request
     /// once all of them have completed it. Empty = entry point.
     pub deps: Vec<String>,
+    /// Optional `.slft` trace file replacing the generated trace for
+    /// this service's measurements (empirical service-time mode only;
+    /// `None` = generate from the `app` preset).
+    pub trace: Option<String>,
+}
+
+impl ServiceSpec {
+    /// The measurement source this service's (source × config) cells are
+    /// keyed by: `file:{path}` when replaying a `.slft` trace, the bare
+    /// app preset name otherwise. The prefix keeps the two namespaces
+    /// apart (a trace file whose path spells an app name must not merge
+    /// with that app's generated-trace cells) while leaving app-keyed
+    /// cell seeds byte-identical to pre-trace builds; no app preset can
+    /// collide with it (`file:…` is not a valid preset name).
+    pub fn source(&self) -> String {
+        match &self.trace {
+            Some(path) => format!("file:{path}"),
+            None => self.app.clone(),
+        }
+    }
 }
 
 /// A declarative request DAG.
@@ -53,6 +76,7 @@ impl Topology {
                 } else {
                     vec![names_apps[i - 1].0.to_string()]
                 },
+                trace: None,
             })
             .collect();
         Topology { services, freq_ghz }
@@ -84,6 +108,9 @@ impl Topology {
             }
             if s.cv < 0.0 {
                 bail!("service '{}' has negative cv", s.name);
+            }
+            if s.trace.as_deref() == Some("") {
+                bail!("service '{}' has an empty trace path", s.name);
             }
             for d in &s.deps {
                 if self.index_of(d).is_none() {
@@ -136,12 +163,13 @@ impl Topology {
         Ok(order)
     }
 
-    /// Resolve into a runnable topology. `measure_of(app, label)` returns
-    /// the measured [`Measure`] (IPC + metadata footprint) for a
-    /// (service app, prefetcher config) pair; one candidate service time
-    /// is derived per label, in `labels` order (the engine starts every
-    /// service at candidate 0, and the SLO control loop may advance to
-    /// later — faster — candidates).
+    /// Resolve into a runnable topology. `measure_of(source, label)`
+    /// returns the measured [`Measure`] (IPC + metadata footprint +
+    /// optional empirical quantile table) for a ([`ServiceSpec::source`],
+    /// prefetcher config) pair; one candidate service time is derived
+    /// per label, in `labels` order (the engine starts every service at
+    /// candidate 0, and the SLO control loop may advance to later —
+    /// faster — candidates).
     pub fn resolve<F>(&self, labels: &[String], measure_of: F) -> Result<ResolvedTopology>
     where
         F: Fn(&str, &str) -> Option<Measure>,
@@ -153,19 +181,21 @@ impl Topology {
         let n = self.services.len();
         let mut services = Vec::with_capacity(n);
         for s in &self.services {
+            let source = s.source();
             let mut candidates = Vec::with_capacity(labels.len());
             for label in labels {
-                let m = measure_of(&s.app, label).ok_or_else(|| {
-                    anyhow::anyhow!("no IPC measurement for ({}, {label})", s.app)
+                let m = measure_of(&source, label).ok_or_else(|| {
+                    anyhow::anyhow!("no IPC measurement for ({source}, {label})")
                 })?;
                 if m.ipc <= 0.0 {
-                    bail!("non-positive IPC for ({}, {label})", s.app);
+                    bail!("non-positive IPC for ({source}, {label})");
                 }
                 let cycles = s.instrs_per_req / m.ipc;
                 candidates.push(Candidate {
                     label: label.clone(),
                     mean_us: cycles / (self.freq_ghz * 1000.0),
                     metadata_bytes: m.metadata_bytes,
+                    table: m.table,
                 });
             }
             services.push(ResolvedService {
@@ -188,20 +218,30 @@ impl Topology {
     }
 }
 
-/// One measured (IPC, metadata footprint) pair for an (app, config)
-/// cell — what [`Topology::resolve`] turns into a [`Candidate`].
+/// One measured cell for a (source, config) pair — IPC, metadata
+/// footprint, and (in empirical mode) the trace-replayed per-request
+/// distribution — what [`Topology::resolve`] turns into a [`Candidate`].
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Measure {
     pub ipc: f64,
     /// Prefetcher metadata bytes per replica running this config.
     pub metadata_bytes: u64,
+    /// Unit-mean per-request service-time distribution segmented from
+    /// the measurement trace (`None` = analytic model).
+    pub table: Option<QuantileTable>,
 }
 
 impl Measure {
     /// An IPC-only measurement (no metadata cost), for call sites that
     /// predate the cost-aware policies (figures, tail evaluation).
     pub fn ipc_only(ipc: f64) -> Measure {
-        Measure { ipc, metadata_bytes: 0 }
+        Measure { ipc, metadata_bytes: 0, table: None }
+    }
+
+    /// The same measurement with its empirical table dropped (resolving
+    /// an analytic twin of an empirical topology).
+    pub fn analytic(self) -> Measure {
+        Measure { table: None, ..self }
     }
 }
 
@@ -213,6 +253,20 @@ pub struct Candidate {
     /// Metadata footprint per replica at this config (cost-aware
     /// policies budget against the sum across live replicas).
     pub metadata_bytes: u64,
+    /// Empirical per-request distribution (`None` = analytic jitter).
+    pub table: Option<QuantileTable>,
+}
+
+impl Candidate {
+    /// The service-time model this candidate drives the engine with:
+    /// empirical when a quantile table rode along from measurement,
+    /// analytic (with the service's `cv`) otherwise.
+    pub fn model(&self, cv: f64) -> ServiceTimeModel {
+        match self.table {
+            Some(table) => ServiceTimeModel::Empirical { mean_us: self.mean_us, table },
+            None => ServiceTimeModel::Analytic { mean_us: self.mean_us, cv },
+        }
+    }
 }
 
 /// A service ready for the event loop.
@@ -257,6 +311,7 @@ impl ResolvedTopology {
                     label: "static".into(),
                     mean_us: instrs_per_req / ipc / (freq_ghz * 1000.0),
                     metadata_bytes: 0,
+                    table: None,
                 }],
                 children: if i + 1 < n { vec![(i + 1) as u32] } else { Vec::new() },
                 indegree: u32::from(i > 0),
@@ -339,6 +394,7 @@ mod tests {
                     instrs_per_req: 25_000.0,
                     cv: 0.3,
                     deps: vec![],
+                    trace: None,
                 },
                 ServiceSpec {
                     name: "search".into(),
@@ -347,6 +403,7 @@ mod tests {
                     instrs_per_req: 50_000.0,
                     cv: 0.4,
                     deps: vec!["gateway".into()],
+                    trace: None,
                 },
                 ServiceSpec {
                     name: "ads".into(),
@@ -355,6 +412,7 @@ mod tests {
                     instrs_per_req: 40_000.0,
                     cv: 0.4,
                     deps: vec!["gateway".into()],
+                    trace: None,
                 },
                 ServiceSpec {
                     name: "render".into(),
@@ -363,6 +421,7 @@ mod tests {
                     instrs_per_req: 20_000.0,
                     cv: 0.3,
                     deps: vec!["search".into(), "ads".into()],
+                    trace: None,
                 },
             ],
             freq_ghz: 2.5,
@@ -428,9 +487,9 @@ mod tests {
         let r = t
             .resolve(&["nl".into(), "ceip256".into()], |_, label| {
                 Some(if label == "nl" {
-                    Measure { ipc: 2.0, metadata_bytes: 64 }
+                    Measure { ipc: 2.0, metadata_bytes: 64, table: None }
                 } else {
-                    Measure { ipc: 2.4, metadata_bytes: 25_000 }
+                    Measure { ipc: 2.4, metadata_bytes: 25_000, table: None }
                 })
             })
             .unwrap();
@@ -464,6 +523,66 @@ mod tests {
         assert!((r.bottleneck_rate() - 0.2).abs() < 1e-9);
         assert_eq!(r.roots(), vec![0]);
         assert_eq!(r.services[1].indegree, 1);
+    }
+
+    #[test]
+    fn trace_override_keys_the_measurement_source() {
+        // A service with a `.slft` trace resolves against the trace
+        // path, not the app preset.
+        let mut t = diamond();
+        t.services[1].trace = Some("/tmp/search.slft".into());
+        assert_eq!(t.services[1].source(), "file:/tmp/search.slft");
+        assert_eq!(t.services[0].source(), "admission");
+        let r = t
+            .resolve(&["nl".into()], |source, _| {
+                Some(if source == "file:/tmp/search.slft" {
+                    Measure { ipc: 1.0, metadata_bytes: 0, table: None }
+                } else {
+                    Measure::ipc_only(2.0)
+                })
+            })
+            .unwrap();
+        // search: 50k instrs / IPC 1.0 / 2.5 GHz = 20 µs (vs 10 analytic).
+        assert!((r.services[1].candidates[0].mean_us - 20.0).abs() < 1e-9);
+        assert!((r.services[0].candidates[0].mean_us - 5.0).abs() < 1e-9);
+        // A trace path that *spells* an app name must not merge with
+        // that app's generated-trace cells (namespace prefix).
+        let mut aliased = diamond();
+        aliased.services[1].trace = Some("websearch".into());
+        assert_eq!(aliased.services[1].source(), "file:websearch");
+        assert_ne!(aliased.services[1].source(), aliased.services[1].app);
+        // Empty trace paths are caught structurally.
+        let mut bad = diamond();
+        bad.services[0].trace = Some(String::new());
+        assert!(bad.validate().is_err(), "empty trace path not rejected");
+    }
+
+    #[test]
+    fn candidate_model_selects_empirical_when_a_table_rides_along() {
+        use crate::cluster::servicetime::QuantileTable;
+        let table = QuantileTable::normalized(&[1.0; 32]).unwrap();
+        let t = diamond();
+        let r = t
+            .resolve(&["nl".into()], |_, _| {
+                Some(Measure { ipc: 2.0, metadata_bytes: 0, table: Some(table) })
+            })
+            .unwrap();
+        let c = &r.services[0].candidates[0];
+        assert_eq!(c.table, Some(table));
+        match c.model(0.3) {
+            ServiceTimeModel::Empirical { mean_us, .. } => {
+                assert!((mean_us - 5.0).abs() < 1e-9)
+            }
+            other => panic!("expected empirical model, got {other:?}"),
+        }
+        // Stripping the table gives back the analytic model.
+        match (Candidate { table: None, ..c.clone() }).model(0.3) {
+            ServiceTimeModel::Analytic { mean_us, cv } => {
+                assert!((mean_us - 5.0).abs() < 1e-9);
+                assert_eq!(cv, 0.3);
+            }
+            other => panic!("expected analytic model, got {other:?}"),
+        }
     }
 
     #[test]

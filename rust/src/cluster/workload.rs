@@ -112,8 +112,22 @@ impl TrafficShape {
                 }
             }
             TrafficShape::Ramp { from, to, duration_us } => {
-                positive(*from, "start util")?;
-                positive(*to, "end util")?;
+                // A ramp may *start* from idle (cold-start scenario:
+                // `ramp:0:0.9:…`) — thinning handles the transient
+                // zero-rate region. It must *end* above zero, though:
+                // max(from, to) > 0 alone would admit a terminal rate of
+                // 0, where an open-loop run waiting for its next arrival
+                // rejects every thinning draw forever.
+                if !from.is_finite() || *from < 0.0 {
+                    bail!("traffic shape '{spec}': start util must be ≥ 0, got {from}");
+                }
+                if !to.is_finite() || *to <= 0.0 {
+                    bail!(
+                        "traffic shape '{spec}': end util must be > 0, got {to} \
+                         (a terminal rate of 0 can never complete an open-loop run; \
+                         ramping *from* 0 is allowed)"
+                    );
+                }
                 positive(*duration_us, "duration")?;
             }
         }
@@ -166,7 +180,17 @@ impl TrafficShape {
         match self {
             TrafficShape::Poisson { util } => *util,
             TrafficShape::Diurnal { util, amplitude, .. } => util * (1.0 + amplitude),
-            TrafficShape::Burst { util, mult, .. } => util * mult,
+            // duty = 0 means the on-phase never happens (`util_at` never
+            // exceeds `util`): the envelope must match the curve, or
+            // every thinning draw is wasted against a rate the process
+            // never reaches and the RNG stream is skewed.
+            TrafficShape::Burst { util, mult, duty, .. } => {
+                if *duty > 0.0 {
+                    util * mult
+                } else {
+                    *util
+                }
+            }
             TrafficShape::Ramp { from, to, .. } => from.max(*to),
         }
     }
@@ -184,10 +208,23 @@ pub struct ArrivalGen {
 }
 
 impl ArrivalGen {
-    pub fn new(shape: TrafficShape, rate_per_us: f64, seed: u64) -> ArrivalGen {
-        debug_assert!(rate_per_us > 0.0);
+    /// Build a generator. Fails on a non-positive (or non-finite)
+    /// reference rate or peak rate: either would make [`Self::next_arrival`]
+    /// spin forever — a `debug_assert!` used to be the only guard, so
+    /// release builds hung instead of erroring.
+    pub fn new(shape: TrafficShape, rate_per_us: f64, seed: u64) -> Result<ArrivalGen> {
+        if !rate_per_us.is_finite() || rate_per_us <= 0.0 {
+            bail!("arrival generator: reference rate must be > 0, got {rate_per_us}");
+        }
         let peak_rate = shape.peak_util() * rate_per_us;
-        ArrivalGen { shape, rate_per_us, peak_rate, t: 0.0, rng: Rng::new(seed) }
+        if !peak_rate.is_finite() || peak_rate <= 0.0 {
+            bail!(
+                "arrival generator: shape '{}' has peak rate {peak_rate} — \
+                 next_arrival would never accept a draw",
+                shape.label()
+            );
+        }
+        Ok(ArrivalGen { shape, rate_per_us, peak_rate, t: 0.0, rng: Rng::new(seed) })
     }
 
     /// Next arrival instant (µs, strictly increasing).
@@ -228,6 +265,12 @@ mod tests {
             TrafficShape::parse("ramp:0.3:0.9:50000").unwrap(),
             TrafficShape::Ramp { from: 0.3, to: 0.9, duration_us: 50_000.0 }
         );
+        // Cold start from idle is expressible (regression: `from > 0`
+        // used to be required, so `ramp:0:…` was rejected).
+        assert_eq!(
+            TrafficShape::parse("ramp:0:0.9:50000").unwrap(),
+            TrafficShape::Ramp { from: 0.0, to: 0.9, duration_us: 50_000.0 }
+        );
         // Uppercase kinds parse like the prefetcher specs do.
         assert!(TrafficShape::parse("POISSON:0.5").is_ok());
     }
@@ -247,11 +290,17 @@ mod tests {
             "burst params on a poisson spec must not be dropped"
         );
         assert!(TrafficShape::parse("ramp:0.3:0.9:1000:7").is_err());
+        // A ramp ending at rate 0 can never complete an open-loop run.
+        assert!(TrafficShape::parse("ramp:0.9:0:1000").is_err(), "terminal rate 0");
+        assert!(TrafficShape::parse("ramp:0:0:1000").is_err(), "flat-zero ramp");
+        assert!(TrafficShape::parse("ramp:-0.1:0.9:1000").is_err(), "negative start");
     }
 
     #[test]
     fn labels_roundtrip_through_parse() {
-        for spec in ["poisson:0.65", "diurnal:0.6:0.4:200000", "burst:0.5:3:50000:0.2"] {
+        for spec in
+            ["poisson:0.65", "diurnal:0.6:0.4:200000", "burst:0.5:3:50000:0.2", "ramp:0:0.9:50000"]
+        {
             let shape = TrafficShape::parse(spec).unwrap();
             assert_eq!(TrafficShape::parse(&shape.label()).unwrap(), shape);
         }
@@ -277,8 +326,8 @@ mod tests {
     #[test]
     fn arrivals_are_increasing_and_deterministic() {
         let shape = TrafficShape::Burst { util: 0.5, mult: 3.0, period_us: 1000.0, duty: 0.2 };
-        let mut a = ArrivalGen::new(shape.clone(), 0.2, 42);
-        let mut b = ArrivalGen::new(shape, 0.2, 42);
+        let mut a = ArrivalGen::new(shape.clone(), 0.2, 42).unwrap();
+        let mut b = ArrivalGen::new(shape, 0.2, 42).unwrap();
         let mut last = 0.0;
         for _ in 0..5_000 {
             let ta = a.next_arrival();
@@ -291,7 +340,7 @@ mod tests {
     #[test]
     fn poisson_rate_is_respected() {
         // util 0.5 × rate 0.2/µs = 0.1 arrivals/µs → mean IAT 10 µs.
-        let mut g = ArrivalGen::new(TrafficShape::Poisson { util: 0.5 }, 0.2, 7);
+        let mut g = ArrivalGen::new(TrafficShape::Poisson { util: 0.5 }, 0.2, 7).unwrap();
         let n = 50_000;
         let mut t = 0.0;
         for _ in 0..n {
@@ -304,7 +353,7 @@ mod tests {
     #[test]
     fn burst_concentrates_arrivals_in_on_phase() {
         let shape = TrafficShape::Burst { util: 0.4, mult: 4.0, period_us: 1000.0, duty: 0.25 };
-        let mut g = ArrivalGen::new(shape, 0.1, 9);
+        let mut g = ArrivalGen::new(shape, 0.1, 9).unwrap();
         let mut on = 0u32;
         let mut total = 0u32;
         for _ in 0..20_000 {
@@ -317,5 +366,66 @@ mod tests {
         // On-phase carries mult×duty/(mult×duty + (1−duty)) = 4/7 ≈ 57%.
         let frac = on as f64 / total as f64;
         assert!((0.47..0.67).contains(&frac), "on-phase fraction {frac}");
+    }
+
+    #[test]
+    fn zero_rate_is_an_error_not_a_release_mode_hang() {
+        // Regression: `rate_per_us = 0` (or a zero peak) was guarded only
+        // by a debug_assert!, so release builds spun forever inside
+        // next_arrival. Now construction fails up front.
+        assert!(ArrivalGen::new(TrafficShape::Poisson { util: 0.5 }, 0.0, 1).is_err());
+        assert!(ArrivalGen::new(TrafficShape::Poisson { util: 0.5 }, -1.0, 1).is_err());
+        assert!(ArrivalGen::new(TrafficShape::Poisson { util: 0.5 }, f64::NAN, 1).is_err());
+        // A shape whose peak_util is 0 is equally unrunnable, whatever
+        // the reference rate (unreachable via parse, but the constructor
+        // is public API).
+        let flat = TrafficShape::Ramp { from: 0.0, to: 0.0, duration_us: 100.0 };
+        assert!(ArrivalGen::new(flat, 1.0, 1).is_err());
+    }
+
+    #[test]
+    fn burst_duty_zero_envelope_matches_the_curve() {
+        // Regression: duty = 0 means the on-phase never happens, but
+        // peak_util() still reported util × mult — a 3× inflated thinning
+        // envelope that skewed (and wasted 2/3 of) the RNG draws.
+        let b = TrafficShape::Burst { util: 0.5, mult: 3.0, period_us: 1000.0, duty: 0.0 };
+        assert_eq!(b.peak_util(), 0.5);
+        for t in [0.0, 1.0, 250.0, 999.9, 1000.0] {
+            assert_eq!(b.util_at(t), 0.5, "duty-0 burst must stay flat at t={t}");
+        }
+        // The generated process is plain Poisson at util × rate:
+        // util 0.5 × rate 0.2/µs = 0.1 arrivals/µs → mean IAT 10 µs.
+        let mut g = ArrivalGen::new(b, 0.2, 7).unwrap();
+        let n = 50_000;
+        let mut t = 0.0;
+        for _ in 0..n {
+            t = g.next_arrival();
+        }
+        let mean_iat = t / n as f64;
+        assert!((mean_iat - 10.0).abs() < 0.3, "mean IAT {mean_iat}");
+    }
+
+    #[test]
+    fn ramp_from_idle_generates_a_cold_start() {
+        // Regression: `validate` required from > 0, so the cold-start
+        // shape could not be expressed at all.
+        let r = TrafficShape::parse("ramp:0:0.8:1000").unwrap();
+        assert_eq!(r.util_at(0.0), 0.0);
+        assert!((r.util_at(500.0) - 0.4).abs() < 1e-12);
+        assert_eq!(r.util_at(5000.0), 0.8);
+        assert_eq!(r.peak_util(), 0.8);
+        let mut g = ArrivalGen::new(r, 0.5, 11).unwrap();
+        let mut last = 0.0;
+        let mut first = f64::INFINITY;
+        for _ in 0..5_000 {
+            let t = g.next_arrival();
+            assert!(t > last);
+            first = first.min(t);
+            last = t;
+        }
+        // Thinning rejects the zero-rate region: no arrival lands at the
+        // very start, and the stream still makes progress.
+        assert!(first > 0.0);
+        assert!(last > 1000.0, "ramp never left the cold-start region");
     }
 }

@@ -149,6 +149,11 @@ pub struct SimConfig {
     /// Confidence threshold for issuing EIP/selective-CEIP destinations.
     pub conf_threshold: u8,
     pub seed: u64,
+    /// Record per-request cycle counts by segmenting the trace on its
+    /// `ctx` tag (`SimResult::segments`) — the cluster simulator's
+    /// empirical service-time models are fit from these. Observation
+    /// only: never perturbs timing, stats, or RNG draws.
+    pub track_segments: bool,
 }
 
 impl Default for SimConfig {
@@ -166,6 +171,7 @@ impl Default for SimConfig {
             // modes raise this.
             conf_threshold: 1,
             seed: 1,
+            track_segments: false,
         }
     }
 }
@@ -237,6 +243,7 @@ impl SimConfig {
             ("backend_expose", Json::num(self.backend_expose)),
             ("conf_threshold", Json::num(self.conf_threshold as f64)),
             ("seed", Json::num(self.seed as f64)),
+            ("track_segments", Json::Bool(self.track_segments)),
         ])
     }
 
@@ -329,6 +336,9 @@ impl SimConfig {
         }
         if let Some(v) = j.get("seed").and_then(Json::as_u64) {
             cfg.seed = v;
+        }
+        if let Some(v) = j.get("track_segments").and_then(Json::as_bool) {
+            cfg.track_segments = v;
         }
         Ok(cfg)
     }

@@ -34,6 +34,7 @@ pub fn run_fleet(jobs: Vec<FleetJob>, parallelism: usize) -> Vec<CellResult> {
             cfg: j.cfg,
             records: j.records,
             trace_seed: j.trace_seed,
+            trace: None,
         })
         .collect();
     run_cells(&cells, parallelism.max(1))

@@ -102,6 +102,7 @@ impl Matrix {
                     },
                     records: ctx.records_per_app,
                     trace_seed: ctx.seed,
+                    trace: None,
                 });
             }
         }
@@ -486,6 +487,7 @@ pub fn ablation(ctx: &FigureCtx) -> Table {
                 },
                 records: ctx.records_per_app,
                 trace_seed: ctx.seed,
+                trace: None,
             });
         }
     }
@@ -556,7 +558,8 @@ pub fn rpc_tails(m: &Matrix) -> Table {
                 base_rate_per_us: lambda,
             },
             None,
-        );
+        )
+        .expect("rpc chain parameters are statically valid");
         t.row(vec![
             cfg.into(),
             f2(r.p50_us),

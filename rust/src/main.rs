@@ -4,6 +4,7 @@
 //! slofetch figure <1|2|...|13|table1|summary|rpc|ablation|all> [--records N] [--seed S] [--out DIR] [--threads N]
 //! slofetch campaign --spec FILE [--threads N] [--out results.jsonl]
 //! slofetch cluster --spec FILE [--threads N] [--policies reactive,hysteresis,...]
+//!                  [--service-times analytic|empirical] [--trace FILE.slft]
 //! slofetch simulate --app websearch --prefetcher ceip256 [--records N] [--ml] [--budget N]
 //! slofetch gen-trace --app websearch --records N --out trace.slft
 //! slofetch deploy --app admission --candidate cheip2k [--records N]
@@ -59,6 +60,7 @@ const USAGE: &str = "usage:
   slofetch figure <1..13|table1|summary|rpc|ablation|all> [--records N] [--seed S] [--out DIR] [--threads N]
   slofetch campaign --spec FILE [--threads N] [--out results.jsonl]
   slofetch cluster --spec FILE [--threads N] [--policies reactive,hysteresis,predictive,cost-aware]
+                   [--service-times analytic|empirical] [--trace FILE.slft]
   slofetch simulate --app A --prefetcher P [--records N] [--ml] [--adapt-window] [--budget N] [--pjrt]
   slofetch gen-trace --app A --records N --out FILE
   slofetch deploy --app A --candidate P [--records N]
@@ -163,8 +165,31 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     if let Some(policies) = args.list_opt("policies") {
         spec.adaptive = false;
         spec.policies = policies;
-        spec.validate()?;
     }
+    // `--service-times empirical` switches every scenario to
+    // trace-replayed per-request service times (DESIGN.md §8);
+    // `--trace FILE.slft` additionally replays that file for *every*
+    // service (and implies empirical mode).
+    if let Some(model) = args.opt("service-times") {
+        spec.service_times = model.to_string();
+    }
+    if let Some(trace) = args.opt("trace") {
+        // Contradictory flags are an error, not a silent override: the
+        // user who explicitly asked for the analytic model must not get
+        // a trace-replayed run.
+        if matches!(args.opt("service-times"), Some(m) if m != "empirical") {
+            anyhow::bail!(
+                "--trace replays service times from {trace} and requires \
+                 --service-times empirical (got '{}')",
+                args.opt("service-times").unwrap_or_default()
+            );
+        }
+        spec.service_times = "empirical".into();
+        for s in &mut spec.topology.services {
+            s.trace = Some(trace.to_string());
+        }
+    }
+    spec.validate()?;
     let threads = args.threads()?;
     let t0 = std::time::Instant::now();
     let out = slofetch::cluster::run_spec(&spec, threads)?;
@@ -178,6 +203,9 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         out.total_events as f64 / t0.elapsed().as_secs_f64().max(1e-9) / 1e6,
     );
     println!("{}", slofetch::cluster::report(&out).markdown());
+    if let Some(t) = slofetch::cluster::model_report(&out) {
+        println!("{}", t.markdown());
+    }
     if let Some(t) = slofetch::cluster::action_report(&out) {
         println!("{}", t.markdown());
     }

@@ -40,6 +40,11 @@ pub struct SimResult {
     pub pair_stats: PairStats,
     pub metadata_bytes: u64,
     pub controller: Option<crate::ml::controller::ControllerStats>,
+    /// Per-request cycle counts, one per maximal run of records sharing
+    /// a `ctx` tag (`Some` only under `SimConfig::track_segments`) —
+    /// the raw material for empirical service-time distributions
+    /// (DESIGN.md §8).
+    pub segments: Option<Vec<f64>>,
 }
 
 impl SimResult {
@@ -80,6 +85,10 @@ pub struct Engine<'t> {
     signal_mark: u64,
     misses_this_window: u64,
     misses_prev_window: u64,
+    // Per-ctx-segment cycle tracking (observation only, off by default).
+    seg_prev_ctx: Option<u8>,
+    seg_mark: f64,
+    segments: Vec<f64>,
 }
 
 impl<'t> Engine<'t> {
@@ -118,8 +127,28 @@ impl<'t> Engine<'t> {
             signal_mark: 0,
             misses_this_window: 0,
             misses_prev_window: 0,
+            seg_prev_ctx: None,
+            seg_mark: 0.0,
+            segments: Vec::new(),
             cfg,
         }
+    }
+
+    /// Cycle counter including the fractional accumulator.
+    #[inline]
+    fn now_cycles(&self) -> f64 {
+        self.cycle as f64 + self.frac_acc
+    }
+
+    /// Close the open `ctx` segment (if any) at the current cycle and
+    /// start a new one.
+    fn roll_segment(&mut self, ctx: u8) {
+        let now = self.now_cycles();
+        if self.seg_prev_ctx.is_some() {
+            self.segments.push(now - self.seg_mark);
+        }
+        self.seg_mark = now;
+        self.seg_prev_ctx = Some(ctx);
     }
 
     /// Attach a pre-built controller (e.g. with a PJRT backend).
@@ -401,9 +430,13 @@ impl<'t> Engine<'t> {
 
     /// Run to completion.
     pub fn run(mut self) -> SimResult {
+        let track = self.cfg.track_segments;
         for i in 0..self.records.len() {
             self.pos = i;
             let rec = self.records[i];
+            if track && self.seg_prev_ctx != Some(rec.ctx) {
+                self.roll_segment(rec.ctx);
+            }
             match rec.kind {
                 Kind::Fetch => self.step_fetch(rec),
                 Kind::Load | Kind::Store => self.step_data(rec),
@@ -411,6 +444,10 @@ impl<'t> Engine<'t> {
             if i as u64 % SIGNAL_PERIOD == SIGNAL_PERIOD - 1 {
                 self.refresh_signals(rec.ctx);
             }
+        }
+        if track && self.seg_prev_ctx.is_some() {
+            let end = self.now_cycles();
+            self.segments.push(end - self.seg_mark);
         }
         self.stats.cycles = self.cycle as f64 + self.frac_acc;
         self.stats.dram_bytes = self.dram.bytes_total;
@@ -422,6 +459,7 @@ impl<'t> Engine<'t> {
             pair_stats: self.pf.pair_stats(),
             metadata_bytes: self.pf.metadata_bytes(),
             controller: self.controller.as_ref().map(|c| c.stats),
+            segments: track.then_some(self.segments),
         }
     }
 }
@@ -573,6 +611,35 @@ mod tests {
         let r = run_kind(&recs, PrefetcherKind::Eip { entries: 256 });
         assert!(r.stats.dram_bytes > 0);
         assert!(r.stats.dram_bytes_per_cycle() < 10.24, "cannot exceed channel");
+    }
+
+    #[test]
+    fn ctx_segments_partition_the_run_without_perturbing_it() {
+        let recs = trace("websearch", 60_000);
+        let base = SimConfig {
+            prefetcher: PrefetcherKind::Ceip { entries: 256, window: 8, whole_window: true },
+            ..Default::default()
+        };
+        let plain = run(&base, &recs);
+        assert!(plain.segments.is_none(), "segments tracked without opting in");
+        let tracked = run(&SimConfig { track_segments: true, ..base }, &recs);
+        // Observation only: identical timing and prefetch behavior.
+        assert_eq!(tracked.stats.cycles, plain.stats.cycles);
+        assert_eq!(tracked.stats.pf_issued, plain.stats.pf_issued);
+        let segs = tracked.segments.expect("segments missing");
+        // One segment per maximal ctx run: enough to fit a distribution,
+        // and they exactly partition the cycle counter.
+        let ctx_runs = 1 + recs.windows(2).filter(|w| w[0].ctx != w[1].ctx).count();
+        assert_eq!(segs.len(), ctx_runs);
+        assert!(segs.len() >= 16, "only {} ctx segments", segs.len());
+        let total: f64 = segs.iter().sum();
+        assert!(
+            (total - tracked.stats.cycles).abs() <= 1.0 + tracked.stats.cycles * 1e-9,
+            "segments {} do not partition cycles {}",
+            total,
+            tracked.stats.cycles
+        );
+        assert!(segs.iter().all(|s| *s >= 0.0));
     }
 
     #[test]

@@ -43,10 +43,14 @@ impl Digest {
         self.samples.is_empty()
     }
 
-    /// Percentile in [0, 100] with linear interpolation.
+    /// Percentile in [0, 100] with linear interpolation. An empty digest
+    /// returns `f64::NAN`: an empty SLO window must never read as a
+    /// perfect 0 µs tail, and NaN fails every threshold comparison, so
+    /// forgetting to check emptiness can only make a caller *less*
+    /// compliant, never more.
     pub fn percentile(&mut self, p: f64) -> f64 {
         if self.samples.is_empty() {
-            return 0.0;
+            return f64::NAN;
         }
         if !self.sorted {
             self.samples
@@ -65,9 +69,11 @@ impl Digest {
         }
     }
 
+    /// Mean of the samples (`f64::NAN` when empty — see
+    /// [`Digest::percentile`]).
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
-            0.0
+            f64::NAN
         } else {
             self.samples.iter().sum::<f64>() / self.samples.len() as f64
         }
@@ -234,16 +240,21 @@ mod tests {
         assert_eq!(d.len(), 50);
         d.clear();
         assert!(d.is_empty());
-        assert_eq!(d.percentile(99.0), 0.0);
+        assert!(d.percentile(99.0).is_nan(), "cleared digest must not read as 0 µs");
         d.add(3.0);
         assert_eq!(d.percentile(50.0), 3.0);
     }
 
     #[test]
-    fn digest_empty_is_zero() {
+    fn digest_empty_is_nan_not_zero() {
+        // Regression: an empty SLO window used to report a perfect p99
+        // of 0 µs and a 0 µs mean — indistinguishable from an actually
+        // instant window. NaN fails every threshold comparison instead.
         let mut d = Digest::new();
-        assert_eq!(d.percentile(95.0), 0.0);
-        assert_eq!(d.mean(), 0.0);
+        assert!(d.percentile(95.0).is_nan());
+        assert!(d.mean().is_nan());
+        // NaN is incomparable: no SLO threshold can read it as compliant.
+        assert_eq!(d.percentile(99.0).partial_cmp(&100.0), None);
     }
 
     #[test]

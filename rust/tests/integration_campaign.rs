@@ -182,6 +182,55 @@ fn cluster_axis_store_is_byte_identical_and_resumes_from_old_stores() {
 }
 
 #[test]
+fn empirical_slft_cluster_campaign_resumes_while_trace_unchanged() {
+    // Trace-replayed cluster cells (DESIGN.md §8 "Service-time models"):
+    // the cell key hashes the .slft file *content*, so a rerun with the
+    // trace unchanged recomputes 0 cells, and rewriting the trace in
+    // place invalidates them.
+    let trace_path = tmp("replay.slft");
+    let app = apps::app("serde").unwrap();
+    let (meta, records, _) = gen::generate(&app, 11, 12_000);
+    slofetch::trace::codec::write_trace_file(&trace_path, &meta, &records).unwrap();
+
+    let mut cluster = small_cluster();
+    cluster.service_times = "empirical".into();
+    cluster.topology.services[1].trace = Some(trace_path.to_string_lossy().into_owned());
+    let spec = CampaignSpec {
+        clusters: vec![cluster],
+        policies: vec!["reactive".into()],
+        ..spec()
+    };
+    let path = tmp("empirical.jsonl");
+    {
+        let mut store = ResultStore::open(&path).unwrap();
+        let out = campaign::run_to_store(&spec, 2, &mut store).unwrap();
+        assert_eq!(out.computed, 7); // 6 sim cells + 1 cluster cell
+        assert_eq!(store.cluster_records()[0].service_times, "empirical");
+    }
+    let bytes = std::fs::read(&path).unwrap();
+    {
+        // Unchanged trace content → full resume, file untouched.
+        let mut store = ResultStore::open(&path).unwrap();
+        let again = campaign::run_to_store(&spec, 4, &mut store).unwrap();
+        assert_eq!(again.computed, 0, "resume recomputed empirical cluster cells");
+        assert_eq!(again.skipped, 7);
+    }
+    assert_eq!(std::fs::read(&path).unwrap(), bytes, "pure resume rewrote the store");
+    {
+        // Rewrite the trace (same path, different content): only the
+        // cluster cell recomputes, under a new content-hashed key.
+        let (meta2, records2, _) = gen::generate(&app, 12, 12_000);
+        slofetch::trace::codec::write_trace_file(&trace_path, &meta2, &records2).unwrap();
+        let mut store = ResultStore::open(&path).unwrap();
+        let out = campaign::run_to_store(&spec, 2, &mut store).unwrap();
+        assert_eq!(out.computed, 1, "trace edit must invalidate exactly the cluster cell");
+        assert_eq!(store.cluster_records().len(), 2);
+    }
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&trace_path).ok();
+}
+
+#[test]
 fn store_lines_match_direct_engine_runs() {
     // One cell cross-checked against a hand-built serial run.
     let spec = spec();

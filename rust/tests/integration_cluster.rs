@@ -8,6 +8,7 @@
 //! config in a bursty scenario.
 
 use slofetch::cluster::{self, engine, ClusterSpec, ResolvedTopology, RunParams, TrafficShape};
+use slofetch::trace::{codec, gen};
 use std::path::Path;
 use std::sync::OnceLock;
 
@@ -133,6 +134,91 @@ fn policy_suite_covers_every_policy_and_shape() {
     }
 }
 
+fn empirical_example_spec() -> ClusterSpec {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/cluster_empirical.json");
+    ClusterSpec::load(&path).expect("examples/cluster_empirical.json must load")
+}
+
+#[test]
+fn empirical_example_spec_is_thread_invariant_and_compares_models() {
+    // The shipped trace-replayed spec (DESIGN.md §8 "Service-time
+    // models"): byte-identical reports across thread counts and reruns,
+    // and an analytic-vs-empirical comparison table with one row per
+    // (config, shape).
+    let mut spec = empirical_example_spec();
+    spec.requests = 8_000; // keep the integration run quick
+    assert!(spec.empirical());
+    let a = cluster::run_spec(&spec, 1).unwrap();
+    let b = cluster::run_spec(&spec, 4).unwrap();
+    assert_eq!(a.scenarios.len(), spec.scenario_count());
+    assert_eq!(
+        cluster::report(&a).markdown(),
+        cluster::report(&b).markdown(),
+        "empirical cluster output depends on --threads"
+    );
+    let ma = cluster::model_report(&a).expect("model comparison missing");
+    let mb = cluster::model_report(&b).expect("model comparison missing");
+    assert_eq!(ma.markdown(), mb.markdown());
+    assert_eq!(ma.rows.len(), spec.prefetchers.len() * spec.traffic.len());
+    for (x, y) in a.scenarios.iter().zip(&b.scenarios) {
+        assert_eq!(x.p99_us.to_bits(), y.p99_us.to_bits(), "{}|{}", x.label, x.traffic);
+        assert_eq!(x.events, y.events);
+    }
+    // Every empirical twin is a real, distinct run of the same load.
+    for emp in a.scenarios.iter().filter(|s| s.label.ends_with(cluster::EMPIRICAL_SUFFIX)) {
+        let base = emp.label.trim_end_matches(cluster::EMPIRICAL_SUFFIX);
+        let ana = a
+            .scenarios
+            .iter()
+            .find(|s| s.label == base && s.traffic == emp.traffic)
+            .expect("analytic twin missing");
+        assert_eq!(emp.requests, ana.requests);
+        assert!(emp.p50_us <= emp.p95_us && emp.p95_us <= emp.p99_us, "{}", emp.label);
+        assert_ne!(emp.p99_us.to_bits(), ana.p99_us.to_bits(), "{} ran analytic", emp.label);
+    }
+}
+
+#[test]
+fn slft_file_replays_through_the_cluster_and_roundtrips() {
+    // gen-trace artifact → .slft file → per-service replay: the codec
+    // round-trip feeds prepare_spec, which must fit identical quantile
+    // tables from the file as from the in-memory records, and reruns
+    // must agree bit-for-bit.
+    let dir = std::env::temp_dir().join("slofetch_cluster_slft");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ws.slft");
+    let app = gen::apps::app("websearch").unwrap();
+    let (meta, records, _) = gen::generate(&app, 7, 20_000);
+    codec::write_trace_file(&path, &meta, &records).unwrap();
+    let (meta2, records2) = codec::read_trace_file(&path).unwrap();
+    assert_eq!(meta2, meta);
+    assert_eq!(records2, records, "codec round-trip degraded the replay input");
+
+    let mut spec = empirical_example_spec();
+    spec.requests = 4_000;
+    spec.records = 8_000;
+    spec.topology.services[0].trace = Some(path.to_string_lossy().into_owned());
+    spec.validate().unwrap();
+    let p1 = cluster::prepare_spec(&spec, 1).unwrap();
+    let p2 = cluster::prepare_spec(&spec, 4).unwrap();
+    for (a, b) in p1.policy_topo.services.iter().zip(&p2.policy_topo.services) {
+        for (ca, cb) in a.candidates.iter().zip(&b.candidates) {
+            let ta = ca.table.expect("file-backed candidate lost its table");
+            let tb = cb.table.expect("file-backed candidate lost its table");
+            assert_eq!(ta.fingerprint(), tb.fingerprint(), "tables differ across threads");
+            assert_eq!(ca.mean_us.to_bits(), cb.mean_us.to_bits());
+        }
+    }
+    // The file-backed service keys its measurement by the trace path,
+    // so the spec reports one extra measurement source... unless the
+    // other services already covered the app; either way the run is
+    // deterministic end to end.
+    let a = cluster::run_spec(&spec, 1).unwrap();
+    let b = cluster::run_spec(&spec, 4).unwrap();
+    assert_eq!(cluster::report(&a).markdown(), cluster::report(&b).markdown());
+    std::fs::remove_file(&path).ok();
+}
+
 #[test]
 fn degenerate_chain_matches_rpc_orderings() {
     // Synthetic IPCs, no trace simulation: the linear chain through the
@@ -158,6 +244,7 @@ fn degenerate_chain_matches_rpc_orderings() {
             &RunParams { requests: 40_000, seed: 17, slo_us: 1e9, base_rate_per_us: lambda },
             None,
         )
+        .unwrap()
     };
     let base = run(&nl);
     // Queueing tail above zero-load latency, ordered percentiles.
