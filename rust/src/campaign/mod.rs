@@ -248,24 +248,80 @@ pub fn run_to_store(
             );
         }
     }
+    // Tenant cells run under the first (baseline) config label. One
+    // co-located run serves every pending coloc cell of its cluster, so
+    // it executes once per cluster — deterministically, by index.
+    let mut coloc_needed: Vec<usize> = cpending
+        .iter()
+        .filter(|c| matches!(c.tenant, Some((_, false))))
+        .map(|c| c.cluster)
+        .collect();
+    coloc_needed.sort_unstable();
+    coloc_needed.dedup();
+    let coloc_runs = runner::parallel_map(coloc_needed.len(), threads, |i| {
+        let ci = coloc_needed[i];
+        crate::cluster::run_tenant_coloc(&prepared[&ci], &spec.clusters[ci], 0)
+    });
+    let mut coloc_of: HashMap<usize, crate::cluster::ClusterResult> = HashMap::new();
+    for (ci, r) in coloc_needed.iter().zip(coloc_runs.into_iter()) {
+        coloc_of.insert(*ci, r?);
+    }
     let results = runner::parallel_map(cpending.len(), threads, |i| {
         let c = cpending[i];
-        crate::cluster::run_policy_scenario(
-            &prepared[&c.cluster],
-            &spec.clusters[c.cluster],
-            &c.policy,
-            &c.shape,
-        )
+        match c.tenant {
+            None => crate::cluster::run_policy_scenario(
+                &prepared[&c.cluster],
+                &spec.clusters[c.cluster],
+                &c.policy,
+                &c.shape,
+            )
+            .map(Some),
+            Some((ti, true)) => crate::cluster::run_tenant_solo(
+                &prepared[&c.cluster],
+                &spec.clusters[c.cluster],
+                0,
+                ti,
+            )
+            .map(Some),
+            // Served from the shared co-located run above.
+            Some((_, false)) => Ok(None),
+        }
     });
     for (c, r) in cpending.iter().zip(results.into_iter()) {
         let cluster = &spec.clusters[c.cluster];
-        let rec = ClusterCellRecord::from_result(
-            &c.key,
-            &cluster.name,
-            &c.policy.label(),
-            &cluster.service_times,
-            &r?,
-        );
+        let rec = match c.tenant {
+            None => {
+                let run = r?.expect("policy cell produced no result");
+                ClusterCellRecord::from_result(
+                    &c.key,
+                    &cluster.name,
+                    &c.policy.label(),
+                    &cluster.service_times,
+                    &run,
+                )
+            }
+            Some((ti, solo)) => {
+                let owned;
+                let run = if solo {
+                    owned = r?.expect("solo cell produced no result");
+                    &owned
+                } else {
+                    // Surface a (cancelled) error; the value is unused.
+                    let _ = r?;
+                    &coloc_of[&c.cluster]
+                };
+                // A solo run holds exactly its own tenant's stats.
+                let ts = if solo { &run.tenants[0] } else { &run.tenants[ti] };
+                ClusterCellRecord::from_tenant(
+                    &c.key,
+                    &cluster.name,
+                    if solo { "solo" } else { "coloc" },
+                    &cluster.service_times,
+                    run,
+                    ts,
+                )
+            }
+        };
         if store.push_cluster(rec)? {
             computed += 1;
         }
@@ -454,6 +510,68 @@ mod tests {
         // Resume: zero recomputed cells.
         let again = run_to_store(&spec, 4, &mut store).unwrap();
         assert_eq!(again.computed, 0, "empirical cluster cells recomputed on resume");
+    }
+
+    fn tenant_cluster() -> crate::cluster::ClusterSpec {
+        let j = crate::util::json::Json::parse(
+            r#"{
+                "name": "shared",
+                "services": [
+                    {"name": "gw", "app": "admission"},
+                    {"name": "be", "app": "serde", "deps": ["gw"]}
+                ],
+                "prefetchers": ["nl", "ceip256"],
+                "traffic": ["poisson:0.6"],
+                "requests": 3000,
+                "records": 4000,
+                "adaptive": false,
+                "tenants": [
+                    {"name": "web", "services": ["gw"], "traffic": "poisson:0.4",
+                     "ways": 4, "demand_ways": 6},
+                    {"name": "batch", "traffic": "poisson:0.3", "ways": 4,
+                     "demand_ways": 5}
+                ]
+            }"#,
+        )
+        .unwrap();
+        crate::cluster::ClusterSpec::from_json(&j).unwrap()
+    }
+
+    #[test]
+    fn tenant_cells_record_paired_runs_and_resume() {
+        let spec = CampaignSpec { clusters: vec![tenant_cluster()], ..quick_spec() };
+        let mut store = ResultStore::in_memory();
+        let out = run_to_store(&spec, 2, &mut store).unwrap();
+        // 4 sim cells + (2 tenants × {solo, coloc}).
+        assert_eq!(out, CampaignOutcome { total: 8, computed: 8, skipped: 0 });
+        let recs = store.cluster_records();
+        assert_eq!(recs.len(), 4);
+        for r in recs {
+            assert!(!r.tenant.is_empty(), "{}: tenant label missing", r.key);
+            assert!(matches!(r.policy.as_str(), "solo" | "coloc"), "{}", r.policy);
+            assert!(r.windows > 0, "{}: no SLO windows", r.key);
+            assert!(r.p50_us <= r.p99_us && r.p99_us.is_finite(), "{}", r.key);
+        }
+        // Co-located cells share one run: same event count, and each
+        // tenant still completed its own full request count.
+        let coloc: Vec<_> = recs.iter().filter(|r| r.policy == "coloc").collect();
+        assert_eq!(coloc.len(), 2);
+        assert_eq!(coloc[0].events, coloc[1].events, "coloc cells ran twice");
+        assert_eq!(coloc[0].requests, 3000);
+        // The pairing report renders and pairs every tenant.
+        let t = report::tenant_pairings(&store).expect("campaign_tenants missing");
+        assert_eq!(t.rows.len(), 2);
+        assert!(t.markdown().contains("web") && t.markdown().contains("batch"));
+        assert!(t.rows.iter().all(|r| r[4] != "-"), "a solo twin failed to pair: {:?}", t.rows);
+        // Rerun: everything resumes, nothing recomputes.
+        let again = run_to_store(&spec, 4, &mut store).unwrap();
+        assert_eq!(again, CampaignOutcome { total: 8, computed: 0, skipped: 8 });
+        // Thread counts do not change the stored records.
+        let mut store2 = ResultStore::in_memory();
+        run_to_store(&spec, 1, &mut store2).unwrap();
+        for (a, b) in store.cluster_records().iter().zip(store2.cluster_records()) {
+            assert_eq!(a, b, "tenant cell differs across thread counts");
+        }
     }
 
     #[test]

@@ -219,10 +219,12 @@ pub fn tail_table(store: &ResultStore) -> Option<Table> {
 }
 
 /// Cluster-scenario sweep table: one row per stored (cluster, policy,
-/// traffic) cell with its SLO burn and cost metrics. `None` when the
-/// campaign had no cluster axis.
+/// traffic) cell with its SLO burn and cost metrics. Tenant cells have
+/// their own paired table ([`tenant_pairings`]) and are excluded here.
+/// `None` when the campaign had no (policy-swept) cluster axis.
 pub fn cluster_table(store: &ResultStore) -> Option<Table> {
-    let recs = store.cluster_records();
+    let recs: Vec<&ClusterCellRecord> =
+        store.cluster_records().iter().filter(|r| r.tenant.is_empty()).collect();
     if recs.is_empty() {
         return None;
     }
@@ -273,7 +275,8 @@ pub fn cluster_table(store: &ResultStore) -> Option<Table> {
 /// existing store — from being ranked against each other. `None`
 /// without a cluster axis.
 pub fn cluster_ranking(store: &ResultStore) -> Option<Table> {
-    let recs = store.cluster_records();
+    let recs: Vec<&ClusterCellRecord> =
+        store.cluster_records().iter().filter(|r| r.tenant.is_empty()).collect();
     if recs.is_empty() {
         return None;
     }
@@ -317,6 +320,99 @@ pub fn cluster_ranking(store: &ResultStore) -> Option<Table> {
     Some(t)
 }
 
+/// Tenant-pairing table over multi-tenant cluster cells: one row per
+/// (cluster, tenant) pairing each co-located cell with its solo twin
+/// (same arrival seed ⇒ the Δ P99 is pure co-location interference).
+/// Pairings — clusters — are ranked best-first by worst-tenant
+/// co-located burn, then by worst interference Δ P99. `None` when the
+/// store holds no tenant cells.
+pub fn tenant_pairings(store: &ResultStore) -> Option<Table> {
+    let recs: Vec<&ClusterCellRecord> =
+        store.cluster_records().iter().filter(|r| !r.tenant.is_empty()).collect();
+    if recs.is_empty() {
+        return None;
+    }
+    // A coloc cell's solo twin has the *same key* with the mode segment
+    // swapped — `cluster|{name}#{hash}|coloc|{tenant}|t{shape}` — so
+    // pairing (and grouping) goes through the content-hashed key, never
+    // through display names: stale lines left behind by an edited spec
+    // carry an old hash and can only pair (and group) with each other.
+    let solo_of = |coloc_key: &str| {
+        let solo_key = coloc_key.replacen("|coloc|", "|solo|", 1);
+        recs.iter().find(|r| r.key == solo_key).copied()
+    };
+    // Group co-located rows per (cluster, hash) key prefix, first-seen
+    // (expansion) order.
+    let mut groups: Vec<(String, Vec<&ClusterCellRecord>)> = Vec::new();
+    for &r in recs.iter().filter(|r| r.policy == "coloc") {
+        let prefix = r.key.split("|coloc|").next().unwrap_or(&r.key).to_string();
+        match groups.iter_mut().find(|(p, _)| *p == prefix) {
+            Some((_, v)) => v.push(r),
+            None => groups.push((prefix, vec![r])),
+        }
+    }
+    // Rank pairings: lowest worst-tenant burn first, then the smallest
+    // worst-tenant Δ P99. Scores are computed once per group (not per
+    // comparison — solo_of is a linear scan); stable sort keeps ties in
+    // expansion order.
+    let score = |v: &[&ClusterCellRecord]| {
+        let burn = v.iter().map(|r| r.burn_rate()).fold(0.0f64, f64::max);
+        let delta = v
+            .iter()
+            .filter_map(|r| solo_of(&r.key).map(|s| (r.p99_us - s.p99_us) / s.p99_us))
+            .fold(0.0f64, f64::max);
+        (burn, delta)
+    };
+    let mut groups: Vec<((f64, f64), Vec<&ClusterCellRecord>)> =
+        groups.into_iter().map(|(_, v)| (score(&v), v)).collect();
+    groups.sort_by(|(a, _), (b, _)| {
+        a.0.partial_cmp(&b.0).unwrap().then(a.1.partial_cmp(&b.1).unwrap())
+    });
+    let mut t = Table::new(
+        "campaign_tenants",
+        "Tenant pairings: co-location Δ P99 vs solo, ranked by worst-tenant burn",
+        &[
+            "rank",
+            "cluster",
+            "tenant",
+            "traffic",
+            "P99 µs (solo)",
+            "P99 µs (coloc)",
+            "Δ P99",
+            "burn",
+            "compliance",
+        ],
+    );
+    for (rank, (_, v)) in groups.iter().enumerate() {
+        for r in v {
+            let (solo_p99, delta) = match solo_of(&r.key) {
+                Some(s) => (
+                    f2(s.p99_us),
+                    format!("{:+.1}%", (r.p99_us - s.p99_us) / s.p99_us * 100.0),
+                ),
+                None => ("-".into(), "-".into()),
+            };
+            t.row(vec![
+                (rank + 1).to_string(),
+                r.cluster.clone(),
+                r.tenant.clone(),
+                r.traffic.clone(),
+                solo_p99,
+                f2(r.p99_us),
+                delta,
+                format!("{}/{}", r.violated_windows, r.windows),
+                pct(r.compliance),
+            ]);
+        }
+    }
+    t.note(
+        "paired cells: a tenant's solo and co-located runs share the arrival seed, \
+         so Δ P99 is pure co-location (shared queues + way-overflow dilation); \
+         rank 1 = the pairing with the lowest worst-tenant burn",
+    );
+    Some(t)
+}
+
 /// All campaign tables, in print order.
 pub fn reports(store: &ResultStore) -> Vec<Table> {
     let mut out = vec![per_app_speedup(store), geomean_summary(store), best_config(store)];
@@ -327,6 +423,9 @@ pub fn reports(store: &ResultStore) -> Vec<Table> {
         out.push(t);
     }
     if let Some(t) = cluster_ranking(store) {
+        out.push(t);
+    }
+    if let Some(t) = tenant_pairings(store) {
         out.push(t);
     }
     out
@@ -434,6 +533,7 @@ mod tests {
             key: format!("cluster|web#0|{policy}|t{traffic}"),
             cluster: "web".into(),
             policy: policy.into(),
+            tenant: String::new(),
             service_times: "empirical".into(),
             traffic: traffic.into(),
             requests: 50_000,
@@ -495,6 +595,49 @@ mod tests {
         // ...and the analytic row ranks first in its own group.
         let ana = rank.rows.iter().find(|r| r[2] == "analytic").unwrap();
         assert_eq!(ana[3], "1");
+    }
+
+    fn trec(cluster: &str, mode: &str, tenant: &str, p99: f64, violated: u32) -> ClusterCellRecord {
+        let mut r = crec(mode, "poisson:0.5", violated, 5.0e6);
+        r.key = format!("cluster|{cluster}#0|{mode}|{tenant}|tpoisson:0.5");
+        r.cluster = cluster.into();
+        r.tenant = tenant.into();
+        r.p99_us = p99;
+        r
+    }
+
+    #[test]
+    fn tenant_pairings_pair_solo_rows_and_rank_by_worst_burn() {
+        let s = store();
+        assert!(tenant_pairings(&s).is_none(), "tenant table without tenant cells");
+
+        let mut s = ResultStore::in_memory();
+        // Pairing "calm": both tenants burn nothing, mild deltas.
+        s.push_cluster(trec("calm", "solo", "a", 50.0, 0)).unwrap();
+        s.push_cluster(trec("calm", "solo", "b", 40.0, 0)).unwrap();
+        s.push_cluster(trec("calm", "coloc", "a", 55.0, 0)).unwrap();
+        s.push_cluster(trec("calm", "coloc", "b", 44.0, 0)).unwrap();
+        // Pairing "noisy": tenant b burns hard and doubles its tail.
+        s.push_cluster(trec("noisy", "solo", "a", 50.0, 0)).unwrap();
+        s.push_cluster(trec("noisy", "solo", "b", 40.0, 0)).unwrap();
+        s.push_cluster(trec("noisy", "coloc", "a", 60.0, 1)).unwrap();
+        s.push_cluster(trec("noisy", "coloc", "b", 80.0, 9)).unwrap();
+        let t = tenant_pairings(&s).expect("tenant pairings missing");
+        assert_eq!(t.rows.len(), 4, "one row per co-located tenant");
+        // calm ranks 1 (worst burn 0), noisy 2 (worst burn 9/25).
+        assert_eq!(t.rows[0][0], "1");
+        assert_eq!(t.rows[0][1], "calm");
+        assert_eq!(t.rows[2][1], "noisy");
+        assert_eq!(t.rows[2][0], "2");
+        // The paired delta is computed against the matching solo cell.
+        let b_row = t.rows.iter().find(|r| r[1] == "noisy" && r[2] == "b").unwrap();
+        assert_eq!(b_row[4], "40.00");
+        assert_eq!(b_row[5], "80.00");
+        assert_eq!(b_row[6], "+100.0%");
+        // Tenant cells stay out of the policy tables.
+        assert!(cluster_table(&s).is_none(), "tenant cells leaked into cluster_table");
+        assert!(cluster_ranking(&s).is_none(), "tenant cells leaked into ranking");
+        assert_eq!(reports(&s).len(), 4);
     }
 
     #[test]

@@ -92,17 +92,24 @@ pub struct ExpandedCell {
 }
 
 /// One expanded cluster-scenario cell: a (cluster, policy, traffic
-/// shape) coordinate plus its stable store key.
+/// shape) coordinate — or, for multi-tenant clusters, a (cluster,
+/// tenant, solo|coloc) coordinate — plus its stable store key.
 #[derive(Clone)]
 pub struct ClusterCell {
     /// Stable identity used for store dedup/resume. Includes a content
-    /// hash of the full cluster spec, so editing the scenario definition
-    /// invalidates its old lines.
+    /// hash of the full cluster spec (tenant bindings included), so
+    /// editing the scenario definition invalidates its old lines.
     pub key: String,
     /// Index into the campaign's `clusters` list.
     pub cluster: usize,
+    /// Autoscaler policy (policy cells only; tenant clusters run their
+    /// own control loop, and this holds the inert default).
     pub policy: Policy,
+    /// The cell's traffic shape (for tenant cells: that tenant's own
+    /// shape).
     pub shape: TrafficShape,
+    /// Tenant coordinate: `(tenant index, solo?)`. `None` = policy cell.
+    pub tenant: Option<(usize, bool)>,
 }
 
 /// Deterministic per-cell simulation seed: a splitmix64 hash
@@ -202,7 +209,11 @@ impl CampaignSpec {
             }
         }
         if !self.clusters.is_empty() {
-            if self.policies.is_empty() {
+            // Multi-tenant clusters run their own control loop, so only
+            // policy-swept (single-tenant) clusters *need* the axis —
+            // but a listed policy is always parse-validated, so a typo
+            // never hides behind a tenant-only campaign.
+            if self.policies.is_empty() && self.clusters.iter().any(|c| !c.tenancy()) {
                 bail!("campaign '{}': clusters need at least one policy", self.name);
             }
             let mut seen = std::collections::HashSet::new();
@@ -229,12 +240,20 @@ impl CampaignSpec {
     }
 
     /// Cluster-scenario cell count: Σ over clusters of
-    /// (policies × that cluster's traffic shapes).
+    /// (policies × that cluster's traffic shapes) — except multi-tenant
+    /// clusters, which contribute one solo and one co-located cell per
+    /// tenant instead (their tenants carry the traffic bindings).
     pub fn cluster_cell_count(&self) -> usize {
-        if self.clusters.is_empty() {
-            return 0;
-        }
-        self.policies.len() * self.clusters.iter().map(|c| c.traffic.len()).sum::<usize>()
+        self.clusters
+            .iter()
+            .map(|c| {
+                if c.tenancy() {
+                    2 * c.tenants.len()
+                } else {
+                    self.policies.len() * c.traffic.len()
+                }
+            })
+            .sum()
     }
 
     /// Expand the matrix into runnable cells (deterministic order).
@@ -363,6 +382,31 @@ impl CampaignSpec {
                     hash = crate::util::rng::mix64(hash ^ fh);
                 }
             }
+            if cluster.tenancy() {
+                // Tenant pairings: one solo cell per tenant (the paired
+                // baseline) then one co-located cell per tenant — all
+                // records of one coloc run, written per tenant so the
+                // report can pair and rank without re-deriving anything.
+                for solo in [true, false] {
+                    let mode = if solo { "solo" } else { "coloc" };
+                    for (ti, t) in cluster.tenants.iter().enumerate() {
+                        let shape = TrafficShape::parse(&t.traffic)?;
+                        out.push(ClusterCell {
+                            key: format!(
+                                "cluster|{}#{hash:016x}|{mode}|{}|t{}",
+                                cluster.name,
+                                t.name,
+                                shape.label()
+                            ),
+                            cluster: ci,
+                            policy: Policy::Reactive,
+                            shape,
+                            tenant: Some((ti, solo)),
+                        });
+                    }
+                }
+                continue;
+            }
             for pol in &self.policies {
                 let policy = Policy::parse(pol)?;
                 for t in &cluster.traffic {
@@ -377,6 +421,7 @@ impl CampaignSpec {
                         cluster: ci,
                         policy: policy.clone(),
                         shape,
+                        tenant: None,
                     });
                 }
             }
@@ -786,6 +831,78 @@ mod tests {
         assert_ne!(content_hash(b"abc"), content_hash(b"abd"));
         assert_ne!(content_hash(b"abc\0"), content_hash(b"abc"));
         assert_ne!(content_hash(b""), content_hash(b"\0"));
+    }
+
+    fn tenant_cluster(name: &str) -> ClusterSpec {
+        let j = Json::parse(&format!(
+            r#"{{
+                "name": "{name}",
+                "services": [
+                    {{"name": "gw", "app": "admission"}},
+                    {{"name": "be", "app": "serde", "deps": ["gw"]}}
+                ],
+                "prefetchers": ["nl", "ceip256"],
+                "traffic": ["poisson:0.6"],
+                "requests": 4000,
+                "records": 4000,
+                "adaptive": false,
+                "tenants": [
+                    {{"name": "web", "services": ["gw"], "traffic": "poisson:0.4",
+                      "ways": 4, "demand_ways": 6}},
+                    {{"name": "batch", "traffic": "poisson:0.3", "ways": 4,
+                      "demand_ways": 5}}
+                ]
+            }}"#
+        ))
+        .unwrap();
+        ClusterSpec::from_json(&j).unwrap()
+    }
+
+    #[test]
+    fn tenant_clusters_expand_solo_and_coloc_cells() {
+        let spec = CampaignSpec {
+            clusters: vec![tenant_cluster("shared")],
+            policies: vec!["reactive".into()],
+            ..small()
+        };
+        let cells = spec.expand_clusters().unwrap();
+        // 2 tenants × {solo, coloc} — the policy axis does not apply.
+        assert_eq!(cells.len(), spec.cluster_cell_count());
+        assert_eq!(cells.len(), 4);
+        assert!(cells[0].key.contains("|solo|web|"), "{}", cells[0].key);
+        assert!(cells[1].key.contains("|solo|batch|"), "{}", cells[1].key);
+        assert!(cells[2].key.contains("|coloc|web|"), "{}", cells[2].key);
+        assert!(cells[3].key.contains("|coloc|batch|"), "{}", cells[3].key);
+        assert_eq!(cells[0].tenant, Some((0, true)));
+        assert_eq!(cells[3].tenant, Some((1, false)));
+        // Stable across expansions (stores resume)...
+        let keys: Vec<String> = cells.iter().map(|c| c.key.clone()).collect();
+        let again: Vec<String> =
+            spec.expand_clusters().unwrap().iter().map(|c| c.key.clone()).collect();
+        assert_eq!(again, keys);
+        // ...and every key moves when a tenant binding changes.
+        let mut edited = spec.clone();
+        edited.clusters[0].tenants[0].ways = 3;
+        edited.clusters[0].tenants[1].ways = 5;
+        let moved: Vec<String> =
+            edited.expand_clusters().unwrap().iter().map(|c| c.key.clone()).collect();
+        for (a, b) in keys.iter().zip(&moved) {
+            assert_ne!(a, b, "tenant binding edit did not invalidate the cell key");
+        }
+        // A tenant-only campaign does not need the policies axis.
+        let no_pol = CampaignSpec {
+            clusters: vec![tenant_cluster("shared")],
+            policies: Vec::new(),
+            ..small()
+        };
+        assert!(no_pol.validate().is_ok(), "tenant-only clusters must not need policies");
+        // Mixing in a policy-swept cluster re-arms the requirement.
+        let mixed = CampaignSpec {
+            clusters: vec![tenant_cluster("shared"), tiny_cluster("edge")],
+            policies: Vec::new(),
+            ..small()
+        };
+        assert!(mixed.validate().is_err(), "policy cluster without policies accepted");
     }
 
     #[test]

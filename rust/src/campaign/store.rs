@@ -7,7 +7,7 @@
 //! order with sorted object keys, so a given (spec, seed set) always
 //! produces byte-identical files.
 
-use crate::cluster::ClusterResult;
+use crate::cluster::{ClusterResult, TenantStat};
 use crate::sim::engine::SimResult;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
@@ -264,8 +264,14 @@ pub struct ClusterCellRecord {
     pub key: String,
     /// Cluster scenario name (from the campaign spec).
     pub cluster: String,
-    /// Autoscaler policy label ([`crate::cluster::Policy::label`]).
+    /// Autoscaler policy label ([`crate::cluster::Policy::label`]) —
+    /// or, on tenant cells, the run mode (`"solo"` / `"coloc"`).
     pub policy: String,
+    /// Tenant name on multi-tenant cells; empty on policy cells (and on
+    /// every line written before tenancy existed — the key is only
+    /// serialized when non-empty, so old stores reload byte-compatibly
+    /// and new single-tenant lines stay byte-identical).
+    pub tenant: String,
     /// Normalized traffic-shape label.
     pub traffic: String,
     /// Service-time model the scenario ran under (`"analytic"` or
@@ -306,6 +312,7 @@ impl ClusterCellRecord {
             key: key.to_string(),
             cluster: cluster.to_string(),
             policy: policy.to_string(),
+            tenant: String::new(),
             service_times: service_times.to_string(),
             traffic: r.traffic.clone(),
             requests: r.requests,
@@ -326,6 +333,43 @@ impl ClusterCellRecord {
         }
     }
 
+    /// Build a per-tenant line from a multi-tenant run (solo or
+    /// co-located): latency/burn fields come from the tenant's own
+    /// stats, capacity and event accounting from the run all its
+    /// tenants shared.
+    pub fn from_tenant(
+        key: &str,
+        cluster: &str,
+        mode: &str,
+        service_times: &str,
+        r: &ClusterResult,
+        ts: &TenantStat,
+    ) -> Self {
+        ClusterCellRecord {
+            key: key.to_string(),
+            cluster: cluster.to_string(),
+            policy: mode.to_string(),
+            tenant: ts.name.clone(),
+            service_times: service_times.to_string(),
+            traffic: ts.traffic.clone(),
+            requests: ts.requests,
+            slo_us: ts.slo_us,
+            p50_us: ts.p50_us,
+            p95_us: ts.p95_us,
+            p99_us: ts.p99_us,
+            compliance: ts.compliance,
+            windows: ts.windows,
+            violated_windows: ts.violated_windows,
+            actions: r.actions.len() as u64,
+            final_replicas: r.final_replicas.iter().sum(),
+            replica_us: r.replica_us,
+            meta_byte_us: r.meta_byte_us,
+            final_metadata_bytes: r.final_metadata_bytes,
+            duration_us: r.duration_us,
+            events: r.events,
+        }
+    }
+
     /// Fraction of evaluated windows that burned.
     pub fn burn_rate(&self) -> f64 {
         if self.windows == 0 {
@@ -336,11 +380,18 @@ impl ClusterCellRecord {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("kind", Json::str("cluster")),
             ("key", Json::str(&self.key)),
             ("cluster", Json::str(&self.cluster)),
             ("policy", Json::str(&self.policy)),
+        ];
+        // Only tenant cells carry the key: non-tenant lines serialize
+        // byte-identically to pre-tenancy builds.
+        if !self.tenant.is_empty() {
+            fields.push(("tenant", Json::str(&self.tenant)));
+        }
+        fields.extend(vec![
             ("service_times", Json::str(&self.service_times)),
             ("traffic", Json::str(&self.traffic)),
             ("requests", Json::num(self.requests as f64)),
@@ -361,7 +412,8 @@ impl ClusterCellRecord {
             ),
             ("duration_us", Json::num(self.duration_us)),
             ("events", Json::num(self.events as f64)),
-        ])
+        ]);
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<ClusterCellRecord> {
@@ -385,6 +437,8 @@ impl ClusterCellRecord {
             key: s("key")?,
             cluster: s("cluster")?,
             policy: s("policy")?,
+            // Absent on pre-tenancy lines (and on policy cells).
+            tenant: j.get("tenant").and_then(Json::as_str).unwrap_or("").to_string(),
             // Absent on pre-empirical lines: those ran the analytic model.
             service_times: j
                 .get("service_times")
@@ -643,6 +697,7 @@ mod tests {
             key: key.into(),
             cluster: "frontend".into(),
             policy: policy.into(),
+            tenant: String::new(),
             service_times: "analytic".into(),
             traffic: "poisson:0.65".into(),
             requests: 50_000,
@@ -674,6 +729,27 @@ mod tests {
             ClusterCellRecord::from_json(&Json::parse(&line).unwrap()).unwrap();
         assert_eq!(back, r);
         assert!((r.burn_rate() - 0.08).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tenant_cells_roundtrip_and_tenantless_lines_stay_byte_identical() {
+        // Tenant cells serialize and reload their coordinate...
+        let mut r = crec("cluster|shared#1|coloc|web|tpoisson:0.5", "coloc");
+        r.tenant = "web".into();
+        let line = r.to_line();
+        assert!(line.contains("\"tenant\":\"web\""), "tenant missing: {line}");
+        let back = ClusterCellRecord::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, r);
+        // ...while policy cells carry no tenant key at all, so lines
+        // written by pre-tenancy builds and by this build are identical.
+        let plain = crec("cluster|frontend#1|reactive|tpoisson:0.65", "reactive");
+        assert!(!plain.to_line().contains("tenant"), "tenant leaked: {}", plain.to_line());
+        // A literal pre-tenancy line (no "tenant" key) reloads with the
+        // empty default.
+        let back =
+            ClusterCellRecord::from_json(&Json::parse(&plain.to_line()).unwrap()).unwrap();
+        assert_eq!(back, plain);
+        assert_eq!(back.tenant, "");
     }
 
     #[test]

@@ -12,9 +12,13 @@
 //! completion hot path performs no per-request allocation.
 
 use super::servicetime::ServiceTimeModel;
-use super::slo::{EngineView, SloAction, SloCfg, SloController};
+use super::slo::{
+    EngineView, SloAction, SloCfg, SloController, TenantAction, TenantController, TenantCtrlCfg,
+    TenantView,
+};
 use super::topology::{Candidate, ResolvedTopology};
 use super::workload::{ArrivalGen, TrafficShape};
+use crate::coordinator::tenant::WayPartition;
 use crate::util::percentile::Digest;
 use crate::util::rng::{mix64, Rng};
 use anyhow::{bail, Result};
@@ -40,6 +44,61 @@ pub struct ActionLog {
     pub t_us: f64,
     pub service: String,
     pub action: String,
+}
+
+/// One tenant's runtime binding for a multi-tenant run (DESIGN.md §10).
+#[derive(Clone, Debug)]
+pub struct TenantRun {
+    pub name: String,
+    /// This tenant's open-loop arrival shape.
+    pub shape: TrafficShape,
+    /// Arrivals this tenant offers (the run completes Σ over tenants).
+    pub requests: u64,
+    /// Arrival-stream seed. A tenant's solo and co-located runs share
+    /// it, so the comparison is paired: identical offered-load
+    /// realization, like the `~emp` twins.
+    pub arrival_seed: u64,
+    /// Per-tenant latency SLO (µs); 0 = the run's `RunParams::slo_us`.
+    pub slo_us: f64,
+    /// L1-I ways locked to this tenant ([`WayPartition`] share).
+    pub ways: u32,
+    /// Ways the tenant's working set wants; overflow beyond the locked
+    /// share is what dilates co-runners.
+    pub demand_ways: u32,
+    /// Member service indexes — a dep-closed sub-DAG of the topology
+    /// (`ClusterSpec::tenant_services`).
+    pub services: Vec<u32>,
+}
+
+/// Multi-tenant run knobs shared by every tenant.
+#[derive(Clone, Debug)]
+pub struct TenancyParams {
+    pub total_ways: u32,
+    /// Interference dilation coefficient α.
+    pub alpha: f64,
+    /// Enable the per-tenant control loop (repartition / upgrade /
+    /// add-replica arbitration); `false` tracks per-tenant burn only.
+    pub adaptive: bool,
+    pub ctrl: TenantCtrlCfg,
+}
+
+/// Per-tenant outcome of a multi-tenant (or solo) run.
+#[derive(Clone, Debug)]
+pub struct TenantStat {
+    pub name: String,
+    /// The tenant's traffic-shape label.
+    pub traffic: String,
+    pub requests: u64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub mean_us: f64,
+    pub slo_us: f64,
+    pub compliance: f64,
+    pub windows: u32,
+    pub violated_windows: u32,
+    /// L1-I way share at end of run (the repartition lever moves it).
+    pub final_ways: u32,
 }
 
 /// Scenario outcome: the latency distribution plus SLO burn accounting
@@ -80,11 +139,13 @@ pub struct ClusterResult {
     pub final_metadata_bytes: u64,
     /// Simulated duration (µs, time of the last processed event).
     pub duration_us: f64,
+    /// Per-tenant outcomes (multi-tenant runs only; empty otherwise).
+    pub tenants: Vec<TenantStat>,
 }
 
 #[derive(Clone, Copy, Debug)]
 enum EvKind {
-    Arrival,
+    Arrival { tenant: u8 },
     Complete { svc: u32, rep: u32 },
 }
 
@@ -121,6 +182,10 @@ struct Replica {
     /// its residual work, but the slot stays in place — pending
     /// completion events keep valid indexes. A later scale-up revives it.
     retired: bool,
+    /// Outstanding requests per tenant (queued + in service) — the
+    /// interference model's per-replica mix. Empty on the single-tenant
+    /// path, which never touches it.
+    out_t: Vec<u32>,
 }
 
 struct Svc {
@@ -152,6 +217,8 @@ struct Slab {
     pending: Vec<u32>,
     /// Services not yet completed for this slot.
     remaining: Vec<u32>,
+    /// Owning tenant per slot (always 0 on the single-tenant path).
+    tenant: Vec<u8>,
     free: Vec<u32>,
 }
 
@@ -162,27 +229,73 @@ impl Slab {
             arrive: Vec::new(),
             pending: Vec::new(),
             remaining: Vec::new(),
+            tenant: Vec::new(),
             free: Vec::new(),
         }
     }
 
-    fn alloc(&mut self, t: f64, indegrees: &[u32]) -> u32 {
+    /// Allocate a slot: `remaining` is how many services must complete
+    /// for the request (the owning tenant's member count — the full
+    /// service count on the single-tenant path), `indegrees` the
+    /// per-service fan-in it waits on (always `nsvc` entries).
+    fn alloc(&mut self, t: f64, indegrees: &[u32], remaining: u32, tenant: u8) -> u32 {
         let slot = match self.free.pop() {
             Some(s) => s,
             None => {
                 let s = self.arrive.len() as u32;
                 self.arrive.push(0.0);
                 self.remaining.push(0);
+                self.tenant.push(0);
                 self.pending.resize(self.pending.len() + self.nsvc, 0);
                 s
             }
         };
         let i = slot as usize;
         self.arrive[i] = t;
-        self.remaining[i] = self.nsvc as u32;
+        self.remaining[i] = remaining;
+        self.tenant[i] = tenant;
         self.pending[i * self.nsvc..(i + 1) * self.nsvc].copy_from_slice(indegrees);
         slot
     }
+}
+
+/// Live multi-tenant state (DESIGN.md §10): per-tenant arrival streams
+/// and sub-DAG views over the shared services, the L1-I way partition,
+/// and the per-tenant burn/arbitration controller. `None` = the
+/// single-tenant path, byte-identical to pre-tenancy builds (no extra
+/// RNG draws, no event reordering).
+struct Tenancy {
+    tenants: Vec<TenantState>,
+    partition: WayPartition,
+    total_ways: u32,
+    /// Interference dilation coefficient α.
+    alpha: f64,
+    ctrl: TenantController,
+    adaptive: bool,
+}
+
+struct TenantState {
+    name: String,
+    gen: ArrivalGen,
+    requests: u64,
+    arrived: u64,
+    completed: u64,
+    met: u64,
+    slo_us: f64,
+    demand_ways: u32,
+    /// Membership over the shared services.
+    member: Vec<bool>,
+    /// Member count (the slab `remaining` for this tenant's requests).
+    nsvc: u32,
+    /// Entry points of the tenant's sub-DAG.
+    roots: Vec<u32>,
+    /// Fan-in per service, restricted to the sub-DAG (0 for
+    /// non-members — never consulted).
+    indegrees: Vec<u32>,
+    /// Children per service, restricted to the sub-DAG.
+    children: Vec<Vec<u32>>,
+    digest: Digest,
+    traffic: String,
 }
 
 struct Sim {
@@ -216,6 +329,8 @@ struct Sim {
     meta_byte_us: f64,
     /// Time of the most recently processed event (integral upper bound).
     last_event_us: f64,
+    /// Multi-tenant state; `None` = the single-tenant path.
+    tenancy: Option<Tenancy>,
 }
 
 impl Sim {
@@ -248,13 +363,56 @@ impl Sim {
             }
         }
         debug_assert!(best != usize::MAX, "service with no active replica");
+        if self.tenancy.is_some() {
+            let t = self.slab.tenant[slot as usize] as usize;
+            self.svc[svc].replicas[best].out_t[t] += 1;
+        }
         if self.svc[svc].replicas[best].in_service.is_none() {
             self.svc[svc].replicas[best].in_service = Some(slot);
-            let dt = self.sample_service(svc);
+            let mut dt = self.sample_service(svc);
+            if self.tenancy.is_some() {
+                dt *= self.dilation(svc, best, slot);
+            }
             self.schedule(now + dt, EvKind::Complete { svc: svc as u32, rep: best as u32 });
         } else {
             self.svc[svc].replicas[best].queue.push_back(slot);
         }
+    }
+
+    /// Deterministic interference dilation for the request in `slot`
+    /// starting service on `(svc, rep)` (DESIGN.md §10): co-runners
+    /// whose way demand exceeds their locked share spill into the
+    /// victim's ways —
+    /// `1 + α × mix × min(1, excess/W) × (1 − share/W)`, where `mix` is
+    /// the co-runners' fraction of the replica's outstanding requests,
+    /// `excess` their summed demand overflow, and `share` the victim's
+    /// own locked ways (way locking is protection). Pure arithmetic on
+    /// engine state — no RNG draws, so the draw sequence stays a pure
+    /// function of the event order.
+    fn dilation(&self, svc: usize, rep: usize, slot: u32) -> f64 {
+        let tn = match &self.tenancy {
+            Some(tn) => tn,
+            None => return 1.0,
+        };
+        let tenant = self.slab.tenant[slot as usize];
+        let out = &self.svc[svc].replicas[rep].out_t;
+        let mut total = 0u32;
+        let mut others = 0u32;
+        let mut excess = 0u32;
+        for (u, &o) in out.iter().enumerate() {
+            total += o;
+            if u as u8 != tenant && o > 0 {
+                others += o;
+                excess += tn.tenants[u].demand_ways.saturating_sub(tn.partition.share(u as u8));
+            }
+        }
+        if others == 0 || excess == 0 {
+            return 1.0;
+        }
+        let mix = others as f64 / total as f64;
+        let pressure = (excess as f64 / tn.total_ways as f64).min(1.0);
+        let shield = (tn.partition.share(tenant) as f64 / tn.total_ways as f64).min(1.0);
+        1.0 + tn.alpha * mix * pressure * (1.0 - shield)
     }
 
     /// Bottleneck service: lowest aggregate active service rate.
@@ -375,42 +533,57 @@ impl Sim {
             _ if can_scale => SloAction::AddReplica,
             _ => return None,
         };
-        self.account(now);
         match act {
-            SloAction::Upgrade => {
-                let cur = self.svc[b].current;
-                let delta = self.cands[b][cur + 1].metadata_bytes as i64
-                    - self.cands[b][cur].metadata_bytes as i64;
-                let n = self.svc[b].active_replicas() as i64;
-                self.meta_now = (self.meta_now as i64 + delta * n).max(0) as u64;
-                let cv = self.svc[b].cv;
-                self.svc[b].current = cur + 1;
-                self.svc[b].model = self.cands[b][cur + 1].model(cv);
-                self.actions.push(ActionLog {
-                    t_us: now,
-                    service: self.names[b].clone(),
-                    action: format!("upgrade→{}", self.cands[b][cur + 1].label),
-                });
-            }
-            SloAction::AddReplica => {
-                // Revive a retired slot when one exists (index-stable);
-                // otherwise grow the pool.
-                if let Some(r) = self.svc[b].replicas.iter_mut().find(|r| r.retired) {
-                    r.retired = false;
-                } else {
-                    self.svc[b].replicas.push(Replica::default());
-                }
-                self.live_replicas += 1;
-                self.meta_now += self.cands[b][self.svc[b].current].metadata_bytes;
-                self.actions.push(ActionLog {
-                    t_us: now,
-                    service: self.names[b].clone(),
-                    action: format!("replicas→{}", self.svc[b].active_replicas()),
-                });
-            }
+            SloAction::Upgrade => self.upgrade_service(b, now),
+            SloAction::AddReplica => self.add_replica(b, 0, now),
             _ => unreachable!(),
         }
         Some(act)
+    }
+
+    /// Switch service `b` to its next faster candidate, with metadata
+    /// accounting and action logging — the Upgrade lever shared by the
+    /// single-tenant control loop and the tenant arbitration. The caller
+    /// has already verified a faster candidate exists.
+    fn upgrade_service(&mut self, b: usize, now: f64) {
+        self.account(now);
+        let cur = self.svc[b].current;
+        let delta = self.cands[b][cur + 1].metadata_bytes as i64
+            - self.cands[b][cur].metadata_bytes as i64;
+        let n = self.svc[b].active_replicas() as i64;
+        self.meta_now = (self.meta_now as i64 + delta * n).max(0) as u64;
+        let cv = self.svc[b].cv;
+        self.svc[b].current = cur + 1;
+        self.svc[b].model = self.cands[b][cur + 1].model(cv);
+        self.actions.push(ActionLog {
+            t_us: now,
+            service: self.names[b].clone(),
+            action: format!("upgrade→{}", self.cands[b][cur + 1].label),
+        });
+    }
+
+    /// Add one replica to service `b`: revive a retired slot when one
+    /// exists (index-stable), otherwise grow the pool — a fresh replica
+    /// gets an `ntenants`-sized outstanding vector (0 on the
+    /// single-tenant path, where `out_t` stays empty). Shared by both
+    /// control loops; the caller has already checked the replica cap.
+    fn add_replica(&mut self, b: usize, ntenants: usize, now: f64) {
+        self.account(now);
+        if let Some(r) = self.svc[b].replicas.iter_mut().find(|r| r.retired) {
+            r.retired = false;
+        } else {
+            self.svc[b].replicas.push(Replica {
+                out_t: vec![0; ntenants],
+                ..Replica::default()
+            });
+        }
+        self.live_replicas += 1;
+        self.meta_now += self.cands[b][self.svc[b].current].metadata_bytes;
+        self.actions.push(ActionLog {
+            t_us: now,
+            service: self.names[b].clone(),
+            action: format!("replicas→{}", self.svc[b].active_replicas()),
+        });
     }
 
     fn apply_remove(&mut self, now: f64) -> Option<SloAction> {
@@ -489,17 +662,22 @@ impl Sim {
         self.events += 1;
         self.last_event_us = ev.t;
         match ev.kind {
-            EvKind::Arrival => {
-                let slot = self.slab.alloc(ev.t, &self.indegrees);
-                let roots = std::mem::take(&mut self.roots);
-                for &r in &roots {
-                    self.dispatch(r as usize, slot, ev.t);
-                }
-                self.roots = roots;
-                self.arrived += 1;
-                if self.arrived < self.requests {
-                    let t = self.gen.next_arrival();
-                    self.schedule(t, EvKind::Arrival);
+            EvKind::Arrival { tenant } => {
+                if self.tenancy.is_some() {
+                    self.arrive_tenant(tenant, ev.t);
+                } else {
+                    let n = self.slab.nsvc as u32;
+                    let slot = self.slab.alloc(ev.t, &self.indegrees, n, 0);
+                    let roots = std::mem::take(&mut self.roots);
+                    for &r in &roots {
+                        self.dispatch(r as usize, slot, ev.t);
+                    }
+                    self.roots = roots;
+                    self.arrived += 1;
+                    if self.arrived < self.requests {
+                        let t = self.gen.next_arrival();
+                        self.schedule(t, EvKind::Arrival { tenant: 0 });
+                    }
                 }
             }
             EvKind::Complete { svc, rep } => {
@@ -508,15 +686,29 @@ impl Sim {
                     .in_service
                     .take()
                     .expect("completion on an idle replica");
+                if self.tenancy.is_some() {
+                    let done = self.slab.tenant[slot as usize] as usize;
+                    self.svc[svc].replicas[rep].out_t[done] -= 1;
+                }
                 if let Some(next) = self.svc[svc].replicas[rep].queue.pop_front() {
                     self.svc[svc].replicas[rep].in_service = Some(next);
-                    let dt = self.sample_service(svc);
+                    let mut dt = self.sample_service(svc);
+                    if self.tenancy.is_some() {
+                        dt *= self.dilation(svc, rep, next);
+                    }
                     self.schedule(ev.t + dt, EvKind::Complete {
                         svc: svc as u32,
                         rep: rep as u32,
                     });
                 }
-                let children = std::mem::take(&mut self.svc[svc].children);
+                // Fan out: along the owning tenant's sub-DAG in tenant
+                // mode, along the full topology otherwise — one shared
+                // loop, with the edge list detached around dispatch.
+                let tenant = self.slab.tenant[slot as usize] as usize;
+                let children = match self.tenancy.as_mut() {
+                    Some(tn) => std::mem::take(&mut tn.tenants[tenant].children[svc]),
+                    None => std::mem::take(&mut self.svc[svc].children),
+                };
                 for &c in &children {
                     let ci = c as usize;
                     let idx = slot as usize * self.slab.nsvc + ci;
@@ -525,14 +717,185 @@ impl Sim {
                         self.dispatch(ci, slot, ev.t);
                     }
                 }
-                self.svc[svc].children = children;
+                match self.tenancy.as_mut() {
+                    Some(tn) => tn.tenants[tenant].children[svc] = children,
+                    None => self.svc[svc].children = children,
+                }
                 self.slab.remaining[slot as usize] -= 1;
                 if self.slab.remaining[slot as usize] == 0 {
-                    self.finish(slot, ev.t);
+                    if self.tenancy.is_some() {
+                        self.finish_tenant(slot, ev.t);
+                    } else {
+                        self.finish(slot, ev.t);
+                    }
                 }
             }
         }
         true
+    }
+
+    /// One tenant's arrival: allocate a slot over its sub-DAG, dispatch
+    /// its entry points, and schedule that tenant's next arrival from
+    /// its own stream. Field-disjoint borrows (`self.tenancy` vs
+    /// `self.slab`) keep the whole tenancy struct in place — no
+    /// per-arrival move of it.
+    fn arrive_tenant(&mut self, tenant: u8, now: f64) {
+        let t = tenant as usize;
+        let (slot, next, roots) = {
+            let tn = self.tenancy.as_mut().expect("tenant arrival without tenancy");
+            let ts = &mut tn.tenants[t];
+            let slot = self.slab.alloc(now, &ts.indegrees, ts.nsvc, tenant);
+            ts.arrived += 1;
+            let next =
+                if ts.arrived < ts.requests { Some(ts.gen.next_arrival()) } else { None };
+            // Detach the root list: dispatch needs the whole Sim (and
+            // reads the tenancy state for dilation).
+            (slot, next, std::mem::take(&mut ts.roots))
+        };
+        for &r in &roots {
+            self.dispatch(r as usize, slot, now);
+        }
+        self.tenancy.as_mut().unwrap().tenants[t].roots = roots;
+        self.arrived += 1;
+        if let Some(t_next) = next {
+            self.schedule(t_next, EvKind::Arrival { tenant });
+        }
+    }
+
+    /// Multi-tenant request completion: per-tenant latency/burn
+    /// tracking, then (adaptive runs) the lever arbitration.
+    fn finish_tenant(&mut self, slot: u32, now: f64) {
+        let latency = now - self.slab.arrive[slot as usize];
+        let tenant = self.slab.tenant[slot as usize] as usize;
+        self.digest.add(latency);
+        self.completed += 1;
+        self.slab.free.push(slot);
+        // Lever availability first (immutable reads). The view is only
+        // consulted at the tenant's window boundary, so the
+        // bottleneck/donor scans stay off the completion hot path.
+        let view = {
+            let tn = self.tenancy.as_ref().expect("tenant completion without tenancy");
+            if tn.adaptive && tn.ctrl.window_closing(tenant) {
+                let b = Self::tenant_bottleneck(&self.svc, tn, tenant);
+                TenantView {
+                    can_repartition: tn.tenants[tenant].demand_ways
+                        > tn.partition.share(tenant as u8)
+                        && Self::repartition_donor(tn, tenant).is_some(),
+                    can_upgrade: self.svc[b].current + 1 < self.cands[b].len(),
+                    can_scale_up: self.svc[b].active_replicas() < tn.ctrl.cfg.max_replicas,
+                }
+            } else {
+                TenantView::default()
+            }
+        };
+        let act = {
+            let tn = self.tenancy.as_mut().expect("tenant completion without tenancy");
+            let ts = &mut tn.tenants[tenant];
+            ts.digest.add(latency);
+            ts.completed += 1;
+            if latency <= ts.slo_us {
+                ts.met += 1;
+                self.met += 1;
+            }
+            tn.ctrl.on_complete(tenant, latency, &view)
+        };
+        if let Some(act) = act {
+            self.apply_tenant_action(tenant, act, now);
+        }
+    }
+
+    /// Bottleneck service within one tenant's sub-DAG (lowest aggregate
+    /// active rate; ties to the lowest index). Associated function over
+    /// the service slice so callers can hold `&self.tenancy` and
+    /// `&self.svc` as disjoint field borrows.
+    fn tenant_bottleneck(svc: &[Svc], tn: &Tenancy, tenant: usize) -> usize {
+        let mut best = 0usize;
+        let mut worst = f64::INFINITY;
+        for (i, s) in svc.iter().enumerate() {
+            if !tn.tenants[tenant].member[i] {
+                continue;
+            }
+            let rate = s.active_replicas() as f64 / s.model.mean_us();
+            if rate < worst {
+                worst = rate;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Way-repartition donor for `to`: prefer the co-tenant with the
+    /// most slack (share > demand — giving a way up costs it nothing),
+    /// else the largest share that can spare a way (≥ 2). Lowest index
+    /// breaks ties; never the beneficiary.
+    fn repartition_donor(tn: &Tenancy, to: usize) -> Option<usize> {
+        let share = |u: usize| tn.partition.share(u as u8);
+        let mut slack_best: Option<(usize, u32)> = None;
+        for (u, t) in tn.tenants.iter().enumerate() {
+            if u == to || share(u) == 0 {
+                continue;
+            }
+            let slack = share(u).saturating_sub(t.demand_ways);
+            if slack > 0 && slack_best.map(|(_, b)| slack > b).unwrap_or(true) {
+                slack_best = Some((u, slack));
+            }
+        }
+        if let Some((u, _)) = slack_best {
+            return Some(u);
+        }
+        let mut big: Option<(usize, u32)> = None;
+        for u in 0..tn.tenants.len() {
+            if u == to || share(u) < 2 {
+                continue;
+            }
+            if big.map(|(_, b)| share(u) > b).unwrap_or(true) {
+                big = Some((u, share(u)));
+            }
+        }
+        big.map(|(u, _)| u)
+    }
+
+    /// Apply a tenant lever. Availability was checked when the view was
+    /// built (same completion — no intervening events), but each arm
+    /// re-checks cheaply and degrades to a no-op rather than panicking.
+    fn apply_tenant_action(&mut self, tenant: usize, act: TenantAction, now: f64) {
+        match act {
+            TenantAction::Repartition => {
+                let moved = {
+                    let tn = self.tenancy.as_mut().expect("repartition without tenancy");
+                    Self::repartition_donor(tn, tenant).map(|donor| {
+                        let freed = tn.partition.share(donor as u8) - 1;
+                        let grown = tn.partition.share(tenant as u8) + 1;
+                        // Shrink first so the grow can never oversubscribe.
+                        tn.partition.assign(donor as u8, freed).expect("shrink always fits");
+                        tn.partition.assign(tenant as u8, grown).expect("freed way fits");
+                        format!("{}→{}:{grown}", tn.tenants[donor].name, tn.tenants[tenant].name)
+                    })
+                };
+                if let Some(action) = moved {
+                    self.actions.push(ActionLog { t_us: now, service: "ways".into(), action });
+                }
+            }
+            TenantAction::Upgrade => {
+                let b = {
+                    let tn = self.tenancy.as_ref().expect("upgrade without tenancy");
+                    Self::tenant_bottleneck(&self.svc, tn, tenant)
+                };
+                if self.svc[b].current + 1 < self.cands[b].len() {
+                    self.upgrade_service(b, now);
+                }
+            }
+            TenantAction::AddReplica => {
+                let (b, nt, cap) = {
+                    let tn = self.tenancy.as_ref().expect("scale-up without tenancy");
+                    let b = Self::tenant_bottleneck(&self.svc, tn, tenant);
+                    (b, tn.tenants.len(), tn.ctrl.cfg.max_replicas)
+                };
+                if self.svc[b].active_replicas() < cap {
+                    self.add_replica(b, nt, now);
+                }
+            }
+        }
     }
 }
 
@@ -604,9 +967,10 @@ pub fn run(
         replica_us: 0.0,
         meta_byte_us: 0.0,
         last_event_us: 0.0,
+        tenancy: None,
     };
     let t0 = sim.gen.next_arrival();
-    sim.schedule(t0, EvKind::Arrival);
+    sim.schedule(t0, EvKind::Arrival { tenant: 0 });
     while sim.step() {}
     debug_assert_eq!(sim.completed, params.requests);
     // Close the capacity/metadata integrals at the last event.
@@ -639,6 +1003,202 @@ pub fn run(
         meta_byte_us: sim.meta_byte_us,
         final_metadata_bytes: sim.meta_now,
         duration_us: sim.last_event_us,
+        tenants: Vec::new(),
+    })
+}
+
+/// Run a multi-tenant scenario to completion (DESIGN.md §10): every
+/// tenant offers its own open-loop arrival stream over its dep-closed
+/// sub-DAG, all streams share the same replica pool, and the way
+/// partition drives a deterministic interference dilation. With
+/// `tp.adaptive`, per-tenant SLO burn arbitrates the repartition /
+/// upgrade / add-replica levers under a shared action budget. Equal
+/// inputs produce bit-equal results on every run.
+///
+/// Aggregate semantics: the result's `compliance` is the fraction of
+/// requests meeting *their own tenant's* SLO (tenants may carry
+/// distinct targets), while `slo_us` records the scenario default —
+/// per-tenant compliance against a single target lives in
+/// [`ClusterResult::tenants`].
+pub fn run_tenants(
+    topo: &ResolvedTopology,
+    tenants: &[TenantRun],
+    params: &RunParams,
+    tp: &TenancyParams,
+) -> Result<ClusterResult> {
+    if tenants.is_empty() {
+        bail!("multi-tenant run with no tenants");
+    }
+    if tenants.len() > u8::MAX as usize {
+        // Tenant ids travel as u8 (event payloads, slab tags, way
+        // partition keys); wrapping would silently merge tenants.
+        bail!("multi-tenant run with {} tenants (max {})", tenants.len(), u8::MAX);
+    }
+    if tp.total_ways == 0 {
+        bail!("multi-tenant run with 0 ways to partition");
+    }
+    let n = topo.services.len();
+    let nt = tenants.len();
+    let mut partition = WayPartition::new(tp.total_ways);
+    let mut states = Vec::with_capacity(nt);
+    for (ti, t) in tenants.iter().enumerate() {
+        if t.requests == 0 {
+            bail!("tenant '{}' offers 0 requests", t.name);
+        }
+        partition
+            .assign(ti as u8, t.ways)
+            .map_err(|e| anyhow::anyhow!("tenant '{}': way partition {e}", t.name))?;
+        let sub = topo
+            .sub_dag(&t.services)
+            .map_err(|e| anyhow::anyhow!("tenant '{}': {e}", t.name))?;
+        let gen = ArrivalGen::new(
+            t.shape.clone(),
+            params.base_rate_per_us,
+            mix64(t.arrival_seed ^ 0xA441_1A7E),
+        )?;
+        states.push(TenantState {
+            name: t.name.clone(),
+            gen,
+            requests: t.requests,
+            arrived: 0,
+            completed: 0,
+            met: 0,
+            slo_us: if t.slo_us > 0.0 { t.slo_us } else { params.slo_us },
+            demand_ways: t.demand_ways,
+            nsvc: sub.nsvc,
+            member: sub.member,
+            roots: sub.roots,
+            indegrees: sub.indegrees,
+            children: sub.children,
+            digest: Digest::with_capacity(t.requests as usize),
+            traffic: t.shape.label(),
+        });
+    }
+    let total_requests: u64 = tenants.iter().map(|t| t.requests).sum();
+    let slos: Vec<f64> = states.iter().map(|s| s.slo_us).collect();
+    let ctrl = TenantController::new(tp.ctrl.clone(), slos, tp.adaptive);
+    let live_replicas: u32 = topo.services.iter().map(|s| s.replicas).sum();
+    let meta_now: u64 = topo
+        .services
+        .iter()
+        .map(|s| s.candidates[0].metadata_bytes * s.replicas as u64)
+        .sum();
+    // `Sim.gen` only drives the single-tenant path; tenant arrivals come
+    // from the per-tenant streams, so this placeholder never draws.
+    let idle_gen =
+        ArrivalGen::new(tenants[0].shape.clone(), params.base_rate_per_us, 0)?;
+    let mut sim = Sim {
+        svc: topo
+            .services
+            .iter()
+            .map(|s| Svc {
+                replicas: (0..s.replicas)
+                    .map(|_| Replica { out_t: vec![0; nt], ..Replica::default() })
+                    .collect(),
+                current: 0,
+                model: s.candidates[0].model(s.cv),
+                cv: s.cv,
+                children: s.children.clone(),
+            })
+            .collect(),
+        names: topo.services.iter().map(|s| s.name.clone()).collect(),
+        cands: topo.services.iter().map(|s| s.candidates.clone()).collect(),
+        indegrees: topo.services.iter().map(|s| s.indegree).collect(),
+        roots: topo.roots(),
+        heap: BinaryHeap::with_capacity(1024),
+        seq: 0,
+        rng: Rng::new(mix64(params.seed ^ 0x5E41_71CE)),
+        gen: idle_gen,
+        slab: Slab::new(n),
+        digest: Digest::with_capacity(total_requests as usize),
+        met: 0,
+        arrived: 0,
+        completed: 0,
+        events: 0,
+        requests: total_requests,
+        slo_us: params.slo_us,
+        // Inert on the tenant path (finish_tenant never feeds it); the
+        // per-tenant controller owns all burn accounting.
+        ctrl: SloController::new(SloCfg::new(params.slo_us, mix64(params.seed ^ 0xC1A5_7E55))),
+        adaptive: false,
+        actions: Vec::new(),
+        meta_now,
+        live_replicas,
+        last_change_us: 0.0,
+        replica_us: 0.0,
+        meta_byte_us: 0.0,
+        last_event_us: 0.0,
+        tenancy: Some(Tenancy {
+            tenants: states,
+            partition,
+            total_ways: tp.total_ways,
+            alpha: tp.alpha,
+            ctrl,
+            adaptive: tp.adaptive,
+        }),
+    };
+    // First arrival per tenant, declaration order (the heap's sequence
+    // number breaks simultaneous arrivals deterministically).
+    for ti in 0..nt {
+        let t0 = sim.tenancy.as_mut().unwrap().tenants[ti].gen.next_arrival();
+        sim.schedule(t0, EvKind::Arrival { tenant: ti as u8 });
+    }
+    while sim.step() {}
+    debug_assert_eq!(sim.completed, total_requests);
+    let end = sim.last_event_us;
+    sim.account(end);
+    let mut tn = sim.tenancy.take().expect("tenancy state lost");
+    let tenant_stats: Vec<TenantStat> = tn
+        .tenants
+        .iter_mut()
+        .enumerate()
+        .map(|(i, ts)| TenantStat {
+            name: ts.name.clone(),
+            traffic: ts.traffic.clone(),
+            requests: ts.completed,
+            p50_us: ts.digest.percentile(50.0),
+            p95_us: ts.digest.percentile(95.0),
+            p99_us: ts.digest.percentile(99.0),
+            mean_us: ts.digest.mean(),
+            slo_us: ts.slo_us,
+            compliance: ts.met as f64 / ts.completed.max(1) as f64,
+            windows: tn.ctrl.windows[i],
+            violated_windows: tn.ctrl.violated[i],
+            final_ways: tn.partition.share(i as u8),
+        })
+        .collect();
+    let mut digest = sim.digest;
+    Ok(ClusterResult {
+        label: String::new(),
+        traffic: tenant_stats
+            .iter()
+            .map(|t| t.traffic.as_str())
+            .collect::<Vec<_>>()
+            .join("+"),
+        requests: sim.completed,
+        events: sim.events,
+        p50_us: digest.percentile(50.0),
+        p95_us: digest.percentile(95.0),
+        p99_us: digest.percentile(99.0),
+        mean_us: digest.mean(),
+        max_us: digest.max(),
+        slo_us: params.slo_us,
+        compliance: sim.met as f64 / sim.completed.max(1) as f64,
+        windows: tn.ctrl.windows.iter().sum(),
+        violated_windows: tn.ctrl.violated.iter().sum(),
+        actions: sim.actions,
+        final_replicas: sim.svc.iter().map(Svc::active_replicas).collect(),
+        final_configs: sim
+            .svc
+            .iter()
+            .enumerate()
+            .map(|(i, s)| sim.cands[i][s.current].label.clone())
+            .collect(),
+        replica_us: sim.replica_us,
+        meta_byte_us: sim.meta_byte_us,
+        final_metadata_bytes: sim.meta_now,
+        duration_us: sim.last_event_us,
+        tenants: tenant_stats,
     })
 }
 
@@ -938,6 +1498,113 @@ mod tests {
         let bad_rate =
             RunParams { requests: 100, seed: 1, slo_us: 1e9, base_rate_per_us: 0.0 };
         assert!(run(&topo, &shape, &bad_rate, None).is_err());
+    }
+
+    fn shared_service(replicas: u32, mean_us: f64) -> ResolvedTopology {
+        ResolvedTopology {
+            services: vec![ResolvedService {
+                name: "gw".into(),
+                replicas,
+                cv: 0.35,
+                candidates: vec![Candidate {
+                    label: "static".into(),
+                    mean_us,
+                    metadata_bytes: 0,
+                    table: None,
+                }],
+                children: vec![],
+                indegree: 0,
+            }],
+        }
+    }
+
+    fn tenant(name: &str, util: f64, seed: u64, slo: f64, ways: u32, demand: u32) -> TenantRun {
+        TenantRun {
+            name: name.into(),
+            shape: TrafficShape::Poisson { util },
+            requests: 15_000,
+            arrival_seed: seed,
+            slo_us: slo,
+            ways,
+            demand_ways: demand,
+            services: vec![0],
+        }
+    }
+
+    fn tp(alpha: f64, adaptive: bool) -> TenancyParams {
+        TenancyParams { total_ways: 8, alpha, adaptive, ctrl: TenantCtrlCfg::default() }
+    }
+
+    #[test]
+    fn coloc_is_deterministic_and_conserves_per_tenant_requests() {
+        let topo = shared_service(2, 10.0);
+        let tenants = vec![tenant("a", 0.45, 1, 1e9, 4, 4), tenant("b", 0.4, 2, 1e9, 4, 4)];
+        let p = RunParams { requests: 30_000, seed: 9, slo_us: 1e9, base_rate_per_us: 0.2 };
+        let r = run_tenants(&topo, &tenants, &p, &tp(0.8, false)).unwrap();
+        assert_eq!(r.requests, 30_000, "a tenant lost requests");
+        assert_eq!(r.tenants.len(), 2);
+        for ts in &r.tenants {
+            assert_eq!(ts.requests, 15_000, "{} lost requests", ts.name);
+            assert!(ts.p50_us <= ts.p95_us && ts.p95_us <= ts.p99_us, "{}", ts.name);
+            assert_eq!(ts.final_ways, 4, "static run moved ways");
+        }
+        assert!(r.actions.is_empty(), "static co-location must not act");
+        let again = run_tenants(&topo, &tenants, &p, &tp(0.8, false)).unwrap();
+        assert_eq!(r.p99_us.to_bits(), again.p99_us.to_bits());
+        assert_eq!(r.events, again.events);
+        for (x, y) in r.tenants.iter().zip(&again.tenants) {
+            assert_eq!(x.p99_us.to_bits(), y.p99_us.to_bits(), "{}", x.name);
+        }
+    }
+
+    #[test]
+    fn way_overflow_dilates_co_runner_tails() {
+        let topo = shared_service(2, 10.0);
+        // Both tenants want 6 ways but hold 2: overflow 4 each way.
+        let starved = vec![tenant("a", 0.35, 1, 1e9, 2, 6), tenant("b", 0.35, 2, 1e9, 2, 6)];
+        let p = RunParams { requests: 30_000, seed: 5, slo_us: 1e9, base_rate_per_us: 0.2 };
+        let calm = run_tenants(&topo, &starved, &p, &tp(0.0, false)).unwrap();
+        let noisy = run_tenants(&topo, &starved, &p, &tp(1.0, false)).unwrap();
+        assert!(
+            noisy.p99_us > calm.p99_us,
+            "overflowing co-runners did not widen the tail: {} !> {}",
+            noisy.p99_us,
+            calm.p99_us
+        );
+        assert!(noisy.mean_us > calm.mean_us, "dilation left the mean untouched");
+        // Working sets that fit their shares feel no interference at
+        // all: α is inert, bit for bit.
+        let fitting = vec![tenant("a", 0.35, 1, 1e9, 4, 4), tenant("b", 0.35, 2, 1e9, 4, 4)];
+        let off = run_tenants(&topo, &fitting, &p, &tp(0.0, false)).unwrap();
+        let on = run_tenants(&topo, &fitting, &p, &tp(1.0, false)).unwrap();
+        assert_eq!(off.p99_us.to_bits(), on.p99_us.to_bits(), "fitting tenants dilated");
+        assert_eq!(off.events, on.events);
+    }
+
+    #[test]
+    fn adaptive_loop_pulls_the_repartition_lever_first() {
+        let topo = shared_service(3, 10.0);
+        // "hot" is way-starved under a tight SLO; "cold" holds slack
+        // ways (share 6, demand 1) it can donate for free.
+        let tenants =
+            vec![tenant("hot", 0.5, 1, 22.0, 2, 6), tenant("cold", 0.3, 2, 1e9, 6, 1)];
+        let p = RunParams { requests: 30_000, seed: 3, slo_us: 1e9, base_rate_per_us: 0.3 };
+        let mut cfg = tp(1.0, true);
+        cfg.ctrl.window = 500;
+        let r = run_tenants(&topo, &tenants, &p, &cfg).unwrap();
+        let hot = &r.tenants[0];
+        assert!(hot.violated_windows > 0, "scenario never burned — not a stress test");
+        assert!(
+            r.actions.iter().any(|a| a.service == "ways"),
+            "repartition lever never pulled: {:?}",
+            r.actions
+        );
+        assert!(hot.final_ways > 2, "ways not moved to the starved tenant");
+        assert_eq!(hot.final_ways + r.tenants[1].final_ways, 8, "ways leaked");
+        // Bit-equal rerun, control actions included.
+        let again = run_tenants(&topo, &tenants, &p, &cfg).unwrap();
+        assert_eq!(r.actions, again.actions);
+        assert_eq!(r.p99_us.to_bits(), again.p99_us.to_bits());
     }
 
     #[test]

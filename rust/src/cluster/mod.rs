@@ -18,6 +18,13 @@
 //! through a quantile table ([`servicetime`]) instead of the analytic
 //! mean+cv model. Scenario runs are independent and deterministically
 //! seeded, so [`run_spec`] output is identical at any `--threads` value.
+//!
+//! Multi-tenant co-location (DESIGN.md §10): a spec's `tenants` section
+//! binds 2+ named tenants — each a dep-closed sub-DAG, traffic shape,
+//! SLO target, and L1-I way share — onto the same replica pool. The
+//! way partition and per-tenant rate limiters (`coordinator/tenant.rs`)
+//! are the live interference model; every tenant also runs solo with
+//! the same arrival seed, so [`tenant_report`] is a paired comparison.
 
 pub mod engine;
 pub mod servicetime;
@@ -26,10 +33,10 @@ pub mod spec;
 pub mod topology;
 pub mod workload;
 
-pub use engine::{ClusterResult, RunParams};
+pub use engine::{ClusterResult, RunParams, TenancyParams, TenantRun, TenantStat};
 pub use servicetime::{QuantileTable, ServiceTimeModel};
-pub use slo::{EngineView, Policy, SloCfg};
-pub use spec::ClusterSpec;
+pub use slo::{EngineView, Policy, SloCfg, TenantCtrlCfg};
+pub use spec::{ClusterSpec, TenantSpec};
 pub use topology::{Measure, ResolvedTopology, ServiceSpec, Topology};
 pub use workload::TrafficShape;
 
@@ -276,6 +283,161 @@ pub fn run_policy_scenario(
     Ok(r)
 }
 
+// ---------- Multi-tenant scenarios (DESIGN.md §10) ----------
+
+/// One tenant's runtime binding under one config label. The arrival
+/// seed hashes (label, tenant, shape) — *not* whether the tenant runs
+/// solo or co-located — so a tenant's solo and coloc runs replay the
+/// identical offered-load realization and their comparison is paired.
+fn tenant_run(spec: &ClusterSpec, label: &str, tenant: usize) -> Result<TenantRun> {
+    let t = &spec.tenants[tenant];
+    let shape = TrafficShape::parse(&t.traffic)?;
+    Ok(TenantRun {
+        name: t.name.clone(),
+        arrival_seed: cell_seed(
+            spec.seed,
+            &format!("tenant|{label}|{}|{}", t.name, shape.label()),
+        ),
+        shape,
+        requests: spec.requests,
+        slo_us: t.slo_us,
+        ways: t.ways,
+        demand_ways: t.demand_ways,
+        services: spec.tenant_services(tenant)?,
+    })
+}
+
+/// Every tenant's binding, spec order (the co-located runs).
+fn tenant_runs(spec: &ClusterSpec, label: &str) -> Result<Vec<TenantRun>> {
+    (0..spec.tenants.len()).map(|ti| tenant_run(spec, label, ti)).collect()
+}
+
+fn tenancy_params(spec: &ClusterSpec, adaptive: bool) -> TenancyParams {
+    TenancyParams {
+        total_ways: spec.total_ways,
+        alpha: spec.interference,
+        adaptive,
+        ctrl: TenantCtrlCfg::default(),
+    }
+}
+
+/// Run one tenant alone under config `label_idx` — the paired baseline
+/// its co-located twin is compared against. Self-seeded: campaign
+/// tenant cells reproduce `slofetch cluster` rows exactly.
+pub fn run_tenant_solo(
+    prep: &PreparedSpec,
+    spec: &ClusterSpec,
+    label_idx: usize,
+    tenant: usize,
+) -> Result<ClusterResult> {
+    let label = &prep.labels[label_idx];
+    let solo = vec![tenant_run(spec, label, tenant)?];
+    let params = RunParams {
+        requests: spec.requests,
+        seed: cell_seed(
+            spec.seed,
+            &format!("tenant-solo|{label}|{}", spec.tenants[tenant].name),
+        ),
+        slo_us: prep.slo_us,
+        base_rate_per_us: prep.base_rate,
+    };
+    let mut r = engine::run_tenants(
+        &prep.static_topos[label_idx],
+        &solo,
+        &params,
+        &tenancy_params(spec, false),
+    )?;
+    r.label = format!("{label}@{}", spec.tenants[tenant].name);
+    Ok(r)
+}
+
+/// Run every tenant co-located on the shared replica pool under config
+/// `label_idx` (static: per-tenant burn is tracked, no control
+/// actions). The interference dilation is live — this is the run the
+/// solo baselines are paired against.
+pub fn run_tenant_coloc(
+    prep: &PreparedSpec,
+    spec: &ClusterSpec,
+    label_idx: usize,
+) -> Result<ClusterResult> {
+    let label = &prep.labels[label_idx];
+    let runs = tenant_runs(spec, label)?;
+    let params = RunParams {
+        requests: spec.requests * spec.tenants.len() as u64,
+        seed: cell_seed(spec.seed, &format!("tenant-coloc|{label}")),
+        slo_us: prep.slo_us,
+        base_rate_per_us: prep.base_rate,
+    };
+    let mut r = engine::run_tenants(
+        &prep.static_topos[label_idx],
+        &runs,
+        &params,
+        &tenancy_params(spec, false),
+    )?;
+    r.label = format!("{label}@coloc");
+    Ok(r)
+}
+
+/// The adaptive co-located scenario: per-tenant SLO burn arbitrates the
+/// way-repartition / upgrade / add-replica levers on the multi-candidate
+/// policy topology, under one shared action budget.
+pub fn run_tenant_ctrl(prep: &PreparedSpec, spec: &ClusterSpec) -> Result<ClusterResult> {
+    let runs = tenant_runs(spec, "ctrl")?;
+    let params = RunParams {
+        requests: spec.requests * spec.tenants.len() as u64,
+        seed: cell_seed(spec.seed, "tenant-ctrl"),
+        slo_us: prep.slo_us,
+        base_rate_per_us: prep.base_rate,
+    };
+    let mut r =
+        engine::run_tenants(&prep.policy_topo, &runs, &params, &tenancy_params(spec, true))?;
+    r.label = "tenant-ctrl".into();
+    Ok(r)
+}
+
+/// Expand and run a multi-tenant spec: per config, one solo run per
+/// tenant plus the co-located run; then the adaptive tenant-control
+/// scenario. Scenario runs are independent and self-seeded — results
+/// are byte-identical at any `--threads` value.
+fn run_tenant_spec(
+    prep: &PreparedSpec,
+    spec: &ClusterSpec,
+    threads: usize,
+) -> Result<ClusterOutcome> {
+    #[derive(Clone, Copy)]
+    enum Def {
+        Solo(usize, usize),
+        Coloc(usize),
+        Ctrl,
+    }
+    let mut defs = Vec::new();
+    for li in 0..prep.labels.len() {
+        for ti in 0..spec.tenants.len() {
+            defs.push(Def::Solo(li, ti));
+        }
+        defs.push(Def::Coloc(li));
+    }
+    defs.push(Def::Ctrl);
+    let scenarios: Vec<ClusterResult> = runner::parallel_map(defs.len(), threads, |i| {
+        match defs[i] {
+            Def::Solo(li, ti) => run_tenant_solo(prep, spec, li, ti),
+            Def::Coloc(li) => run_tenant_coloc(prep, spec, li),
+            Def::Ctrl => run_tenant_ctrl(prep, spec),
+        }
+    })
+    .into_iter()
+    .collect::<Result<_>>()?;
+    let total_requests = scenarios.iter().map(|s| s.requests).sum();
+    let total_events = scenarios.iter().map(|s| s.events).sum();
+    Ok(ClusterOutcome {
+        scenarios,
+        total_requests,
+        total_events,
+        ipc_cells: prep.ipc_cells,
+        slo_us: prep.slo_us,
+    })
+}
+
 /// Expand and run a cluster spec: measure the (app × prefetcher) IPC
 /// matrix through the campaign runner, then run every static
 /// (config × traffic) scenario plus one control-loop scenario per
@@ -283,6 +445,9 @@ pub fn run_policy_scenario(
 /// with byte-identical results at any thread count.
 pub fn run_spec(spec: &ClusterSpec, threads: usize) -> Result<ClusterOutcome> {
     let prep = prepare_spec(spec, threads)?;
+    if spec.tenancy() {
+        return run_tenant_spec(&prep, spec, threads);
+    }
     let policies = spec.effective_policies()?;
     let shapes: Vec<TrafficShape> = spec
         .traffic
@@ -460,6 +625,67 @@ pub fn model_report(out: &ClusterOutcome) -> Option<Table> {
     Some(t)
 }
 
+/// Paired solo-vs-co-located comparison per (config, tenant): the
+/// interference-induced tail delta, per-tenant SLO burn, and final way
+/// shares (DESIGN.md §10). `None` for single-tenant outcomes.
+/// Deterministic: a pure function of the outcome, rows in
+/// scenario-expansion order.
+pub fn tenant_report(out: &ClusterOutcome) -> Option<Table> {
+    let mut t = Table::new(
+        "cluster_tenants",
+        "Multi-tenant co-location: solo vs co-located (paired arrival streams)",
+        &[
+            "config",
+            "tenant",
+            "traffic",
+            "P50 µs (solo)",
+            "P50 µs (coloc)",
+            "P99 µs (solo)",
+            "P99 µs (coloc)",
+            "Δ P99",
+            "burn",
+            "ways",
+        ],
+    );
+    for coloc in &out.scenarios {
+        let base = match coloc.label.strip_suffix("@coloc") {
+            Some(b) => b,
+            None => continue,
+        };
+        for ts in &coloc.tenants {
+            let solo_label = format!("{base}@{}", ts.name);
+            let solo = match out.scenarios.iter().find(|s| s.label == solo_label) {
+                Some(s) => s,
+                None => continue,
+            };
+            let delta = (ts.p99_us - solo.p99_us) / solo.p99_us * 100.0;
+            t.row(vec![
+                base.to_string(),
+                ts.name.clone(),
+                ts.traffic.clone(),
+                f2(solo.p50_us),
+                f2(ts.p50_us),
+                f2(solo.p99_us),
+                f2(ts.p99_us),
+                format!("{delta:+.1}%"),
+                format!("{}/{}", ts.violated_windows, ts.windows),
+                ts.final_ways.to_string(),
+            ]);
+        }
+    }
+    if t.rows.is_empty() {
+        return None;
+    }
+    t.note(
+        "paired runs: a tenant's solo and co-located scenarios share the arrival \
+         seed, so Δ P99 is pure co-location (shared queues + way-overflow \
+         dilation); burn = the tenant's burned/evaluated SLO windows in the \
+         co-located run; a coloc row's compliance in the main cluster table \
+         judges each request against its own tenant's SLO",
+    );
+    Some(t)
+}
+
 /// Control-action trace table for adaptive scenarios (empty-safe).
 pub fn action_report(out: &ClusterOutcome) -> Option<Table> {
     let mut t = Table::new(
@@ -566,6 +792,35 @@ mod tests {
             adaptive: true,
             policies: Vec::new(),
             service_times: "analytic".into(),
+            tenants: Vec::new(),
+            total_ways: 8,
+            interference: 0.8,
+        }
+    }
+
+    fn tiny_tenant_spec() -> ClusterSpec {
+        ClusterSpec {
+            adaptive: false,
+            requests: 3_000,
+            tenants: vec![
+                spec::TenantSpec {
+                    name: "web".into(),
+                    services: vec!["gw".into()],
+                    traffic: "poisson:0.45".into(),
+                    slo_us: 0.0,
+                    ways: 4,
+                    demand_ways: 6,
+                },
+                spec::TenantSpec {
+                    name: "batch".into(),
+                    services: Vec::new(),
+                    traffic: "poisson:0.3".into(),
+                    slo_us: 0.0,
+                    ways: 4,
+                    demand_ways: 5,
+                },
+            ],
+            ..tiny_spec()
         }
     }
 
@@ -684,6 +939,54 @@ mod tests {
         // Analytic specs emit no model table.
         let plain = run_spec(&tiny_spec(), 2).unwrap();
         assert!(model_report(&plain).is_none());
+    }
+
+    #[test]
+    fn tenant_spec_expands_pairs_and_stays_thread_invariant() {
+        let spec = tiny_tenant_spec();
+        let a = run_spec(&spec, 1).unwrap();
+        let b = run_spec(&spec, 4).unwrap();
+        // 2 configs × (2 solos + 1 coloc) + tenant-ctrl.
+        assert_eq!(a.scenarios.len(), spec.scenario_count());
+        assert_eq!(a.scenarios.len(), 7);
+        assert_eq!(report(&a).markdown(), report(&b).markdown());
+        for (x, y) in a.scenarios.iter().zip(&b.scenarios) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.p99_us.to_bits(), y.p99_us.to_bits(), "{}", x.label);
+            assert_eq!(x.events, y.events);
+        }
+        // The paired table has one row per (config, tenant).
+        let t = tenant_report(&a).expect("tenant table missing");
+        let tb = tenant_report(&b).expect("tenant table missing");
+        assert_eq!(t.markdown(), tb.markdown());
+        assert_eq!(t.rows.len(), 4);
+        assert!(t.markdown().contains("nl"));
+        assert!(t.markdown().contains("web"));
+        // Single-tenant outcomes emit no tenant table.
+        let plain = run_spec(&tiny_spec(), 2).unwrap();
+        assert!(tenant_report(&plain).is_none());
+        // Solo scenarios carry exactly one tenant, coloc both, and the
+        // coloc run serves each tenant the full request count.
+        let coloc = a.scenarios.iter().find(|s| s.label == "nl@coloc").unwrap();
+        assert_eq!(coloc.tenants.len(), 2);
+        assert_eq!(coloc.requests, spec.requests * 2);
+        for ts in &coloc.tenants {
+            assert_eq!(ts.requests, spec.requests);
+        }
+        let solo = a.scenarios.iter().find(|s| s.label == "nl@web").unwrap();
+        assert_eq!(solo.tenants.len(), 1);
+        assert_eq!(solo.requests, spec.requests);
+        // Co-location can only hurt a tenant: shared queues plus
+        // way-overflow dilation (both tenants overflow their shares).
+        let web = coloc.tenants.iter().find(|t| t.name == "web").unwrap();
+        assert!(
+            web.p99_us > solo.p99_us,
+            "co-location tightened the tail?! coloc {} vs solo {}",
+            web.p99_us,
+            solo.p99_us
+        );
+        // The adaptive scenario ran on the policy topology.
+        assert!(a.scenarios.iter().any(|s| s.label == "tenant-ctrl"));
     }
 
     #[test]

@@ -28,6 +28,7 @@
 
 use super::workload::TrafficShape;
 use crate::coordinator::budget::TokenBucket;
+use crate::coordinator::tenant::TenantLimiter;
 use crate::ml::bandit::{Bandit, Context};
 use crate::util::percentile::Digest;
 use anyhow::{bail, Result};
@@ -534,6 +535,185 @@ impl SloController {
     }
 }
 
+// ---------- Multi-tenant burn tracking and lever arbitration ----------
+
+/// Configuration of the multi-tenant control loop (DESIGN.md §10).
+#[derive(Clone, Debug)]
+pub struct TenantCtrlCfg {
+    /// Completions per per-tenant evaluation window.
+    pub window: u32,
+    /// Compliance target: a tenant window below it burns.
+    pub target: f64,
+    /// Per-service replica cap for the add-replica lever.
+    pub max_replicas: u32,
+    /// Shared action budget: actions per 1000 completions *across all
+    /// tenants* (one token bucket, so tenants contend for levers).
+    pub action_rate_per_kreq: f64,
+    pub action_burst: f64,
+    /// Per-tenant action rate (actions per 1000 of *that tenant's*
+    /// completions), enforced through the coordinator's
+    /// [`TenantLimiter`] — one starving tenant cannot monopolize the
+    /// shared budget.
+    pub tenant_rate_per_kreq: f64,
+}
+
+impl Default for TenantCtrlCfg {
+    fn default() -> Self {
+        TenantCtrlCfg {
+            window: 2_000,
+            target: 0.99,
+            max_replicas: 8,
+            action_rate_per_kreq: 2.0,
+            action_burst: 2.0,
+            tenant_rate_per_kreq: 1.0,
+        }
+    }
+}
+
+/// What the multi-tenant loop asks the engine to do for a burning
+/// tenant, in deterministic preference order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TenantAction {
+    /// Move one L1-I way from the most-slack co-tenant to the burning
+    /// tenant (the new lever: free — no capacity or metadata cost).
+    Repartition,
+    /// Switch the tenant's bottleneck service to its next faster config.
+    Upgrade,
+    /// Add one replica to the tenant's bottleneck service.
+    AddReplica,
+}
+
+/// Engine-side lever availability for one tenant, snapshotted at the
+/// completion that closes its window.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TenantView {
+    /// The tenant is way-starved (demand > share) and a donor exists.
+    pub can_repartition: bool,
+    /// The tenant's bottleneck service has a faster candidate left.
+    pub can_upgrade: bool,
+    /// The tenant's bottleneck service is below the replica cap.
+    pub can_scale_up: bool,
+}
+
+/// Per-tenant windowed SLO burn tracker plus lever arbitration: each
+/// tenant's completions close their own windows; a burned window
+/// proposes the first available lever (repartition → upgrade → add
+/// replica — deterministic, no bandit, no RNG), admitted by the shared
+/// action bucket *and* the tenant's own rate limiter.
+pub struct TenantController {
+    pub cfg: TenantCtrlCfg,
+    adaptive: bool,
+    slos: Vec<f64>,
+    /// Completions in the current window, per tenant (compliance comes
+    /// from `met` — no latency distribution is retained).
+    counts: Vec<u32>,
+    met: Vec<u32>,
+    /// Windows evaluated / burned, per tenant.
+    pub windows: Vec<u32>,
+    pub violated: Vec<u32>,
+    /// Shared budget over total completions (all tenants).
+    bucket: TokenBucket,
+    /// Per-tenant limiter over that tenant's completions
+    /// (`coordinator/tenant.rs`, live at last).
+    limiter: TenantLimiter,
+    completions: u64,
+    per_tenant: Vec<u64>,
+}
+
+impl TenantController {
+    /// `slos[i]` is tenant i's latency target (µs). `adaptive = false`
+    /// tracks burn but never proposes an action (static co-location).
+    pub fn new(mut cfg: TenantCtrlCfg, slos: Vec<f64>, adaptive: bool) -> TenantController {
+        // Same clamp as SloController: an empty window must never close.
+        cfg.window = cfg.window.max(1);
+        let n = slos.len();
+        let bucket = TokenBucket::new(cfg.action_rate_per_kreq, cfg.action_burst);
+        let limiter = TenantLimiter::new(cfg.tenant_rate_per_kreq);
+        TenantController {
+            counts: vec![0; n],
+            met: vec![0; n],
+            windows: vec![0; n],
+            violated: vec![0; n],
+            bucket,
+            limiter,
+            completions: 0,
+            per_tenant: vec![0; n],
+            slos,
+            adaptive,
+            cfg,
+        }
+    }
+
+    /// Whether the next completion of `tenant` will close its window —
+    /// the only moment [`Self::on_complete`] consults the lever view,
+    /// so the engine can skip building one everywhere else.
+    pub fn window_closing(&self, tenant: usize) -> bool {
+        self.counts[tenant] + 1 >= self.cfg.window
+    }
+
+    /// Feed one completed request of `tenant`. At that tenant's window
+    /// boundary, evaluates burn and may return a lever to pull.
+    pub fn on_complete(
+        &mut self,
+        tenant: usize,
+        latency_us: f64,
+        view: &TenantView,
+    ) -> Option<TenantAction> {
+        self.completions += 1;
+        self.per_tenant[tenant] += 1;
+        self.counts[tenant] += 1;
+        if latency_us <= self.slos[tenant] {
+            self.met[tenant] += 1;
+        }
+        if self.counts[tenant] < self.cfg.window {
+            return None;
+        }
+        let compliance = self.met[tenant] as f64 / self.cfg.window as f64;
+        self.windows[tenant] += 1;
+        let burned = compliance < self.cfg.target;
+        if burned {
+            self.violated[tenant] += 1;
+        }
+        self.counts[tenant] = 0;
+        self.met[tenant] = 0;
+        if !(self.adaptive && burned) {
+            return None;
+        }
+        // Deterministic preference: the free lever first (way
+        // repartition costs no capacity and no metadata), then the
+        // scale-up levers.
+        let act = if view.can_repartition {
+            TenantAction::Repartition
+        } else if view.can_upgrade {
+            TenantAction::Upgrade
+        } else if view.can_scale_up {
+            TenantAction::AddReplica
+        } else {
+            return None;
+        };
+        // Shared budget first, then the tenant's own limiter: a tenant
+        // whose limiter denies still debits the shared bucket (its burn
+        // *did* contend for the budget), which keeps arbitration
+        // conservative under pressure — and deterministic.
+        if !self.bucket.try_take(self.completions) {
+            return None;
+        }
+        if !self.limiter.allow(tenant as u8, self.per_tenant[tenant]) {
+            return None;
+        }
+        Some(act)
+    }
+
+    /// Fraction of tenant `i`'s evaluated windows that burned.
+    pub fn burn_rate(&self, tenant: usize) -> f64 {
+        if self.windows[tenant] == 0 {
+            0.0
+        } else {
+            self.violated[tenant] as f64 / self.windows[tenant] as f64
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -802,6 +982,65 @@ mod tests {
         let t_add = first_add.expect("predictive policy never pre-provisioned");
         assert!(t_add < 25_000.0, "pre-provision at {t_add} µs is after the peak");
         assert_eq!(c.violated, 0, "windows were healthy by construction");
+    }
+
+    #[test]
+    fn tenant_controller_tracks_burn_per_tenant() {
+        let cfg = TenantCtrlCfg { window: 100, ..TenantCtrlCfg::default() };
+        // Tenant 0 misses its 10 µs SLO, tenant 1 meets its 100 µs one.
+        let mut c = TenantController::new(cfg, vec![10.0, 100.0], false);
+        let v = TenantView::default();
+        for _ in 0..300 {
+            assert_eq!(c.on_complete(0, 50.0, &v), None, "static run must not act");
+            assert_eq!(c.on_complete(1, 50.0, &v), None);
+        }
+        assert_eq!(c.windows, vec![3, 3]);
+        assert_eq!(c.violated, vec![3, 0], "burn leaked across tenants");
+        assert_eq!(c.burn_rate(0), 1.0);
+        assert_eq!(c.burn_rate(1), 0.0);
+    }
+
+    #[test]
+    fn tenant_controller_prefers_the_free_lever_in_order() {
+        let mk = |view: TenantView| {
+            let cfg = TenantCtrlCfg { window: 50, ..TenantCtrlCfg::default() };
+            let mut c = TenantController::new(cfg, vec![10.0, 10.0], true);
+            let mut first = None;
+            for _ in 0..50 {
+                if let Some(a) = c.on_complete(0, 99.0, &view) {
+                    first.get_or_insert(a);
+                }
+            }
+            first
+        };
+        let all = TenantView { can_repartition: true, can_upgrade: true, can_scale_up: true };
+        assert_eq!(mk(all), Some(TenantAction::Repartition));
+        let no_ways = TenantView { can_repartition: false, ..all };
+        assert_eq!(mk(no_ways), Some(TenantAction::Upgrade));
+        let only_scale =
+            TenantView { can_repartition: false, can_upgrade: false, can_scale_up: true };
+        assert_eq!(mk(only_scale), Some(TenantAction::AddReplica));
+        let none = TenantView::default();
+        assert_eq!(mk(none), None, "no lever available must propose nothing");
+    }
+
+    #[test]
+    fn tenant_controller_is_bounded_by_shared_and_per_tenant_budgets() {
+        // Shared bucket: burst 2, 2/kreq. Per-tenant limiter: 1/kreq
+        // (burst 4). 20 consecutive burned windows of tenant 0 must be
+        // clipped by both meters.
+        let cfg = TenantCtrlCfg { window: 100, ..TenantCtrlCfg::default() };
+        let mut c = TenantController::new(cfg, vec![10.0], true);
+        let v = TenantView { can_repartition: true, can_upgrade: true, can_scale_up: true };
+        let mut actions = 0;
+        for _ in 0..2_000 {
+            if c.on_complete(0, 99.0, &v).is_some() {
+                actions += 1;
+            }
+        }
+        assert!(actions >= 2, "budget burst unused: {actions}");
+        assert!(actions <= 6, "budgets failed to bound actions: {actions}");
+        assert_eq!(c.violated, vec![20]);
     }
 
     #[test]

@@ -9,10 +9,42 @@ use super::slo::Policy;
 use super::topology::{ServiceSpec, Topology};
 use super::workload::TrafficShape;
 use crate::cli::parse_prefetcher;
+use crate::coordinator::tenant::WayPartition;
 use crate::trace::gen::apps;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
+
+/// Default L1-I way count the tenant partition divides.
+pub const DEFAULT_TOTAL_WAYS: u32 = 8;
+
+/// Default interference dilation coefficient α (DESIGN.md §10).
+pub const DEFAULT_INTERFERENCE: f64 = 0.8;
+
+/// One tenant binding in a multi-tenant cluster spec (DESIGN.md §10): a
+/// named, dep-closed sub-DAG of the shared topology plus the tenant's
+/// own traffic shape, SLO target, and L1-I way partition share.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Service names this tenant's requests traverse. Must be
+    /// *dep-closed* (every dependency of a member is a member); empty =
+    /// every service.
+    pub services: Vec<String>,
+    /// Traffic-shape spec ([`TrafficShape::parse`]) driving this
+    /// tenant's open-loop arrivals.
+    pub traffic: String,
+    /// Per-tenant latency SLO in µs; 0 = the scenario's derived SLO.
+    pub slo_us: f64,
+    /// L1-I ways locked to this tenant
+    /// ([`WayPartition`] share; Σ over tenants must fit `total_ways`).
+    pub ways: u32,
+    /// Ways this tenant's working set actually wants. Demand beyond the
+    /// locked share spills into co-runners: the interference dilation is
+    /// derived from co-runners' overflow and the per-replica outstanding
+    /// mix (see the engine's `dilation`).
+    pub demand_ways: u32,
+}
 
 /// A complete cluster experiment description.
 #[derive(Clone, Debug, PartialEq)]
@@ -52,6 +84,16 @@ pub struct ClusterSpec {
     /// table). Empirical mode additionally runs an analytic twin of
     /// every static scenario so the cluster report can compare models.
     pub service_times: String,
+    /// Multi-tenant co-location (DESIGN.md §10): 2+ named tenants whose
+    /// requests share the same replica pool. Empty (the default) keeps
+    /// the single-tenant path — and its output — bit-identical.
+    pub tenants: Vec<TenantSpec>,
+    /// Total L1-I ways the tenant [`WayPartition`] divides.
+    pub total_ways: u32,
+    /// Interference dilation coefficient α: a replica serving one
+    /// tenant while co-runners' way demand exceeds their locked shares
+    /// dilates its service time by up to `1 + α`.
+    pub interference: f64,
 }
 
 impl Default for ClusterSpec {
@@ -69,6 +111,9 @@ impl Default for ClusterSpec {
             adaptive: false,
             policies: Vec::new(),
             service_times: "analytic".into(),
+            tenants: Vec::new(),
+            total_ways: DEFAULT_TOTAL_WAYS,
+            interference: DEFAULT_INTERFERENCE,
         }
     }
 }
@@ -77,6 +122,54 @@ impl ClusterSpec {
     /// Whether scenarios replay trace-measured (empirical) service times.
     pub fn empirical(&self) -> bool {
         self.service_times == "empirical"
+    }
+
+    /// Whether this spec co-locates multiple tenants (DESIGN.md §10).
+    pub fn tenancy(&self) -> bool {
+        !self.tenants.is_empty()
+    }
+
+    /// Resolve one tenant's member-service indexes (topology order).
+    /// Empty `services` = every service. Errors on unknown names,
+    /// duplicates, and sets that are not dep-closed (a member whose
+    /// dependency is outside the set would deadlock its requests).
+    pub fn tenant_services(&self, tenant: usize) -> Result<Vec<u32>> {
+        let t = &self.tenants[tenant];
+        let svc = &self.topology.services;
+        let mut member = vec![false; svc.len()];
+        if t.services.is_empty() {
+            member.iter_mut().for_each(|m| *m = true);
+        } else {
+            for name in &t.services {
+                let i = svc.iter().position(|s| &s.name == name).with_context(|| {
+                    format!("tenant '{}': unknown service '{name}'", t.name)
+                })?;
+                if member[i] {
+                    bail!("tenant '{}': duplicate service '{name}'", t.name);
+                }
+                member[i] = true;
+            }
+        }
+        for (i, s) in svc.iter().enumerate() {
+            if !member[i] {
+                continue;
+            }
+            for d in &s.deps {
+                let p = svc
+                    .iter()
+                    .position(|x| &x.name == d)
+                    .with_context(|| format!("service '{}': unknown dep '{d}'", s.name))?;
+                if !member[p] {
+                    bail!(
+                        "tenant '{}': service '{}' depends on '{d}', which is outside \
+                         the tenant's set (tenant sub-DAGs must be dep-closed)",
+                        t.name,
+                        s.name
+                    );
+                }
+            }
+        }
+        Ok((0..svc.len() as u32).filter(|&i| member[i as usize]).collect())
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -149,6 +242,86 @@ impl ClusterSpec {
                 );
             }
         }
+        if !self.interference.is_finite() || self.interference < 0.0 {
+            bail!(
+                "cluster '{}': interference must be finite and ≥ 0, got {}",
+                self.name,
+                self.interference
+            );
+        }
+        if self.total_ways == 0 {
+            bail!("cluster '{}': total_ways must be ≥ 1", self.name);
+        }
+        if !self.tenants.is_empty() {
+            self.validate_tenants()?;
+        }
+        Ok(())
+    }
+
+    /// Tenant-section validation (called with ≥ 1 tenant declared).
+    fn validate_tenants(&self) -> Result<()> {
+        if self.tenants.len() < 2 {
+            bail!(
+                "cluster '{}': tenant co-location needs ≥ 2 tenants (got {})",
+                self.name,
+                self.tenants.len()
+            );
+        }
+        if self.tenants.len() > u8::MAX as usize {
+            bail!("cluster '{}': at most {} tenants", self.name, u8::MAX);
+        }
+        if self.empirical() {
+            bail!(
+                "cluster '{}': tenants currently require the analytic service-time \
+                 model (drop service_times = \"empirical\")",
+                self.name
+            );
+        }
+        if self.adaptive || !self.policies.is_empty() {
+            bail!(
+                "cluster '{}': tenants run their own control loop (per-tenant burn \
+                 arbitrating repartition/upgrade/add-replica) — drop 'adaptive' and \
+                 'policies'",
+                self.name
+            );
+        }
+        let mut partition = WayPartition::new(self.total_ways);
+        let mut seen = std::collections::HashSet::new();
+        for (ti, t) in self.tenants.iter().enumerate() {
+            if t.name.is_empty() {
+                bail!("cluster '{}': tenant #{ti} has an empty name", self.name);
+            }
+            // Reserved: "coloc" would make a tenant's solo-scenario
+            // label collide with the co-located run's "{config}@coloc",
+            // and both modes name campaign cell key segments.
+            if matches!(t.name.to_lowercase().as_str(), "coloc" | "solo") {
+                bail!(
+                    "cluster '{}': tenant name '{}' is reserved (scenario labels)",
+                    self.name,
+                    t.name
+                );
+            }
+            if !seen.insert(t.name.to_lowercase()) {
+                bail!("cluster '{}': duplicate tenant name '{}'", self.name, t.name);
+            }
+            TrafficShape::parse(&t.traffic)
+                .with_context(|| format!("tenant '{}' in cluster '{}'", t.name, self.name))?;
+            if t.slo_us < 0.0 {
+                bail!("tenant '{}': slo_us must be ≥ 0 (0 = derived)", t.name);
+            }
+            if t.ways == 0 || t.demand_ways == 0 {
+                bail!("tenant '{}': ways and demand_ways must be ≥ 1", t.name);
+            }
+            partition
+                .assign(ti as u8, t.ways)
+                .map_err(|e| anyhow::anyhow!("tenant '{}': way partition {e}", t.name))?;
+            let members = self
+                .tenant_services(ti)
+                .with_context(|| format!("in cluster '{}'", self.name))?;
+            if members.is_empty() {
+                bail!("tenant '{}': empty service set", t.name);
+            }
+        }
         Ok(())
     }
 
@@ -186,8 +359,14 @@ impl ClusterSpec {
 
     /// Scenario count: prefetchers × shapes (×2 in empirical mode — each
     /// static scenario runs under both service-time models so the report
-    /// can compare them), plus shapes again per autoscaler policy.
+    /// can compare them), plus shapes again per autoscaler policy. In
+    /// tenant mode (DESIGN.md §10): one solo run per (config, tenant),
+    /// one co-located run per config, plus the adaptive tenant-control
+    /// scenario (tenant shapes replace the `traffic` axis).
     pub fn scenario_count(&self) -> usize {
+        if self.tenancy() {
+            return self.prefetchers.len() * (self.tenants.len() + 1) + 1;
+        }
         let n_pol = if self.policies.is_empty() {
             usize::from(self.adaptive)
         } else {
@@ -252,6 +431,37 @@ impl ClusterSpec {
         // analytic campaigns.
         if self.service_times != "analytic" {
             fields.push(("service_times", Json::str(&self.service_times)));
+        }
+        // Same discipline for the tenant section: a tenant-less spec
+        // serializes exactly as pre-tenancy builds did, so old campaign
+        // stores keep resuming with 0 recomputed cells, and a tenant
+        // cell's content hash moves only when a tenant binding (or the
+        // partition geometry) changes.
+        if !self.tenants.is_empty() {
+            let tenants = self
+                .tenants
+                .iter()
+                .map(|t| {
+                    Json::obj(vec![
+                        ("name", Json::str(&t.name)),
+                        (
+                            "services",
+                            Json::Arr(t.services.iter().map(|s| Json::str(s)).collect()),
+                        ),
+                        ("traffic", Json::str(&t.traffic)),
+                        ("slo_us", Json::num(t.slo_us)),
+                        ("ways", Json::num(t.ways as f64)),
+                        ("demand_ways", Json::num(t.demand_ways as f64)),
+                    ])
+                })
+                .collect();
+            fields.push(("tenants", Json::Arr(tenants)));
+        }
+        if self.total_ways != DEFAULT_TOTAL_WAYS {
+            fields.push(("total_ways", Json::num(self.total_ways as f64)));
+        }
+        if self.interference != DEFAULT_INTERFERENCE {
+            fields.push(("interference", Json::num(self.interference)));
         }
         Json::obj(fields)
     }
@@ -347,6 +557,74 @@ impl ClusterSpec {
         if let Some(v) = j.get("service_times").and_then(Json::as_str) {
             spec.service_times = v.to_string();
         }
+        if let Some(arr) = j.get("tenants").and_then(Json::as_arr) {
+            for (i, t) in arr.iter().enumerate() {
+                let name = t
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("tenant #{i}: missing 'name'"))?;
+                let traffic = t
+                    .get("traffic")
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("tenant '{name}': missing 'traffic'"))?;
+                let services = match t.get("services") {
+                    None => Vec::new(),
+                    Some(v) => v
+                        .as_arr()
+                        .with_context(|| format!("tenant '{name}': 'services' must be an array"))?
+                        .iter()
+                        .map(|s| {
+                            s.as_str().map(str::to_string).with_context(|| {
+                                format!("tenant '{name}': services must be strings")
+                            })
+                        })
+                        .collect::<Result<_>>()?,
+                };
+                // Way counts are load-bearing (they set the interference
+                // shield/overflow): a missing or malformed value must
+                // error, never silently default — and an out-of-range
+                // one must not truncate through `as u32`.
+                let ways_of = |key: &str| -> Result<Option<u32>> {
+                    match t.get(key) {
+                        None => Ok(None),
+                        Some(v) => {
+                            let w = v.as_u64().with_context(|| {
+                                format!("tenant '{name}': '{key}' must be an integer")
+                            })?;
+                            u32::try_from(w).map(Some).map_err(|_| {
+                                anyhow::anyhow!("tenant '{name}': '{key}' = {w} out of range")
+                            })
+                        }
+                    }
+                };
+                let ways = ways_of("ways")?
+                    .with_context(|| format!("tenant '{name}': missing 'ways'"))?;
+                // The SLO target is as load-bearing as the way counts:
+                // absent means "derived", but a wrong-typed value is an
+                // error, never a silent fallback.
+                let slo_us = match t.get("slo_us") {
+                    None => 0.0,
+                    Some(v) => v.as_f64().with_context(|| {
+                        format!("tenant '{name}': 'slo_us' must be a number")
+                    })?,
+                };
+                spec.tenants.push(TenantSpec {
+                    name: name.to_string(),
+                    services,
+                    traffic: traffic.to_string(),
+                    slo_us,
+                    ways,
+                    demand_ways: ways_of("demand_ways")?.unwrap_or(ways),
+                });
+            }
+        }
+        if let Some(v) = j.get("total_ways").and_then(Json::as_u64) {
+            spec.total_ways = u32::try_from(v)
+                .map_err(|_| anyhow::anyhow!("cluster spec: total_ways = {v} out of range"))?;
+        }
+        if let Some(v) = j.get("interference").and_then(Json::as_f64) {
+            spec.interference = v;
+        }
         spec.validate()?;
         Ok(spec)
     }
@@ -404,6 +682,9 @@ mod tests {
             adaptive: true,
             policies: Vec::new(),
             service_times: "analytic".into(),
+            tenants: Vec::new(),
+            total_ways: DEFAULT_TOTAL_WAYS,
+            interference: DEFAULT_INTERFERENCE,
         }
     }
 
@@ -506,6 +787,155 @@ mod tests {
         let mut bad = small();
         bad.topology.services[0].trace = Some("/tmp/x.slft".into());
         assert!(bad.validate().is_err(), "trace without empirical mode not caught");
+    }
+
+    fn two_tenants() -> Vec<TenantSpec> {
+        vec![
+            TenantSpec {
+                name: "web".into(),
+                services: vec!["gw".into(), "search".into()],
+                traffic: "poisson:0.5".into(),
+                slo_us: 0.0,
+                ways: 4,
+                demand_ways: 6,
+            },
+            TenantSpec {
+                name: "batch".into(),
+                services: Vec::new(), // all services
+                traffic: "burst:0.3:3:40000:0.25".into(),
+                slo_us: 120.0,
+                ways: 4,
+                demand_ways: 4,
+            },
+        ]
+    }
+
+    fn tenant_spec() -> ClusterSpec {
+        ClusterSpec { tenants: two_tenants(), adaptive: false, ..small() }
+    }
+
+    #[test]
+    fn tenant_spec_validates_counts_and_roundtrips() {
+        let s = tenant_spec();
+        assert!(s.validate().is_ok());
+        assert!(s.tenancy());
+        // 2 configs × (2 solos + 1 coloc) + the tenant-ctrl scenario.
+        assert_eq!(s.scenario_count(), 7);
+        let back = ClusterSpec::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        // Member resolution: explicit subset vs the empty-means-all form.
+        assert_eq!(s.tenant_services(0).unwrap(), vec![0, 1]);
+        assert_eq!(s.tenant_services(1).unwrap(), vec![0, 1]);
+        // demand_ways defaults to ways when the JSON omits it.
+        let j = Json::parse(
+            r#"{
+                "services": [{"name": "a", "app": "crypto"}],
+                "prefetchers": ["nl"],
+                "tenants": [
+                    {"name": "t0", "traffic": "poisson:0.4", "ways": 3},
+                    {"name": "t1", "traffic": "poisson:0.4", "ways": 5}
+                ]
+            }"#,
+        )
+        .unwrap();
+        let s = ClusterSpec::from_json(&j).unwrap();
+        assert_eq!(s.tenants[0].demand_ways, 3);
+        assert_eq!(s.total_ways, DEFAULT_TOTAL_WAYS);
+        assert_eq!(s.interference, DEFAULT_INTERFERENCE);
+    }
+
+    #[test]
+    fn tenantless_spec_serializes_exactly_as_before() {
+        // The tenant fields must not leak into a single-tenant spec's
+        // canonical JSON: campaign cluster-cell content hashes — and
+        // therefore store resume — depend on it byte-for-byte.
+        let dump = small().to_json().dump();
+        assert!(!dump.contains("tenants"), "tenant key leaked: {dump}");
+        assert!(!dump.contains("total_ways"), "total_ways leaked: {dump}");
+        assert!(!dump.contains("interference"), "interference leaked: {dump}");
+        // Non-default partition geometry still round-trips.
+        let s = ClusterSpec { total_ways: 16, interference: 0.5, ..tenant_spec() };
+        let back = ClusterSpec::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn tenant_misconfigurations_are_rejected() {
+        let mut one = tenant_spec();
+        one.tenants.truncate(1);
+        assert!(one.validate().is_err(), "a single tenant is not co-location");
+
+        let mut dup = tenant_spec();
+        dup.tenants[1].name = "WEB".into();
+        assert!(dup.validate().is_err(), "case-normalized duplicate tenant");
+
+        let mut over = tenant_spec();
+        over.tenants[1].ways = 5; // 4 + 5 > 8
+        assert!(over.validate().is_err(), "oversubscribed way partition");
+
+        let mut unclosed = tenant_spec();
+        unclosed.tenants[0].services = vec!["search".into()]; // dep gw missing
+        assert!(unclosed.validate().is_err(), "non-dep-closed tenant set");
+
+        let mut unknown = tenant_spec();
+        unknown.tenants[0].services = vec!["nope".into()];
+        assert!(unknown.validate().is_err(), "unknown tenant service");
+
+        let mut shaped = tenant_spec();
+        shaped.tenants[0].traffic = "tsunami".into();
+        assert!(shaped.validate().is_err(), "bad tenant traffic shape");
+
+        let mut emp = tenant_spec();
+        emp.service_times = "empirical".into();
+        assert!(emp.validate().is_err(), "tenants + empirical must be rejected");
+
+        let mut pol = tenant_spec();
+        pol.policies = vec!["reactive".into()];
+        assert!(pol.validate().is_err(), "tenants + policies must conflict");
+
+        let mut adaptive = tenant_spec();
+        adaptive.adaptive = true;
+        assert!(adaptive.validate().is_err(), "tenants + adaptive must conflict");
+
+        let mut zero = tenant_spec();
+        zero.tenants[0].ways = 0;
+        assert!(zero.validate().is_err(), "0-way tenant");
+
+        let mut reserved = tenant_spec();
+        reserved.tenants[0].name = "coloc".into();
+        assert!(reserved.validate().is_err(), "reserved tenant name 'coloc'");
+        reserved.tenants[0].name = "SOLO".into();
+        assert!(reserved.validate().is_err(), "reserved tenant name 'solo'");
+
+        // Way counts are load-bearing: missing, malformed, or
+        // out-of-range values must error, never default or truncate.
+        let parse = |body: &str| {
+            ClusterSpec::from_json(
+                &Json::parse(&format!(
+                    r#"{{
+                        "services": [{{"name": "a", "app": "crypto"}}],
+                        "prefetchers": ["nl"],
+                        "tenants": [
+                            {{"name": "t0", "traffic": "poisson:0.4"{body}}},
+                            {{"name": "t1", "traffic": "poisson:0.4", "ways": 4}}
+                        ]
+                    }}"#
+                ))
+                .unwrap(),
+            )
+        };
+        assert!(parse("").is_err(), "missing 'ways' silently defaulted");
+        assert!(parse(r#", "ways": "4""#).is_err(), "string 'ways' accepted");
+        assert!(parse(r#", "ways": 4294967297"#).is_err(), "oversized 'ways' truncated");
+        assert!(parse(r#", "ways": 4"#).is_ok());
+        assert!(
+            parse(r#", "ways": 4, "slo_us": "120""#).is_err(),
+            "wrong-typed slo_us silently fell back to the derived SLO"
+        );
+
+        let mut alpha = tenant_spec();
+        alpha.interference = f64::NAN;
+        assert!(alpha.validate().is_err(), "NaN interference");
     }
 
     #[test]

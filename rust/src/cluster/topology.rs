@@ -377,6 +377,65 @@ impl ResolvedTopology {
             .filter(|&i| self.services[i as usize].indegree == 0)
             .collect()
     }
+
+    /// A tenant's view of this topology restricted to `members` (a
+    /// dep-closed service subset, `ClusterSpec::tenant_services`): its
+    /// requests traverse only member services, so fan-in, children, and
+    /// entry points are all recomputed over the induced sub-DAG. Errors
+    /// on an empty set or one with no entry point (which a dep-closed
+    /// subset of an acyclic DAG cannot actually produce — belt and
+    /// braces for hand-built callers).
+    pub fn sub_dag(&self, members: &[u32]) -> Result<SubDag> {
+        let n = self.services.len();
+        let mut member = vec![false; n];
+        for &s in members {
+            if s as usize >= n {
+                bail!("sub_dag: service index {s} out of range");
+            }
+            member[s as usize] = true;
+        }
+        if members.is_empty() {
+            bail!("sub_dag: empty service subset");
+        }
+        let mut indegrees = vec![0u32; n];
+        let mut children: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for (i, s) in self.services.iter().enumerate() {
+            if !member[i] {
+                continue;
+            }
+            for &c in &s.children {
+                if member[c as usize] {
+                    children[i].push(c);
+                    indegrees[c as usize] += 1;
+                }
+            }
+        }
+        let roots: Vec<u32> = (0..n as u32)
+            .filter(|&i| member[i as usize] && indegrees[i as usize] == 0)
+            .collect();
+        if roots.is_empty() {
+            bail!("sub_dag: subset has no entry point");
+        }
+        let nsvc = member.iter().filter(|&&m| m).count() as u32;
+        Ok(SubDag { member, indegrees, children, roots, nsvc })
+    }
+}
+
+/// One tenant's induced sub-DAG over a shared [`ResolvedTopology`]
+/// (DESIGN.md §10): what the multi-tenant engine routes that tenant's
+/// requests through.
+#[derive(Clone, Debug)]
+pub struct SubDag {
+    /// Membership per service index.
+    pub member: Vec<bool>,
+    /// Fan-in per service within the subset (0 for non-members).
+    pub indegrees: Vec<u32>,
+    /// Children per service within the subset.
+    pub children: Vec<Vec<u32>>,
+    /// Entry points of the sub-DAG.
+    pub roots: Vec<u32>,
+    /// Member count.
+    pub nsvc: u32,
 }
 
 #[cfg(test)]
@@ -583,6 +642,34 @@ mod tests {
             }
             other => panic!("expected analytic model, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn sub_dag_restricts_edges_roots_and_counts() {
+        // diamond: gateway → {search, ads} → render.
+        let r = resolved();
+        // A tenant that only touches gateway → search.
+        let sub = r.sub_dag(&[0, 1]).unwrap();
+        assert_eq!(sub.nsvc, 2);
+        assert_eq!(sub.roots, vec![0]);
+        assert_eq!(sub.children[0], vec![1], "non-member edge kept");
+        assert!(sub.children[1].is_empty(), "render leaked into the sub-DAG");
+        assert_eq!(sub.indegrees[1], 1);
+        assert_eq!(sub.indegrees[3], 0, "non-member fan-in must stay 0");
+        assert!(!sub.member[2] && !sub.member[3]);
+        // The full set reproduces the topology's own view.
+        let full = r.sub_dag(&[0, 1, 2, 3]).unwrap();
+        assert_eq!(full.roots, r.roots());
+        assert_eq!(full.indegrees[3], 2);
+        assert_eq!(full.nsvc, 4);
+        // Degenerate subsets are errors, not silent empties.
+        assert!(r.sub_dag(&[]).is_err(), "empty subset accepted");
+        assert!(r.sub_dag(&[9]).is_err(), "out-of-range index accepted");
+        // A non-dep-closed subset (render without its parents) has no
+        // entry point among its waiting members only when fan-in
+        // survives; {render} alone re-roots — the dep-closure guard
+        // lives in ClusterSpec::tenant_services, not here.
+        assert!(r.sub_dag(&[3]).is_ok());
     }
 
     #[test]

@@ -26,11 +26,16 @@ impl WayPartition {
         }
     }
 
-    /// Assign `ways` to a tenant; fails if oversubscribed.
+    /// Assign `ways` to a tenant; fails if oversubscribed. Re-assigning
+    /// adjusts in place (growing *or* shrinking a live share), so the
+    /// cluster simulator's way-repartition lever moves ways between
+    /// tenants with two calls: shrink the donor, then grow the taker.
     pub fn assign(&mut self, tenant: u8, ways: u32) -> Result<(), String> {
-        let used: u32 = self.shares.values().sum();
-        let cur = self.shares.get(&tenant).copied().unwrap_or(0);
-        if used - cur + ways > self.total_ways {
+        // Widened arithmetic: a near-u32::MAX request used to wrap the
+        // `used - cur + ways` sum back into acceptance.
+        let used: u64 = self.shares.values().map(|&w| w as u64).sum();
+        let cur = self.shares.get(&tenant).copied().unwrap_or(0) as u64;
+        if used - cur + ways as u64 > self.total_ways as u64 {
             return Err(format!(
                 "oversubscribed: {} + {} > {}",
                 used - cur,
@@ -46,9 +51,10 @@ impl WayPartition {
         self.shares.get(&tenant).copied().unwrap_or(0)
     }
 
-    /// Max prefetch-resident lines tenant may hold in a `sets`-set cache.
+    /// Max prefetch-resident lines tenant may hold in a `sets`-set cache
+    /// (saturating: `share × sets` on a large cache must cap, not wrap).
     pub fn prefetch_line_cap(&self, tenant: u8, sets: u32) -> u32 {
-        self.share(tenant) * sets
+        self.share(tenant).saturating_mul(sets)
     }
 }
 
@@ -101,6 +107,96 @@ mod tests {
         assert!(p.assign(1, 4).is_ok(), "re-assign adjusts in place");
         assert_eq!(p.share(1), 4);
         assert_eq!(p.prefetch_line_cap(0, 64), 256);
+    }
+
+    #[test]
+    fn assign_shrinks_in_place_and_rejects_overflowing_requests() {
+        let mut p = WayPartition::new(8);
+        p.assign(0, 5).unwrap();
+        // Shrinking a live share frees the difference for other tenants.
+        p.assign(0, 2).unwrap();
+        assert_eq!(p.share(0), 2);
+        p.assign(1, 6).unwrap();
+        // Oversubscription is rejected without corrupting live shares.
+        assert!(p.assign(2, 1).is_err());
+        assert_eq!(p.share(0), 2);
+        assert_eq!(p.share(1), 6);
+        // Near-u32::MAX requests used to wrap `used - cur + ways` back
+        // into acceptance; both the fresh and re-assign paths must
+        // reject them.
+        assert!(p.assign(2, u32::MAX).is_err(), "u32 overflow admitted a tenant");
+        assert!(p.assign(1, u32::MAX - 1).is_err(), "re-assign path overflowed");
+        assert_eq!(p.share(1), 6, "failed assign must not clobber the share");
+    }
+
+    #[test]
+    fn prefetch_line_cap_saturates_instead_of_wrapping() {
+        let mut p = WayPartition::new(u32::MAX);
+        p.assign(0, 1 << 20).unwrap();
+        // share × sets used to wrap u32 into a tiny cap on large caches.
+        assert_eq!(p.prefetch_line_cap(0, 1 << 20), u32::MAX);
+        assert_eq!(p.prefetch_line_cap(0, 64), 64 << 20);
+        assert_eq!(p.prefetch_line_cap(1, 64), 0, "unassigned tenant holds nothing");
+    }
+
+    #[test]
+    fn limiter_zero_rate_spends_its_burst_then_starves_forever() {
+        // Rate 0 buckets get a burst of max(0,1)·4 = 4 tokens and never
+        // refill, however far the cycle counter advances.
+        let mut l = TenantLimiter::new(0.0);
+        let mut got = 0;
+        for c in (0..10).map(|i| i * 1_000_000u64) {
+            if l.allow(0, c) {
+                got += 1;
+            }
+        }
+        assert_eq!(got, 4, "zero-rate bucket refilled: {got}");
+        // The explicit set_rate(0) path behaves identically.
+        l.set_rate(1, 0.0);
+        let mut got = 0;
+        for c in (0..10).map(|i| i * 1_000_000u64) {
+            if l.allow(1, c) {
+                got += 1;
+            }
+        }
+        assert_eq!(got, 4, "set_rate(0) bucket refilled: {got}");
+    }
+
+    #[test]
+    fn limiter_burst_exhaustion_then_refills_on_schedule() {
+        let mut l = TenantLimiter::new(1.0); // 1 token/kcycle, burst 4
+        let mut burst = 0;
+        for _ in 0..10 {
+            if l.allow(2, 0) {
+                burst += 1;
+            }
+        }
+        assert_eq!(burst, 4, "burst capacity");
+        assert!(!l.allow(2, 500), "half a token is not a token");
+        assert!(l.allow(2, 1_600), "1.6 kcycles must refill one token");
+    }
+
+    #[test]
+    fn limiter_survives_far_future_and_backward_cycle_jumps() {
+        let mut l = TenantLimiter::new(2.0); // burst 8
+        for _ in 0..8 {
+            assert!(l.allow(5, 0));
+        }
+        // A far-future jump refills to burst exactly — no f64 blowup,
+        // no unbounded credit.
+        let mut got = 0;
+        for _ in 0..100 {
+            if l.allow(5, u64::MAX) {
+                got += 1;
+            }
+        }
+        assert_eq!(got, 8, "far-future refill must cap at burst");
+        // Time going backwards must not mint tokens (saturating elapsed).
+        let mut l = TenantLimiter::new(1.0); // burst 4
+        for _ in 0..4 {
+            assert!(l.allow(6, 1_000_000));
+        }
+        assert!(!l.allow(6, 0), "backward cycle jump minted tokens");
     }
 
     #[test]

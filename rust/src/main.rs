@@ -5,6 +5,7 @@
 //! slofetch campaign --spec FILE [--threads N] [--out results.jsonl]
 //! slofetch cluster --spec FILE [--threads N] [--policies reactive,hysteresis,...]
 //!                  [--service-times analytic|empirical] [--trace FILE.slft]
+//!                  [--tenants on|off]
 //! slofetch simulate --app websearch --prefetcher ceip256 [--records N] [--ml] [--budget N]
 //! slofetch gen-trace --app websearch --records N --out trace.slft
 //! slofetch deploy --app admission --candidate cheip2k [--records N]
@@ -60,7 +61,7 @@ const USAGE: &str = "usage:
   slofetch figure <1..13|table1|summary|rpc|ablation|all> [--records N] [--seed S] [--out DIR] [--threads N]
   slofetch campaign --spec FILE [--threads N] [--out results.jsonl]
   slofetch cluster --spec FILE [--threads N] [--policies reactive,hysteresis,predictive,cost-aware]
-                   [--service-times analytic|empirical] [--trace FILE.slft]
+                   [--service-times analytic|empirical] [--trace FILE.slft] [--tenants on|off]
   slofetch simulate --app A --prefetcher P [--records N] [--ml] [--adapt-window] [--budget N] [--pjrt]
   slofetch gen-trace --app A --records N --out FILE
   slofetch deploy --app A --candidate P [--records N]
@@ -189,6 +190,20 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             s.trace = Some(trace.to_string());
         }
     }
+    // `--tenants off` strips the tenant section — the single-tenant
+    // baseline of the same spec file; `--tenants on` asserts the spec
+    // actually declares tenants (catching a stale spec path).
+    if let Some(mode) = args.opt("tenants") {
+        match mode {
+            "off" => spec.tenants.clear(),
+            "on" => {
+                if spec.tenants.is_empty() {
+                    bail!("--tenants on: spec '{spec_path}' declares no tenants");
+                }
+            }
+            other => bail!("--tenants expects on|off, got '{other}'"),
+        }
+    }
     spec.validate()?;
     let threads = args.threads()?;
     let t0 = std::time::Instant::now();
@@ -204,6 +219,9 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     );
     println!("{}", slofetch::cluster::report(&out).markdown());
     if let Some(t) = slofetch::cluster::model_report(&out) {
+        println!("{}", t.markdown());
+    }
+    if let Some(t) = slofetch::cluster::tenant_report(&out) {
         println!("{}", t.markdown());
     }
     if let Some(t) = slofetch::cluster::action_report(&out) {

@@ -1,0 +1,196 @@
+//! Multi-tenant co-location integration tests (DESIGN.md §10): (a) the
+//! shipped `examples/cluster_tenants.json` spec runs solo + co-located
+//! scenarios byte-identically across `--threads` values and reruns,
+//! with a paired `cluster_tenants` table; (b) stripping the tenant
+//! section (`slofetch cluster --tenants off`) reproduces the
+//! single-tenant baseline bit-for-bit; (c) campaign stores written
+//! before the tenant field reload and resume with 0 recomputed cells,
+//! while editing a tenant binding invalidates exactly the tenant cells.
+
+use slofetch::campaign::{self, CampaignSpec, ResultStore};
+use slofetch::cluster::{self, ClusterSpec};
+use std::path::Path;
+
+fn tenant_spec() -> ClusterSpec {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/cluster_tenants.json");
+    ClusterSpec::load(&path).expect("examples/cluster_tenants.json must load")
+}
+
+#[test]
+fn tenant_example_is_thread_and_rerun_invariant() {
+    let mut spec = tenant_spec();
+    spec.requests = 5_000; // keep the integration run quick
+    assert!(spec.tenancy());
+    let a = cluster::run_spec(&spec, 1).unwrap();
+    let b = cluster::run_spec(&spec, 8).unwrap();
+    assert_eq!(a.scenarios.len(), spec.scenario_count());
+    assert_eq!(
+        cluster::report(&a).markdown(),
+        cluster::report(&b).markdown(),
+        "tenant cluster output depends on --threads"
+    );
+    for (x, y) in a.scenarios.iter().zip(&b.scenarios) {
+        assert_eq!(x.label, y.label);
+        assert_eq!(x.p99_us.to_bits(), y.p99_us.to_bits(), "{}", x.label);
+        assert_eq!(x.events, y.events);
+        assert_eq!(x.actions, y.actions);
+        for (s, t) in x.tenants.iter().zip(&y.tenants) {
+            assert_eq!(s.p99_us.to_bits(), t.p99_us.to_bits(), "{}@{}", x.label, s.name);
+            assert_eq!(s.violated_windows, t.violated_windows);
+            assert_eq!(s.final_ways, t.final_ways);
+        }
+    }
+    // The paired table renders identically too, one row per
+    // (config, tenant).
+    let ta = cluster::tenant_report(&a).expect("cluster_tenants table missing");
+    let tb = cluster::tenant_report(&b).expect("cluster_tenants table missing");
+    assert_eq!(ta.markdown(), tb.markdown());
+    assert_eq!(ta.rows.len(), spec.prefetchers.len() * spec.tenants.len());
+    // Co-location can only widen the web tenant's tail: its solo twin
+    // shares the arrival seed, and its co-runner both queues on the
+    // shared gateway and overflows its way share.
+    let coloc = a.scenarios.iter().find(|s| s.label == "nl@coloc").unwrap();
+    let solo = a.scenarios.iter().find(|s| s.label == "nl@web").unwrap();
+    let web = coloc.tenants.iter().find(|t| t.name == "web").unwrap();
+    assert!(
+        web.p99_us > solo.p99_us,
+        "co-location tightened the tail?! coloc {} vs solo {}",
+        web.p99_us,
+        solo.p99_us
+    );
+    // Rerun at the same thread count: bit-equal.
+    let c = cluster::run_spec(&spec, 1).unwrap();
+    assert_eq!(cluster::report(&a).markdown(), cluster::report(&c).markdown());
+}
+
+#[test]
+fn tenancy_off_is_byte_identical_to_the_single_tenant_baseline() {
+    // `slofetch cluster --tenants off` clears the tenant section; the
+    // result must be indistinguishable — spec, JSON, and output — from
+    // a spec that never declared tenants at all.
+    let mut off = tenant_spec();
+    off.tenants.clear();
+    off.requests = 4_000;
+    let dump = off.to_json().dump();
+    assert!(!dump.contains("tenants"), "tenant keys leaked into the baseline: {dump}");
+    let reparsed = ClusterSpec::from_json(&off.to_json()).unwrap();
+    assert_eq!(reparsed, off);
+    let a = cluster::run_spec(&off, 1).unwrap();
+    let b = cluster::run_spec(&reparsed, 4).unwrap();
+    assert_eq!(cluster::report(&a).markdown(), cluster::report(&b).markdown());
+    for (x, y) in a.scenarios.iter().zip(&b.scenarios) {
+        assert_eq!(x.p99_us.to_bits(), y.p99_us.to_bits(), "{}", x.label);
+        assert_eq!(x.events, y.events);
+    }
+    // No tenant table, no tenant stats on the baseline path.
+    assert!(cluster::tenant_report(&a).is_none());
+    assert!(a.scenarios.iter().all(|s| s.tenants.is_empty()));
+}
+
+fn tenant_campaign() -> CampaignSpec {
+    let j = slofetch::util::json::Json::parse(
+        r#"{
+            "name": "pairings",
+            "apps": ["crypto"],
+            "prefetchers": ["nl"],
+            "records": 8000,
+            "seeds": [7],
+            "clusters": [{
+                "name": "shared",
+                "services": [
+                    {"name": "gw", "app": "admission"},
+                    {"name": "be", "app": "serde", "deps": ["gw"]}
+                ],
+                "prefetchers": ["nl", "ceip256"],
+                "traffic": ["poisson:0.6"],
+                "requests": 2500,
+                "records": 4000,
+                "adaptive": false,
+                "tenants": [
+                    {"name": "web", "services": ["gw"], "traffic": "poisson:0.4",
+                     "ways": 4, "demand_ways": 6},
+                    {"name": "batch", "traffic": "poisson:0.3", "ways": 4,
+                     "demand_ways": 5}
+                ]
+            }],
+            "policies": []
+        }"#,
+    )
+    .unwrap();
+    CampaignSpec::from_json(&j).unwrap()
+}
+
+#[test]
+fn pre_tenant_stores_resume_and_binding_edits_invalidate() {
+    let dir = std::env::temp_dir().join("slofetch_tenant_resume");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // (a) A store written by a pre-tenancy build: single-tenant cluster
+    // cells carry no "tenant" key. Such lines are exactly what this
+    // build writes for tenant-less clusters, so write one, assert the
+    // format, reload it, and rerun — 0 recomputed cells.
+    let pre = dir.join("pre_tenant.jsonl");
+    std::fs::remove_file(&pre).ok();
+    let plain = CampaignSpec::from_json(
+        &slofetch::util::json::Json::parse(
+            r#"{
+                "name": "plain",
+                "apps": ["crypto"],
+                "prefetchers": ["nl"],
+                "records": 8000,
+                "seeds": [7],
+                "clusters": [{
+                    "name": "edge",
+                    "services": [{"name": "gw", "app": "admission"}],
+                    "prefetchers": ["nl"],
+                    "traffic": ["poisson:0.6"],
+                    "requests": 2500,
+                    "records": 4000,
+                    "adaptive": false
+                }],
+                "policies": ["reactive"]
+            }"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    {
+        let mut store = ResultStore::open(&pre).unwrap();
+        campaign::run_to_store(&plain, 2, &mut store).unwrap();
+    }
+    let text = std::fs::read_to_string(&pre).unwrap();
+    assert!(text.contains("\"kind\":\"cluster\""), "no cluster line written");
+    assert!(!text.contains("\"tenant\""), "pre-tenancy line format drifted: {text}");
+    let mut store = ResultStore::open(&pre).unwrap();
+    let again = campaign::run_to_store(&plain, 2, &mut store).unwrap();
+    assert_eq!(again.computed, 0, "pre-tenant store failed to resume");
+    std::fs::remove_file(&pre).ok();
+
+    // (b) Tenant-cell stores: resume is exact, and editing a tenant
+    // binding invalidates the tenant cells (their keys hash the full
+    // cluster spec, tenant section included) while the sim-cell matrix
+    // is untouched.
+    let spec = tenant_campaign();
+    let mut store = ResultStore::in_memory();
+    let first = campaign::run_to_store(&spec, 2, &mut store).unwrap();
+    // 1 sim cell + 2 tenants × {solo, coloc}.
+    assert_eq!(first.total, 5);
+    assert_eq!(first.computed, 5);
+    let resumed = campaign::run_to_store(&spec, 1, &mut store).unwrap();
+    assert_eq!(resumed.computed, 0, "tenant cells recomputed on resume");
+    let mut edited = spec.clone();
+    edited.clusters[0].tenants[0].demand_ways = 4;
+    let after_edit = campaign::run_to_store(&edited, 2, &mut store).unwrap();
+    assert_eq!(
+        after_edit.computed, 4,
+        "a tenant-binding edit must invalidate exactly the 4 tenant cells"
+    );
+    assert_eq!(after_edit.skipped, 1, "the sim cell must survive the edit");
+    // The report pairs strictly by content-hashed key: the fresh cells
+    // pair with each other, the stale pre-edit cells group separately
+    // and pair among themselves — never across the edit.
+    let t = campaign::report::tenant_pairings(&store).expect("campaign_tenants missing");
+    assert_eq!(t.rows.len(), 4, "stale + fresh pairings must both render");
+    let paired = t.rows.iter().all(|r| r[4] != "-");
+    assert!(paired, "a pairing crossed the spec edit: {:?}", t.rows);
+}
