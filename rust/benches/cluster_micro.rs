@@ -1,14 +1,17 @@
 //! Cluster event-loop throughput bench: events/sec at 1M+ requests on
 //! synthetic topologies (no trace simulation — pure queueing), tracking
 //! the hot path across PRs. Scale with SLOFETCH_BENCH_REQUESTS
-//! (default 1M requests per scenario); set SLOFETCH_BENCH_JSON=PATH to
-//! also emit a machine-readable events/sec report (the CI bench-smoke
-//! job uploads it as the `BENCH_cluster.json` artifact).
+//! (default 1M requests per scenario) and SLOFETCH_BENCH_RUNS (default 3
+//! timed runs per scenario, reported as median with a p10/p90 spread);
+//! set SLOFETCH_BENCH_JSON=PATH to also emit a machine-readable report
+//! including the engine's self-profiled peak event-heap depth (the CI
+//! bench-smoke job uploads it as the `BENCH_cluster.json` artifact).
 
 use slofetch::cluster::engine::{self, RunParams};
 use slofetch::cluster::topology::{Candidate, ResolvedService, ResolvedTopology};
 use slofetch::cluster::workload::TrafficShape;
 use slofetch::util::json::Json;
+use slofetch::util::percentile::Digest;
 use slofetch::util::timer::time_it;
 
 fn chain(n: usize) -> ResolvedTopology {
@@ -57,25 +60,58 @@ fn fanout() -> ResolvedTopology {
     }
 }
 
-/// Run one scenario and return its events/sec (also printed).
-fn bench(name: &str, topo: &ResolvedTopology, shape: &TrafficShape, requests: u64) -> f64 {
+/// Per-scenario summary across timed runs.
+struct ScenarioResult {
+    name: &'static str,
+    events_per_sec: f64,
+    p10: f64,
+    p90: f64,
+    peak_heap: u64,
+}
+
+/// Run one scenario `runs` times and summarize its events/sec (also printed).
+fn bench(
+    name: &'static str,
+    topo: &ResolvedTopology,
+    shape: &TrafficShape,
+    requests: u64,
+    runs: usize,
+) -> ScenarioResult {
     let params = RunParams {
         requests,
         seed: 17,
         slo_us: topo.zero_load_us() * 4.0,
         base_rate_per_us: topo.bottleneck_rate() * 0.7,
     };
-    let (r, secs) = time_it(|| engine::run(topo, shape, &params, None).unwrap());
-    assert_eq!(r.requests, requests);
-    let events_per_sec = r.events as f64 / secs;
+    let mut d = Digest::new();
+    let mut events = 0u64;
+    let mut peak_heap = 0u64;
+    let mut p99 = 0.0f64;
+    for _ in 0..runs {
+        let (r, secs) = time_it(|| engine::run(topo, shape, &params, None).unwrap());
+        assert_eq!(r.requests, requests);
+        d.add(r.events as f64 / secs);
+        events = r.events;
+        peak_heap = r.peak_heap;
+        p99 = r.p99_us;
+    }
+    let out = ScenarioResult {
+        name,
+        events_per_sec: d.percentile(50.0),
+        p10: d.percentile(10.0),
+        p90: d.percentile(90.0),
+        peak_heap,
+    };
     println!(
-        "{name:<22} {:>7.2}M events/s  ({} events, {:.2}s, p99 {:.1} µs)",
-        events_per_sec / 1e6,
-        r.events,
-        secs,
-        r.p99_us,
+        "{name:<22} {:>7.2}M events/s  [p10 {:.2}M, p90 {:.2}M]  ({} events, heap {}, p99 {:.1} µs)",
+        out.events_per_sec / 1e6,
+        out.p10 / 1e6,
+        out.p90 / 1e6,
+        events,
+        peak_heap,
+        p99,
     );
-    events_per_sec
+    out
 }
 
 fn main() {
@@ -83,7 +119,12 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(1_000_000u64);
-    println!("== cluster_micro: {requests} requests/scenario ==");
+    let runs = std::env::var("SLOFETCH_BENCH_RUNS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3usize)
+        .max(1);
+    println!("== cluster_micro: {requests} requests/scenario, {runs} runs ==");
     let scenarios: [(&str, ResolvedTopology, TrafficShape); 4] = [
         ("chain3/poisson", chain(3), TrafficShape::Poisson { util: 1.0 }),
         (
@@ -98,18 +139,33 @@ fn main() {
             TrafficShape::Diurnal { util: 0.8, amplitude: 0.3, period_us: 200_000.0 },
         ),
     ];
-    let mut results: Vec<(&str, f64)> = Vec::new();
+    let mut results: Vec<ScenarioResult> = Vec::new();
     for (name, topo, shape) in &scenarios {
-        results.push((*name, bench(name, topo, shape, requests)));
+        results.push(bench(name, topo, shape, requests, runs));
     }
-    // Machine-readable trajectory point for CI (events/sec per scenario).
+    // Machine-readable trajectory point for CI: median events/sec per
+    // scenario (stable key), the p10/p90 spread, and the engine's
+    // self-profiled peak heap depth.
     if let Ok(path) = std::env::var("SLOFETCH_BENCH_JSON") {
         let j = Json::obj(vec![
             ("bench", Json::str("cluster_micro")),
             ("requests", Json::num(requests as f64)),
+            ("runs", Json::num(runs as f64)),
             (
                 "events_per_sec",
-                Json::obj(results.iter().map(|(n, e)| (*n, Json::num(*e))).collect()),
+                Json::obj(results.iter().map(|r| (r.name, Json::num(r.events_per_sec))).collect()),
+            ),
+            (
+                "events_per_sec_p10",
+                Json::obj(results.iter().map(|r| (r.name, Json::num(r.p10))).collect()),
+            ),
+            (
+                "events_per_sec_p90",
+                Json::obj(results.iter().map(|r| (r.name, Json::num(r.p90))).collect()),
+            ),
+            (
+                "peak_heap",
+                Json::obj(results.iter().map(|r| (r.name, Json::num(r.peak_heap as f64))).collect()),
             ),
         ]);
         std::fs::write(&path, j.pretty()).expect("write bench json");

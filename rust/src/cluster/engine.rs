@@ -19,6 +19,7 @@ use super::slo::{
 use super::topology::{Candidate, ResolvedTopology};
 use super::workload::{ArrivalGen, TrafficShape};
 use crate::coordinator::tenant::WayPartition;
+use crate::obs::{ObsCfg, ObsData, Recorder};
 use crate::util::percentile::Digest;
 use crate::util::rng::{mix64, Rng};
 use anyhow::{bail, Result};
@@ -139,8 +140,14 @@ pub struct ClusterResult {
     pub final_metadata_bytes: u64,
     /// Simulated duration (µs, time of the last processed event).
     pub duration_us: f64,
+    /// Peak event-heap depth over the run (self-profiling for the
+    /// scheduler-rewrite scoreboard; tracked on every run).
+    pub peak_heap: u64,
     /// Per-tenant outcomes (multi-tenant runs only; empty otherwise).
     pub tenants: Vec<TenantStat>,
+    /// Observability payload (`None` unless the run was launched with
+    /// [`ObsCfg::enabled`] via [`run_obs`]/[`run_tenants_obs`]).
+    pub obs: Option<ObsData>,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -331,12 +338,21 @@ struct Sim {
     last_event_us: f64,
     /// Multi-tenant state; `None` = the single-tenant path.
     tenancy: Option<Tenancy>,
+    /// Peak event-heap depth (self-profiling; an integer compare per
+    /// schedule, tracked even with obs off).
+    peak_heap: usize,
+    /// Observability recorder; `None` = the byte-identical baseline
+    /// path (every hook is behind an `if let`).
+    obs: Option<Recorder>,
 }
 
 impl Sim {
     fn schedule(&mut self, t: f64, kind: EvKind) {
         self.seq += 1;
         self.heap.push(Reverse(Ev { t, seq: self.seq, kind }));
+        if self.heap.len() > self.peak_heap {
+            self.peak_heap = self.heap.len();
+        }
     }
 
     fn sample_service(&mut self, svc: usize) -> f64 {
@@ -367,11 +383,18 @@ impl Sim {
             let t = self.slab.tenant[slot as usize] as usize;
             self.svc[svc].replicas[best].out_t[t] += 1;
         }
+        if let Some(o) = self.obs.as_mut() {
+            o.spans.on_enqueue(slot, svc as u32, now);
+        }
         if self.svc[svc].replicas[best].in_service.is_none() {
             self.svc[svc].replicas[best].in_service = Some(slot);
-            let mut dt = self.sample_service(svc);
-            if self.tenancy.is_some() {
-                dt *= self.dilation(svc, best, slot);
+            let base = self.sample_service(svc);
+            // `base * dilation` is the baseline's `dt *= dilation`
+            // bit-for-bit; the split exposes the interference component.
+            let dt =
+                if self.tenancy.is_some() { base * self.dilation(svc, best, slot) } else { base };
+            if let Some(o) = self.obs.as_mut() {
+                o.spans.on_start(slot, svc as u32, best as u32, now, dt - base);
             }
             self.schedule(now + dt, EvKind::Complete { svc: svc as u32, rep: best as u32 });
         } else {
@@ -644,13 +667,23 @@ impl Sim {
             self.met += 1;
         }
         self.completed += 1;
+        if let Some(o) = self.obs.as_mut() {
+            o.spans.on_finish(slot);
+            o.metrics.observe("latency_us", latency);
+        }
         self.slab.free.push(slot);
         // Static scenarios feed a lever-less view: the controller tracks
         // windows/burn but its policy can never propose anything.
         let view = if self.adaptive { self.view(now) } else { EngineView::frozen(now) };
+        let windows_before = self.ctrl.windows;
         if let Some(act) = self.ctrl.on_complete(latency, &view) {
             let applied = self.apply_action(act, now);
             self.ctrl.settle_applied(applied);
+        }
+        // Snapshot after the boundary's lever (if any) applied, so the
+        // timeseries reflects the controller's post-decision state.
+        if self.obs.is_some() && self.ctrl.windows > windows_before {
+            self.snapshot_metrics(now);
         }
     }
 
@@ -668,6 +701,10 @@ impl Sim {
                 } else {
                     let n = self.slab.nsvc as u32;
                     let slot = self.slab.alloc(ev.t, &self.indegrees, n, 0);
+                    if let Some(o) = self.obs.as_mut() {
+                        // Request id = arrival index (incremented below).
+                        o.spans.on_arrival(slot, self.arrived, 0);
+                    }
                     let roots = std::mem::take(&mut self.roots);
                     for &r in &roots {
                         self.dispatch(r as usize, slot, ev.t);
@@ -690,16 +727,22 @@ impl Sim {
                     let done = self.slab.tenant[slot as usize] as usize;
                     self.svc[svc].replicas[rep].out_t[done] -= 1;
                 }
+                if let Some(o) = self.obs.as_mut() {
+                    o.spans.on_end(slot, svc as u32, ev.t);
+                }
                 if let Some(next) = self.svc[svc].replicas[rep].queue.pop_front() {
                     self.svc[svc].replicas[rep].in_service = Some(next);
-                    let mut dt = self.sample_service(svc);
-                    if self.tenancy.is_some() {
-                        dt *= self.dilation(svc, rep, next);
+                    let base = self.sample_service(svc);
+                    let dt = if self.tenancy.is_some() {
+                        base * self.dilation(svc, rep, next)
+                    } else {
+                        base
+                    };
+                    if let Some(o) = self.obs.as_mut() {
+                        o.spans.on_start(next, svc as u32, rep as u32, ev.t, dt - base);
                     }
-                    self.schedule(ev.t + dt, EvKind::Complete {
-                        svc: svc as u32,
-                        rep: rep as u32,
-                    });
+                    let kind = EvKind::Complete { svc: svc as u32, rep: rep as u32 };
+                    self.schedule(ev.t + dt, kind);
                 }
                 // Fan out: along the owning tenant's sub-DAG in tenant
                 // mode, along the full topology otherwise — one shared
@@ -712,6 +755,9 @@ impl Sim {
                 for &c in &children {
                     let ci = c as usize;
                     let idx = slot as usize * self.slab.nsvc + ci;
+                    if let Some(o) = self.obs.as_mut() {
+                        o.spans.on_first_dep(slot, c, ev.t);
+                    }
                     self.slab.pending[idx] -= 1;
                     if self.slab.pending[idx] == 0 {
                         self.dispatch(ci, slot, ev.t);
@@ -752,6 +798,11 @@ impl Sim {
             // reads the tenancy state for dilation).
             (slot, next, std::mem::take(&mut ts.roots))
         };
+        if let Some(o) = self.obs.as_mut() {
+            // Request id = global arrival index (incremented below), so
+            // sampling stays decorrelated across tenants.
+            o.spans.on_arrival(slot, self.arrived, tenant);
+        }
         for &r in &roots {
             self.dispatch(r as usize, slot, now);
         }
@@ -769,6 +820,10 @@ impl Sim {
         let tenant = self.slab.tenant[slot as usize] as usize;
         self.digest.add(latency);
         self.completed += 1;
+        if let Some(o) = self.obs.as_mut() {
+            o.spans.on_finish(slot);
+            o.metrics.observe("latency_us", latency);
+        }
         self.slab.free.push(slot);
         // Lever availability first (immutable reads). The view is only
         // consulted at the tenant's window boundary, so the
@@ -788,7 +843,7 @@ impl Sim {
                 TenantView::default()
             }
         };
-        let act = {
+        let (act, window_closed) = {
             let tn = self.tenancy.as_mut().expect("tenant completion without tenancy");
             let ts = &mut tn.tenants[tenant];
             ts.digest.add(latency);
@@ -797,11 +852,85 @@ impl Sim {
                 ts.met += 1;
                 self.met += 1;
             }
-            tn.ctrl.on_complete(tenant, latency, &view)
+            let windows_before = tn.ctrl.windows[tenant];
+            let act = tn.ctrl.on_complete(tenant, latency, &view);
+            (act, tn.ctrl.windows[tenant] > windows_before)
         };
         if let Some(act) = act {
             self.apply_tenant_action(tenant, act, now);
         }
+        // Snapshot after the boundary's lever (if any) applied.
+        if window_closed && self.obs.is_some() {
+            self.snapshot_metrics(now);
+        }
+    }
+
+    /// Push one metrics-registry snapshot at an SLO-window boundary:
+    /// engine state, controller internals, and (tenant runs) per-tenant
+    /// way shares and burn rates. Every value is a pure function of the
+    /// simulated event order — nothing wall-clock. Called only with obs
+    /// enabled.
+    fn snapshot_metrics(&mut self, now: f64) {
+        let heap_len = self.heap.len();
+        let live_replicas = self.live_replicas;
+        let meta_now = self.meta_now;
+        let nactions = self.actions.len() as u64;
+        let depths: Vec<(String, f64)> = self
+            .svc
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let d: usize = s
+                    .replicas
+                    .iter()
+                    .map(|r| r.queue.len() + usize::from(r.in_service.is_some()))
+                    .sum();
+                (format!("depth.{}", self.names[i]), d as f64)
+            })
+            .collect();
+        let (windows, violated, burn, bucket, tenant_gauges) = match &self.tenancy {
+            None => (
+                self.ctrl.windows as u64,
+                self.ctrl.violated as u64,
+                self.ctrl.burn_rate(),
+                self.ctrl.bucket_level(),
+                Vec::new(),
+            ),
+            Some(tn) => {
+                let windows: u32 = tn.ctrl.windows.iter().sum();
+                let violated: u32 = tn.ctrl.violated.iter().sum();
+                let burn =
+                    if windows > 0 { violated as f64 / windows as f64 } else { 0.0 };
+                let mut gauges = Vec::with_capacity(tn.tenants.len() * 2);
+                for (i, ts) in tn.tenants.iter().enumerate() {
+                    gauges.push((
+                        format!("ways.{}", ts.name),
+                        tn.partition.share(i as u8) as f64,
+                    ));
+                    gauges.push((format!("burn.{}", ts.name), tn.ctrl.burn_rate(i)));
+                }
+                (windows as u64, violated as u64, burn, tn.ctrl.bucket_level(), gauges)
+            }
+        };
+        let (arrived, completed, events) = (self.arrived, self.completed, self.events);
+        let o = self.obs.as_mut().expect("snapshot_metrics without obs");
+        o.metrics.counter("arrived", arrived);
+        o.metrics.counter("completed", completed);
+        o.metrics.counter("events", events);
+        o.metrics.counter("actions", nactions);
+        o.metrics.counter("violated_windows", violated);
+        o.metrics.gauge("heap_len", heap_len as f64);
+        o.metrics.gauge("live_replicas", live_replicas as f64);
+        o.metrics.gauge("metadata_bytes", meta_now as f64);
+        o.metrics.gauge("burn_rate", burn);
+        o.metrics.gauge("token_bucket_level", bucket);
+        for (k, v) in &depths {
+            o.metrics.gauge(k, *v);
+        }
+        for (k, v) in &tenant_gauges {
+            o.metrics.gauge(k, *v);
+        }
+        o.snapshot(now, windows);
     }
 
     /// Bottleneck service within one tenant's sub-DAG (lowest aggregate
@@ -911,6 +1040,22 @@ pub fn run(
     params: &RunParams,
     ctrl: Option<SloCfg>,
 ) -> Result<ClusterResult> {
+    run_obs(topo, shape, params, ctrl, &ObsCfg::off())
+}
+
+/// [`run`] with an observability configuration (DESIGN.md §11).
+/// `obs.enabled = false` is exactly [`run`]: the recorder is never
+/// constructed, every hook is skipped, and the result is bit-equal to
+/// the baseline. Enabled, the hooks read engine state the loop already
+/// computes — no RNG draws, no event reordering — so the recorded data
+/// is a pure function of the (unchanged) event order.
+pub fn run_obs(
+    topo: &ResolvedTopology,
+    shape: &TrafficShape,
+    params: &RunParams,
+    ctrl: Option<SloCfg>,
+    obs: &ObsCfg,
+) -> Result<ClusterResult> {
     if params.requests == 0 {
         bail!("cluster run with 0 requests");
     }
@@ -968,6 +1113,8 @@ pub fn run(
         meta_byte_us: 0.0,
         last_event_us: 0.0,
         tenancy: None,
+        peak_heap: 0,
+        obs: obs.enabled.then(|| Recorder::new(obs.clone(), n)),
     };
     let t0 = sim.gen.next_arrival();
     sim.schedule(t0, EvKind::Arrival { tenant: 0 });
@@ -976,6 +1123,7 @@ pub fn run(
     // Close the capacity/metadata integrals at the last event.
     let end = sim.last_event_us;
     sim.account(end);
+    let obs_data = sim.obs.take().map(|rec| rec.into_data(&sim.names));
     let mut digest = sim.digest;
     Ok(ClusterResult {
         label: String::new(),
@@ -1003,7 +1151,9 @@ pub fn run(
         meta_byte_us: sim.meta_byte_us,
         final_metadata_bytes: sim.meta_now,
         duration_us: sim.last_event_us,
+        peak_heap: sim.peak_heap as u64,
         tenants: Vec::new(),
+        obs: obs_data,
     })
 }
 
@@ -1025,6 +1175,18 @@ pub fn run_tenants(
     tenants: &[TenantRun],
     params: &RunParams,
     tp: &TenancyParams,
+) -> Result<ClusterResult> {
+    run_tenants_obs(topo, tenants, params, tp, &ObsCfg::off())
+}
+
+/// [`run_tenants`] with an observability configuration (DESIGN.md §11);
+/// `obs.enabled = false` is exactly [`run_tenants`].
+pub fn run_tenants_obs(
+    topo: &ResolvedTopology,
+    tenants: &[TenantRun],
+    params: &RunParams,
+    tp: &TenancyParams,
+    obs: &ObsCfg,
 ) -> Result<ClusterResult> {
     if tenants.is_empty() {
         bail!("multi-tenant run with no tenants");
@@ -1136,6 +1298,8 @@ pub fn run_tenants(
             ctrl,
             adaptive: tp.adaptive,
         }),
+        peak_heap: 0,
+        obs: obs.enabled.then(|| Recorder::new(obs.clone(), n)),
     };
     // First arrival per tenant, declaration order (the heap's sequence
     // number breaks simultaneous arrivals deterministically).
@@ -1147,6 +1311,7 @@ pub fn run_tenants(
     debug_assert_eq!(sim.completed, total_requests);
     let end = sim.last_event_us;
     sim.account(end);
+    let obs_data = sim.obs.take().map(|rec| rec.into_data(&sim.names));
     let mut tn = sim.tenancy.take().expect("tenancy state lost");
     let tenant_stats: Vec<TenantStat> = tn
         .tenants
@@ -1198,7 +1363,9 @@ pub fn run_tenants(
         meta_byte_us: sim.meta_byte_us,
         final_metadata_bytes: sim.meta_now,
         duration_us: sim.last_event_us,
+        peak_heap: sim.peak_heap as u64,
         tenants: tenant_stats,
+        obs: obs_data,
     })
 }
 
@@ -1257,6 +1424,45 @@ mod tests {
         assert_eq!(c.actions, d.actions);
         assert_eq!(c.replica_us.to_bits(), d.replica_us.to_bits());
         assert_eq!(c.meta_byte_us.to_bits(), d.meta_byte_us.to_bits());
+    }
+
+    #[test]
+    fn obs_never_perturbs_the_baseline() {
+        // The §11 contract from both sides: obs-off is the baseline
+        // (trivially — same code path), and obs-ON must still be
+        // bit-equal on every simulation output, because the hooks read
+        // state without scheduling events or drawing randomness.
+        let topo = chain(&[2.0, 1.8]);
+        let p = params(&topo, 0.7, 15_000, 50.0);
+        let shape = TrafficShape::Burst { util: 1.0, mult: 2.0, period_us: 5_000.0, duty: 0.3 };
+        let cfg = || {
+            SloCfg::new(50.0, 7)
+                .with_policy(Policy::Hysteresis { idle_windows: 2, headroom: 0.8 })
+        };
+        let base = run(&topo, &shape, &p, Some(cfg())).unwrap();
+        let obs = run_obs(&topo, &shape, &p, Some(cfg()), &ObsCfg::on(4)).unwrap();
+        assert_eq!(base.p99_us.to_bits(), obs.p99_us.to_bits());
+        assert_eq!(base.events, obs.events);
+        assert_eq!(base.actions, obs.actions);
+        assert_eq!(base.replica_us.to_bits(), obs.replica_us.to_bits());
+        assert_eq!(base.peak_heap, obs.peak_heap);
+        assert!(base.obs.is_none());
+        let data = obs.obs.expect("obs payload");
+        assert!(data.sampled_requests > 0, "1/16 of 15k requests must sample");
+        assert!(!data.trace_spans.is_empty() && !data.span_stats.is_empty());
+        assert_eq!(data.snapshots.len() as u32, obs.windows, "one snapshot per window");
+        // Spans decompose: queue + fan-in are non-negative, end ≥ start.
+        for sp in &data.trace_spans {
+            assert!(sp.queue_us >= 0.0 && sp.fanin_us >= 0.0 && sp.end_us >= sp.start_us);
+        }
+        // And the payload itself is bit-stable across reruns.
+        let again = run_obs(&topo, &shape, &p, Some(cfg()), &ObsCfg::on(4)).unwrap();
+        let d2 = again.obs.unwrap();
+        assert_eq!(data.sampled_requests, d2.sampled_requests);
+        assert_eq!(data.trace_spans.len(), d2.trace_spans.len());
+        let ids: Vec<u64> = data.trace_spans.iter().map(|s| s.req).collect();
+        let ids2: Vec<u64> = d2.trace_spans.iter().map(|s| s.req).collect();
+        assert_eq!(ids, ids2);
     }
 
     #[test]

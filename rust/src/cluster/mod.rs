@@ -45,10 +45,12 @@ use crate::campaign::spec::cell_seed;
 use crate::cli::parse_prefetcher;
 use crate::config::SimConfig;
 use crate::figures::report::{f2, kb, pct, Table};
+use crate::obs::{trace as obs_trace, ObsCfg};
 use crate::trace::gen::apps;
 use crate::trace::{codec, Record};
+use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 use std::sync::Arc;
 
 /// Suffix distinguishing an empirical (trace-replayed) static scenario
@@ -330,6 +332,16 @@ pub fn run_tenant_solo(
     label_idx: usize,
     tenant: usize,
 ) -> Result<ClusterResult> {
+    run_tenant_solo_obs(prep, spec, label_idx, tenant, &ObsCfg::off())
+}
+
+fn run_tenant_solo_obs(
+    prep: &PreparedSpec,
+    spec: &ClusterSpec,
+    label_idx: usize,
+    tenant: usize,
+    obs: &ObsCfg,
+) -> Result<ClusterResult> {
     let label = &prep.labels[label_idx];
     let solo = vec![tenant_run(spec, label, tenant)?];
     let params = RunParams {
@@ -341,11 +353,12 @@ pub fn run_tenant_solo(
         slo_us: prep.slo_us,
         base_rate_per_us: prep.base_rate,
     };
-    let mut r = engine::run_tenants(
+    let mut r = engine::run_tenants_obs(
         &prep.static_topos[label_idx],
         &solo,
         &params,
         &tenancy_params(spec, false),
+        obs,
     )?;
     r.label = format!("{label}@{}", spec.tenants[tenant].name);
     Ok(r)
@@ -360,6 +373,15 @@ pub fn run_tenant_coloc(
     spec: &ClusterSpec,
     label_idx: usize,
 ) -> Result<ClusterResult> {
+    run_tenant_coloc_obs(prep, spec, label_idx, &ObsCfg::off())
+}
+
+fn run_tenant_coloc_obs(
+    prep: &PreparedSpec,
+    spec: &ClusterSpec,
+    label_idx: usize,
+    obs: &ObsCfg,
+) -> Result<ClusterResult> {
     let label = &prep.labels[label_idx];
     let runs = tenant_runs(spec, label)?;
     let params = RunParams {
@@ -368,11 +390,12 @@ pub fn run_tenant_coloc(
         slo_us: prep.slo_us,
         base_rate_per_us: prep.base_rate,
     };
-    let mut r = engine::run_tenants(
+    let mut r = engine::run_tenants_obs(
         &prep.static_topos[label_idx],
         &runs,
         &params,
         &tenancy_params(spec, false),
+        obs,
     )?;
     r.label = format!("{label}@coloc");
     Ok(r)
@@ -382,6 +405,14 @@ pub fn run_tenant_coloc(
 /// way-repartition / upgrade / add-replica levers on the multi-candidate
 /// policy topology, under one shared action budget.
 pub fn run_tenant_ctrl(prep: &PreparedSpec, spec: &ClusterSpec) -> Result<ClusterResult> {
+    run_tenant_ctrl_obs(prep, spec, &ObsCfg::off())
+}
+
+fn run_tenant_ctrl_obs(
+    prep: &PreparedSpec,
+    spec: &ClusterSpec,
+    obs: &ObsCfg,
+) -> Result<ClusterResult> {
     let runs = tenant_runs(spec, "ctrl")?;
     let params = RunParams {
         requests: spec.requests * spec.tenants.len() as u64,
@@ -389,8 +420,13 @@ pub fn run_tenant_ctrl(prep: &PreparedSpec, spec: &ClusterSpec) -> Result<Cluste
         slo_us: prep.slo_us,
         base_rate_per_us: prep.base_rate,
     };
-    let mut r =
-        engine::run_tenants(&prep.policy_topo, &runs, &params, &tenancy_params(spec, true))?;
+    let mut r = engine::run_tenants_obs(
+        &prep.policy_topo,
+        &runs,
+        &params,
+        &tenancy_params(spec, true),
+        obs,
+    )?;
     r.label = "tenant-ctrl".into();
     Ok(r)
 }
@@ -403,6 +439,7 @@ fn run_tenant_spec(
     prep: &PreparedSpec,
     spec: &ClusterSpec,
     threads: usize,
+    obs: &ObsCfg,
 ) -> Result<ClusterOutcome> {
     #[derive(Clone, Copy)]
     enum Def {
@@ -420,9 +457,9 @@ fn run_tenant_spec(
     defs.push(Def::Ctrl);
     let scenarios: Vec<ClusterResult> = runner::parallel_map(defs.len(), threads, |i| {
         match defs[i] {
-            Def::Solo(li, ti) => run_tenant_solo(prep, spec, li, ti),
-            Def::Coloc(li) => run_tenant_coloc(prep, spec, li),
-            Def::Ctrl => run_tenant_ctrl(prep, spec),
+            Def::Solo(li, ti) => run_tenant_solo_obs(prep, spec, li, ti, obs),
+            Def::Coloc(li) => run_tenant_coloc_obs(prep, spec, li, obs),
+            Def::Ctrl => run_tenant_ctrl_obs(prep, spec, obs),
         }
     })
     .into_iter()
@@ -444,9 +481,16 @@ fn run_tenant_spec(
 /// (policy × traffic) — sharded across `threads` workers (0 = auto)
 /// with byte-identical results at any thread count.
 pub fn run_spec(spec: &ClusterSpec, threads: usize) -> Result<ClusterOutcome> {
+    run_spec_obs(spec, threads, &ObsCfg::off())
+}
+
+/// [`run_spec`] with an observability configuration (DESIGN.md §11):
+/// every scenario records spans/metrics when `obs.enabled`. Disabled is
+/// exactly [`run_spec`] — byte-identical outputs.
+pub fn run_spec_obs(spec: &ClusterSpec, threads: usize, obs: &ObsCfg) -> Result<ClusterOutcome> {
     let prep = prepare_spec(spec, threads)?;
     if spec.tenancy() {
-        return run_tenant_spec(&prep, spec, threads);
+        return run_tenant_spec(&prep, spec, threads, obs);
     }
     let policies = spec.effective_policies()?;
     let shapes: Vec<TrafficShape> = spec
@@ -501,7 +545,7 @@ pub fn run_spec(spec: &ClusterSpec, threads: usize) -> Result<ClusterOutcome> {
     // Shard scenarios across workers; collect by index (scenario runs
     // are independent and self-seeded, so order of completion is
     // irrelevant to the result).
-    let scenarios = run_scenarios(&defs, threads)?;
+    let scenarios = run_scenarios(&defs, threads, obs)?;
     let total_requests = scenarios.iter().map(|s| s.requests).sum();
     let total_events = scenarios.iter().map(|s| s.events).sum();
     Ok(ClusterOutcome {
@@ -513,10 +557,14 @@ pub fn run_spec(spec: &ClusterSpec, threads: usize) -> Result<ClusterOutcome> {
     })
 }
 
-fn run_scenarios(defs: &[ScenarioDef], threads: usize) -> Result<Vec<ClusterResult>> {
+fn run_scenarios(
+    defs: &[ScenarioDef],
+    threads: usize,
+    obs: &ObsCfg,
+) -> Result<Vec<ClusterResult>> {
     runner::parallel_map(defs.len(), threads, |i| {
         let d = &defs[i];
-        engine::run(&d.topo, &d.shape, &d.params, d.ctrl.clone()).map(|mut r| {
+        engine::run_obs(&d.topo, &d.shape, &d.params, d.ctrl.clone(), obs).map(|mut r| {
             r.label = d.label.clone();
             r
         })
@@ -709,6 +757,152 @@ pub fn action_report(out: &ClusterOutcome) -> Option<Table> {
     } else {
         Some(t)
     }
+}
+
+/// Critical-path attribution over the sampled request spans: per
+/// (scenario, service), P50/P99 of the queue / service / fan-in /
+/// interference latency components (DESIGN.md §11). `None` when no
+/// scenario carries observability data (obs-off runs — so the baseline
+/// report byte-stream never gains a table). Deterministic: a pure
+/// function of the outcome, rows in scenario-expansion order.
+pub fn critical_path_report(out: &ClusterOutcome) -> Option<Table> {
+    let mut t = Table::new(
+        "cluster_critical_path",
+        "Critical-path attribution over sampled request spans",
+        &[
+            "config",
+            "traffic",
+            "service",
+            "spans",
+            "queue P50",
+            "queue P99",
+            "service P50",
+            "service P99",
+            "fan-in P50",
+            "fan-in P99",
+            "interf P50",
+            "interf P99",
+        ],
+    );
+    for s in &out.scenarios {
+        let data = match &s.obs {
+            Some(d) => d,
+            None => continue,
+        };
+        for st in &data.span_stats {
+            t.row(vec![
+                s.label.clone(),
+                s.traffic.clone(),
+                st.service.clone(),
+                st.samples.to_string(),
+                f2(st.queue_p50_us),
+                f2(st.queue_p99_us),
+                f2(st.service_p50_us),
+                f2(st.service_p99_us),
+                f2(st.fanin_p50_us),
+                f2(st.fanin_p99_us),
+                f2(st.interference_p50_us),
+                f2(st.interference_p99_us),
+            ]);
+        }
+    }
+    if t.rows.is_empty() {
+        return None;
+    }
+    t.note(
+        "all values µs over hash-sampled requests (1 in 2^shift by arrival index — \
+         no RNG draws): queue = dispatchable→start, service = start→complete, \
+         fan-in = first→last upstream dependency clearing, interf = service time \
+         added by tenant-interference dilation",
+    );
+    Some(t)
+}
+
+/// Chrome trace-event / Perfetto-compatible document over every
+/// scenario's sampled spans and control actions (DESIGN.md §11): one
+/// process per (scenario, service) plus a controller process per
+/// scenario, one thread per replica, spans as complete slices, lever
+/// applications as instants. Timestamps are simulated µs — the dump is
+/// byte-identical across `--threads` values and reruns.
+pub fn trace_json(out: &ClusterOutcome) -> Json {
+    let mut events = Vec::new();
+    for (si, s) in out.scenarios.iter().enumerate() {
+        let data = match &s.obs {
+            Some(d) => d,
+            None => continue,
+        };
+        let base = si as u64 * 1000;
+        let ctrl_pid = base + data.services.len() as u64;
+        for (svc, name) in data.services.iter().enumerate() {
+            events.push(obs_trace::process_meta(
+                base + svc as u64,
+                &format!("{}|{}/{}", s.label, s.traffic, name),
+            ));
+        }
+        events.push(obs_trace::process_meta(
+            ctrl_pid,
+            &format!("{}|{}/controller", s.label, s.traffic),
+        ));
+        let tracks: BTreeSet<(u32, u32)> =
+            data.trace_spans.iter().map(|sp| (sp.svc, sp.rep)).collect();
+        for &(svc, rep) in &tracks {
+            events.push(obs_trace::thread_meta(
+                base + svc as u64,
+                rep as u64 + 1,
+                &format!("replica {rep}"),
+            ));
+        }
+        for sp in &data.trace_spans {
+            events.push(obs_trace::slice(
+                base + sp.svc as u64,
+                sp.rep as u64 + 1,
+                sp.start_us,
+                sp.end_us - sp.start_us,
+                &format!("req {}", sp.req),
+                vec![
+                    ("req", Json::num(sp.req as f64)),
+                    ("tenant", Json::num(sp.tenant as f64)),
+                    ("queue_us", Json::num(sp.queue_us)),
+                    ("fanin_us", Json::num(sp.fanin_us)),
+                    ("interference_us", Json::num(sp.interference_us)),
+                ],
+            ));
+        }
+        for a in &s.actions {
+            events.push(obs_trace::instant(
+                ctrl_pid,
+                0,
+                a.t_us,
+                &format!("{}: {}", a.service, a.action),
+            ));
+        }
+    }
+    obs_trace::trace_doc(events)
+}
+
+/// Windowed metrics timeseries as JSONL: one compact-JSON line per
+/// (scenario, SLO-window snapshot), tagged with the scenario label and
+/// traffic shape. Sorted-key objects and simulated-µs timestamps keep
+/// the byte stream thread-count invariant.
+pub fn metrics_jsonl(out: &ClusterOutcome) -> String {
+    let mut text = String::new();
+    for s in &out.scenarios {
+        let data = match &s.obs {
+            Some(d) => d,
+            None => continue,
+        };
+        for snap in &data.snapshots {
+            let mut map = match snap.clone() {
+                Json::Obj(m) => m,
+                _ => continue,
+            };
+            map.insert("scenario".to_string(), Json::str(&s.label));
+            map.insert("traffic".to_string(), Json::str(&s.traffic));
+            text.push_str(&Json::Obj(map).dump());
+            text.push('\n');
+        }
+    }
+    text
 }
 
 /// Tail summary of one campaign cell under a traffic shape: the cell's
@@ -987,6 +1181,35 @@ mod tests {
         );
         // The adaptive scenario ran on the policy topology.
         assert!(a.scenarios.iter().any(|s| s.label == "tenant-ctrl"));
+    }
+
+    #[test]
+    fn obs_runs_match_baseline_and_artifacts_are_thread_invariant() {
+        let spec = ClusterSpec { adaptive: false, requests: 6_000, ..tiny_spec() };
+        let base = run_spec(&spec, 2).unwrap();
+        // Obs-off through the obs entry point IS the baseline.
+        let off = run_spec_obs(&spec, 2, &ObsCfg::off()).unwrap();
+        assert_eq!(report(&base).markdown(), report(&off).markdown());
+        assert!(critical_path_report(&off).is_none(), "obs-off must not grow the report");
+        // Obs-on: simulation outputs unchanged, artifacts thread-invariant.
+        let a = run_spec_obs(&spec, 1, &ObsCfg::on(5)).unwrap();
+        let b = run_spec_obs(&spec, 4, &ObsCfg::on(5)).unwrap();
+        assert_eq!(report(&a).markdown(), report(&base).markdown(), "obs perturbed the run");
+        assert_eq!(report(&a).markdown(), report(&b).markdown());
+        assert_eq!(trace_json(&a).dump(), trace_json(&b).dump());
+        assert_eq!(metrics_jsonl(&a), metrics_jsonl(&b));
+        let t = critical_path_report(&a).expect("obs run must emit the critical-path table");
+        assert_eq!(t.markdown(), critical_path_report(&b).unwrap().markdown());
+        assert!(t.markdown().contains("gw") && t.markdown().contains("be"));
+        // The artifacts are non-trivial and well-formed.
+        let doc = trace_json(&a).dump();
+        assert!(doc.contains("\"ph\":\"X\"") && doc.contains("\"process_name\""));
+        let lines: Vec<&str> = metrics_jsonl(&a).lines().collect();
+        assert!(!lines.is_empty(), "6k requests at window 2000 must close windows");
+        for line in &lines {
+            let snap = Json::parse(line).expect("metrics line must parse");
+            assert!(snap.dump().contains("\"scenario\""));
+        }
     }
 
     #[test]

@@ -533,6 +533,12 @@ impl SloController {
             self.violated as f64 / self.windows as f64
         }
     }
+
+    /// Current action-budget token level (read-only; for observability
+    /// snapshots).
+    pub fn bucket_level(&self) -> f64 {
+        self.bucket.level()
+    }
 }
 
 // ---------- Multi-tenant burn tracking and lever arbitration ----------
@@ -711,6 +717,12 @@ impl TenantController {
         } else {
             self.violated[tenant] as f64 / self.windows[tenant] as f64
         }
+    }
+
+    /// Current shared action-budget token level (read-only; for
+    /// observability snapshots).
+    pub fn bucket_level(&self) -> f64 {
+        self.bucket.level()
     }
 }
 

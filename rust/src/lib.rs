@@ -22,6 +22,7 @@ pub mod config;
 pub mod coordinator;
 pub mod figures;
 pub mod ml;
+pub mod obs;
 pub mod prefetch;
 pub mod rpc;
 pub mod runtime;

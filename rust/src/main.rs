@@ -5,7 +5,8 @@
 //! slofetch campaign --spec FILE [--threads N] [--out results.jsonl]
 //! slofetch cluster --spec FILE [--threads N] [--policies reactive,hysteresis,...]
 //!                  [--service-times analytic|empirical] [--trace FILE.slft]
-//!                  [--tenants on|off]
+//!                  [--tenants on|off] [--obs] [--obs-sample SHIFT]
+//!                  [--trace-out FILE.json] [--metrics-out FILE.jsonl]
 //! slofetch simulate --app websearch --prefetcher ceip256 [--records N] [--ml] [--budget N]
 //! slofetch gen-trace --app websearch --records N --out trace.slft
 //! slofetch deploy --app admission --candidate cheip2k [--records N]
@@ -20,21 +21,31 @@ use slofetch::config::{ControllerCfg, SimConfig};
 use slofetch::coordinator::deploy::DeploymentManager;
 use slofetch::figures::{self, FigureCtx};
 use slofetch::ml::controller::{Backend, OnlineController};
+use slofetch::obs::log::{set_level, Level};
+use slofetch::obs::ObsCfg;
 use slofetch::runtime::PjrtEngine;
 use slofetch::sim::engine::Engine;
 use slofetch::trace::gen::{self, apps};
 use slofetch::trace::{codec, stats as trace_stats};
+use slofetch::{obs_error, obs_info};
 
 fn main() {
     let args = match Args::parse(std::env::args().skip(1)) {
         Ok(a) => a,
         Err(e) => {
-            eprintln!("argument error: {e}");
+            obs_error!("argument error: {e}");
             std::process::exit(2);
         }
     };
+    // Diagnostics are leveled and go to stderr only (DESIGN.md §11):
+    // stdout stays the byte-compared determinism surface.
+    if args.flag("quiet") {
+        set_level(Level::Error);
+    } else if args.flag("verbose") {
+        set_level(Level::Debug);
+    }
     if let Err(e) = dispatch(&args) {
-        eprintln!("error: {e:#}");
+        obs_error!("error: {e:#}");
         std::process::exit(1);
     }
 }
@@ -62,6 +73,7 @@ const USAGE: &str = "usage:
   slofetch campaign --spec FILE [--threads N] [--out results.jsonl]
   slofetch cluster --spec FILE [--threads N] [--policies reactive,hysteresis,predictive,cost-aware]
                    [--service-times analytic|empirical] [--trace FILE.slft] [--tenants on|off]
+                   [--obs] [--obs-sample SHIFT] [--trace-out FILE.json] [--metrics-out FILE.jsonl]
   slofetch simulate --app A --prefetcher P [--records N] [--ml] [--adapt-window] [--budget N] [--pjrt]
   slofetch gen-trace --app A --records N --out FILE
   slofetch deploy --app A --candidate P [--records N]
@@ -69,7 +81,15 @@ const USAGE: &str = "usage:
   slofetch runtime-check
 
 global options:
-  --threads N   worker threads for matrix/campaign runs (default: available parallelism)";
+  --threads N   worker threads for matrix/campaign runs (default: available parallelism)
+  --quiet       suppress stderr diagnostics below error level
+  --verbose     enable debug-level stderr diagnostics
+
+cluster observability (DESIGN.md §11):
+  --obs               record request spans + windowed metrics (implied by --trace-out/--metrics-out)
+  --obs-sample SHIFT  span-sample 1 in 2^SHIFT requests (default 6)
+  --trace-out FILE    write a Perfetto-compatible trace (open at https://ui.perfetto.dev)
+  --metrics-out FILE  write the SLO-window metrics timeseries as JSONL";
 
 fn figure_ctx(args: &Args) -> Result<FigureCtx> {
     let mut ctx = FigureCtx {
@@ -206,11 +226,20 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     }
     spec.validate()?;
     let threads = args.threads()?;
+    // Observability is opt-in: an explicit `--obs`, or implied by
+    // asking for either artifact. Off is the byte-identical baseline.
+    let trace_out = args.opt("trace-out");
+    let metrics_out = args.opt("metrics-out");
+    let obs = if args.flag("obs") || trace_out.is_some() || metrics_out.is_some() {
+        ObsCfg::on(args.u64_opt("obs-sample", slofetch::obs::DEFAULT_SAMPLE_SHIFT as u64)? as u32)
+    } else {
+        ObsCfg::off()
+    };
     let t0 = std::time::Instant::now();
-    let out = slofetch::cluster::run_spec(&spec, threads)?;
+    let out = slofetch::cluster::run_spec_obs(&spec, threads, &obs)?;
     // Timing goes to stderr: stdout is byte-identical across reruns and
     // thread counts (the determinism contract, DESIGN.md §8).
-    eprintln!(
+    obs_info!(
         "cluster '{}': {} scenarios in {:.1}s ({:.1}M events/s, {threads} threads)",
         spec.name,
         out.scenarios.len(),
@@ -226,6 +255,19 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     }
     if let Some(t) = slofetch::cluster::action_report(&out) {
         println!("{}", t.markdown());
+    }
+    if let Some(t) = slofetch::cluster::critical_path_report(&out) {
+        println!("{}", t.markdown());
+    }
+    if let Some(path) = trace_out {
+        std::fs::write(path, slofetch::cluster::trace_json(&out).dump())
+            .with_context(|| format!("writing trace to {path}"))?;
+        obs_info!("wrote trace to {path} (open at https://ui.perfetto.dev)");
+    }
+    if let Some(path) = metrics_out {
+        std::fs::write(path, slofetch::cluster::metrics_jsonl(&out))
+            .with_context(|| format!("writing metrics timeseries to {path}"))?;
+        obs_info!("wrote metrics timeseries to {path}");
     }
     println!(
         "cluster '{}': {} scenarios, {} requests, {} events, {} IPC cells, SLO {:.2} µs",

@@ -238,7 +238,7 @@ impl OnlineController {
                     Err(e) => {
                         // Freeze parameters on failure (playbook: "freezing
                         // parameters during incidents").
-                        eprintln!("controller: pjrt train failed, freezing: {e:#}");
+                        crate::obs_warn!("controller: pjrt train failed, freezing: {e:#}");
                         return None;
                     }
                 }

@@ -1,0 +1,159 @@
+//! Metrics registry: named counters (monotone), gauges, and
+//! fixed-bucket log2 histograms, snapshotted to sorted-key JSON at
+//! SLO-window boundaries. Keys live in `BTreeMap`s and histograms have
+//! a fixed bucket layout, so a snapshot's serialization is a pure
+//! function of the recorded values — the JSONL timeseries built from
+//! snapshots is byte-identical across `--threads` values and reruns.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Histogram bucket count: bucket 0 holds values < 1, bucket `i ≥ 1`
+/// holds `[2^(i-1), 2^i)`, up to bucket 64 (the full u64 range).
+pub const HIST_BUCKETS: usize = 65;
+
+/// Fixed-layout log2 histogram over non-negative values.
+#[derive(Clone, Debug, Default)]
+pub struct Hist {
+    pub count: u64,
+    /// Bucket counts, allocated lazily on first observation.
+    pub buckets: Vec<u64>,
+}
+
+impl Hist {
+    /// Bucket index for `v`: 0 for values below 1 (or non-finite),
+    /// else `1 + floor(log2(v))`.
+    #[inline]
+    pub fn bucket_of(v: f64) -> usize {
+        if !v.is_finite() || v < 1.0 {
+            return 0;
+        }
+        let u = v as u64;
+        (64 - u.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; HIST_BUCKETS];
+        }
+        self.buckets[Self::bucket_of(v)] += 1;
+        self.count += 1;
+    }
+
+    /// `{"count": n, "buckets": [...]}` with trailing zero buckets
+    /// trimmed (the layout is fixed, so trimming is deterministic).
+    fn to_json(&self) -> Json {
+        let last = self.buckets.iter().rposition(|&c| c > 0).map_or(0, |i| i + 1);
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            (
+                "buckets",
+                Json::Arr(self.buckets[..last].iter().map(|&c| Json::num(c as f64)).collect()),
+            ),
+        ])
+    }
+}
+
+/// Named counters, gauges, and histograms (insertion is idempotent on
+/// the key; values overwrite for counters/gauges, accumulate for
+/// histograms).
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Hist>,
+}
+
+impl Registry {
+    /// Set a monotone counter to its current absolute value.
+    pub fn counter(&mut self, name: &str, v: u64) {
+        match self.counters.get_mut(name) {
+            Some(slot) => *slot = v,
+            None => {
+                self.counters.insert(name.to_string(), v);
+            }
+        }
+    }
+
+    /// Set a gauge (point-in-time value; may go up or down).
+    pub fn gauge(&mut self, name: &str, v: f64) {
+        match self.gauges.get_mut(name) {
+            Some(slot) => *slot = v,
+            None => {
+                self.gauges.insert(name.to_string(), v);
+            }
+        }
+    }
+
+    /// Add one observation to the named log2 histogram.
+    pub fn observe(&mut self, name: &str, v: f64) {
+        match self.hists.get_mut(name) {
+            Some(h) => h.observe(v),
+            None => {
+                let mut h = Hist::default();
+                h.observe(v);
+                self.hists.insert(name.to_string(), h);
+            }
+        }
+    }
+
+    /// One snapshot object: `t_us` is simulated time, `window` the
+    /// boundary index. Non-finite gauges serialize as `null` so the
+    /// output stays valid JSON.
+    pub fn snapshot(&self, t_us: f64, window: u64) -> Json {
+        let counters =
+            self.counters.iter().map(|(k, &v)| (k.clone(), Json::num(v as f64))).collect();
+        let gauges = self
+            .gauges
+            .iter()
+            .map(|(k, &v)| (k.clone(), if v.is_finite() { Json::num(v) } else { Json::Null }))
+            .collect();
+        let hists = self.hists.iter().map(|(k, h)| (k.clone(), h.to_json())).collect();
+        Json::obj(vec![
+            ("t_us", Json::num(t_us)),
+            ("window", Json::num(window as f64)),
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("hists", Json::Obj(hists)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log2_buckets_cover_the_ranges() {
+        assert_eq!(Hist::bucket_of(0.0), 0);
+        assert_eq!(Hist::bucket_of(0.9), 0);
+        assert_eq!(Hist::bucket_of(f64::NAN), 0);
+        assert_eq!(Hist::bucket_of(1.0), 1);
+        assert_eq!(Hist::bucket_of(1.99), 1);
+        assert_eq!(Hist::bucket_of(2.0), 2);
+        assert_eq!(Hist::bucket_of(3.0), 2);
+        assert_eq!(Hist::bucket_of(4.0), 3);
+        assert_eq!(Hist::bucket_of(1024.0), 11);
+        assert_eq!(Hist::bucket_of(f64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_stable() {
+        let mut r = Registry::default();
+        r.counter("events", 10);
+        r.gauge("zeta", 1.5);
+        r.gauge("alpha", f64::NAN);
+        r.observe("lat", 3.0);
+        r.observe("lat", 300.0);
+        let a = r.snapshot(123.0, 1).dump();
+        let b = r.snapshot(123.0, 1).dump();
+        assert_eq!(a, b);
+        // Sorted keys, NaN as null, histogram carries both observations.
+        assert!(a.find("alpha").unwrap() < a.find("zeta").unwrap());
+        assert!(a.contains("\"alpha\":null"));
+        assert!(a.contains("\"count\":2"));
+        // Overwrites, not accumulation, for counters/gauges.
+        r.counter("events", 20);
+        assert!(r.snapshot(124.0, 2).dump().contains("\"events\":20"));
+    }
+}

@@ -1,0 +1,122 @@
+//! Deterministic observability layer for the cluster simulator
+//! (DESIGN.md §11): request spans over a hash-sampled subset of
+//! requests, a counters/gauges/histograms metrics registry snapshotted
+//! at SLO-window boundaries, Chrome-trace/Perfetto export, and a
+//! leveled stderr log sink.
+//!
+//! The layer is opt-in per run and honors the §8 determinism contract
+//! from both sides: disabled, the engine takes the exact baseline path
+//! (no extra RNG draws, no event reordering, byte-identical outputs);
+//! enabled, every recorded value is a pure function of the simulated
+//! event order — simulated µs only, never wall-clock — so the emitted
+//! trace and metrics artifacts are byte-identical across `--threads`
+//! values and reruns.
+
+pub mod log;
+pub mod metrics;
+pub mod span;
+pub mod trace;
+
+use crate::util::json::Json;
+use crate::util::rng::mix64;
+use metrics::Registry;
+use span::{SpanRecorder, SpanStat, TraceSpan};
+
+/// Default sampling shift: 1 in 2^6 = 64 requests carry a span.
+pub const DEFAULT_SAMPLE_SHIFT: u32 = 6;
+
+/// Salt mixed into the request id before the sampling hash, so span
+/// sampling is decorrelated from every other use of the id.
+const SAMPLE_SALT: u64 = 0x0B5E_5A3F_1E57_C0DE;
+
+/// Per-run observability configuration.
+#[derive(Clone, Debug)]
+pub struct ObsCfg {
+    /// Master switch; `false` is the byte-identical baseline path.
+    pub enabled: bool,
+    /// Span sampling rate: 1 in 2^`sample_shift` requests (0 = every
+    /// request). The decision is a stateless hash of the request's
+    /// arrival index — no RNG draws, stable across reruns and threads.
+    pub sample_shift: u32,
+}
+
+impl ObsCfg {
+    /// Observability disabled (the DESIGN.md §8 baseline).
+    pub fn off() -> ObsCfg {
+        ObsCfg { enabled: false, sample_shift: DEFAULT_SAMPLE_SHIFT }
+    }
+
+    /// Observability enabled at a 1-in-2^`sample_shift` span sampling
+    /// rate (clamped to 63 so the mask math stays defined).
+    pub fn on(sample_shift: u32) -> ObsCfg {
+        ObsCfg { enabled: true, sample_shift: sample_shift.min(63) }
+    }
+
+    /// Whether the request with arrival index `req` carries a span:
+    /// `mix64(req ^ salt)` masked to the low `sample_shift` bits.
+    #[inline]
+    pub fn sampled(&self, req: u64) -> bool {
+        mix64(req ^ SAMPLE_SALT) & ((1u64 << self.sample_shift) - 1) == 0
+    }
+}
+
+/// Live recorder the engine threads through a run: span timings for
+/// sampled requests plus the metrics registry and its window-boundary
+/// snapshots.
+pub struct Recorder {
+    pub cfg: ObsCfg,
+    pub spans: SpanRecorder,
+    pub metrics: Registry,
+    /// One [`Registry::snapshot`] object per closed SLO window,
+    /// boundary order.
+    pub snapshots: Vec<Json>,
+}
+
+impl Recorder {
+    pub fn new(cfg: ObsCfg, nsvc: usize) -> Recorder {
+        Recorder {
+            spans: SpanRecorder::new(cfg.clone(), nsvc),
+            metrics: Registry::default(),
+            snapshots: Vec::new(),
+            cfg,
+        }
+    }
+
+    /// Snapshot the registry at an SLO-window boundary (`t_us` is
+    /// simulated time, `window` the total windows closed so far).
+    pub fn snapshot(&mut self, t_us: f64, window: u64) {
+        self.snapshots.push(self.metrics.snapshot(t_us, window));
+    }
+
+    /// Freeze the recorder into the result payload (`services` are the
+    /// run's service names, spec order).
+    pub fn into_data(mut self, services: &[String]) -> ObsData {
+        ObsData {
+            sample_shift: self.cfg.sample_shift,
+            sampled_requests: self.spans.sampled,
+            services: services.to_vec(),
+            span_stats: self.spans.stats(services),
+            trace_spans: std::mem::take(&mut self.spans.finished),
+            snapshots: self.snapshots,
+        }
+    }
+}
+
+/// Observability payload of one run, carried on
+/// [`crate::cluster::engine::ClusterResult::obs`] (`None` when
+/// disabled). Everything here is deterministic: request-completion
+/// order for spans, window-boundary order for snapshots.
+#[derive(Clone, Debug)]
+pub struct ObsData {
+    pub sample_shift: u32,
+    /// Requests that carried a span.
+    pub sampled_requests: u64,
+    /// Service names, spec order (`TraceSpan::svc` indexes this).
+    pub services: Vec<String>,
+    /// Per-service critical-path attribution over the sampled spans.
+    pub span_stats: Vec<SpanStat>,
+    /// Per-(request, service) slices, request-completion order.
+    pub trace_spans: Vec<TraceSpan>,
+    /// Metrics-registry snapshots, one per closed SLO window.
+    pub snapshots: Vec<Json>,
+}

@@ -1,0 +1,93 @@
+//! Chrome trace-event (Perfetto-compatible) JSON builders. The event
+//! objects use only simulated-µs timestamps, so a trace file is a pure
+//! function of the run's event order. Mapping (DESIGN.md §11): one
+//! *process* per (scenario, service) plus one controller process per
+//! scenario, one *thread* per replica, sampled request slices as
+//! `"ph":"X"` complete events, controller lever applications as
+//! `"ph":"i"` instants.
+
+use crate::util::json::Json;
+
+/// `process_name` metadata event: names the Perfetto track group.
+pub fn process_meta(pid: u64, name: &str) -> Json {
+    Json::obj(vec![
+        ("ph", Json::str("M")),
+        ("name", Json::str("process_name")),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(0.0)),
+        ("args", Json::obj(vec![("name", Json::str(name))])),
+    ])
+}
+
+/// `thread_name` metadata event: names one replica track.
+pub fn thread_meta(pid: u64, tid: u64, name: &str) -> Json {
+    Json::obj(vec![
+        ("ph", Json::str("M")),
+        ("name", Json::str("thread_name")),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(tid as f64)),
+        ("args", Json::obj(vec![("name", Json::str(name))])),
+    ])
+}
+
+/// `"ph":"X"` complete slice: `ts`/`dur` in simulated µs.
+pub fn slice(
+    pid: u64,
+    tid: u64,
+    ts_us: f64,
+    dur_us: f64,
+    name: &str,
+    args: Vec<(&str, Json)>,
+) -> Json {
+    Json::obj(vec![
+        ("ph", Json::str("X")),
+        ("cat", Json::str("request")),
+        ("name", Json::str(name)),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(tid as f64)),
+        ("ts", Json::num(ts_us)),
+        ("dur", Json::num(dur_us)),
+        ("args", Json::obj(args)),
+    ])
+}
+
+/// `"ph":"i"` process-scoped instant (controller lever application).
+pub fn instant(pid: u64, tid: u64, ts_us: f64, name: &str) -> Json {
+    Json::obj(vec![
+        ("ph", Json::str("i")),
+        ("s", Json::str("p")),
+        ("cat", Json::str("ctrl")),
+        ("name", Json::str(name)),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(tid as f64)),
+        ("ts", Json::num(ts_us)),
+    ])
+}
+
+/// Wrap the event list in the `{"traceEvents": [...]}` document
+/// Perfetto and `chrome://tracing` both accept.
+pub fn trace_doc(events: Vec<Json>) -> Json {
+    Json::obj(vec![("traceEvents", Json::Arr(events))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_carry_the_trace_event_required_fields() {
+        let doc = trace_doc(vec![
+            process_meta(3, "scn/svc"),
+            thread_meta(3, 1, "replica 0"),
+            slice(3, 1, 10.0, 4.5, "req 12", vec![("queue_us", Json::num(2.0))]),
+            instant(4, 0, 20.0, "scale +1"),
+        ])
+        .dump();
+        assert!(doc.starts_with("{\"traceEvents\":["));
+        assert!(doc.contains("\"ph\":\"M\"") && doc.contains("\"process_name\""));
+        assert!(doc.contains("\"ph\":\"X\"") && doc.contains("\"dur\":4.5"));
+        assert!(doc.contains("\"ph\":\"i\"") && doc.contains("\"s\":\"p\""));
+        // ts values are simulated µs, emitted as plain numbers.
+        assert!(doc.contains("\"ts\":10") && doc.contains("\"ts\":20"));
+    }
+}

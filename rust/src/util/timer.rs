@@ -1,6 +1,6 @@
 //! Wall-clock measurement helpers for the custom bench harness
 //! (no criterion offline). Median-of-runs with warmup, reporting
-//! ns/op and ops/s.
+//! ns/op and ops/s plus a p10/p90 spread across runs.
 
 use std::time::Instant;
 
@@ -10,6 +10,10 @@ pub struct BenchResult {
     pub name: String,
     pub ns_per_op: f64,
     pub ops_per_s: f64,
+    /// 10th percentile of per-run ns/op (fastest tail of the spread).
+    pub p10_ns_per_op: f64,
+    /// 90th percentile of per-run ns/op (slowest tail of the spread).
+    pub p90_ns_per_op: f64,
     pub runs: usize,
     pub ops_per_run: u64,
 }
@@ -17,14 +21,34 @@ pub struct BenchResult {
 impl BenchResult {
     pub fn report(&self) -> String {
         format!(
-            "{:<44} {:>12.1} ns/op {:>14.0} ops/s  ({} runs x {} ops)",
-            self.name, self.ns_per_op, self.ops_per_s, self.runs, self.ops_per_run
+            "{:<44} {:>12.1} ns/op [p10 {:.1}, p90 {:.1}] {:>14.0} ops/s  ({} runs x {} ops)",
+            self.name,
+            self.ns_per_op,
+            self.p10_ns_per_op,
+            self.p90_ns_per_op,
+            self.ops_per_s,
+            self.runs,
+            self.ops_per_run
         )
     }
 }
 
+/// Linear-interpolation percentile of an ascending-sorted slice.
+/// `p` is in [0, 100]; the slice must be non-empty.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+    }
+}
+
 /// Run `f` (which performs `ops` operations per call) `runs` times after
-/// `warmup` calls; report the median run.
+/// `warmup` calls; report the median run with a p10/p90 spread.
 pub fn bench(name: &str, warmup: usize, runs: usize, ops: u64, mut f: impl FnMut()) -> BenchResult {
     for _ in 0..warmup {
         f();
@@ -35,13 +59,17 @@ pub fn bench(name: &str, warmup: usize, runs: usize, ops: u64, mut f: impl FnMut
         f();
         times.push(t0.elapsed().as_nanos() as f64);
     }
-    times.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
-    let median = times[times.len() / 2];
-    let ns_per_op = median / ops as f64;
+    // total_cmp: Instant deltas are always finite, but never let a stray
+    // NaN panic the harness mid-campaign.
+    times.sort_unstable_by(f64::total_cmp);
+    let ops_f = ops as f64;
+    let ns_per_op = percentile(&times, 50.0) / ops_f;
     BenchResult {
         name: name.to_string(),
         ns_per_op,
         ops_per_s: 1e9 / ns_per_op,
+        p10_ns_per_op: percentile(&times, 10.0) / ops_f,
+        p90_ns_per_op: percentile(&times, 90.0) / ops_f,
         runs,
         ops_per_run: ops,
     }
@@ -68,7 +96,20 @@ mod tests {
         });
         assert!(r.ns_per_op > 0.0 && r.ns_per_op < 1e6);
         assert!(r.ops_per_s > 0.0);
+        assert!(r.p10_ns_per_op <= r.ns_per_op && r.ns_per_op <= r.p90_ns_per_op);
         assert!(r.report().contains("noop-loop"));
+    }
+
+    #[test]
+    fn percentile_interpolates_even_length() {
+        // The old median took element len/2 (the upper of the two middle
+        // values); the interpolated median of [1,2,3,4] is 2.5.
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 50.0), 2.5);
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 4.0);
+        let odd = [1.0, 2.0, 9.0];
+        assert_eq!(percentile(&odd, 50.0), 2.0);
     }
 
     #[test]

@@ -1,0 +1,124 @@
+//! Observability integration tests (DESIGN.md §11): (a) obs-off runs
+//! are byte-identical to the pre-obs baseline, (b) obs-on trace and
+//! metrics artifacts are byte-identical across `--threads` values,
+//! (c) span sampling is stable across reruns, and (d) the tenant path
+//! records thread-invariant per-tenant controller internals.
+
+use slofetch::cluster::{self, ClusterSpec};
+use slofetch::obs::ObsCfg;
+use slofetch::util::json::Json;
+use std::path::Path;
+use std::sync::OnceLock;
+
+fn obs_spec() -> ClusterSpec {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/cluster_obs.json");
+    let mut spec = ClusterSpec::load(&path).expect("examples/cluster_obs.json must load");
+    spec.requests = 6_000; // keep the integration run quick
+    spec
+}
+
+fn tenant_spec() -> ClusterSpec {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/cluster_tenants.json");
+    let mut spec = ClusterSpec::load(&path).expect("examples/cluster_tenants.json must load");
+    spec.requests = 3_000;
+    spec
+}
+
+/// The shipped obs spec at --threads 1, obs on at 1-in-32 sampling
+/// (shared across tests).
+fn obs_outcome() -> &'static cluster::ClusterOutcome {
+    static OUT: OnceLock<cluster::ClusterOutcome> = OnceLock::new();
+    OUT.get_or_init(|| cluster::run_spec_obs(&obs_spec(), 1, &ObsCfg::on(5)).unwrap())
+}
+
+#[test]
+fn obs_off_matches_the_baseline_byte_for_byte() {
+    // run_spec (the pre-obs entry point) and run_spec_obs with obs
+    // disabled must be the same computation: same report bytes, same
+    // P99 bits, same event counts — and no observability payload.
+    let base = cluster::run_spec(&obs_spec(), 1).unwrap();
+    let off = cluster::run_spec_obs(&obs_spec(), 1, &ObsCfg::off()).unwrap();
+    assert_eq!(
+        cluster::report(&base).markdown(),
+        cluster::report(&off).markdown(),
+        "obs-off run diverged from the baseline"
+    );
+    for (x, y) in base.scenarios.iter().zip(&off.scenarios) {
+        assert_eq!(x.p99_us.to_bits(), y.p99_us.to_bits(), "{}|{}", x.label, x.traffic);
+        assert_eq!(x.events, y.events);
+        assert_eq!(x.peak_heap, y.peak_heap);
+        assert!(y.obs.is_none(), "{}: obs-off run carried obs data", y.label);
+    }
+    assert!(cluster::critical_path_report(&off).is_none(), "obs-off report gained a table");
+
+    // The obs-enabled run replays the identical event order — the
+    // §8/§11 zero-perturbation contract.
+    let on = obs_outcome();
+    assert_eq!(cluster::report(&base).markdown(), cluster::report(on).markdown());
+    for (x, y) in base.scenarios.iter().zip(&on.scenarios) {
+        assert_eq!(x.p99_us.to_bits(), y.p99_us.to_bits(), "{}|{}", x.label, x.traffic);
+        assert_eq!(x.events, y.events);
+        assert!(y.obs.is_some(), "{}: obs-on run lost its payload", y.label);
+    }
+}
+
+#[test]
+fn obs_artifacts_are_thread_invariant() {
+    // threads=8 is both a rerun and a different shard schedule; every
+    // exported artifact byte must match the threads=1 run.
+    let a = obs_outcome();
+    let b = cluster::run_spec_obs(&obs_spec(), 8, &ObsCfg::on(5)).unwrap();
+    assert_eq!(cluster::report(a).markdown(), cluster::report(&b).markdown());
+    let trace = cluster::trace_json(a).dump();
+    assert_eq!(trace, cluster::trace_json(&b).dump(), "trace export depends on --threads");
+    let metrics = cluster::metrics_jsonl(a);
+    assert_eq!(metrics, cluster::metrics_jsonl(&b), "metrics export depends on --threads");
+    let table = cluster::critical_path_report(a).expect("obs-on run must attribute spans");
+    assert_eq!(
+        table.markdown(),
+        cluster::critical_path_report(&b).unwrap().markdown(),
+        "critical-path table depends on --threads"
+    );
+    // Sanity: the artifacts carry real content in the documented shape.
+    assert!(table.markdown().contains("gateway") && table.markdown().contains("render"));
+    assert!(trace.contains("\"ph\":\"X\"") && trace.contains("process_name"));
+    assert!(Json::parse(&trace).is_ok(), "trace is not valid JSON");
+    assert!(!metrics.is_empty(), "no metrics snapshots recorded");
+    for line in metrics.lines() {
+        let j = Json::parse(line).expect("metrics line is not valid JSON");
+        let text = j.dump();
+        assert!(text.contains("\"scenario\"") && text.contains("\"t_us\""), "{text}");
+    }
+}
+
+#[test]
+fn sampling_is_stable_across_reruns() {
+    let a = obs_outcome();
+    let b = cluster::run_spec_obs(&obs_spec(), 1, &ObsCfg::on(5)).unwrap();
+    for (x, y) in a.scenarios.iter().zip(&b.scenarios) {
+        let (dx, dy) = (x.obs.as_ref().unwrap(), y.obs.as_ref().unwrap());
+        assert!(dx.sampled_requests > 0, "{}: nothing sampled", x.label);
+        assert_eq!(dx.sampled_requests, dy.sampled_requests, "{}|{}", x.label, x.traffic);
+        let reqs = |d: &slofetch::obs::ObsData| -> Vec<u64> {
+            d.trace_spans.iter().map(|sp| sp.req).collect()
+        };
+        assert_eq!(reqs(dx), reqs(dy), "{}: sampled request set drifted", x.label);
+    }
+}
+
+#[test]
+fn tenant_path_obs_is_thread_invariant() {
+    let spec = tenant_spec();
+    let a = cluster::run_spec_obs(&spec, 1, &ObsCfg::on(4)).unwrap();
+    let b = cluster::run_spec_obs(&spec, 4, &ObsCfg::on(4)).unwrap();
+    assert_eq!(cluster::report(&a).markdown(), cluster::report(&b).markdown());
+    assert_eq!(cluster::trace_json(&a).dump(), cluster::trace_json(&b).dump());
+    let metrics = cluster::metrics_jsonl(&a);
+    assert_eq!(metrics, cluster::metrics_jsonl(&b));
+    // The adaptive tenant scenario snapshots per-tenant way shares and
+    // burn rates at its window boundaries.
+    assert!(
+        metrics.contains("ways.") && metrics.contains("burn."),
+        "tenant controller internals missing from the timeseries"
+    );
+}
