@@ -24,6 +24,7 @@ fn main() {
         ml: vec![false],
         churn_scale: vec![1.0],
         traffic: vec!["none".into()],
+        ..Default::default()
     };
     let cells: Vec<runner::Cell> =
         spec.expand().unwrap().into_iter().map(|c| c.cell).collect();

@@ -26,7 +26,7 @@ pub use store::ResultStore;
 
 use anyhow::Result;
 use std::collections::HashMap;
-use store::{CellRecord, ClusterCellRecord, TailRecord};
+use store::{CellRecord, ClusterCellRecord, SketchCellRecord, TailRecord};
 
 /// What one `run_to_store` call did.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -101,7 +101,8 @@ pub fn run_to_store(
 ) -> Result<CampaignOutcome> {
     let cells = spec.expand()?;
     let ccells = spec.expand_clusters()?;
-    let total = cells.len() + ccells.len();
+    let scells = spec.expand_sketch()?;
+    let total = cells.len() + ccells.len() + scells.len();
     let pending: Vec<&spec::ExpandedCell> =
         cells.iter().filter(|c| !store.contains(&c.key)).collect();
     let n = pending.len();
@@ -326,6 +327,30 @@ pub fn run_to_store(
             computed += 1;
         }
     }
+
+    // Sketch-accuracy cells (DESIGN.md §12): independent compare-mode
+    // sims, sharded like the matrix and appended in expansion order —
+    // the stored line is the run's exact-vs-sketch tallies.
+    let spending: Vec<&spec::SketchCell> =
+        scells.iter().filter(|c| !store.contains(&c.key)).collect();
+    let scell_list: Vec<runner::Cell> = spending.iter().map(|c| c.cell.clone()).collect();
+    let sresults = runner::run_cells(&scell_list, threads);
+    for (c, r) in spending.iter().zip(&sresults) {
+        let t = r.telemetry.as_deref().expect("compare-mode cell must carry telemetry");
+        let rec = SketchCellRecord::from_telemetry(
+            &c.key,
+            &c.app,
+            &c.cell.label,
+            c.cell.records,
+            c.trace_seed,
+            c.cell.cfg.seed,
+            &c.geom,
+            t,
+        );
+        if store.push_sketch(rec)? {
+            computed += 1;
+        }
+    }
     Ok(CampaignOutcome { total, computed, skipped: total - computed })
 }
 
@@ -345,6 +370,7 @@ mod tests {
             traffic: vec!["none".into()],
             clusters: Vec::new(),
             policies: vec!["reactive".into()],
+            sketch: Vec::new(),
         }
     }
 
@@ -572,6 +598,48 @@ mod tests {
         for (a, b) in store.cluster_records().iter().zip(store2.cluster_records()) {
             assert_eq!(a, b, "tenant cell differs across thread counts");
         }
+    }
+
+    #[test]
+    fn sketch_axis_records_compare_tallies_and_resumes() {
+        let spec = CampaignSpec {
+            sketch: vec!["w64d2p8k4".into(), "w256d4p10k16".into()],
+            ..quick_spec()
+        };
+        let mut store = ResultStore::in_memory();
+        let out = run_to_store(&spec, 2, &mut store).unwrap();
+        // 4 sim cells + (2 apps × 1 seed × 2 geometries).
+        assert_eq!(out, CampaignOutcome { total: 8, computed: 8, skipped: 0 });
+        let recs = store.sketch_records();
+        assert_eq!(recs.len(), 4);
+        for r in recs {
+            assert_eq!(r.label, "nl+ml", "sketch cells run the ML-gated baseline");
+            assert!(r.decisions > 0, "{}: no decisions compared", r.key);
+            assert!(r.agreement > 0.0 && r.agreement <= 1.0, "{}", r.key);
+            assert!(r.issued > 0 && r.distinct_exact > 0, "{}", r.key);
+            assert!(r.feature_mae >= 0.0 && r.feature_mae.is_finite(), "{}", r.key);
+            assert_eq!(r.exact_bytes, r.distinct_exact * 24);
+        }
+        // Geometry sets the footprint: w64d2p8k4 = 3·(64·2·4) + 2^8 + 4·16.
+        let small = recs.iter().find(|r| r.geom == "w64d2p8k4").unwrap();
+        assert_eq!(small.sketch_bytes, 3 * 64 * 2 * 4 + 256 + 64);
+        // Resume: nothing recomputes.
+        let again = run_to_store(&spec, 4, &mut store).unwrap();
+        assert_eq!(again, CampaignOutcome { total: 8, computed: 0, skipped: 8 });
+        // Thread counts do not change the stored records.
+        let mut store2 = ResultStore::in_memory();
+        run_to_store(&spec, 1, &mut store2).unwrap();
+        for (a, b) in store.sketch_records().iter().zip(store2.sketch_records()) {
+            assert_eq!(a, b, "sketch cell differs across thread counts");
+        }
+        // The accuracy report renders one row per record; sketch-free
+        // stores emit no table.
+        let t = report::sketch_table(&store).expect("campaign_sketch missing");
+        assert_eq!(t.rows.len(), 4);
+        assert!(t.markdown().contains("w64d2p8k4"));
+        let mut plain = ResultStore::in_memory();
+        run_to_store(&quick_spec(), 2, &mut plain).unwrap();
+        assert!(report::sketch_table(&plain).is_none());
     }
 
     #[test]

@@ -413,6 +413,59 @@ pub fn tenant_pairings(store: &ResultStore) -> Option<Table> {
     Some(t)
 }
 
+/// Sketch-accuracy table over the campaign `sketch` axis: one row per
+/// compare-mode cell showing what the bounded-memory telemetry costs
+/// (sketch bytes vs exact per-context counters) against what it gives
+/// up (decision agreement, feature error, cardinality error). `None`
+/// when the campaign had no sketch axis.
+pub fn sketch_table(store: &ResultStore) -> Option<Table> {
+    let recs = store.sketch_records();
+    if recs.is_empty() {
+        return None;
+    }
+    let mut t = Table::new(
+        "campaign_sketch",
+        "Sketch telemetry accuracy vs footprint (compare-mode cells)",
+        &[
+            "app",
+            "geometry",
+            "issued",
+            "ctx exact",
+            "ctx est",
+            "decisions",
+            "agreement",
+            "feat MAE",
+            "fill",
+            "sketch",
+            "exact",
+            "ratio",
+        ],
+    );
+    // Store order is expansion order — already deterministic.
+    for r in recs {
+        t.row(vec![
+            r.app.clone(),
+            r.geom.clone(),
+            r.issued.to_string(),
+            r.distinct_exact.to_string(),
+            r.distinct_est.to_string(),
+            r.decisions.to_string(),
+            pct(r.agreement),
+            format!("{:.4}", r.feature_mae),
+            pct(r.fill),
+            kb(r.sketch_bytes),
+            kb(r.exact_bytes),
+            f2(r.byte_ratio()),
+        ]);
+    }
+    t.note(
+        "agreement = gate decisions unchanged when sketch estimates replace exact \
+         counters; ratio = sketch bytes / exact per-context counter bytes (lower \
+         is cheaper); ctx est = HLL cardinality vs the exact distinct-context count",
+    );
+    Some(t)
+}
+
 /// All campaign tables, in print order.
 pub fn reports(store: &ResultStore) -> Vec<Table> {
     let mut out = vec![per_app_speedup(store), geomean_summary(store), best_config(store)];
@@ -426,6 +479,9 @@ pub fn reports(store: &ResultStore) -> Vec<Table> {
         out.push(t);
     }
     if let Some(t) = tenant_pairings(store) {
+        out.push(t);
+    }
+    if let Some(t) = sketch_table(store) {
         out.push(t);
     }
     out
@@ -637,6 +693,44 @@ mod tests {
         // Tenant cells stay out of the policy tables.
         assert!(cluster_table(&s).is_none(), "tenant cells leaked into cluster_table");
         assert!(cluster_ranking(&s).is_none(), "tenant cells leaked into ranking");
+        assert_eq!(reports(&s).len(), 4);
+    }
+
+    #[test]
+    fn sketch_table_renders_accuracy_rows() {
+        let s = store();
+        assert!(sketch_table(&s).is_none(), "sketch table without a sketch axis");
+
+        let mut s = ResultStore::in_memory();
+        s.push(rec("crypto", "nl", Some(1.0))).unwrap();
+        s.push_sketch(crate::campaign::store::SketchCellRecord {
+            key: "sketch|crypto|nl|r1000|s7|w256d4p10k16".into(),
+            app: "crypto".into(),
+            label: "nl+ml".into(),
+            records: 1000,
+            trace_seed: 7,
+            sim_seed: 1,
+            geom: "w256d4p10k16".into(),
+            sketch_bytes: 13_568,
+            exact_bytes: 72_000,
+            distinct_exact: 3000,
+            distinct_est: 2950,
+            issued: 40_000,
+            decisions: 5000,
+            agreement: 0.978,
+            feature_mae: 0.0123,
+            fill: 0.4,
+        })
+        .unwrap();
+        let t = sketch_table(&s).expect("sketch rows missing");
+        assert_eq!(t.rows.len(), 1);
+        let row = &t.rows[0];
+        assert_eq!(row[1], "w256d4p10k16");
+        assert_eq!(row[6], "97.8%");
+        assert_eq!(row[11], "0.19");
+        assert!(t.markdown().contains("campaign_sketch"));
+        // The sketch table rides along in reports(); plain stores are
+        // unchanged (3 core tables only).
         assert_eq!(reports(&s).len(), 4);
     }
 

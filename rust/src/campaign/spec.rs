@@ -54,6 +54,14 @@ pub struct CampaignSpec {
     /// Autoscaler policies ([`Policy::parse`] syntax) applied to every
     /// cluster scenario. Only consulted when `clusters` is non-empty.
     pub policies: Vec<String>,
+    /// Sketch-accuracy axis (DESIGN.md §12): telemetry geometries
+    /// (`w{width}d{depth}p{hll_p}k{topk}`) to evaluate in compare mode.
+    /// Each geometry adds one ML-gated run of the campaign's *first*
+    /// prefetcher per (app, seed) — exact features drive the decisions
+    /// while a sketch-fed shadow is scored per decision, so the stored
+    /// record prices decision agreement against sketch bytes. Empty
+    /// (the default) adds no cells.
+    pub sketch: Vec<String>,
 }
 
 impl Default for CampaignSpec {
@@ -69,6 +77,7 @@ impl Default for CampaignSpec {
             traffic: vec!["none".into()],
             clusters: Vec::new(),
             policies: vec!["reactive".into()],
+            sketch: Vec::new(),
         }
     }
 }
@@ -110,6 +119,20 @@ pub struct ClusterCell {
     pub shape: TrafficShape,
     /// Tenant coordinate: `(tenant index, solo?)`. `None` = policy cell.
     pub tenant: Option<(usize, bool)>,
+}
+
+/// One expanded sketch-accuracy cell (DESIGN.md §12): a compare-mode
+/// ML-gated run of the campaign's first prefetcher under one sketch
+/// geometry, plus the coordinates the result store records.
+#[derive(Clone)]
+pub struct SketchCell {
+    /// Stable identity used for store dedup/resume.
+    pub key: String,
+    pub app: String,
+    pub trace_seed: u64,
+    /// Canonical geometry label (`w{width}d{depth}p{hll_p}k{topk}`).
+    pub geom: String,
+    pub cell: Cell,
 }
 
 /// Deterministic per-cell simulation seed: a splitmix64 hash
@@ -185,6 +208,14 @@ impl CampaignSpec {
                 TrafficShape::parse(t).with_context(|| format!("in campaign '{}'", self.name))?;
             }
         }
+        let mut geoms = std::collections::HashSet::new();
+        for g in &self.sketch {
+            let parsed = crate::obs::telemetry::TelemetryCfg::parse_geom(g)
+                .with_context(|| format!("in campaign '{}'", self.name))?;
+            if !geoms.insert(parsed) {
+                bail!("campaign '{}': duplicate sketch geometry '{g}'", self.name);
+            }
+        }
         for app in &self.apps {
             apps::app(app).with_context(|| {
                 format!("unknown app '{app}' in campaign (see `slofetch apps`)")
@@ -254,6 +285,17 @@ impl CampaignSpec {
                 }
             })
             .sum()
+    }
+
+    /// Sketch-accuracy cell count: apps × seeds × sketch geometries
+    /// (first prefetcher only — the axis measures telemetry, not
+    /// prefetcher configs).
+    pub fn sketch_cell_count(&self) -> usize {
+        if self.sketch.is_empty() {
+            0
+        } else {
+            self.apps.len() * self.seeds.len() * self.sketch.len()
+        }
     }
 
     /// Expand the matrix into runnable cells (deterministic order).
@@ -439,6 +481,58 @@ impl CampaignSpec {
         Ok(out)
     }
 
+    /// Expand the sketch-accuracy axis into runnable compare-mode cells
+    /// (deterministic order: apps ▸ seeds ▸ geometries). The validated
+    /// geometry strings are re-emitted in canonical form, so the keys —
+    /// and therefore store resume — never depend on cosmetic spelling.
+    pub fn expand_sketch(&self) -> Result<Vec<SketchCell>> {
+        self.validate()?;
+        if self.sketch.is_empty() {
+            return Ok(Vec::new());
+        }
+        let pf = self.prefetchers[0].to_lowercase();
+        let kind = parse_prefetcher(&pf)?;
+        let mut out = Vec::with_capacity(self.sketch_cell_count());
+        for app_name in &self.apps {
+            let app = apps::app(app_name).unwrap();
+            for &seed in &self.seeds {
+                for g in &self.sketch {
+                    let (w, d, p, k) = crate::obs::telemetry::TelemetryCfg::parse_geom(g)?;
+                    let geom = format!("w{w}d{d}p{p}k{k}");
+                    let key = format!(
+                        "sketch|{app_name}|{pf}|r{}|s{seed}|{geom}",
+                        self.records
+                    );
+                    let cfg = SimConfig {
+                        prefetcher: kind.clone(),
+                        controller: Some(ControllerCfg {
+                            train_interval_cycles: 200_000,
+                            ..Default::default()
+                        }),
+                        seed: cell_seed(seed, &key),
+                        telemetry: format!("compare:{geom}"),
+                        ..Default::default()
+                    };
+                    out.push(SketchCell {
+                        key,
+                        app: app_name.clone(),
+                        trace_seed: seed,
+                        geom,
+                        cell: Cell {
+                            app: app.clone(),
+                            label: format!("{pf}+ml"),
+                            cfg,
+                            records: self.records,
+                            trace_seed: seed,
+                            trace: None,
+                        },
+                    });
+                }
+            }
+        }
+        Ok(out)
+    }
+
     // ---------- JSON (de)serialization ----------
 
     pub fn to_json(&self) -> Json {
@@ -476,6 +570,10 @@ impl CampaignSpec {
             (
                 "policies",
                 Json::Arr(self.policies.iter().map(|p| Json::str(p)).collect()),
+            ),
+            (
+                "sketch",
+                Json::Arr(self.sketch.iter().map(|g| Json::str(g)).collect()),
             ),
         ])
     }
@@ -549,6 +647,16 @@ impl CampaignSpec {
                 })
                 .collect::<Result<_>>()?;
         }
+        if let Some(arr) = j.get("sketch").and_then(Json::as_arr) {
+            spec.sketch = arr
+                .iter()
+                .map(|v| {
+                    v.as_str()
+                        .map(str::to_string)
+                        .context("'sketch' entries must be strings")
+                })
+                .collect::<Result<_>>()?;
+        }
         spec.validate()?;
         Ok(spec)
     }
@@ -582,6 +690,7 @@ mod tests {
             traffic: vec!["none".into()],
             clusters: Vec::new(),
             policies: vec!["reactive".into()],
+            sketch: Vec::new(),
         }
     }
 
@@ -937,6 +1046,50 @@ mod tests {
         // don't break pre-cluster campaigns.
         let spec = CampaignSpec { policies: vec![], ..small() };
         assert!(spec.validate().is_ok());
+    }
+
+    #[test]
+    fn sketch_axis_expands_compare_cells_with_canonical_keys() {
+        let spec = CampaignSpec {
+            sketch: vec!["w128d4p10k8".into(), "w256d4p10k16".into()],
+            ..small()
+        };
+        let cells = spec.expand_sketch().unwrap();
+        // 2 apps × 2 seeds × 2 geometries, first prefetcher only.
+        assert_eq!(cells.len(), spec.sketch_cell_count());
+        assert_eq!(cells.len(), 8);
+        assert_eq!(cells[0].key, "sketch|crypto|nl|r10000|s3|w128d4p10k8");
+        for c in &cells {
+            assert!(c.cell.cfg.controller.is_some(), "sketch cells must gate through ML");
+            assert_eq!(c.cell.cfg.telemetry, format!("compare:{}", c.geom));
+            assert_eq!(c.cell.label, "nl+ml");
+            assert_eq!(c.cell.cfg.seed, cell_seed(c.trace_seed, &c.key));
+        }
+        // Keys are unique and stable across expansions.
+        let keys: Vec<String> = cells.iter().map(|c| c.key.clone()).collect();
+        let mut dedup = keys.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), keys.len());
+        let again: Vec<String> =
+            spec.expand_sketch().unwrap().iter().map(|c| c.key.clone()).collect();
+        assert_eq!(again, keys);
+        // The sim-cell matrix is untouched by the sketch axis, and a
+        // sketch-free spec expands to nothing.
+        assert_eq!(spec.expand().unwrap().len(), small().expand().unwrap().len());
+        assert!(small().expand_sketch().unwrap().is_empty());
+        assert_eq!(small().sketch_cell_count(), 0);
+        // JSON round-trips the axis.
+        let back = CampaignSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+        // Bad or duplicate geometries are rejected.
+        let bad = CampaignSpec { sketch: vec!["128x4".into()], ..small() };
+        assert!(bad.validate().is_err());
+        let dup = CampaignSpec {
+            sketch: vec!["w128d4p10k8".into(), "w128d4p10k8".into()],
+            ..small()
+        };
+        assert!(dup.validate().is_err(), "duplicate geometry not rejected");
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! produces byte-identical files.
 
 use crate::cluster::{ClusterResult, TenantStat};
+use crate::obs::telemetry::Telemetry;
 use crate::sim::engine::SimResult;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
@@ -470,11 +471,162 @@ impl ClusterCellRecord {
     }
 }
 
+/// One JSONL line for a campaign sketch-accuracy cell (tagged
+/// `"kind": "sketch"`; DESIGN.md §12): the exact-vs-sketch comparison
+/// tallies of one compare-mode run — decision agreement and feature
+/// error against the sketch's byte budget and the exact counters it
+/// replaces.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SketchCellRecord {
+    pub key: String,
+    pub app: String,
+    /// Prefetcher label the compare run used (always ML-gated).
+    pub label: String,
+    pub records: u64,
+    pub trace_seed: u64,
+    pub sim_seed: u64,
+    /// Canonical geometry label (`w{width}d{depth}p{hll_p}k{topk}`).
+    pub geom: String,
+    /// Sketch footprint in bytes (count-mins + HLL + top-K).
+    pub sketch_bytes: u64,
+    /// What exact per-context counters would cost (3 × u64 per distinct
+    /// context actually seen).
+    pub exact_bytes: u64,
+    /// Exact distinct source contexts.
+    pub distinct_exact: u64,
+    /// HLL estimate of the same cardinality (rounded).
+    pub distinct_est: u64,
+    /// Prefetches the run issued (count-min total — exact by design).
+    pub issued: u64,
+    /// Decisions where the exact and sketch-fed scores were compared.
+    pub decisions: u64,
+    /// Fraction of compared decisions where both sides agreed.
+    pub agreement: f64,
+    /// Mean absolute error over the substituted feature values.
+    pub feature_mae: f64,
+    /// Occupied fraction of the issue count-min.
+    pub fill: f64,
+}
+
+impl SketchCellRecord {
+    /// Build from a finished compare-mode run's telemetry.
+    pub fn from_telemetry(
+        key: &str,
+        app: &str,
+        label: &str,
+        records: u64,
+        trace_seed: u64,
+        sim_seed: u64,
+        geom: &str,
+        t: &Telemetry,
+    ) -> SketchCellRecord {
+        SketchCellRecord {
+            key: key.to_string(),
+            app: app.to_string(),
+            label: label.to_string(),
+            records,
+            trace_seed,
+            sim_seed,
+            geom: geom.to_string(),
+            sketch_bytes: t.bytes(),
+            exact_bytes: t.exact_counter_bytes().unwrap_or(0),
+            distinct_exact: t.exact_srcs.len() as u64,
+            distinct_est: t.contexts.estimate().round() as u64,
+            issued: t.issued.total(),
+            decisions: t.decisions_compared,
+            agreement: t.agreement().unwrap_or(1.0),
+            feature_mae: t.feature_mae().unwrap_or(0.0),
+            fill: t.issued.fill_ratio(),
+        }
+    }
+
+    /// Sketch-vs-exact byte ratio (< 1.0 means the sketch is smaller).
+    pub fn byte_ratio(&self) -> f64 {
+        if self.exact_bytes == 0 {
+            0.0
+        } else {
+            self.sketch_bytes as f64 / self.exact_bytes as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str("sketch")),
+            ("key", Json::str(&self.key)),
+            ("app", Json::str(&self.app)),
+            ("label", Json::str(&self.label)),
+            ("records", Json::num(self.records as f64)),
+            ("trace_seed", Json::num(self.trace_seed as f64)),
+            // As a string: full-range 64-bit hashes do not survive the
+            // f64 JSON number path (2^53 mantissa).
+            ("sim_seed", Json::str(&self.sim_seed.to_string())),
+            ("geom", Json::str(&self.geom)),
+            ("sketch_bytes", Json::num(self.sketch_bytes as f64)),
+            ("exact_bytes", Json::num(self.exact_bytes as f64)),
+            ("distinct_exact", Json::num(self.distinct_exact as f64)),
+            ("distinct_est", Json::num(self.distinct_est as f64)),
+            ("issued", Json::num(self.issued as f64)),
+            ("decisions", Json::num(self.decisions as f64)),
+            ("agreement", Json::num(self.agreement)),
+            ("feature_mae", Json::num(self.feature_mae)),
+            ("fill", Json::num(self.fill)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SketchCellRecord> {
+        let s = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .with_context(|| format!("sketch record: missing string '{k}'"))
+        };
+        let u = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_u64)
+                .with_context(|| format!("sketch record: missing integer '{k}'"))
+        };
+        let f = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("sketch record: missing number '{k}'"))
+        };
+        Ok(SketchCellRecord {
+            key: s("key")?,
+            app: s("app")?,
+            label: s("label")?,
+            records: u("records")?,
+            trace_seed: u("trace_seed")?,
+            sim_seed: j
+                .get("sim_seed")
+                .and_then(Json::as_str)
+                .and_then(|v| v.parse().ok())
+                .context("sketch record: missing u64 string 'sim_seed'")?,
+            geom: s("geom")?,
+            sketch_bytes: u("sketch_bytes")?,
+            exact_bytes: u("exact_bytes")?,
+            distinct_exact: u("distinct_exact")?,
+            distinct_est: u("distinct_est")?,
+            issued: u("issued")?,
+            decisions: u("decisions")?,
+            agreement: f("agreement")?,
+            feature_mae: f("feature_mae")?,
+            fill: f("fill")?,
+        })
+    }
+
+    /// The single JSONL line (sorted keys, no trailing newline).
+    pub fn to_line(&self) -> String {
+        self.to_json().dump()
+    }
+}
+
 /// A parsed store line: untagged lines are simulation cells, lines
-/// tagged `"kind": "cluster"` are cluster-scenario cells.
+/// tagged `"kind": "cluster"` / `"kind": "sketch"` are cluster-scenario
+/// / sketch-accuracy cells.
 enum Record {
     Sim(CellRecord),
     Cluster(ClusterCellRecord),
+    Sketch(SketchCellRecord),
 }
 
 impl Record {
@@ -482,6 +634,7 @@ impl Record {
         match j.get("kind").and_then(Json::as_str) {
             None => Ok(Record::Sim(CellRecord::from_json(j)?)),
             Some("cluster") => Ok(Record::Cluster(ClusterCellRecord::from_json(j)?)),
+            Some("sketch") => Ok(Record::Sketch(SketchCellRecord::from_json(j)?)),
             Some(other) => bail!("unknown record kind '{other}'"),
         }
     }
@@ -493,6 +646,7 @@ pub struct ResultStore {
     file: Option<std::fs::File>,
     records: Vec<CellRecord>,
     cluster_records: Vec<ClusterCellRecord>,
+    sketch_records: Vec<SketchCellRecord>,
     keys: HashSet<String>,
 }
 
@@ -503,6 +657,7 @@ impl ResultStore {
             file: None,
             records: Vec::new(),
             cluster_records: Vec::new(),
+            sketch_records: Vec::new(),
             keys: HashSet::new(),
         }
     }
@@ -540,6 +695,11 @@ impl ResultStore {
                         Ok(Record::Cluster(rec)) => {
                             if store.keys.insert(rec.key.clone()) {
                                 store.cluster_records.push(rec);
+                            }
+                        }
+                        Ok(Record::Sketch(rec)) => {
+                            if store.keys.insert(rec.key.clone()) {
+                                store.sketch_records.push(rec);
                             }
                         }
                         Err(_) if !complete && truncated_tail => {
@@ -585,13 +745,15 @@ impl ResultStore {
         Ok(store)
     }
 
-    /// Total stored lines (simulation + cluster cells).
+    /// Total stored lines (simulation + cluster + sketch cells).
     pub fn len(&self) -> usize {
-        self.records.len() + self.cluster_records.len()
+        self.records.len() + self.cluster_records.len() + self.sketch_records.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.records.is_empty() && self.cluster_records.is_empty()
+        self.records.is_empty()
+            && self.cluster_records.is_empty()
+            && self.sketch_records.is_empty()
     }
 
     pub fn contains(&self, key: &str) -> bool {
@@ -604,6 +766,10 @@ impl ResultStore {
 
     pub fn cluster_records(&self) -> &[ClusterCellRecord] {
         &self.cluster_records
+    }
+
+    pub fn sketch_records(&self) -> &[SketchCellRecord] {
+        &self.sketch_records
     }
 
     /// Append one record (no-op returning `false` if the key is already
@@ -634,6 +800,20 @@ impl ResultStore {
         Ok(true)
     }
 
+    /// Append one sketch-accuracy record (same dedup/write-through
+    /// semantics as [`ResultStore::push`]; the key space is shared).
+    pub fn push_sketch(&mut self, rec: SketchCellRecord) -> Result<bool> {
+        if self.keys.contains(&rec.key) {
+            return Ok(false);
+        }
+        if let Some(file) = &mut self.file {
+            writeln!(file, "{}", rec.to_line()).context("append to result store")?;
+        }
+        self.keys.insert(rec.key.clone());
+        self.sketch_records.push(rec);
+        Ok(true)
+    }
+
     /// Fold another store's records into this one (first writer wins on
     /// key conflicts). Returns how many records were new.
     pub fn merge(&mut self, other: &ResultStore) -> Result<usize> {
@@ -645,6 +825,11 @@ impl ResultStore {
         }
         for rec in other.cluster_records() {
             if self.push_cluster(rec.clone())? {
+                added += 1;
+            }
+        }
+        for rec in other.sketch_records() {
+            if self.push_sketch(rec.clone())? {
                 added += 1;
             }
         }
@@ -716,6 +901,60 @@ mod tests {
             duration_us: 6.0e5,
             events: 550_000,
         }
+    }
+
+    fn srec(key: &str, geom: &str) -> SketchCellRecord {
+        SketchCellRecord {
+            key: key.into(),
+            app: "websearch".into(),
+            label: "nl+ml".into(),
+            records: 10_000,
+            trace_seed: 3,
+            sim_seed: 0xFEED_FACE_DEAD_BEEF,
+            geom: geom.into(),
+            sketch_bytes: 13_824,
+            exact_bytes: 72_000,
+            distinct_exact: 3_000,
+            distinct_est: 2_950,
+            issued: 45_000,
+            decisions: 20_000,
+            agreement: 0.972,
+            feature_mae: 0.031,
+            fill: 0.42,
+        }
+    }
+
+    #[test]
+    fn sketch_record_json_roundtrip_and_store_integration() {
+        let r = srec("sketch|websearch|nl|r10000|s3|w256d4p10k16", "w256d4p10k16");
+        let line = r.to_line();
+        assert!(line.contains("\"kind\":\"sketch\""), "missing kind tag: {line}");
+        let back = SketchCellRecord::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, r);
+        assert_eq!(back.sim_seed, 0xFEED_FACE_DEAD_BEEF, "sim_seed truncated");
+        assert!((r.byte_ratio() - 13_824.0 / 72_000.0).abs() < 1e-12);
+        // File round-trip alongside the other record kinds, with dedup.
+        let dir = std::env::temp_dir().join("slofetch_store_sketch");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sketch.jsonl");
+        std::fs::remove_file(&path).ok();
+        {
+            let mut s = ResultStore::open(&path).unwrap();
+            assert!(s.push(rec("a", "crypto", "nl", 1.0)).unwrap());
+            assert!(s.push_sketch(r.clone()).unwrap());
+            assert!(!s.push_sketch(srec(&r.key, "w1d1p4k1")).unwrap(), "dedup failed");
+            assert_eq!(s.len(), 2);
+        }
+        let reloaded = ResultStore::open(&path).unwrap();
+        assert_eq!(reloaded.sketch_records().len(), 1);
+        assert_eq!(reloaded.sketch_records()[0], r);
+        assert!(reloaded.contains(&r.key));
+        // Merge folds sketch records too, first writer winning.
+        let mut main = ResultStore::in_memory();
+        main.push_sketch(srec(&r.key, "stale")).unwrap();
+        assert_eq!(main.merge(&reloaded).unwrap(), 1, "only the sim line is new");
+        assert_eq!(main.sketch_records()[0].geom, "stale");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

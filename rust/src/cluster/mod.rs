@@ -45,6 +45,7 @@ use crate::campaign::spec::cell_seed;
 use crate::cli::parse_prefetcher;
 use crate::config::SimConfig;
 use crate::figures::report::{f2, kb, pct, Table};
+use crate::obs::telemetry::Telemetry;
 use crate::obs::{trace as obs_trace, ObsCfg};
 use crate::trace::gen::apps;
 use crate::trace::{codec, Record};
@@ -73,6 +74,20 @@ pub struct ClusterOutcome {
     pub ipc_cells: usize,
     /// The SLO every scenario was held to (spec value or derived).
     pub slo_us: f64,
+    /// Sketch telemetry from the measurement cells (DESIGN.md §12);
+    /// `None` under the default `telemetry: "exact"` knob.
+    pub fleet: Option<FleetTelemetry>,
+}
+
+/// Sketch telemetry harvested from a spec's (source × config)
+/// measurement cells: one bounded summary per cell plus their
+/// associative merge — the fleet view a coordinator would hold.
+#[derive(Clone, Debug)]
+pub struct FleetTelemetry {
+    /// (source, prefetcher, telemetry), measurement-cell expansion order.
+    pub cells: Vec<(String, String, Telemetry)>,
+    /// Merge of every cell summary ([`Telemetry::merged`]).
+    pub merged: Telemetry,
 }
 
 struct ScenarioDef {
@@ -110,6 +125,9 @@ pub struct PreparedSpec {
     pub ipc_cells: usize,
     /// Whether scenarios replay empirical service times.
     pub empirical: bool,
+    /// Per-cell + merged sketch telemetry when the spec's `telemetry`
+    /// knob is not `"exact"`.
+    pub fleet: Option<FleetTelemetry>,
 }
 
 /// Measure the (source × config) IPC/metadata matrix through the
@@ -161,6 +179,7 @@ pub fn prepare_spec(spec: &ClusterSpec, threads: usize) -> Result<PreparedSpec> 
                     prefetcher: parse_prefetcher(pf).expect("validated prefetcher"),
                     seed: cell_seed(spec.seed, &key),
                     track_segments: empirical,
+                    telemetry: spec.telemetry.clone(),
                     ..Default::default()
                 },
                 records,
@@ -186,6 +205,15 @@ pub fn prepare_spec(spec: &ClusterSpec, threads: usize) -> Result<PreparedSpec> 
             Measure { ipc: r.ipc(), metadata_bytes: r.metadata_bytes, table },
         );
     }
+    // Harvest per-cell sketch telemetry (deterministic: `sims` is in
+    // cell expansion order) and fold the fleet view once per spec.
+    let tel_cells: Vec<(String, String, Telemetry)> = pairs
+        .iter()
+        .zip(sims)
+        .filter_map(|((src, pf), r)| r.telemetry.map(|t| (src.clone(), pf.clone(), *t)))
+        .collect();
+    let fleet = crate::coordinator::fleet::merge_telemetry(tel_cells.iter().map(|(_, _, t)| t))
+        .map(|merged| FleetTelemetry { cells: tel_cells, merged });
     let lookup =
         |src: &str, label: &str| measures.get(&(src.to_string(), label.to_string())).copied();
     let analytic = |src: &str, label: &str| lookup(src, label).map(Measure::analytic);
@@ -242,6 +270,7 @@ pub fn prepare_spec(spec: &ClusterSpec, threads: usize) -> Result<PreparedSpec> 
         slo_us,
         ipc_cells: cells.len(),
         empirical,
+        fleet,
     })
 }
 
@@ -472,6 +501,7 @@ fn run_tenant_spec(
         total_events,
         ipc_cells: prep.ipc_cells,
         slo_us: prep.slo_us,
+        fleet: prep.fleet.clone(),
     })
 }
 
@@ -554,6 +584,7 @@ pub fn run_spec_obs(spec: &ClusterSpec, threads: usize, obs: &ObsCfg) -> Result<
         total_events,
         ipc_cells: prep.ipc_cells,
         slo_us: prep.slo_us,
+        fleet: prep.fleet,
     })
 }
 
@@ -818,6 +849,75 @@ pub fn critical_path_report(out: &ClusterOutcome) -> Option<Table> {
     Some(t)
 }
 
+/// Fleet sketch-telemetry summary: one row per (source, config)
+/// measurement cell plus the merged fleet view (DESIGN.md §12). `None`
+/// under the default `telemetry: "exact"` knob, so the baseline report
+/// byte-stream never gains a table. Deterministic: cells are in
+/// measurement expansion order and the merge is order-invariant.
+pub fn fleet_report(out: &ClusterOutcome) -> Option<Table> {
+    let fleet = out.fleet.as_ref()?;
+    let mut t = Table::new(
+        "cluster_fleet",
+        &format!("Fleet sketch telemetry ({})", fleet.merged.cfg.label()),
+        &[
+            "source",
+            "config",
+            "issued",
+            "useful",
+            "useless",
+            "ctx≈",
+            "fill",
+            "bytes",
+            "agree",
+        ],
+    );
+    let mut row = |src: &str, pf: &str, tel: &Telemetry| {
+        t.row(vec![
+            src.to_string(),
+            pf.to_string(),
+            tel.issued.total().to_string(),
+            tel.useful.total().to_string(),
+            tel.useless.total().to_string(),
+            format!("{:.0}", tel.contexts.estimate()),
+            pct(tel.issued.fill_ratio()),
+            kb(tel.bytes()),
+            tel.agreement().map(pct).unwrap_or_else(|| "—".into()),
+        ]);
+    };
+    for (src, pf, tel) in &fleet.cells {
+        row(src, pf, tel);
+    }
+    row("fleet", "·merged", &fleet.merged);
+    t.note(
+        "bounded-memory streaming summaries per measurement cell: issued/useful/\
+         useless are count-min totals, ctx≈ the HLL distinct-context estimate, \
+         fill the occupied fraction of the issue sketch, agree the exact-vs-\
+         sketch decision agreement (compare mode only); the fleet row is the \
+         associative merge of every cell",
+    );
+    Some(t)
+}
+
+/// Hottest source contexts across the fleet (space-saving top-K over
+/// the merged issue stream). `None` without sketch telemetry.
+pub fn fleet_topk_report(out: &ClusterOutcome) -> Option<Table> {
+    let fleet = out.fleet.as_ref()?;
+    let mut t = Table::new(
+        "cluster_fleet_topk",
+        "Fleet heavy hitters (source contexts by estimated issue count)",
+        &["rank", "context", "issues≈"],
+    );
+    for (rank, (ctx, est)) in fleet.merged.hot.top().into_iter().enumerate() {
+        t.row(vec![(rank + 1).to_string(), format!("{ctx:#x}"), est.to_string()]);
+    }
+    t.note(
+        "space-saving estimates are upper bounds (≤ true count + table error); \
+         the union of per-cell tables is truncated once, so ranks are invariant \
+         to cell order and thread count",
+    );
+    Some(t)
+}
+
 /// Chrome trace-event / Perfetto-compatible document over every
 /// scenario's sampled spans and control actions (DESIGN.md §11): one
 /// process per (scenario, service) plus a controller process per
@@ -901,6 +1001,23 @@ pub fn metrics_jsonl(out: &ClusterOutcome) -> String {
             text.push_str(&Json::Obj(map).dump());
             text.push('\n');
         }
+    }
+    // Sketch-telemetry summaries ride the same stream: one line per
+    // measurement cell plus the merged fleet view, tagged so consumers
+    // can filter them from the windowed scenario snapshots.
+    if let Some(fleet) = &out.fleet {
+        let mut push = |cell: String, tel: &Telemetry| {
+            if let Json::Obj(mut map) = tel.summary_json() {
+                map.insert("scenario".to_string(), Json::str("fleet"));
+                map.insert("cell".to_string(), Json::str(&cell));
+                text.push_str(&Json::Obj(map).dump());
+                text.push('\n');
+            }
+        };
+        for (src, pf, tel) in &fleet.cells {
+            push(format!("{src}|{pf}"), tel);
+        }
+        push("merged".to_string(), &fleet.merged);
     }
     text
 }
@@ -989,6 +1106,7 @@ mod tests {
             tenants: Vec::new(),
             total_ways: 8,
             interference: 0.8,
+            telemetry: "exact".into(),
         }
     }
 
@@ -1245,5 +1363,46 @@ mod tests {
             .services
             .iter()
             .all(|s| s.candidates.iter().all(|c| c.table.is_none())));
+    }
+
+    #[test]
+    fn fleet_telemetry_rides_the_spec_thread_invariantly() {
+        let spec = ClusterSpec {
+            adaptive: false,
+            requests: 4_000,
+            telemetry: "sketch:w128d4p10k8".into(),
+            ..tiny_spec()
+        };
+        let a = run_spec(&spec, 1).unwrap();
+        let b = run_spec(&spec, 4).unwrap();
+        // Sketching the measurement cells must not move the scenarios.
+        let base = run_spec(&ClusterSpec { telemetry: "exact".into(), ..spec.clone() }, 2)
+            .unwrap();
+        assert_eq!(report(&a).markdown(), report(&base).markdown());
+        assert!(base.fleet.is_none());
+        assert!(fleet_report(&base).is_none() && fleet_topk_report(&base).is_none());
+        // Fleet view: one summary per (source, config) cell + the merge.
+        let fleet = a.fleet.as_ref().expect("sketch spec must carry fleet telemetry");
+        assert_eq!(fleet.cells.len(), a.ipc_cells);
+        let per_cell: u64 = fleet.cells.iter().map(|(_, _, t)| t.issued.total()).sum();
+        assert_eq!(fleet.merged.issued.total(), per_cell);
+        assert!(per_cell > 0, "measurement cells issued no prefetches");
+        // Tables and JSONL are byte-identical across thread counts.
+        let ta = fleet_report(&a).expect("fleet table missing");
+        assert_eq!(ta.markdown(), fleet_report(&b).unwrap().markdown());
+        assert_eq!(ta.rows.len(), a.ipc_cells + 1);
+        let ka = fleet_topk_report(&a).expect("topk table missing");
+        assert_eq!(ka.markdown(), fleet_topk_report(&b).unwrap().markdown());
+        assert_eq!(metrics_jsonl(&a), metrics_jsonl(&b));
+        // The JSONL stream carries one tagged line per cell + merged,
+        // and every fleet line parses with the documented keys.
+        let jsonl = metrics_jsonl(&a);
+        let fleet_lines: Vec<&str> = jsonl.lines().filter(|l| l.contains("\"cell\"")).collect();
+        assert_eq!(fleet_lines.len(), a.ipc_cells + 1);
+        for line in &fleet_lines {
+            let snap = Json::parse(line).expect("fleet line must parse");
+            let d = snap.dump();
+            assert!(d.contains("\"contexts_est\"") && d.contains("\"scenario\":\"fleet\""));
+        }
     }
 }

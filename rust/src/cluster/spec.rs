@@ -94,6 +94,13 @@ pub struct ClusterSpec {
     /// tenant while co-runners' way demand exceeds their locked shares
     /// dilates its service time by up to `1 + α`.
     pub interference: f64,
+    /// Per-cell sketch telemetry knob (DESIGN.md §12), forwarded to the
+    /// IPC measurement cells' `SimConfig::telemetry`: `"exact"` (the
+    /// default — nothing recorded, output byte-identical to pre-sketch
+    /// builds), `"sketch[:GEOM]"`, or `"compare[:GEOM]"`. Non-exact
+    /// runs additionally surface a merged fleet summary (tables +
+    /// metrics JSONL).
+    pub telemetry: String,
 }
 
 impl Default for ClusterSpec {
@@ -114,6 +121,7 @@ impl Default for ClusterSpec {
             tenants: Vec::new(),
             total_ways: DEFAULT_TOTAL_WAYS,
             interference: DEFAULT_INTERFERENCE,
+            telemetry: "exact".into(),
         }
     }
 }
@@ -242,6 +250,8 @@ impl ClusterSpec {
                 );
             }
         }
+        crate::obs::telemetry::TelemetryCfg::parse(&self.telemetry)
+            .with_context(|| format!("in cluster '{}'", self.name))?;
         if !self.interference.is_finite() || self.interference < 0.0 {
             bail!(
                 "cluster '{}': interference must be finite and ≥ 0, got {}",
@@ -463,6 +473,12 @@ impl ClusterSpec {
         if self.interference != DEFAULT_INTERFERENCE {
             fields.push(("interference", Json::num(self.interference)));
         }
+        // Non-default only, like service_times: the knob is absent from
+        // exact-mode spec JSON, keeping campaign content hashes (and
+        // store resume) unchanged for every existing campaign.
+        if self.telemetry != "exact" {
+            fields.push(("telemetry", Json::str(&self.telemetry)));
+        }
         Json::obj(fields)
     }
 
@@ -625,6 +641,9 @@ impl ClusterSpec {
         if let Some(v) = j.get("interference").and_then(Json::as_f64) {
             spec.interference = v;
         }
+        if let Some(v) = j.get("telemetry").and_then(Json::as_str) {
+            spec.telemetry = v.to_string();
+        }
         spec.validate()?;
         Ok(spec)
     }
@@ -685,6 +704,7 @@ mod tests {
             tenants: Vec::new(),
             total_ways: DEFAULT_TOTAL_WAYS,
             interference: DEFAULT_INTERFERENCE,
+            telemetry: "exact".into(),
         }
     }
 
@@ -853,10 +873,31 @@ mod tests {
         assert!(!dump.contains("tenants"), "tenant key leaked: {dump}");
         assert!(!dump.contains("total_ways"), "total_ways leaked: {dump}");
         assert!(!dump.contains("interference"), "interference leaked: {dump}");
+        assert!(!dump.contains("telemetry"), "telemetry key leaked: {dump}");
         // Non-default partition geometry still round-trips.
         let s = ClusterSpec { total_ways: 16, interference: 0.5, ..tenant_spec() };
         let back = ClusterSpec::from_json(&s.to_json()).unwrap();
         assert_eq!(back, s);
+    }
+
+    #[test]
+    fn telemetry_knob_validates_and_roundtrips() {
+        // Non-default knob round-trips through JSON.
+        let s = ClusterSpec { telemetry: "compare:w256d4p10k16".into(), ..small() };
+        assert!(s.validate().is_ok());
+        let back = ClusterSpec::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        assert!(s.to_json().dump().contains("\"telemetry\":\"compare:w256d4p10k16\""));
+        // Default geometry forms are accepted too.
+        for ok in ["exact", "sketch", "compare", "sketch:w64d2p8k4"] {
+            let s = ClusterSpec { telemetry: ok.into(), ..small() };
+            assert!(s.validate().is_ok(), "rejected '{ok}'");
+        }
+        // Garbage modes and geometries are rejected at validate().
+        for bad in ["psychic", "sketch:128x4", "compare:w0d4p10k16", "exact:w64d4p10k16"] {
+            let s = ClusterSpec { telemetry: bad.into(), ..small() };
+            assert!(s.validate().is_err(), "accepted '{bad}'");
+        }
     }
 
     #[test]

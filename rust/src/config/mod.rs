@@ -154,6 +154,14 @@ pub struct SimConfig {
     /// empirical service-time models are fit from these. Observation
     /// only: never perturbs timing, stats, or RNG draws.
     pub track_segments: bool,
+    /// Telemetry source for per-context prefetch statistics
+    /// (DESIGN.md §12): `"exact"` (default — no sketches allocated,
+    /// byte-identical to pre-sketch builds), `"sketch[:GEOM]"`
+    /// (controller decision context fed by bounded-memory sketch
+    /// estimates), or `"compare[:GEOM]"` (exact decisions plus a
+    /// sketch-fed shadow score per decision, for the accuracy report).
+    /// GEOM is `w{width}d{depth}p{hll_p}k{topk}`.
+    pub telemetry: String,
 }
 
 impl Default for SimConfig {
@@ -172,6 +180,7 @@ impl Default for SimConfig {
             conf_threshold: 1,
             seed: 1,
             track_segments: false,
+            telemetry: "exact".into(),
         }
     }
 }
@@ -222,7 +231,7 @@ impl SimConfig {
                 ("shadow", Json::Bool(c.shadow)),
             ]),
         };
-        Json::obj(vec![
+        let mut out = Json::obj(vec![
             (
                 "hierarchy",
                 Json::obj(vec![
@@ -244,7 +253,15 @@ impl SimConfig {
             ("conf_threshold", Json::num(self.conf_threshold as f64)),
             ("seed", Json::num(self.seed as f64)),
             ("track_segments", Json::Bool(self.track_segments)),
-        ])
+        ]);
+        // Emitted only when non-default so existing configs (and
+        // anything content-hashing them) serialize byte-identically.
+        if self.telemetry != "exact" {
+            if let Json::Obj(map) = &mut out {
+                map.insert("telemetry".into(), Json::str(&self.telemetry));
+            }
+        }
+        out
     }
 
     pub fn from_json(j: &Json) -> Result<SimConfig> {
@@ -340,6 +357,10 @@ impl SimConfig {
         if let Some(v) = j.get("track_segments").and_then(Json::as_bool) {
             cfg.track_segments = v;
         }
+        if let Some(v) = j.get("telemetry").and_then(Json::as_str) {
+            crate::obs::telemetry::TelemetryCfg::parse(v)?;
+            cfg.telemetry = v.to_string();
+        }
         Ok(cfg)
     }
 
@@ -415,6 +436,25 @@ mod tests {
         let back = SimConfig::load(&path).unwrap();
         assert_eq!(back.prefetcher, cfg.prefetcher);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn telemetry_knob_roundtrips_and_defaults_serialize_unchanged() {
+        // Default ("exact") emits no key at all — pre-sketch configs and
+        // their content hashes are untouched.
+        let cfg = SimConfig::default();
+        assert!(!cfg.to_json().dump().contains("telemetry"));
+        let back = SimConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.telemetry, "exact");
+        // Non-default round-trips.
+        let mut cfg = SimConfig::default();
+        cfg.telemetry = "compare:w128d4p10k16".into();
+        assert!(cfg.to_json().dump().contains("\"telemetry\":\"compare:w128d4p10k16\""));
+        let back = SimConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.telemetry, cfg.telemetry);
+        // Garbage knobs are rejected at load time.
+        let j = Json::parse(r#"{"telemetry": "psychic"}"#).unwrap();
+        assert!(SimConfig::from_json(&j).is_err());
     }
 
     #[test]

@@ -5,6 +5,7 @@
 
 use crate::campaign::runner::{run_cells, Cell};
 use crate::config::SimConfig;
+use crate::obs::telemetry::Telemetry;
 use crate::sim::engine::SimResult;
 use crate::trace::gen::apps::AppSpec;
 
@@ -47,6 +48,19 @@ pub fn run_fleet(jobs: Vec<FleetJob>, parallelism: usize) -> Vec<CellResult> {
         .collect()
 }
 
+/// Merge the per-cell sketch telemetries of a fleet into one summary
+/// (DESIGN.md §12): count-min and HLL merges are associative, and the
+/// heavy-hitter union is truncated once across all parts, so the result
+/// depends only on the (deterministic) cell order — never on thread
+/// scheduling. Returns `None` when no cell carried telemetry.
+pub fn merge_telemetry<'a, I>(telemetries: I) -> Option<Telemetry>
+where
+    I: IntoIterator<Item = &'a Telemetry>,
+{
+    let parts: Vec<&Telemetry> = telemetries.into_iter().collect();
+    Telemetry::merged(&parts)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -82,6 +96,36 @@ mod tests {
         for c in &out {
             assert!(c.result.stats.instrs > 0);
         }
+    }
+
+    #[test]
+    fn fleet_telemetry_merges_across_cells_thread_invariantly() {
+        let jobs = || {
+            let mut js = vec![
+                job("serde", PrefetcherKind::Eip { entries: 1024 }),
+                job("logging", PrefetcherKind::Eip { entries: 1024 }),
+                job("crypto", PrefetcherKind::NextLineOnly),
+            ];
+            for j in &mut js {
+                j.cfg.telemetry = "sketch:w128d4p10k8".into();
+            }
+            js
+        };
+        let par = run_fleet(jobs(), 3);
+        let ser = run_fleet(jobs(), 1);
+        let merge = |cells: &[CellResult]| {
+            merge_telemetry(cells.iter().filter_map(|c| c.result.telemetry.as_deref()))
+                .expect("telemetry missing")
+        };
+        let fp = merge(&par);
+        let fs = merge(&ser);
+        assert_eq!(fp, fs, "fleet telemetry diverged across thread counts");
+        assert_eq!(fp.summary_json().dump(), fs.summary_json().dump());
+        let per_cell: u64 =
+            par.iter().map(|c| c.result.telemetry.as_ref().unwrap().issued.total()).sum();
+        assert_eq!(fp.issued.total(), per_cell);
+        // Exact-mode cells contribute nothing to merge.
+        assert!(merge_telemetry(std::iter::empty()).is_none());
     }
 
     #[test]

@@ -5,9 +5,10 @@
 //! slofetch campaign --spec FILE [--threads N] [--out results.jsonl]
 //! slofetch cluster --spec FILE [--threads N] [--policies reactive,hysteresis,...]
 //!                  [--service-times analytic|empirical] [--trace FILE.slft]
-//!                  [--tenants on|off] [--obs] [--obs-sample SHIFT]
+//!                  [--tenants on|off] [--telemetry MODE] [--obs] [--obs-sample SHIFT]
 //!                  [--trace-out FILE.json] [--metrics-out FILE.jsonl]
 //! slofetch simulate --app websearch --prefetcher ceip256 [--records N] [--ml] [--budget N]
+//!                   [--telemetry MODE]
 //! slofetch gen-trace --app websearch --records N --out trace.slft
 //! slofetch deploy --app admission --candidate cheip2k [--records N]
 //! slofetch apps
@@ -73,8 +74,10 @@ const USAGE: &str = "usage:
   slofetch campaign --spec FILE [--threads N] [--out results.jsonl]
   slofetch cluster --spec FILE [--threads N] [--policies reactive,hysteresis,predictive,cost-aware]
                    [--service-times analytic|empirical] [--trace FILE.slft] [--tenants on|off]
-                   [--obs] [--obs-sample SHIFT] [--trace-out FILE.json] [--metrics-out FILE.jsonl]
+                   [--telemetry MODE] [--obs] [--obs-sample SHIFT] [--trace-out FILE.json]
+                   [--metrics-out FILE.jsonl]
   slofetch simulate --app A --prefetcher P [--records N] [--ml] [--adapt-window] [--budget N] [--pjrt]
+                    [--telemetry MODE]
   slofetch gen-trace --app A --records N --out FILE
   slofetch deploy --app A --candidate P [--records N]
   slofetch apps
@@ -89,7 +92,13 @@ cluster observability (DESIGN.md §11):
   --obs               record request spans + windowed metrics (implied by --trace-out/--metrics-out)
   --obs-sample SHIFT  span-sample 1 in 2^SHIFT requests (default 6)
   --trace-out FILE    write a Perfetto-compatible trace (open at https://ui.perfetto.dev)
-  --metrics-out FILE  write the SLO-window metrics timeseries as JSONL";
+  --metrics-out FILE  write the SLO-window metrics timeseries as JSONL
+
+sketch telemetry (DESIGN.md §12):
+  --telemetry MODE    exact (default) | sketch[:GEOM] | compare[:GEOM] — bounded-memory streaming
+                      summaries per simulation; GEOM = w<width>d<depth>p<hll_p>k<topk>, default
+                      w256d4p10k16 (≈13.5 KB). 'sketch' feeds the ML controller from the sketches;
+                      'compare' keeps exact decisions and measures sketch agreement";
 
 fn figure_ctx(args: &Args) -> Result<FigureCtx> {
     let mut ctx = FigureCtx {
@@ -224,6 +233,12 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             other => bail!("--tenants expects on|off, got '{other}'"),
         }
     }
+    // `--telemetry sketch[:GEOM]` / `compare[:GEOM]` turns on sketch
+    // telemetry in the measurement cells (DESIGN.md §12) — the knob is
+    // validated with the rest of the spec below.
+    if let Some(knob) = args.opt("telemetry") {
+        spec.telemetry = knob.to_string();
+    }
     spec.validate()?;
     let threads = args.threads()?;
     // Observability is opt-in: an explicit `--obs`, or implied by
@@ -257,6 +272,12 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         println!("{}", t.markdown());
     }
     if let Some(t) = slofetch::cluster::critical_path_report(&out) {
+        println!("{}", t.markdown());
+    }
+    if let Some(t) = slofetch::cluster::fleet_report(&out) {
+        println!("{}", t.markdown());
+    }
+    if let Some(t) = slofetch::cluster::fleet_topk_report(&out) {
         println!("{}", t.markdown());
     }
     if let Some(path) = trace_out {
@@ -293,6 +314,11 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         seed,
         ..Default::default()
     };
+    if let Some(knob) = args.opt("telemetry") {
+        slofetch::obs::telemetry::TelemetryCfg::parse(knob)
+            .with_context(|| format!("--telemetry {knob}"))?;
+        cfg.telemetry = knob.to_string();
+    }
     if args.flag("ml") || args.opt("budget").is_some() || args.flag("adapt-window") {
         cfg.controller = Some(ControllerCfg {
             adapt_window: args.flag("adapt-window"),
@@ -342,6 +368,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         r.stats.pf_skipped,
         figures::report::kb(r.metadata_bytes),
     );
+    if let Some(t) = &r.telemetry {
+        println!("telemetry: {}", t.summary_json().dump());
+    }
     if let Some(cs) = r.controller {
         println!(
             "controller: decisions={} issued={} skipped={} trains={} last_loss={:.4} backend={}",

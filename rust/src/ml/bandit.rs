@@ -58,12 +58,11 @@ impl Bandit {
         let arm = if self.rng.chance(self.epsilon) {
             self.rng.below(n as u64) as usize
         } else {
+            // total_cmp, not partial_cmp().unwrap(): a NaN value (e.g.
+            // from a poisoned external table via set_values) must pick
+            // some arm, not panic mid-run.
             (0..n)
-                .max_by(|&a, &b| {
-                    self.values[base + a]
-                        .partial_cmp(&self.values[base + b])
-                        .unwrap()
-                })
+                .max_by(|&a, &b| self.values[base + a].total_cmp(&self.values[base + b]))
                 .unwrap()
         };
         self.pulls[base + arm] += 1;
@@ -139,7 +138,8 @@ mod tests {
             b.update(slot, r);
         }
         let base = ctx.0 * THRESHOLDS.len();
-        let best = (0..4).max_by(|&a, &c| b.values[base + a].partial_cmp(&b.values[base + c]).unwrap()).unwrap();
+        let best =
+            (0..4).max_by(|&a, &c| b.values[base + a].total_cmp(&b.values[base + c])).unwrap();
         assert_eq!(best, 1, "values: {:?}", &b.values[base..base + 4]);
         // Greedy pulls concentrate on the best arm.
         assert!(b.pulls[base + 1] > 1000);
@@ -176,7 +176,7 @@ mod tests {
         let argmax = |ctx: usize| {
             let base = ctx * THRESHOLDS.len();
             (0..4)
-                .max_by(|&a, &c| b.values[base + a].partial_cmp(&b.values[base + c]).unwrap())
+                .max_by(|&a, &c| b.values[base + a].total_cmp(&b.values[base + c]))
                 .unwrap()
         };
         assert_eq!(argmax(0), 0);
@@ -197,6 +197,30 @@ mod tests {
         let base = ctx.0 * THRESHOLDS.len();
         assert!(b.values[base] > b.values[base + 1]);
         assert!(b.pulls[base] > b.pulls[base + 1]);
+    }
+
+    #[test]
+    fn nan_values_do_not_panic_the_argmax() {
+        // Regression: pick() used partial_cmp(..).unwrap(), which panics
+        // the first greedy step after any value goes NaN. A poisoned
+        // external table (set_values is the PJRT path) must degrade to
+        // "some arm", deterministically, not abort the run.
+        let mut b = Bandit::new(0.0, 0.1, 3); // ε = 0 → always greedy
+        let mut poisoned = [f32::NAN; TOTAL_SLOTS];
+        poisoned[2] = 0.25; // one finite value in context 0's table
+        b.set_values(&poisoned);
+        let (_, slot) = b.choose_threshold(Context(0));
+        // total_cmp orders NaN above every finite f32, so the argmax
+        // lands on a NaN arm — the point is that it lands at all.
+        assert!(slot < THRESHOLDS.len());
+        // All-NaN context: still no panic, and updates pull the chosen
+        // slot back to a finite value eventually via v + lr·(r − v)
+        // staying NaN — so also check a clean table recovers.
+        let (_, slot7) = b.choose_threshold(Context(7));
+        assert!((7 * THRESHOLDS.len()..8 * THRESHOLDS.len()).contains(&slot7));
+        b.set_values(&[0.5; TOTAL_SLOTS]);
+        let (t, _) = b.choose_threshold(Context(0));
+        assert!(THRESHOLDS.contains(&t));
     }
 
     #[test]

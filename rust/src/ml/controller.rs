@@ -9,6 +9,7 @@ use super::bandit::{Bandit, Context};
 use super::features::{self, DecisionCtx, FeatureVec, DIM};
 use super::logistic::Weights;
 use crate::config::ControllerCfg;
+use crate::obs::telemetry::{Telemetry, TelemetryMode};
 use crate::prefetch::{Candidate, Outcome};
 use crate::runtime::PjrtEngine;
 use std::collections::HashMap;
@@ -116,6 +117,23 @@ impl OnlineController {
 
     /// Gate one candidate. Returns true to issue.
     pub fn decide(&mut self, cand: &Candidate, cycle: u64) -> bool {
+        self.decide_t(cand, cycle, None)
+    }
+
+    /// [`Self::decide`] with a telemetry source (DESIGN.md §12). `None`
+    /// is the exact path, bit-identical to pre-sketch builds. In sketch
+    /// mode the decision context's per-context EWMAs are replaced by
+    /// sketch estimates before scoring (and the sketch-fed feature
+    /// vector is what lands in the experience buffer). In compare mode
+    /// exact features drive the real decision while a sketch-fed shadow
+    /// score is tallied against the same bandit threshold — zero extra
+    /// RNG draws, so the run itself is unperturbed.
+    pub fn decide_t(
+        &mut self,
+        cand: &Candidate,
+        cycle: u64,
+        telemetry: Option<&mut Telemetry>,
+    ) -> bool {
         self.stats.decisions += 1;
         if !self.cfg.enabled {
             self.stats.issued += 1;
@@ -137,9 +155,30 @@ impl OnlineController {
                 return false;
             }
         }
-        let x = features::extract(cand, &self.ctx);
+        let exact_x = features::extract(cand, &self.ctx);
+        let (x, shadow) = match telemetry {
+            Some(t) => {
+                let est = t.estimates(cand.src);
+                let sx = features::extract(cand, &features::sketch_ctx(&self.ctx, &est));
+                match t.cfg.mode {
+                    TelemetryMode::Sketch => (sx, None),
+                    TelemetryMode::Compare => (exact_x, Some((t, sx))),
+                }
+            }
+            None => (exact_x, None),
+        };
         let p = self.weights.score(&x);
         let (thr, thr_slot) = self.bandit.choose_threshold(bctx);
+        if let Some((t, sx)) = shadow {
+            let sp = self.weights.score(&sx);
+            // Tally before the gate so every scored decision counts, on
+            // only the substituted feature values (5..=7).
+            t.tally_shadow(
+                (p < thr) == (sp < thr),
+                &[x[5], x[6], x[7]],
+                &[sx[5], sx[6], sx[7]],
+            );
+        }
         if p < thr {
             self.stats.skipped += 1;
             return false;
@@ -401,6 +440,60 @@ mod tests {
         }
         assert!(c.experience_len() <= MAX_EXPERIENCE);
         assert_eq!(c.batch_x.len(), c.batch_y.len() * DIM);
+    }
+
+    #[test]
+    fn compare_mode_never_perturbs_decisions() {
+        // Same seed, same candidate stream: a compare-mode controller
+        // must make decision-for-decision identical choices to a
+        // telemetry-free twin (the shadow score costs no RNG draws).
+        let mut exact = OnlineController::new(cfg(), 7);
+        let mut shadowed = OnlineController::new(cfg(), 7);
+        let mut t = Telemetry::from_knob("compare").unwrap().unwrap();
+        let mut cycle = 0u64;
+        let mut gated = 0u64;
+        for i in 0..300u64 {
+            cycle += 17;
+            let cd = Candidate { line: 0x2000 + i, src: 0x1000 + i % 5, ..cand(3, 0.9) };
+            let de = exact.decide(&cd, cycle);
+            let ds = shadowed.decide_t(&cd, cycle, Some(&mut t));
+            assert_eq!(de, ds, "decision {i} diverged");
+            gated += 1;
+            if ds {
+                t.record_issue(cd.src);
+                let useful = i % 4 != 0;
+                let oc = if useful { Outcome::Timely } else { Outcome::Useless };
+                exact.on_outcome(cd.line, oc, false);
+                shadowed.on_outcome(cd.line, oc, false);
+                t.record_outcome(cd.src, useful);
+            }
+        }
+        assert_eq!(t.decisions_compared, gated);
+        let agree = t.agreement().unwrap();
+        assert!((0.0..=1.0).contains(&agree));
+        assert!(t.feature_mae().is_some());
+        assert_eq!(exact.stats.issued, shadowed.stats.issued);
+        assert_eq!(exact.stats.skipped, shadowed.stats.skipped);
+    }
+
+    #[test]
+    fn cold_sketch_mode_matches_exact_decisions() {
+        // With no recorded outcomes the sketch estimates equal the exact
+        // EWMAs' initial values (0.5 / 0.0 priors), so a sketch-mode
+        // controller tracks a same-seed exact one exactly.
+        let mut exact = OnlineController::new(cfg(), 9);
+        let mut sketched = OnlineController::new(cfg(), 9);
+        let mut t = Telemetry::from_knob("sketch").unwrap().unwrap();
+        for i in 0..100u64 {
+            let cd = Candidate {
+                line: 0x2000 + i,
+                src: 0x1000 + i % 3,
+                ..cand((i % 4) as u8, (i % 8) as f32 / 8.0)
+            };
+            let de = exact.decide(&cd, 10 * i);
+            let ds = sketched.decide_t(&cd, 10 * i, Some(&mut t));
+            assert_eq!(de, ds, "cold decision {i} diverged");
+        }
     }
 
     #[test]

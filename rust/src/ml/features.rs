@@ -4,6 +4,7 @@
 //! lightweight thread/RPC tag" — plus the operational signals (bandwidth
 //! headroom, issue rate, churn) the deployment playbook keys on.
 
+use crate::obs::telemetry::CtxEstimates;
 use crate::prefetch::Candidate;
 
 /// Feature dimensionality — must match `python/compile/kernels/logistic.py
@@ -56,6 +57,21 @@ pub fn extract(cand: &Candidate, ctx: &DecisionCtx) -> FeatureVec {
     f
 }
 
+/// Sketch-backed variant of the decision context (DESIGN.md §12):
+/// splice bounded-memory sketch estimates over the three exact
+/// per-context EWMAs, keeping every signal-driven field (headroom,
+/// issue rate, churn, tag) from the engine as-is. Under the
+/// `telemetry: "sketch"` knob [`extract`] runs on this context instead
+/// of the exact one — same feature layout, compressed source.
+pub fn sketch_ctx(base: &DecisionCtx, est: &CtxEstimates) -> DecisionCtx {
+    DecisionCtx {
+        hit_ewma: est.hit,
+        pollution_ewma: est.pollution,
+        accuracy_ewma: est.accuracy,
+        ..*base
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -105,6 +121,39 @@ mod tests {
             &DecisionCtx::default(),
         );
         assert!(near[10] < far[10]);
+    }
+
+    #[test]
+    fn sketch_ctx_substitutes_only_the_tracked_ewmas() {
+        let base = DecisionCtx {
+            hit_ewma: 0.7,
+            pollution_ewma: 0.1,
+            accuracy_ewma: 0.8,
+            bw_headroom: 0.9,
+            issue_rate: 16.0,
+            churn: 0.25,
+            rpc_tag: 2,
+        };
+        let est = CtxEstimates { hit: 0.6, pollution: 0.2, accuracy: 0.6 };
+        let s = sketch_ctx(&base, &est);
+        assert_eq!(s.hit_ewma, 0.6);
+        assert_eq!(s.pollution_ewma, 0.2);
+        assert_eq!(s.accuracy_ewma, 0.6);
+        // Signal-driven fields pass through untouched.
+        assert_eq!(s.bw_headroom, base.bw_headroom);
+        assert_eq!(s.issue_rate, base.issue_rate);
+        assert_eq!(s.churn, base.churn);
+        assert_eq!(s.rpc_tag, base.rpc_tag);
+        // The extracted vectors differ exactly on features 5..=7.
+        let fe = extract(&cand(), &base);
+        let fs = extract(&cand(), &s);
+        for i in 0..DIM {
+            if (5..=7).contains(&i) {
+                assert_ne!(fe[i], fs[i], "feature {i}");
+            } else {
+                assert_eq!(fe[i], fs[i], "feature {i}");
+            }
+        }
     }
 
     #[test]

@@ -40,6 +40,23 @@ impl Hist {
         self.count += 1;
     }
 
+    /// Bucket-wise accumulate another histogram into this one (the
+    /// fleet-aggregation primitive — both sides share the fixed
+    /// [`HIST_BUCKETS`] layout, so merge is associative and
+    /// commutative). Handles the lazy bucket allocation on either side.
+    pub fn merge(&mut self, other: &Hist) {
+        if other.buckets.is_empty() {
+            return;
+        }
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; HIST_BUCKETS];
+        }
+        for (s, &o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *s += o;
+        }
+        self.count += other.count;
+    }
+
     /// `{"count": n, "buckets": [...]}` with trailing zero buckets
     /// trimmed (the layout is fixed, so trimming is deterministic).
     fn to_json(&self) -> Json {
@@ -135,6 +152,57 @@ mod tests {
         assert_eq!(Hist::bucket_of(4.0), 3);
         assert_eq!(Hist::bucket_of(1024.0), 11);
         assert_eq!(Hist::bucket_of(f64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn bucket_edges_lock_powers_of_two_and_extremes() {
+        // Exact powers of two open a new bucket; the value just below
+        // stays in the previous one.
+        for i in 1..=52u32 {
+            let v = (1u64 << i) as f64;
+            assert_eq!(Hist::bucket_of(v), i as usize + 1, "2^{i}");
+            assert_eq!(Hist::bucket_of(v - 0.5), i as usize, "2^{i} - 0.5");
+        }
+        // Sub-1 and non-finite inputs all land in the underflow bucket.
+        for v in [0.0, -1.0, 0.999_999, f64::NEG_INFINITY, f64::INFINITY, f64::NAN] {
+            assert_eq!(Hist::bucket_of(v), 0, "{v}");
+        }
+        // u64::MAX-scale values saturate into the top bucket instead of
+        // indexing out of range.
+        assert_eq!(Hist::bucket_of(u64::MAX as f64), HIST_BUCKETS - 1);
+        assert_eq!(Hist::bucket_of((1u64 << 63) as f64), HIST_BUCKETS - 1);
+        assert_eq!(Hist::bucket_of((1u64 << 63) as f64 - 1_000_000.0), HIST_BUCKETS - 2);
+    }
+
+    #[test]
+    fn merge_adds_bucket_wise_and_respects_lazy_allocation() {
+        let mut a = Hist::default();
+        let mut b = Hist::default();
+        for v in [0.5, 3.0, 1024.0] {
+            a.observe(v);
+        }
+        for v in [3.5, 2.0e18] {
+            b.observe(v);
+        }
+        // Merging an empty histogram is a no-op (no allocation either).
+        let empty = Hist::default();
+        a.merge(&empty);
+        assert_eq!(a.count, 3);
+        // Empty absorbs a populated one.
+        let mut c = Hist::default();
+        c.merge(&a);
+        c.merge(&b);
+        assert_eq!(c.count, 5);
+        assert_eq!(c.buckets[0], 1); // 0.5
+        assert_eq!(c.buckets[2], 2); // 3.0, 3.5
+        assert_eq!(c.buckets[11], 1); // 1024
+        assert_eq!(c.buckets[Hist::bucket_of(2.0e18)], 1);
+        // Merge equals observing the union stream.
+        let mut whole = Hist::default();
+        for v in [0.5, 3.0, 1024.0, 3.5, 2.0e18] {
+            whole.observe(v);
+        }
+        assert_eq!(c.to_json().dump(), whole.to_json().dump());
     }
 
     #[test]

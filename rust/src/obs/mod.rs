@@ -14,7 +14,9 @@
 
 pub mod log;
 pub mod metrics;
+pub mod sketch;
 pub mod span;
+pub mod telemetry;
 pub mod trace;
 
 use crate::util::json::Json;

@@ -1,0 +1,394 @@
+//! Bounded-memory streaming summaries for fleet telemetry (DESIGN.md
+//! §12): a count-min sketch for per-context counters, a hyperloglog for
+//! distinct-context cardinality, and a space-saving top-K table for hot
+//! contexts. The fleet-scale analogue of the paper's compressed on-chip
+//! metadata: the hot, frequently-queried state stays small and the cold
+//! tail is approximated.
+//!
+//! Determinism contract: every hash derives from [`mix64`] under the
+//! fixed salts below — zero RNG draws, so recording is a pure function
+//! of the update stream. [`CountMin::merge`] (cell-wise add) and
+//! [`Hll::merge`] (register max) are associative and commutative;
+//! [`TopK::merged`] unions *all* shards and truncates once, so a fleet
+//! summary is invariant to the order cells are folded in.
+
+use crate::util::rng::mix64;
+
+/// Per-row salts for the count-min hash family (splitmix64 of 1..=8 —
+/// fixed constants, never drawn from a run's RNG streams).
+pub const CMS_ROW_SALTS: [u64; 8] = [
+    0x910A_2DEC_8902_5CC1,
+    0x6C45_E439_30E6_4F9D,
+    0xF04E_00A7_A5E4_5E67,
+    0x9B0B_CE16_41B9_1A3E,
+    0x1F67_5F99_1C44_53DB,
+    0xF4BE_B951_B9DD_4B57,
+    0x66D4_8AA0_E597_BE1B,
+    0x00D9_9375_0AD2_F6D5,
+];
+
+/// Salt for the hyperloglog register hash.
+pub const HLL_SALT: u64 = 0x5EED_CA2D_1A11_7E1E;
+
+/// Count-min sketch: `depth` rows of `width` u32 counters; a key's
+/// estimate is the minimum of its cells, so errors are one-sided
+/// (over-estimates only, by at most `2·N/width` with probability
+/// `1 − 2^-depth` for N total insertions).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CountMin {
+    width: usize,
+    depth: usize,
+    cells: Vec<u32>,
+    /// Exact total weight inserted (each row sums to this; kept as a
+    /// counter so callers don't pay a row scan).
+    total: u64,
+}
+
+impl CountMin {
+    /// `depth` is capped by the fixed salt family (8 rows).
+    pub fn new(width: usize, depth: usize) -> CountMin {
+        assert!(width >= 1, "count-min width must be ≥ 1");
+        assert!(
+            (1..=CMS_ROW_SALTS.len()).contains(&depth),
+            "count-min depth must be in 1..={}",
+            CMS_ROW_SALTS.len()
+        );
+        CountMin { width, depth, cells: vec![0; width * depth], total: 0 }
+    }
+
+    #[inline]
+    fn cell(&self, row: usize, key: u64) -> usize {
+        row * self.width + (mix64(key ^ CMS_ROW_SALTS[row]) % self.width as u64) as usize
+    }
+
+    /// Add `n` to `key`'s count (cells saturate at `u32::MAX`).
+    pub fn add(&mut self, key: u64, n: u32) {
+        for row in 0..self.depth {
+            let c = self.cell(row, key);
+            self.cells[c] = self.cells[c].saturating_add(n);
+        }
+        self.total += n as u64;
+    }
+
+    /// Point estimate for `key` (min over rows; never under-counts).
+    pub fn estimate(&self, key: u64) -> u64 {
+        (0..self.depth).map(|row| self.cells[self.cell(row, key)] as u64).min().unwrap_or(0)
+    }
+
+    /// Exact total weight inserted across all keys.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Cell-wise add — associative and commutative, so shard merges are
+    /// fold-order invariant. Panics on geometry mismatch (shards share
+    /// one config by construction).
+    pub fn merge(&mut self, other: &CountMin) {
+        assert_eq!(
+            (self.width, self.depth),
+            (other.width, other.depth),
+            "count-min merge: geometry mismatch"
+        );
+        for (a, b) in self.cells.iter_mut().zip(&other.cells) {
+            *a = a.saturating_add(*b);
+        }
+        self.total += other.total;
+    }
+
+    /// Fraction of non-zero cells (1.0 = saturated hash space).
+    pub fn fill_ratio(&self) -> f64 {
+        if self.cells.is_empty() {
+            return 0.0;
+        }
+        self.cells.iter().filter(|&&c| c > 0).count() as f64 / self.cells.len() as f64
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.cells.len() * std::mem::size_of::<u32>()) as u64
+    }
+}
+
+/// HyperLogLog distinct counter with `2^p` one-byte registers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Hll {
+    p: u32,
+    regs: Vec<u8>,
+}
+
+impl Hll {
+    /// `p` in 4..=16 (16 B .. 64 KB of registers).
+    pub fn new(p: u32) -> Hll {
+        assert!((4..=16).contains(&p), "hyperloglog precision must be in 4..=16");
+        Hll { p, regs: vec![0; 1 << p] }
+    }
+
+    pub fn add(&mut self, key: u64) {
+        let h = mix64(key ^ HLL_SALT);
+        let idx = (h >> (64 - self.p)) as usize;
+        // Rank = position of the first set bit in the remaining 64−p
+        // bits (1-based), capped so an all-zero suffix still counts.
+        let rest = h << self.p;
+        let rank = if rest == 0 { 64 - self.p + 1 } else { rest.leading_zeros() + 1 } as u8;
+        if rank > self.regs[idx] {
+            self.regs[idx] = rank;
+        }
+    }
+
+    /// Standard HLL estimate with the small-range (linear counting)
+    /// correction.
+    pub fn estimate(&self) -> f64 {
+        let m = self.regs.len() as f64;
+        let alpha = match self.regs.len() {
+            16 => 0.673,
+            32 => 0.697,
+            64 => 0.709,
+            _ => 0.7213 / (1.0 + 1.079 / m),
+        };
+        let sum: f64 = self.regs.iter().map(|&r| 2f64.powi(-(r as i32))).sum();
+        let raw = alpha * m * m / sum;
+        let zeros = self.regs.iter().filter(|&&r| r == 0).count();
+        if raw <= 2.5 * m && zeros > 0 {
+            m * (m / zeros as f64).ln()
+        } else {
+            raw
+        }
+    }
+
+    /// Register-wise max — associative, commutative, idempotent.
+    pub fn merge(&mut self, other: &Hll) {
+        assert_eq!(self.p, other.p, "hyperloglog merge: precision mismatch");
+        for (a, &b) in self.regs.iter_mut().zip(&other.regs) {
+            *a = (*a).max(b);
+        }
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.regs.len() as u64
+    }
+}
+
+/// Space-saving top-K heavy hitters: at most `k` (key, count) entries;
+/// an overflowing new key evicts the current minimum and inherits its
+/// count + 1 (the classic over-estimate bound). All tie-breaks are on
+/// the key value, so the table is a pure function of the update stream.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TopK {
+    k: usize,
+    entries: Vec<(u64, u64)>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> TopK {
+        assert!(k >= 1, "top-k capacity must be ≥ 1");
+        TopK { k, entries: Vec::new() }
+    }
+
+    /// Record one occurrence of `key`.
+    pub fn offer(&mut self, key: u64) {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.0 == key) {
+            e.1 += 1;
+            return;
+        }
+        if self.entries.len() < self.k {
+            self.entries.push((key, 1));
+            return;
+        }
+        // Evict the minimum count; ties break to the largest key so the
+        // victim is unique and deterministic.
+        let (i, &(_, min)) = self
+            .entries
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| a.1.cmp(&b.1).then(b.0.cmp(&a.0)))
+            .expect("k ≥ 1");
+        self.entries[i] = (key, min + 1);
+    }
+
+    /// Entries sorted hottest-first (count desc, key asc).
+    pub fn top(&self) -> Vec<(u64, u64)> {
+        let mut out = self.entries.clone();
+        out.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        out
+    }
+
+    /// Merge any number of shards: union-sum every entry across *all*
+    /// inputs, then truncate once to the capacity of the first. One
+    /// union + one truncation — a permutation of `parts` cannot change
+    /// the result, which pairwise fold-with-truncate could not
+    /// guarantee.
+    pub fn merged(parts: &[&TopK]) -> TopK {
+        let k = parts.first().map_or(1, |t| t.k);
+        let mut union: Vec<(u64, u64)> = Vec::new();
+        for part in parts {
+            for &(key, count) in &part.entries {
+                match union.iter_mut().find(|e| e.0 == key) {
+                    Some(e) => e.1 += count,
+                    None => union.push((key, count)),
+                }
+            }
+        }
+        union.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        union.truncate(k);
+        TopK { k, entries: union }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Capacity bytes: k × (key + count).
+    pub fn bytes(&self) -> u64 {
+        (self.k * 16) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_min_never_undercounts_and_is_exact_when_sparse() {
+        let mut cm = CountMin::new(512, 4);
+        for key in 0..64u64 {
+            cm.add(key, (key + 1) as u32);
+        }
+        for key in 0..64u64 {
+            let est = cm.estimate(key);
+            assert!(est >= key + 1, "under-count for {key}: {est}");
+            // 64 keys into 512×4 cells: collisions are essentially
+            // impossible per-row across 4 rows' min.
+            assert_eq!(est, key + 1, "sparse sketch must be exact");
+        }
+        assert_eq!(cm.estimate(999), 0);
+        assert_eq!(cm.total(), (1..=64).sum::<u64>());
+        assert!(cm.fill_ratio() > 0.0 && cm.fill_ratio() < 0.2);
+    }
+
+    #[test]
+    fn count_min_merge_equals_single_stream_and_is_order_invariant() {
+        let stream: Vec<u64> = (0..3000u64).map(|i| mix64(i) % 200).collect();
+        let mut whole = CountMin::new(128, 4);
+        let mut shards: Vec<CountMin> = (0..3).map(|_| CountMin::new(128, 4)).collect();
+        for (i, &key) in stream.iter().enumerate() {
+            whole.add(key, 1);
+            shards[i % 3].add(key, 1);
+        }
+        // Merge is cell-wise add: any fold order gives the whole-stream
+        // sketch exactly.
+        let mut abc = shards[0].clone();
+        abc.merge(&shards[1]);
+        abc.merge(&shards[2]);
+        let mut cab = shards[2].clone();
+        cab.merge(&shards[0]);
+        cab.merge(&shards[1]);
+        assert_eq!(abc, whole);
+        assert_eq!(cab, whole);
+    }
+
+    #[test]
+    fn count_min_saturates_instead_of_wrapping() {
+        let mut cm = CountMin::new(4, 1);
+        cm.add(7, u32::MAX);
+        cm.add(7, 10);
+        assert_eq!(cm.estimate(7), u32::MAX as u64);
+    }
+
+    #[test]
+    fn hll_estimates_within_a_few_percent() {
+        let mut h = Hll::new(12);
+        let n = 20_000u64;
+        for i in 0..n {
+            h.add(mix64(i));
+            h.add(mix64(i)); // duplicates must not inflate
+        }
+        let est = h.estimate();
+        let err = (est - n as f64).abs() / n as f64;
+        assert!(err < 0.05, "hll err {err:.3} (est {est:.0} vs {n})");
+    }
+
+    #[test]
+    fn hll_small_range_is_near_exact() {
+        let mut h = Hll::new(10);
+        for i in 0..50u64 {
+            h.add(i);
+        }
+        let est = h.estimate();
+        assert!((est - 50.0).abs() < 3.0, "linear-counting range est {est}");
+    }
+
+    #[test]
+    fn hll_merge_is_order_invariant_and_matches_union() {
+        let mut whole = Hll::new(10);
+        let mut a = Hll::new(10);
+        let mut b = Hll::new(10);
+        let mut c = Hll::new(10);
+        for i in 0..9_000u64 {
+            whole.add(i);
+            match i % 3 {
+                0 => a.add(i),
+                1 => b.add(i),
+                _ => c.add(i),
+            }
+        }
+        let mut abc = a.clone();
+        abc.merge(&b);
+        abc.merge(&c);
+        let mut bca = b.clone();
+        bca.merge(&c);
+        bca.merge(&a);
+        assert_eq!(abc, whole, "register-max union must equal the whole stream");
+        assert_eq!(bca, whole);
+    }
+
+    #[test]
+    fn topk_finds_heavy_hitters() {
+        let mut t = TopK::new(4);
+        // Heavy: 100, 200, 300 with descending weight; noise keys once.
+        for i in 0..300u64 {
+            t.offer(100);
+            if i < 200 {
+                t.offer(200);
+            }
+            if i < 100 {
+                t.offer(300);
+            }
+            t.offer(1_000 + i);
+        }
+        let top = t.top();
+        assert_eq!(top[0].0, 100);
+        assert_eq!(top[1].0, 200);
+        assert_eq!(top[2].0, 300);
+        // Space-saving over-estimates, never under-estimates.
+        assert!(top[0].1 >= 300);
+        assert!(t.len() <= 4);
+    }
+
+    #[test]
+    fn topk_merged_is_permutation_invariant() {
+        let mut shards: Vec<TopK> = (0..4).map(|_| TopK::new(8)).collect();
+        for i in 0..2_000u64 {
+            shards[(i % 4) as usize].offer(mix64(i) % 50);
+        }
+        let refs: Vec<&TopK> = shards.iter().collect();
+        let base = TopK::merged(&refs);
+        let perm: Vec<&TopK> = vec![&shards[2], &shards[0], &shards[3], &shards[1]];
+        assert_eq!(TopK::merged(&perm), base);
+        assert_eq!(base.len(), 8);
+        // Sorted hottest-first with deterministic tie-break.
+        let top = base.top();
+        for w in top.windows(2) {
+            assert!(w[0].1 > w[1].1 || (w[0].1 == w[1].1 && w[0].0 < w[1].0));
+        }
+    }
+
+    #[test]
+    fn bytes_accounting_matches_geometry() {
+        assert_eq!(CountMin::new(256, 4).bytes(), 256 * 4 * 4);
+        assert_eq!(Hll::new(10).bytes(), 1024);
+        assert_eq!(TopK::new(16).bytes(), 256);
+    }
+}

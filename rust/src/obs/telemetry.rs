@@ -1,0 +1,447 @@
+//! Sketch telemetry aggregator (DESIGN.md §12): bundles the streaming
+//! summaries of [`super::sketch`] into the per-run recorder the engine
+//! threads through a simulation — per-context prefetch issue / useful /
+//! useless counts in three count-min sketches, distinct-context
+//! cardinality in a hyperloglog, hot contexts in a space-saving top-K —
+//! plus the exact-vs-sketch comparison tallies behind the
+//! `campaign_sketch` accuracy report.
+//!
+//! The `telemetry` knob (`SimConfig` / `ClusterSpec`) selects the mode:
+//! `"exact"` (the default) allocates nothing and is byte-identical to
+//! pre-sketch builds; `"sketch[:GEOM]"` derives the controller's
+//! decision context from sketch estimates instead of the exact EWMAs;
+//! `"compare[:GEOM]"` keeps exact decisions while scoring a sketch-fed
+//! shadow per decision, measuring feature error and decision agreement
+//! on one trajectory. GEOM is `w{width}d{depth}p{hll_p}k{topk}`, e.g.
+//! `w256d4p10k16`.
+
+use super::sketch::{CountMin, Hll, TopK};
+use crate::util::hashfx::FxHashSet;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// How telemetry participates in a run (the `"exact"` mode is the
+/// *absence* of a [`Telemetry`] — nothing is allocated or recorded).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TelemetryMode {
+    /// Sketch estimates replace the exact EWMAs in the controller's
+    /// decision context.
+    Sketch,
+    /// Exact values drive decisions; a sketch-fed shadow score is
+    /// compared per decision (agreement + feature error, zero extra RNG
+    /// draws, zero perturbation of the run).
+    Compare,
+}
+
+/// Sketch geometry + mode, parsed from the `telemetry` knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TelemetryCfg {
+    pub mode: TelemetryMode,
+    /// Count-min width (columns per row), shared by all three sketches.
+    pub width: usize,
+    /// Count-min depth (rows).
+    pub depth: usize,
+    /// HyperLogLog precision (2^p registers).
+    pub hll_p: u32,
+    /// Heavy-hitter table capacity.
+    pub topk: usize,
+}
+
+/// Default geometry: 3 × (256×4 u32) + 2^10 B + 16×16 B ≈ 13.5 KB.
+pub const DEFAULT_GEOM: (usize, usize, u32, usize) = (256, 4, 10, 16);
+
+impl TelemetryCfg {
+    /// Parse the full knob: `"exact"` → `None`, `"sketch[:GEOM]"` /
+    /// `"compare[:GEOM]"` → `Some(cfg)`.
+    pub fn parse(s: &str) -> Result<Option<TelemetryCfg>> {
+        let (mode_str, geom) = match s.split_once(':') {
+            Some((m, g)) => (m, Some(g)),
+            None => (s, None),
+        };
+        let mode = match mode_str {
+            "exact" => {
+                if geom.is_some() {
+                    bail!("telemetry 'exact' takes no sketch geometry (got '{s}')");
+                }
+                return Ok(None);
+            }
+            "sketch" => TelemetryMode::Sketch,
+            "compare" => TelemetryMode::Compare,
+            other => bail!(
+                "unknown telemetry mode '{other}' (expected 'exact', \
+                 'sketch[:GEOM]', or 'compare[:GEOM]')"
+            ),
+        };
+        let (width, depth, hll_p, topk) = match geom {
+            Some(g) => Self::parse_geom(g)?,
+            None => DEFAULT_GEOM,
+        };
+        Ok(Some(TelemetryCfg { mode, width, depth, hll_p, topk }))
+    }
+
+    /// Parse a geometry string `w{width}d{depth}p{hll_p}k{topk}`.
+    pub fn parse_geom(g: &str) -> Result<(usize, usize, u32, usize)> {
+        let err = || format!("telemetry geometry '{g}' (expected w<width>d<depth>p<p>k<k>)");
+        let rest = g.strip_prefix('w').with_context(err)?;
+        let (w, rest) = rest.split_once('d').with_context(err)?;
+        let (d, rest) = rest.split_once('p').with_context(err)?;
+        let (p, k) = rest.split_once('k').with_context(err)?;
+        let width: usize = w.parse().with_context(err)?;
+        let depth: usize = d.parse().with_context(err)?;
+        let hll_p: u32 = p.parse().with_context(err)?;
+        let topk: usize = k.parse().with_context(err)?;
+        if width == 0 || !(1..=8).contains(&depth) || !(4..=16).contains(&hll_p) || topk == 0 {
+            bail!(
+                "telemetry geometry '{g}' out of range (width ≥ 1, depth 1..=8, \
+                 p 4..=16, k ≥ 1)"
+            );
+        }
+        Ok((width, depth, hll_p, topk))
+    }
+
+    /// Canonical geometry label (also valid `parse_geom` input).
+    pub fn geom_label(&self) -> String {
+        format!("w{}d{}p{}k{}", self.width, self.depth, self.hll_p, self.topk)
+    }
+
+    /// Canonical knob string (`"sketch:GEOM"` / `"compare:GEOM"`).
+    pub fn label(&self) -> String {
+        let mode = match self.mode {
+            TelemetryMode::Sketch => "sketch",
+            TelemetryMode::Compare => "compare",
+        };
+        format!("{mode}:{}", self.geom_label())
+    }
+}
+
+/// Sketch-derived substitutes for the exact decision-context EWMAs
+/// ([`crate::ml::features::sketch_ctx`] splices them into a
+/// `DecisionCtx`).
+#[derive(Clone, Copy, Debug)]
+pub struct CtxEstimates {
+    pub hit: f32,
+    pub pollution: f32,
+    pub accuracy: f32,
+}
+
+/// Per-run sketch telemetry: the three per-context counters, the
+/// cardinality and heavy-hitter summaries, and (compare mode) the
+/// exact-vs-sketch tallies. Carried on
+/// [`crate::sim::engine::SimResult::telemetry`] after the run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Telemetry {
+    pub cfg: TelemetryCfg,
+    /// Prefetches issued, by source context.
+    pub issued: CountMin,
+    /// Useful outcomes (timely + late), by source context.
+    pub useful: CountMin,
+    /// Useless outcomes (evicted unused), by source context.
+    pub useless: CountMin,
+    /// Distinct source contexts seen.
+    pub contexts: Hll,
+    /// Hottest source contexts by issue count.
+    pub hot: TopK,
+    /// Exact distinct contexts (compare-mode diagnostic only — this is
+    /// the unbounded state the sketches replace, kept to price it).
+    pub exact_srcs: FxHashSet<u64>,
+    /// Decisions where exact and sketch scores were compared.
+    pub decisions_compared: u64,
+    /// ... of which both sides agreed on issue-vs-skip.
+    pub decisions_agreed: u64,
+    /// Σ |exact − sketch| over substituted feature values.
+    pub feature_err_sum: f64,
+    /// Substituted feature values compared.
+    pub feature_err_n: u64,
+}
+
+impl Telemetry {
+    pub fn new(cfg: TelemetryCfg) -> Telemetry {
+        Telemetry {
+            issued: CountMin::new(cfg.width, cfg.depth),
+            useful: CountMin::new(cfg.width, cfg.depth),
+            useless: CountMin::new(cfg.width, cfg.depth),
+            contexts: Hll::new(cfg.hll_p),
+            hot: TopK::new(cfg.topk),
+            exact_srcs: FxHashSet::default(),
+            decisions_compared: 0,
+            decisions_agreed: 0,
+            feature_err_sum: 0.0,
+            feature_err_n: 0,
+            cfg,
+        }
+    }
+
+    /// Build from a `telemetry` knob string (`None` for `"exact"`).
+    pub fn from_knob(s: &str) -> Result<Option<Telemetry>> {
+        Ok(TelemetryCfg::parse(s)?.map(Telemetry::new))
+    }
+
+    /// One prefetch issued from source context `src`.
+    pub fn record_issue(&mut self, src: u64) {
+        self.issued.add(src, 1);
+        self.contexts.add(src);
+        self.hot.offer(src);
+        if self.cfg.mode == TelemetryMode::Compare {
+            self.exact_srcs.insert(src);
+        }
+    }
+
+    /// One resolved prefetch outcome for source context `src`.
+    pub fn record_outcome(&mut self, src: u64, useful: bool) {
+        if useful {
+            self.useful.add(src, 1);
+        } else {
+            self.useless.add(src, 1);
+        }
+    }
+
+    /// Sketch-backed decision-context estimates for `src`. Mirrors what
+    /// the exact path tracks: hit and accuracy EWMAs share one update
+    /// rule there, so both map to the useful-outcome rate; pollution is
+    /// the useless-fill rate per issue.
+    pub fn estimates(&self, src: u64) -> CtxEstimates {
+        let useful = self.useful.estimate(src);
+        let useless = self.useless.estimate(src);
+        let issued = self.issued.estimate(src);
+        let outcomes = useful + useless;
+        // Priors match the exact EWMAs' initial values (0.5 / 0.0) so a
+        // cold context scores identically under both sources.
+        let rate = if outcomes == 0 { 0.5 } else { useful as f32 / outcomes as f32 };
+        let pollution = if issued == 0 { 0.0 } else { (useless as f32 / issued as f32).min(1.0) };
+        CtxEstimates { hit: rate, pollution, accuracy: rate }
+    }
+
+    /// Compare-mode tally: whether exact and sketch sides agreed, plus
+    /// the absolute error of each substituted feature value.
+    pub fn tally_shadow(&mut self, agree: bool, exact: &[f32], sketch: &[f32]) {
+        self.decisions_compared += 1;
+        self.decisions_agreed += agree as u64;
+        for (a, b) in exact.iter().zip(sketch) {
+            self.feature_err_sum += (a - b).abs() as f64;
+            self.feature_err_n += 1;
+        }
+    }
+
+    /// Fraction of compared decisions where both sides agreed.
+    pub fn agreement(&self) -> Option<f64> {
+        (self.decisions_compared > 0)
+            .then(|| self.decisions_agreed as f64 / self.decisions_compared as f64)
+    }
+
+    /// Mean absolute error over substituted feature values.
+    pub fn feature_mae(&self) -> Option<f64> {
+        (self.feature_err_n > 0).then(|| self.feature_err_sum / self.feature_err_n as f64)
+    }
+
+    /// Sketch footprint: the three count-min sketches + HLL registers +
+    /// heavy-hitter table (the bounded state a deployment would ship).
+    pub fn bytes(&self) -> u64 {
+        self.issued.bytes()
+            + self.useful.bytes()
+            + self.useless.bytes()
+            + self.contexts.bytes()
+            + self.hot.bytes()
+    }
+
+    /// What exact per-context counters would cost: one u64 each for
+    /// issued / useful / useless per distinct context. Compare mode only
+    /// (it is the only mode that still tracks the exact context set).
+    pub fn exact_counter_bytes(&self) -> Option<u64> {
+        (self.cfg.mode == TelemetryMode::Compare)
+            .then(|| self.exact_srcs.len() as u64 * 3 * 8)
+    }
+
+    /// Merge any number of per-cell telemetries into a fleet summary.
+    /// Count-min and HLL merges are associative; the heavy-hitter union
+    /// is done across all parts with a single truncation — so the
+    /// result is invariant to the order cells are listed... provided the
+    /// caller passes a deterministically-ordered slice (cells are in
+    /// expansion order everywhere in this codebase).
+    pub fn merged(parts: &[&Telemetry]) -> Option<Telemetry> {
+        let (first, rest) = parts.split_first()?;
+        let mut out = (*first).clone();
+        for t in rest {
+            assert_eq!(out.cfg.geom_label(), t.cfg.geom_label(), "telemetry merge geometry");
+            out.issued.merge(&t.issued);
+            out.useful.merge(&t.useful);
+            out.useless.merge(&t.useless);
+            out.contexts.merge(&t.contexts);
+            out.exact_srcs.extend(t.exact_srcs.iter().copied());
+            out.decisions_compared += t.decisions_compared;
+            out.decisions_agreed += t.decisions_agreed;
+            out.feature_err_sum += t.feature_err_sum;
+            out.feature_err_n += t.feature_err_n;
+        }
+        out.hot = TopK::merged(&parts.iter().map(|t| &t.hot).collect::<Vec<_>>());
+        Some(out)
+    }
+
+    /// Sorted-shape summary object for the metrics JSONL stream and the
+    /// campaign store (keys emitted in one fixed order; contexts as hex
+    /// strings so u64 values survive the f64 JSON number range).
+    pub fn summary_json(&self) -> Json {
+        let topk = self
+            .hot
+            .top()
+            .into_iter()
+            .map(|(ctx, n)| {
+                Json::obj(vec![
+                    ("ctx", Json::str(&format!("{ctx:#x}"))),
+                    ("est", Json::num(n as f64)),
+                ])
+            })
+            .collect();
+        let mut fields = vec![
+            ("mode", Json::str(&self.cfg.label())),
+            ("bytes", Json::num(self.bytes() as f64)),
+            ("cms_fill", Json::num(self.issued.fill_ratio())),
+            ("contexts_est", Json::num(self.contexts.estimate().round())),
+            ("issued", Json::num(self.issued.total() as f64)),
+            ("useful", Json::num(self.useful.total() as f64)),
+            ("useless", Json::num(self.useless.total() as f64)),
+            ("topk", Json::Arr(topk)),
+        ];
+        if self.cfg.mode == TelemetryMode::Compare {
+            fields.push(("contexts_exact", Json::num(self.exact_srcs.len() as f64)));
+            fields.push((
+                "exact_bytes",
+                Json::num(self.exact_counter_bytes().unwrap_or(0) as f64),
+            ));
+            fields.push(("decisions", Json::num(self.decisions_compared as f64)));
+            fields.push(("agreement", Json::num(self.agreement().unwrap_or(1.0))));
+            fields.push(("feature_mae", Json::num(self.feature_mae().unwrap_or(0.0))));
+        }
+        Json::obj(fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knob_parsing_covers_modes_and_rejects_garbage() {
+        assert!(TelemetryCfg::parse("exact").unwrap().is_none());
+        let s = TelemetryCfg::parse("sketch").unwrap().unwrap();
+        assert_eq!(s.mode, TelemetryMode::Sketch);
+        assert_eq!((s.width, s.depth, s.hll_p, s.topk), DEFAULT_GEOM);
+        let c = TelemetryCfg::parse("compare:w128d3p8k9").unwrap().unwrap();
+        assert_eq!(c.mode, TelemetryMode::Compare);
+        assert_eq!((c.width, c.depth, c.hll_p, c.topk), (128, 3, 8, 9));
+        // label round-trips through parse.
+        assert_eq!(TelemetryCfg::parse(&c.label()).unwrap().unwrap(), c);
+        assert_eq!(c.geom_label(), "w128d3p8k9");
+        for bad in [
+            "psychic",
+            "sketch:128x4",
+            "sketch:w0d4p10k16",
+            "sketch:w64d9p10k16",
+            "sketch:w64d4p3k16",
+            "sketch:w64d4p17k16",
+            "sketch:w64d4p10k0",
+            "exact:w64d4p10k16",
+        ] {
+            assert!(TelemetryCfg::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    fn recorded(mode: &str) -> Telemetry {
+        let mut t = Telemetry::from_knob(mode).unwrap().unwrap();
+        for i in 0..200u64 {
+            let src = i % 10;
+            t.record_issue(src);
+            t.record_outcome(src, src < 7);
+        }
+        t
+    }
+
+    #[test]
+    fn estimates_track_the_recorded_ratios() {
+        let t = recorded("sketch:w256d4p10k16");
+        // src 3: always useful; src 9: never.
+        let good = t.estimates(3);
+        let bad = t.estimates(9);
+        assert!(good.hit > 0.99 && good.accuracy > 0.99);
+        assert!(bad.hit < 0.01 && bad.pollution > 0.99);
+        // Cold context falls back to the exact-EWMA priors.
+        let cold = t.estimates(0xDEAD_BEEF);
+        assert_eq!(cold.hit, 0.5);
+        assert_eq!(cold.pollution, 0.0);
+        // Cardinality and totals are sane.
+        assert!((t.contexts.estimate() - 10.0).abs() < 1.5);
+        assert_eq!(t.issued.total(), 200);
+        assert_eq!(t.hot.top().len(), 10);
+    }
+
+    #[test]
+    fn compare_mode_tallies_and_prices_exact_state() {
+        let mut t = recorded("compare:w256d4p10k16");
+        assert_eq!(t.exact_srcs.len(), 10);
+        assert_eq!(t.exact_counter_bytes(), Some(10 * 24));
+        assert!(t.agreement().is_none(), "no decisions compared yet");
+        t.tally_shadow(true, &[0.5, 0.0, 0.5], &[0.6, 0.0, 0.6]);
+        t.tally_shadow(false, &[0.5, 0.0, 0.5], &[0.5, 0.0, 0.5]);
+        assert_eq!(t.agreement(), Some(0.5));
+        let mae = t.feature_mae().unwrap();
+        assert!((mae - 0.2 / 6.0).abs() < 1e-9, "mae {mae}");
+        // Sketch mode does not pay for the exact context set.
+        let s = recorded("sketch");
+        assert!(s.exact_srcs.is_empty());
+        assert_eq!(s.exact_counter_bytes(), None);
+    }
+
+    #[test]
+    fn merged_fleet_summary_equals_single_stream() {
+        let cfg = TelemetryCfg::parse("sketch:w128d4p10k8").unwrap().unwrap();
+        let mut whole = Telemetry::new(cfg);
+        let mut shards: Vec<Telemetry> = (0..3).map(|_| Telemetry::new(cfg)).collect();
+        for i in 0..900u64 {
+            let src = crate::util::rng::mix64(i) % 40;
+            whole.record_issue(src);
+            whole.record_outcome(src, i % 3 == 0);
+            let s = &mut shards[(i % 3) as usize];
+            s.record_issue(src);
+            s.record_outcome(src, i % 3 == 0);
+        }
+        let refs: Vec<&Telemetry> = shards.iter().collect();
+        let merged = Telemetry::merged(&refs).unwrap();
+        // Count-min / HLL merges are exact unions; the heavy-hitter
+        // union is near the whole-stream table (same hot set).
+        assert_eq!(merged.issued, whole.issued);
+        assert_eq!(merged.useful, whole.useful);
+        assert_eq!(merged.useless, whole.useless);
+        assert_eq!(merged.contexts, whole.contexts);
+        assert_eq!(merged.bytes(), whole.bytes());
+        // Permutation invariance of the single-truncation union.
+        let perm: Vec<&Telemetry> = vec![&shards[2], &shards[0], &shards[1]];
+        let remerged = Telemetry::merged(&perm).unwrap();
+        assert_eq!(remerged.hot, merged.hot);
+        assert_eq!(remerged.summary_json().dump(), {
+            let mut m = merged.clone();
+            // Set iteration order is irrelevant to the summary.
+            m.exact_srcs = remerged.exact_srcs.clone();
+            m.summary_json().dump()
+        });
+        assert!(Telemetry::merged(&[]).is_none());
+    }
+
+    #[test]
+    fn summary_json_is_stable_and_carries_the_documented_keys() {
+        let t = recorded("compare:w64d2p8k4");
+        let a = t.summary_json().dump();
+        assert_eq!(a, t.summary_json().dump());
+        for key in [
+            "\"mode\"",
+            "\"bytes\"",
+            "\"cms_fill\"",
+            "\"contexts_est\"",
+            "\"topk\"",
+            "\"agreement\"",
+            "\"exact_bytes\"",
+            "\"feature_mae\"",
+        ] {
+            assert!(a.contains(key), "summary missing {key}: {a}");
+        }
+        assert!(a.contains("compare:w64d2p8k4"));
+    }
+}

@@ -16,6 +16,7 @@ use super::inflight::{Inflight, InflightEntry, PrefetchMatch};
 use super::stats::SimStats;
 use crate::config::{PrefetcherKind, SimConfig};
 use crate::ml::controller::OnlineController;
+use crate::obs::telemetry::Telemetry;
 use crate::prefetch::{self, Candidate, Feedback, Outcome, PairStats, Prefetcher};
 use crate::trace::{Kind, Record};
 use crate::util::hashfx::FxHashMap;
@@ -45,6 +46,11 @@ pub struct SimResult {
     /// the raw material for empirical service-time distributions
     /// (DESIGN.md §8).
     pub segments: Option<Vec<f64>>,
+    /// Sketch telemetry summaries (`Some` only when `SimConfig::telemetry`
+    /// is not `"exact"`) — per-context prefetch counters, cardinality,
+    /// and heavy hitters, plus compare-mode accuracy tallies
+    /// (DESIGN.md §12).
+    pub telemetry: Option<Box<Telemetry>>,
 }
 
 impl SimResult {
@@ -89,6 +95,8 @@ pub struct Engine<'t> {
     seg_prev_ctx: Option<u8>,
     seg_mark: f64,
     segments: Vec<f64>,
+    /// Sketch telemetry (None = exact mode, the baseline path).
+    telemetry: Option<Box<Telemetry>>,
 }
 
 impl<'t> Engine<'t> {
@@ -101,6 +109,11 @@ impl<'t> Engine<'t> {
             .clone()
             .filter(|c| c.enabled)
             .map(|c| OnlineController::new(c, cfg.seed));
+        // The knob is validated wherever configs are parsed (spec/CLI);
+        // a hand-built SimConfig with a bad string fails loudly here.
+        let telemetry = Telemetry::from_knob(&cfg.telemetry)
+            .expect("validated telemetry knob")
+            .map(Box::new);
         Engine {
             records,
             pos: 0,
@@ -130,6 +143,7 @@ impl<'t> Engine<'t> {
             seg_prev_ctx: None,
             seg_mark: 0.0,
             segments: Vec::new(),
+            telemetry,
             cfg,
         }
     }
@@ -198,6 +212,9 @@ impl<'t> Engine<'t> {
                 if let Some(c) = &mut self.controller {
                     c.on_outcome(victim.line, Outcome::Useless, false);
                 }
+                if let Some(t) = &mut self.telemetry {
+                    t.record_outcome(e.src, false);
+                }
             }
         }
         if self.victim_fifo.len() >= VICTIM_CAP {
@@ -232,6 +249,9 @@ impl<'t> Engine<'t> {
         self.l1i_fill(line, true);
         self.stats.pf_issued += 1;
         self.issued_recent += 1;
+        if let Some(t) = &mut self.telemetry {
+            t.record_issue(src);
+        }
         true
     }
 
@@ -264,6 +284,9 @@ impl<'t> Engine<'t> {
                     if let Some(c) = &mut self.controller {
                         c.on_outcome(line, Outcome::Timely, false);
                     }
+                    if let Some(t) = &mut self.telemetry {
+                        t.record_outcome(e.src, true);
+                    }
                     self.l1i_fill(line, false);
                 }
                 PrefetchMatch::Late { residual } => {
@@ -278,6 +301,9 @@ impl<'t> Engine<'t> {
                     });
                     if let Some(c) = &mut self.controller {
                         c.on_outcome(line, Outcome::Late, false);
+                    }
+                    if let Some(t) = &mut self.telemetry {
+                        t.record_outcome(e.src, true);
                     }
                     self.l1i_fill(line, false);
                 }
@@ -315,6 +341,9 @@ impl<'t> Engine<'t> {
                     if let Some(c) = &mut self.controller {
                         c.on_outcome(line, Outcome::Timely, false);
                     }
+                    if let Some(t) = &mut self.telemetry {
+                        t.record_outcome(e.src, true);
+                    }
                 }
                 (PrefetchMatch::Late { residual }, Some(e)) => {
                     self.stats.pf_late += 1;
@@ -327,6 +356,9 @@ impl<'t> Engine<'t> {
                     });
                     if let Some(c) = &mut self.controller {
                         c.on_outcome(line, Outcome::Late, false);
+                    }
+                    if let Some(t) = &mut self.telemetry {
+                        t.record_outcome(e.src, true);
                     }
                 }
                 _ => {}
@@ -345,7 +377,7 @@ impl<'t> Engine<'t> {
         self.pf.on_fetch(line, self.cycle, &mut cand_buf);
         for cand in &cand_buf {
             let issue = match &mut self.controller {
-                Some(c) => c.decide(cand, self.cycle),
+                Some(c) => c.decide_t(cand, self.cycle, self.telemetry.as_deref_mut()),
                 None => true,
             };
             if issue {
@@ -460,6 +492,7 @@ impl<'t> Engine<'t> {
             metadata_bytes: self.pf.metadata_bytes(),
             controller: self.controller.as_ref().map(|c| c.stats),
             segments: track.then_some(self.segments),
+            telemetry: self.telemetry,
         }
     }
 }
@@ -640,6 +673,62 @@ mod tests {
             tracked.stats.cycles
         );
         assert!(segs.iter().all(|s| *s >= 0.0));
+    }
+
+    #[test]
+    fn compare_telemetry_observes_without_perturbing_the_run() {
+        // DESIGN.md §12: compare mode records sketches and shadow-scores
+        // decisions but must leave timing, prefetch behavior, and
+        // controller stats bit-identical to the exact baseline.
+        let recs = trace("websearch", 60_000);
+        let base = SimConfig {
+            prefetcher: PrefetcherKind::Ceip { entries: 256, window: 8, whole_window: true },
+            controller: Some(ControllerCfg {
+                train_interval_cycles: 100_000,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let plain = run(&base, &recs);
+        assert!(plain.telemetry.is_none(), "telemetry allocated without opting in");
+        let cmp = run(&SimConfig { telemetry: "compare".into(), ..base }, &recs);
+        assert_eq!(cmp.stats.cycles, plain.stats.cycles);
+        assert_eq!(cmp.stats.pf_issued, plain.stats.pf_issued);
+        assert_eq!(cmp.stats.pf_skipped, plain.stats.pf_skipped);
+        assert_eq!(
+            cmp.controller.unwrap().issued,
+            plain.controller.unwrap().issued
+        );
+        let t = cmp.telemetry.expect("telemetry missing");
+        // Every issued prefetch was recorded (built-in next-line included).
+        assert_eq!(t.issued.total(), cmp.stats.pf_issued);
+        assert!(t.decisions_compared > 0);
+        assert!(t.agreement().is_some());
+        assert!(!t.exact_srcs.is_empty());
+        assert!(t.contexts.estimate() > 0.0);
+    }
+
+    #[test]
+    fn sketch_telemetry_is_rerun_deterministic_and_bounded() {
+        let recs = trace("social", 60_000);
+        let cfg = SimConfig {
+            prefetcher: PrefetcherKind::Ceip { entries: 256, window: 8, whole_window: true },
+            controller: Some(ControllerCfg {
+                train_interval_cycles: 100_000,
+                ..Default::default()
+            }),
+            telemetry: "sketch:w128d4p10k8".into(),
+            ..Default::default()
+        };
+        let a = run(&cfg, &recs);
+        let b = run(&cfg, &recs);
+        assert_eq!(a.stats.cycles, b.stats.cycles);
+        let (ta, tb) = (a.telemetry.unwrap(), b.telemetry.unwrap());
+        assert_eq!(ta, tb, "sketch telemetry diverged across reruns");
+        assert_eq!(ta.summary_json().dump(), tb.summary_json().dump());
+        // Bounded memory: geometry-determined, independent of the trace.
+        assert_eq!(ta.bytes(), 3 * 128 * 4 * 4 + 1024 + 8 * 16);
+        assert!(ta.exact_srcs.is_empty(), "sketch mode must not track exact contexts");
     }
 
     #[test]

@@ -20,6 +20,7 @@ fn spec() -> CampaignSpec {
         traffic: vec!["none".into()],
         clusters: Vec::new(),
         policies: vec!["reactive".into()],
+        sketch: Vec::new(),
     }
 }
 

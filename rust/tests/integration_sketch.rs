@@ -1,0 +1,116 @@
+//! Sketch-telemetry integration tests (DESIGN.md §12): (a) the
+//! `exact` knob leaves the cluster pipeline byte-identical to the
+//! pre-sketch baseline and carries no fleet payload, (b) sketch-mode
+//! fleet artifacts (tables + metrics JSONL) are byte-identical across
+//! `--threads` values, and (c) compare mode perturbs nothing while
+//! tallying the exact-vs-sketch shadow.
+
+use slofetch::cluster::{self, ClusterSpec};
+use slofetch::util::json::Json;
+use std::path::Path;
+use std::sync::OnceLock;
+
+fn base_spec() -> ClusterSpec {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/cluster_obs.json");
+    let mut spec = ClusterSpec::load(&path).expect("examples/cluster_obs.json must load");
+    spec.requests = 4_000; // keep the integration run quick
+    spec
+}
+
+fn sketch_spec() -> ClusterSpec {
+    let mut spec = base_spec();
+    spec.telemetry = "sketch:w128d4p10k8".into();
+    spec
+}
+
+/// The shipped obs spec under sketch telemetry at --threads 1 (shared
+/// across tests).
+fn sketch_outcome() -> &'static cluster::ClusterOutcome {
+    static OUT: OnceLock<cluster::ClusterOutcome> = OnceLock::new();
+    OUT.get_or_init(|| cluster::run_spec(&sketch_spec(), 1).unwrap())
+}
+
+#[test]
+fn sketch_telemetry_leaves_simulation_results_untouched() {
+    // The exact knob (the default) is the pre-sketch computation: same
+    // report bytes, no fleet payload, no fleet tables.
+    let base = cluster::run_spec(&base_spec(), 1).unwrap();
+    assert!(base.fleet.is_none(), "exact knob must not allocate sketches");
+    assert!(cluster::fleet_report(&base).is_none(), "exact run gained a fleet table");
+    assert!(cluster::fleet_topk_report(&base).is_none());
+
+    // Sketch mode only *observes*: every scenario result is bit-equal.
+    let on = sketch_outcome();
+    assert_eq!(
+        cluster::report(&base).markdown(),
+        cluster::report(on).markdown(),
+        "sketch telemetry perturbed the cluster report"
+    );
+    for (x, y) in base.scenarios.iter().zip(&on.scenarios) {
+        assert_eq!(x.p99_us.to_bits(), y.p99_us.to_bits(), "{}|{}", x.label, x.traffic);
+        assert_eq!(x.events, y.events);
+    }
+    let fleet = on.fleet.as_ref().expect("sketch run lost its fleet payload");
+    assert_eq!(fleet.cells.len(), on.ipc_cells, "one sketch per measurement cell");
+    let per_cell: u64 = fleet.cells.iter().map(|(_, _, t)| t.issued.total()).sum();
+    assert_eq!(fleet.merged.issued.total(), per_cell, "merge must preserve totals");
+}
+
+#[test]
+fn fleet_artifacts_are_thread_invariant() {
+    // threads=8 reshards the measurement cells; every fleet artifact
+    // byte must match the threads=1 run.
+    let a = sketch_outcome();
+    let b = cluster::run_spec(&sketch_spec(), 8).unwrap();
+    assert_eq!(cluster::report(a).markdown(), cluster::report(&b).markdown());
+    let table = cluster::fleet_report(a).expect("sketch run must render the fleet table");
+    assert_eq!(
+        table.markdown(),
+        cluster::fleet_report(&b).unwrap().markdown(),
+        "fleet table depends on --threads"
+    );
+    let topk = cluster::fleet_topk_report(a).expect("sketch run must render hot contexts");
+    assert_eq!(topk.markdown(), cluster::fleet_topk_report(&b).unwrap().markdown());
+    let metrics = cluster::metrics_jsonl(a);
+    assert_eq!(metrics, cluster::metrics_jsonl(&b), "fleet JSONL depends on --threads");
+    // Sanity: the JSONL carries one line per cell plus the merged
+    // summary, each valid JSON in the documented shape.
+    let fleet_lines: Vec<&str> =
+        metrics.lines().filter(|l| l.contains("\"scenario\":\"fleet\"")).collect();
+    assert_eq!(fleet_lines.len(), a.fleet.as_ref().unwrap().cells.len() + 1);
+    for line in &fleet_lines {
+        let j = Json::parse(line).expect("fleet metrics line is not valid JSON");
+        let text = j.dump();
+        assert!(text.contains("\"contexts_est\"") && text.contains("\"cell\""), "{text}");
+    }
+}
+
+#[test]
+fn compare_mode_is_a_pure_shadow() {
+    // Compare mode runs the exact path for real and the sketch path as
+    // a shadow — results stay bit-equal to the baseline while the
+    // telemetry gains the exact-side tallies.
+    let base = cluster::run_spec(&base_spec(), 1).unwrap();
+    let mut spec = base_spec();
+    spec.telemetry = "compare:w128d4p10k8".into();
+    let a = cluster::run_spec(&spec, 1).unwrap();
+    let b = cluster::run_spec(&spec, 4).unwrap();
+    assert_eq!(
+        cluster::report(&base).markdown(),
+        cluster::report(&a).markdown(),
+        "compare mode perturbed the cluster report"
+    );
+    assert_eq!(
+        cluster::fleet_report(&a).unwrap().markdown(),
+        cluster::fleet_report(&b).unwrap().markdown(),
+        "compare-mode fleet table depends on --threads"
+    );
+    assert_eq!(cluster::metrics_jsonl(&a), cluster::metrics_jsonl(&b));
+    let fleet = a.fleet.as_ref().expect("compare run lost its fleet payload");
+    for (src, pf, t) in &fleet.cells {
+        let bytes = t.exact_counter_bytes().unwrap_or_else(|| {
+            panic!("{src}|{pf}: compare-mode cell lost its exact shadow")
+        });
+        assert_eq!(bytes, t.exact_srcs.len() as u64 * 24, "{src}|{pf}");
+    }
+}
