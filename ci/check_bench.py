@@ -1,0 +1,78 @@
+#!/usr/bin/env python3
+"""Bench-trajectory gate: compare a fresh BENCH_cluster.json against the
+committed ci/BENCH_baseline.json.
+
+Usage:
+    python3 ci/check_bench.py CURRENT.json BASELINE.json [tolerance]
+
+For every scenario in the baseline's `events_per_sec` map, the current
+events/sec must be >= tolerance * baseline (default 0.85, i.e. fail on a
+>15% regression). Scenarios present only in the current file are
+reported but not gated, so adding a bench scenario never requires a
+baseline update in the same commit. The calendar-vs-heap speedup is
+printed (and gated >= `min_speedup_vs_heap` when the baseline sets it)
+so the tentpole perf claim stays enforced, not aspirational.
+
+Exit status: 0 when every gated ratio clears the floor, 1 otherwise.
+"""
+
+import json
+import sys
+
+
+def main(argv):
+    if len(argv) < 3 or len(argv) > 4:
+        print(__doc__, file=sys.stderr)
+        return 2
+    cur_path, base_path = argv[1], argv[2]
+    tolerance = float(argv[3]) if len(argv) == 4 else 0.85
+
+    with open(cur_path) as f:
+        cur = json.load(f)
+    with open(base_path) as f:
+        base = json.load(f)
+
+    cur_eps = cur.get("events_per_sec", {})
+    base_eps = base.get("events_per_sec", {})
+    speedups = cur.get("speedup_vs_heap", {})
+    min_speedup = base.get("min_speedup_vs_heap")
+
+    failures = []
+    print(f"bench gate: tolerance {tolerance:.2f}x of baseline ({base_path})")
+    for name in sorted(base_eps):
+        floor = base_eps[name]
+        got = cur_eps.get(name)
+        if got is None:
+            failures.append(f"{name}: missing from {cur_path}")
+            continue
+        ratio = got / floor if floor > 0 else float("inf")
+        verdict = "ok" if ratio >= tolerance else "FAIL"
+        line = (
+            f"  {name:<22} {got / 1e6:8.2f}M ev/s  baseline {floor / 1e6:8.2f}M"
+            f"  ratio {ratio:5.2f}x  {verdict}"
+        )
+        if name in speedups:
+            line += f"  (calendar/heap {speedups[name]:.2f}x)"
+        print(line)
+        if ratio < tolerance:
+            failures.append(f"{name}: {ratio:.2f}x < {tolerance:.2f}x floor")
+        if min_speedup is not None and name in speedups:
+            if speedups[name] < min_speedup:
+                failures.append(
+                    f"{name}: calendar/heap speedup {speedups[name]:.2f}x"
+                    f" < required {min_speedup:.2f}x"
+                )
+    for name in sorted(set(cur_eps) - set(base_eps)):
+        print(f"  {name:<22} {cur_eps[name] / 1e6:8.2f}M ev/s  (no baseline, not gated)")
+
+    if failures:
+        print("bench gate: FAILED", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("bench gate: passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -1,0 +1,139 @@
+#!/usr/bin/env bash
+# Determinism gate (DESIGN.md §6/§8/§13), runnable locally and in CI:
+#
+#   cargo build --release --manifest-path rust/Cargo.toml
+#   bash ci/determinism.sh
+#
+# Contracts checked, in order:
+#   - cluster stdout is byte-identical across --threads 1 / --threads 8
+#     for every shipped example spec (analytic, empirical, slft-replay,
+#     tenants, obs, sketch telemetry);
+#   - cluster stdout is byte-identical across --scheduler heap /
+#     --scheduler calendar (the §13 scheduler-equivalence oracle);
+#   - campaign stores are byte-identical across thread counts and a
+#     rerun against an existing store recomputes zero cells;
+#   - observability artifacts (Perfetto trace, metrics JSONL) are
+#     thread-count invariant and parse as JSON.
+#
+# Outputs land under /tmp with fixed names; CI uploads
+# /tmp/obs-metrics-t1.jsonl, /tmp/fleet-metrics-t1.jsonl, and
+# /tmp/campaign-sketch.jsonl as the cluster_metrics artifact.
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+BIN="$ROOT/rust/target/release/slofetch"
+EX="$ROOT/examples"
+
+if [[ ! -x "$BIN" ]]; then
+    echo "error: $BIN not found — build first:" >&2
+    echo "  cargo build --release --manifest-path $ROOT/rust/Cargo.toml" >&2
+    exit 1
+fi
+
+step() { echo "== $* =="; }
+
+step "cluster stdout is thread-count invariant"
+"$BIN" cluster --spec "$EX/cluster.json" --threads 1 > /tmp/cluster-t1.out
+"$BIN" cluster --spec "$EX/cluster.json" --threads 8 > /tmp/cluster-t8.out
+diff -u /tmp/cluster-t1.out /tmp/cluster-t8.out
+
+step "heap and calendar schedulers produce byte-identical stdout (DESIGN.md §13)"
+"$BIN" cluster --spec "$EX/cluster.json" --scheduler heap --threads 8 > /tmp/cluster-heap.out
+"$BIN" cluster --spec "$EX/cluster.json" --scheduler calendar --threads 8 > /tmp/cluster-cal.out
+diff -u /tmp/cluster-heap.out /tmp/cluster-cal.out
+# The calendar queue is the default: an explicit --scheduler calendar
+# must also be a no-op against the plain run.
+diff -u /tmp/cluster-t8.out /tmp/cluster-cal.out
+
+step "trace-replayed (empirical) cluster stdout is thread-count invariant"
+"$BIN" cluster --spec "$EX/cluster_empirical.json" --threads 1 > /tmp/cluster-emp-t1.out
+"$BIN" cluster --spec "$EX/cluster_empirical.json" --threads 8 > /tmp/cluster-emp-t8.out
+diff -u /tmp/cluster-emp-t1.out /tmp/cluster-emp-t8.out
+grep -q "cluster_models" /tmp/cluster-emp-t1.out
+grep -q -- "~emp" /tmp/cluster-emp-t1.out
+
+step "multi-tenant cluster stdout is thread-count invariant"
+"$BIN" cluster --spec "$EX/cluster_tenants.json" --threads 1 > /tmp/cluster-ten-t1.out
+"$BIN" cluster --spec "$EX/cluster_tenants.json" --threads 8 > /tmp/cluster-ten-t8.out
+diff -u /tmp/cluster-ten-t1.out /tmp/cluster-ten-t8.out
+grep -q "cluster_tenants" /tmp/cluster-ten-t1.out
+grep -q "tenant-ctrl" /tmp/cluster-ten-t1.out
+
+step "multi-tenant stdout is scheduler invariant"
+"$BIN" cluster --spec "$EX/cluster_tenants.json" --scheduler heap --threads 8 > /tmp/cluster-ten-heap.out
+diff -u /tmp/cluster-ten-t8.out /tmp/cluster-ten-heap.out
+
+step "tenants off reproduces the single-tenant baseline shape"
+"$BIN" cluster --spec "$EX/cluster_tenants.json" --tenants off --threads 8 > /tmp/cluster-ten-off.out
+! grep -q "cluster_tenants" /tmp/cluster-ten-off.out
+
+step "slft file replay is rerun invariant"
+"$BIN" gen-trace --app websearch --records 40000 --out /tmp/ws.slft
+"$BIN" cluster --spec "$EX/cluster_empirical.json" --trace /tmp/ws.slft --threads 8 > /tmp/cluster-slft-a.out
+"$BIN" cluster --spec "$EX/cluster_empirical.json" --trace /tmp/ws.slft --threads 1 > /tmp/cluster-slft-b.out
+diff -u /tmp/cluster-slft-a.out /tmp/cluster-slft-b.out
+
+step "campaign store is thread-count invariant"
+"$BIN" campaign --spec "$EX/campaign_cluster.json" --threads 1 --out /tmp/campaign-t1.jsonl > /dev/null
+"$BIN" campaign --spec "$EX/campaign_cluster.json" --threads 8 --out /tmp/campaign-t8.jsonl > /dev/null
+cmp /tmp/campaign-t1.jsonl /tmp/campaign-t8.jsonl
+
+step "campaign rerun recomputes zero cells"
+"$BIN" campaign --spec "$EX/campaign_cluster.json" --threads 8 --out /tmp/campaign-t1.jsonl | tee /tmp/rerun.log
+grep -q "(0 computed," /tmp/rerun.log
+cmp /tmp/campaign-t1.jsonl /tmp/campaign-t8.jsonl
+
+step "tenant campaign renders the pairing report and resumes"
+"$BIN" campaign --spec "$EX/campaign_tenants.json" --threads 8 --out /tmp/campaign-ten.jsonl | tee /tmp/campaign-ten.log
+grep -q "campaign_tenants" /tmp/campaign-ten.log
+"$BIN" campaign --spec "$EX/campaign_tenants.json" --threads 2 --out /tmp/campaign-ten.jsonl | tee /tmp/campaign-ten-rerun.log
+grep -q "(0 computed," /tmp/campaign-ten-rerun.log
+grep -q "campaign_tenants" /tmp/campaign-ten-rerun.log
+
+step "observability artifacts are thread-count invariant (DESIGN.md §11)"
+"$BIN" cluster --spec "$EX/cluster_obs.json" --threads 1 \
+    --trace-out /tmp/obs-trace-t1.json --metrics-out /tmp/obs-metrics-t1.jsonl > /tmp/cluster-obs-t1.out
+"$BIN" cluster --spec "$EX/cluster_obs.json" --threads 8 \
+    --trace-out /tmp/obs-trace-t8.json --metrics-out /tmp/obs-metrics-t8.jsonl > /tmp/cluster-obs-t8.out
+diff -u /tmp/cluster-obs-t1.out /tmp/cluster-obs-t8.out
+cmp /tmp/obs-trace-t1.json /tmp/obs-trace-t8.json
+cmp /tmp/obs-metrics-t1.jsonl /tmp/obs-metrics-t8.jsonl
+grep -q "cluster_critical_path" /tmp/cluster-obs-t1.out
+python3 -c "import json,sys; d=json.load(open('/tmp/obs-trace-t1.json')); sys.exit(0 if d['traceEvents'] else 1)"
+python3 -c "import json; [json.loads(l) for l in open('/tmp/obs-metrics-t1.jsonl')]"
+
+step "observability artifacts are scheduler invariant"
+"$BIN" cluster --spec "$EX/cluster_obs.json" --scheduler heap --threads 8 \
+    --trace-out /tmp/obs-trace-heap.json --metrics-out /tmp/obs-metrics-heap.jsonl > /tmp/cluster-obs-heap.out
+diff -u /tmp/cluster-obs-t8.out /tmp/cluster-obs-heap.out
+cmp /tmp/obs-trace-t8.json /tmp/obs-trace-heap.json
+cmp /tmp/obs-metrics-t8.jsonl /tmp/obs-metrics-heap.jsonl
+
+step "obs-off stdout carries no observability output"
+"$BIN" cluster --spec "$EX/cluster_obs.json" --threads 8 > /tmp/cluster-obs-off.out
+! grep -q "cluster_critical_path" /tmp/cluster-obs-off.out
+
+step "sketch fleet telemetry is thread-count invariant (DESIGN.md §12)"
+"$BIN" cluster --spec "$EX/cluster_obs.json" --telemetry sketch --threads 1 \
+    --metrics-out /tmp/fleet-metrics-t1.jsonl > /tmp/cluster-sketch-t1.out
+"$BIN" cluster --spec "$EX/cluster_obs.json" --telemetry sketch --threads 8 \
+    --metrics-out /tmp/fleet-metrics-t8.jsonl > /tmp/cluster-sketch-t8.out
+diff -u /tmp/cluster-sketch-t1.out /tmp/cluster-sketch-t8.out
+cmp /tmp/fleet-metrics-t1.jsonl /tmp/fleet-metrics-t8.jsonl
+grep -q "cluster_fleet" /tmp/cluster-sketch-t1.out
+grep -q '"scenario":"fleet"' /tmp/fleet-metrics-t1.jsonl
+python3 -c "import json; [json.loads(l) for l in open('/tmp/fleet-metrics-t1.jsonl')]"
+
+step "exact telemetry (the default) leaves cluster stdout unchanged"
+"$BIN" cluster --spec "$EX/cluster_obs.json" --telemetry exact --threads 8 > /tmp/cluster-exact.out
+diff -u /tmp/cluster-obs-off.out /tmp/cluster-exact.out
+! grep -q "cluster_fleet" /tmp/cluster-exact.out
+
+step "sketch campaign renders the accuracy report and resumes"
+"$BIN" campaign --spec "$EX/campaign_sketch.json" --threads 8 --out /tmp/campaign-sketch.jsonl | tee /tmp/campaign-sketch.log
+grep -q "campaign_sketch" /tmp/campaign-sketch.log
+"$BIN" campaign --spec "$EX/campaign_sketch.json" --threads 2 --out /tmp/campaign-sketch.jsonl | tee /tmp/campaign-sketch-rerun.log
+grep -q "(0 computed," /tmp/campaign-sketch-rerun.log
+grep -q "campaign_sketch" /tmp/campaign-sketch-rerun.log
+
+echo "determinism gate: all checks passed"

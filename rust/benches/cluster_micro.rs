@@ -1,13 +1,20 @@
 //! Cluster event-loop throughput bench: events/sec at 1M+ requests on
 //! synthetic topologies (no trace simulation — pure queueing), tracking
-//! the hot path across PRs. Scale with SLOFETCH_BENCH_REQUESTS
-//! (default 1M requests per scenario) and SLOFETCH_BENCH_RUNS (default 3
-//! timed runs per scenario, reported as median with a p10/p90 spread);
-//! set SLOFETCH_BENCH_JSON=PATH to also emit a machine-readable report
-//! including the engine's self-profiled peak event-heap depth (the CI
-//! bench-smoke job uploads it as the `BENCH_cluster.json` artifact).
+//! the hot path across PRs. Every scenario runs under BOTH scheduler
+//! backends (DESIGN.md §13): the calendar queue (default, reported under
+//! the historical `events_per_sec` key) and the binary heap oracle
+//! (`events_per_sec_heap`), with a bit-equality cross-check so a perf
+//! win can never smuggle in a behavior change. Scale with
+//! SLOFETCH_BENCH_REQUESTS (default 1M requests per scenario) and
+//! SLOFETCH_BENCH_RUNS (default 3 timed runs per scenario, reported as
+//! median with a p10/p90 spread); set SLOFETCH_BENCH_JSON=PATH to also
+//! emit a machine-readable report including the engine's self-profiled
+//! peak pending-event depth (the CI bench-smoke job uploads it as the
+//! `BENCH_cluster.json` artifact and gates it against
+//! `ci/BENCH_baseline.json`).
 
 use slofetch::cluster::engine::{self, RunParams};
+use slofetch::cluster::sched::SchedKind;
 use slofetch::cluster::topology::{Candidate, ResolvedService, ResolvedTopology};
 use slofetch::cluster::workload::TrafficShape;
 use slofetch::util::json::Json;
@@ -60,16 +67,52 @@ fn fanout() -> ResolvedTopology {
     }
 }
 
-/// Per-scenario summary across timed runs.
-struct ScenarioResult {
-    name: &'static str,
+/// One backend's events/sec summary across timed runs.
+struct BackendResult {
     events_per_sec: f64,
     p10: f64,
     p90: f64,
+}
+
+/// Per-scenario summary: both backends plus cross-checked run facts.
+struct ScenarioResult {
+    name: &'static str,
+    calendar: BackendResult,
+    heap: BackendResult,
     peak_heap: u64,
 }
 
-/// Run one scenario `runs` times and summarize its events/sec (also printed).
+/// Time one backend `runs` times; returns its summary plus the facts
+/// used for the cross-backend bit-equality check.
+fn time_backend(
+    topo: &ResolvedTopology,
+    shape: &TrafficShape,
+    params: &RunParams,
+    runs: usize,
+    sched: SchedKind,
+) -> (BackendResult, u64, u64, u64) {
+    let mut d = Digest::new();
+    let mut events = 0u64;
+    let mut peak = 0u64;
+    let mut p99_bits = 0u64;
+    for _ in 0..runs {
+        let (r, secs) =
+            time_it(|| engine::run_sched(topo, shape, params, None, sched).unwrap());
+        assert_eq!(r.requests, params.requests);
+        d.add(r.events as f64 / secs);
+        events = r.events;
+        peak = r.peak_heap;
+        p99_bits = r.p99_us.to_bits();
+    }
+    let out = BackendResult {
+        events_per_sec: d.percentile(50.0),
+        p10: d.percentile(10.0),
+        p90: d.percentile(90.0),
+    };
+    (out, events, peak, p99_bits)
+}
+
+/// Run one scenario under both schedulers and summarize (also printed).
 fn bench(
     name: &'static str,
     topo: &ResolvedTopology,
@@ -83,35 +126,25 @@ fn bench(
         slo_us: topo.zero_load_us() * 4.0,
         base_rate_per_us: topo.bottleneck_rate() * 0.7,
     };
-    let mut d = Digest::new();
-    let mut events = 0u64;
-    let mut peak_heap = 0u64;
-    let mut p99 = 0.0f64;
-    for _ in 0..runs {
-        let (r, secs) = time_it(|| engine::run(topo, shape, &params, None).unwrap());
-        assert_eq!(r.requests, requests);
-        d.add(r.events as f64 / secs);
-        events = r.events;
-        peak_heap = r.peak_heap;
-        p99 = r.p99_us;
-    }
-    let out = ScenarioResult {
-        name,
-        events_per_sec: d.percentile(50.0),
-        p10: d.percentile(10.0),
-        p90: d.percentile(90.0),
-        peak_heap,
-    };
+    let (heap, h_events, h_peak, h_p99) =
+        time_backend(topo, shape, &params, runs, SchedKind::Heap);
+    let (calendar, c_events, c_peak, c_p99) =
+        time_backend(topo, shape, &params, runs, SchedKind::Calendar);
+    // The §13 equivalence contract, enforced where it is cheapest to
+    // notice a break: same events, same pending-depth peak, same p99 bits.
+    assert_eq!(h_events, c_events, "{name}: backends disagree on event count");
+    assert_eq!(h_peak, c_peak, "{name}: backends disagree on peak pending depth");
+    assert_eq!(h_p99, c_p99, "{name}: backends disagree on p99 bits");
+    let speedup = calendar.events_per_sec / heap.events_per_sec.max(1e-9);
     println!(
-        "{name:<22} {:>7.2}M events/s  [p10 {:.2}M, p90 {:.2}M]  ({} events, heap {}, p99 {:.1} µs)",
-        out.events_per_sec / 1e6,
-        out.p10 / 1e6,
-        out.p90 / 1e6,
-        events,
-        peak_heap,
-        p99,
+        "{name:<22} {:>7.2}M events/s  [p10 {:.2}M, p90 {:.2}M]  \
+         (heap {:.2}M, {speedup:.2}x; {c_events} events, pending {c_peak})",
+        calendar.events_per_sec / 1e6,
+        calendar.p10 / 1e6,
+        calendar.p90 / 1e6,
+        heap.events_per_sec / 1e6,
     );
-    out
+    ScenarioResult { name, calendar, heap, peak_heap: c_peak }
 }
 
 fn main() {
@@ -144,29 +177,27 @@ fn main() {
         results.push(bench(name, topo, shape, requests, runs));
     }
     // Machine-readable trajectory point for CI: median events/sec per
-    // scenario (stable key), the p10/p90 spread, and the engine's
-    // self-profiled peak heap depth.
+    // scenario (stable key, calendar backend), the p10/p90 spread, the
+    // heap-oracle median and the calendar/heap speedup, and the engine's
+    // self-profiled peak pending-event depth (historical `peak_heap` key).
     if let Ok(path) = std::env::var("SLOFETCH_BENCH_JSON") {
+        let per = |f: &dyn Fn(&ScenarioResult) -> f64| {
+            Json::obj(results.iter().map(|r| (r.name, Json::num(f(r)))).collect())
+        };
         let j = Json::obj(vec![
             ("bench", Json::str("cluster_micro")),
             ("requests", Json::num(requests as f64)),
             ("runs", Json::num(runs as f64)),
+            ("scheduler", Json::str("calendar")),
+            ("events_per_sec", per(&|r| r.calendar.events_per_sec)),
+            ("events_per_sec_p10", per(&|r| r.calendar.p10)),
+            ("events_per_sec_p90", per(&|r| r.calendar.p90)),
+            ("events_per_sec_heap", per(&|r| r.heap.events_per_sec)),
             (
-                "events_per_sec",
-                Json::obj(results.iter().map(|r| (r.name, Json::num(r.events_per_sec))).collect()),
+                "speedup_vs_heap",
+                per(&|r| r.calendar.events_per_sec / r.heap.events_per_sec.max(1e-9)),
             ),
-            (
-                "events_per_sec_p10",
-                Json::obj(results.iter().map(|r| (r.name, Json::num(r.p10))).collect()),
-            ),
-            (
-                "events_per_sec_p90",
-                Json::obj(results.iter().map(|r| (r.name, Json::num(r.p90))).collect()),
-            ),
-            (
-                "peak_heap",
-                Json::obj(results.iter().map(|r| (r.name, Json::num(r.peak_heap as f64))).collect()),
-            ),
+            ("peak_heap", per(&|r| r.peak_heap as f64)),
         ]);
         std::fs::write(&path, j.pretty()).expect("write bench json");
         println!("(wrote {path})");

@@ -1,16 +1,22 @@
-//! Deterministic discrete-event cluster simulator: a binary-heap event
-//! loop over request DAGs with replicated services — FCFS per replica,
-//! least-outstanding-requests load balancing, open-loop arrivals from
-//! [`super::workload`], and an optional SLO control loop
+//! Deterministic discrete-event cluster simulator: a pluggable-scheduler
+//! event loop over request DAGs with replicated services — FCFS per
+//! replica, least-outstanding-requests load balancing, open-loop
+//! arrivals from [`super::workload`], and an optional SLO control loop
 //! ([`super::slo`]) that reconfigures services mid-run.
 //!
-//! Determinism contract (DESIGN.md §8): the loop is single-threaded, the
-//! heap orders events by `(time bits, sequence number)` so ties break
-//! identically on every run, and all randomness flows through one
-//! seeded [`Rng`] whose draw order is a pure function of the event
-//! order. Request state lives in a reusable slab — after warm-up the
-//! completion hot path performs no per-request allocation.
+//! Determinism contract (DESIGN.md §8/§13): the loop is single-threaded,
+//! the scheduler orders events by the contractual
+//! [`super::sched::event_key`] `(time bits, sequence number)` so ties
+//! break identically on every run *and on every scheduler backend*
+//! (calendar queue by default, the original binary heap as a cross-check
+//! oracle — byte-identical stdout either way), and all randomness flows
+//! through one seeded [`Rng`] whose draw order is a pure function of the
+//! event order. Request state lives in a reusable slab and per-replica
+//! load lives in struct-of-arrays vectors on each service — after
+//! warm-up the completion hot path performs no per-request allocation
+//! and the balancer scan touches two flat arrays, not replica structs.
 
+use super::sched::{CalendarQueue, HeapQueue, SchedKind, Scheduler};
 use super::servicetime::ServiceTimeModel;
 use super::slo::{
     EngineView, SloAction, SloCfg, SloController, TenantAction, TenantController, TenantCtrlCfg,
@@ -23,8 +29,7 @@ use crate::obs::{ObsCfg, ObsData, Recorder};
 use crate::util::percentile::Digest;
 use crate::util::rng::{mix64, Rng};
 use anyhow::{bail, Result};
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::VecDeque;
 
 /// Per-scenario run knobs.
 #[derive(Clone, Debug)]
@@ -140,8 +145,11 @@ pub struct ClusterResult {
     pub final_metadata_bytes: u64,
     /// Simulated duration (µs, time of the last processed event).
     pub duration_us: f64,
-    /// Peak event-heap depth over the run (self-profiling for the
-    /// scheduler-rewrite scoreboard; tracked on every run).
+    /// Peak pending-event depth over the run, whichever scheduler
+    /// backend is active (self-profiling for the bench scoreboard;
+    /// tracked on every run). The field keeps its pre-§13 name so BENCH
+    /// JSON and downstream consumers are unchanged; both backends report
+    /// the identical value — they hold the same pending set.
     pub peak_heap: u64,
     /// Per-tenant outcomes (multi-tenant runs only; empty otherwise).
     pub tenants: Vec<TenantStat>,
@@ -156,39 +164,10 @@ enum EvKind {
     Complete { svc: u32, rep: u32 },
 }
 
-struct Ev {
-    t: f64,
-    seq: u64,
-    kind: EvKind,
-}
-
-impl PartialEq for Ev {
-    fn eq(&self, other: &Self) -> bool {
-        self.t.to_bits() == other.t.to_bits() && self.seq == other.seq
-    }
-}
-impl Eq for Ev {}
-impl PartialOrd for Ev {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Ev {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // Event times are non-negative finite, where IEEE bit order
-        // agrees with numeric order; seq breaks ties deterministically.
-        (self.t.to_bits(), self.seq).cmp(&(other.t.to_bits(), other.seq))
-    }
-}
-
 #[derive(Default)]
 struct Replica {
     queue: VecDeque<u32>,
     in_service: Option<u32>,
-    /// Retired by a scale-down: the load balancer skips it and it drains
-    /// its residual work, but the slot stays in place — pending
-    /// completion events keep valid indexes. A later scale-up revives it.
-    retired: bool,
     /// Outstanding requests per tenant (queued + in service) — the
     /// interference model's per-replica mix. Empty on the single-tenant
     /// path, which never touches it.
@@ -197,6 +176,16 @@ struct Replica {
 
 struct Svc {
     replicas: Vec<Replica>,
+    /// Outstanding requests (queued + in service) per replica —
+    /// struct-of-arrays mirror of the replica state, so the
+    /// least-outstanding balancer scan walks one flat `u32` array
+    /// instead of chasing `VecDeque` headers.
+    out: Vec<u32>,
+    /// Retired-by-scale-down flag per replica: the load balancer skips
+    /// it and it drains its residual work, but the slot stays in place —
+    /// pending completion events keep valid indexes. A later scale-up
+    /// revives it.
+    retired: Vec<bool>,
     /// Current candidate index (the SLO loop advances this).
     current: usize,
     /// Cached `candidates[current].model(cv)` — analytic jitter or the
@@ -209,9 +198,29 @@ struct Svc {
 }
 
 impl Svc {
+    fn fresh(
+        replicas: u32,
+        ntenants: usize,
+        model: ServiceTimeModel,
+        cv: f64,
+        children: Vec<u32>,
+    ) -> Svc {
+        Svc {
+            replicas: (0..replicas)
+                .map(|_| Replica { out_t: vec![0; ntenants], ..Replica::default() })
+                .collect(),
+            out: vec![0; replicas as usize],
+            retired: vec![false; replicas as usize],
+            current: 0,
+            model,
+            cv,
+            children,
+        }
+    }
+
     /// Non-retired replicas (the provisioned capacity).
     fn active_replicas(&self) -> u32 {
-        self.replicas.iter().filter(|r| !r.retired).count() as u32
+        self.retired.iter().filter(|r| !**r).count() as u32
     }
 }
 
@@ -305,13 +314,15 @@ struct TenantState {
     traffic: String,
 }
 
-struct Sim {
+struct Sim<S: Scheduler<EvKind>> {
     svc: Vec<Svc>,
     names: Vec<String>,
     cands: Vec<Vec<Candidate>>,
     indegrees: Vec<u32>,
     roots: Vec<u32>,
-    heap: BinaryHeap<Reverse<Ev>>,
+    /// Pending-event queue — statically dispatched, so the heap oracle
+    /// and the calendar queue each compile to a monomorphized loop.
+    sched: S,
     seq: u64,
     rng: Rng,
     gen: ArrivalGen,
@@ -338,20 +349,21 @@ struct Sim {
     last_event_us: f64,
     /// Multi-tenant state; `None` = the single-tenant path.
     tenancy: Option<Tenancy>,
-    /// Peak event-heap depth (self-profiling; an integer compare per
-    /// schedule, tracked even with obs off).
-    peak_heap: usize,
+    /// Peak pending-event depth (self-profiling; an integer compare per
+    /// schedule, tracked even with obs off). Scheduler-independent: both
+    /// backends hold the identical pending set at every step.
+    peak_pending: usize,
     /// Observability recorder; `None` = the byte-identical baseline
     /// path (every hook is behind an `if let`).
     obs: Option<Recorder>,
 }
 
-impl Sim {
+impl<S: Scheduler<EvKind>> Sim<S> {
     fn schedule(&mut self, t: f64, kind: EvKind) {
         self.seq += 1;
-        self.heap.push(Reverse(Ev { t, seq: self.seq, kind }));
-        if self.heap.len() > self.peak_heap {
-            self.peak_heap = self.heap.len();
+        self.sched.push(t, self.seq, kind);
+        if self.sched.len() > self.peak_pending {
+            self.peak_pending = self.sched.len();
         }
     }
 
@@ -365,20 +377,21 @@ impl Sim {
     fn dispatch(&mut self, svc: usize, slot: u32, now: f64) {
         // Least-outstanding-requests balancing over *active* replicas,
         // lowest index on ties (at least one is always active: retire
-        // is gated on ≥ 2 active).
+        // is gated on ≥ 2 active). The scan reads the flat SoA vectors —
+        // no replica structs, no VecDeque headers.
         let mut best = usize::MAX;
-        let mut best_out = usize::MAX;
-        for (i, r) in self.svc[svc].replicas.iter().enumerate() {
-            if r.retired {
-                continue;
-            }
-            let out = r.queue.len() + usize::from(r.in_service.is_some());
-            if out < best_out {
-                best_out = out;
-                best = i;
+        let mut best_out = u32::MAX;
+        {
+            let s = &self.svc[svc];
+            for (i, (&out, &retired)) in s.out.iter().zip(&s.retired).enumerate() {
+                if !retired && out < best_out {
+                    best_out = out;
+                    best = i;
+                }
             }
         }
         debug_assert!(best != usize::MAX, "service with no active replica");
+        self.svc[svc].out[best] += 1;
         if self.tenancy.is_some() {
             let t = self.slab.tenant[slot as usize] as usize;
             self.svc[svc].replicas[best].out_t[t] += 1;
@@ -592,13 +605,16 @@ impl Sim {
     /// control loops; the caller has already checked the replica cap.
     fn add_replica(&mut self, b: usize, ntenants: usize, now: f64) {
         self.account(now);
-        if let Some(r) = self.svc[b].replicas.iter_mut().find(|r| r.retired) {
-            r.retired = false;
+        let s = &mut self.svc[b];
+        if let Some(i) = s.retired.iter().position(|&r| r) {
+            s.retired[i] = false;
         } else {
-            self.svc[b].replicas.push(Replica {
+            s.replicas.push(Replica {
                 out_t: vec![0; ntenants],
                 ..Replica::default()
             });
+            s.out.push(0);
+            s.retired.push(false);
         }
         self.live_replicas += 1;
         self.meta_now += self.cands[b][self.svc[b].current].metadata_bytes;
@@ -615,20 +631,19 @@ impl Sim {
         // the action; residual queued work drains in place (the slot —
         // and any pending completion event pointing at it — stays put).
         let mut pick = usize::MAX;
-        let mut least = usize::MAX;
-        for (i, r) in self.svc[t].replicas.iter().enumerate() {
-            if r.retired {
-                continue;
-            }
-            let out = r.queue.len() + usize::from(r.in_service.is_some());
-            if out < least {
-                least = out;
-                pick = i;
+        let mut least = u32::MAX;
+        {
+            let s = &self.svc[t];
+            for (i, (&out, &retired)) in s.out.iter().zip(&s.retired).enumerate() {
+                if !retired && out < least {
+                    least = out;
+                    pick = i;
+                }
             }
         }
         debug_assert!(pick != usize::MAX, "scale-down target had no active replica");
         self.account(now);
-        self.svc[t].replicas[pick].retired = true;
+        self.svc[t].retired[pick] = true;
         self.live_replicas -= 1;
         self.meta_now = self
             .meta_now
@@ -688,32 +703,32 @@ impl Sim {
     }
 
     fn step(&mut self) -> bool {
-        let ev = match self.heap.pop() {
-            Some(Reverse(ev)) => ev,
+        let (t, _seq, kind) = match self.sched.pop() {
+            Some(ev) => ev,
             None => return false,
         };
         self.events += 1;
-        self.last_event_us = ev.t;
-        match ev.kind {
+        self.last_event_us = t;
+        match kind {
             EvKind::Arrival { tenant } => {
                 if self.tenancy.is_some() {
-                    self.arrive_tenant(tenant, ev.t);
+                    self.arrive_tenant(tenant, t);
                 } else {
                     let n = self.slab.nsvc as u32;
-                    let slot = self.slab.alloc(ev.t, &self.indegrees, n, 0);
+                    let slot = self.slab.alloc(t, &self.indegrees, n, 0);
                     if let Some(o) = self.obs.as_mut() {
                         // Request id = arrival index (incremented below).
                         o.spans.on_arrival(slot, self.arrived, 0);
                     }
                     let roots = std::mem::take(&mut self.roots);
                     for &r in &roots {
-                        self.dispatch(r as usize, slot, ev.t);
+                        self.dispatch(r as usize, slot, t);
                     }
                     self.roots = roots;
                     self.arrived += 1;
                     if self.arrived < self.requests {
-                        let t = self.gen.next_arrival();
-                        self.schedule(t, EvKind::Arrival { tenant: 0 });
+                        let t_next = self.gen.next_arrival();
+                        self.schedule(t_next, EvKind::Arrival { tenant: 0 });
                     }
                 }
             }
@@ -723,12 +738,13 @@ impl Sim {
                     .in_service
                     .take()
                     .expect("completion on an idle replica");
+                self.svc[svc].out[rep] -= 1;
                 if self.tenancy.is_some() {
                     let done = self.slab.tenant[slot as usize] as usize;
                     self.svc[svc].replicas[rep].out_t[done] -= 1;
                 }
                 if let Some(o) = self.obs.as_mut() {
-                    o.spans.on_end(slot, svc as u32, ev.t);
+                    o.spans.on_end(slot, svc as u32, t);
                 }
                 if let Some(next) = self.svc[svc].replicas[rep].queue.pop_front() {
                     self.svc[svc].replicas[rep].in_service = Some(next);
@@ -739,10 +755,10 @@ impl Sim {
                         base
                     };
                     if let Some(o) = self.obs.as_mut() {
-                        o.spans.on_start(next, svc as u32, rep as u32, ev.t, dt - base);
+                        o.spans.on_start(next, svc as u32, rep as u32, t, dt - base);
                     }
                     let kind = EvKind::Complete { svc: svc as u32, rep: rep as u32 };
-                    self.schedule(ev.t + dt, kind);
+                    self.schedule(t + dt, kind);
                 }
                 // Fan out: along the owning tenant's sub-DAG in tenant
                 // mode, along the full topology otherwise — one shared
@@ -756,11 +772,11 @@ impl Sim {
                     let ci = c as usize;
                     let idx = slot as usize * self.slab.nsvc + ci;
                     if let Some(o) = self.obs.as_mut() {
-                        o.spans.on_first_dep(slot, c, ev.t);
+                        o.spans.on_first_dep(slot, c, t);
                     }
                     self.slab.pending[idx] -= 1;
                     if self.slab.pending[idx] == 0 {
-                        self.dispatch(ci, slot, ev.t);
+                        self.dispatch(ci, slot, t);
                     }
                 }
                 match self.tenancy.as_mut() {
@@ -770,9 +786,9 @@ impl Sim {
                 self.slab.remaining[slot as usize] -= 1;
                 if self.slab.remaining[slot as usize] == 0 {
                     if self.tenancy.is_some() {
-                        self.finish_tenant(slot, ev.t);
+                        self.finish_tenant(slot, t);
                     } else {
-                        self.finish(slot, ev.t);
+                        self.finish(slot, t);
                     }
                 }
             }
@@ -871,7 +887,9 @@ impl Sim {
     /// simulated event order — nothing wall-clock. Called only with obs
     /// enabled.
     fn snapshot_metrics(&mut self, now: f64) {
-        let heap_len = self.heap.len();
+        // Gauge name predates the pluggable scheduler: "heap_len" is the
+        // pending-event depth whichever backend is active (§13).
+        let heap_len = self.sched.len();
         let live_replicas = self.live_replicas;
         let meta_now = self.meta_now;
         let nactions = self.actions.len() as u64;
@@ -880,12 +898,9 @@ impl Sim {
             .iter()
             .enumerate()
             .map(|(i, s)| {
-                let d: usize = s
-                    .replicas
-                    .iter()
-                    .map(|r| r.queue.len() + usize::from(r.in_service.is_some()))
-                    .sum();
-                (format!("depth.{}", self.names[i]), d as f64)
+                // Sum over all replicas (retired ones drain residuals).
+                let d: u32 = s.out.iter().sum();
+                (format!("depth.{}", self.names[i]), f64::from(d))
             })
             .collect();
         let (windows, violated, burn, bucket, tenant_gauges) = match &self.tenancy {
@@ -1043,6 +1058,19 @@ pub fn run(
     run_obs(topo, shape, params, ctrl, &ObsCfg::off())
 }
 
+/// [`run`] on an explicit scheduler backend (DESIGN.md §13). Both
+/// backends produce bit-equal results; `SchedKind::Heap` is the
+/// cross-check oracle.
+pub fn run_sched(
+    topo: &ResolvedTopology,
+    shape: &TrafficShape,
+    params: &RunParams,
+    ctrl: Option<SloCfg>,
+    sched: SchedKind,
+) -> Result<ClusterResult> {
+    run_obs_sched(topo, shape, params, ctrl, &ObsCfg::off(), sched)
+}
+
 /// [`run`] with an observability configuration (DESIGN.md §11).
 /// `obs.enabled = false` is exactly [`run`]: the recorder is never
 /// constructed, every hook is skipped, and the result is bit-equal to
@@ -1050,6 +1078,34 @@ pub fn run(
 /// computes — no RNG draws, no event reordering — so the recorded data
 /// is a pure function of the (unchanged) event order.
 pub fn run_obs(
+    topo: &ResolvedTopology,
+    shape: &TrafficShape,
+    params: &RunParams,
+    ctrl: Option<SloCfg>,
+    obs: &ObsCfg,
+) -> Result<ClusterResult> {
+    run_obs_sched(topo, shape, params, ctrl, obs, SchedKind::default())
+}
+
+/// [`run_obs`] on an explicit scheduler backend. Monomorphizes the
+/// event loop per backend — no dynamic dispatch on the hot path.
+pub fn run_obs_sched(
+    topo: &ResolvedTopology,
+    shape: &TrafficShape,
+    params: &RunParams,
+    ctrl: Option<SloCfg>,
+    obs: &ObsCfg,
+    sched: SchedKind,
+) -> Result<ClusterResult> {
+    match sched {
+        SchedKind::Heap => run_obs_core::<HeapQueue<EvKind>>(topo, shape, params, ctrl, obs),
+        SchedKind::Calendar => {
+            run_obs_core::<CalendarQueue<EvKind>>(topo, shape, params, ctrl, obs)
+        }
+    }
+}
+
+fn run_obs_core<S: Scheduler<EvKind>>(
     topo: &ResolvedTopology,
     shape: &TrafficShape,
     params: &RunParams,
@@ -1079,19 +1135,15 @@ pub fn run_obs(
         svc: topo
             .services
             .iter()
-            .map(|s| Svc {
-                replicas: (0..s.replicas).map(|_| Replica::default()).collect(),
-                current: 0,
-                model: s.candidates[0].model(s.cv),
-                cv: s.cv,
-                children: s.children.clone(),
+            .map(|s| {
+                Svc::fresh(s.replicas, 0, s.candidates[0].model(s.cv), s.cv, s.children.clone())
             })
             .collect(),
         names: topo.services.iter().map(|s| s.name.clone()).collect(),
         cands: topo.services.iter().map(|s| s.candidates.clone()).collect(),
         indegrees: topo.services.iter().map(|s| s.indegree).collect(),
         roots: topo.roots(),
-        heap: BinaryHeap::with_capacity(1024),
+        sched: S::with_capacity(1024),
         seq: 0,
         rng: Rng::new(mix64(params.seed ^ 0x5E41_71CE)),
         gen,
@@ -1113,7 +1165,7 @@ pub fn run_obs(
         meta_byte_us: 0.0,
         last_event_us: 0.0,
         tenancy: None,
-        peak_heap: 0,
+        peak_pending: 0,
         obs: obs.enabled.then(|| Recorder::new(obs.clone(), n)),
     };
     let t0 = sim.gen.next_arrival();
@@ -1151,7 +1203,7 @@ pub fn run_obs(
         meta_byte_us: sim.meta_byte_us,
         final_metadata_bytes: sim.meta_now,
         duration_us: sim.last_event_us,
-        peak_heap: sim.peak_heap as u64,
+        peak_heap: sim.peak_pending as u64,
         tenants: Vec::new(),
         obs: obs_data,
     })
@@ -1182,6 +1234,35 @@ pub fn run_tenants(
 /// [`run_tenants`] with an observability configuration (DESIGN.md §11);
 /// `obs.enabled = false` is exactly [`run_tenants`].
 pub fn run_tenants_obs(
+    topo: &ResolvedTopology,
+    tenants: &[TenantRun],
+    params: &RunParams,
+    tp: &TenancyParams,
+    obs: &ObsCfg,
+) -> Result<ClusterResult> {
+    run_tenants_obs_sched(topo, tenants, params, tp, obs, SchedKind::default())
+}
+
+/// [`run_tenants_obs`] on an explicit scheduler backend (DESIGN.md §13).
+pub fn run_tenants_obs_sched(
+    topo: &ResolvedTopology,
+    tenants: &[TenantRun],
+    params: &RunParams,
+    tp: &TenancyParams,
+    obs: &ObsCfg,
+    sched: SchedKind,
+) -> Result<ClusterResult> {
+    match sched {
+        SchedKind::Heap => {
+            run_tenants_core::<HeapQueue<EvKind>>(topo, tenants, params, tp, obs)
+        }
+        SchedKind::Calendar => {
+            run_tenants_core::<CalendarQueue<EvKind>>(topo, tenants, params, tp, obs)
+        }
+    }
+}
+
+fn run_tenants_core<S: Scheduler<EvKind>>(
     topo: &ResolvedTopology,
     tenants: &[TenantRun],
     params: &RunParams,
@@ -1253,21 +1334,15 @@ pub fn run_tenants_obs(
         svc: topo
             .services
             .iter()
-            .map(|s| Svc {
-                replicas: (0..s.replicas)
-                    .map(|_| Replica { out_t: vec![0; nt], ..Replica::default() })
-                    .collect(),
-                current: 0,
-                model: s.candidates[0].model(s.cv),
-                cv: s.cv,
-                children: s.children.clone(),
+            .map(|s| {
+                Svc::fresh(s.replicas, nt, s.candidates[0].model(s.cv), s.cv, s.children.clone())
             })
             .collect(),
         names: topo.services.iter().map(|s| s.name.clone()).collect(),
         cands: topo.services.iter().map(|s| s.candidates.clone()).collect(),
         indegrees: topo.services.iter().map(|s| s.indegree).collect(),
         roots: topo.roots(),
-        heap: BinaryHeap::with_capacity(1024),
+        sched: S::with_capacity(1024),
         seq: 0,
         rng: Rng::new(mix64(params.seed ^ 0x5E41_71CE)),
         gen: idle_gen,
@@ -1298,11 +1373,11 @@ pub fn run_tenants_obs(
             ctrl,
             adaptive: tp.adaptive,
         }),
-        peak_heap: 0,
+        peak_pending: 0,
         obs: obs.enabled.then(|| Recorder::new(obs.clone(), n)),
     };
-    // First arrival per tenant, declaration order (the heap's sequence
-    // number breaks simultaneous arrivals deterministically).
+    // First arrival per tenant, declaration order (the scheduler's
+    // sequence number breaks simultaneous arrivals deterministically).
     for ti in 0..nt {
         let t0 = sim.tenancy.as_mut().unwrap().tenants[ti].gen.next_arrival();
         sim.schedule(t0, EvKind::Arrival { tenant: ti as u8 });
@@ -1363,7 +1438,7 @@ pub fn run_tenants_obs(
         meta_byte_us: sim.meta_byte_us,
         final_metadata_bytes: sim.meta_now,
         duration_us: sim.last_event_us,
-        peak_heap: sim.peak_heap as u64,
+        peak_heap: sim.peak_pending as u64,
         tenants: tenant_stats,
         obs: obs_data,
     })
@@ -1424,6 +1499,38 @@ mod tests {
         assert_eq!(c.actions, d.actions);
         assert_eq!(c.replica_us.to_bits(), d.replica_us.to_bits());
         assert_eq!(c.meta_byte_us.to_bits(), d.meta_byte_us.to_bits());
+    }
+
+    #[test]
+    fn schedulers_agree_bit_for_bit() {
+        // The §13 contract: the calendar queue and the heap oracle pop
+        // the identical (time, seq) order, so every simulation output —
+        // tails, event counts, control actions, integrals, peak depth —
+        // is bit-equal across backends, static and policy-driven alike.
+        let topo = chain(&[2.0, 1.8]);
+        let p = params(&topo, 0.7, 15_000, 50.0);
+        let shape = TrafficShape::Burst { util: 1.0, mult: 2.0, period_us: 5_000.0, duty: 0.3 };
+        let heap = run_sched(&topo, &shape, &p, None, SchedKind::Heap).unwrap();
+        let cal = run_sched(&topo, &shape, &p, None, SchedKind::Calendar).unwrap();
+        assert_eq!(heap.p99_us.to_bits(), cal.p99_us.to_bits());
+        assert_eq!(heap.mean_us.to_bits(), cal.mean_us.to_bits());
+        assert_eq!(heap.events, cal.events);
+        assert_eq!(heap.compliance.to_bits(), cal.compliance.to_bits());
+        assert_eq!(heap.peak_heap, cal.peak_heap, "pending sets diverged");
+        let cfg = || {
+            SloCfg::new(50.0, 7)
+                .with_policy(Policy::Hysteresis { idle_windows: 2, headroom: 0.8 })
+        };
+        let hp = run_sched(&topo, &shape, &p, Some(cfg()), SchedKind::Heap).unwrap();
+        let cp = run_sched(&topo, &shape, &p, Some(cfg()), SchedKind::Calendar).unwrap();
+        assert_eq!(hp.p99_us.to_bits(), cp.p99_us.to_bits());
+        assert_eq!(hp.actions, cp.actions, "control traces diverged");
+        assert_eq!(hp.replica_us.to_bits(), cp.replica_us.to_bits());
+        assert_eq!(hp.meta_byte_us.to_bits(), cp.meta_byte_us.to_bits());
+        assert_eq!(hp.final_replicas, cp.final_replicas);
+        // And the default entry point is the calendar queue.
+        let dflt = run(&topo, &shape, &p, Some(cfg())).unwrap();
+        assert_eq!(dflt.p99_us.to_bits(), cp.p99_us.to_bits());
     }
 
     #[test]
@@ -1760,6 +1867,36 @@ mod tests {
         assert_eq!(r.events, again.events);
         for (x, y) in r.tenants.iter().zip(&again.tenants) {
             assert_eq!(x.p99_us.to_bits(), y.p99_us.to_bits(), "{}", x.name);
+        }
+    }
+
+    #[test]
+    fn schedulers_agree_on_tenant_runs() {
+        // Simultaneous per-tenant arrivals at t0 are the hardest tie-break
+        // case: both backends must serve them in schedule (seq) order.
+        let topo = shared_service(2, 10.0);
+        let tenants = vec![tenant("a", 0.45, 1, 1e9, 4, 6), tenant("b", 0.4, 2, 1e9, 4, 6)];
+        let p = RunParams { requests: 30_000, seed: 9, slo_us: 1e9, base_rate_per_us: 0.2 };
+        let obs = ObsCfg::off();
+        let h =
+            run_tenants_obs_sched(&topo, &tenants, &p, &tp(0.8, true), &obs, SchedKind::Heap)
+                .unwrap();
+        let c = run_tenants_obs_sched(
+            &topo,
+            &tenants,
+            &p,
+            &tp(0.8, true),
+            &obs,
+            SchedKind::Calendar,
+        )
+        .unwrap();
+        assert_eq!(h.p99_us.to_bits(), c.p99_us.to_bits());
+        assert_eq!(h.events, c.events);
+        assert_eq!(h.actions, c.actions);
+        assert_eq!(h.peak_heap, c.peak_heap);
+        for (x, y) in h.tenants.iter().zip(&c.tenants) {
+            assert_eq!(x.p99_us.to_bits(), y.p99_us.to_bits(), "{}", x.name);
+            assert_eq!(x.final_ways, y.final_ways, "{}", x.name);
         }
     }
 

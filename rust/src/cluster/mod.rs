@@ -1,7 +1,8 @@
 //! Discrete-event microservice-cluster simulator (DESIGN.md §8/§9):
 //! request DAGs with fan-out/fan-in and per-service replicas
 //! ([`topology`]), time-varying open-loop traffic ([`workload`]), a
-//! binary-heap event loop ([`engine`]), and a windowed SLO tracker
+//! pluggable-scheduler event loop ([`engine`] over [`sched`]: calendar
+//! queue by default, binary-heap oracle), and a windowed SLO tracker
 //! driving an autoscaler policy suite ([`slo`]: reactive, hysteresis
 //! scale-down, predictive, cost-aware). The linear `rpc/` tandem chain
 //! is the degenerate case
@@ -27,6 +28,7 @@
 //! the same arrival seed, so [`tenant_report`] is a paired comparison.
 
 pub mod engine;
+pub mod sched;
 pub mod servicetime;
 pub mod slo;
 pub mod spec;
@@ -34,6 +36,7 @@ pub mod topology;
 pub mod workload;
 
 pub use engine::{ClusterResult, RunParams, TenancyParams, TenantRun, TenantStat};
+pub use sched::SchedKind;
 pub use servicetime::{QuantileTable, ServiceTimeModel};
 pub use slo::{EngineView, Policy, SloCfg, TenantCtrlCfg};
 pub use spec::{ClusterSpec, TenantSpec};
@@ -128,6 +131,9 @@ pub struct PreparedSpec {
     /// Per-cell + merged sketch telemetry when the spec's `telemetry`
     /// knob is not `"exact"`.
     pub fleet: Option<FleetTelemetry>,
+    /// Event-scheduler backend every scenario runs on (DESIGN.md §13);
+    /// byte-identical output either way.
+    pub sched: SchedKind,
 }
 
 /// Measure the (source × config) IPC/metadata matrix through the
@@ -271,6 +277,7 @@ pub fn prepare_spec(spec: &ClusterSpec, threads: usize) -> Result<PreparedSpec> 
         ipc_cells: cells.len(),
         empirical,
         fleet,
+        sched: SchedKind::parse(&spec.scheduler).expect("validated scheduler"),
     })
 }
 
@@ -309,7 +316,7 @@ pub fn run_policy_scenario(
     shape: &TrafficShape,
 ) -> Result<ClusterResult> {
     let (label, params, cfg) = policy_scenario_cfg(prep, spec, policy, shape);
-    let mut r = engine::run(&prep.policy_topo, shape, &params, Some(cfg))?;
+    let mut r = engine::run_sched(&prep.policy_topo, shape, &params, Some(cfg), prep.sched)?;
     r.label = label;
     Ok(r)
 }
@@ -382,12 +389,13 @@ fn run_tenant_solo_obs(
         slo_us: prep.slo_us,
         base_rate_per_us: prep.base_rate,
     };
-    let mut r = engine::run_tenants_obs(
+    let mut r = engine::run_tenants_obs_sched(
         &prep.static_topos[label_idx],
         &solo,
         &params,
         &tenancy_params(spec, false),
         obs,
+        prep.sched,
     )?;
     r.label = format!("{label}@{}", spec.tenants[tenant].name);
     Ok(r)
@@ -419,12 +427,13 @@ fn run_tenant_coloc_obs(
         slo_us: prep.slo_us,
         base_rate_per_us: prep.base_rate,
     };
-    let mut r = engine::run_tenants_obs(
+    let mut r = engine::run_tenants_obs_sched(
         &prep.static_topos[label_idx],
         &runs,
         &params,
         &tenancy_params(spec, false),
         obs,
+        prep.sched,
     )?;
     r.label = format!("{label}@coloc");
     Ok(r)
@@ -449,12 +458,13 @@ fn run_tenant_ctrl_obs(
         slo_us: prep.slo_us,
         base_rate_per_us: prep.base_rate,
     };
-    let mut r = engine::run_tenants_obs(
+    let mut r = engine::run_tenants_obs_sched(
         &prep.policy_topo,
         &runs,
         &params,
         &tenancy_params(spec, true),
         obs,
+        prep.sched,
     )?;
     r.label = "tenant-ctrl".into();
     Ok(r)
@@ -575,7 +585,7 @@ pub fn run_spec_obs(spec: &ClusterSpec, threads: usize, obs: &ObsCfg) -> Result<
     // Shard scenarios across workers; collect by index (scenario runs
     // are independent and self-seeded, so order of completion is
     // irrelevant to the result).
-    let scenarios = run_scenarios(&defs, threads, obs)?;
+    let scenarios = run_scenarios(&defs, threads, obs, prep.sched)?;
     let total_requests = scenarios.iter().map(|s| s.requests).sum();
     let total_events = scenarios.iter().map(|s| s.events).sum();
     Ok(ClusterOutcome {
@@ -592,13 +602,16 @@ fn run_scenarios(
     defs: &[ScenarioDef],
     threads: usize,
     obs: &ObsCfg,
+    sched: SchedKind,
 ) -> Result<Vec<ClusterResult>> {
     runner::parallel_map(defs.len(), threads, |i| {
         let d = &defs[i];
-        engine::run_obs(&d.topo, &d.shape, &d.params, d.ctrl.clone(), obs).map(|mut r| {
-            r.label = d.label.clone();
-            r
-        })
+        engine::run_obs_sched(&d.topo, &d.shape, &d.params, d.ctrl.clone(), obs, sched).map(
+            |mut r| {
+                r.label = d.label.clone();
+                r
+            },
+        )
     })
     .into_iter()
     .collect()
@@ -1107,6 +1120,7 @@ mod tests {
             total_ways: 8,
             interference: 0.8,
             telemetry: "exact".into(),
+            scheduler: "calendar".into(),
         }
     }
 

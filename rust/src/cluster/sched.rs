@@ -1,0 +1,496 @@
+//! Pluggable event schedulers for the cluster engine (DESIGN.md §13).
+//!
+//! The discrete-event engine needs one operation pair — `push(t, seq, ev)`
+//! and `pop() -> (t, seq, ev)` — delivered in a *contractual* total order:
+//! ascending [`event_key`] `(t.to_bits(), seq)`, where `seq` is the
+//! engine's monotone schedule counter. Because the key is explicit, every
+//! implementation of [`Scheduler`] is interchangeable bit-for-bit: the
+//! binary heap ([`HeapQueue`], the original engine core, kept alive as a
+//! cross-check oracle) and the calendar queue ([`CalendarQueue`], the
+//! default) produce byte-identical `slofetch cluster` stdout, which the
+//! CI determinism gate (`ci/determinism.sh`) enforces on every example
+//! spec.
+//!
+//! ## Monotonicity contract
+//!
+//! Schedulers may assume pushes never go backwards in time: a `push(t, ..)`
+//! after a `pop()` that returned time `p` satisfies `t >= p` (in `to_bits`
+//! order; all simulation times are non-negative and finite). The engine
+//! guarantees this — service times are non-negative and arrival streams
+//! are non-decreasing — and the calendar queue exploits it to keep its
+//! wheel window anchored at the current tick. A `debug_assert!` checks the
+//! contract on every push.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use anyhow::{bail, Result};
+
+/// The contractual total order on events: ascending `(t.to_bits(), seq)`.
+///
+/// `f64::to_bits` is order-preserving for the non-negative finite times the
+/// engine produces, and `seq` (the engine's monotone schedule counter)
+/// breaks ties so simultaneous events pop in schedule order — never in
+/// container-internal order.
+#[inline]
+pub fn event_key(t: f64, seq: u64) -> (u64, u64) {
+    (t.to_bits(), seq)
+}
+
+/// A pending-event queue delivering items in ascending [`event_key`] order.
+pub trait Scheduler<T> {
+    /// Create an empty scheduler sized for roughly `cap` pending events.
+    fn with_capacity(cap: usize) -> Self
+    where
+        Self: Sized;
+    /// Insert an event. `seq` must be strictly monotone across pushes and
+    /// `t` must not precede the last popped time (see the module docs).
+    fn push(&mut self, t: f64, seq: u64, item: T);
+    /// Remove and return the minimum event by [`event_key`].
+    fn pop(&mut self) -> Option<(f64, u64, T)>;
+    /// Number of pending events.
+    fn len(&self) -> usize;
+    /// True when no events are pending.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Which [`Scheduler`] backend a cluster run uses (`ClusterSpec.scheduler`
+/// / `slofetch cluster --scheduler`). The knob only serializes when
+/// non-default, so pre-existing spec JSON and campaign-store content
+/// hashes are unchanged.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SchedKind {
+    /// The original `BinaryHeap` core: the cross-check oracle.
+    Heap,
+    /// Bucketed timing wheel with an overflow ladder (the default).
+    #[default]
+    Calendar,
+}
+
+impl SchedKind {
+    /// Parse the spec/CLI spelling (`"heap"` / `"calendar"`).
+    pub fn parse(s: &str) -> Result<SchedKind> {
+        match s {
+            "heap" => Ok(SchedKind::Heap),
+            "calendar" => Ok(SchedKind::Calendar),
+            other => bail!("unknown scheduler '{other}' (expected 'heap' or 'calendar')"),
+        }
+    }
+
+    /// Canonical spelling (inverse of [`SchedKind::parse`]).
+    pub fn label(self) -> &'static str {
+        match self {
+            SchedKind::Heap => "heap",
+            SchedKind::Calendar => "calendar",
+        }
+    }
+}
+
+struct HeapNode<T> {
+    t_bits: u64,
+    seq: u64,
+    item: T,
+}
+
+impl<T> PartialEq for HeapNode<T> {
+    fn eq(&self, other: &Self) -> bool {
+        (self.t_bits, self.seq) == (other.t_bits, other.seq)
+    }
+}
+impl<T> Eq for HeapNode<T> {}
+impl<T> PartialOrd for HeapNode<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for HeapNode<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.t_bits, self.seq).cmp(&(other.t_bits, other.seq))
+    }
+}
+
+/// The original engine core: a `BinaryHeap<Reverse<_>>` min-heap on
+/// [`event_key`]. O(log n) per operation, zero tuning. Kept as the
+/// cross-check oracle for the calendar queue.
+pub struct HeapQueue<T> {
+    heap: BinaryHeap<Reverse<HeapNode<T>>>,
+}
+
+impl<T> Scheduler<T> for HeapQueue<T> {
+    fn with_capacity(cap: usize) -> Self {
+        HeapQueue {
+            heap: BinaryHeap::with_capacity(cap),
+        }
+    }
+
+    fn push(&mut self, t: f64, seq: u64, item: T) {
+        self.heap.push(Reverse(HeapNode {
+            t_bits: t.to_bits(),
+            seq,
+            item,
+        }));
+    }
+
+    fn pop(&mut self) -> Option<(f64, u64, T)> {
+        self.heap
+            .pop()
+            .map(|Reverse(n)| (f64::from_bits(n.t_bits), n.seq, n.item))
+    }
+
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+const MIN_BUCKETS: usize = 16;
+const MAX_BUCKETS: usize = 1 << 20;
+/// Ticks are clamped here so `t * inv_width as u64` can never overflow
+/// into nonsense; anything at or beyond the clamp lives in the ladder
+/// until the wheel advances close enough to place it exactly.
+const MAX_TICK: u64 = 1 << 62;
+
+struct Node<T> {
+    t_bits: u64,
+    seq: u64,
+    /// Cached `tick_of(t)` so refill sweeps never touch the float.
+    tick: u64,
+    item: T,
+}
+
+/// Calendar queue: a power-of-two bucketed timing wheel with a single-rung
+/// overflow ladder, O(1) amortized push/pop under the monotone-push
+/// contract.
+///
+/// Geometry: `buckets.len()` consecutive ticks starting at `cur_tick` map
+/// bijectively onto the bucket array via `tick & mask`; events further out
+/// go to the `ladder` (an unsorted spill vector with a cached minimum
+/// tick) and migrate into the wheel when `cur_tick` catches up. Equal
+/// `(tick, t_bits)` groups drain in one batch sorted by `seq`, so the
+/// per-event cost of simultaneous completions (fan-out joins, burst
+/// arrivals) is one `Vec::pop`. The bucket vectors double as node arenas:
+/// resizes move nodes between them but recycle every allocation through
+/// `pool`, so a steady-state run stops allocating entirely.
+///
+/// Resize policy (live event density): grow 2× when the wheel holds more
+/// than 2 events per bucket, shrink 2× when total pending drops below
+/// an eighth of the bucket count; each resize re-derives the bucket
+/// `width` from the live span (`span / n * 2`, clamped to `[1e-9, 1e18]`
+/// microseconds) and re-anchors `cur_tick` at the earliest pending event.
+pub struct CalendarQueue<T> {
+    buckets: Vec<Vec<Node<T>>>,
+    mask: u64,
+    width: f64,
+    inv_width: f64,
+    /// The wheel window is ticks `[cur_tick, cur_tick + buckets.len())`.
+    cur_tick: u64,
+    /// Nodes currently in `buckets` (excludes ladder and batch).
+    wheel_len: usize,
+    ladder: Vec<Node<T>>,
+    ladder_min_tick: u64,
+    /// The current equal-`(tick, t_bits)` group, sorted by descending
+    /// `seq` so `pop` serves ascending `seq` from the back.
+    batch: Vec<Node<T>>,
+    /// Spare bucket vectors recycled across resizes.
+    pool: Vec<Vec<Node<T>>>,
+    len: usize,
+    /// Last popped `t.to_bits()`, for the monotonicity `debug_assert!`.
+    last_bits: u64,
+}
+
+impl<T> CalendarQueue<T> {
+    #[inline]
+    fn tick_of(&self, t: f64) -> u64 {
+        let x = t * self.inv_width;
+        if x >= MAX_TICK as f64 {
+            MAX_TICK
+        } else {
+            x as u64
+        }
+    }
+
+    /// Move every pending node into a geometry with `new_nb` buckets,
+    /// adapting `width` to the live density and re-anchoring `cur_tick`.
+    fn resize(&mut self, new_nb: usize) {
+        let new_nb = new_nb.clamp(MIN_BUCKETS, MAX_BUCKETS);
+        let mut all: Vec<Node<T>> = Vec::with_capacity(self.wheel_len + self.ladder.len());
+        for b in &mut self.buckets {
+            all.append(b);
+        }
+        all.append(&mut self.ladder);
+        while self.buckets.len() > new_nb {
+            let b = self.buckets.pop().expect("length checked");
+            debug_assert!(b.is_empty());
+            self.pool.push(b);
+        }
+        while self.buckets.len() < new_nb {
+            self.buckets.push(self.pool.pop().unwrap_or_default());
+        }
+        self.mask = new_nb as u64 - 1;
+        if all.len() >= 2 {
+            let mut min_bits = u64::MAX;
+            let mut max_bits = 0u64;
+            for n in &all {
+                min_bits = min_bits.min(n.t_bits);
+                max_bits = max_bits.max(n.t_bits);
+            }
+            let span = f64::from_bits(max_bits) - f64::from_bits(min_bits);
+            if span > 0.0 && span.is_finite() {
+                let w = (span / all.len() as f64 * 2.0).clamp(1e-9, 1e18);
+                self.width = w;
+                self.inv_width = 1.0 / w;
+            }
+        }
+        self.wheel_len = 0;
+        self.ladder_min_tick = u64::MAX;
+        if let Some(min_bits) = all.iter().map(|n| n.t_bits).min() {
+            self.cur_tick = self.tick_of(f64::from_bits(min_bits));
+        }
+        let nb = new_nb as u64;
+        for mut n in all {
+            n.tick = self.tick_of(f64::from_bits(n.t_bits)).max(self.cur_tick);
+            if n.tick >= self.cur_tick + nb {
+                self.ladder_min_tick = self.ladder_min_tick.min(n.tick);
+                self.ladder.push(n);
+            } else {
+                self.wheel_len += 1;
+                self.buckets[(n.tick & self.mask) as usize].push(n);
+            }
+        }
+    }
+
+    /// Refill `batch` with the minimum `(tick, t_bits)` group. Caller
+    /// guarantees at least one event is pending outside the batch.
+    fn refill(&mut self) {
+        if self.buckets.len() > MIN_BUCKETS && self.len < self.buckets.len() / 8 {
+            let target = (self.buckets.len() / 2).max(MIN_BUCKETS);
+            self.resize(target);
+        }
+        loop {
+            let nb = self.buckets.len() as u64;
+            // Migrate ladder nodes that now fall inside the wheel window.
+            if self.ladder_min_tick < self.cur_tick + nb {
+                let horizon = self.cur_tick + nb;
+                let mut i = 0;
+                while i < self.ladder.len() {
+                    if self.ladder[i].tick < horizon {
+                        let n = self.ladder.swap_remove(i);
+                        self.wheel_len += 1;
+                        self.buckets[(n.tick & self.mask) as usize].push(n);
+                    } else {
+                        i += 1;
+                    }
+                }
+                self.ladder_min_tick =
+                    self.ladder.iter().map(|n| n.tick).min().unwrap_or(u64::MAX);
+            }
+            if self.wheel_len == 0 {
+                // Far-future jump: everything pending lives in the ladder.
+                debug_assert!(!self.ladder.is_empty());
+                self.cur_tick = self.ladder_min_tick;
+                continue;
+            }
+            // Sweep the window for the first occupied tick. Inside the
+            // window the tick -> bucket map is a bijection, so a bucket is
+            // either empty or holds exactly one tick's nodes.
+            let mut due = None;
+            for off in 0..nb {
+                let tick = self.cur_tick + off;
+                let b = &self.buckets[(tick & self.mask) as usize];
+                if b.iter().any(|n| n.tick == tick) {
+                    due = Some(tick);
+                    break;
+                }
+            }
+            // Defensive fallback: if a clamped tick ever escaped the
+            // window invariant, serve the global minimum instead of
+            // looping forever.
+            let tick = match due {
+                Some(t) => t,
+                None => self
+                    .buckets
+                    .iter()
+                    .flat_map(|b| b.iter().map(|n| n.tick))
+                    .min()
+                    .expect("wheel_len > 0"),
+            };
+            self.cur_tick = tick;
+            let bucket = &mut self.buckets[(tick & self.mask) as usize];
+            let mut min_bits = u64::MAX;
+            for n in bucket.iter() {
+                if n.tick == tick && n.t_bits < min_bits {
+                    min_bits = n.t_bits;
+                }
+            }
+            let mut i = 0;
+            while i < bucket.len() {
+                if bucket[i].tick == tick && bucket[i].t_bits == min_bits {
+                    self.batch.push(bucket.swap_remove(i));
+                    self.wheel_len -= 1;
+                } else {
+                    i += 1;
+                }
+            }
+            // Serve ascending seq by popping from the back.
+            self.batch.sort_unstable_by(|a, b| b.seq.cmp(&a.seq));
+            return;
+        }
+    }
+}
+
+impl<T> Scheduler<T> for CalendarQueue<T> {
+    fn with_capacity(cap: usize) -> Self {
+        let nb = cap.next_power_of_two().clamp(MIN_BUCKETS, MAX_BUCKETS);
+        CalendarQueue {
+            buckets: (0..nb).map(|_| Vec::new()).collect(),
+            mask: nb as u64 - 1,
+            width: 1.0,
+            inv_width: 1.0,
+            cur_tick: 0,
+            wheel_len: 0,
+            ladder: Vec::new(),
+            ladder_min_tick: u64::MAX,
+            batch: Vec::new(),
+            pool: Vec::new(),
+            len: 0,
+            last_bits: 0,
+        }
+    }
+
+    fn push(&mut self, t: f64, seq: u64, item: T) {
+        debug_assert!(
+            t.to_bits() >= self.last_bits,
+            "monotone-push contract violated: push at t={t} precedes the last pop"
+        );
+        let tick = self.tick_of(t).max(self.cur_tick);
+        let nb = self.buckets.len() as u64;
+        let node = Node {
+            t_bits: t.to_bits(),
+            seq,
+            tick,
+            item,
+        };
+        if tick >= self.cur_tick + nb {
+            self.ladder_min_tick = self.ladder_min_tick.min(tick);
+            self.ladder.push(node);
+        } else {
+            self.wheel_len += 1;
+            self.buckets[(tick & self.mask) as usize].push(node);
+        }
+        self.len += 1;
+        if self.wheel_len > 2 * self.buckets.len() && self.buckets.len() < MAX_BUCKETS {
+            let target = self.buckets.len() * 2;
+            self.resize(target);
+        }
+    }
+
+    fn pop(&mut self) -> Option<(f64, u64, T)> {
+        if self.batch.is_empty() {
+            if self.len == 0 {
+                return None;
+            }
+            self.refill();
+        }
+        let n = self.batch.pop().expect("refill produced a batch");
+        self.len -= 1;
+        self.last_bits = n.t_bits;
+        Some((f64::from_bits(n.t_bits), n.seq, n.item))
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain<S: Scheduler<u32>>(s: &mut S) -> Vec<(u64, u64, u32)> {
+        let mut out = Vec::new();
+        while let Some((t, seq, item)) = s.pop() {
+            out.push((t.to_bits(), seq, item));
+        }
+        out
+    }
+
+    #[test]
+    fn both_backends_agree_on_a_fixed_stream() {
+        let times = [0.5, 0.5, 3.25, 0.5, 17.0, 3.25, 1e9, 2.0, 0.5, 42.0];
+        let mut h = HeapQueue::with_capacity(4);
+        let mut c = CalendarQueue::with_capacity(4);
+        for (i, &t) in times.iter().enumerate() {
+            h.push(t, i as u64, i as u32);
+            c.push(t, i as u64, i as u32);
+        }
+        assert_eq!(h.len(), c.len());
+        let a = drain(&mut h);
+        let b = drain(&mut c);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0] < w[1]), "ascending event_key");
+        assert!(h.is_empty() && c.is_empty());
+    }
+
+    #[test]
+    fn equal_timestamps_pop_in_seq_order() {
+        // Regression for the (time, seq) ordering contract: simultaneous
+        // events must pop in schedule order on every backend.
+        let mut c = CalendarQueue::with_capacity(16);
+        let mut h = HeapQueue::with_capacity(16);
+        for seq in 0..64u64 {
+            c.push(7.0, seq, seq as u32);
+            h.push(7.0, seq, seq as u32);
+        }
+        for want in 0..64u64 {
+            let (tc, sc, ic) = c.pop().expect("calendar has events");
+            let (th, sh, ih) = h.pop().expect("heap has events");
+            assert_eq!((tc.to_bits(), sc, ic), (th.to_bits(), sh, ih));
+            assert_eq!(sc, want);
+        }
+        assert!(c.pop().is_none() && h.pop().is_none());
+    }
+
+    #[test]
+    fn interleaved_monotone_pushes_stay_ordered() {
+        let mut c = CalendarQueue::with_capacity(4);
+        let mut h = HeapQueue::with_capacity(4);
+        let mut seq = 0u64;
+        let mut now = 0.0f64;
+        let mut push = |c: &mut CalendarQueue<u32>, h: &mut HeapQueue<u32>, t: f64| {
+            c.push(t, seq, seq as u32);
+            h.push(t, seq, seq as u32);
+            seq += 1;
+        };
+        for round in 0..200 {
+            let base = now;
+            for k in 0..5u32 {
+                // Quantized offsets force duplicate timestamps.
+                push(&mut c, &mut h, base + f64::from(k % 3) * 0.25);
+            }
+            let (t, s, i) = c.pop().expect("pending");
+            let (th, sh, ih) = h.pop().expect("pending");
+            assert_eq!((t.to_bits(), s, i), (th.to_bits(), sh, ih), "round {round}");
+            now = t;
+        }
+        assert_eq!(drain(&mut c), drain(&mut h));
+    }
+
+    #[test]
+    fn parse_and_label_roundtrip() {
+        assert_eq!(SchedKind::parse("heap").unwrap(), SchedKind::Heap);
+        assert_eq!(SchedKind::parse("calendar").unwrap(), SchedKind::Calendar);
+        assert_eq!(SchedKind::default(), SchedKind::Calendar);
+        for k in [SchedKind::Heap, SchedKind::Calendar] {
+            assert_eq!(SchedKind::parse(k.label()).unwrap(), k);
+        }
+        assert!(SchedKind::parse("splay").is_err());
+    }
+
+    #[test]
+    fn event_key_orders_by_time_then_seq() {
+        assert!(event_key(1.0, 9) < event_key(2.0, 0));
+        assert!(event_key(2.0, 0) < event_key(2.0, 1));
+        assert_eq!(event_key(0.0, 0), (0, 0));
+    }
+}

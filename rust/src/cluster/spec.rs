@@ -101,6 +101,12 @@ pub struct ClusterSpec {
     /// runs additionally surface a merged fleet summary (tables +
     /// metrics JSONL).
     pub telemetry: String,
+    /// Event-scheduler backend (DESIGN.md §13): `"calendar"` (the
+    /// default timing wheel) or `"heap"` (the original binary heap,
+    /// kept as a cross-check oracle). Both produce byte-identical
+    /// output; the knob only serializes when non-default so existing
+    /// spec JSON and campaign-store content hashes are unchanged.
+    pub scheduler: String,
 }
 
 impl Default for ClusterSpec {
@@ -122,6 +128,7 @@ impl Default for ClusterSpec {
             total_ways: DEFAULT_TOTAL_WAYS,
             interference: DEFAULT_INTERFERENCE,
             telemetry: "exact".into(),
+            scheduler: "calendar".into(),
         }
     }
 }
@@ -251,6 +258,8 @@ impl ClusterSpec {
             }
         }
         crate::obs::telemetry::TelemetryCfg::parse(&self.telemetry)
+            .with_context(|| format!("in cluster '{}'", self.name))?;
+        super::sched::SchedKind::parse(&self.scheduler)
             .with_context(|| format!("in cluster '{}'", self.name))?;
         if !self.interference.is_finite() || self.interference < 0.0 {
             bail!(
@@ -479,6 +488,12 @@ impl ClusterSpec {
         if self.telemetry != "exact" {
             fields.push(("telemetry", Json::str(&self.telemetry)));
         }
+        // Same discipline for the scheduler backend: both backends give
+        // byte-identical results, so only the non-default oracle request
+        // is worth writing down.
+        if self.scheduler != "calendar" {
+            fields.push(("scheduler", Json::str(&self.scheduler)));
+        }
         Json::obj(fields)
     }
 
@@ -644,6 +659,9 @@ impl ClusterSpec {
         if let Some(v) = j.get("telemetry").and_then(Json::as_str) {
             spec.telemetry = v.to_string();
         }
+        if let Some(v) = j.get("scheduler").and_then(Json::as_str) {
+            spec.scheduler = v.to_string();
+        }
         spec.validate()?;
         Ok(spec)
     }
@@ -705,6 +723,7 @@ mod tests {
             total_ways: DEFAULT_TOTAL_WAYS,
             interference: DEFAULT_INTERFERENCE,
             telemetry: "exact".into(),
+            scheduler: "calendar".into(),
         }
     }
 
@@ -874,6 +893,7 @@ mod tests {
         assert!(!dump.contains("total_ways"), "total_ways leaked: {dump}");
         assert!(!dump.contains("interference"), "interference leaked: {dump}");
         assert!(!dump.contains("telemetry"), "telemetry key leaked: {dump}");
+        assert!(!dump.contains("scheduler"), "scheduler key leaked: {dump}");
         // Non-default partition geometry still round-trips.
         let s = ClusterSpec { total_ways: 16, interference: 0.5, ..tenant_spec() };
         let back = ClusterSpec::from_json(&s.to_json()).unwrap();
@@ -896,6 +916,25 @@ mod tests {
         // Garbage modes and geometries are rejected at validate().
         for bad in ["psychic", "sketch:128x4", "compare:w0d4p10k16", "exact:w64d4p10k16"] {
             let s = ClusterSpec { telemetry: bad.into(), ..small() };
+            assert!(s.validate().is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn scheduler_knob_validates_and_roundtrips() {
+        // The non-default oracle request round-trips through JSON.
+        let s = ClusterSpec { scheduler: "heap".into(), ..small() };
+        assert!(s.validate().is_ok());
+        let back = ClusterSpec::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        assert!(s.to_json().dump().contains("\"scheduler\":\"heap\""));
+        // The default spelling validates but never serializes (checked
+        // byte-for-byte by tenantless_spec_serializes_exactly_as_before).
+        let dflt = ClusterSpec { scheduler: "calendar".into(), ..small() };
+        assert!(dflt.validate().is_ok());
+        // Unknown backends are rejected at validate().
+        for bad in ["splay", "ladder", "", "Heap"] {
+            let s = ClusterSpec { scheduler: bad.into(), ..small() };
             assert!(s.validate().is_err(), "accepted '{bad}'");
         }
     }

@@ -5,7 +5,8 @@
 //! slofetch campaign --spec FILE [--threads N] [--out results.jsonl]
 //! slofetch cluster --spec FILE [--threads N] [--policies reactive,hysteresis,...]
 //!                  [--service-times analytic|empirical] [--trace FILE.slft]
-//!                  [--tenants on|off] [--telemetry MODE] [--obs] [--obs-sample SHIFT]
+//!                  [--tenants on|off] [--telemetry MODE] [--scheduler heap|calendar]
+//!                  [--obs] [--obs-sample SHIFT]
 //!                  [--trace-out FILE.json] [--metrics-out FILE.jsonl]
 //! slofetch simulate --app websearch --prefetcher ceip256 [--records N] [--ml] [--budget N]
 //!                   [--telemetry MODE]
@@ -74,8 +75,8 @@ const USAGE: &str = "usage:
   slofetch campaign --spec FILE [--threads N] [--out results.jsonl]
   slofetch cluster --spec FILE [--threads N] [--policies reactive,hysteresis,predictive,cost-aware]
                    [--service-times analytic|empirical] [--trace FILE.slft] [--tenants on|off]
-                   [--telemetry MODE] [--obs] [--obs-sample SHIFT] [--trace-out FILE.json]
-                   [--metrics-out FILE.jsonl]
+                   [--telemetry MODE] [--scheduler heap|calendar] [--obs] [--obs-sample SHIFT]
+                   [--trace-out FILE.json] [--metrics-out FILE.jsonl]
   slofetch simulate --app A --prefetcher P [--records N] [--ml] [--adapt-window] [--budget N] [--pjrt]
                     [--telemetry MODE]
   slofetch gen-trace --app A --records N --out FILE
@@ -238,6 +239,12 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     // validated with the rest of the spec below.
     if let Some(knob) = args.opt("telemetry") {
         spec.telemetry = knob.to_string();
+    }
+    // `--scheduler heap|calendar` picks the event-queue backend
+    // (DESIGN.md §13). Both produce byte-identical stdout; `heap` is
+    // the cross-check oracle for the default calendar queue.
+    if let Some(knob) = args.opt("scheduler") {
+        spec.scheduler = knob.to_string();
     }
     spec.validate()?;
     let threads = args.threads()?;

@@ -1,0 +1,204 @@
+//! Scheduler-equivalence suite (DESIGN.md §13): the calendar queue must
+//! be observationally identical to the binary-heap oracle on every
+//! stream the engine can legally produce — monotone pushes (push time ≥
+//! last popped time) with arbitrary duplicate timestamps. Property tests
+//! drive random streams through both backends and demand identical pop
+//! order bit-for-bit; directed tests hit the calendar's geometry edges
+//! (all-equal timestamps, far-future ladder jumps, empty-bucket sweeps,
+//! density-driven grow/shrink) and the spec-level knob end to end.
+
+use std::path::Path;
+
+use slofetch::cluster::sched::{event_key, CalendarQueue, HeapQueue, Scheduler};
+use slofetch::cluster::{self, ClusterSpec};
+use slofetch::util::prop;
+use slofetch::util::rng::Rng;
+
+/// Pop everything, returning `(t_bits, seq, item)` so float comparisons
+/// are exact.
+fn drain<S: Scheduler<usize>>(s: &mut S) -> Vec<(u64, u64, usize)> {
+    let mut out = Vec::new();
+    while let Some((t, seq, item)) = s.pop() {
+        out.push((t.to_bits(), seq, item));
+    }
+    assert!(s.is_empty());
+    out
+}
+
+/// Push one stream through both backends and assert identical pop order;
+/// also checks the order against the contractual `event_key` sort.
+fn assert_equivalent(ts: &[f64]) {
+    let mut heap = HeapQueue::with_capacity(ts.len());
+    let mut cal = CalendarQueue::with_capacity(ts.len());
+    for (i, &t) in ts.iter().enumerate() {
+        heap.push(t, i as u64, i);
+        cal.push(t, i as u64, i);
+    }
+    assert_eq!(heap.len(), ts.len());
+    assert_eq!(cal.len(), ts.len());
+    let h = drain(&mut heap);
+    let c = drain(&mut cal);
+    assert_eq!(h, c, "backends disagree on pop order");
+    let mut expect: Vec<(u64, u64, usize)> =
+        ts.iter().enumerate().map(|(i, &t)| (t.to_bits(), i as u64, i)).collect();
+    expect.sort_by_key(|&(bits, seq, _)| event_key(f64::from_bits(bits), seq));
+    assert_eq!(h, expect, "pop order is not the (time, seq) sort");
+}
+
+/// Random monotone timestamp stream with deliberate collisions: ~1/4 of
+/// events repeat the previous timestamp exactly and ~1/4 advance by a
+/// small integer (colliding with later integer steps).
+fn stream() -> impl FnMut(&mut Rng, usize) -> Vec<f64> {
+    move |r, size| {
+        let mut t = 0.0f64;
+        let mut out = Vec::with_capacity(size * 8 + 1);
+        for _ in 0..size * 8 + 1 {
+            match r.below(4) {
+                0 => {}
+                1 => t += r.below(3) as f64,
+                _ => t += r.f64() * 10.0,
+            }
+            out.push(t);
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_push_all_drain_all_matches_heap() {
+    prop::check_unit("scheduler equivalence (batch)", 40, stream(), |ts| {
+        assert_equivalent(ts);
+    });
+}
+
+#[test]
+fn prop_interleaved_push_pop_matches_heap() {
+    // The engine's actual shape: pops interleaved with pushes at or
+    // after the last popped time (dt ≥ 0 service/arrival offsets).
+    prop::check_unit("scheduler equivalence (interleaved)", 40, stream(), |ts| {
+        let mut heap = HeapQueue::with_capacity(8);
+        let mut cal = CalendarQueue::with_capacity(8);
+        let mut r = Rng::new(0xC0FFEE ^ ts.len() as u64);
+        let mut seq = 0u64;
+        let mut now = 0.0f64;
+        let mut it = ts.iter().copied().peekable();
+        while it.peek().is_some() || !heap.is_empty() {
+            for _ in 0..=r.below(3) {
+                if let Some(dt) = it.next() {
+                    // Stream values are monotone from 0, so `now + dt`
+                    // respects the monotone-push contract by design.
+                    heap.push(now + dt, seq, seq as usize);
+                    cal.push(now + dt, seq, seq as usize);
+                    seq += 1;
+                }
+            }
+            for _ in 0..=r.below(2) {
+                let h = heap.pop();
+                let c = cal.pop();
+                match (h, c) {
+                    (None, None) => {}
+                    (Some((ht, hs, hi)), Some((ct, cs, ci))) => {
+                        assert_eq!((ht.to_bits(), hs, hi), (ct.to_bits(), cs, ci));
+                        now = ht;
+                    }
+                    (h, c) => panic!("one backend emptied early: {h:?} vs {c:?}"),
+                }
+            }
+        }
+        assert_eq!(drain(&mut heap), drain(&mut cal));
+    });
+}
+
+#[test]
+fn all_equal_timestamps_pop_in_seq_order() {
+    // Regression for the (time, seq) tie-break contract: simultaneous
+    // events must drain in push order on every backend, so a scheduler
+    // swap can never reorder same-timestamp work.
+    let ts = vec![42.5; 1000];
+    assert_equivalent(&ts);
+    let mut cal = CalendarQueue::with_capacity(4);
+    for (i, &t) in ts.iter().enumerate() {
+        cal.push(t, i as u64, i);
+    }
+    for want in 0..ts.len() {
+        let (t, seq, item) = cal.pop().unwrap();
+        assert_eq!((t.to_bits(), seq, item), (42.5f64.to_bits(), want as u64, want));
+    }
+    assert!(cal.pop().is_none());
+}
+
+#[test]
+fn far_future_jump_crosses_the_ladder() {
+    // A handful of near events then far-future outliers: the outliers
+    // land in the overflow ladder and the wheel must jump to them
+    // (rather than sweeping ~1e12 empty buckets) once it drains.
+    let mut ts = vec![0.0, 0.5, 1.0, 1.5, 2.0];
+    ts.extend([1e9, 1e9, 1e9 + 1.0, 1e12, 1e12 + 0.25]);
+    assert_equivalent(&ts);
+}
+
+#[test]
+fn sparse_stream_sweeps_empty_buckets() {
+    // Exponentially widening gaps: successive events keep landing far
+    // past the current wheel window, exercising empty-bucket sweeps,
+    // ladder migration, and repeated re-anchoring resizes.
+    let mut ts = Vec::new();
+    let mut t = 0.0f64;
+    let mut gap = 1e-3f64;
+    for _ in 0..64 {
+        ts.push(t);
+        t += gap;
+        gap *= 1.7;
+    }
+    assert_equivalent(&ts);
+}
+
+#[test]
+fn dense_then_sparse_forces_grow_and_shrink() {
+    // Thousands of tightly packed events force the wheel to grow; after
+    // the bulk drains, the stragglers trigger the shrink path on refill.
+    let mut heap = HeapQueue::with_capacity(16);
+    let mut cal = CalendarQueue::with_capacity(16);
+    let mut r = Rng::new(9);
+    let mut seq = 0u64;
+    for _ in 0..8_000 {
+        let t = r.f64() * 10.0;
+        heap.push(t, seq, seq as usize);
+        cal.push(t, seq, seq as usize);
+        seq += 1;
+    }
+    let mut last = 0.0;
+    for _ in 0..7_900 {
+        let (ht, hs, hi) = heap.pop().unwrap();
+        let (ct, cs, ci) = cal.pop().unwrap();
+        assert_eq!((ht.to_bits(), hs, hi), (ct.to_bits(), cs, ci));
+        last = ht;
+    }
+    for _ in 0..32 {
+        let t = last + 100.0 + r.f64() * 5_000.0;
+        heap.push(t, seq, seq as usize);
+        cal.push(t, seq, seq as usize);
+        seq += 1;
+    }
+    assert_eq!(drain(&mut heap), drain(&mut cal));
+}
+
+#[test]
+fn spec_level_scheduler_knob_is_byte_identical() {
+    // End to end through prepare_spec/run_spec: the shipped example spec
+    // under `scheduler: heap` must reproduce the default calendar run's
+    // report byte-stream exactly (the §8 determinism surface).
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/cluster.json");
+    let mut spec = ClusterSpec::load(&path).expect("examples/cluster.json must load");
+    spec.requests = 4_000;
+    let cal = cluster::run_spec(&spec, 2).unwrap();
+    spec.scheduler = "heap".into();
+    spec.validate().unwrap();
+    let heap = cluster::run_spec(&spec, 2).unwrap();
+    assert_eq!(cluster::report(&cal).markdown(), cluster::report(&heap).markdown());
+    assert_eq!(cal.total_events, heap.total_events);
+    for (a, b) in cal.scenarios.iter().zip(&heap.scenarios) {
+        assert_eq!(a.p99_us.to_bits(), b.p99_us.to_bits(), "{}", a.label);
+        assert_eq!(a.peak_heap, b.peak_heap, "{}", a.label);
+    }
+}
