@@ -1,19 +1,28 @@
 #!/usr/bin/env python3
-"""Bench-trajectory gate: compare a fresh BENCH_cluster.json against the
+"""Bench-trajectory gate: compare fresh bench JSON reports against the
 committed ci/BENCH_baseline.json.
 
 Usage:
-    python3 ci/check_bench.py CURRENT.json BASELINE.json [tolerance]
+    python3 ci/check_bench.py CURRENT.json [CURRENT2.json ...] BASELINE.json [tolerance]
 
-For every scenario in the baseline's `events_per_sec` map, the current
-events/sec must be >= tolerance * baseline (default 0.85, i.e. fail on a
->15% regression). Scenarios present only in the current file are
-reported but not gated, so adding a bench scenario never requires a
-baseline update in the same commit. The calendar-vs-heap speedup is
-printed (and gated >= `min_speedup_vs_heap` when the baseline sets it)
-so the tentpole perf claim stays enforced, not aspirational.
+The last .json argument is the baseline; every earlier one is a current
+bench report (e.g. BENCH_cluster.json and BENCH_store.json from one CI
+run). Current reports are merged: their `events_per_sec` maps must not
+collide, and every `speedup_vs_<suffix>` map is collected per suffix.
 
-Exit status: 0 when every gated ratio clears the floor, 1 otherwise.
+For every scenario in the baseline's `events_per_sec` map, the merged
+current events/sec must be >= tolerance * baseline (default 0.85, i.e.
+fail on a >15% regression). Scenarios present only in the current
+reports are printed but not gated, so adding a bench scenario never
+requires a baseline update in the same commit.
+
+For every baseline key `min_speedup_vs_<suffix>` (e.g.
+`min_speedup_vs_heap` for the calendar-queue claim,
+`min_speedup_vs_jsonl` for the tiered-store cold-open claim), every
+entry of the merged `speedup_vs_<suffix>` map must clear that floor —
+the tentpole perf claims stay enforced, not aspirational.
+
+Exit status: 0 when every gated ratio clears its floor, 1 otherwise.
 """
 
 import json
@@ -21,21 +30,35 @@ import sys
 
 
 def main(argv):
-    if len(argv) < 3 or len(argv) > 4:
+    args = argv[1:]
+    tolerance = 0.85
+    if args and not args[-1].endswith(".json"):
+        tolerance = float(args.pop())
+    if len(args) < 2:
         print(__doc__, file=sys.stderr)
         return 2
-    cur_path, base_path = argv[1], argv[2]
-    tolerance = float(argv[3]) if len(argv) == 4 else 0.85
+    base_path = args.pop()
+    cur_paths = args
 
-    with open(cur_path) as f:
-        cur = json.load(f)
     with open(base_path) as f:
         base = json.load(f)
 
-    cur_eps = cur.get("events_per_sec", {})
+    cur_eps = {}
+    speedups = {}  # suffix -> {scenario: ratio}
+    for path in cur_paths:
+        with open(path) as f:
+            cur = json.load(f)
+        for name, val in cur.get("events_per_sec", {}).items():
+            if name in cur_eps:
+                print(f"bench gate: duplicate scenario '{name}' in {path}", file=sys.stderr)
+                return 2
+            cur_eps[name] = val
+        for key, val in cur.items():
+            if key.startswith("speedup_vs_") and isinstance(val, dict):
+                speedups.setdefault(key[len("speedup_vs_"):], {}).update(val)
+
     base_eps = base.get("events_per_sec", {})
-    speedups = cur.get("speedup_vs_heap", {})
-    min_speedup = base.get("min_speedup_vs_heap")
+    flat_speedups = {n: r for per in speedups.values() for n, r in per.items()}
 
     failures = []
     print(f"bench gate: tolerance {tolerance:.2f}x of baseline ({base_path})")
@@ -43,27 +66,37 @@ def main(argv):
         floor = base_eps[name]
         got = cur_eps.get(name)
         if got is None:
-            failures.append(f"{name}: missing from {cur_path}")
+            failures.append(f"{name}: missing from {', '.join(cur_paths)}")
             continue
         ratio = got / floor if floor > 0 else float("inf")
         verdict = "ok" if ratio >= tolerance else "FAIL"
         line = (
-            f"  {name:<22} {got / 1e6:8.2f}M ev/s  baseline {floor / 1e6:8.2f}M"
+            f"  {name:<28} {got / 1e6:8.2f}M ev/s  baseline {floor / 1e6:8.2f}M"
             f"  ratio {ratio:5.2f}x  {verdict}"
         )
-        if name in speedups:
-            line += f"  (calendar/heap {speedups[name]:.2f}x)"
+        if name in flat_speedups:
+            line += f"  (speedup {flat_speedups[name]:.2f}x)"
         print(line)
         if ratio < tolerance:
             failures.append(f"{name}: {ratio:.2f}x < {tolerance:.2f}x floor")
-        if min_speedup is not None and name in speedups:
-            if speedups[name] < min_speedup:
-                failures.append(
-                    f"{name}: calendar/heap speedup {speedups[name]:.2f}x"
-                    f" < required {min_speedup:.2f}x"
-                )
     for name in sorted(set(cur_eps) - set(base_eps)):
-        print(f"  {name:<22} {cur_eps[name] / 1e6:8.2f}M ev/s  (no baseline, not gated)")
+        print(f"  {name:<28} {cur_eps[name] / 1e6:8.2f}M ev/s  (no baseline, not gated)")
+
+    for suffix, per in sorted(speedups.items()):
+        floor = base.get(f"min_speedup_vs_{suffix}")
+        if floor is None:
+            continue
+        for name in sorted(per):
+            verdict = "ok" if per[name] >= floor else "FAIL"
+            print(
+                f"  speedup_vs_{suffix}[{name}] {per[name]:6.2f}x"
+                f"  floor {floor:.2f}x  {verdict}"
+            )
+            if per[name] < floor:
+                failures.append(
+                    f"{name}: speedup vs {suffix} {per[name]:.2f}x"
+                    f" < required {floor:.2f}x"
+                )
 
     if failures:
         print("bench gate: FAILED", file=sys.stderr)

@@ -11,7 +11,12 @@
 #   - cluster stdout is byte-identical across --scheduler heap /
 #     --scheduler calendar (the §13 scheduler-equivalence oracle);
 #   - campaign stores are byte-identical across thread counts and a
-#     rerun against an existing store recomputes zero cells;
+#     rerun against an existing store recomputes zero cells — checked
+#     for BOTH store formats (DESIGN.md §6): the legacy single-file
+#     JSONL log (cmp) and the tiered segment directory (diff -r);
+#   - jsonl-format and tiered-format campaigns render byte-identical
+#     reports, a legacy JSONL store imports into the tiered layout with
+#     0 recomputed cells, and explicit compaction changes no report byte;
 #   - observability artifacts (Perfetto trace, metrics JSONL) are
 #     thread-count invariant and parse as JSON.
 #
@@ -73,20 +78,22 @@ step "slft file replay is rerun invariant"
 "$BIN" cluster --spec "$EX/cluster_empirical.json" --trace /tmp/ws.slft --threads 1 > /tmp/cluster-slft-b.out
 diff -u /tmp/cluster-slft-a.out /tmp/cluster-slft-b.out
 
-step "campaign store is thread-count invariant"
-"$BIN" campaign --spec "$EX/campaign_cluster.json" --threads 1 --out /tmp/campaign-t1.jsonl > /dev/null
-"$BIN" campaign --spec "$EX/campaign_cluster.json" --threads 8 --out /tmp/campaign-t8.jsonl > /dev/null
+step "campaign store (jsonl format) is thread-count invariant"
+rm -f /tmp/campaign-t1.jsonl /tmp/campaign-t8.jsonl
+"$BIN" campaign --spec "$EX/campaign_cluster.json" --store-format jsonl --threads 1 --out /tmp/campaign-t1.jsonl > /dev/null
+"$BIN" campaign --spec "$EX/campaign_cluster.json" --store-format jsonl --threads 8 --out /tmp/campaign-t8.jsonl > /dev/null
 cmp /tmp/campaign-t1.jsonl /tmp/campaign-t8.jsonl
 
-step "campaign rerun recomputes zero cells"
-"$BIN" campaign --spec "$EX/campaign_cluster.json" --threads 8 --out /tmp/campaign-t1.jsonl | tee /tmp/rerun.log
+step "campaign rerun (jsonl format) recomputes zero cells"
+"$BIN" campaign --spec "$EX/campaign_cluster.json" --store-format jsonl --threads 8 --out /tmp/campaign-t1.jsonl | tee /tmp/rerun.log
 grep -q "(0 computed," /tmp/rerun.log
 cmp /tmp/campaign-t1.jsonl /tmp/campaign-t8.jsonl
 
 step "tenant campaign renders the pairing report and resumes"
-"$BIN" campaign --spec "$EX/campaign_tenants.json" --threads 8 --out /tmp/campaign-ten.jsonl | tee /tmp/campaign-ten.log
+rm -f /tmp/campaign-ten.jsonl
+"$BIN" campaign --spec "$EX/campaign_tenants.json" --store-format jsonl --threads 8 --out /tmp/campaign-ten.jsonl | tee /tmp/campaign-ten.log
 grep -q "campaign_tenants" /tmp/campaign-ten.log
-"$BIN" campaign --spec "$EX/campaign_tenants.json" --threads 2 --out /tmp/campaign-ten.jsonl | tee /tmp/campaign-ten-rerun.log
+"$BIN" campaign --spec "$EX/campaign_tenants.json" --store-format jsonl --threads 2 --out /tmp/campaign-ten.jsonl | tee /tmp/campaign-ten-rerun.log
 grep -q "(0 computed," /tmp/campaign-ten-rerun.log
 grep -q "campaign_tenants" /tmp/campaign-ten-rerun.log
 
@@ -130,10 +137,52 @@ diff -u /tmp/cluster-obs-off.out /tmp/cluster-exact.out
 ! grep -q "cluster_fleet" /tmp/cluster-exact.out
 
 step "sketch campaign renders the accuracy report and resumes"
-"$BIN" campaign --spec "$EX/campaign_sketch.json" --threads 8 --out /tmp/campaign-sketch.jsonl | tee /tmp/campaign-sketch.log
+rm -f /tmp/campaign-sketch.jsonl
+"$BIN" campaign --spec "$EX/campaign_sketch.json" --store-format jsonl --threads 8 --out /tmp/campaign-sketch.jsonl | tee /tmp/campaign-sketch.log
 grep -q "campaign_sketch" /tmp/campaign-sketch.log
-"$BIN" campaign --spec "$EX/campaign_sketch.json" --threads 2 --out /tmp/campaign-sketch.jsonl | tee /tmp/campaign-sketch-rerun.log
+"$BIN" campaign --spec "$EX/campaign_sketch.json" --store-format jsonl --threads 2 --out /tmp/campaign-sketch.jsonl | tee /tmp/campaign-sketch-rerun.log
 grep -q "(0 computed," /tmp/campaign-sketch-rerun.log
 grep -q "campaign_sketch" /tmp/campaign-sketch-rerun.log
+
+# ---- tiered store (DESIGN.md §6) -------------------------------------
+# The summary line carries wall-clock timing, so report comparisons
+# filter it out; everything else on stdout is the byte-compared surface.
+
+step "tiered campaign store is thread-count invariant"
+rm -rf /tmp/campaign-t1.store /tmp/campaign-t8.store
+"$BIN" campaign --spec "$EX/campaign_cluster.json" --threads 1 --out /tmp/campaign-t1.store > /tmp/campaign-tier-t1.log
+"$BIN" campaign --spec "$EX/campaign_cluster.json" --threads 8 --out /tmp/campaign-t8.store > /tmp/campaign-tier-t8.log
+diff -r /tmp/campaign-t1.store /tmp/campaign-t8.store
+grep -v "^campaign '" /tmp/campaign-tier-t1.log > /tmp/campaign-tier-t1.rpt
+grep -v "^campaign '" /tmp/campaign-tier-t8.log > /tmp/campaign-tier-t8.rpt
+diff -u /tmp/campaign-tier-t1.rpt /tmp/campaign-tier-t8.rpt
+
+step "tiered campaign rerun recomputes zero cells and leaves the store untouched"
+"$BIN" campaign --spec "$EX/campaign_cluster.json" --threads 8 --out /tmp/campaign-t1.store | tee /tmp/campaign-tier-rerun.log
+grep -q "(0 computed," /tmp/campaign-tier-rerun.log
+diff -r /tmp/campaign-t1.store /tmp/campaign-t8.store
+
+step "jsonl-format and tiered-format campaigns render identical report bytes"
+grep -v "^campaign '" /tmp/rerun.log > /tmp/campaign-jsonl.rpt
+grep -v "^campaign '" /tmp/campaign-tier-rerun.log > /tmp/campaign-tier.rpt
+cmp /tmp/campaign-jsonl.rpt /tmp/campaign-tier.rpt
+
+step "a legacy jsonl store imports into the tiered layout (0 computed)"
+rm -rf /tmp/campaign-legacy.jsonl /tmp/campaign-legacy.jsonl.migrate-tmp
+cp /tmp/campaign-sketch.jsonl /tmp/campaign-legacy.jsonl
+"$BIN" campaign --spec "$EX/campaign_sketch.json" --store-format tiered --threads 8 --out /tmp/campaign-legacy.jsonl | tee /tmp/campaign-import.log
+grep -q "(0 computed," /tmp/campaign-import.log
+test -d /tmp/campaign-legacy.jsonl
+grep -v "^campaign '" /tmp/campaign-import.log > /tmp/campaign-import.rpt
+grep -v "^campaign '" /tmp/campaign-sketch-rerun.log > /tmp/campaign-sketch.rpt
+cmp /tmp/campaign-sketch.rpt /tmp/campaign-import.rpt
+
+step "campaign compact merges segments and changes no report byte"
+"$BIN" campaign compact --out /tmp/campaign-t1.store | tee /tmp/compact.log
+grep -q "compacted" /tmp/compact.log
+"$BIN" campaign --spec "$EX/campaign_cluster.json" --threads 8 --out /tmp/campaign-t1.store | tee /tmp/campaign-postcompact.log
+grep -q "(0 computed," /tmp/campaign-postcompact.log
+grep -v "^campaign '" /tmp/campaign-postcompact.log > /tmp/campaign-postcompact.rpt
+cmp /tmp/campaign-tier.rpt /tmp/campaign-postcompact.rpt
 
 echo "determinism gate: all checks passed"

@@ -1,0 +1,184 @@
+//! Campaign-store micro-bench (DESIGN.md §6): append throughput,
+//! cold-open resume latency, and `contains()` probe latency on
+//! synthetic cells, for the tiered store against the legacy JSONL log.
+//! The tentpole claim gated in CI is cold-open resume: a tiered store
+//! reopens from segment footers (no log replay), so it must be >=10x
+//! faster than parsing the same records back out of a JSONL file.
+//! Scale with SLOFETCH_BENCH_STORE_CELLS (comma-separated cell counts,
+//! default "10000,100000" — add 1000000 for the million-cell sweep) and
+//! set SLOFETCH_BENCH_JSON=PATH to emit the machine-readable report the
+//! CI bench-smoke job gates against `ci/BENCH_baseline.json`.
+
+use slofetch::campaign::store::CellRecord;
+use slofetch::campaign::{ResultStore, StoreFormat};
+use slofetch::util::json::Json;
+use slofetch::util::timer::time_it;
+use std::path::PathBuf;
+
+/// Synthetic cell: unique key per `i`, realistic field widths.
+fn rec(i: u64, n: u64) -> CellRecord {
+    CellRecord {
+        key: format!("syn{}|pf{}|r{n}|s{i}|c1", i % 8, i % 6),
+        app: format!("syn{}", i % 8),
+        label: format!("pf{}", i % 6),
+        records: n,
+        trace_seed: i,
+        sim_seed: i.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        ml: false,
+        churn_scale: 1.0,
+        ipc: 1.0 + (i % 97) as f64 / 100.0,
+        speedup: Some(1.0 + (i % 13) as f64 / 50.0),
+        mpki: 12.0,
+        l1d_mpki: 3.0,
+        accuracy: 0.8,
+        coverage: 0.6,
+        timeliness: 0.9,
+        metadata_bytes: 25_200,
+        pf_issued: 100 + i,
+        pf_timely: 70,
+        pf_late: 10,
+        pf_useless: 20,
+        pf_skipped: 0,
+        instrs: 16_000,
+        cycles: 9_000.0,
+        controller: None,
+        tail: None,
+    }
+}
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("slofetch_store_bench").join(name);
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Probe keys alternating present/absent, in a seeded shuffle-ish order.
+fn probe(store: &ResultStore, n: u64, probes: u64) -> u64 {
+    let mut hits = 0u64;
+    for p in 0..probes {
+        let i = (p.wrapping_mul(0x2545_F491_4F6C_DD1D)) % (2 * n);
+        let key = if p % 2 == 0 {
+            format!("syn{}|pf{}|r{n}|s{i}|c1", i % 8, i % 6) // maybe present
+        } else {
+            format!("syn{}|pfX|r{n}|s{i}|c1", i % 8) // never present
+        };
+        hits += u64::from(store.contains(&key));
+    }
+    hits
+}
+
+fn fmt_cells(n: u64) -> String {
+    match n {
+        n if n % 1_000_000 == 0 => format!("{}M", n / 1_000_000),
+        n if n % 1_000 == 0 => format!("{}k", n / 1_000),
+        n => n.to_string(),
+    }
+}
+
+struct SizeResult {
+    label: String,
+    append_per_sec: f64,
+    cold_open_tiered_per_sec: f64,
+    probe_per_sec: f64,
+    cold_open_speedup_vs_jsonl: f64,
+}
+
+fn bench_size(n: u64) -> SizeResult {
+    let label = fmt_cells(n);
+    let dir = fresh_dir(&label);
+    let tiered_path = dir.join("bench.store");
+    let jsonl_path = dir.join("bench.jsonl");
+
+    // Append throughput: tiered (WAL write-through + threshold flushes).
+    let mut tiered = ResultStore::open_format(&tiered_path, StoreFormat::Tiered).unwrap();
+    let (_, t_append) = time_it(|| {
+        for i in 0..n {
+            tiered.push(rec(i, n)).unwrap();
+        }
+        tiered.flush().unwrap();
+    });
+    let segments = tiered.segment_count();
+    drop(tiered);
+
+    // The same records as a legacy JSONL log, for the cold-open contrast.
+    let mut jsonl = ResultStore::open_format(&jsonl_path, StoreFormat::Jsonl).unwrap();
+    for i in 0..n {
+        jsonl.push(rec(i, n)).unwrap();
+    }
+    drop(jsonl);
+
+    // Cold-open resume latency: tiered opens read segment footers only;
+    // jsonl opens replay and re-parse every line.
+    let (tiered, t_open_tiered) = time_it(|| ResultStore::open(&tiered_path).unwrap());
+    assert_eq!(tiered.len() as u64, n);
+    let (jsonl, t_open_jsonl) = time_it(|| ResultStore::open(&jsonl_path).unwrap());
+    assert_eq!(jsonl.len() as u64, n);
+
+    // Membership probes (the per-cell resume check): bloom + sparse
+    // index + one block read per positive, against a 50% miss mix.
+    let probes = n.clamp(1, 20_000);
+    let (hits, t_probe) = time_it(|| probe(&tiered, n, probes));
+    assert!(hits > 0, "probe mix found no stored keys");
+
+    let out = SizeResult {
+        label,
+        append_per_sec: n as f64 / t_append.max(1e-9),
+        cold_open_tiered_per_sec: n as f64 / t_open_tiered.max(1e-9),
+        probe_per_sec: probes as f64 / t_probe.max(1e-9),
+        cold_open_speedup_vs_jsonl: t_open_jsonl / t_open_tiered.max(1e-9),
+    };
+    println!(
+        "{:<6} cells: append {:>8.0}/s  cold-open tiered {:.1}ms vs jsonl {:.1}ms \
+         ({:.1}x, {segments} segments)  probes {:>8.0}/s ({hits} hits)",
+        out.label,
+        out.append_per_sec,
+        t_open_tiered * 1e3,
+        t_open_jsonl * 1e3,
+        out.cold_open_speedup_vs_jsonl,
+        out.probe_per_sec,
+    );
+    std::fs::remove_dir_all(&dir).ok();
+    out
+}
+
+fn main() {
+    let sizes: Vec<u64> = std::env::var("SLOFETCH_BENCH_STORE_CELLS")
+        .unwrap_or_else(|_| "10000,100000".into())
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .filter(|&n| n > 0)
+        .collect();
+    println!("== store_micro: {sizes:?} synthetic cells ==");
+    let results: Vec<SizeResult> = sizes.iter().map(|&n| bench_size(n)).collect();
+
+    // Machine-readable trajectory point for CI, in the same shape as
+    // cluster_micro: a per-metric `events_per_sec` map (floors gated by
+    // ci/check_bench.py) plus the jsonl-contrast speedup map gated by
+    // the baseline's `min_speedup_vs_jsonl`.
+    if let Ok(path) = std::env::var("SLOFETCH_BENCH_JSON") {
+        let per = |f: &dyn Fn(&SizeResult) -> f64, tag: &str| -> Vec<(String, Json)> {
+            results.iter().map(|r| (format!("store/{tag}@{}", r.label), Json::num(f(r)))).collect()
+        };
+        let mut eps = per(&|r| r.append_per_sec, "append");
+        eps.extend(per(&|r| r.cold_open_tiered_per_sec, "cold_open_tiered"));
+        eps.extend(per(&|r| r.probe_per_sec, "probe"));
+        let speedups: Vec<(String, Json)> = results
+            .iter()
+            .map(|r| {
+                (format!("cold_open@{}", r.label), Json::num(r.cold_open_speedup_vs_jsonl))
+            })
+            .collect();
+        let j = Json::obj(vec![
+            ("bench", Json::str("store_micro")),
+            (
+                "cells",
+                Json::Arr(results.iter().map(|r| Json::str(&r.label)).collect()),
+            ),
+            ("events_per_sec", Json::Obj(eps.into_iter().collect())),
+            ("speedup_vs_jsonl", Json::Obj(speedups.into_iter().collect())),
+        ]);
+        std::fs::write(&path, j.pretty()).expect("write bench json");
+        println!("(wrote {path})");
+    }
+}

@@ -1,28 +1,31 @@
 //! Experiment-campaign subsystem: scenario matrix → sharded execution →
-//! JSONL result store → aggregate reports (DESIGN.md "Campaign
+//! tiered result store → aggregate reports (DESIGN.md "Campaign
 //! subsystem").
 //!
 //! A campaign is a declarative sweep over the paper's evaluation axes
 //! ([`spec::CampaignSpec`]): apps × prefetchers × seeds × ML gate ×
 //! churn regimes × traffic shapes. [`runner`] shards the expanded cells across worker
-//! threads; [`store`] persists one JSONL line per cell and lets repeated
-//! campaigns resume instead of recompute; [`report`] aggregates the
-//! store back into the markdown tables the figure harness uses.
+//! threads; [`store`] persists one record per cell (a JSONL log or a
+//! tiered memtable → segment layout, see [`store::StoreFormat`]) and
+//! lets repeated campaigns resume instead of recompute; [`report`]
+//! aggregates the store back into the markdown tables the figure
+//! harness uses.
 //!
 //! Determinism contract: cells are seeded per-key ([`spec::cell_seed`]),
 //! executed independently, and written in spec-expansion order — the
-//! result file is byte-identical for any `--threads` value. Lines are
-//! flushed incrementally (as soon as a cell *and* its baseline finish),
-//! so a killed campaign keeps its completed prefix and resumes from
-//! there.
+//! record stream is byte-identical for any `--threads` value. Records
+//! are flushed incrementally (as soon as a cell *and* its baseline
+//! finish), so a killed campaign keeps its completed prefix and resumes
+//! from there.
 
 pub mod report;
 pub mod runner;
+mod segment;
 pub mod spec;
 pub mod store;
 
 pub use spec::CampaignSpec;
-pub use store::ResultStore;
+pub use store::{CompactStats, ResultStore, StoreFormat};
 
 use anyhow::Result;
 use std::collections::HashMap;
@@ -121,13 +124,14 @@ pub fn run_to_store(
     }
 
     let mut baselines = Baselines::default();
-    for r in store.records() {
+    store.for_each_sim(|r| {
         baselines.insert(
             &r.label,
             group_of(&r.app, r.records, r.trace_seed, r.churn_scale),
             Baseline::Stored(r.ipc),
         );
-    }
+        Ok(())
+    })?;
     for (i, meta) in pending.iter().enumerate() {
         baselines.insert(
             &meta.cell.label,
@@ -478,9 +482,9 @@ mod tests {
             }
         }
         // The IPC of a shaped cell equals its `none` twin bit-for-bit.
-        let plain = store.records().iter().find(|r| !r.key.contains("|t")).unwrap();
-        let twin = store
-            .records()
+        let recs = store.records();
+        let plain = recs.iter().find(|r| !r.key.contains("|t")).unwrap();
+        let twin = recs
             .iter()
             .find(|r| r.key.starts_with(&plain.key) && r.key.contains("|t"))
             .unwrap();
@@ -526,8 +530,9 @@ mod tests {
         let mut store = ResultStore::in_memory();
         let out = run_to_store(&spec, 2, &mut store).unwrap();
         assert_eq!(out.computed, 5); // 4 sim cells + 1 cluster cell
-        assert_eq!(store.cluster_records().len(), 1);
-        let rec = &store.cluster_records()[0];
+        let crecs = store.cluster_records();
+        assert_eq!(crecs.len(), 1);
+        let rec = &crecs[0];
         assert_eq!(rec.service_times, "empirical");
         assert!(rec.windows > 0 && rec.p99_us.is_finite());
         // The report labels the model.
@@ -572,7 +577,7 @@ mod tests {
         assert_eq!(out, CampaignOutcome { total: 8, computed: 8, skipped: 0 });
         let recs = store.cluster_records();
         assert_eq!(recs.len(), 4);
-        for r in recs {
+        for r in &recs {
             assert!(!r.tenant.is_empty(), "{}: tenant label missing", r.key);
             assert!(matches!(r.policy.as_str(), "solo" | "coloc"), "{}", r.policy);
             assert!(r.windows > 0, "{}: no SLO windows", r.key);
@@ -595,7 +600,7 @@ mod tests {
         // Thread counts do not change the stored records.
         let mut store2 = ResultStore::in_memory();
         run_to_store(&spec, 1, &mut store2).unwrap();
-        for (a, b) in store.cluster_records().iter().zip(store2.cluster_records()) {
+        for (a, b) in store.cluster_records().iter().zip(store2.cluster_records().iter()) {
             assert_eq!(a, b, "tenant cell differs across thread counts");
         }
     }
@@ -612,7 +617,7 @@ mod tests {
         assert_eq!(out, CampaignOutcome { total: 8, computed: 8, skipped: 0 });
         let recs = store.sketch_records();
         assert_eq!(recs.len(), 4);
-        for r in recs {
+        for r in &recs {
             assert_eq!(r.label, "nl+ml", "sketch cells run the ML-gated baseline");
             assert!(r.decisions > 0, "{}: no decisions compared", r.key);
             assert!(r.agreement > 0.0 && r.agreement <= 1.0, "{}", r.key);
@@ -629,7 +634,7 @@ mod tests {
         // Thread counts do not change the stored records.
         let mut store2 = ResultStore::in_memory();
         run_to_store(&spec, 1, &mut store2).unwrap();
-        for (a, b) in store.sketch_records().iter().zip(store2.sketch_records()) {
+        for (a, b) in store.sketch_records().iter().zip(store2.sketch_records().iter()) {
             assert_eq!(a, b, "sketch cell differs across thread counts");
         }
         // The accuracy report renders one row per record; sketch-free

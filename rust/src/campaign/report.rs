@@ -2,8 +2,14 @@
 //! matrix, geomean summary per config, and best-config-per-app — the
 //! same [`crate::figures::report::Table`] markdown the figure harness
 //! emits, so campaign output drops straight into EXPERIMENTS.md.
+//!
+//! Each builder works over a materialized slice of one record kind;
+//! [`reports`] materializes each kind once. On tiered stores the
+//! per-kind scans are range scans: segments are tagged with per-kind
+//! record counts, so (say) the sketch table never reads sim-only
+//! segments.
 
-use super::store::{CellRecord, ClusterCellRecord, ResultStore};
+use super::store::{CellRecord, ClusterCellRecord, ResultStore, SketchCellRecord};
 use super::{group_of, Group, BASELINE_LABELS};
 use crate::figures::report::{f2, f3, kb, pct, Table};
 use std::collections::{BTreeMap, HashMap};
@@ -27,19 +33,19 @@ struct Index<'a> {
 }
 
 impl<'a> Index<'a> {
-    fn build(store: &'a ResultStore) -> Index<'a> {
+    fn build(records: &'a [CellRecord]) -> Index<'a> {
         let mut cells: BTreeMap<(&str, &str), Vec<&CellRecord>> = BTreeMap::new();
         let mut baseline = HashMap::new();
         // Lowest preference first, so preferred labels overwrite.
         for pass_label in BASELINE_LABELS.iter().rev() {
-            for r in store.records().iter().filter(|r| &r.label == pass_label) {
+            for r in records.iter().filter(|r| &r.label == pass_label) {
                 baseline.insert(
                     group_of(&r.app, r.records, r.trace_seed, r.churn_scale),
                     r.ipc,
                 );
             }
         }
-        for r in store.records() {
+        for r in records {
             cells.entry((r.app.as_str(), r.label.as_str())).or_default().push(r);
         }
         Index { cells, baseline }
@@ -81,7 +87,11 @@ impl<'a> Index<'a> {
 
 /// Per-app speedup table: apps × configs, geomean across seeds/churn.
 pub fn per_app_speedup(store: &ResultStore) -> Table {
-    let idx = Index::build(store);
+    per_app_speedup_from(&store.records())
+}
+
+fn per_app_speedup_from(records: &[CellRecord]) -> Table {
+    let idx = Index::build(records);
     let labels = idx.labels();
     let mut headers: Vec<&str> = vec!["app"];
     headers.extend(&labels);
@@ -105,7 +115,11 @@ pub fn per_app_speedup(store: &ResultStore) -> Table {
 /// Per-config summary: geomean speedup across apps, mean accuracy, mean
 /// MPKI, metadata footprint, cell count.
 pub fn geomean_summary(store: &ResultStore) -> Table {
-    let idx = Index::build(store);
+    geomean_summary_from(&store.records())
+}
+
+fn geomean_summary_from(records: &[CellRecord]) -> Table {
+    let idx = Index::build(records);
     let apps = idx.apps();
     let mut t = Table::new(
         "campaign_summary",
@@ -143,7 +157,11 @@ pub fn geomean_summary(store: &ResultStore) -> Table {
 
 /// Best non-baseline config per app, by geomean speedup.
 pub fn best_config(store: &ResultStore) -> Table {
-    let idx = Index::build(store);
+    best_config_from(&store.records())
+}
+
+fn best_config_from(records: &[CellRecord]) -> Table {
+    let idx = Index::build(records);
     let labels = idx.labels();
     let mut t = Table::new(
         "campaign_best",
@@ -191,13 +209,17 @@ pub fn best_config(store: &ResultStore) -> Table {
 /// show the scenario values directly). `None` when the campaign had no
 /// traffic axis.
 pub fn tail_table(store: &ResultStore) -> Option<Table> {
+    tail_table_from(&store.records())
+}
+
+fn tail_table_from(records: &[CellRecord]) -> Option<Table> {
     let mut t = Table::new(
         "campaign_tails",
         "Queueing tails per traffic shape (single-service cluster at the cell's IPC)",
         &["app", "config", "traffic", "P50 µs", "P95 µs", "P99 µs", "compliance"],
     );
     // Store order is expansion order — already deterministic and grouped.
-    for r in store.records() {
+    for r in records {
         if let Some(tail) = &r.tail {
             t.row(vec![
                 r.app.clone(),
@@ -223,8 +245,12 @@ pub fn tail_table(store: &ResultStore) -> Option<Table> {
 /// their own paired table ([`tenant_pairings`]) and are excluded here.
 /// `None` when the campaign had no (policy-swept) cluster axis.
 pub fn cluster_table(store: &ResultStore) -> Option<Table> {
+    cluster_table_from(&store.cluster_records())
+}
+
+fn cluster_table_from(records: &[ClusterCellRecord]) -> Option<Table> {
     let recs: Vec<&ClusterCellRecord> =
-        store.cluster_records().iter().filter(|r| r.tenant.is_empty()).collect();
+        records.iter().filter(|r| r.tenant.is_empty()).collect();
     if recs.is_empty() {
         return None;
     }
@@ -275,8 +301,12 @@ pub fn cluster_table(store: &ResultStore) -> Option<Table> {
 /// existing store — from being ranked against each other. `None`
 /// without a cluster axis.
 pub fn cluster_ranking(store: &ResultStore) -> Option<Table> {
+    cluster_ranking_from(&store.cluster_records())
+}
+
+fn cluster_ranking_from(records: &[ClusterCellRecord]) -> Option<Table> {
     let recs: Vec<&ClusterCellRecord> =
-        store.cluster_records().iter().filter(|r| r.tenant.is_empty()).collect();
+        records.iter().filter(|r| r.tenant.is_empty()).collect();
     if recs.is_empty() {
         return None;
     }
@@ -327,8 +357,12 @@ pub fn cluster_ranking(store: &ResultStore) -> Option<Table> {
 /// co-located burn, then by worst interference Δ P99. `None` when the
 /// store holds no tenant cells.
 pub fn tenant_pairings(store: &ResultStore) -> Option<Table> {
+    tenant_pairings_from(&store.cluster_records())
+}
+
+fn tenant_pairings_from(records: &[ClusterCellRecord]) -> Option<Table> {
     let recs: Vec<&ClusterCellRecord> =
-        store.cluster_records().iter().filter(|r| !r.tenant.is_empty()).collect();
+        records.iter().filter(|r| !r.tenant.is_empty()).collect();
     if recs.is_empty() {
         return None;
     }
@@ -419,8 +453,11 @@ pub fn tenant_pairings(store: &ResultStore) -> Option<Table> {
 /// up (decision agreement, feature error, cardinality error). `None`
 /// when the campaign had no sketch axis.
 pub fn sketch_table(store: &ResultStore) -> Option<Table> {
-    let recs = store.sketch_records();
-    if recs.is_empty() {
+    sketch_table_from(&store.sketch_records())
+}
+
+fn sketch_table_from(records: &[SketchCellRecord]) -> Option<Table> {
+    if records.is_empty() {
         return None;
     }
     let mut t = Table::new(
@@ -442,7 +479,7 @@ pub fn sketch_table(store: &ResultStore) -> Option<Table> {
         ],
     );
     // Store order is expansion order — already deterministic.
-    for r in recs {
+    for r in records {
         t.row(vec![
             r.app.clone(),
             r.geom.clone(),
@@ -466,22 +503,28 @@ pub fn sketch_table(store: &ResultStore) -> Option<Table> {
     Some(t)
 }
 
-/// All campaign tables, in print order.
+/// All campaign tables, in print order. Each record kind is
+/// materialized once and shared across its builders (three kind-tagged
+/// range scans, however many tables render).
 pub fn reports(store: &ResultStore) -> Vec<Table> {
-    let mut out = vec![per_app_speedup(store), geomean_summary(store), best_config(store)];
-    if let Some(t) = tail_table(store) {
+    let sims = store.records();
+    let clusters = store.cluster_records();
+    let sketches = store.sketch_records();
+    let mut out =
+        vec![per_app_speedup_from(&sims), geomean_summary_from(&sims), best_config_from(&sims)];
+    if let Some(t) = tail_table_from(&sims) {
         out.push(t);
     }
-    if let Some(t) = cluster_table(store) {
+    if let Some(t) = cluster_table_from(&clusters) {
         out.push(t);
     }
-    if let Some(t) = cluster_ranking(store) {
+    if let Some(t) = cluster_ranking_from(&clusters) {
         out.push(t);
     }
-    if let Some(t) = tenant_pairings(store) {
+    if let Some(t) = tenant_pairings_from(&clusters) {
         out.push(t);
     }
-    if let Some(t) = sketch_table(store) {
+    if let Some(t) = sketch_table_from(&sketches) {
         out.push(t);
     }
     out

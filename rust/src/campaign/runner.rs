@@ -9,6 +9,13 @@
 //! (queueing-tail evaluation per arrival shape) is layered on top by
 //! `campaign::run_to_store` at write time, so a cell's identity — and
 //! its result — never depends on how it will be evaluated downstream.
+//!
+//! Resume is decided before cells reach this executor:
+//! `campaign::run_to_store` probes `ResultStore::contains` per expanded
+//! key and only enqueues misses. On tiered stores those probes hit the
+//! memtable key set and each segment's bloom filter + sparse index —
+//! the store never preloads the full key set, so a million-cell resume
+//! costs O(pending) probes, not a full log replay.
 
 use crate::config::SimConfig;
 use crate::sim::engine::{self, SimResult};

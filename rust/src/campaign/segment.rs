@@ -1,0 +1,588 @@
+//! Immutable, sorted segment files for the tiered campaign store
+//! (DESIGN.md §6).
+//!
+//! A segment is one flushed memtable: a header line, a block of
+//! key-sorted record lines, and a self-describing footer (bloom filter,
+//! sparse key index, CRC) plus a fixed-shape trailer that points at the
+//! footer. Opening a segment reads **only** the trailer and footer —
+//! never the record block — so a resume probe against an N-record
+//! segment costs one bloom check and (on a bloom hit) one short block
+//! read, not an N-line replay.
+//!
+//! On-disk layout (all text, one construct per line):
+//!
+//! ```text
+//! {"format":"slofetch-seg","version":1}          <- header
+//! ["<key>",<seq>,{<record JSON>}]                <- data block, sorted
+//! ...                                               by raw key bytes
+//! {"bloom_bits":...,"crc":...,"index":...}       <- footer (one line)
+//! #slfseg:<footer offset>:<footer crc32 hex>     <- trailer
+//! ```
+//!
+//! The filename is `seg-<content_hash(block)>.seg`, so a segment's name
+//! commits to its contents and re-flushing identical records is
+//! idempotent. Any footer/trailer damage (torn write, truncation) makes
+//! [`Segment::open`] fail, which the store surfaces as a *quarantine* —
+//! never a silent drop.
+
+use crate::campaign::spec::content_hash;
+use crate::util::json::Json;
+use crate::util::rng::mix64;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// Format version stamped into header and footer.
+const VERSION: u64 = 1;
+/// Header line (also doubles as a magic number for `file`-style sniffs).
+const HEADER: &str = "{\"format\":\"slofetch-seg\",\"version\":1}\n";
+/// Trailer prefix; the final line is `#slfseg:<offset>:<crc32 hex>`.
+const TRAILER_TAG: &str = "#slfseg:";
+/// Every STRIDE-th record (including the first) lands in the sparse
+/// index; a bloom hit reads at most STRIDE lines from disk.
+const INDEX_STRIDE: usize = 16;
+/// Bloom sizing: bits per stored key (k=7 gives ~1% false positives at
+/// 10 bits/key; false positives cost one wasted block read, never a
+/// wrong answer — `contains` always confirms against the block).
+const BLOOM_BITS_PER_KEY: usize = 10;
+const BLOOM_K: u32 = 7;
+
+/// CRC-32/IEEE (poly 0xEDB88320), table built at compile time.
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// CRC-32/IEEE of `bytes` (the zlib/gzip polynomial).
+pub(crate) fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Salted 64-bit key hash (chained [`mix64`], same shape as
+/// `spec::cell_seed`); two salts give the bloom filter's double-hash
+/// pair.
+fn hash_key(key: &str, salt: u64) -> u64 {
+    let mut h = mix64(salt ^ 0xB100_F117_E25E_6AA1);
+    for b in key.bytes() {
+        h = mix64(h ^ b as u64);
+    }
+    h
+}
+
+/// Classic bloom filter over the segment's key set (double hashing,
+/// k probes). Membership misses answer resume probes without touching
+/// the record block at all.
+pub(crate) struct Bloom {
+    k: u32,
+    words: Vec<u64>,
+}
+
+impl Bloom {
+    /// An empty filter sized for `n` keys.
+    fn with_capacity(n: usize) -> Bloom {
+        let bits = (n.max(1) * BLOOM_BITS_PER_KEY).max(64);
+        Bloom { k: BLOOM_K, words: vec![0u64; bits.div_ceil(64)] }
+    }
+
+    fn bit_positions(&self, key: &str) -> impl Iterator<Item = u64> + '_ {
+        let nbits = (self.words.len() * 64) as u64;
+        let h1 = hash_key(key, 0x9E37_79B9_7F4A_7C15);
+        let h2 = hash_key(key, 0xC2B2_AE3D_27D4_EB4F) | 1;
+        (0..self.k as u64).map(move |i| h1.wrapping_add(i.wrapping_mul(h2)) % nbits)
+    }
+
+    fn insert(&mut self, key: &str) {
+        for bit in self.bit_positions(key).collect::<Vec<_>>() {
+            self.words[(bit / 64) as usize] |= 1u64 << (bit % 64);
+        }
+    }
+
+    /// `false` means definitely absent; `true` means "probe the block".
+    pub(crate) fn maybe_contains(&self, key: &str) -> bool {
+        self.bit_positions(key)
+            .all(|bit| self.words[(bit / 64) as usize] & (1u64 << (bit % 64)) != 0)
+    }
+
+    /// Hex dump of the filter words (16 chars per word, in order).
+    fn to_hex(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::with_capacity(self.words.len() * 16);
+        for w in &self.words {
+            let _ = write!(s, "{w:016x}");
+        }
+        s
+    }
+
+    fn from_hex(k: u32, hex: &str) -> Result<Bloom> {
+        if hex.is_empty() || hex.len() % 16 != 0 {
+            bail!("segment bloom: bad hex length {}", hex.len());
+        }
+        let mut words = Vec::with_capacity(hex.len() / 16);
+        let bytes = hex.as_bytes();
+        for chunk in bytes.chunks(16) {
+            let s = std::str::from_utf8(chunk).context("segment bloom: non-utf8 hex")?;
+            words.push(u64::from_str_radix(s, 16).context("segment bloom: bad hex word")?);
+        }
+        Ok(Bloom { k, words })
+    }
+}
+
+/// One record bound for a segment: its dedup key, global store sequence
+/// number (reports re-sort by it to recover append order), kind slot
+/// (0 = sim, 1 = cluster, 2 = sketch), and the record's own JSON line.
+pub(crate) struct SegEntry {
+    pub key: String,
+    pub seq: u64,
+    pub kind: usize,
+    pub json: String,
+}
+
+/// An open (footer-loaded) immutable segment. The record block stays on
+/// disk; `contains` reads at most one index stride of it, `load_entries`
+/// reads and CRC-checks all of it.
+pub(crate) struct Segment {
+    path: PathBuf,
+    /// Records in the block.
+    n: usize,
+    /// Records per kind slot (sim/cluster/sketch) — lets report scans
+    /// skip segments that hold none of the kind they aggregate.
+    kinds: [usize; 3],
+    pub min_seq: u64,
+    pub max_seq: u64,
+    bloom: Bloom,
+    /// `(first key, absolute file offset)` of every INDEX_STRIDE-th
+    /// record, starting with the first.
+    index: Vec<(String, u64)>,
+    data_start: u64,
+    data_len: u64,
+    /// CRC-32 of the record block (verified on full loads).
+    crc: u32,
+    /// Lazily opened read handle for block probes (`contains` takes
+    /// `&self`; the store is single-threaded on the writer side).
+    file: RefCell<Option<File>>,
+}
+
+impl Segment {
+    /// Write `entries` as a new immutable segment in `dir` and return it
+    /// opened. Entries are sorted by raw key bytes; keys must be unique
+    /// (the store's push-side dedup guarantees it). The file is written
+    /// to a `.seg.tmp` sibling and renamed into place, so a crash leaves
+    /// either no segment or a complete one — never a half-written file
+    /// under the final name.
+    pub(crate) fn write(dir: &Path, mut entries: Vec<SegEntry>) -> Result<Segment> {
+        if entries.is_empty() {
+            bail!("segment write: empty entry list");
+        }
+        entries.sort_by(|a, b| a.key.cmp(&b.key));
+        let mut bloom = Bloom::with_capacity(entries.len());
+        let mut kinds = [0usize; 3];
+        let mut min_seq = u64::MAX;
+        let mut max_seq = 0u64;
+        let mut block = String::new();
+        let mut index: Vec<(String, u64)> = Vec::new();
+        let data_start = HEADER.len() as u64;
+        use std::fmt::Write as _;
+        for (i, e) in entries.iter().enumerate() {
+            if i % INDEX_STRIDE == 0 {
+                index.push((e.key.clone(), data_start + block.len() as u64));
+            }
+            bloom.insert(&e.key);
+            kinds[e.kind] += 1;
+            min_seq = min_seq.min(e.seq);
+            max_seq = max_seq.max(e.seq);
+            // Key, seq, and record JSON are all already canonical (the
+            // key via dump()'s escaping, seq a plain integer, the
+            // record a sorted-key dump()), so the line is deterministic.
+            let _ = writeln!(block, "[{},{},{}]", Json::str(&e.key).dump(), e.seq, e.json);
+        }
+        let data_len = block.len() as u64;
+        let crc = crc32(block.as_bytes());
+        let footer = Json::obj(vec![
+            ("bloom_bits", Json::str(&bloom.to_hex())),
+            ("bloom_k", Json::num(bloom.k as f64)),
+            ("crc", Json::num(crc as f64)),
+            ("data_len", Json::num(data_len as f64)),
+            ("data_start", Json::num(data_start as f64)),
+            (
+                "index",
+                Json::Arr(
+                    index
+                        .iter()
+                        .map(|(k, off)| {
+                            Json::Arr(vec![Json::str(k), Json::num(*off as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "kinds",
+                Json::obj(vec![
+                    ("cluster", Json::num(kinds[1] as f64)),
+                    ("sim", Json::num(kinds[0] as f64)),
+                    ("sketch", Json::num(kinds[2] as f64)),
+                ]),
+            ),
+            ("max_seq", Json::num(max_seq as f64)),
+            ("min_seq", Json::num(min_seq as f64)),
+            ("n", Json::num(entries.len() as f64)),
+            ("version", Json::num(VERSION as f64)),
+        ])
+        .dump();
+        let footer_offset = data_start + data_len;
+        let trailer =
+            format!("{TRAILER_TAG}{footer_offset}:{:08x}\n", crc32(footer.as_bytes()));
+        let name = format!("seg-{:016x}.seg", content_hash(block.as_bytes()));
+        let path = dir.join(&name);
+        let tmp = dir.join(format!("{name}.tmp"));
+        {
+            let mut f = File::create(&tmp).with_context(|| format!("create {tmp:?}"))?;
+            f.write_all(HEADER.as_bytes())
+                .and_then(|_| f.write_all(block.as_bytes()))
+                .and_then(|_| f.write_all(footer.as_bytes()))
+                .and_then(|_| f.write_all(b"\n"))
+                .and_then(|_| f.write_all(trailer.as_bytes()))
+                .with_context(|| format!("write {tmp:?}"))?;
+            f.sync_all().with_context(|| format!("sync {tmp:?}"))?;
+        }
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("rename {tmp:?} -> {path:?}"))?;
+        Ok(Segment {
+            path,
+            n: entries.len(),
+            kinds,
+            min_seq,
+            max_seq,
+            bloom,
+            index,
+            data_start,
+            data_len,
+            crc,
+            file: RefCell::new(None),
+        })
+    }
+
+    /// Open a segment by reading only its trailer and footer (the record
+    /// block stays untouched until a probe needs it). Any inconsistency
+    /// — missing trailer, footer CRC mismatch, malformed footer — is an
+    /// error; the store quarantines such files rather than guessing.
+    pub(crate) fn open(path: &Path) -> Result<Segment> {
+        let mut file = File::open(path).with_context(|| format!("open {path:?}"))?;
+        let len = file.metadata().with_context(|| format!("stat {path:?}"))?.len();
+        let tail_len = len.min(96);
+        file.seek(SeekFrom::Start(len - tail_len))
+            .with_context(|| format!("seek {path:?}"))?;
+        let mut tail = vec![0u8; tail_len as usize];
+        file.read_exact(&mut tail).with_context(|| format!("read tail of {path:?}"))?;
+        let tail = String::from_utf8_lossy(&tail).into_owned();
+        let pos = tail
+            .rfind(TRAILER_TAG)
+            .with_context(|| format!("{path:?}: no segment trailer (torn write?)"))?;
+        let trailer_len = (tail.len() - pos) as u64;
+        let body = tail[pos + TRAILER_TAG.len()..].trim_end();
+        let (off_s, crc_s) = body
+            .split_once(':')
+            .with_context(|| format!("{path:?}: malformed trailer '{body}'"))?;
+        let footer_offset: u64 =
+            off_s.parse().with_context(|| format!("{path:?}: bad footer offset"))?;
+        let footer_crc = u32::from_str_radix(crc_s, 16)
+            .with_context(|| format!("{path:?}: bad footer crc"))?;
+        let footer_end = len - trailer_len;
+        if footer_offset >= footer_end {
+            bail!("{path:?}: footer offset {footer_offset} past end {footer_end}");
+        }
+        file.seek(SeekFrom::Start(footer_offset))
+            .with_context(|| format!("seek {path:?}"))?;
+        let mut footer = vec![0u8; (footer_end - footer_offset) as usize];
+        file.read_exact(&mut footer).with_context(|| format!("read footer {path:?}"))?;
+        while footer.last() == Some(&b'\n') {
+            footer.pop();
+        }
+        if crc32(&footer) != footer_crc {
+            bail!("{path:?}: footer crc mismatch (torn or corrupted write)");
+        }
+        let footer = std::str::from_utf8(&footer)
+            .with_context(|| format!("{path:?}: non-utf8 footer"))?;
+        let j = Json::parse(footer)
+            .map_err(anyhow::Error::from)
+            .with_context(|| format!("{path:?}: unparseable footer"))?;
+        let u = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_u64)
+                .with_context(|| format!("{path:?}: footer missing '{k}'"))
+        };
+        if u("version")? != VERSION {
+            bail!("{path:?}: unsupported segment version");
+        }
+        let kinds_j = j.get("kinds").with_context(|| format!("{path:?}: no kinds"))?;
+        let kind = |k: &str| kinds_j.get(k).and_then(Json::as_u64).unwrap_or(0) as usize;
+        let bloom = Bloom::from_hex(
+            u("bloom_k")? as u32,
+            j.get("bloom_bits")
+                .and_then(Json::as_str)
+                .with_context(|| format!("{path:?}: no bloom"))?,
+        )?;
+        let mut index = Vec::new();
+        if let Some(Json::Arr(items)) = j.get("index") {
+            for it in items {
+                let pair = it.as_arr().with_context(|| format!("{path:?}: bad index"))?;
+                let key = pair
+                    .first()
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("{path:?}: bad index key"))?;
+                let off = pair
+                    .get(1)
+                    .and_then(Json::as_u64)
+                    .with_context(|| format!("{path:?}: bad index offset"))?;
+                index.push((key.to_string(), off));
+            }
+        }
+        let (data_start, data_len) = (u("data_start")?, u("data_len")?);
+        if data_start + data_len > footer_offset {
+            bail!("{path:?}: data block overruns footer");
+        }
+        Ok(Segment {
+            path: path.to_path_buf(),
+            n: u("n")? as usize,
+            kinds: [kind("sim"), kind("cluster"), kind("sketch")],
+            min_seq: u("min_seq")?,
+            max_seq: u("max_seq")?,
+            bloom,
+            index,
+            data_start,
+            data_len,
+            crc: u("crc")? as u32,
+            file: RefCell::new(Some(file)),
+        })
+    }
+
+    pub(crate) fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub(crate) fn record_count(&self) -> usize {
+        self.n
+    }
+
+    /// Records of one kind slot (0 = sim, 1 = cluster, 2 = sketch).
+    pub(crate) fn kind_count(&self, kind: usize) -> usize {
+        self.kinds[kind]
+    }
+
+    /// Read `[start, start+len)` of the segment file.
+    fn read_range(&self, start: u64, len: usize) -> Result<Vec<u8>> {
+        let mut slot = self.file.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(
+                File::open(&self.path).with_context(|| format!("open {:?}", self.path))?,
+            );
+        }
+        let file = slot.as_mut().expect("file handle just ensured");
+        file.seek(SeekFrom::Start(start))
+            .with_context(|| format!("seek {:?}", self.path))?;
+        let mut buf = vec![0u8; len];
+        file.read_exact(&mut buf)
+            .with_context(|| format!("read {len}B @{start} of {:?}", self.path))?;
+        Ok(buf)
+    }
+
+    /// Exact membership probe: bloom filter, then sparse-index binary
+    /// search, then a byte-prefix match over one index stride of the
+    /// block. A bloom false positive costs one short read, never a wrong
+    /// answer.
+    pub(crate) fn contains(&self, key: &str) -> Result<bool> {
+        if !self.bloom.maybe_contains(key) {
+            return Ok(false);
+        }
+        let idx = self.index.partition_point(|(k, _)| k.as_str() <= key);
+        if idx == 0 {
+            // Probe key sorts before the segment's first record.
+            return Ok(false);
+        }
+        let start = self.index[idx - 1].1;
+        let end = self
+            .index
+            .get(idx)
+            .map(|(_, off)| *off)
+            .unwrap_or(self.data_start + self.data_len);
+        let buf = self.read_range(start, (end - start) as usize)?;
+        let needle = format!("[{},", Json::str(key).dump());
+        Ok(buf
+            .split(|&b| b == b'\n')
+            .any(|line| line.starts_with(needle.as_bytes())))
+    }
+
+    /// Load and CRC-verify the whole record block, returning
+    /// `(key, seq, record JSON)` triples in key order.
+    pub(crate) fn load_entries(&self) -> Result<Vec<(String, u64, Json)>> {
+        let buf = self.read_range(self.data_start, self.data_len as usize)?;
+        if crc32(&buf) != self.crc {
+            bail!("{:?}: record block crc mismatch", self.path);
+        }
+        let text = std::str::from_utf8(&buf)
+            .with_context(|| format!("{:?}: non-utf8 block", self.path))?;
+        let mut out = Vec::with_capacity(self.n);
+        for (no, line) in text.lines().enumerate() {
+            if line.is_empty() {
+                continue;
+            }
+            let j = Json::parse(line)
+                .map_err(anyhow::Error::from)
+                .with_context(|| format!("{:?} record {}", self.path, no + 1))?;
+            let arr = j
+                .as_arr()
+                .with_context(|| format!("{:?} record {}: not a triple", self.path, no + 1))?;
+            let key = arr
+                .first()
+                .and_then(Json::as_str)
+                .with_context(|| format!("{:?} record {}: no key", self.path, no + 1))?
+                .to_string();
+            let seq = arr
+                .get(1)
+                .and_then(Json::as_u64)
+                .with_context(|| format!("{:?} record {}: no seq", self.path, no + 1))?;
+            let rec = arr
+                .get(2)
+                .with_context(|| format!("{:?} record {}: no record", self.path, no + 1))?
+                .clone();
+            out.push((key, seq, rec));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(key: &str, seq: u64, kind: usize) -> SegEntry {
+        SegEntry {
+            key: key.to_string(),
+            seq,
+            kind,
+            json: format!("{{\"key\":{},\"v\":{}}}", Json::str(key).dump(), seq),
+        }
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("slofetch_seg_{name}"));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn crc32_matches_reference_vector() {
+        // The CRC-32/IEEE check value (RFC 1952 / zlib family).
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn bloom_has_no_false_negatives() {
+        let keys: Vec<String> = (0..500).map(|i| format!("cell|{i}|nl")).collect();
+        let mut b = Bloom::with_capacity(keys.len());
+        for k in &keys {
+            b.insert(k);
+        }
+        for k in &keys {
+            assert!(b.maybe_contains(k), "false negative on {k}");
+        }
+        // False positives exist but must be rare at 10 bits/key.
+        let fp = (0..2000)
+            .filter(|i| b.maybe_contains(&format!("absent|{i}")))
+            .count();
+        assert!(fp < 100, "bloom false-positive rate too high: {fp}/2000");
+    }
+
+    #[test]
+    fn write_open_probe_roundtrip() {
+        let dir = tmpdir("roundtrip");
+        let entries: Vec<SegEntry> =
+            (0..100).map(|i| entry(&format!("key{i:03}"), 1000 + i, (i % 3) as usize)).collect();
+        let seg = Segment::write(&dir, entries).unwrap();
+        assert_eq!(seg.record_count(), 100);
+        assert_eq!(seg.min_seq, 1000);
+        assert_eq!(seg.max_seq, 1099);
+        // Reopen cold and probe.
+        let seg = Segment::open(seg.path()).unwrap();
+        assert_eq!(seg.record_count(), 100);
+        assert_eq!(seg.kind_count(0) + seg.kind_count(1) + seg.kind_count(2), 100);
+        for i in [0u64, 1, 15, 16, 17, 63, 99] {
+            assert!(seg.contains(&format!("key{i:03}")).unwrap(), "missing key{i:03}");
+        }
+        assert!(!seg.contains("key100").unwrap());
+        assert!(!seg.contains("aaa-before-first").unwrap());
+        assert!(!seg.contains("zzz-after-last").unwrap());
+        let loaded = seg.load_entries().unwrap();
+        assert_eq!(loaded.len(), 100);
+        // Block is key-sorted; seqs survive for append-order recovery.
+        assert!(loaded.windows(2).all(|w| w[0].0 < w[1].0), "block not key-sorted");
+        assert_eq!(loaded[0].1, 1000);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_footer_fails_open() {
+        let dir = tmpdir("torn");
+        let entries: Vec<SegEntry> = (0..40).map(|i| entry(&format!("k{i:02}"), i, 0)).collect();
+        let seg = Segment::write(&dir, entries).unwrap();
+        let path = seg.path().to_path_buf();
+        let len = std::fs::metadata(&path).unwrap().len();
+        // Tear off the trailer and half the footer, as a crash mid-flush
+        // (or a truncated copy) would.
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(len - 60).unwrap();
+        drop(f);
+        assert!(Segment::open(&path).is_err(), "torn segment opened cleanly");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupted_block_fails_full_load_but_not_open() {
+        let dir = tmpdir("bitrot");
+        let entries: Vec<SegEntry> = (0..40).map(|i| entry(&format!("k{i:02}"), i, 0)).collect();
+        let seg = Segment::write(&dir, entries).unwrap();
+        let path = seg.path().to_path_buf();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip one byte inside the record block (past the header line).
+        let i = HEADER.len() + 5;
+        bytes[i] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let seg = Segment::open(&path).expect("footer is intact; open must succeed");
+        assert!(seg.load_entries().is_err(), "block crc failed to catch bit rot");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn filename_commits_to_contents() {
+        let dir = tmpdir("name");
+        let mk = || (0..10).map(|i| entry(&format!("k{i}"), i, 0)).collect::<Vec<_>>();
+        let a = Segment::write(&dir, mk()).unwrap();
+        let b = Segment::write(&dir, mk()).unwrap();
+        assert_eq!(a.path(), b.path(), "identical contents must reuse the name");
+        let mut other = mk();
+        other.push(entry("extra", 99, 0));
+        let c = Segment::write(&dir, other).unwrap();
+        assert_ne!(a.path(), c.path());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

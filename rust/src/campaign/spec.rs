@@ -152,6 +152,8 @@ pub fn cell_seed(base: u64, key: &str) -> u64 {
 /// chunks) — folds `.slft` trace-file contents into cluster cell keys,
 /// so the empirical quantile tables (a pure function of spec JSON +
 /// trace bytes) invalidate stored lines whenever their inputs change.
+/// Also names tiered-store segment files (`seg-<hash>.seg` over the
+/// record block), making a segment's identity commit to its contents.
 pub fn content_hash(bytes: &[u8]) -> u64 {
     use crate::util::rng::mix64;
     let mut h = mix64(bytes.len() as u64 ^ 0x7ACE_C0DE_5EED_F11E);

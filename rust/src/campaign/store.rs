@@ -1,20 +1,31 @@
-//! Append-only JSONL result store: one line per completed campaign cell.
+//! Tiered, compacting campaign result store (DESIGN.md §6).
 //!
 //! The store is the campaign's memory — reloading it before a run lets
 //! repeated campaigns *resume* (cells whose key is already present are
 //! skipped, not recomputed), and `merge` folds stores from different
-//! machines or shards into one. Lines are emitted in spec-expansion
+//! machines or shards into one. Records are emitted in spec-expansion
 //! order with sorted object keys, so a given (spec, seed set) always
-//! produces byte-identical files.
+//! produces byte-identical record streams.
+//!
+//! Two on-disk layouts share that contract (see [`StoreFormat`]): the
+//! legacy single-file append-only JSONL log, and the tiered layout — a
+//! directory with a write-ahead `wal.jsonl` tail mirroring an in-memory
+//! memtable, flushed at a size threshold into immutable, key-sorted,
+//! bloom-filtered segment files (built in segment.rs) that make cold
+//! opens footer-only and resume probes O(1), plus explicit foreground
+//! compaction merging segments and dropping superseded duplicates.
+//! Legacy files import transparently: the old log becomes the new
+//! store's WAL, so every record resumes with its key and bytes intact.
 
+use crate::campaign::segment::{SegEntry, Segment};
 use crate::cluster::{ClusterResult, TenantStat};
 use crate::obs::telemetry::Telemetry;
 use crate::sim::engine::SimResult;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
-use std::collections::HashSet;
+use std::collections::{BTreeMap, HashSet};
 use std::io::Write;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 /// One JSONL line: the scenario coordinates plus every scalar the report
 /// layer aggregates.
@@ -640,36 +651,178 @@ impl Record {
     }
 }
 
-/// The append-only store: in-memory records + optional backing file
-/// (held open in append mode — one syscall per line, not per open).
+/// How a [`ResultStore`] persists records on disk.
+///
+/// * `Jsonl` — the original single-file append-only log: one JSON line
+///   per record, replayed in full on open. Simple, diffable, fine up to
+///   tens of thousands of cells.
+/// * `Tiered` — a directory holding a write-ahead `wal.jsonl` tail plus
+///   immutable, sorted, bloom-filtered segment files (DESIGN.md §6):
+///   cold opens read only segment footers and resume probes are O(1)
+///   index lookups, so campaigns can sweep millions of cells.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StoreFormat {
+    Jsonl,
+    Tiered,
+}
+
+impl StoreFormat {
+    /// Parse a `--store-format` value.
+    pub fn parse(s: &str) -> Result<StoreFormat> {
+        match s {
+            "jsonl" => Ok(StoreFormat::Jsonl),
+            "tiered" => Ok(StoreFormat::Tiered),
+            other => bail!("unknown store format '{other}' (expected 'jsonl' or 'tiered')"),
+        }
+    }
+}
+
+/// What [`ResultStore::compact`] did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CompactStats {
+    pub segments_before: usize,
+    pub segments_after: usize,
+    /// Live records in the compacted store.
+    pub records: usize,
+    /// Superseded duplicates dropped during the merge.
+    pub dropped: usize,
+}
+
+/// Name of the write-ahead tail inside a tiered store directory.
+const WAL_NAME: &str = "wal.jsonl";
+/// Default memtable size that triggers an automatic segment flush.
+const DEFAULT_FLUSH_THRESHOLD: usize = 4096;
+
+/// Memtable flush threshold (`SLOFETCH_STORE_FLUSH` overrides it, for
+/// tests and benches).
+fn flush_threshold() -> usize {
+    std::env::var("SLOFETCH_STORE_FLUSH")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(DEFAULT_FLUSH_THRESHOLD)
+}
+
+/// Kind slot of a record's JSON (0 = sim, 1 = cluster, 2 = sketch),
+/// mirroring [`Record::from_json`]'s dispatch.
+fn kind_of(j: &Json) -> Result<usize> {
+    match j.get("kind").and_then(Json::as_str) {
+        None => Ok(0),
+        Some("cluster") => Ok(1),
+        Some("sketch") => Ok(2),
+        Some(other) => bail!("unknown record kind '{other}'"),
+    }
+}
+
+impl Record {
+    fn key(&self) -> &str {
+        match self {
+            Record::Sim(r) => &r.key,
+            Record::Cluster(r) => &r.key,
+            Record::Sketch(r) => &r.key,
+        }
+    }
+
+    fn kind(&self) -> usize {
+        match self {
+            Record::Sim(_) => 0,
+            Record::Cluster(_) => 1,
+            Record::Sketch(_) => 2,
+        }
+    }
+
+    fn to_line(&self) -> String {
+        match self {
+            Record::Sim(r) => r.to_line(),
+            Record::Cluster(r) => r.to_line(),
+            Record::Sketch(r) => r.to_line(),
+        }
+    }
+}
+
+/// Storage backend behind a [`ResultStore`].
+enum Backend {
+    /// Single-file JSONL log (or pure in-memory when `file` is `None`).
+    Jsonl { file: Option<std::fs::File> },
+    Tiered(Tiered),
+}
+
+/// Tiered backend state: the open segment set plus the write-ahead
+/// tail the memtable mirrors.
+struct Tiered {
+    dir: PathBuf,
+    /// `None` on read-only ([`ResultStore::load`]) handles; pushes then
+    /// stay in memory, like a file-less JSONL store.
+    wal: Option<std::fs::File>,
+    threshold: usize,
+    /// Open segments, sorted by `min_seq` (flush order).
+    segments: Vec<Segment>,
+    /// Segment files that failed to open (torn footer, CRC mismatch):
+    /// renamed to `*.seg.quarantined` and preserved for inspection,
+    /// never silently dropped.
+    quarantined: Vec<PathBuf>,
+}
+
+impl Tiered {
+    /// Exact membership probe across all segments. Probe errors degrade
+    /// to "absent" (the cell is recomputed; push-side dedup absorbs any
+    /// duplicate) rather than aborting a campaign.
+    fn segments_contain(&self, key: &str) -> bool {
+        for seg in &self.segments {
+            match seg.contains(key) {
+                Ok(true) => return true,
+                Ok(false) => {}
+                Err(e) => {
+                    crate::obs_warn!(
+                        "store: probe of {:?} failed ({e:#}); treating '{key}' as absent",
+                        seg.path()
+                    );
+                }
+            }
+        }
+        false
+    }
+}
+
+/// The campaign's memory: resume probes (`contains`), append-with-dedup
+/// (`push*`), and the record scans reports aggregate. Two backends
+/// implement one contract — records are immutable once written, the
+/// first writer wins a key, and emission order is recoverable — the
+/// legacy single-file JSONL log and the tiered memtable → WAL → segment
+/// layout (DESIGN.md §6).
 pub struct ResultStore {
-    file: Option<std::fs::File>,
-    records: Vec<CellRecord>,
-    cluster_records: Vec<ClusterCellRecord>,
-    sketch_records: Vec<SketchCellRecord>,
-    keys: HashSet<String>,
+    /// Recent records: everything for JSONL stores, the unflushed
+    /// memtable for tiered ones. Each record carries its global
+    /// sequence number (append order over the store's lifetime), which
+    /// scans use to recover emission order from key-sorted segments.
+    mem: Vec<(u64, Record)>,
+    /// Keys of `mem` records (segment membership is probed separately).
+    mem_keys: HashSet<String>,
+    next_seq: u64,
+    backend: Backend,
 }
 
 impl ResultStore {
     /// A store with no backing file (tests, ad-hoc aggregation).
     pub fn in_memory() -> ResultStore {
         ResultStore {
-            file: None,
-            records: Vec::new(),
-            cluster_records: Vec::new(),
-            sketch_records: Vec::new(),
-            keys: HashSet::new(),
+            mem: Vec::new(),
+            mem_keys: HashSet::new(),
+            next_seq: 0,
+            backend: Backend::Jsonl { file: None },
         }
     }
 
-    /// Parse a JSONL file into an in-memory store (a missing file is an
-    /// empty store). A final line with no trailing newline is the
-    /// signature of a killed mid-write campaign and is tolerated; a
-    /// malformed *complete* line is an error. Also returns the byte
-    /// length to truncate to (partial unparseable tail) and whether the
-    /// tail lacked its newline, for [`ResultStore::open`]'s repair.
-    fn parse_file(path: &Path) -> Result<(ResultStore, Option<u64>, bool)> {
-        let mut store = ResultStore::in_memory();
+    /// Parse a JSONL file (a legacy store or a tiered store's WAL) into
+    /// records, in file order with first-record-wins dedup. A final
+    /// line with no trailing newline is the signature of a killed
+    /// mid-write campaign and is tolerated; a malformed *complete* line
+    /// is an error. Also returns the byte length to truncate to
+    /// (partial unparseable tail) and whether the tail lacked its
+    /// newline, for the writable opens' repair.
+    fn parse_jsonl(path: &Path) -> Result<(Vec<Record>, Option<u64>, bool)> {
+        let mut out = Vec::new();
+        let mut keys: HashSet<String> = HashSet::new();
         let mut keep_bytes: Option<u64> = None;
         let mut truncated_tail = false;
         if path.exists() {
@@ -687,19 +840,9 @@ impl ResultStore {
                     match parsed {
                         // Mirror push(): first record wins on key
                         // conflicts (e.g. concatenated shard files).
-                        Ok(Record::Sim(rec)) => {
-                            if store.keys.insert(rec.key.clone()) {
-                                store.records.push(rec);
-                            }
-                        }
-                        Ok(Record::Cluster(rec)) => {
-                            if store.keys.insert(rec.key.clone()) {
-                                store.cluster_records.push(rec);
-                            }
-                        }
-                        Ok(Record::Sketch(rec)) => {
-                            if store.keys.insert(rec.key.clone()) {
-                                store.sketch_records.push(rec);
+                        Ok(rec) => {
+                            if keys.insert(rec.key().to_string()) {
+                                out.push(rec);
                             }
                         }
                         Err(_) if !complete && truncated_tail => {
@@ -715,22 +858,32 @@ impl ResultStore {
                 offset += line.len();
             }
         }
-        Ok((store, keep_bytes, truncated_tail))
+        Ok((out, keep_bytes, truncated_tail))
     }
 
-    /// Read a result file without touching it — no write access needed,
-    /// no crash repair. For aggregating shard files (feed into
-    /// [`ResultStore::merge`]) and read-only reporting.
-    pub fn load(path: &Path) -> Result<ResultStore> {
-        Ok(Self::parse_file(path)?.0)
+    /// Build a store over `backend`, assigning sequence numbers from 0.
+    fn from_records(records: Vec<Record>, backend: Backend) -> ResultStore {
+        let mut store = ResultStore {
+            mem: Vec::new(),
+            mem_keys: HashSet::new(),
+            next_seq: 0,
+            backend,
+        };
+        for rec in records {
+            store.mem_keys.insert(rec.key().to_string());
+            let seq = store.next_seq;
+            store.next_seq += 1;
+            store.mem.push((seq, rec));
+        }
+        store
     }
 
-    /// Open a backing file for a campaign run: load existing lines, then
-    /// repair any killed-mid-write tail (truncate a partial line, or
-    /// newline-terminate a complete one) so appends land on a clean line
-    /// boundary (crash-resume contract, DESIGN.md §6).
-    pub fn open(path: &Path) -> Result<ResultStore> {
-        let (mut store, keep_bytes, truncated_tail) = Self::parse_file(path)?;
+    /// Open a legacy single-file JSONL store for writing: load existing
+    /// lines, then repair any killed-mid-write tail (truncate a partial
+    /// line, or newline-terminate a complete one) so appends land on a
+    /// clean line boundary (crash-resume contract, DESIGN.md §6).
+    fn open_jsonl(path: &Path) -> Result<ResultStore> {
+        let (records, keep_bytes, truncated_tail) = Self::parse_jsonl(path)?;
         let mut file = std::fs::OpenOptions::new()
             .create(true)
             .append(true)
@@ -741,102 +894,533 @@ impl ResultStore {
         } else if truncated_tail {
             file.write_all(b"\n").with_context(|| format!("repair {path:?}"))?;
         }
-        store.file = Some(file);
+        Ok(Self::from_records(records, Backend::Jsonl { file: Some(file) }))
+    }
+
+    /// Scratch sibling used while migrating a legacy file to a tiered
+    /// directory (`<store>.migrate-tmp`).
+    fn migrate_tmp_path(path: &Path) -> PathBuf {
+        let mut os = path.as_os_str().to_os_string();
+        os.push(".migrate-tmp");
+        PathBuf::from(os)
+    }
+
+    /// Import a legacy single-file JSONL store in place: the file
+    /// becomes the new tiered store's WAL, so every old record resumes
+    /// with its key (and report bytes) intact. The dance is
+    /// crash-recoverable: mkdir tmp → move file into tmp as `wal.jsonl`
+    /// → rename tmp over the original path; any prefix of it left by a
+    /// crash is finished on the next open.
+    fn migrate_legacy(path: &Path) -> Result<()> {
+        let tmp = Self::migrate_tmp_path(path);
+        if tmp.exists() {
+            if path.is_dir() {
+                // A previous migration completed; the tmp dir is stale.
+                std::fs::remove_dir_all(&tmp)
+                    .with_context(|| format!("remove stale {tmp:?}"))?;
+                return Ok(());
+            }
+            if path.is_file() {
+                std::fs::rename(path, tmp.join(WAL_NAME))
+                    .with_context(|| format!("resume migration of {path:?}"))?;
+            }
+            std::fs::rename(&tmp, path)
+                .with_context(|| format!("finish migration of {path:?}"))?;
+            crate::obs_info!("store: completed interrupted migration of {path:?}");
+            return Ok(());
+        }
+        if path.is_file() {
+            std::fs::create_dir_all(&tmp).with_context(|| format!("mkdir {tmp:?}"))?;
+            std::fs::rename(path, tmp.join(WAL_NAME))
+                .with_context(|| format!("stage legacy store {path:?}"))?;
+            std::fs::rename(&tmp, path)
+                .with_context(|| format!("finish migration of {path:?}"))?;
+            crate::obs_info!(
+                "store: imported legacy JSONL store {path:?} into the tiered layout"
+            );
+        }
+        Ok(())
+    }
+
+    /// Open a tiered store directory. `writable` handles repair crash
+    /// damage (quarantine unreadable segments, delete stale flush
+    /// temps, truncate a torn WAL tail) and hold the WAL open for
+    /// appends; read-only handles just skip what they cannot parse.
+    fn open_tiered(path: &Path, writable: bool) -> Result<ResultStore> {
+        let mut segments = Vec::new();
+        let mut quarantined = Vec::new();
+        if path.exists() {
+            let mut paths: Vec<PathBuf> = std::fs::read_dir(path)
+                .with_context(|| format!("read store dir {path:?}"))?
+                .filter_map(|e| e.ok())
+                .map(|e| e.path())
+                .collect();
+            paths.sort();
+            for p in paths {
+                let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+                if name.ends_with(".seg.tmp") {
+                    // A flush died before its rename; the WAL still
+                    // holds every record, so the partial file is junk.
+                    if writable {
+                        std::fs::remove_file(&p).ok();
+                    }
+                } else if name.ends_with(".seg.quarantined") {
+                    quarantined.push(p);
+                } else if name.ends_with(".seg") {
+                    match Segment::open(&p) {
+                        Ok(seg) => segments.push(seg),
+                        Err(e) if writable => {
+                            let q = p.with_extension("seg.quarantined");
+                            match std::fs::rename(&p, &q) {
+                                Ok(()) => {
+                                    crate::obs_warn!(
+                                        "store: quarantined unreadable segment {p:?} ({e:#})"
+                                    );
+                                    quarantined.push(q);
+                                }
+                                Err(re) => {
+                                    crate::obs_warn!(
+                                        "store: cannot quarantine {p:?} ({re}); unreadable: {e:#}"
+                                    );
+                                    quarantined.push(p);
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            crate::obs_warn!("store: skipping unreadable segment {p:?} ({e:#})");
+                            quarantined.push(p);
+                        }
+                    }
+                }
+            }
+        } else if writable {
+            std::fs::create_dir_all(path).with_context(|| format!("mkdir {path:?}"))?;
+        }
+        segments.sort_by_key(|s| s.min_seq);
+        let mut next_seq = segments.iter().map(|s| s.max_seq + 1).max().unwrap_or(0);
+        let wal_path = path.join(WAL_NAME);
+        let (wal_records, keep_bytes, truncated_tail) = Self::parse_jsonl(&wal_path)?;
+        let wal = if writable {
+            let mut f = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&wal_path)
+                .with_context(|| format!("open {wal_path:?}"))?;
+            if let Some(len) = keep_bytes {
+                f.set_len(len).with_context(|| format!("truncate {wal_path:?}"))?;
+            } else if truncated_tail {
+                f.write_all(b"\n").with_context(|| format!("repair {wal_path:?}"))?;
+            }
+            Some(f)
+        } else {
+            None
+        };
+        let threshold = flush_threshold();
+        let tiered = Tiered { dir: path.to_path_buf(), wal, threshold, segments, quarantined };
+        let mut mem = Vec::new();
+        let mut mem_keys = HashSet::new();
+        for rec in wal_records {
+            // Crash window: a flush renamed its segment but died before
+            // the WAL truncate — those records are already durable.
+            if tiered.segments_contain(rec.key()) {
+                continue;
+            }
+            mem_keys.insert(rec.key().to_string());
+            mem.push((next_seq, rec));
+            next_seq += 1;
+        }
+        let mut store =
+            ResultStore { mem, mem_keys, next_seq, backend: Backend::Tiered(tiered) };
+        if writable && store.mem.len() >= threshold {
+            // E.g. a freshly imported legacy store: fold the whole WAL
+            // into a segment now so the next open is footer-only.
+            store.flush()?;
+        }
         Ok(store)
     }
 
-    /// Total stored lines (simulation + cluster + sketch cells).
+    /// Read a result store without touching it — no write access, no
+    /// crash repair, no quarantining. For aggregating shard stores
+    /// (feed into [`ResultStore::merge`]) and read-only reporting.
+    /// Accepts both layouts (a file is a JSONL log, a directory a
+    /// tiered store).
+    pub fn load(path: &Path) -> Result<ResultStore> {
+        if path.is_dir() {
+            Self::open_tiered(path, false)
+        } else {
+            let (records, _, _) = Self::parse_jsonl(path)?;
+            Ok(Self::from_records(records, Backend::Jsonl { file: None }))
+        }
+    }
+
+    /// Open a store for a campaign run, auto-detecting the layout: an
+    /// existing directory opens as tiered, anything else (including a
+    /// missing path) as a legacy JSONL file. Use
+    /// [`ResultStore::open_format`] to force a layout — notably to
+    /// import a legacy file into the tiered layout.
+    pub fn open(path: &Path) -> Result<ResultStore> {
+        if path.is_dir() {
+            Self::open_format(path, StoreFormat::Tiered)
+        } else {
+            Self::open_format(path, StoreFormat::Jsonl)
+        }
+    }
+
+    /// Open a store in an explicit format. `Tiered` on a legacy JSONL
+    /// file transparently imports it (see [`ResultStore::load`] for
+    /// read-only access); `Jsonl` on a tiered directory is an error.
+    pub fn open_format(path: &Path, format: StoreFormat) -> Result<ResultStore> {
+        match format {
+            StoreFormat::Jsonl => {
+                if path.is_dir() {
+                    bail!(
+                        "{path:?} is a tiered store directory; open it with --store-format tiered"
+                    );
+                }
+                Self::open_jsonl(path)
+            }
+            StoreFormat::Tiered => {
+                Self::migrate_legacy(path)?;
+                Self::open_tiered(path, true)
+            }
+        }
+    }
+
+    /// Total stored records (simulation + cluster + sketch cells).
     pub fn len(&self) -> usize {
-        self.records.len() + self.cluster_records.len() + self.sketch_records.len()
+        let flushed: usize = match &self.backend {
+            Backend::Tiered(t) => t.segments.iter().map(|s| s.record_count()).sum(),
+            Backend::Jsonl { .. } => 0,
+        };
+        self.mem.len() + flushed
     }
 
     pub fn is_empty(&self) -> bool {
-        self.records.is_empty()
-            && self.cluster_records.is_empty()
-            && self.sketch_records.is_empty()
+        self.len() == 0
     }
 
+    /// Exact membership probe: the memtable key set, then each
+    /// segment's bloom filter + sparse index (an O(1) probe per
+    /// segment, not a log replay).
     pub fn contains(&self, key: &str) -> bool {
-        self.keys.contains(key)
+        if self.mem_keys.contains(key) {
+            return true;
+        }
+        match &self.backend {
+            Backend::Tiered(t) => t.segments_contain(key),
+            Backend::Jsonl { .. } => false,
+        }
     }
 
-    pub fn records(&self) -> &[CellRecord] {
-        &self.records
+    /// Stream records of one kind slot in emission order: segments in
+    /// flush order (each re-sorted by sequence number — segment seq
+    /// ranges are disjoint, so per-segment order is global order), then
+    /// the memtable. Loads one segment at a time; segments holding no
+    /// record of the kind are skipped entirely (the report range-scan
+    /// path).
+    fn for_each_record(
+        &self,
+        kind: usize,
+        mut f: impl FnMut(&Record) -> Result<()>,
+    ) -> Result<()> {
+        if let Backend::Tiered(t) = &self.backend {
+            for seg in &t.segments {
+                if seg.kind_count(kind) == 0 {
+                    continue;
+                }
+                let mut entries = seg.load_entries()?;
+                entries.sort_by_key(|&(_, seq, _)| seq);
+                for (_, _, j) in &entries {
+                    if kind_of(j)? != kind {
+                        continue;
+                    }
+                    f(&Record::from_json(j)?)?;
+                }
+            }
+        }
+        for (_, rec) in &self.mem {
+            if rec.kind() == kind {
+                f(rec)?;
+            }
+        }
+        Ok(())
     }
 
-    pub fn cluster_records(&self) -> &[ClusterCellRecord] {
-        &self.cluster_records
+    /// Stream every simulation record in emission order, one segment in
+    /// memory at a time — the bounded-memory path behind
+    /// [`ResultStore::records`] and large merges.
+    pub fn for_each_sim(&self, mut f: impl FnMut(&CellRecord) -> Result<()>) -> Result<()> {
+        self.for_each_record(0, |r| match r {
+            Record::Sim(c) => f(c),
+            _ => Ok(()),
+        })
     }
 
-    pub fn sketch_records(&self) -> &[SketchCellRecord] {
-        &self.sketch_records
+    /// Stream every cluster-scenario record in emission order (see
+    /// [`ResultStore::for_each_sim`]).
+    pub fn for_each_cluster(
+        &self,
+        mut f: impl FnMut(&ClusterCellRecord) -> Result<()>,
+    ) -> Result<()> {
+        self.for_each_record(1, |r| match r {
+            Record::Cluster(c) => f(c),
+            _ => Ok(()),
+        })
+    }
+
+    /// Stream every sketch-accuracy record in emission order (see
+    /// [`ResultStore::for_each_sim`]).
+    pub fn for_each_sketch(
+        &self,
+        mut f: impl FnMut(&SketchCellRecord) -> Result<()>,
+    ) -> Result<()> {
+        self.for_each_record(2, |r| match r {
+            Record::Sketch(c) => f(c),
+            _ => Ok(()),
+        })
+    }
+
+    /// All simulation records in emission order, materialized. Prefer
+    /// [`ResultStore::for_each_sim`] when a streaming pass suffices. A
+    /// segment read failure degrades to the readable prefix (with an
+    /// error-level diagnostic) so reporting stays best-effort.
+    pub fn records(&self) -> Vec<CellRecord> {
+        let mut out = Vec::new();
+        if let Err(e) = self.for_each_sim(|r| {
+            out.push(r.clone());
+            Ok(())
+        }) {
+            crate::obs_error!("store: sim record scan failed: {e:#}");
+        }
+        out
+    }
+
+    /// All cluster-scenario records in emission order, materialized
+    /// (see [`ResultStore::records`]).
+    pub fn cluster_records(&self) -> Vec<ClusterCellRecord> {
+        let mut out = Vec::new();
+        if let Err(e) = self.for_each_cluster(|r| {
+            out.push(r.clone());
+            Ok(())
+        }) {
+            crate::obs_error!("store: cluster record scan failed: {e:#}");
+        }
+        out
+    }
+
+    /// All sketch-accuracy records in emission order, materialized (see
+    /// [`ResultStore::records`]).
+    pub fn sketch_records(&self) -> Vec<SketchCellRecord> {
+        let mut out = Vec::new();
+        if let Err(e) = self.for_each_sketch(|r| {
+            out.push(r.clone());
+            Ok(())
+        }) {
+            crate::obs_error!("store: sketch record scan failed: {e:#}");
+        }
+        out
     }
 
     /// Append one record (no-op returning `false` if the key is already
-    /// present). Writes through to the backing file when one is open.
+    /// present). Writes through to the backing file — the JSONL log, or
+    /// the tiered store's WAL, flushing the memtable into a segment at
+    /// the size threshold.
     pub fn push(&mut self, rec: CellRecord) -> Result<bool> {
-        if self.keys.contains(&rec.key) {
-            return Ok(false);
-        }
-        if let Some(file) = &mut self.file {
-            writeln!(file, "{}", rec.to_line()).context("append to result store")?;
-        }
-        self.keys.insert(rec.key.clone());
-        self.records.push(rec);
-        Ok(true)
+        self.push_record(Record::Sim(rec))
     }
 
     /// Append one cluster-scenario record (same dedup/write-through
     /// semantics as [`ResultStore::push`]; the key space is shared).
     pub fn push_cluster(&mut self, rec: ClusterCellRecord) -> Result<bool> {
-        if self.keys.contains(&rec.key) {
-            return Ok(false);
-        }
-        if let Some(file) = &mut self.file {
-            writeln!(file, "{}", rec.to_line()).context("append to result store")?;
-        }
-        self.keys.insert(rec.key.clone());
-        self.cluster_records.push(rec);
-        Ok(true)
+        self.push_record(Record::Cluster(rec))
     }
 
     /// Append one sketch-accuracy record (same dedup/write-through
     /// semantics as [`ResultStore::push`]; the key space is shared).
     pub fn push_sketch(&mut self, rec: SketchCellRecord) -> Result<bool> {
-        if self.keys.contains(&rec.key) {
+        self.push_record(Record::Sketch(rec))
+    }
+
+    fn push_record(&mut self, rec: Record) -> Result<bool> {
+        if self.contains(rec.key()) {
             return Ok(false);
         }
-        if let Some(file) = &mut self.file {
-            writeln!(file, "{}", rec.to_line()).context("append to result store")?;
+        match &mut self.backend {
+            Backend::Jsonl { file } => {
+                if let Some(f) = file {
+                    writeln!(f, "{}", rec.to_line()).context("append to result store")?;
+                }
+            }
+            Backend::Tiered(t) => {
+                if let Some(w) = &mut t.wal {
+                    writeln!(w, "{}", rec.to_line()).context("append to store wal")?;
+                }
+            }
         }
-        self.keys.insert(rec.key.clone());
-        self.sketch_records.push(rec);
+        self.mem_keys.insert(rec.key().to_string());
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.mem.push((seq, rec));
+        let full = matches!(&self.backend,
+            Backend::Tiered(t) if t.wal.is_some() && self.mem.len() >= t.threshold);
+        if full {
+            self.flush()?;
+        }
         Ok(true)
     }
 
     /// Fold another store's records into this one (first writer wins on
-    /// key conflicts). Returns how many records were new.
+    /// key conflicts). Returns how many records were new. Streams the
+    /// other store kind by kind — one segment in memory at a time, one
+    /// record cloned per append — so merging fleet-scale shards keeps
+    /// memory bounded.
     pub fn merge(&mut self, other: &ResultStore) -> Result<usize> {
         let mut added = 0;
-        for rec in other.records() {
-            if self.push(rec.clone())? {
+        other.for_each_sim(|r| {
+            if self.push(r.clone())? {
                 added += 1;
             }
-        }
-        for rec in other.cluster_records() {
-            if self.push_cluster(rec.clone())? {
+            Ok(())
+        })?;
+        other.for_each_cluster(|r| {
+            if self.push_cluster(r.clone())? {
                 added += 1;
             }
-        }
-        for rec in other.sketch_records() {
-            if self.push_sketch(rec.clone())? {
+            Ok(())
+        })?;
+        other.for_each_sketch(|r| {
+            if self.push_sketch(r.clone())? {
                 added += 1;
             }
-        }
+            Ok(())
+        })?;
         Ok(added)
     }
-}
 
+    /// Flush the memtable into a new immutable segment and truncate the
+    /// WAL. No-op for JSONL stores, empty memtables, and read-only
+    /// handles. The segment rename happens before the WAL truncate, so
+    /// a crash between the two leaves records duplicated on disk but
+    /// deduplicated on open — never lost.
+    pub fn flush(&mut self) -> Result<()> {
+        if self.mem.is_empty() || !matches!(&self.backend, Backend::Tiered(_)) {
+            return Ok(());
+        }
+        let entries: Vec<SegEntry> = self
+            .mem
+            .iter()
+            .map(|(seq, rec)| SegEntry {
+                key: rec.key().to_string(),
+                seq: *seq,
+                kind: rec.kind(),
+                json: rec.to_line(),
+            })
+            .collect();
+        let Backend::Tiered(t) = &mut self.backend else {
+            return Ok(());
+        };
+        let Some(wal) = &t.wal else {
+            return Ok(());
+        };
+        let seg = Segment::write(&t.dir, entries)?;
+        wal.set_len(0).context("truncate store wal after flush")?;
+        // Re-flushing identical contents reuses the content-hashed
+        // filename; drop any stale handle to the same path.
+        t.segments.retain(|s| s.path() != seg.path());
+        t.segments.push(seg);
+        self.mem.clear();
+        self.mem_keys.clear();
+        Ok(())
+    }
+
+    /// Merge all segments into one, dropping superseded duplicates
+    /// (lowest sequence number wins, matching push-side
+    /// first-writer-wins). Explicit and foreground-only — campaigns
+    /// never pay a surprise compaction; run `slofetch campaign compact`
+    /// between sweeps. The memtable is flushed first so the result is a
+    /// single segment and an empty WAL.
+    pub fn compact(&mut self) -> Result<CompactStats> {
+        if !matches!(&self.backend, Backend::Tiered(_)) {
+            bail!("compact requires a tiered store (--store-format tiered)");
+        }
+        self.flush()?;
+        let Backend::Tiered(t) = &mut self.backend else {
+            unreachable!("checked above");
+        };
+        if t.wal.is_none() {
+            bail!("compact requires a writable store handle");
+        }
+        let before = t.segments.len();
+        let total: usize = t.segments.iter().map(|s| s.record_count()).sum();
+        if before <= 1 {
+            return Ok(CompactStats {
+                segments_before: before,
+                segments_after: before,
+                records: total,
+                dropped: 0,
+            });
+        }
+        // Lowest seq wins per key; BTreeMap keeps the merge key-sorted
+        // and deterministic.
+        let mut keep: BTreeMap<String, (u64, usize, String)> = BTreeMap::new();
+        for seg in &t.segments {
+            for (key, seq, j) in seg.load_entries()? {
+                let kind = kind_of(&j)?;
+                match keep.get(&key) {
+                    Some((have, _, _)) if *have <= seq => {}
+                    // parse→dump is byte-stable (sorted keys, canonical
+                    // number form), so rewriting preserves record bytes.
+                    _ => {
+                        keep.insert(key, (seq, kind, j.dump()));
+                    }
+                }
+            }
+        }
+        let records = keep.len();
+        let dropped = total - records;
+        let entries: Vec<SegEntry> = keep
+            .into_iter()
+            .map(|(key, (seq, kind, json))| SegEntry { key, seq, kind, json })
+            .collect();
+        let merged = Segment::write(&t.dir, entries)?;
+        let old_paths: Vec<PathBuf> =
+            t.segments.iter().map(|s| s.path().to_path_buf()).collect();
+        t.segments = vec![merged];
+        for p in old_paths {
+            if p != t.segments[0].path() {
+                std::fs::remove_file(&p)
+                    .with_context(|| format!("remove compacted segment {p:?}"))?;
+            }
+        }
+        Ok(CompactStats { segments_before: before, segments_after: 1, records, dropped })
+    }
+
+    /// Open segment files (0 for JSONL stores).
+    pub fn segment_count(&self) -> usize {
+        match &self.backend {
+            Backend::Tiered(t) => t.segments.len(),
+            Backend::Jsonl { .. } => 0,
+        }
+    }
+
+    /// Segment files that failed to open and were quarantined
+    /// (`*.seg.quarantined`) instead of silently dropped. Their cells
+    /// read as absent and are recomputed on the next run.
+    pub fn quarantined(&self) -> &[PathBuf] {
+        match &self.backend {
+            Backend::Tiered(t) => &t.quarantined,
+            Backend::Jsonl { .. } => &[],
+        }
+    }
+
+    /// Override the memtable flush threshold (tests and benches; the
+    /// `SLOFETCH_STORE_FLUSH` env var sets the process default).
+    pub fn set_flush_threshold(&mut self, records: usize) {
+        if let Backend::Tiered(t) = &mut self.backend {
+            t.threshold = records.max(1);
+        }
+    }
+}
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1214,5 +1798,161 @@ mod tests {
         std::fs::write(&path, "{not json\n").unwrap();
         assert!(ResultStore::open(&path).is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    /// Fresh scratch directory for tiered-store tests.
+    fn tdir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(name);
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn tiered_store_flushes_probes_and_resumes() {
+        let dir = tdir("slofetch_store_tiered");
+        let path = dir.join("r.store");
+        {
+            let mut s = ResultStore::open_format(&path, StoreFormat::Tiered).unwrap();
+            s.set_flush_threshold(2);
+            s.push(rec("a", "crypto", "nl", 1.0)).unwrap();
+            s.push(rec("b", "serde", "eip256", 1.1)).unwrap(); // flush 1
+            s.push_cluster(crec("cl", "reactive")).unwrap();
+            s.push_sketch(srec("sk", "w1024d4")).unwrap(); // flush 2
+            s.push(rec("c", "http", "perfect", 1.2)).unwrap(); // stays in WAL
+            assert_eq!(s.segment_count(), 2);
+        }
+        // Auto-detect: a directory reopens as tiered.
+        let s = ResultStore::open(&path).unwrap();
+        assert_eq!(s.len(), 5);
+        assert_eq!(s.segment_count(), 2);
+        for key in ["a", "b", "cl", "sk", "c"] {
+            assert!(s.contains(key), "lost '{key}' across reopen");
+        }
+        assert!(!s.contains("nope"));
+        // Emission order survives key-sorted segment files.
+        let recs = s.records();
+        assert_eq!(recs.len(), 3);
+        assert_eq!(recs[0].ipc, 1.0);
+        assert_eq!(recs[1].ipc, 1.1);
+        assert_eq!(recs[2].ipc, 1.2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn legacy_jsonl_file_imports_into_tiered() {
+        let dir = tdir("slofetch_store_import");
+        let path = dir.join("legacy.jsonl");
+        {
+            let mut s = ResultStore::open(&path).unwrap();
+            s.push(rec("a", "crypto", "nl", 1.0)).unwrap();
+            s.push(rec("b", "serde", "eip256", 1.1)).unwrap();
+        }
+        let mut s = ResultStore::open_format(&path, StoreFormat::Tiered).unwrap();
+        assert!(path.is_dir(), "legacy file should become a store directory");
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.records()[0], rec("a", "crypto", "nl", 1.0));
+        assert!(!s.push(rec("a", "crypto", "nl", 9.9)).unwrap(), "import lost resume dedup");
+        assert!(s.push(rec("c", "http", "perfect", 1.2)).unwrap());
+        drop(s);
+        let s = ResultStore::open(&path).unwrap();
+        assert_eq!(s.len(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_segment_is_quarantined_not_silently_dropped() {
+        let dir = tdir("slofetch_store_torn");
+        let path = dir.join("r.store");
+        {
+            let mut s = ResultStore::open_format(&path, StoreFormat::Tiered).unwrap();
+            s.set_flush_threshold(1);
+            s.push(rec("a", "crypto", "nl", 1.0)).unwrap();
+            assert_eq!(s.segment_count(), 1);
+        }
+        // Tear the segment's footer off, as a crashed disk flush would.
+        let seg = std::fs::read_dir(&path)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .find(|p| p.extension().is_some_and(|x| x == "seg"))
+            .unwrap();
+        let len = std::fs::metadata(&seg).unwrap().len();
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(&seg)
+            .unwrap()
+            .set_len(len - 40)
+            .unwrap();
+        let mut s = ResultStore::open(&path).unwrap();
+        assert_eq!(s.quarantined().len(), 1);
+        assert!(
+            s.quarantined()[0].to_string_lossy().ends_with(".seg.quarantined"),
+            "torn segment should be renamed, got {:?}",
+            s.quarantined()[0]
+        );
+        assert_eq!(s.segment_count(), 0);
+        // Its cells read as absent and recompute cleanly.
+        assert!(!s.contains("a"));
+        assert!(s.push(rec("a", "crypto", "nl", 1.0)).unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn compact_merges_segments_and_preserves_order() {
+        let dir = tdir("slofetch_store_compact");
+        let path = dir.join("r.store");
+        let mut s = ResultStore::open_format(&path, StoreFormat::Tiered).unwrap();
+        s.set_flush_threshold(1);
+        for (i, key) in ["f", "e", "d", "c", "b", "a"].iter().enumerate() {
+            s.push(rec(key, "crypto", "nl", 1.0 + i as f64)).unwrap();
+        }
+        assert_eq!(s.segment_count(), 6);
+        let before = s.records();
+        let stats = s.compact().unwrap();
+        assert_eq!(stats.segments_before, 6);
+        assert_eq!(stats.segments_after, 1);
+        assert_eq!(stats.records, 6);
+        assert_eq!(stats.dropped, 0);
+        assert_eq!(s.segment_count(), 1);
+        assert_eq!(s.records(), before, "compaction reordered the scan");
+        drop(s);
+        let s = ResultStore::open(&path).unwrap();
+        assert_eq!(s.len(), 6);
+        assert_eq!(s.records(), before, "compacted store reopened differently");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn jsonl_format_refuses_a_store_directory_and_compact_refuses_jsonl() {
+        let dir = tdir("slofetch_store_refuse");
+        let path = dir.join("r.store");
+        drop(ResultStore::open_format(&path, StoreFormat::Tiered).unwrap());
+        assert!(ResultStore::open_format(&path, StoreFormat::Jsonl).is_err());
+        let mut jsonl = ResultStore::in_memory();
+        assert!(jsonl.compact().is_err());
+        assert!(StoreFormat::parse("parquet").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn merge_streams_from_a_tiered_store() {
+        let dir = tdir("slofetch_store_merge");
+        let path = dir.join("shard.store");
+        {
+            let mut shard = ResultStore::open_format(&path, StoreFormat::Tiered).unwrap();
+            shard.set_flush_threshold(1);
+            shard.push(rec("a", "crypto", "nl", 2.0)).unwrap();
+            shard.push(rec("b", "serde", "eip256", 1.1)).unwrap();
+            shard.push_sketch(srec("sk", "w1024d4")).unwrap();
+        }
+        let shard = ResultStore::load(&path).unwrap();
+        let mut main = ResultStore::in_memory();
+        main.push(rec("a", "crypto", "nl", 1.0)).unwrap();
+        assert_eq!(main.merge(&shard).unwrap(), 2);
+        assert_eq!(main.len(), 3);
+        assert_eq!(main.records()[0].ipc, 1.0, "first writer must win the merge");
+        assert_eq!(main.sketch_records().len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

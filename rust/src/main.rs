@@ -2,7 +2,8 @@
 //!
 //! ```text
 //! slofetch figure <1|2|...|13|table1|summary|rpc|ablation|all> [--records N] [--seed S] [--out DIR] [--threads N]
-//! slofetch campaign --spec FILE [--threads N] [--out results.jsonl]
+//! slofetch campaign --spec FILE [--threads N] [--out results.store] [--store-format jsonl|tiered]
+//! slofetch campaign compact [--out results.store]
 //! slofetch cluster --spec FILE [--threads N] [--policies reactive,hysteresis,...]
 //!                  [--service-times analytic|empirical] [--trace FILE.slft]
 //!                  [--tenants on|off] [--telemetry MODE] [--scheduler heap|calendar]
@@ -17,7 +18,7 @@
 //! ```
 
 use anyhow::{bail, Context, Result};
-use slofetch::campaign::{self, CampaignSpec, ResultStore};
+use slofetch::campaign::{self, CampaignSpec, ResultStore, StoreFormat};
 use slofetch::cli::{parse_prefetcher, Args};
 use slofetch::config::{ControllerCfg, SimConfig};
 use slofetch::coordinator::deploy::DeploymentManager;
@@ -72,7 +73,8 @@ fn dispatch(args: &Args) -> Result<()> {
 
 const USAGE: &str = "usage:
   slofetch figure <1..13|table1|summary|rpc|ablation|all> [--records N] [--seed S] [--out DIR] [--threads N]
-  slofetch campaign --spec FILE [--threads N] [--out results.jsonl]
+  slofetch campaign --spec FILE [--threads N] [--out results.store] [--store-format jsonl|tiered]
+  slofetch campaign compact [--out results.store]
   slofetch cluster --spec FILE [--threads N] [--policies reactive,hysteresis,predictive,cost-aware]
                    [--service-times analytic|empirical] [--trace FILE.slft] [--tenants on|off]
                    [--telemetry MODE] [--scheduler heap|calendar] [--obs] [--obs-sample SHIFT]
@@ -94,6 +96,13 @@ cluster observability (DESIGN.md §11):
   --obs-sample SHIFT  span-sample 1 in 2^SHIFT requests (default 6)
   --trace-out FILE    write a Perfetto-compatible trace (open at https://ui.perfetto.dev)
   --metrics-out FILE  write the SLO-window metrics timeseries as JSONL
+
+campaign store (DESIGN.md §6):
+  --store-format F    tiered (default) = a directory holding a write-ahead tail plus immutable
+                      bloom-indexed segment files (fast resume probes, footer-only cold opens);
+                      jsonl = the legacy single-file log. Opening a legacy .jsonl file in tiered
+                      mode imports it in place; resumed cells and report bytes are unchanged.
+  compact             merge a tiered store's segments into one, dropping superseded duplicates
 
 sketch telemetry (DESIGN.md §12):
   --telemetry MODE    exact (default) | sketch[:GEOM] | compare[:GEOM] — bounded-memory streaming
@@ -162,11 +171,20 @@ fn cmd_figure(args: &Args) -> Result<()> {
 }
 
 fn cmd_campaign(args: &Args) -> Result<()> {
+    let format = StoreFormat::parse(args.opt("store-format").unwrap_or("tiered"))?;
+    let out = args.opt("out").unwrap_or(match format {
+        StoreFormat::Tiered => "results.store",
+        StoreFormat::Jsonl => "results.jsonl",
+    });
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("compact") => return cmd_campaign_compact(std::path::Path::new(out), format),
+        Some(other) => bail!("unknown campaign action '{other}' (expected 'compact')\n{USAGE}"),
+        None => {}
+    }
     let spec_path = args.opt("spec").context("--spec FILE required")?;
     let spec = CampaignSpec::load(std::path::Path::new(spec_path))?;
     let threads = args.threads()?;
-    let out = args.opt("out").unwrap_or("results.jsonl");
-    let mut store = ResultStore::open(std::path::Path::new(out))?;
+    let mut store = ResultStore::open_format(std::path::Path::new(out), format)?;
     let t0 = std::time::Instant::now();
     let outcome = campaign::run_to_store(&spec, threads, &mut store)?;
     let secs = t0.elapsed().as_secs_f64();
@@ -184,6 +202,30 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     for t in campaign::report::reports(&store) {
         println!("{}", t.markdown());
     }
+    // Campaigns never pay a surprise compaction mid-run; the WAL tail
+    // is folded into a segment here, at the natural quiesce point.
+    store.flush()?;
+    Ok(())
+}
+
+/// `slofetch campaign compact`: explicit foreground segment merge
+/// (DESIGN.md §6). Timing goes to stderr; the stats line is stdout.
+fn cmd_campaign_compact(path: &std::path::Path, format: StoreFormat) -> Result<()> {
+    if format == StoreFormat::Jsonl {
+        bail!("compact requires a tiered store (--store-format tiered)");
+    }
+    let mut store = ResultStore::open_format(path, StoreFormat::Tiered)?;
+    let t0 = std::time::Instant::now();
+    let stats = store.compact()?;
+    obs_info!("compacted {path:?} in {:.2}s", t0.elapsed().as_secs_f64());
+    println!(
+        "compacted {}: {} -> {} segments, {} records ({} superseded dropped)",
+        path.display(),
+        stats.segments_before,
+        stats.segments_after,
+        stats.records,
+        stats.dropped,
+    );
     Ok(())
 }
 

@@ -119,11 +119,12 @@ fn traffic_axis_store_is_byte_identical_across_thread_counts() {
     assert_eq!(b1, std::fs::read(&p4).unwrap(), "traffic axis broke determinism");
     // Shaped cells carry tails; their IPC matches the `none` twin.
     let store = ResultStore::load(&p1).unwrap();
-    let shaped: Vec<_> = store.records().iter().filter(|r| r.tail.is_some()).collect();
+    let recs = store.records();
+    let shaped: Vec<_> = recs.iter().filter(|r| r.tail.is_some()).collect();
     assert_eq!(shaped.len(), 6);
     for r in shaped {
         let base_key = r.key.split("|t").next().unwrap();
-        let twin = store.records().iter().find(|x| x.key == base_key).unwrap();
+        let twin = recs.iter().find(|x| x.key == base_key).unwrap();
         assert_eq!(r.ipc.to_bits(), twin.ipc.to_bits(), "{}", r.key);
     }
     std::fs::remove_file(&p1).ok();
@@ -242,11 +243,8 @@ fn store_lines_match_direct_engine_runs() {
     let records =
         gen::generate_records(&apps::app("serde").unwrap(), target.cell.trace_seed, spec.records);
     let direct = engine::run(&target.cell.cfg, &records);
-    let stored = store
-        .records()
-        .iter()
-        .find(|r| r.key == target.key)
-        .expect("cell missing from store");
+    let recs = store.records();
+    let stored = recs.iter().find(|r| r.key == target.key).expect("cell missing from store");
     assert_eq!(stored.ipc, direct.ipc());
     assert_eq!(stored.pf_issued, direct.stats.pf_issued);
     assert_eq!(stored.metadata_bytes, direct.metadata_bytes);

@@ -1,0 +1,140 @@
+//! Tiered-store integration tests (DESIGN.md §6): a committed legacy
+//! JSONL store imports in place, resumes with 0 recomputed cells, and
+//! reports byte-identically; a torn segment footer is quarantined (its
+//! cells recompute) rather than silently dropped; and jsonl-format vs
+//! tiered-format campaigns produce identical report bytes, before and
+//! after compaction.
+
+use slofetch::campaign::{self, report, CampaignSpec, ResultStore, StoreFormat};
+use std::path::PathBuf;
+
+/// The spec whose expanded keys the committed fixture holds.
+fn spec() -> CampaignSpec {
+    CampaignSpec {
+        name: "legacy".into(),
+        apps: vec!["crypto".into()],
+        prefetchers: vec!["nl".into(), "eip256".into()],
+        records: 2_000,
+        seeds: vec![3],
+        ml: vec![false],
+        churn_scale: vec![1.0],
+        traffic: vec!["none".into()],
+        clusters: Vec::new(),
+        policies: vec!["reactive".into()],
+        sketch: Vec::new(),
+    }
+}
+
+fn fixture() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/legacy_campaign.jsonl")
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("slofetch_store_itest").join(name);
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn markdowns(store: &ResultStore) -> Vec<String> {
+    report::reports(store).iter().map(|t| t.markdown()).collect()
+}
+
+#[test]
+fn legacy_fixture_imports_resumes_zero_and_reports_identically() {
+    let dir = tmp_dir("legacy_import");
+    let path = dir.join("results.jsonl");
+    std::fs::copy(fixture(), &path).unwrap();
+
+    // Reports straight off the legacy file (read-only load).
+    let legacy = ResultStore::load(&path).unwrap();
+    assert_eq!(legacy.len(), 4);
+    let legacy_reports = markdowns(&legacy);
+    drop(legacy);
+
+    // A tiered open imports the file in place: the path becomes a store
+    // directory with the old log as its WAL. Nothing is recomputed and
+    // no report byte moves (PR 4/5/7 hash-compat guarantees).
+    let mut store = ResultStore::open_format(&path, StoreFormat::Tiered).unwrap();
+    assert!(path.is_dir(), "legacy file should have become a store directory");
+    assert_eq!(store.len(), 4);
+    assert_eq!(markdowns(&store), legacy_reports, "import changed report bytes");
+
+    // Fold the imported WAL into a segment: reports now range-scan the
+    // segment by kind tag and must still be byte-identical.
+    store.flush().unwrap();
+    assert_eq!(store.segment_count(), 1);
+    assert_eq!(markdowns(&store), legacy_reports, "segment scan changed report bytes");
+
+    // Resume: the matching spec recomputes nothing.
+    let out = campaign::run_to_store(&spec(), 2, &mut store).unwrap();
+    assert_eq!(out.computed, 0, "legacy import recomputed cells");
+    assert_eq!(out.skipped, 2);
+    assert_eq!(markdowns(&store), legacy_reports, "no-op resume changed report bytes");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn torn_segment_footer_quarantines_and_recomputes() {
+    let dir = tmp_dir("torn");
+    let path = dir.join("results.store");
+    {
+        let mut store = ResultStore::open_format(&path, StoreFormat::Tiered).unwrap();
+        let out = campaign::run_to_store(&spec(), 2, &mut store).unwrap();
+        assert_eq!(out.computed, 2);
+        store.flush().unwrap();
+        assert_eq!(store.segment_count(), 1);
+    }
+    // Tear the footer off the segment, as a crash mid-write would.
+    let seg = std::fs::read_dir(&path)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .find(|p| p.extension().is_some_and(|x| x == "seg"))
+        .unwrap();
+    let len = std::fs::metadata(&seg).unwrap().len();
+    std::fs::OpenOptions::new().write(true).open(&seg).unwrap().set_len(len - 37).unwrap();
+
+    let mut store = ResultStore::open(&path).unwrap();
+    assert_eq!(store.quarantined().len(), 1, "torn segment not quarantined");
+    let q = store.quarantined()[0].clone();
+    assert!(
+        q.to_string_lossy().ends_with(".seg.quarantined"),
+        "torn segment should be renamed for inspection, got {q:?}"
+    );
+    assert_eq!(store.segment_count(), 0);
+    // Its cells read as absent and recompute...
+    let out = campaign::run_to_store(&spec(), 2, &mut store).unwrap();
+    assert_eq!(out.computed, 2, "quarantined cells must recompute");
+    // ...while the damaged bytes stay on disk, never silently dropped.
+    assert!(q.exists(), "quarantined segment file was deleted");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn jsonl_and_tiered_campaigns_report_identically() {
+    let dir = tmp_dir("formats");
+    let jp = dir.join("results.jsonl");
+    let tp = dir.join("results.store");
+    let mut js = ResultStore::open_format(&jp, StoreFormat::Jsonl).unwrap();
+    campaign::run_to_store(&spec(), 1, &mut js).unwrap();
+    let a = markdowns(&js);
+
+    // Worst case for ordering: one segment per record, computed on a
+    // different thread count.
+    let mut ts = ResultStore::open_format(&tp, StoreFormat::Tiered).unwrap();
+    ts.set_flush_threshold(1);
+    campaign::run_to_store(&spec(), 4, &mut ts).unwrap();
+    assert_eq!(ts.segment_count(), 2);
+    assert_eq!(a, markdowns(&ts), "store format changed report bytes");
+
+    // Compaction and a cold reopen change neither counts nor bytes.
+    let stats = ts.compact().unwrap();
+    assert_eq!(stats.segments_after, 1);
+    assert_eq!(stats.records, 2);
+    drop(ts);
+    let ts = ResultStore::open(&tp).unwrap();
+    assert_eq!(ts.len(), 2);
+    assert_eq!(a, markdowns(&ts), "compaction changed report bytes");
+    std::fs::remove_dir_all(&dir).ok();
+}
