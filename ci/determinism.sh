@@ -7,7 +7,8 @@
 # Contracts checked, in order:
 #   - cluster stdout is byte-identical across --threads 1 / --threads 8
 #     for every shipped example spec (analytic, empirical, slft-replay,
-#     tenants, obs, sketch telemetry);
+#     tenants, faults, obs, sketch telemetry), and --faults off lands
+#     on the plain example's exact bytes (DESIGN.md §14);
 #   - cluster stdout is byte-identical across --scheduler heap /
 #     --scheduler calendar (the §13 scheduler-equivalence oracle);
 #   - campaign stores are byte-identical across thread counts and a
@@ -72,6 +73,23 @@ step "tenants off reproduces the single-tenant baseline shape"
 "$BIN" cluster --spec "$EX/cluster_tenants.json" --tenants off --threads 8 > /tmp/cluster-ten-off.out
 ! grep -q "cluster_tenants" /tmp/cluster-ten-off.out
 
+step "faulted cluster stdout is thread-count invariant (DESIGN.md §14)"
+"$BIN" cluster --spec "$EX/cluster_faults.json" --threads 1 > /tmp/cluster-fault-t1.out
+"$BIN" cluster --spec "$EX/cluster_faults.json" --threads 8 > /tmp/cluster-fault-t8.out
+diff -u /tmp/cluster-fault-t1.out /tmp/cluster-fault-t8.out
+grep -q "cluster_faults" /tmp/cluster-fault-t1.out
+
+step "faulted stdout is scheduler invariant"
+"$BIN" cluster --spec "$EX/cluster_faults.json" --scheduler heap --threads 8 > /tmp/cluster-fault-heap.out
+diff -u /tmp/cluster-fault-t8.out /tmp/cluster-fault-heap.out
+
+step "faults off reproduces the plain example byte-for-byte"
+# cluster_faults.json is cluster.json + a faults section, so --faults
+# off must land on the exact bytes of the plain cluster.json run.
+"$BIN" cluster --spec "$EX/cluster_faults.json" --faults off --threads 8 > /tmp/cluster-fault-off.out
+diff -u /tmp/cluster-t8.out /tmp/cluster-fault-off.out
+! grep -q "cluster_faults" /tmp/cluster-fault-off.out
+
 step "slft file replay is rerun invariant"
 "$BIN" gen-trace --app websearch --records 40000 --out /tmp/ws.slft
 "$BIN" cluster --spec "$EX/cluster_empirical.json" --trace /tmp/ws.slft --threads 8 > /tmp/cluster-slft-a.out
@@ -96,6 +114,15 @@ grep -q "campaign_tenants" /tmp/campaign-ten.log
 "$BIN" campaign --spec "$EX/campaign_tenants.json" --store-format jsonl --threads 2 --out /tmp/campaign-ten.jsonl | tee /tmp/campaign-ten-rerun.log
 grep -q "(0 computed," /tmp/campaign-ten-rerun.log
 grep -q "campaign_tenants" /tmp/campaign-ten-rerun.log
+
+step "fault campaign renders the regime ranking and resumes"
+rm -f /tmp/campaign-faults.jsonl
+"$BIN" campaign --spec "$EX/campaign_faults.json" --store-format jsonl --threads 8 --out /tmp/campaign-faults.jsonl | tee /tmp/campaign-faults.log
+grep -q "campaign_faults" /tmp/campaign-faults.log
+grep -q "campaign_cluster_rank" /tmp/campaign-faults.log
+"$BIN" campaign --spec "$EX/campaign_faults.json" --store-format jsonl --threads 2 --out /tmp/campaign-faults.jsonl | tee /tmp/campaign-faults-rerun.log
+grep -q "(0 computed," /tmp/campaign-faults-rerun.log
+grep -q "campaign_faults" /tmp/campaign-faults-rerun.log
 
 step "observability artifacts are thread-count invariant (DESIGN.md §11)"
 "$BIN" cluster --spec "$EX/cluster_obs.json" --threads 1 \

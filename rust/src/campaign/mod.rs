@@ -274,13 +274,20 @@ pub fn run_to_store(
     let results = runner::parallel_map(cpending.len(), threads, |i| {
         let c = cpending[i];
         match c.tenant {
-            None => crate::cluster::run_policy_scenario(
-                &prepared[&c.cluster],
-                &spec.clusters[c.cluster],
-                &c.policy,
-                &c.shape,
-            )
-            .map(Some),
+            None => {
+                // The cell's fault regime (campaign axis) overlays the
+                // cluster's own `faults.client` policies; "none" cells
+                // pass no fault plan and run the pre-fault code path.
+                let fs = spec::regime_faults(&spec.clusters[c.cluster], &c.faults);
+                crate::cluster::run_policy_scenario_faults(
+                    &prepared[&c.cluster],
+                    &spec.clusters[c.cluster],
+                    &c.policy,
+                    &c.shape,
+                    (!fs.is_empty()).then_some(&fs),
+                )
+                .map(Some)
+            }
             Some((ti, true)) => crate::cluster::run_tenant_solo(
                 &prepared[&c.cluster],
                 &spec.clusters[c.cluster],
@@ -297,13 +304,15 @@ pub fn run_to_store(
         let rec = match c.tenant {
             None => {
                 let run = r?.expect("policy cell produced no result");
-                ClusterCellRecord::from_result(
+                let mut rec = ClusterCellRecord::from_result(
                     &c.key,
                     &cluster.name,
                     &c.policy.label(),
                     &cluster.service_times,
                     &run,
-                )
+                );
+                rec.faults = c.faults.clone();
+                rec
             }
             Some((ti, solo)) => {
                 let owned;
@@ -374,6 +383,7 @@ mod tests {
             traffic: vec!["none".into()],
             clusters: Vec::new(),
             policies: vec!["reactive".into()],
+            faults: vec!["none".into()],
             sketch: Vec::new(),
         }
     }
@@ -541,6 +551,51 @@ mod tests {
         // Resume: zero recomputed cells.
         let again = run_to_store(&spec, 4, &mut store).unwrap();
         assert_eq!(again.computed, 0, "empirical cluster cells recomputed on resume");
+    }
+
+    #[test]
+    fn fault_axis_records_regimes_and_resumes_over_a_healthy_store() {
+        // Run the healthy campaign first — the store a user has before
+        // adding a fault axis.
+        let healthy = CampaignSpec {
+            clusters: vec![tiny_cluster()],
+            policies: vec!["reactive".into(), "predictive".into()],
+            ..quick_spec()
+        };
+        let mut store = ResultStore::in_memory();
+        let out = run_to_store(&healthy, 2, &mut store).unwrap();
+        assert_eq!(out, CampaignOutcome { total: 6, computed: 6, skipped: 0 });
+        let healthy_recs = store.cluster_records();
+
+        // Extending the spec with a fault regime only computes the new
+        // faulted cells; the healthy lines are resumed untouched.
+        let spec = CampaignSpec {
+            faults: vec!["none".into(), "down:be:0:20000:40000".into()],
+            ..healthy.clone()
+        };
+        let out = run_to_store(&spec, 2, &mut store).unwrap();
+        assert_eq!(out, CampaignOutcome { total: 8, computed: 2, skipped: 6 });
+        let recs = store.cluster_records();
+        assert_eq!(&recs[..2], &healthy_recs[..], "healthy lines changed under resume");
+        for r in &recs[2..] {
+            assert_eq!(r.faults, "down:be:0:20000:40000");
+            assert!(r.key.ends_with("|fdown:be:0:20000:40000"), "{}", r.key);
+            assert!(r.windows > 0 && r.p99_us.is_finite(), "{}", r.key);
+        }
+        // Both regimes rank in their own tables; the healthy ranking
+        // sees only healthy cells.
+        let rank = report::cluster_ranking(&store).expect("healthy ranking missing");
+        assert_eq!(rank.rows.len(), 2);
+        let ft = report::fault_ranking(&store).expect("campaign_faults missing");
+        assert_eq!(ft.rows.len(), 2);
+        // Rerun: nothing recomputes; thread count changes nothing.
+        let again = run_to_store(&spec, 4, &mut store).unwrap();
+        assert_eq!(again, CampaignOutcome { total: 8, computed: 0, skipped: 8 });
+        let mut store2 = ResultStore::in_memory();
+        run_to_store(&spec, 1, &mut store2).unwrap();
+        for (a, b) in store.cluster_records().iter().zip(store2.cluster_records().iter()) {
+            assert_eq!(a, b, "fault cell differs across thread counts");
+        }
     }
 
     fn tenant_cluster() -> crate::cluster::ClusterSpec {

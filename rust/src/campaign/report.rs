@@ -242,15 +242,17 @@ fn tail_table_from(records: &[CellRecord]) -> Option<Table> {
 
 /// Cluster-scenario sweep table: one row per stored (cluster, policy,
 /// traffic) cell with its SLO burn and cost metrics. Tenant cells have
-/// their own paired table ([`tenant_pairings`]) and are excluded here.
-/// `None` when the campaign had no (policy-swept) cluster axis.
+/// their own paired table ([`tenant_pairings`]), fault-regime cells
+/// their own ranking ([`fault_ranking`]); both are excluded here so the
+/// healthy-regime sweep renders exactly as it did before the fault
+/// axis. `None` when the campaign had no (policy-swept) cluster axis.
 pub fn cluster_table(store: &ResultStore) -> Option<Table> {
     cluster_table_from(&store.cluster_records())
 }
 
 fn cluster_table_from(records: &[ClusterCellRecord]) -> Option<Table> {
     let recs: Vec<&ClusterCellRecord> =
-        records.iter().filter(|r| r.tenant.is_empty()).collect();
+        records.iter().filter(|r| r.tenant.is_empty() && r.faults.is_empty()).collect();
     if recs.is_empty() {
         return None;
     }
@@ -306,7 +308,7 @@ pub fn cluster_ranking(store: &ResultStore) -> Option<Table> {
 
 fn cluster_ranking_from(records: &[ClusterCellRecord]) -> Option<Table> {
     let recs: Vec<&ClusterCellRecord> =
-        records.iter().filter(|r| r.tenant.is_empty()).collect();
+        records.iter().filter(|r| r.tenant.is_empty() && r.faults.is_empty()).collect();
     if recs.is_empty() {
         return None;
     }
@@ -347,6 +349,70 @@ fn cluster_ranking_from(records: &[ClusterCellRecord]) -> Option<Table> {
         }
     }
     t.note("rank 1 = fewest burned windows, cheapest replica-seconds on ties");
+    Some(t)
+}
+
+/// Policy ranking under injected fault regimes: one group per
+/// (cluster, traffic, model, regime), ranked like [`cluster_ranking`]
+/// (burn first, replica-seconds on ties, then P99). A policy that tops
+/// the healthy ranking can drop here — retries and hedges that are
+/// free under a healthy cluster become load under a crashed or gray
+/// replica — which is exactly what this table is for. `None` when the
+/// campaign had no `faults` axis beyond "none".
+pub fn fault_ranking(store: &ResultStore) -> Option<Table> {
+    fault_ranking_from(&store.cluster_records())
+}
+
+fn fault_ranking_from(records: &[ClusterCellRecord]) -> Option<Table> {
+    let recs: Vec<&ClusterCellRecord> =
+        records.iter().filter(|r| r.tenant.is_empty() && !r.faults.is_empty()).collect();
+    if recs.is_empty() {
+        return None;
+    }
+    // Group in first-seen (expansion) order: regime is the outer sweep
+    // loop, so each regime's policies land contiguously.
+    type FaultKey = (String, String, String, String);
+    let mut groups: Vec<(FaultKey, Vec<&ClusterCellRecord>)> = Vec::new();
+    for r in recs {
+        let k =
+            (r.cluster.clone(), r.traffic.clone(), r.service_times.clone(), r.faults.clone());
+        match groups.iter_mut().find(|(g, _)| *g == k) {
+            Some((_, v)) => v.push(r),
+            None => groups.push((k, vec![r])),
+        }
+    }
+    let mut t = Table::new(
+        "campaign_faults",
+        "Autoscaler policy ranking under injected fault regimes",
+        &["cluster", "traffic", "model", "faults", "rank", "policy", "burn", "replica·s", "P99 µs"],
+    );
+    for ((cluster, traffic, model, regime), mut v) in groups {
+        v.sort_by(|a, b| {
+            a.burn_rate()
+                .partial_cmp(&b.burn_rate())
+                .unwrap()
+                .then(a.replica_us.partial_cmp(&b.replica_us).unwrap())
+                .then(a.p99_us.partial_cmp(&b.p99_us).unwrap())
+        });
+        for (i, r) in v.iter().enumerate() {
+            t.row(vec![
+                cluster.clone(),
+                traffic.clone(),
+                model.clone(),
+                regime.clone(),
+                (i + 1).to_string(),
+                r.policy.clone(),
+                format!("{}/{}", r.violated_windows, r.windows),
+                f2(r.replica_us / 1e6),
+                f2(r.p99_us),
+            ]);
+        }
+    }
+    t.note(
+        "one group per fault regime (';'-joined schedule from the campaign faults \
+         axis); rank 1 = fewest burned windows under that regime — compare against \
+         campaign_cluster_rank to see which policies are robust, not just cheap",
+    );
     Some(t)
 }
 
@@ -521,6 +587,9 @@ pub fn reports(store: &ResultStore) -> Vec<Table> {
     if let Some(t) = cluster_ranking_from(&clusters) {
         out.push(t);
     }
+    if let Some(t) = fault_ranking_from(&clusters) {
+        out.push(t);
+    }
     if let Some(t) = tenant_pairings_from(&clusters) {
         out.push(t);
     }
@@ -633,6 +702,7 @@ mod tests {
             cluster: "web".into(),
             policy: policy.into(),
             tenant: String::new(),
+            faults: String::new(),
             service_times: "empirical".into(),
             traffic: traffic.into(),
             requests: 50_000,
@@ -694,6 +764,46 @@ mod tests {
         // ...and the analytic row ranks first in its own group.
         let ana = rank.rows.iter().find(|r| r[2] == "analytic").unwrap();
         assert_eq!(ana[3], "1");
+    }
+
+    #[test]
+    fn fault_cells_rank_in_their_own_table_and_stay_out_of_healthy_ones() {
+        let s = store();
+        assert!(fault_ranking(&s).is_none(), "fault table without a fault axis");
+
+        let mut s = ResultStore::in_memory();
+        // Healthy regime: reactive is cheapest and burns nothing.
+        s.push_cluster(crec("reactive", "poisson:0.65", 0, 6.0e6)).unwrap();
+        s.push_cluster(crec("predictive:30000:4", "poisson:0.65", 0, 8.0e6)).unwrap();
+        // Under the crash regime reactive burns hard; predictive holds.
+        let regime = "down:be:0:20000:30000";
+        let mut f1 = crec("reactive", "poisson:0.65", 7, 6.5e6);
+        f1.key = format!("{}|f{regime}", f1.key);
+        f1.faults = regime.into();
+        let mut f2 = crec("predictive:30000:4", "poisson:0.65", 1, 8.5e6);
+        f2.key = format!("{}|f{regime}", f2.key);
+        f2.faults = regime.into();
+        s.push_cluster(f1).unwrap();
+        s.push_cluster(f2).unwrap();
+
+        // Healthy tables see only the healthy cells — same rows as a
+        // pre-fault store — and reactive tops the healthy ranking.
+        let t = cluster_table(&s).expect("healthy rows missing");
+        assert_eq!(t.rows.len(), 2, "fault cells leaked into cluster_table");
+        let rank = cluster_ranking(&s).expect("healthy ranking missing");
+        assert_eq!(rank.rows.len(), 2);
+        assert_eq!(rank.rows[0][4], "reactive");
+
+        // The fault ranking flips the order, labelled with the regime.
+        let ft = fault_ranking(&s).expect("fault ranking missing");
+        assert_eq!(ft.rows.len(), 2);
+        assert_eq!(ft.rows[0][3], regime);
+        assert_eq!(ft.rows[0][4], "1");
+        assert_eq!(ft.rows[0][5], "predictive:30000:4");
+        assert_eq!(ft.rows[1][5], "reactive");
+        assert!(ft.markdown().contains("campaign_faults"));
+        // All three cluster tables ride along in reports().
+        assert_eq!(reports(&s).len(), 6);
     }
 
     fn trec(cluster: &str, mode: &str, tenant: &str, p99: f64, violated: u32) -> ClusterCellRecord {

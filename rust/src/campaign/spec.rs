@@ -9,6 +9,7 @@
 
 use super::runner::Cell;
 use crate::cli::parse_prefetcher;
+use crate::cluster::faults::FaultsSpec;
 use crate::cluster::slo::Policy;
 use crate::cluster::workload::TrafficShape;
 use crate::cluster::ClusterSpec;
@@ -54,6 +55,18 @@ pub struct CampaignSpec {
     /// Autoscaler policies ([`Policy::parse`] syntax) applied to every
     /// cluster scenario. Only consulted when `clusters` is non-empty.
     pub policies: Vec<String>,
+    /// Fault-regime axis (DESIGN.md §14): each non-`"none"` entry is a
+    /// `;`-joined list of fault-schedule specs (the grammar of
+    /// `ClusterSpec.faults.events`) swept over every policy-swept
+    /// cluster cell, so one campaign ranks the policy suite under each
+    /// fault regime. `"none"` (the default) runs the cluster's own
+    /// (schedule-free) fault section, keeping cell keys — and store
+    /// resume — identical to pre-fault campaigns. Clusters keep their
+    /// `faults.client` policies under every regime; their `faults.events`
+    /// must be empty (schedules are this axis). Only consulted when
+    /// `clusters` is non-empty; tenant clusters are exempt from the
+    /// sweep (the tenant engine path has no fault axis).
+    pub faults: Vec<String>,
     /// Sketch-accuracy axis (DESIGN.md §12): telemetry geometries
     /// (`w{width}d{depth}p{hll_p}k{topk}`) to evaluate in compare mode.
     /// Each geometry adds one ML-gated run of the campaign's *first*
@@ -77,6 +90,7 @@ impl Default for CampaignSpec {
             traffic: vec!["none".into()],
             clusters: Vec::new(),
             policies: vec!["reactive".into()],
+            faults: vec!["none".into()],
             sketch: Vec::new(),
         }
     }
@@ -119,6 +133,20 @@ pub struct ClusterCell {
     pub shape: TrafficShape,
     /// Tenant coordinate: `(tenant index, solo?)`. `None` = policy cell.
     pub tenant: Option<(usize, bool)>,
+    /// Fault regime (`;`-joined schedule specs); empty = the `"none"`
+    /// axis value — the cluster's own schedule-free fault section.
+    pub faults: String,
+}
+
+/// The fault section one cluster cell runs under `regime` (`""` = the
+/// `"none"` axis value): the cluster's own client policies, with the
+/// regime's schedule swapped in when one is given.
+pub fn regime_faults(cluster: &ClusterSpec, regime: &str) -> FaultsSpec {
+    let mut f = cluster.faults.clone();
+    if !regime.is_empty() {
+        f.events = regime.split(';').map(str::to_string).collect();
+    }
+    f
 }
 
 /// One expanded sketch-accuracy cell (DESIGN.md §12): a compare-mode
@@ -194,6 +222,7 @@ impl CampaignSpec {
             || self.ml.is_empty()
             || self.churn_scale.is_empty()
             || self.traffic.is_empty()
+            || self.faults.is_empty()
         {
             bail!("campaign '{}' has an empty axis", self.name);
         }
@@ -237,6 +266,15 @@ impl CampaignSpec {
                     c.name
                 );
             }
+            if !c.faults.events.is_empty() {
+                bail!(
+                    "campaign '{}': cluster '{}' declares its own fault schedule — \
+                     fault regimes are a campaign axis (set campaign.faults; the \
+                     cluster keeps only faults.client)",
+                    self.name,
+                    c.name
+                );
+            }
             if !seen.insert(c.name.as_str()) {
                 bail!("campaign '{}': duplicate cluster name '{}'", self.name, c.name);
             }
@@ -257,6 +295,40 @@ impl CampaignSpec {
                     bail!("campaign '{}': duplicate policy '{p}'", self.name);
                 }
             }
+            // Every non-"none" regime must parse against every cluster
+            // it sweeps (the policy-swept ones — tenant clusters are
+            // exempt), and a regime-only campaign with nothing to sweep
+            // is a misconfiguration, not a silent no-op.
+            let swept: Vec<&ClusterSpec> =
+                self.clusters.iter().filter(|c| !c.tenancy()).collect();
+            let mut seen = std::collections::HashSet::new();
+            for f in &self.faults {
+                if !seen.insert(f.as_str()) {
+                    bail!("campaign '{}': duplicate fault regime '{f}'", self.name);
+                }
+                if f == "none" {
+                    continue;
+                }
+                if swept.is_empty() {
+                    bail!(
+                        "campaign '{}': fault regime '{f}' has no policy-swept \
+                         cluster to apply to",
+                        self.name
+                    );
+                }
+                for c in &swept {
+                    let names: Vec<String> =
+                        c.topology.services.iter().map(|s| s.name.clone()).collect();
+                    let replicas: Vec<u32> =
+                        c.topology.services.iter().map(|s| s.replicas).collect();
+                    regime_faults(c, f).validate(&names, &replicas).with_context(|| {
+                        format!(
+                            "campaign '{}': fault regime '{f}' on cluster '{}'",
+                            self.name, c.name
+                        )
+                    })?;
+                }
+            }
         }
         Ok(())
     }
@@ -273,9 +345,10 @@ impl CampaignSpec {
     }
 
     /// Cluster-scenario cell count: Σ over clusters of
-    /// (policies × that cluster's traffic shapes) — except multi-tenant
-    /// clusters, which contribute one solo and one co-located cell per
-    /// tenant instead (their tenants carry the traffic bindings).
+    /// (fault regimes × policies × that cluster's traffic shapes) —
+    /// except multi-tenant clusters, which contribute one solo and one
+    /// co-located cell per tenant instead (their tenants carry the
+    /// traffic bindings, and the fault axis does not apply).
     pub fn cluster_cell_count(&self) -> usize {
         self.clusters
             .iter()
@@ -283,7 +356,7 @@ impl CampaignSpec {
                 if c.tenancy() {
                     2 * c.tenants.len()
                 } else {
-                    self.policies.len() * c.traffic.len()
+                    self.faults.len() * self.policies.len() * c.traffic.len()
                 }
             })
             .sum()
@@ -446,27 +519,43 @@ impl CampaignSpec {
                             policy: Policy::Reactive,
                             shape,
                             tenant: Some((ti, solo)),
+                            faults: String::new(),
                         });
                     }
                 }
                 continue;
             }
-            for pol in &self.policies {
-                let policy = Policy::parse(pol)?;
-                for t in &cluster.traffic {
-                    let shape = TrafficShape::parse(t)?;
-                    out.push(ClusterCell {
-                        key: format!(
+            // Fault regimes are the outer loop so the `"none"` block —
+            // whose keys are byte-identical to pre-fault campaigns —
+            // stays a contiguous prefix and existing stores resume with
+            // 0 recomputed cells.
+            for regime in &self.faults {
+                let regime = if regime == "none" { "" } else { regime.as_str() };
+                for pol in &self.policies {
+                    let policy = Policy::parse(pol)?;
+                    for t in &cluster.traffic {
+                        let shape = TrafficShape::parse(t)?;
+                        // The `|f` suffix is omitted for `"none"` so
+                        // pre-fault stores keep resuming.
+                        let mut key = format!(
                             "cluster|{}#{hash:016x}|{}|t{}",
                             cluster.name,
                             policy.label(),
                             shape.label()
-                        ),
-                        cluster: ci,
-                        policy: policy.clone(),
-                        shape,
-                        tenant: None,
-                    });
+                        );
+                        if !regime.is_empty() {
+                            key.push_str("|f");
+                            key.push_str(regime);
+                        }
+                        out.push(ClusterCell {
+                            key,
+                            cluster: ci,
+                            policy: policy.clone(),
+                            shape,
+                            tenant: None,
+                            faults: regime.to_string(),
+                        });
+                    }
                 }
             }
         }
@@ -574,6 +663,10 @@ impl CampaignSpec {
                 Json::Arr(self.policies.iter().map(|p| Json::str(p)).collect()),
             ),
             (
+                "faults",
+                Json::Arr(self.faults.iter().map(|f| Json::str(f)).collect()),
+            ),
+            (
                 "sketch",
                 Json::Arr(self.sketch.iter().map(|g| Json::str(g)).collect()),
             ),
@@ -649,6 +742,16 @@ impl CampaignSpec {
                 })
                 .collect::<Result<_>>()?;
         }
+        if let Some(arr) = j.get("faults").and_then(Json::as_arr) {
+            spec.faults = arr
+                .iter()
+                .map(|v| {
+                    v.as_str()
+                        .map(str::to_string)
+                        .context("'faults' entries must be strings")
+                })
+                .collect::<Result<_>>()?;
+        }
         if let Some(arr) = j.get("sketch").and_then(Json::as_arr) {
             spec.sketch = arr
                 .iter()
@@ -692,6 +795,7 @@ mod tests {
             traffic: vec!["none".into()],
             clusters: Vec::new(),
             policies: vec!["reactive".into()],
+            faults: vec!["none".into()],
             sketch: Vec::new(),
         }
     }
@@ -1014,6 +1118,75 @@ mod tests {
             ..small()
         };
         assert!(mixed.validate().is_err(), "policy cluster without policies accepted");
+    }
+
+    #[test]
+    fn fault_axis_expands_suffixed_cells_after_the_none_block() {
+        let base = CampaignSpec {
+            clusters: vec![tiny_cluster("edge")],
+            policies: vec!["reactive".into(), "hysteresis".into()],
+            ..small()
+        };
+        let spec = CampaignSpec {
+            faults: vec!["none".into(), "down:be:0:20000:30000;gray:gw:1:3:1:50000".into()],
+            ..base.clone()
+        };
+        let cells = spec.expand_clusters().unwrap();
+        // 2 regimes × 2 policies × 2 shapes.
+        assert_eq!(cells.len(), spec.cluster_cell_count());
+        assert_eq!(cells.len(), 8);
+        // The "none" block is a byte-identical contiguous prefix of the
+        // pre-fault expansion, so existing stores resume cleanly.
+        let plain = base.expand_clusters().unwrap();
+        for (c, p) in cells.iter().zip(&plain) {
+            assert_eq!(c.key, p.key);
+            assert!(c.faults.is_empty());
+        }
+        // Regime cells carry the |f suffix and the regime string.
+        for c in &cells[4..] {
+            assert!(c.key.contains("|fdown:be:0:20000:30000;gray"), "key {}", c.key);
+            assert_eq!(c.faults, "down:be:0:20000:30000;gray:gw:1:3:1:50000");
+        }
+        // Keys stay globally unique.
+        let mut keys: Vec<&str> = cells.iter().map(|c| c.key.as_str()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), cells.len());
+        // The axis round-trips through JSON.
+        let back = CampaignSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+        // regime_faults swaps the schedule in and keeps client policies.
+        let f = regime_faults(&spec.clusters[0], "down:be:0:1:2");
+        assert_eq!(f.events, vec!["down:be:0:1:2".to_string()]);
+        assert!(f.client.is_empty());
+
+        // Bad regimes are rejected: unknown service, bad grammar,
+        // regime without a sweepable cluster, duplicates.
+        let bad = CampaignSpec {
+            faults: vec!["down:nope:0:1:2".into()],
+            ..base.clone()
+        };
+        assert!(bad.validate().is_err(), "unknown regime service accepted");
+        let bad = CampaignSpec { faults: vec!["meteor".into()], ..base.clone() };
+        assert!(bad.validate().is_err(), "bad regime grammar accepted");
+        let bad = CampaignSpec {
+            faults: vec!["none".into(), "none".into()],
+            ..base.clone()
+        };
+        assert!(bad.validate().is_err(), "duplicate regime accepted");
+        let bad = CampaignSpec { faults: vec![], ..base.clone() };
+        assert!(bad.validate().is_err(), "empty fault axis accepted");
+        let orphan = CampaignSpec {
+            faults: vec!["down:be:0:1:2".into()],
+            clusters: vec![tenant_cluster("shared")],
+            ..small()
+        };
+        assert!(orphan.validate().is_err(), "regime with only tenant clusters accepted");
+        // A cluster carrying its own schedule conflicts with the axis.
+        let mut owns = tiny_cluster("edge");
+        owns.faults.events = vec!["down:be:0:1:2".into()];
+        let conflicted = CampaignSpec { clusters: vec![owns], ..base };
+        assert!(conflicted.validate().is_err(), "cluster-owned schedule accepted");
     }
 
     #[test]

@@ -284,6 +284,11 @@ pub struct ClusterCellRecord {
     /// serialized when non-empty, so old stores reload byte-compatibly
     /// and new single-tenant lines stay byte-identical).
     pub tenant: String,
+    /// Fault regime the cell ran under (`;`-joined schedule specs from
+    /// the campaign `faults` axis); empty on healthy-regime cells — and
+    /// on every line written before the fault axis existed. Serialized
+    /// only when non-empty, so old stores reload byte-compatibly.
+    pub faults: String,
     /// Normalized traffic-shape label.
     pub traffic: String,
     /// Service-time model the scenario ran under (`"analytic"` or
@@ -325,6 +330,7 @@ impl ClusterCellRecord {
             cluster: cluster.to_string(),
             policy: policy.to_string(),
             tenant: String::new(),
+            faults: String::new(),
             service_times: service_times.to_string(),
             traffic: r.traffic.clone(),
             requests: r.requests,
@@ -362,6 +368,7 @@ impl ClusterCellRecord {
             cluster: cluster.to_string(),
             policy: mode.to_string(),
             tenant: ts.name.clone(),
+            faults: String::new(),
             service_times: service_times.to_string(),
             traffic: ts.traffic.clone(),
             requests: ts.requests,
@@ -402,6 +409,11 @@ impl ClusterCellRecord {
         // byte-identically to pre-tenancy builds.
         if !self.tenant.is_empty() {
             fields.push(("tenant", Json::str(&self.tenant)));
+        }
+        // Same discipline for the fault regime: healthy-regime lines
+        // serialize byte-identically to pre-fault builds.
+        if !self.faults.is_empty() {
+            fields.push(("faults", Json::str(&self.faults)));
         }
         fields.extend(vec![
             ("service_times", Json::str(&self.service_times)),
@@ -451,6 +463,8 @@ impl ClusterCellRecord {
             policy: s("policy")?,
             // Absent on pre-tenancy lines (and on policy cells).
             tenant: j.get("tenant").and_then(Json::as_str).unwrap_or("").to_string(),
+            // Absent on pre-fault lines (and on healthy-regime cells).
+            faults: j.get("faults").and_then(Json::as_str).unwrap_or("").to_string(),
             // Absent on pre-empirical lines: those ran the analytic model.
             service_times: j
                 .get("service_times")
@@ -1467,6 +1481,7 @@ mod tests {
             cluster: "frontend".into(),
             policy: policy.into(),
             tenant: String::new(),
+            faults: String::new(),
             service_times: "analytic".into(),
             traffic: "poisson:0.65".into(),
             requests: 50_000,
@@ -1573,6 +1588,26 @@ mod tests {
             ClusterCellRecord::from_json(&Json::parse(&plain.to_line()).unwrap()).unwrap();
         assert_eq!(back, plain);
         assert_eq!(back.tenant, "");
+    }
+
+    #[test]
+    fn fault_cells_roundtrip_and_healthy_lines_stay_byte_identical() {
+        // Fault-regime cells serialize and reload their coordinate...
+        let mut r = crec("cluster|frontend#1|reactive|tpoisson:0.65|fdown:be:0:1:2", "reactive");
+        r.faults = "down:be:0:1:2".into();
+        let line = r.to_line();
+        assert!(line.contains("\"faults\":\"down:be:0:1:2\""), "faults missing: {line}");
+        let back = ClusterCellRecord::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, r);
+        // ...while healthy-regime cells carry no faults key at all, so
+        // lines written by pre-fault builds and by this build are
+        // identical — and pre-fault lines reload with the empty default.
+        let plain = crec("cluster|frontend#1|reactive|tpoisson:0.65", "reactive");
+        assert!(!plain.to_line().contains("faults"), "faults leaked: {}", plain.to_line());
+        let back =
+            ClusterCellRecord::from_json(&Json::parse(&plain.to_line()).unwrap()).unwrap();
+        assert_eq!(back, plain);
+        assert_eq!(back.faults, "");
     }
 
     #[test]

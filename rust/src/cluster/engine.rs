@@ -16,6 +16,7 @@
 //! warm-up the completion hot path performs no per-request allocation
 //! and the balancer scan touches two flat arrays, not replica structs.
 
+use super::faults::{EdgePolicy, FaultEv, FaultPlan, FaultsSpec};
 use super::sched::{CalendarQueue, HeapQueue, SchedKind, Scheduler};
 use super::servicetime::ServiceTimeModel;
 use super::slo::{
@@ -42,6 +43,32 @@ pub struct RunParams {
     /// to — typically the baseline config's bottleneck rate, so faster
     /// configs see the same offered load at lower utilization.
     pub base_rate_per_us: f64,
+}
+
+/// Fault/self-healing bookkeeping for one run (all zero on a healthy
+/// run — the counters are only bumped on the fault-aware paths).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Replica crash events processed.
+    pub crashes: u64,
+    /// Attempts re-dispatched (timeout retries + crash requeues).
+    pub retries: u64,
+    /// Hedged duplicate dispatches issued.
+    pub hedges: u64,
+    /// Client timeouts that fired on a live attempt.
+    pub timeouts: u64,
+    /// Stages abandoned after exhausting the retry budget (the request
+    /// still completes — as an SLO miss, never a hang).
+    pub failed: u64,
+    /// Events discarded as stale (lazily cancelled timers, losing
+    /// hedge twins, crash-orphaned completions).
+    pub stale_events: u64,
+}
+
+impl FaultStats {
+    pub fn is_zero(&self) -> bool {
+        *self == FaultStats::default()
+    }
 }
 
 /// One control action taken during a run.
@@ -151,6 +178,9 @@ pub struct ClusterResult {
     /// JSON and downstream consumers are unchanged; both backends report
     /// the identical value — they hold the same pending set.
     pub peak_heap: u64,
+    /// Fault-axis counters (all zero unless the run carried a fault
+    /// plan or client policies).
+    pub fault_stats: FaultStats,
     /// Per-tenant outcomes (multi-tenant runs only; empty otherwise).
     pub tenants: Vec<TenantStat>,
     /// Observability payload (`None` unless the run was launched with
@@ -158,16 +188,32 @@ pub struct ClusterResult {
     pub obs: Option<ObsData>,
 }
 
+/// Event payloads. `Complete`/`Timeout`/`Hedge`/`Retry` carry the
+/// attempt generation they were scheduled against: the pop-side gen
+/// check is the lazy-cancellation mechanism (sched.rs "Stale events") —
+/// a bumped slab gen turns every older event for that (slot, service)
+/// into a no-op discard instead of requiring a queue cancel operation.
 #[derive(Clone, Copy, Debug)]
 enum EvKind {
     Arrival { tenant: u8 },
-    Complete { svc: u32, rep: u32 },
+    Complete { svc: u32, rep: u32, slot: u32, gen: u32 },
+    /// Pre-materialized fault-plan events (never scheduled mid-run).
+    ReplicaDown { svc: u32, rep: u32 },
+    ReplicaUp { svc: u32, rep: u32 },
+    GrayStart { svc: u32, rep: u32, factor: f64 },
+    GrayEnd { svc: u32, rep: u32 },
+    /// Client-policy timers for one attempt of (slot, service).
+    Timeout { svc: u32, slot: u32, gen: u32 },
+    Hedge { svc: u32, slot: u32, gen: u32 },
+    Retry { svc: u32, slot: u32, gen: u32 },
 }
 
 #[derive(Default)]
 struct Replica {
-    queue: VecDeque<u32>,
-    in_service: Option<u32>,
+    /// Waiting attempts as (slot, gen); stale entries (gen no longer
+    /// current) are skipped — and uncounted — when they reach the head.
+    queue: VecDeque<(u32, u32)>,
+    in_service: Option<(u32, u32)>,
     /// Outstanding requests per tenant (queued + in service) — the
     /// interference model's per-replica mix. Empty on the single-tenant
     /// path, which never touches it.
@@ -195,6 +241,14 @@ struct Svc {
     /// upgrade/downgrade needs it even when the table rides along).
     cv: f64,
     children: Vec<u32>,
+    /// Crashed-by-fault flag per replica: the balancer skips it, its
+    /// work was requeued at the crash, and `ReplicaUp` clears it.
+    down: Vec<bool>,
+    /// Gray-failure service-time dilation per replica (1.0 = healthy).
+    gray: Vec<f64>,
+    /// Attempts waiting for *any* live replica (every replica of the
+    /// service is down or retired); flushed FIFO at `ReplicaUp`.
+    parked: Vec<(u32, u32)>,
 }
 
 impl Svc {
@@ -215,6 +269,9 @@ impl Svc {
             model,
             cv,
             children,
+            down: vec![false; replicas as usize],
+            gray: vec![1.0; replicas as usize],
+            parked: Vec::new(),
         }
     }
 
@@ -235,6 +292,15 @@ struct Slab {
     remaining: Vec<u32>,
     /// Owning tenant per slot (always 0 on the single-tenant path).
     tenant: Vec<u8>,
+    /// Attempt generation per (slot, service), flattened like `pending`.
+    /// Bumped whenever an attempt is invalidated (timeout, winning
+    /// completion, crash requeue) — and NEVER reset when a slot is
+    /// recycled, so an in-flight event from a previous occupant of the
+    /// slot can never alias a fresh attempt.
+    gen: Vec<u32>,
+    /// Retries consumed per (slot, service); reset at each stage's
+    /// first dispatch.
+    tries: Vec<u32>,
     free: Vec<u32>,
 }
 
@@ -246,6 +312,8 @@ impl Slab {
             pending: Vec::new(),
             remaining: Vec::new(),
             tenant: Vec::new(),
+            gen: Vec::new(),
+            tries: Vec::new(),
             free: Vec::new(),
         }
     }
@@ -263,6 +331,8 @@ impl Slab {
                 self.remaining.push(0);
                 self.tenant.push(0);
                 self.pending.resize(self.pending.len() + self.nsvc, 0);
+                self.gen.resize(self.gen.len() + self.nsvc, 0);
+                self.tries.resize(self.tries.len() + self.nsvc, 0);
                 s
             }
         };
@@ -347,6 +417,14 @@ struct Sim<S: Scheduler<EvKind>> {
     meta_byte_us: f64,
     /// Time of the most recently processed event (integral upper bound).
     last_event_us: f64,
+    /// Per-service client policy (timeout/retry/hedge); empty on runs
+    /// without a fault plan.
+    policies: Vec<Option<EdgePolicy>>,
+    /// Fault plan active: gates every gen check/bump so a healthy run
+    /// does zero extra bookkeeping and stays byte-identical.
+    faulty: bool,
+    /// Retry/hedge/timeout/stale counters (all zero when `!faulty`).
+    fstats: FaultStats,
     /// Multi-tenant state; `None` = the single-tenant path.
     tenancy: Option<Tenancy>,
     /// Peak pending-event depth (self-profiling; an integer compare per
@@ -374,44 +452,99 @@ impl<S: Scheduler<EvKind>> Sim<S> {
         self.svc[svc].model.sample(&mut self.rng)
     }
 
+    #[inline]
+    fn gen_at(&self, slot: u32, svc: usize) -> u32 {
+        self.slab.gen[slot as usize * self.slab.nsvc + svc]
+    }
+
+    /// Invalidate every pending event (timeout, hedge, retry, losing
+    /// completion) of the current attempt of (slot, svc): O(1) lazy
+    /// cancellation — the events stay queued and discard at pop.
+    #[inline]
+    fn bump_gen(&mut self, slot: u32, svc: usize) {
+        let i = slot as usize * self.slab.nsvc + svc;
+        self.slab.gen[i] = self.slab.gen[i].wrapping_add(1);
+    }
+
+    #[inline]
+    fn policy(&self, svc: usize) -> Option<EdgePolicy> {
+        self.policies.get(svc).copied().flatten()
+    }
+
+    /// First dispatch of a stage: reset its retry budget, then attempt.
     fn dispatch(&mut self, svc: usize, slot: u32, now: f64) {
-        // Least-outstanding-requests balancing over *active* replicas,
-        // lowest index on ties (at least one is always active: retire
-        // is gated on ≥ 2 active). The scan reads the flat SoA vectors —
-        // no replica structs, no VecDeque headers.
+        if self.faulty {
+            self.slab.tries[slot as usize * self.slab.nsvc + svc] = 0;
+        }
+        self.dispatch_attempt(svc, slot, now);
+    }
+
+    /// One attempt: arm the edge's client timers against the current
+    /// generation, then place the work on a replica.
+    fn dispatch_attempt(&mut self, svc: usize, slot: u32, now: f64) {
+        let gen = if self.faulty { self.gen_at(slot, svc) } else { 0 };
+        if let Some(p) = self.policy(svc) {
+            let (s, sl) = (svc as u32, slot);
+            if let Some(to) = p.timeout_us {
+                self.schedule(now + to, EvKind::Timeout { svc: s, slot: sl, gen });
+            }
+            if let Some(h) = p.hedge_after_us {
+                self.schedule(now + h, EvKind::Hedge { svc: s, slot: sl, gen });
+            }
+        }
+        self.place(svc, slot, gen, now);
+    }
+
+    /// Place one attempt of (slot, gen) on a replica of `svc`:
+    /// least-outstanding-requests balancing over *live* replicas
+    /// (neither retired nor crashed), lowest index on ties. On the
+    /// healthy path at least one is always live (retire is gated on ≥ 2
+    /// active); under faults a fully-crashed service parks the attempt
+    /// until a `ReplicaUp` flushes it. The scan reads the flat SoA
+    /// vectors — no replica structs, no VecDeque headers.
+    fn place(&mut self, svc: usize, slot: u32, gen: u32, now: f64) {
         let mut best = usize::MAX;
         let mut best_out = u32::MAX;
         {
             let s = &self.svc[svc];
             for (i, (&out, &retired)) in s.out.iter().zip(&s.retired).enumerate() {
-                if !retired && out < best_out {
+                if !retired && !s.down[i] && out < best_out {
                     best_out = out;
                     best = i;
                 }
             }
         }
-        debug_assert!(best != usize::MAX, "service with no active replica");
+        if let Some(o) = self.obs.as_mut() {
+            o.spans.on_enqueue(slot, svc as u32, now);
+        }
+        if best == usize::MAX {
+            debug_assert!(self.faulty, "service with no active replica on a healthy run");
+            self.svc[svc].parked.push((slot, gen));
+            return;
+        }
         self.svc[svc].out[best] += 1;
         if self.tenancy.is_some() {
             let t = self.slab.tenant[slot as usize] as usize;
             self.svc[svc].replicas[best].out_t[t] += 1;
         }
-        if let Some(o) = self.obs.as_mut() {
-            o.spans.on_enqueue(slot, svc as u32, now);
-        }
         if self.svc[svc].replicas[best].in_service.is_none() {
-            self.svc[svc].replicas[best].in_service = Some(slot);
+            self.svc[svc].replicas[best].in_service = Some((slot, gen));
             let base = self.sample_service(svc);
             // `base * dilation` is the baseline's `dt *= dilation`
             // bit-for-bit; the split exposes the interference component.
-            let dt =
+            let mut dt =
                 if self.tenancy.is_some() { base * self.dilation(svc, best, slot) } else { base };
+            if self.faulty {
+                dt *= self.svc[svc].gray[best];
+            }
             if let Some(o) = self.obs.as_mut() {
                 o.spans.on_start(slot, svc as u32, best as u32, now, dt - base);
             }
-            self.schedule(now + dt, EvKind::Complete { svc: svc as u32, rep: best as u32 });
+            let kind =
+                EvKind::Complete { svc: svc as u32, rep: best as u32, slot, gen };
+            self.schedule(now + dt, kind);
         } else {
-            self.svc[svc].replicas[best].queue.push_back(slot);
+            self.svc[svc].replicas[best].queue.push_back((slot, gen));
         }
     }
 
@@ -534,6 +667,13 @@ impl<S: Scheduler<EvKind>> Sim<S> {
         } else {
             0
         };
+        let (mut failed, mut degraded) = (0u32, 0u32);
+        if self.faulty {
+            for s in &self.svc {
+                failed += s.down.iter().filter(|d| **d).count() as u32;
+                degraded += s.gray.iter().filter(|g| **g > 1.0).count() as u32;
+            }
+        }
         EngineView {
             now_us: now,
             can_upgrade,
@@ -543,6 +683,8 @@ impl<S: Scheduler<EvKind>> Sim<S> {
             metadata_bytes: self.meta_now,
             upgrade_meta_delta,
             scale_up_meta_delta: self.cands[b][cur].metadata_bytes,
+            failed_replicas: failed,
+            degraded_replicas: degraded,
         }
     }
 
@@ -615,6 +757,8 @@ impl<S: Scheduler<EvKind>> Sim<S> {
             });
             s.out.push(0);
             s.retired.push(false);
+            s.down.push(false);
+            s.gray.push(1.0);
         }
         self.live_replicas += 1;
         self.meta_now += self.cands[b][self.svc[b].current].metadata_bytes;
@@ -732,68 +876,249 @@ impl<S: Scheduler<EvKind>> Sim<S> {
                     }
                 }
             }
-            EvKind::Complete { svc, rep } => {
+            EvKind::Complete { svc, rep, slot, gen } => {
                 let (svc, rep) = (svc as usize, rep as usize);
-                let slot = self.svc[svc].replicas[rep]
-                    .in_service
-                    .take()
-                    .expect("completion on an idle replica");
-                self.svc[svc].out[rep] -= 1;
+                // Attempt liveness: under faults, a completion whose
+                // generation is no longer current lost to a timeout, a
+                // hedge twin, or a crash requeue — it may still free the
+                // replica it ran on, but never advances the request.
+                let live = !self.faulty || self.gen_at(slot, svc) == gen;
+                let occupied =
+                    self.svc[svc].replicas[rep].in_service == Some((slot, gen));
+                if !occupied {
+                    // The occupancy was already torn down (crash drain) —
+                    // or, on a healthy run, the invariant that used to be
+                    // `expect("completion on an idle replica")` broke.
+                    // Either way: discard, don't abort the shard.
+                    debug_assert!(!live, "completion on an idle replica");
+                    self.fstats.stale_events += 1;
+                    return true;
+                }
+                self.svc[svc].replicas[rep].in_service = None;
+                self.svc[svc].out[rep] = self.svc[svc].out[rep].saturating_sub(1);
                 if self.tenancy.is_some() {
                     let done = self.slab.tenant[slot as usize] as usize;
-                    self.svc[svc].replicas[rep].out_t[done] -= 1;
+                    let o = &mut self.svc[svc].replicas[rep].out_t[done];
+                    *o = o.saturating_sub(1);
                 }
-                if let Some(o) = self.obs.as_mut() {
-                    o.spans.on_end(slot, svc as u32, t);
-                }
-                if let Some(next) = self.svc[svc].replicas[rep].queue.pop_front() {
-                    self.svc[svc].replicas[rep].in_service = Some(next);
-                    let base = self.sample_service(svc);
-                    let dt = if self.tenancy.is_some() {
-                        base * self.dilation(svc, rep, next)
-                    } else {
-                        base
-                    };
+                if live {
                     if let Some(o) = self.obs.as_mut() {
-                        o.spans.on_start(next, svc as u32, rep as u32, t, dt - base);
+                        o.spans.on_end(slot, svc as u32, t);
                     }
-                    let kind = EvKind::Complete { svc: svc as u32, rep: rep as u32 };
-                    self.schedule(t + dt, kind);
-                }
-                // Fan out: along the owning tenant's sub-DAG in tenant
-                // mode, along the full topology otherwise — one shared
-                // loop, with the edge list detached around dispatch.
-                let tenant = self.slab.tenant[slot as usize] as usize;
-                let children = match self.tenancy.as_mut() {
-                    Some(tn) => std::mem::take(&mut tn.tenants[tenant].children[svc]),
-                    None => std::mem::take(&mut self.svc[svc].children),
-                };
-                for &c in &children {
-                    let ci = c as usize;
-                    let idx = slot as usize * self.slab.nsvc + ci;
-                    if let Some(o) = self.obs.as_mut() {
-                        o.spans.on_first_dep(slot, c, t);
-                    }
-                    self.slab.pending[idx] -= 1;
-                    if self.slab.pending[idx] == 0 {
-                        self.dispatch(ci, slot, t);
+                    if self.faulty {
+                        // First completion wins: cancel this attempt's
+                        // timeout and any still-running hedge twin.
+                        self.bump_gen(slot, svc);
                     }
                 }
-                match self.tenancy.as_mut() {
-                    Some(tn) => tn.tenants[tenant].children[svc] = children,
-                    None => self.svc[svc].children = children,
+                self.start_next(svc, rep, t);
+                if live {
+                    self.complete_stage(svc, slot, t);
+                } else {
+                    self.fstats.stale_events += 1;
                 }
-                self.slab.remaining[slot as usize] -= 1;
-                if self.slab.remaining[slot as usize] == 0 {
-                    if self.tenancy.is_some() {
-                        self.finish_tenant(slot, t);
+            }
+            EvKind::ReplicaDown { svc, rep } => {
+                self.fstats.crashes += 1;
+                self.crash_replica(svc as usize, rep as usize, t);
+            }
+            EvKind::ReplicaUp { svc, rep } => {
+                let (svc, rep) = (svc as usize, rep as usize);
+                self.svc[svc].down[rep] = false;
+                // Flush attempts parked while the whole service was
+                // down, FIFO, skipping any that timed out or failed in
+                // the meantime.
+                let parked = std::mem::take(&mut self.svc[svc].parked);
+                for (slot, gen) in parked {
+                    if self.gen_at(slot, svc) == gen {
+                        self.place(svc, slot, gen, t);
                     } else {
-                        self.finish(slot, t);
+                        self.fstats.stale_events += 1;
                     }
+                }
+            }
+            EvKind::GrayStart { svc, rep, factor } => {
+                // In-flight work keeps its sampled service time; the
+                // dilation applies to starts inside the gray interval.
+                self.svc[svc as usize].gray[rep as usize] = factor;
+            }
+            EvKind::GrayEnd { svc, rep } => {
+                self.svc[svc as usize].gray[rep as usize] = 1.0;
+            }
+            EvKind::Timeout { svc, slot, gen } => {
+                let svc = svc as usize;
+                if self.gen_at(slot, svc) != gen {
+                    self.fstats.stale_events += 1;
+                } else {
+                    self.fstats.timeouts += 1;
+                    self.bump_gen(slot, svc);
+                    let idx = slot as usize * self.slab.nsvc + svc;
+                    // Timers only exist on policy edges.
+                    let p = self.policy(svc).unwrap_or_default();
+                    if self.slab.tries[idx] < p.retries {
+                        self.slab.tries[idx] += 1;
+                        self.fstats.retries += 1;
+                        // Deterministic exponential backoff: attempt n
+                        // waits backoff_us × 2^(n−1) before redispatch.
+                        let shift = (self.slab.tries[idx] - 1).min(62);
+                        let backoff = p.backoff_us * (1u64 << shift) as f64;
+                        if backoff > 0.0 {
+                            let g = self.gen_at(slot, svc);
+                            let kind =
+                                EvKind::Retry { svc: svc as u32, slot, gen: g };
+                            self.schedule(t + backoff, kind);
+                        } else {
+                            self.dispatch_attempt(svc, slot, t);
+                        }
+                    } else {
+                        self.fail_stage(svc, slot, t);
+                    }
+                }
+            }
+            EvKind::Hedge { svc, slot, gen } => {
+                let svc = svc as usize;
+                if self.gen_at(slot, svc) != gen {
+                    self.fstats.stale_events += 1;
+                } else {
+                    // Duplicate dispatch against the SAME generation:
+                    // the first completion wins and bumps the gen,
+                    // turning the loser into a stale discard.
+                    self.fstats.hedges += 1;
+                    self.place(svc, slot, gen, t);
+                }
+            }
+            EvKind::Retry { svc, slot, gen } => {
+                let svc = svc as usize;
+                if self.gen_at(slot, svc) != gen {
+                    self.fstats.stale_events += 1;
+                } else {
+                    self.dispatch_attempt(svc, slot, t);
                 }
             }
         }
         true
+    }
+
+    /// Start the replica's next waiting attempt, skipping — and
+    /// un-counting — entries whose generation went stale while queued.
+    fn start_next(&mut self, svc: usize, rep: usize, now: f64) {
+        loop {
+            let (slot, gen) = match self.svc[svc].replicas[rep].queue.pop_front() {
+                Some(x) => x,
+                None => return,
+            };
+            if self.faulty && self.gen_at(slot, svc) != gen {
+                self.svc[svc].out[rep] = self.svc[svc].out[rep].saturating_sub(1);
+                if self.tenancy.is_some() {
+                    let done = self.slab.tenant[slot as usize] as usize;
+                    let o = &mut self.svc[svc].replicas[rep].out_t[done];
+                    *o = o.saturating_sub(1);
+                }
+                self.fstats.stale_events += 1;
+                continue;
+            }
+            self.svc[svc].replicas[rep].in_service = Some((slot, gen));
+            let base = self.sample_service(svc);
+            let mut dt = if self.tenancy.is_some() {
+                base * self.dilation(svc, rep, slot)
+            } else {
+                base
+            };
+            if self.faulty {
+                dt *= self.svc[svc].gray[rep];
+            }
+            if let Some(o) = self.obs.as_mut() {
+                o.spans.on_start(slot, svc as u32, rep as u32, now, dt - base);
+            }
+            let kind = EvKind::Complete { svc: svc as u32, rep: rep as u32, slot, gen };
+            self.schedule(now + dt, kind);
+            return;
+        }
+    }
+
+    /// The stage of (slot, svc) resolved (successfully or via
+    /// [`Self::fail_stage`]): clear downstream edges and finish the
+    /// request when it was the last one.
+    fn complete_stage(&mut self, svc: usize, slot: u32, now: f64) {
+        // Fan out: along the owning tenant's sub-DAG in tenant mode,
+        // along the full topology otherwise — one shared loop, with the
+        // edge list detached around dispatch.
+        let tenant = self.slab.tenant[slot as usize] as usize;
+        let children = match self.tenancy.as_mut() {
+            Some(tn) => std::mem::take(&mut tn.tenants[tenant].children[svc]),
+            None => std::mem::take(&mut self.svc[svc].children),
+        };
+        for &c in &children {
+            let ci = c as usize;
+            let idx = slot as usize * self.slab.nsvc + ci;
+            if let Some(o) = self.obs.as_mut() {
+                o.spans.on_first_dep(slot, c, now);
+            }
+            self.slab.pending[idx] -= 1;
+            if self.slab.pending[idx] == 0 {
+                self.dispatch(ci, slot, now);
+            }
+        }
+        match self.tenancy.as_mut() {
+            Some(tn) => tn.tenants[tenant].children[svc] = children,
+            None => self.svc[svc].children = children,
+        }
+        self.slab.remaining[slot as usize] -= 1;
+        if self.slab.remaining[slot as usize] == 0 {
+            if self.tenancy.is_some() {
+                self.finish_tenant(slot, now);
+            } else {
+                self.finish(slot, now);
+            }
+        }
+    }
+
+    /// A replica crashed: mark it down, then requeue its in-flight and
+    /// queued work. Each live attempt is invalidated (its timers and
+    /// any hedge twin die with it) and re-dispatched immediately while
+    /// retry budget remains — edges without a client policy requeue for
+    /// free, so plain specs are crash-safe by default — otherwise the
+    /// stage fails as an SLO miss.
+    fn crash_replica(&mut self, svc: usize, rep: usize, now: f64) {
+        self.svc[svc].down[rep] = true;
+        let r = &mut self.svc[svc].replicas[rep];
+        let mut work: Vec<(u32, u32)> = Vec::with_capacity(r.queue.len() + 1);
+        if let Some(x) = r.in_service.take() {
+            work.push(x);
+        }
+        work.extend(r.queue.drain(..));
+        r.out_t.iter_mut().for_each(|o| *o = 0);
+        self.svc[svc].out[rep] = 0;
+        for (slot, gen) in work {
+            if self.gen_at(slot, svc) != gen {
+                self.fstats.stale_events += 1;
+                continue;
+            }
+            self.bump_gen(slot, svc);
+            let idx = slot as usize * self.slab.nsvc + svc;
+            match self.policy(svc) {
+                Some(p) if self.slab.tries[idx] >= p.retries => {
+                    self.fail_stage(svc, slot, now)
+                }
+                pol => {
+                    if pol.is_some() {
+                        self.slab.tries[idx] += 1;
+                    }
+                    self.fstats.retries += 1;
+                    self.dispatch_attempt(svc, slot, now);
+                }
+            }
+        }
+    }
+
+    /// Abandon the stage — its retry budget is exhausted (timeout chain
+    /// or crash; the caller has already bumped the generation). The
+    /// request still completes downstream, carrying the elapsed time as
+    /// latency — an SLO miss, never a hang, so `completed == requests`
+    /// holds under every fault schedule.
+    fn fail_stage(&mut self, svc: usize, slot: u32, now: f64) {
+        self.fstats.failed += 1;
+        self.complete_stage(svc, slot, now);
     }
 
     /// One tenant's arrival: allocate a slot over its sub-DAG, dispatch
@@ -928,12 +1253,23 @@ impl<S: Scheduler<EvKind>> Sim<S> {
             }
         };
         let (arrived, completed, events) = (self.arrived, self.completed, self.events);
+        let (faulty, fstats) = (self.faulty, self.fstats);
         let o = self.obs.as_mut().expect("snapshot_metrics without obs");
         o.metrics.counter("arrived", arrived);
         o.metrics.counter("completed", completed);
         o.metrics.counter("events", events);
         o.metrics.counter("actions", nactions);
         o.metrics.counter("violated_windows", violated);
+        if faulty {
+            // Fault-axis counters exist only on fault-plan runs, so a
+            // healthy run's metric snapshots stay byte-identical.
+            o.metrics.counter("crashes", fstats.crashes);
+            o.metrics.counter("retries", fstats.retries);
+            o.metrics.counter("hedges", fstats.hedges);
+            o.metrics.counter("timeouts", fstats.timeouts);
+            o.metrics.counter("failed_stages", fstats.failed);
+            o.metrics.counter("stale_events", fstats.stale_events);
+        }
         o.metrics.gauge("heap_len", heap_len as f64);
         o.metrics.gauge("live_replicas", live_replicas as f64);
         o.metrics.gauge("metadata_bytes", meta_now as f64);
@@ -1097,10 +1433,72 @@ pub fn run_obs_sched(
     obs: &ObsCfg,
     sched: SchedKind,
 ) -> Result<ClusterResult> {
+    run_obs_sched_faults(topo, shape, params, ctrl, obs, sched, None)
+}
+
+/// Pre-materialization horizon for rate-driven fault schedules: a pure
+/// function of the run parameters (8× the mean span the offered load
+/// needs for `requests` arrivals), so the expansion is identical on
+/// every thread count and scheduler backend.
+pub fn fault_horizon_us(params: &RunParams) -> f64 {
+    8.0 * params.requests as f64 / params.base_rate_per_us
+}
+
+/// [`run`] under a fault plan (DESIGN.md §14). `faults = None` or an
+/// empty spec is exactly [`run`]: no fault events are scheduled, no
+/// generation bookkeeping runs, and the result is byte-identical to the
+/// pre-fault build. Otherwise the spec's schedules are expanded into
+/// pre-materialized events from their own seeded RNG stream — the
+/// arrival stream is untouched — and the client policies arm per-edge
+/// timeout/retry/hedge timers.
+pub fn run_faults(
+    topo: &ResolvedTopology,
+    shape: &TrafficShape,
+    params: &RunParams,
+    ctrl: Option<SloCfg>,
+    faults: Option<&FaultsSpec>,
+) -> Result<ClusterResult> {
+    run_obs_sched_faults(
+        topo,
+        shape,
+        params,
+        ctrl,
+        &ObsCfg::off(),
+        SchedKind::default(),
+        faults,
+    )
+}
+
+/// The fully-general entry point: observability × scheduler backend ×
+/// fault plan.
+pub fn run_obs_sched_faults(
+    topo: &ResolvedTopology,
+    shape: &TrafficShape,
+    params: &RunParams,
+    ctrl: Option<SloCfg>,
+    obs: &ObsCfg,
+    sched: SchedKind,
+    faults: Option<&FaultsSpec>,
+) -> Result<ClusterResult> {
+    let plan = match faults {
+        Some(f) if !f.is_empty() => {
+            if !(params.base_rate_per_us > 0.0) {
+                bail!("fault plan needs a positive base rate");
+            }
+            let names: Vec<String> =
+                topo.services.iter().map(|s| s.name.clone()).collect();
+            let replicas: Vec<u32> = topo.services.iter().map(|s| s.replicas).collect();
+            Some(f.plan(&names, &replicas, params.seed, fault_horizon_us(params))?)
+        }
+        _ => None,
+    };
+    let plan = plan.as_ref();
     match sched {
-        SchedKind::Heap => run_obs_core::<HeapQueue<EvKind>>(topo, shape, params, ctrl, obs),
+        SchedKind::Heap => {
+            run_obs_core::<HeapQueue<EvKind>>(topo, shape, params, ctrl, obs, plan)
+        }
         SchedKind::Calendar => {
-            run_obs_core::<CalendarQueue<EvKind>>(topo, shape, params, ctrl, obs)
+            run_obs_core::<CalendarQueue<EvKind>>(topo, shape, params, ctrl, obs, plan)
         }
     }
 }
@@ -1111,6 +1509,7 @@ fn run_obs_core<S: Scheduler<EvKind>>(
     params: &RunParams,
     ctrl: Option<SloCfg>,
     obs: &ObsCfg,
+    plan: Option<&FaultPlan>,
 ) -> Result<ClusterResult> {
     if params.requests == 0 {
         bail!("cluster run with 0 requests");
@@ -1164,13 +1563,41 @@ fn run_obs_core<S: Scheduler<EvKind>>(
         replica_us: 0.0,
         meta_byte_us: 0.0,
         last_event_us: 0.0,
+        policies: plan.map(|p| p.policies.clone()).unwrap_or_default(),
+        faulty: plan.map(|p| !p.is_empty()).unwrap_or(false),
+        fstats: FaultStats::default(),
         tenancy: None,
         peak_pending: 0,
         obs: obs.enabled.then(|| Recorder::new(obs.clone(), n)),
     };
+    // Pre-materialized fault events first, in plan (time) order, so
+    // their sequence numbers — and thus all tie-breaks — are a pure
+    // function of the spec. A faults-off run schedules nothing here and
+    // stays byte-identical to the pre-fault build.
+    if let Some(p) = plan {
+        for &(ft, fe) in &p.events {
+            let kind = match fe {
+                FaultEv::Down { svc, rep } => EvKind::ReplicaDown { svc, rep },
+                FaultEv::Up { svc, rep } => EvKind::ReplicaUp { svc, rep },
+                FaultEv::GrayStart { svc, rep, factor } => {
+                    EvKind::GrayStart { svc, rep, factor }
+                }
+                FaultEv::GrayEnd { svc, rep } => EvKind::GrayEnd { svc, rep },
+            };
+            sim.schedule(ft, kind);
+        }
+    }
     let t0 = sim.gen.next_arrival();
     sim.schedule(t0, EvKind::Arrival { tenant: 0 });
-    while sim.step() {}
+    // Stop at the last completion: leftover pre-materialized fault
+    // events beyond it would otherwise inflate `events`/`duration_us`
+    // (and on a faults-off run the final completion already empties the
+    // queue, so the break changes nothing).
+    while sim.step() {
+        if sim.completed == sim.requests {
+            break;
+        }
+    }
     debug_assert_eq!(sim.completed, params.requests);
     // Close the capacity/metadata integrals at the last event.
     let end = sim.last_event_us;
@@ -1204,6 +1631,7 @@ fn run_obs_core<S: Scheduler<EvKind>>(
         final_metadata_bytes: sim.meta_now,
         duration_us: sim.last_event_us,
         peak_heap: sim.peak_pending as u64,
+        fault_stats: sim.fstats,
         tenants: Vec::new(),
         obs: obs_data,
     })
@@ -1365,6 +1793,9 @@ fn run_tenants_core<S: Scheduler<EvKind>>(
         replica_us: 0.0,
         meta_byte_us: 0.0,
         last_event_us: 0.0,
+        policies: Vec::new(),
+        faulty: false,
+        fstats: FaultStats::default(),
         tenancy: Some(Tenancy {
             tenants: states,
             partition,
@@ -1439,6 +1870,7 @@ fn run_tenants_core<S: Scheduler<EvKind>>(
         final_metadata_bytes: sim.meta_now,
         duration_us: sim.last_event_us,
         peak_heap: sim.peak_pending as u64,
+        fault_stats: sim.fstats,
         tenants: tenant_stats,
         obs: obs_data,
     })

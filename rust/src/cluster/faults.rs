@@ -1,0 +1,713 @@
+//! Deterministic fault injection for the cluster engine (DESIGN.md §14):
+//! seeded fault schedules — replica crash/restart, rate-driven crashes,
+//! correlated slow replicas (gray failure), and service brownouts —
+//! expanded into a pre-materialized event plan, plus the client-side
+//! per-edge response policies (timeouts, bounded retries with
+//! deterministic backoff, hedged requests) that define real microservice
+//! tails.
+//!
+//! ## Schedule grammar (`FaultsSpec::events`)
+//!
+//! - `down:SVC:REP:T:DUR` — replica `REP` of service `SVC` crashes at
+//!   `T` µs and restarts at `T + DUR` µs.
+//! - `downrate:SVC:PERIOD:DUR` — crashes arrive on `SVC` as a Poisson
+//!   process with mean inter-crash gap `PERIOD` µs; each crash picks a
+//!   replica uniformly and lasts `DUR` µs. Materialized up to the run
+//!   horizon from the schedule's own RNG sub-stream.
+//! - `gray:SVC:K:FACTOR:T:DUR` — gray failure: the first `K` replicas of
+//!   `SVC` serve `FACTOR`× slower during `[T, T + DUR)`.
+//! - `brownout:SVC:FACTOR:T:DUR` — every replica of `SVC` serves
+//!   `FACTOR`× slower during the interval (a transient service-wide
+//!   brownout; shorthand for `gray` over the full replica set).
+//!
+//! Overlapping windows compose last-write-wins at each boundary event —
+//! schedules are applied exactly as written.
+//!
+//! ## Determinism
+//!
+//! Fault schedules draw from their own RNG stream
+//! (`mix64(seed ^ 0xFAE1_7000)`, one sub-stream per schedule entry), so
+//! the arrival and service-time streams are byte-identical with faults
+//! on or off, and the expanded plan is a pure function of
+//! (spec, seed, horizon) — independent of thread count and scheduler
+//! backend.
+
+use crate::util::json::Json;
+use crate::util::rng::{mix64, Rng};
+use anyhow::{bail, Result};
+
+/// Seed-domain separator for the fault-schedule RNG stream: faults never
+/// share draws with arrivals (`0xA441_1A7E`) or service times
+/// (`0x5E41_71CE`).
+pub const FAULT_SEED_SALT: u64 = 0xFAE1_7000;
+
+/// Retry budgets above this are a spec typo, not a policy (the
+/// exponential backoff ladder would dwarf any run horizon).
+pub const MAX_RETRIES: u32 = 16;
+
+/// Client-side response policy for one DAG edge — every dispatch *to*
+/// the selected service, whatever the caller. All-default is a raw RPC:
+/// no timeout, no retry budget, no hedging.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct EdgePolicy {
+    /// Cancel an attempt that has not completed after this long and
+    /// consume a retry (or fail the stage once the budget is spent).
+    pub timeout_us: Option<f64>,
+    /// Re-dispatch budget per stage, shared by timeouts and crash
+    /// requeues. 0 = fail on the first loss.
+    pub retries: u32,
+    /// Base backoff before retry `n` waits `backoff_us × 2^(n-1)` µs
+    /// (deterministic exponential ladder; 0 = immediate re-dispatch).
+    pub backoff_us: f64,
+    /// Dispatch a duplicate attempt if the first has not completed after
+    /// this long; first completion wins, the loser is lazily cancelled.
+    pub hedge_after_us: Option<f64>,
+}
+
+impl EdgePolicy {
+    /// True when the policy changes nothing about a dispatch (no
+    /// timeout, no hedge, no budget for crash requeues).
+    pub fn is_noop(&self) -> bool {
+        self.timeout_us.is_none() && self.hedge_after_us.is_none() && self.retries == 0
+    }
+
+    fn validate(&self, ctx: &str) -> Result<()> {
+        if let Some(t) = self.timeout_us {
+            if !t.is_finite() || t <= 0.0 {
+                bail!("{ctx}: timeout_us must be > 0, got {t}");
+            }
+        }
+        if let Some(h) = self.hedge_after_us {
+            if !h.is_finite() || h <= 0.0 {
+                bail!("{ctx}: hedge_after_us must be > 0, got {h}");
+            }
+            if let Some(t) = self.timeout_us {
+                if h >= t {
+                    bail!(
+                        "{ctx}: hedge_after_us ({h}) must be < timeout_us ({t}) — \
+                         a hedge launched after the timeout is already cancelled"
+                    );
+                }
+            }
+        }
+        if self.retries > MAX_RETRIES {
+            bail!("{ctx}: retries must be ≤ {MAX_RETRIES}, got {}", self.retries);
+        }
+        if !self.backoff_us.is_finite() || self.backoff_us < 0.0 {
+            bail!("{ctx}: backoff_us must be ≥ 0, got {}", self.backoff_us);
+        }
+        Ok(())
+    }
+
+    fn to_json(&self) -> Vec<(&'static str, Json)> {
+        let mut fields = Vec::new();
+        if let Some(t) = self.timeout_us {
+            fields.push(("timeout_us", Json::num(t)));
+        }
+        if self.retries > 0 {
+            fields.push(("retries", Json::num(self.retries as f64)));
+        }
+        if self.backoff_us > 0.0 {
+            fields.push(("backoff_us", Json::num(self.backoff_us)));
+        }
+        if let Some(h) = self.hedge_after_us {
+            fields.push(("hedge_after_us", Json::num(h)));
+        }
+        fields
+    }
+}
+
+/// One `client` entry: an [`EdgePolicy`] plus the service selector it
+/// applies to (`"*"` = every service). Entries apply in order, so a
+/// named entry after a `"*"` entry overrides the wildcard for that
+/// service.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClientPolicySpec {
+    pub service: String,
+    pub policy: EdgePolicy,
+}
+
+/// The `faults` section of a `ClusterSpec`: a seeded fault schedule plus
+/// the client-side response policies. Default (both empty) means the
+/// section never serializes and the engine takes the exact pre-fault
+/// code path.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct FaultsSpec {
+    /// Fault-schedule specs (grammar in the module docs).
+    pub events: Vec<String>,
+    /// Per-edge client policies, applied in order.
+    pub client: Vec<ClientPolicySpec>,
+}
+
+/// A parsed schedule entry, validated against the topology.
+#[derive(Clone, Debug, PartialEq)]
+enum Schedule {
+    Down { svc: u32, rep: u32, t_us: f64, dur_us: f64 },
+    DownRate { svc: u32, period_us: f64, dur_us: f64 },
+    Gray { svc: u32, k: u32, factor: f64, t_us: f64, dur_us: f64 },
+    Brownout { svc: u32, factor: f64, t_us: f64, dur_us: f64 },
+}
+
+/// One expanded fault boundary the engine schedules as an event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultEv {
+    Down { svc: u32, rep: u32 },
+    Up { svc: u32, rep: u32 },
+    GrayStart { svc: u32, rep: u32, factor: f64 },
+    GrayEnd { svc: u32, rep: u32 },
+}
+
+/// The pre-materialized plan one engine run injects: boundary events in
+/// ascending time (stable on ties: schedule order), plus the resolved
+/// per-service client policies.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// `(t_us, event)`, ascending `t_us.to_bits()`.
+    pub events: Vec<(f64, FaultEv)>,
+    /// Client policy per service index (`None` = raw RPC).
+    pub policies: Vec<Option<EdgePolicy>>,
+}
+
+impl FaultPlan {
+    /// True when the plan changes nothing: no boundary events and no
+    /// policy on any edge (the engine takes the pre-fault path).
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty() && self.policies.iter().all(|p| p.is_none())
+    }
+}
+
+fn parse_fields(spec: &str, parts: &[&str]) -> Result<Vec<f64>> {
+    let mut nums = Vec::with_capacity(parts.len());
+    for p in parts {
+        match p.parse::<f64>() {
+            Ok(v) if v.is_finite() => nums.push(v),
+            _ => bail!("fault '{spec}': '{p}' is not a finite number"),
+        }
+    }
+    Ok(nums)
+}
+
+fn as_count(spec: &str, v: f64, what: &str) -> Result<u32> {
+    if v < 0.0 || v.fract() != 0.0 || v > u32::MAX as f64 {
+        bail!("fault '{spec}': {what} must be a non-negative integer, got {v}");
+    }
+    Ok(v as u32)
+}
+
+fn positive(spec: &str, v: f64, what: &str) -> Result<f64> {
+    if v <= 0.0 {
+        bail!("fault '{spec}': {what} must be > 0, got {v}");
+    }
+    Ok(v)
+}
+
+fn parse_schedule(spec: &str, names: &[String], replicas: &[u32]) -> Result<Schedule> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    let kind = parts.first().copied().unwrap_or("").to_lowercase();
+    let svc_of = |name: &str| -> Result<u32> {
+        match names.iter().position(|n| n == name) {
+            Some(i) => Ok(i as u32),
+            None => bail!("fault '{spec}': unknown service '{name}'"),
+        }
+    };
+    let arity = |want: usize, shape: &str| -> Result<()> {
+        if parts.len() != want + 2 {
+            bail!("fault '{spec}': {kind} takes {kind}:{shape}");
+        }
+        Ok(())
+    };
+    if parts.len() < 2 {
+        bail!(
+            "fault '{spec}': expected kind:svc:… \
+             (try down:svc:rep:t:dur | downrate:svc:period:dur | \
+             gray:svc:k:factor:t:dur | brownout:svc:factor:t:dur)"
+        );
+    }
+    let svc = svc_of(parts[1])?;
+    let nums = parse_fields(spec, &parts[2..])?;
+    match kind.as_str() {
+        "down" => {
+            arity(3, "svc:rep:t_us:dur_us")?;
+            let rep = as_count(spec, nums[0], "replica index")?;
+            if rep >= replicas[svc as usize] {
+                bail!(
+                    "fault '{spec}': replica index {rep} out of range \
+                     (service '{}' has {} replicas)",
+                    parts[1],
+                    replicas[svc as usize]
+                );
+            }
+            Ok(Schedule::Down {
+                svc,
+                rep,
+                t_us: positive(spec, nums[1], "t_us")?,
+                dur_us: positive(spec, nums[2], "dur_us")?,
+            })
+        }
+        "downrate" => {
+            arity(2, "svc:period_us:dur_us")?;
+            Ok(Schedule::DownRate {
+                svc,
+                period_us: positive(spec, nums[0], "period_us")?,
+                dur_us: positive(spec, nums[1], "dur_us")?,
+            })
+        }
+        "gray" => {
+            arity(4, "svc:k:factor:t_us:dur_us")?;
+            let k = as_count(spec, nums[0], "replica count k")?;
+            if k == 0 || k > replicas[svc as usize] {
+                bail!(
+                    "fault '{spec}': k must be in 1..={} (service '{}' replicas), got {k}",
+                    replicas[svc as usize],
+                    parts[1]
+                );
+            }
+            let factor = nums[1];
+            if factor < 1.0 {
+                bail!("fault '{spec}': dilation factor must be ≥ 1, got {factor}");
+            }
+            Ok(Schedule::Gray {
+                svc,
+                k,
+                factor,
+                t_us: positive(spec, nums[2], "t_us")?,
+                dur_us: positive(spec, nums[3], "dur_us")?,
+            })
+        }
+        "brownout" => {
+            arity(3, "svc:factor:t_us:dur_us")?;
+            let factor = nums[0];
+            if factor < 1.0 {
+                bail!("fault '{spec}': dilation factor must be ≥ 1, got {factor}");
+            }
+            Ok(Schedule::Brownout {
+                svc,
+                factor,
+                t_us: positive(spec, nums[1], "t_us")?,
+                dur_us: positive(spec, nums[2], "dur_us")?,
+            })
+        }
+        other => bail!(
+            "fault '{spec}': unknown fault kind '{other}' \
+             (try down:svc:rep:t:dur | downrate:svc:period:dur | \
+             gray:svc:k:factor:t:dur | brownout:svc:factor:t:dur)"
+        ),
+    }
+}
+
+impl FaultsSpec {
+    /// True when the section changes nothing and must not serialize.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty() && self.client.is_empty()
+    }
+
+    /// Validate every schedule entry and client policy against a
+    /// topology given as parallel `(service name, replica count)` slices.
+    pub fn validate(&self, names: &[String], replicas: &[u32]) -> Result<()> {
+        for ev in &self.events {
+            parse_schedule(ev, names, replicas)?;
+        }
+        for c in &self.client {
+            if c.service != "*" && !names.iter().any(|n| n == &c.service) {
+                bail!("faults client policy: unknown service '{}'", c.service);
+            }
+            c.policy.validate(&format!("faults client policy '{}'", c.service))?;
+            if c.policy.is_noop() {
+                bail!(
+                    "faults client policy '{}' is a no-op \
+                     (set timeout_us, hedge_after_us, or retries)",
+                    c.service
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Expand into the event plan one engine run injects. Rate-driven
+    /// schedules are materialized up to `horizon_us` from the schedule's
+    /// own sub-stream of `mix64(seed ^ FAULT_SEED_SALT)`; fixed
+    /// schedules expand without touching any RNG. The result is sorted
+    /// by time (stable: schedule order on ties) and is a pure function
+    /// of the arguments.
+    pub fn plan(
+        &self,
+        names: &[String],
+        replicas: &[u32],
+        seed: u64,
+        horizon_us: f64,
+    ) -> Result<FaultPlan> {
+        self.validate(names, replicas)?;
+        let mut events: Vec<(f64, FaultEv)> = Vec::new();
+        let base = mix64(seed ^ FAULT_SEED_SALT);
+        for (i, ev) in self.events.iter().enumerate() {
+            match parse_schedule(ev, names, replicas)? {
+                Schedule::Down { svc, rep, t_us, dur_us } => {
+                    events.push((t_us, FaultEv::Down { svc, rep }));
+                    events.push((t_us + dur_us, FaultEv::Up { svc, rep }));
+                }
+                Schedule::DownRate { svc, period_us, dur_us } => {
+                    let mut rng = Rng::new(mix64(base ^ i as u64));
+                    let nrep = replicas[svc as usize] as u64;
+                    let mut t = 0.0;
+                    loop {
+                        t += rng.exp(period_us);
+                        if t >= horizon_us {
+                            break;
+                        }
+                        let rep = rng.below(nrep) as u32;
+                        events.push((t, FaultEv::Down { svc, rep }));
+                        events.push((t + dur_us, FaultEv::Up { svc, rep }));
+                    }
+                }
+                Schedule::Gray { svc, k, factor, t_us, dur_us } => {
+                    for rep in 0..k {
+                        events.push((t_us, FaultEv::GrayStart { svc, rep, factor }));
+                        events.push((t_us + dur_us, FaultEv::GrayEnd { svc, rep }));
+                    }
+                }
+                Schedule::Brownout { svc, factor, t_us, dur_us } => {
+                    for rep in 0..replicas[svc as usize] {
+                        events.push((t_us, FaultEv::GrayStart { svc, rep, factor }));
+                        events.push((t_us + dur_us, FaultEv::GrayEnd { svc, rep }));
+                    }
+                }
+            }
+        }
+        // Stable sort: simultaneous boundaries keep schedule order, so
+        // overlapping windows compose exactly as written.
+        events.sort_by(|a, b| a.0.to_bits().cmp(&b.0.to_bits()));
+        let mut policies = vec![None; names.len()];
+        for c in &self.client {
+            if c.service == "*" {
+                policies.iter_mut().for_each(|p| *p = Some(c.policy));
+            } else if let Some(i) = names.iter().position(|n| n == &c.service) {
+                policies[i] = Some(c.policy);
+            }
+        }
+        Ok(FaultPlan { events, policies })
+    }
+
+    /// Serialize the section (omitting empty subsections; callers omit
+    /// the whole section when [`FaultsSpec::is_empty`]).
+    pub fn to_json(&self) -> Json {
+        let mut fields = Vec::new();
+        if !self.events.is_empty() {
+            fields.push((
+                "events",
+                Json::Arr(self.events.iter().map(|e| Json::str(e)).collect()),
+            ));
+        }
+        if !self.client.is_empty() {
+            fields.push((
+                "client",
+                Json::Arr(
+                    self.client
+                        .iter()
+                        .map(|c| {
+                            let mut cf = vec![("service", Json::str(&c.service))];
+                            cf.extend(c.policy.to_json());
+                            Json::obj(cf)
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(fields)
+    }
+
+    /// Parse the `faults` section. Structural errors are typed; semantic
+    /// validation against the topology happens in `ClusterSpec::validate`.
+    pub fn from_json(j: &Json) -> Result<FaultsSpec> {
+        let obj = match j.as_obj() {
+            Some(o) => o,
+            None => bail!("faults must be an object"),
+        };
+        let mut spec = FaultsSpec::default();
+        if let Some(events) = obj.get("events") {
+            let arr = events
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("faults.events must be an array of strings"))?;
+            for e in arr {
+                match e.as_str() {
+                    Some(s) => spec.events.push(s.to_string()),
+                    None => bail!("faults.events entries must be strings"),
+                }
+            }
+        }
+        if let Some(client) = obj.get("client") {
+            let arr = client
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("faults.client must be an array of objects"))?;
+            for c in arr {
+                let service = c
+                    .get("service")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("faults.client entries need a 'service' string")
+                    })?
+                    .to_string();
+                let num_field = |key: &str| -> Result<Option<f64>> {
+                    match c.get(key) {
+                        None => Ok(None),
+                        Some(v) => match v.as_f64() {
+                            Some(n) if n.is_finite() => Ok(Some(n)),
+                            _ => bail!("faults.client '{service}': {key} must be a finite number"),
+                        },
+                    }
+                };
+                let retries = match c.get("retries") {
+                    None => 0,
+                    Some(v) => match v.as_u64() {
+                        Some(n) if n <= MAX_RETRIES as u64 => n as u32,
+                        _ => bail!(
+                            "faults.client '{service}': retries must be an integer in \
+                             0..={MAX_RETRIES}"
+                        ),
+                    },
+                };
+                spec.client.push(ClientPolicySpec {
+                    service,
+                    policy: EdgePolicy {
+                        timeout_us: num_field("timeout_us")?,
+                        retries,
+                        backoff_us: num_field("backoff_us")?.unwrap_or(0.0),
+                        hedge_after_us: num_field("hedge_after_us")?,
+                    },
+                });
+            }
+        }
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> (Vec<String>, Vec<u32>) {
+        (vec!["gw".to_string(), "be".to_string()], vec![2, 3])
+    }
+
+    fn spec_with(events: &[&str]) -> FaultsSpec {
+        FaultsSpec {
+            events: events.iter().map(|s| s.to_string()).collect(),
+            client: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn schedule_grammar_parses_and_validates() {
+        let (names, reps) = topo();
+        for ok in [
+            "down:gw:0:1000:500",
+            "down:be:2:1:1",
+            "downrate:be:20000:5000",
+            "gray:be:2:3.5:1000:2000",
+            "brownout:gw:2:500:1000",
+        ] {
+            spec_with(&[ok]).validate(&names, &reps).unwrap_or_else(|e| {
+                panic!("'{ok}' rejected: {e}");
+            });
+        }
+    }
+
+    #[test]
+    fn schedule_grammar_rejects_bad_specs() {
+        let (names, reps) = topo();
+        for bad in [
+            "meteor:gw:0:1:1",          // unknown kind
+            "down:nope:0:1:1",          // unknown service
+            "down:gw:2:1:1",            // replica out of range
+            "down:gw:0.5:1:1",          // fractional replica index
+            "down:gw:-1:1:1",           // negative replica index
+            "down:gw:0:0:1",            // t_us not > 0
+            "down:gw:0:1:0",            // dur_us not > 0
+            "down:gw:0:1",              // missing field
+            "down:gw:0:1:1:7",          // surplus field
+            "down:gw:0:abc:1",          // non-numeric
+            "downrate:be:0:100",        // period not > 0
+            "gray:be:0:2:1:1",          // k = 0
+            "gray:be:4:2:1:1",          // k > replicas
+            "gray:be:1:0.5:1:1",        // factor < 1
+            "brownout:gw:0.9:1:1",      // factor < 1
+            "down",                     // no service at all
+        ] {
+            assert!(
+                spec_with(&[bad]).validate(&names, &reps).is_err(),
+                "'{bad}' accepted"
+            );
+        }
+    }
+
+    #[test]
+    fn client_policies_validate_and_resolve_in_order() {
+        let (names, reps) = topo();
+        let spec = FaultsSpec {
+            events: Vec::new(),
+            client: vec![
+                ClientPolicySpec {
+                    service: "*".into(),
+                    policy: EdgePolicy {
+                        timeout_us: Some(400.0),
+                        retries: 2,
+                        backoff_us: 50.0,
+                        hedge_after_us: None,
+                    },
+                },
+                ClientPolicySpec {
+                    service: "be".into(),
+                    policy: EdgePolicy {
+                        timeout_us: Some(200.0),
+                        retries: 1,
+                        backoff_us: 0.0,
+                        hedge_after_us: Some(80.0),
+                    },
+                },
+            ],
+        };
+        spec.validate(&names, &reps).unwrap();
+        let plan = spec.plan(&names, &reps, 7, 1e6).unwrap();
+        assert_eq!(plan.policies.len(), 2);
+        // The wildcard set both, the named entry overrode "be".
+        assert_eq!(plan.policies[0].unwrap().timeout_us, Some(400.0));
+        assert_eq!(plan.policies[1].unwrap().timeout_us, Some(200.0));
+        assert_eq!(plan.policies[1].unwrap().hedge_after_us, Some(80.0));
+        assert!(!plan.is_empty(), "policies alone make the plan non-empty");
+    }
+
+    #[test]
+    fn client_policies_reject_bad_entries() {
+        let (names, reps) = topo();
+        let mk = |service: &str, policy: EdgePolicy| FaultsSpec {
+            events: Vec::new(),
+            client: vec![ClientPolicySpec { service: service.into(), policy }],
+        };
+        let timeout = EdgePolicy { timeout_us: Some(100.0), ..Default::default() };
+        assert!(mk("nope", timeout).validate(&names, &reps).is_err(), "unknown service");
+        assert!(
+            mk("gw", EdgePolicy { timeout_us: Some(0.0), ..Default::default() })
+                .validate(&names, &reps)
+                .is_err(),
+            "zero timeout"
+        );
+        assert!(
+            mk("gw", EdgePolicy { hedge_after_us: Some(-1.0), ..Default::default() })
+                .validate(&names, &reps)
+                .is_err(),
+            "negative hedge"
+        );
+        assert!(
+            mk(
+                "gw",
+                EdgePolicy {
+                    timeout_us: Some(100.0),
+                    hedge_after_us: Some(100.0),
+                    ..Default::default()
+                }
+            )
+            .validate(&names, &reps)
+            .is_err(),
+            "hedge at/after timeout never fires"
+        );
+        assert!(
+            mk("gw", EdgePolicy { retries: MAX_RETRIES + 1, timeout_us: Some(1.0), ..Default::default() })
+                .validate(&names, &reps)
+                .is_err(),
+            "retry budget cap"
+        );
+        assert!(
+            mk("gw", EdgePolicy::default()).validate(&names, &reps).is_err(),
+            "no-op policy"
+        );
+        assert!(
+            mk("gw", EdgePolicy { timeout_us: Some(100.0), backoff_us: -1.0, ..Default::default() })
+                .validate(&names, &reps)
+                .is_err(),
+            "negative backoff"
+        );
+    }
+
+    #[test]
+    fn fixed_schedules_expand_sorted_without_rng() {
+        let (names, reps) = topo();
+        let spec = spec_with(&["down:gw:1:5000:1000", "gray:be:2:2:1000:500"]);
+        let plan = spec.plan(&names, &reps, 42, 1e9).unwrap();
+        // gray opens first (t=1000), then closes (1500), then the crash.
+        let ts: Vec<f64> = plan.events.iter().map(|(t, _)| *t).collect();
+        assert_eq!(ts, vec![1000.0, 1000.0, 1500.0, 1500.0, 5000.0, 6000.0]);
+        assert_eq!(plan.events[4].1, FaultEv::Down { svc: 0, rep: 1 });
+        assert_eq!(plan.events[5].1, FaultEv::Up { svc: 0, rep: 1 });
+        assert!(matches!(plan.events[0].1, FaultEv::GrayStart { svc: 1, rep: 0, .. }));
+        // Fixed schedules are seed-independent.
+        let other = spec.plan(&names, &reps, 43, 1e9).unwrap();
+        assert_eq!(plan.events, other.events);
+    }
+
+    #[test]
+    fn rate_driven_schedules_are_seeded_and_horizon_bounded() {
+        let (names, reps) = topo();
+        let spec = spec_with(&["downrate:be:5000:1000"]);
+        let a = spec.plan(&names, &reps, 7, 200_000.0).unwrap();
+        let b = spec.plan(&names, &reps, 7, 200_000.0).unwrap();
+        assert_eq!(a.events, b.events, "same seed must rematerialize identically");
+        let c = spec.plan(&names, &reps, 8, 200_000.0).unwrap();
+        assert_ne!(a.events, c.events, "different seed must move the crash times");
+        assert!(!a.events.is_empty(), "40 mean periods must yield crashes");
+        // Every Down lands inside the horizon and pairs with an Up.
+        let downs = a.events.iter().filter(|(_, e)| matches!(e, FaultEv::Down { .. }));
+        let ups = a.events.iter().filter(|(_, e)| matches!(e, FaultEv::Up { .. }));
+        assert_eq!(downs.count(), ups.count());
+        for (t, e) in &a.events {
+            if matches!(e, FaultEv::Down { .. }) {
+                assert!(*t < 200_000.0);
+            }
+            if let FaultEv::Down { svc, rep } | FaultEv::Up { svc, rep } = e {
+                assert_eq!(*svc, 1);
+                assert!(*rep < 3);
+            }
+        }
+        // The plan is time-sorted.
+        assert!(a.events.windows(2).all(|w| w[0].0 <= w[1].0));
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_the_section() {
+        let spec = FaultsSpec {
+            events: vec!["down:gw:0:1000:500".into(), "downrate:be:20000:5000".into()],
+            client: vec![ClientPolicySpec {
+                service: "*".into(),
+                policy: EdgePolicy {
+                    timeout_us: Some(400.0),
+                    retries: 2,
+                    backoff_us: 100.0,
+                    hedge_after_us: Some(250.0),
+                },
+            }],
+        };
+        let back = FaultsSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+        // Empty sections round-trip to empty.
+        let empty = FaultsSpec::default();
+        assert!(empty.is_empty());
+        assert_eq!(empty.to_json().dump(), "{}");
+        assert!(FaultsSpec::from_json(&empty.to_json()).unwrap().is_empty());
+    }
+
+    #[test]
+    fn json_rejects_malformed_sections() {
+        for bad in [
+            r#"[]"#,
+            r#"{"events": "down:gw:0:1:1"}"#,
+            r#"{"events": [7]}"#,
+            r#"{"client": {}}"#,
+            r#"{"client": [{"timeout_us": 10}]}"#,
+            r#"{"client": [{"service": "gw", "timeout_us": "fast"}]}"#,
+            r#"{"client": [{"service": "gw", "retries": 2.5}]}"#,
+            r#"{"client": [{"service": "gw", "retries": -1}]}"#,
+            r#"{"client": [{"service": "gw", "retries": 99}]}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(FaultsSpec::from_json(&j).is_err(), "'{bad}' accepted");
+        }
+    }
+}

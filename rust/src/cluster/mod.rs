@@ -28,6 +28,7 @@
 //! the same arrival seed, so [`tenant_report`] is a paired comparison.
 
 pub mod engine;
+pub mod faults;
 pub mod sched;
 pub mod servicetime;
 pub mod slo;
@@ -36,6 +37,7 @@ pub mod topology;
 pub mod workload;
 
 pub use engine::{ClusterResult, RunParams, TenancyParams, TenantRun, TenantStat};
+pub use faults::{ClientPolicySpec, EdgePolicy, FaultsSpec};
 pub use sched::SchedKind;
 pub use servicetime::{QuantileTable, ServiceTimeModel};
 pub use slo::{EngineView, Policy, SloCfg, TenantCtrlCfg};
@@ -99,6 +101,12 @@ struct ScenarioDef {
     topo: ResolvedTopology,
     params: RunParams,
     ctrl: Option<SloCfg>,
+}
+
+/// The spec's fault section as the engine wants it: `None` when empty,
+/// so fault-free specs take the exact pre-fault entry points.
+fn spec_faults(spec: &ClusterSpec) -> Option<&FaultsSpec> {
+    (!spec.faults.is_empty()).then_some(&spec.faults)
 }
 
 /// A cluster spec with its (app × prefetcher) matrix measured and its
@@ -315,8 +323,30 @@ pub fn run_policy_scenario(
     policy: &Policy,
     shape: &TrafficShape,
 ) -> Result<ClusterResult> {
+    run_policy_scenario_faults(prep, spec, policy, shape, spec_faults(spec))
+}
+
+/// [`run_policy_scenario`] under an explicit fault regime — the
+/// campaign `faults` axis runs through here so one prepared spec can be
+/// swept across regimes. `None` (and the empty spec) is bit-identical
+/// to the fault-free run: same seeds, same event stream.
+pub fn run_policy_scenario_faults(
+    prep: &PreparedSpec,
+    spec: &ClusterSpec,
+    policy: &Policy,
+    shape: &TrafficShape,
+    faults: Option<&FaultsSpec>,
+) -> Result<ClusterResult> {
     let (label, params, cfg) = policy_scenario_cfg(prep, spec, policy, shape);
-    let mut r = engine::run_sched(&prep.policy_topo, shape, &params, Some(cfg), prep.sched)?;
+    let mut r = engine::run_obs_sched_faults(
+        &prep.policy_topo,
+        shape,
+        &params,
+        Some(cfg),
+        &ObsCfg::off(),
+        prep.sched,
+        faults,
+    )?;
     r.label = label;
     Ok(r)
 }
@@ -585,7 +615,7 @@ pub fn run_spec_obs(spec: &ClusterSpec, threads: usize, obs: &ObsCfg) -> Result<
     // Shard scenarios across workers; collect by index (scenario runs
     // are independent and self-seeded, so order of completion is
     // irrelevant to the result).
-    let scenarios = run_scenarios(&defs, threads, obs, prep.sched)?;
+    let scenarios = run_scenarios(&defs, threads, obs, prep.sched, spec_faults(spec))?;
     let total_requests = scenarios.iter().map(|s| s.requests).sum();
     let total_events = scenarios.iter().map(|s| s.events).sum();
     Ok(ClusterOutcome {
@@ -603,15 +633,15 @@ fn run_scenarios(
     threads: usize,
     obs: &ObsCfg,
     sched: SchedKind,
+    faults: Option<&FaultsSpec>,
 ) -> Result<Vec<ClusterResult>> {
     runner::parallel_map(defs.len(), threads, |i| {
         let d = &defs[i];
-        engine::run_obs_sched(&d.topo, &d.shape, &d.params, d.ctrl.clone(), obs, sched).map(
-            |mut r| {
+        engine::run_obs_sched_faults(&d.topo, &d.shape, &d.params, d.ctrl.clone(), obs, sched, faults)
+            .map(|mut r| {
                 r.label = d.label.clone();
                 r
-            },
-        )
+            })
     })
     .into_iter()
     .collect()
@@ -801,6 +831,55 @@ pub fn action_report(out: &ClusterOutcome) -> Option<Table> {
     } else {
         Some(t)
     }
+}
+
+/// Fault and client-response accounting per scenario (DESIGN.md §14):
+/// crash/retry/hedge/timeout counts, failed stages, and lazily-cancelled
+/// (stale) events. `None` when no scenario saw a fault or policy fire —
+/// fault-free outcomes never grow the report byte-stream. Deterministic:
+/// a pure function of the outcome, rows in scenario-expansion order.
+pub fn fault_report(out: &ClusterOutcome) -> Option<Table> {
+    let mut t = Table::new(
+        "cluster_faults",
+        "Fault injection: crashes, client responses, cancelled events",
+        &[
+            "config",
+            "traffic",
+            "crashes",
+            "retries",
+            "hedges",
+            "timeouts",
+            "failed",
+            "stale",
+        ],
+    );
+    for s in &out.scenarios {
+        if s.fault_stats.is_zero() {
+            continue;
+        }
+        let f = &s.fault_stats;
+        t.row(vec![
+            s.label.clone(),
+            s.traffic.clone(),
+            f.crashes.to_string(),
+            f.retries.to_string(),
+            f.hedges.to_string(),
+            f.timeouts.to_string(),
+            f.failed.to_string(),
+            f.stale_events.to_string(),
+        ]);
+    }
+    if t.rows.is_empty() {
+        return None;
+    }
+    t.note(
+        "crashes = replica-down events; retries counts every re-dispatch (timeout \
+         retries and crash requeues); failed = stages that exhausted their retry \
+         budget and completed as SLO misses; stale = lazily-cancelled events the \
+         scheduler discarded (lost hedge twins, cancelled timeouts, drained queue \
+         entries)",
+    );
+    Some(t)
 }
 
 /// Critical-path attribution over the sampled request spans: per
@@ -1121,6 +1200,7 @@ mod tests {
             interference: 0.8,
             telemetry: "exact".into(),
             scheduler: "calendar".into(),
+            faults: FaultsSpec::default(),
         }
     }
 
@@ -1313,6 +1393,49 @@ mod tests {
         );
         // The adaptive scenario ran on the policy topology.
         assert!(a.scenarios.iter().any(|s| s.label == "tenant-ctrl"));
+    }
+
+    #[test]
+    fn faulted_spec_runs_thread_invariantly_and_reports() {
+        let spec = ClusterSpec {
+            adaptive: false,
+            policies: vec!["reactive".into()],
+            requests: 6_000,
+            faults: FaultsSpec {
+                events: vec!["down:be:0:20000:30000".into()],
+                client: vec![ClientPolicySpec {
+                    service: "be".into(),
+                    policy: EdgePolicy {
+                        timeout_us: Some(60.0),
+                        retries: 2,
+                        backoff_us: 20.0,
+                        hedge_after_us: Some(25.0),
+                    },
+                }],
+            },
+            ..tiny_spec()
+        };
+        let a = run_spec(&spec, 1).unwrap();
+        let b = run_spec(&spec, 4).unwrap();
+        assert_eq!(report(&a).markdown(), report(&b).markdown());
+        for (x, y) in a.scenarios.iter().zip(&b.scenarios) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.p99_us.to_bits(), y.p99_us.to_bits(), "{}", x.label);
+            assert_eq!(x.events, y.events);
+            assert_eq!(x.fault_stats, y.fault_stats, "{}", x.label);
+        }
+        // Every request still completes — budget exhaustion is an SLO
+        // miss, never a hang.
+        for s in &a.scenarios {
+            assert_eq!(s.requests, spec.requests, "{}", s.label);
+        }
+        let t = fault_report(&a).expect("faulted run must emit the fault table");
+        assert_eq!(t.markdown(), fault_report(&b).unwrap().markdown());
+        assert!(a.scenarios.iter().any(|s| s.fault_stats.crashes > 0));
+        // Fault-free outcomes never grow the report byte-stream.
+        let plain = run_spec(&tiny_spec(), 2).unwrap();
+        assert!(fault_report(&plain).is_none());
+        assert!(plain.scenarios.iter().all(|s| s.fault_stats.is_zero()));
     }
 
     #[test]

@@ -15,11 +15,28 @@
 //!
 //! Schedulers may assume pushes never go backwards in time: a `push(t, ..)`
 //! after a `pop()` that returned time `p` satisfies `t >= p` (in `to_bits`
-//! order; all simulation times are non-negative and finite). The engine
-//! guarantees this — service times are non-negative and arrival streams
-//! are non-decreasing — and the calendar queue exploits it to keep its
-//! wheel window anchored at the current tick. A `debug_assert!` checks the
-//! contract on every push.
+//! order; all simulation times are non-negative and finite). Pushing *at*
+//! the frontier (`t == p`) is explicitly allowed — the engine does it for
+//! zero-length service draws and zero-backoff retries. The engine
+//! guarantees the contract — service times are non-negative, arrival
+//! streams are non-decreasing, and every fault/timeout/hedge event is
+//! scheduled at or after the current simulation time — and the calendar
+//! queue exploits it to keep its wheel window anchored at the current
+//! tick. A `debug_assert!` checks the contract on every push.
+//!
+//! ## Stale events (lazy cancellation)
+//!
+//! Schedulers never remove or reorder an event once pushed: there is no
+//! `cancel` operation, by design. A consumer that needs to cancel work —
+//! a timed-out attempt, the losing half of a hedged request, work
+//! requeued off a crashed replica — instead stamps each event with a
+//! generation counter at push time and *discards stale events at pop*,
+//! when the stamped generation no longer matches the current one (see
+//! the engine's per-`(slot, service)` attempt generations, DESIGN.md
+//! §14). Both backends therefore deliver cancelled events exactly like
+//! live ones — in ascending [`event_key`] order — which keeps the two
+//! implementations interchangeable bit-for-bit and keeps cancellation
+//! O(1) regardless of queue depth.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -474,6 +491,102 @@ mod tests {
             now = t;
         }
         assert_eq!(drain(&mut c), drain(&mut h));
+    }
+
+    #[test]
+    fn pushes_at_the_pop_frontier_are_allowed_on_both_backends() {
+        // The contract allows t == last-popped time (zero-length service
+        // draws, zero-backoff retries). Neither backend may reorder or
+        // reject them.
+        let mut c = CalendarQueue::with_capacity(4);
+        let mut h = HeapQueue::with_capacity(4);
+        let mut seq = 0u64;
+        for t in [1.0, 2.0, 3.0] {
+            c.push(t, seq, seq as u32);
+            h.push(t, seq, seq as u32);
+            seq += 1;
+        }
+        let mut popped = Vec::new();
+        while let Some((t, s, i)) = c.pop() {
+            let hh = h.pop().expect("heap in lockstep");
+            assert_eq!((t.to_bits(), s, i), (hh.0.to_bits(), hh.1, hh.2));
+            popped.push((t.to_bits(), s, i));
+            if popped.len() <= 3 {
+                // Push exactly at the frontier; it must pop next-or-later
+                // in seq order, never panic or vanish.
+                c.push(t, seq, seq as u32);
+                h.push(t, seq, seq as u32);
+                seq += 1;
+            }
+        }
+        assert!(h.pop().is_none());
+        assert_eq!(popped.len(), 6);
+        assert!(popped.windows(2).all(|w| w[0] < w[1]), "ascending event_key");
+    }
+
+    #[test]
+    fn lazily_cancelled_events_drain_identically_on_both_backends() {
+        // Stale-event semantics: there is no cancel operation — consumers
+        // stamp events with a generation and discard mismatches at pop.
+        // Both backends must deliver live AND stale events in the same
+        // order, so the consumer-side discard is backend-invariant.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xFA_17);
+        for round in 0..20 {
+            let mut c = CalendarQueue::with_capacity(8);
+            let mut h = HeapQueue::with_capacity(8);
+            // Generation per logical item; bumping cancels pending events.
+            let mut gen = [0u32; 16];
+            let mut seq = 0u64;
+            let mut now = 0.0f64;
+            let mut live_c = Vec::new();
+            let mut live_h = Vec::new();
+            for _ in 0..300 {
+                match rng.below(3) {
+                    0 => {
+                        let id = rng.below(16) as usize;
+                        let t = now + rng.f64() * 50.0;
+                        c.push(t, seq, (id as u32, gen[id]));
+                        h.push(t, seq, (id as u32, gen[id]));
+                        seq += 1;
+                    }
+                    1 => {
+                        // Cancel: every pending event for this id goes stale.
+                        let id = rng.below(16) as usize;
+                        gen[id] += 1;
+                    }
+                    _ => {
+                        let a = c.pop();
+                        let b = h.pop();
+                        match (a, b) {
+                            (None, None) => {}
+                            (Some((t, s, (id, g))), Some((th, sh, ih))) => {
+                                assert_eq!(
+                                    (t.to_bits(), s, (id, g)),
+                                    (th.to_bits(), sh, ih),
+                                    "round {round}"
+                                );
+                                now = t;
+                                // Consumer-side discard of stale events.
+                                if g == gen[id as usize] {
+                                    live_c.push((t.to_bits(), s, id));
+                                }
+                                if ih.1 == gen[ih.0 as usize] {
+                                    live_h.push((th.to_bits(), sh, ih.0));
+                                }
+                            }
+                            (a, b) => panic!("backends disagree on emptiness: {a:?} vs {b:?}"),
+                        }
+                    }
+                }
+            }
+            while let Some((t, s, i)) = c.pop() {
+                let hh = h.pop().expect("heap in lockstep during final drain");
+                assert_eq!((t.to_bits(), s, i), (hh.0.to_bits(), hh.1, hh.2));
+            }
+            assert!(h.pop().is_none());
+            assert_eq!(live_c, live_h, "round {round}");
+        }
     }
 
     #[test]

@@ -52,6 +52,10 @@ impl Policy {
     /// `hysteresis[:IDLE_WINDOWS[:HEADROOM]]`,
     /// `predictive[:LEAD_US[:IDLE_WINDOWS]]`,
     /// `cost-aware[:BUDGET_BYTES[:IDLE_WINDOWS]]`.
+    ///
+    /// Integer fields (`IDLE_WINDOWS`, `BUDGET_BYTES`) must be written as
+    /// non-negative integers: `hysteresis:2.7` and `cost-aware:-1:4` are
+    /// errors, not silent truncations.
     pub fn parse(spec: &str) -> Result<Policy> {
         let mut parts = spec.split(':');
         let kind = parts.next().unwrap_or("").to_lowercase();
@@ -63,20 +67,38 @@ impl Policy {
             }
         }
         let arg = |i: usize, default: f64| nums.get(i).copied().unwrap_or(default);
+        // Integer fields reject fractional and negative input instead of
+        // coercing through `as` (which truncates 2.7 → 2 and -1 → 0).
+        let int = |i: usize, default: u64, field: &str, max: u64| -> Result<u64> {
+            let v = nums.get(i).copied().unwrap_or(default as f64);
+            if !(v >= 0.0 && v.fract() == 0.0 && v <= max as f64) {
+                bail!(
+                    "policy '{spec}': {field} must be a non-negative integer \
+                     (at most {max}), got {v}"
+                );
+            }
+            Ok(v as u64)
+        };
         let (policy, max_args) = match kind.as_str() {
             "reactive" => (Policy::Reactive, 0),
             "hysteresis" => (
-                Policy::Hysteresis { idle_windows: arg(0, 4.0) as u32, headroom: arg(1, 0.7) },
+                Policy::Hysteresis {
+                    idle_windows: int(0, 4, "idle_windows", u32::MAX as u64)? as u32,
+                    headroom: arg(1, 0.7),
+                },
                 2,
             ),
             "predictive" => (
-                Policy::Predictive { lead_us: arg(0, 30_000.0), idle_windows: arg(1, 4.0) as u32 },
+                Policy::Predictive {
+                    lead_us: arg(0, 30_000.0),
+                    idle_windows: int(1, 4, "idle_windows", u32::MAX as u64)? as u32,
+                },
                 2,
             ),
             "cost-aware" => (
                 Policy::CostAware {
-                    budget_bytes: arg(0, 524_288.0) as u64,
-                    idle_windows: arg(1, 4.0) as u32,
+                    budget_bytes: int(0, 524_288, "budget_bytes", u64::MAX)?,
+                    idle_windows: int(1, 4, "idle_windows", u32::MAX as u64)? as u32,
                 },
                 2,
             ),
@@ -221,6 +243,13 @@ pub struct EngineView {
     pub upgrade_meta_delta: u64,
     /// Extra bytes if the bottleneck adds a replica.
     pub scale_up_meta_delta: u64,
+    /// Replicas currently crashed (fault injection): capacity the
+    /// cluster believes it has but does not. Non-zero suppresses every
+    /// voluntary scale-down/reclaim lever.
+    pub failed_replicas: u32,
+    /// Replicas currently running degraded (gray failure / brownout
+    /// dilation > 1): nominal capacity delivering less than it claims.
+    pub degraded_replicas: u32,
 }
 
 impl EngineView {
@@ -236,6 +265,8 @@ impl EngineView {
             metadata_bytes: 0,
             upgrade_meta_delta: 0,
             scale_up_meta_delta: 0,
+            failed_replicas: 0,
+            degraded_replicas: 0,
         }
     }
 }
@@ -423,6 +454,12 @@ impl SloController {
                     // Levers are checked before the bucket so a cluster
                     // with nothing to reclaim doesn't bleed tokens it
                     // will need when a window eventually burns.
+                    if view.failed_replicas > 0 {
+                        // Crashed capacity: the healthy window is being
+                        // carried by fewer replicas than the footprint
+                        // suggests — hold the reclaim until they return.
+                        return None;
+                    }
                     if !(view.can_downgrade || view.can_scale_down) {
                         return None;
                     }
@@ -486,7 +523,10 @@ impl SloController {
     /// Sustained-headroom scale-down with hysteresis: requires
     /// `idle_windows` consecutive windows whose P99 stays under
     /// `headroom × SLO`, then re-arms the streak so each release is
-    /// separated by a full re-earned streak (no flapping).
+    /// separated by a full re-earned streak (no flapping). Suppressed —
+    /// and the streak disarmed — while any replica is crashed or
+    /// degraded: apparent headroom during a fault window says nothing
+    /// about the healthy-capacity requirement.
     fn try_scale_down(
         &mut self,
         idle_windows: u32,
@@ -494,6 +534,10 @@ impl SloController {
         stats: &WindowStats,
         view: &EngineView,
     ) -> Option<SloAction> {
+        if view.failed_replicas > 0 || view.degraded_replicas > 0 {
+            self.healthy_streak = 0;
+            return None;
+        }
         if stats.p99_us > self.cfg.slo_us * headroom {
             // Healthy but not comfortably so: no scale-down credit.
             self.healthy_streak = 0;
@@ -746,6 +790,8 @@ mod tests {
             metadata_bytes: 0,
             upgrade_meta_delta: 0,
             scale_up_meta_delta: 0,
+            failed_replicas: 0,
+            degraded_replicas: 0,
         }
     }
 
@@ -911,6 +957,74 @@ mod tests {
         assert!(Policy::parse("predictive:-5").is_err());
         assert!(Policy::parse("cost-aware:0").is_err());
         assert!(Policy::parse("cost-aware:abc").is_err());
+    }
+
+    #[test]
+    fn integer_policy_fields_reject_fractional_and_negative_input() {
+        // These used to coerce through `as u32`/`as u64`: 2.7 → 2 and
+        // -1 → 0, silently running a different policy than specified.
+        assert!(Policy::parse("hysteresis:2.7").is_err(), "fractional idle_windows");
+        assert!(Policy::parse("hysteresis:-1").is_err(), "negative idle_windows");
+        assert!(Policy::parse("predictive:30000:2.5").is_err(), "fractional idle_windows");
+        assert!(Policy::parse("predictive:30000:-4").is_err(), "negative idle_windows");
+        assert!(Policy::parse("cost-aware:-1:4").is_err(), "negative budget_bytes");
+        assert!(Policy::parse("cost-aware:0.5").is_err(), "fractional budget_bytes");
+        assert!(Policy::parse("cost-aware:1024:4.5").is_err(), "fractional idle_windows");
+        // Fractional input remains fine for genuinely real-valued fields.
+        assert!(Policy::parse("hysteresis:4:0.55").is_ok());
+        assert!(Policy::parse("predictive:12500.5:4").is_ok());
+    }
+
+    #[test]
+    fn faulted_views_suppress_scale_down_and_reclaim() {
+        // Hysteresis with deep sustained headroom would normally release
+        // a replica — but not while the view reports crashed or degraded
+        // capacity, and the streak must re-arm from zero afterwards.
+        let mk = || {
+            SloController::new(SloCfg {
+                window: 100,
+                policy: Policy::Hysteresis { idle_windows: 2, headroom: 0.7 },
+                ..SloCfg::new(100.0, 9)
+            })
+        };
+        for faulted in [
+            EngineView { failed_replicas: 1, can_scale_down: true, ..up(true) },
+            EngineView { degraded_replicas: 2, can_scale_down: true, ..up(true) },
+        ] {
+            let mut c = mk();
+            for _ in 0..800 {
+                assert_eq!(c.on_complete(5.0, &faulted), None, "scaled down mid-fault");
+            }
+            // Fault clears: the streak starts over, so the release needs
+            // a full re-earned idle_windows run, not one healthy window.
+            let healthy = EngineView { can_scale_down: true, ..up(true) };
+            let mut first_down = None;
+            for w in 0..6 {
+                for _ in 0..100 {
+                    if let Some(SloAction::RemoveReplica) = c.on_complete(5.0, &healthy) {
+                        first_down.get_or_insert(w);
+                    }
+                }
+            }
+            let w = first_down.expect("never scaled down after the fault cleared");
+            assert!(w >= 1, "streak was not disarmed by the faulted window");
+        }
+        // Cost-aware over-budget reclaim holds while replicas are down.
+        let mut c = SloController::new(SloCfg {
+            window: 100,
+            policy: Policy::CostAware { budget_bytes: 1_000, idle_windows: 4 },
+            ..SloCfg::new(100.0, 7)
+        });
+        let v = EngineView {
+            metadata_bytes: 1_500,
+            can_downgrade: true,
+            can_scale_down: true,
+            failed_replicas: 1,
+            ..up(true)
+        };
+        for _ in 0..500 {
+            assert_eq!(c.on_complete(1.0, &v), None, "reclaimed bytes mid-crash");
+        }
     }
 
     #[test]

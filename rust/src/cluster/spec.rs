@@ -5,6 +5,7 @@
 //! [`super::run_spec`] into (config × shape) scenarios plus one
 //! control-loop scenario per (policy × shape).
 
+use super::faults::FaultsSpec;
 use super::slo::Policy;
 use super::topology::{ServiceSpec, Topology};
 use super::workload::TrafficShape;
@@ -107,6 +108,12 @@ pub struct ClusterSpec {
     /// output; the knob only serializes when non-default so existing
     /// spec JSON and campaign-store content hashes are unchanged.
     pub scheduler: String,
+    /// Fault injection (DESIGN.md §14): a seeded schedule of replica
+    /// crashes / gray failures / brownouts plus per-edge client
+    /// policies (timeout, retries, hedging). Empty (the default) keeps
+    /// every scenario on the exact pre-fault code path — and its output
+    /// — bit-identical.
+    pub faults: FaultsSpec,
 }
 
 impl Default for ClusterSpec {
@@ -129,6 +136,7 @@ impl Default for ClusterSpec {
             interference: DEFAULT_INTERFERENCE,
             telemetry: "exact".into(),
             scheduler: "calendar".into(),
+            faults: FaultsSpec::default(),
         }
     }
 }
@@ -261,6 +269,22 @@ impl ClusterSpec {
             .with_context(|| format!("in cluster '{}'", self.name))?;
         super::sched::SchedKind::parse(&self.scheduler)
             .with_context(|| format!("in cluster '{}'", self.name))?;
+        if !self.faults.is_empty() {
+            if !self.tenants.is_empty() {
+                bail!(
+                    "cluster '{}': faults and tenants are mutually exclusive for now \
+                     (the tenant engine path has no fault axis yet)",
+                    self.name
+                );
+            }
+            let names: Vec<String> =
+                self.topology.services.iter().map(|s| s.name.clone()).collect();
+            let replicas: Vec<u32> =
+                self.topology.services.iter().map(|s| s.replicas).collect();
+            self.faults
+                .validate(&names, &replicas)
+                .with_context(|| format!("in cluster '{}'", self.name))?;
+        }
         if !self.interference.is_finite() || self.interference < 0.0 {
             bail!(
                 "cluster '{}': interference must be finite and ≥ 0, got {}",
@@ -494,6 +518,13 @@ impl ClusterSpec {
         if self.scheduler != "calendar" {
             fields.push(("scheduler", Json::str(&self.scheduler)));
         }
+        // And for the fault section: fault-free specs — i.e. every spec
+        // written before the fault axis existed — serialize byte-for-byte
+        // as they always did, so campaign content hashes and store resume
+        // are untouched.
+        if !self.faults.is_empty() {
+            fields.push(("faults", self.faults.to_json()));
+        }
         Json::obj(fields)
     }
 
@@ -662,6 +693,9 @@ impl ClusterSpec {
         if let Some(v) = j.get("scheduler").and_then(Json::as_str) {
             spec.scheduler = v.to_string();
         }
+        if let Some(f) = j.get("faults") {
+            spec.faults = FaultsSpec::from_json(f)?;
+        }
         spec.validate()?;
         Ok(spec)
     }
@@ -724,6 +758,7 @@ mod tests {
             interference: DEFAULT_INTERFERENCE,
             telemetry: "exact".into(),
             scheduler: "calendar".into(),
+            faults: FaultsSpec::default(),
         }
     }
 
@@ -894,6 +929,7 @@ mod tests {
         assert!(!dump.contains("interference"), "interference leaked: {dump}");
         assert!(!dump.contains("telemetry"), "telemetry key leaked: {dump}");
         assert!(!dump.contains("scheduler"), "scheduler key leaked: {dump}");
+        assert!(!dump.contains("faults"), "faults key leaked: {dump}");
         // Non-default partition geometry still round-trips.
         let s = ClusterSpec { total_ways: 16, interference: 0.5, ..tenant_spec() };
         let back = ClusterSpec::from_json(&s.to_json()).unwrap();
@@ -937,6 +973,55 @@ mod tests {
             let s = ClusterSpec { scheduler: bad.into(), ..small() };
             assert!(s.validate().is_err(), "accepted '{bad}'");
         }
+    }
+
+    #[test]
+    fn fault_section_validates_and_roundtrips() {
+        use super::super::faults::{ClientPolicySpec, EdgePolicy};
+        let faulted = |events: Vec<&str>, client: Vec<ClientPolicySpec>| ClusterSpec {
+            faults: FaultsSpec {
+                events: events.into_iter().map(str::to_string).collect(),
+                client,
+            },
+            ..small()
+        };
+        let s = faulted(
+            vec!["down:gw:0:20000:5000", "gray:search:1:3:10000:40000"],
+            vec![ClientPolicySpec {
+                service: "search".into(),
+                policy: EdgePolicy {
+                    timeout_us: Some(400.0),
+                    retries: 2,
+                    backoff_us: 50.0,
+                    hedge_after_us: Some(120.0),
+                },
+            }],
+        );
+        assert!(s.validate().is_ok());
+        let back = ClusterSpec::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        assert!(s.to_json().dump().contains("\"faults\""));
+
+        // Schedules and policies are validated against the topology.
+        let bad = faulted(vec!["down:nope:0:100:100"], vec![]);
+        assert!(bad.validate().is_err(), "unknown fault service accepted");
+        let bad = faulted(vec!["down:gw:7:100:100"], vec![]);
+        assert!(bad.validate().is_err(), "out-of-range replica accepted");
+        let bad = faulted(vec!["meteor:gw"], vec![]);
+        assert!(bad.validate().is_err(), "unknown fault kind accepted");
+        let bad = faulted(
+            vec![],
+            vec![ClientPolicySpec {
+                service: "nope".into(),
+                policy: EdgePolicy { retries: 1, ..EdgePolicy::default() },
+            }],
+        );
+        assert!(bad.validate().is_err(), "unknown client-policy service accepted");
+
+        // Faults and tenants are mutually exclusive for now.
+        let mut both = tenant_spec();
+        both.faults.events = vec!["down:gw:0:100:100".into()];
+        assert!(both.validate().is_err(), "faults + tenants must conflict");
     }
 
     #[test]

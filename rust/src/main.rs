@@ -6,8 +6,8 @@
 //! slofetch campaign compact [--out results.store]
 //! slofetch cluster --spec FILE [--threads N] [--policies reactive,hysteresis,...]
 //!                  [--service-times analytic|empirical] [--trace FILE.slft]
-//!                  [--tenants on|off] [--telemetry MODE] [--scheduler heap|calendar]
-//!                  [--obs] [--obs-sample SHIFT]
+//!                  [--tenants on|off] [--faults on|off] [--telemetry MODE]
+//!                  [--scheduler heap|calendar] [--obs] [--obs-sample SHIFT]
 //!                  [--trace-out FILE.json] [--metrics-out FILE.jsonl]
 //! slofetch simulate --app websearch --prefetcher ceip256 [--records N] [--ml] [--budget N]
 //!                   [--telemetry MODE]
@@ -77,8 +77,8 @@ const USAGE: &str = "usage:
   slofetch campaign compact [--out results.store]
   slofetch cluster --spec FILE [--threads N] [--policies reactive,hysteresis,predictive,cost-aware]
                    [--service-times analytic|empirical] [--trace FILE.slft] [--tenants on|off]
-                   [--telemetry MODE] [--scheduler heap|calendar] [--obs] [--obs-sample SHIFT]
-                   [--trace-out FILE.json] [--metrics-out FILE.jsonl]
+                   [--faults on|off] [--telemetry MODE] [--scheduler heap|calendar]
+                   [--obs] [--obs-sample SHIFT] [--trace-out FILE.json] [--metrics-out FILE.jsonl]
   slofetch simulate --app A --prefetcher P [--records N] [--ml] [--adapt-window] [--budget N] [--pjrt]
                     [--telemetry MODE]
   slofetch gen-trace --app A --records N --out FILE
@@ -276,6 +276,21 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             other => bail!("--tenants expects on|off, got '{other}'"),
         }
     }
+    // `--faults off` strips the fault section — the healthy baseline of
+    // the same spec file, byte-identical to a spec without faults;
+    // `--faults on` asserts the spec actually declares faults (catching
+    // a stale spec path), mirroring `--tenants`.
+    if let Some(mode) = args.opt("faults") {
+        match mode {
+            "off" => spec.faults = Default::default(),
+            "on" => {
+                if spec.faults.is_empty() {
+                    bail!("--faults on: spec '{spec_path}' declares no faults");
+                }
+            }
+            other => bail!("--faults expects on|off, got '{other}'"),
+        }
+    }
     // `--telemetry sketch[:GEOM]` / `compare[:GEOM]` turns on sketch
     // telemetry in the measurement cells (DESIGN.md §12) — the knob is
     // validated with the rest of the spec below.
@@ -318,6 +333,9 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         println!("{}", t.markdown());
     }
     if let Some(t) = slofetch::cluster::action_report(&out) {
+        println!("{}", t.markdown());
+    }
+    if let Some(t) = slofetch::cluster::fault_report(&out) {
         println!("{}", t.markdown());
     }
     if let Some(t) = slofetch::cluster::critical_path_report(&out) {

@@ -1,0 +1,237 @@
+//! Fault-injection integration tests (DESIGN.md §14): (a) the shipped
+//! `examples/cluster_faults.json` spec runs its crash/gray/brownout
+//! schedule with stdout-surface results identical across `--threads`
+//! values, (b) stripping the fault section reproduces the plain
+//! `examples/cluster.json` spec exactly — the faults-off byte-identity
+//! contract, (c) exhausting a retry budget completes the run as an SLO
+//! miss (never a hang), (d) hedged dispatch picks a seed-stable winner,
+//! and (e) randomized faulted runs agree bit-for-bit across the
+//! calendar and heap scheduler backends, stale discards included.
+
+use slofetch::cluster::{
+    self, engine, ClientPolicySpec, ClusterSpec, EdgePolicy, FaultsSpec, ResolvedTopology,
+    RunParams, SchedKind, TrafficShape,
+};
+use slofetch::obs::ObsCfg;
+use slofetch::util::prop;
+use std::path::Path;
+
+fn example_spec(name: &str) -> ClusterSpec {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join(format!("../examples/{name}"));
+    ClusterSpec::load(&path).unwrap_or_else(|e| panic!("examples/{name} must load: {e:#}"))
+}
+
+#[test]
+fn faulted_example_spec_is_thread_invariant() {
+    let mut spec = example_spec("cluster_faults.json");
+    assert!(!spec.faults.is_empty(), "the shipped fault spec declares no faults");
+    spec.requests = 20_000; // keep the integration run quick
+    let a = cluster::run_spec(&spec, 1).unwrap();
+    let b = cluster::run_spec(&spec, 8).unwrap();
+    assert_eq!(
+        cluster::report(&a).markdown(),
+        cluster::report(&b).markdown(),
+        "faulted cluster output depends on --threads"
+    );
+    for (x, y) in a.scenarios.iter().zip(&b.scenarios) {
+        assert_eq!(x.p99_us.to_bits(), y.p99_us.to_bits(), "{}|{}", x.label, x.traffic);
+        assert_eq!(x.events, y.events, "{}|{}", x.label, x.traffic);
+        assert_eq!(x.fault_stats, y.fault_stats, "{}|{}", x.label, x.traffic);
+        assert_eq!(x.requests, spec.requests, "{}: lost requests under faults", x.label);
+    }
+    // The schedule actually bit: crashes were processed and the fault
+    // table renders identically on both runs.
+    assert!(
+        a.scenarios.iter().any(|s| s.fault_stats.crashes > 0),
+        "no scenario processed a crash — the shipped schedule never fires"
+    );
+    let fa = cluster::fault_report(&a).expect("fault table missing");
+    let fb = cluster::fault_report(&b).expect("fault table missing");
+    assert_eq!(fa.markdown(), fb.markdown());
+}
+
+#[test]
+fn faults_off_reproduces_the_plain_spec_exactly() {
+    // cluster_faults.json is cluster.json plus a `faults` section: with
+    // the section stripped (what `--faults off` does) the two specs
+    // must serialize byte-identically, so every downstream run — and
+    // the campaign content hash — is unchanged by the fault axis.
+    let mut stripped = example_spec("cluster_faults.json");
+    stripped.faults = FaultsSpec::default();
+    let plain = example_spec("cluster.json");
+    assert_eq!(
+        stripped.to_json().dump(),
+        plain.to_json().dump(),
+        "faults-off spec diverged from the pre-fault example"
+    );
+    // And a faults-free run keeps every fault counter at zero and emits
+    // no fault table: the healthy stdout surface is untouched.
+    stripped.requests = 6_000;
+    let out = cluster::run_spec(&stripped, 4).unwrap();
+    for s in &out.scenarios {
+        assert!(s.fault_stats.is_zero(), "{}: healthy run bumped fault counters", s.label);
+    }
+    assert!(cluster::fault_report(&out).is_none(), "fault table rendered on a healthy run");
+}
+
+fn two_stage_chain() -> ResolvedTopology {
+    ResolvedTopology::chain_from_ipcs(
+        &[("gw".into(), 2.0), ("be".into(), 2.0)],
+        25_000.0,
+        0.35,
+        2.5,
+    )
+}
+
+#[test]
+fn retry_budget_exhaustion_is_an_slo_miss_not_a_hang() {
+    // A brownout makes `be` ~40× slower than the client timeout for
+    // essentially the whole run: every attempt times out, the single
+    // retry times out too, and the stage must fail — the request
+    // completes as an SLO miss. The test finishing at all is the no-hang
+    // claim; the counters pin down the path it took.
+    let topo = two_stage_chain();
+    let lambda = topo.bottleneck_rate() * 0.5;
+    let params =
+        RunParams { requests: 4_000, seed: 11, slo_us: 60.0, base_rate_per_us: lambda };
+    let faults = FaultsSpec {
+        events: vec!["brownout:be:40:1:400000".into()],
+        client: vec![ClientPolicySpec {
+            service: "be".into(),
+            policy: EdgePolicy {
+                timeout_us: Some(30.0),
+                retries: 1,
+                backoff_us: 5.0,
+                hedge_after_us: None,
+            },
+        }],
+    };
+    let r = engine::run_faults(
+        &topo,
+        &TrafficShape::Poisson { util: 1.0 },
+        &params,
+        None,
+        Some(&faults),
+    )
+    .unwrap();
+    assert_eq!(r.requests, 4_000, "requests lost under retry exhaustion");
+    assert!(r.fault_stats.timeouts > 0, "no timeout ever fired");
+    assert!(r.fault_stats.retries > 0, "no retry was attempted");
+    assert!(r.fault_stats.failed > 0, "retry budget never exhausted");
+    assert!(
+        r.compliance < 1.0,
+        "abandoned stages must surface as SLO misses (compliance {})",
+        r.compliance
+    );
+    // Failed stages carry their elapsed time, so the tail reflects the
+    // timeout chain rather than collapsing to zero.
+    assert!(r.p99_us > params.slo_us, "p99 {} under a failing backend", r.p99_us);
+}
+
+#[test]
+fn hedged_winner_is_seed_stable_across_backends() {
+    // Replica 0 of `be` is gray (6× slow) for the whole run; hedges
+    // fire 12 µs in and the duplicate usually lands on a healthy
+    // replica and wins, turning the slow twin into a stale discard.
+    // The winner choice must be a pure function of the seed: reruns and
+    // backend swaps reproduce every counter and latency bit.
+    let mut topo = two_stage_chain();
+    topo.services[1].replicas = 3;
+    let lambda = topo.bottleneck_rate() * 0.5;
+    let params =
+        RunParams { requests: 6_000, seed: 23, slo_us: 200.0, base_rate_per_us: lambda };
+    let faults = FaultsSpec {
+        events: vec!["gray:be:1:6:1:2000000".into()],
+        client: vec![ClientPolicySpec {
+            service: "be".into(),
+            policy: EdgePolicy {
+                timeout_us: None,
+                retries: 0,
+                backoff_us: 0.0,
+                hedge_after_us: Some(12.0),
+            },
+        }],
+    };
+    let run = |sched: SchedKind| {
+        engine::run_obs_sched_faults(
+            &topo,
+            &TrafficShape::Poisson { util: 1.0 },
+            &params,
+            None,
+            &ObsCfg::off(),
+            sched,
+            Some(&faults),
+        )
+        .unwrap()
+    };
+    let a = run(SchedKind::Calendar);
+    assert!(a.fault_stats.hedges > 0, "no hedge ever fired");
+    assert!(a.fault_stats.stale_events > 0, "no losing twin was discarded");
+    assert_eq!(a.requests, 6_000);
+    let b = run(SchedKind::Calendar);
+    assert_eq!(a.p99_us.to_bits(), b.p99_us.to_bits(), "hedge winner is not seed-stable");
+    assert_eq!(a.fault_stats, b.fault_stats);
+    assert_eq!(a.events, b.events);
+    let h = run(SchedKind::Heap);
+    assert_eq!(a.p99_us.to_bits(), h.p99_us.to_bits(), "backends disagree under hedging");
+    assert_eq!(a.fault_stats, h.fault_stats);
+    assert_eq!(a.events, h.events);
+}
+
+#[test]
+fn prop_faulted_runs_agree_across_scheduler_backends() {
+    // Randomized fault pressure: every (seed, utilization, timeout,
+    // hedge) draw must produce bit-identical results — stale discards
+    // included — on the calendar queue and the heap oracle. This is the
+    // §13 equivalence contract extended to lazily-cancelled events.
+    let gen = |r: &mut slofetch::util::rng::Rng, _size: usize| {
+        (
+            r.next_u64(),
+            0.3 + r.f64() * 0.4,          // utilization 0.3..0.7
+            20.0 + r.f64() * 60.0,        // timeout 20..80 µs
+            5.0 + r.f64() * 10.0,         // hedge 5..15 µs
+        )
+    };
+    prop::check_unit("faulted scheduler equivalence", 12, gen, |&(seed, util, to, hedge)| {
+        let mut topo = two_stage_chain();
+        topo.services[1].replicas = 2;
+        let lambda = topo.bottleneck_rate() * util;
+        let params =
+            RunParams { requests: 2_000, seed, slo_us: 120.0, base_rate_per_us: lambda };
+        let faults = FaultsSpec {
+            events: vec![
+                "down:be:0:5000:8000".into(),
+                "downrate:be:40000:6000".into(),
+                "gray:gw:1:3:2000:30000".into(),
+            ],
+            client: vec![ClientPolicySpec {
+                service: "be".into(),
+                policy: EdgePolicy {
+                    timeout_us: Some(to),
+                    retries: 2,
+                    backoff_us: 4.0,
+                    hedge_after_us: Some(hedge),
+                },
+            }],
+        };
+        let run = |sched: SchedKind| {
+            engine::run_obs_sched_faults(
+                &topo,
+                &TrafficShape::Poisson { util: 1.0 },
+                &params,
+                None,
+                &ObsCfg::off(),
+                sched,
+                Some(&faults),
+            )
+            .unwrap()
+        };
+        let cal = run(SchedKind::Calendar);
+        let heap = run(SchedKind::Heap);
+        assert_eq!(cal.p99_us.to_bits(), heap.p99_us.to_bits());
+        assert_eq!(cal.mean_us.to_bits(), heap.mean_us.to_bits());
+        assert_eq!(cal.events, heap.events);
+        assert_eq!(cal.fault_stats, heap.fault_stats);
+        assert_eq!(cal.requests, 2_000, "requests lost under random faults");
+    });
+}
